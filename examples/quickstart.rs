@@ -1,0 +1,71 @@
+//! Quickstart: run one convolution layer through the simulated
+//! FusionAccel device and check it against an f32 reference — the
+//! smallest end-to-end tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Also demonstrates the prototxt front-end (§6.2 future work, built
+//! here): parse SqueezeNet v1.1 and print the Table 2 command stream.
+
+use fusionaccel::accel::stream::StreamAccelerator;
+use fusionaccel::host::driver::{forward_functional, HostDriver};
+use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::graph::Network;
+use fusionaccel::net::layer::LayerSpec;
+use fusionaccel::net::prototxt;
+use fusionaccel::net::tensor::Tensor;
+use fusionaccel::net::weights::synthesize_weights;
+use fusionaccel::prop::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== FusionAccel quickstart ==\n");
+
+    // 1. Build a one-layer network: fire2/expand3x3-shaped conv.
+    let mut net = Network::new("quickstart");
+    let inp = net.input(56, 16);
+    net.engine(LayerSpec::conv("expand3x3", 3, 1, 1, 56, 16, 64, 0), inp);
+    let blobs = synthesize_weights(&net, 42);
+
+    // 2. A random input image.
+    let mut rng = Rng::new(7);
+    let image = Tensor::from_vec(56, 56, 16, (0..56 * 56 * 16).map(|_| rng.normal(1.0)).collect());
+
+    // 3. Drive the simulated device through the full Fig 36 host flow.
+    let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+    let result = HostDriver::new(&mut dev).forward(&net, &blobs, &image)?;
+    let out = result.outputs.last().unwrap();
+    println!("device output: {}×{}×{} FP16 values", out.h, out.w, out.c);
+    println!("engine passes: {}, cycles: {}", dev.stats.passes, dev.stats.cycles);
+    println!(
+        "modeled: compute {:.3} ms, link {:.3} ms over {} transactions",
+        result.compute_seconds() * 1e3,
+        dev.usb.total_seconds() * 1e3,
+        dev.usb.total_txns()
+    );
+
+    // 4. Cross-check against the straight-line functional engine
+    //    (bit-exact) — the device slicing changes nothing numerically.
+    let reference = forward_functional(&net, &blobs, &image)?;
+    let identical = out
+        .data
+        .iter()
+        .zip(&reference.last().unwrap().data)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    println!("bit-identical to functional engine: {identical}");
+    assert!(identical);
+
+    // 5. Prototxt front-end: parse SqueezeNet v1.1 and print the first
+    //    command rows of Table 2.
+    let path = std::path::Path::new("examples/data/squeezenet_v11.prototxt");
+    if path.exists() {
+        let sq = prototxt::load(path)?;
+        println!("\nparsed {:?}: {} engine layers", sq.name, sq.engine_layers().len());
+        println!("{:<22} {}", "layer", "96-bit command (Table 2)");
+        for spec in sq.engine_layers().iter().take(8) {
+            println!("{:<22} {}", spec.name, spec.command_hex());
+        }
+        println!("...");
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! End-to-end driver — the repository's headline experiment.
+//!
+//! Loads the AOT artifacts (synthetic weights + image from `make
+//! artifacts`), runs SqueezeNet v1.1 through the **full simulated device
+//! flow** (Fig 35/36: commands → CMDFIFO, weights/GEMM slices → BRAM
+//! caches over the modeled USB3.0 link, engine passes, RESFIFO
+//! readback), then:
+//!
+//! * compares the FP16 result against the AOT-lowered JAX **FP32 oracle**
+//!   executed via PJRT from this same process (the paper's Caffe-CPU
+//!   comparison, Figs 37–39);
+//! * prints the §5 timing decomposition (compute vs whole process) from
+//!   the replayed link traffic;
+//! * prints the per-layer deviation table (Fig 37's "deviations start
+//!   from the second or third decimal place").
+//!
+//!     make artifacts && cargo run --release --example squeezenet_e2e
+
+use std::collections::HashMap;
+
+use fusionaccel::accel::stream::StreamAccelerator;
+use fusionaccel::benchkit;
+use fusionaccel::host::driver::{deviation_report, HostDriver};
+use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::squeezenet::squeezenet_v11;
+use fusionaccel::net::tensor::{Tensor, TensorF32};
+use fusionaccel::net::weights::Blobs;
+use fusionaccel::runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = runtime::artifacts_dir();
+    anyhow::ensure!(
+        dir.join("squeezenet_weights.bin").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let net = squeezenet_v11();
+    let blobs = Blobs::load(&dir.join("squeezenet_weights.bin"))?;
+    let img_blob = Blobs::load(&dir.join("image.bin"))?;
+    let (dims, data) = img_blob.get("input")?;
+    anyhow::ensure!(dims == [227, 227, 3]);
+    let image = Tensor::from_vec(227, 227, 3, data.to_vec());
+
+    println!("== SqueezeNet v1.1 on the simulated FusionAccel device ==");
+    println!(
+        "network: {} engine layers, {:.1} M MACs, {:.2} M weights",
+        net.engine_layers().len(),
+        net.total_macs() as f64 / 1e6,
+        net.total_weights() as f64 / 1e6
+    );
+
+    // ---- full device flow ----
+    let t0 = std::time::Instant::now();
+    let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+    let result = HostDriver::new(&mut dev).forward(&net, &blobs, &image)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n-- §5 timing (modeled device/link; paper: 10.7 s compute, 40.9 s whole) --");
+    println!("engine compute      : {:>8.2} s  ({} cycles @100 MHz)", result.compute_seconds(), result.engine_cycles);
+    println!("link transfer       : {:>8.2} s  ({} txns, {:.1} MB)",
+        dev.usb.total_seconds(), dev.usb.total_txns(), dev.usb.total_bytes() as f64 / 1e6);
+    println!("whole process       : {:>8.2} s", result.compute_seconds() + dev.usb.total_seconds());
+    println!("simulator wall clock: {:>8.2} s (host {:.2} s)", wall, result.host_seconds);
+    println!("engine passes {} / interrupts {}", dev.stats.passes, dev.stats.interrupts);
+
+    // ---- FP32 oracle via PJRT (the "Caffe-CPU" of §5) ----
+    println!("\n-- FP32 oracle (AOT JAX → HLO → PJRT, in-process) --");
+    let rt = runtime::Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let taps_model = rt.load_hlo_text(&dir.join("squeezenet_taps.hlo.txt"))?;
+    let inputs = runtime::oracle_inputs(&net, &blobs, &image)?;
+    let taps = taps_model.run_tuple(&inputs)?;
+    let tap_names = ["conv1", "pool1", "fire2/concat", "fire5/concat", "conv10", "pool10"];
+    let mut oracle: HashMap<String, TensorF32> = HashMap::new();
+    for (lit, name) in taps.iter().zip(tap_names) {
+        oracle.insert(name.to_string(), runtime::tensor_from_literal(lit)?);
+    }
+
+    // Fig 37-style deviation table.
+    println!("\n-- Figs 37–39: FP16 device vs FP32 oracle --");
+    let rows: Vec<Vec<String>> = deviation_report(&net, &result.outputs, &oracle)
+        .into_iter()
+        .map(|r| vec![r.name, format!("{:.5}", r.max_abs), format!("{:.6}", r.mean_abs)])
+        .collect();
+    benchkit::table(&["layer", "max |Δ|", "mean |Δ|"], &rows);
+
+    // Fig 38/39: final classification.
+    let oracle_probs = fusionaccel::host::postprocess::softmax(&oracle["pool10"].data);
+    let sim_top = result.top_k(5);
+    let oracle_top = fusionaccel::host::postprocess::argsort_desc(&oracle_probs);
+    println!("\n{:<28} {:<28}", "device (FP16) top-5", "oracle (FP32) top-5");
+    for i in 0..5 {
+        println!(
+            "class {:>4}  p={:<12.6} class {:>4}  p={:.6}",
+            sim_top[i].0, sim_top[i].1, oracle_top[i], oracle_probs[oracle_top[i]]
+        );
+    }
+    anyhow::ensure!(sim_top[0].0 == oracle_top[0], "top-1 mismatch");
+    println!("\ntop-1 agreement: OK (class {})", sim_top[0].0);
+
+    // Bit-exactness vs the Python rtl_ref golden (the tier-1 contract).
+    let golden = Blobs::load(&dir.join("golden_squeezenet.bin"))?;
+    let mut exact = 0usize;
+    for (name, (_, gdata)) in &golden.tensors {
+        let i = net.find(name).unwrap();
+        let ok = result.outputs[i]
+            .data
+            .iter()
+            .zip(gdata.iter())
+            .all(|(a, g)| a.to_bits() == fusionaccel::fp16::F16::from_f32(*g).to_bits());
+        anyhow::ensure!(ok, "golden mismatch at {name}");
+        exact += 1;
+    }
+    println!("bit-exact vs Python rtl_ref golden: {exact}/{} taps", golden.tensors.len());
+    println!("\nsqueezenet_e2e OK");
+    Ok(())
+}

@@ -1,0 +1,195 @@
+"""AOT build step: runs ONCE at ``make artifacts``; Python never touches
+the request path afterwards.
+
+Emits into ``artifacts/``:
+
+* ``squeezenet_weights.bin``  — deterministic synthetic He-init weights
+  (FAWB; substitutes for the paper's caffemodel, DESIGN.md §3)
+* ``image.bin``               — deterministic synthetic 227×227×3 input,
+  preprocessed exactly like the paper's preprocess.py (Fig 28)
+* ``golden_squeezenet.bin``   — bit-exact FP16 tap activations from the
+  RTL-order emulation (``kernels/rtl_ref.py``); the Rust functional
+  engine must reproduce these exactly (integration tests)
+* ``squeezenet_ref.hlo.txt``  — the FP32 "Caffe-CPU" oracle (full net,
+  pure-jnp backend), args = (image, w/b per conv in engine order)
+* ``squeezenet_taps.hlo.txt`` — same net, multi-output taps
+  (conv1, pool1, fire2/concat, conv10, pool10) for Figs 37-39
+* ``conv_pallas_demo.hlo.txt`` / ``pool_pallas_demo.hlo.txt`` — the L1
+  Pallas kernels lowered standalone (fire2/expand3x3- and pool1-shaped)
+* ``squeezenet_pallas.hlo.txt`` (with ``--pallas-full``) — the whole
+  network through the Pallas backend.
+
+HLO **text** is the interchange format (not ``.serialize()``): the
+image's xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction-id
+protos, while the text parser reassigns ids (see /opt/xla-example).
+"""
+
+import argparse
+import functools
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import fawb, model, netspec
+from compile.kernels import conv as pallas_kernels
+from compile.kernels import rtl_ref
+
+WEIGHT_SEED = 20190705  # the paper's date — fixed for reproducibility
+IMAGE_SEED = 227
+
+# ILSVRC-2012 channel means, BGR (Fig 28) — keep in sync with
+# rust/src/host/preprocess.rs.
+IMAGENET_MEAN_BGR = np.array([104.00699, 116.66877, 122.67892], dtype=np.float32)
+
+GOLDEN_TAPS = ["conv1", "pool1", "fire2/concat", "fire5/concat", "conv10", "pool10"]
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def synth_weights(layers, seed=WEIGHT_SEED):
+    """He-scaled normals for every conv layer (OHWI) + small biases."""
+    rng = np.random.default_rng(seed)
+    blobs = {}
+    for e in netspec.conv_layers(layers):
+        k, ic, oc = e["kernel"], e["i_ch"], e["o_ch"]
+        # 0.75 gain under He: trained SqueezeNet activations decay with
+        # depth; pure He on synthetic data keeps std ~constant at the
+        # input's ±150 scale and overflows the FP16 pool10 accumulator
+        # (a real RTL failure mode, but not one the paper's trained
+        # weights hit — so we avoid it).
+        sd = 0.75 * np.sqrt(2.0 / (k * k * ic))
+        blobs[e["name"] + "_w"] = rng.normal(0.0, sd, size=(oc, k, k, ic)).astype(np.float32)
+        blobs[e["name"] + "_b"] = rng.normal(0.0, 0.05, size=(oc,)).astype(np.float32)
+    return blobs
+
+
+def synth_image(seed=IMAGE_SEED, side=227):
+    """Smooth synthetic RGB [0,1] photo: sum of random 2-D cosine modes
+    (spatially correlated, unlike white noise), then preprocessed like
+    preprocess.py: RGB->BGR, x255, mean-subtract."""
+    rng = np.random.default_rng(seed)
+    yy, xx = np.meshgrid(np.arange(side), np.arange(side), indexing="ij")
+    img = np.full((side, side, 3), 0.5, dtype=np.float32)
+    for _ in range(12):
+        fy, fx = rng.uniform(0.5, 6.0, size=2)
+        ph = rng.uniform(0, 2 * np.pi)
+        amp = rng.uniform(0.1, 0.5)
+        ch = rng.integers(0, 3)
+        img[:, :, ch] += amp * np.cos(
+            2 * np.pi * (fy * yy / side + fx * xx / side) + ph
+        ).astype(np.float32)
+    img = np.clip(img, 0.0, 1.0)
+    # preprocess: BGR channel c comes from RGB channel 2-c.
+    out = np.empty_like(img)
+    for c in range(3):
+        out[:, :, c] = img[:, :, 2 - c] * 255.0 - IMAGENET_MEAN_BGR[c]
+    return out
+
+
+def lower_ref(layers, params, image, taps=None):
+    names = model.param_order(layers)
+    flat = []
+    for n in names:
+        flat.append(params[n + "_w"])
+        flat.append(params[n + "_b"])
+    fn = functools.partial(model.forward_flat, layers=layers, backend="ref", taps=taps)
+    specs = [jax.ShapeDtypeStruct(image[None].shape, jnp.float32)] + [
+        jax.ShapeDtypeStruct(a.shape, jnp.float32) for a in flat
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+def lower_pallas_conv_demo():
+    """fire2/expand3x3-shaped conv through the Pallas kernel:
+    x (56,56,16), w (64,3,3,16), b (64,), stride 1, pad 1."""
+    fn = functools.partial(pallas_kernels.conv2d_relu_pallas, stride=1, padding=1)
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((56, 56, 16), jnp.float32),
+        jax.ShapeDtypeStruct((64, 3, 3, 16), jnp.float32),
+        jax.ShapeDtypeStruct((64,), jnp.float32),
+    )
+
+
+def lower_pallas_pool_demo():
+    """pool1-shaped max pool through the Pallas kernel: (113,113,64)."""
+    fn = functools.partial(pallas_kernels.maxpool2d_pallas, kernel=3, stride=2)
+    return jax.jit(fn).lower(jax.ShapeDtypeStruct((113, 113, 64), jnp.float32))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--pallas-full", action="store_true",
+                    help="also lower the full net via the Pallas backend (slow)")
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    layers = netspec.squeezenet_layers()
+    print("== synthesizing weights / image ==", flush=True)
+    params = synth_weights(layers)
+    image = synth_image()
+    fawb.write(out / "squeezenet_weights.bin", params)
+    fawb.write(out / "image.bin", {"input": image})
+    print(f"  {len(params)} weight tensors, image {image.shape}")
+
+    if not args.skip_golden:
+        print("== RTL-order FP16 golden forward (rtl_ref) ==", flush=True)
+        acts = rtl_ref.forward_squeezenet_rtl(image, params, layers)
+        golden = {t: acts[t].astype(np.float32) for t in GOLDEN_TAPS}
+        fawb.write(out / "golden_squeezenet.bin", golden)
+        top = np.argsort(-acts["pool10"].reshape(-1))[:5]
+        print(f"  golden taps: {GOLDEN_TAPS}; top-5 classes {top.tolist()}")
+
+    print("== lowering FP32 oracle (ref backend) ==", flush=True)
+    text = to_hlo_text(lower_ref(layers, params, image))
+    (out / "squeezenet_ref.hlo.txt").write_text(text)
+    print(f"  squeezenet_ref.hlo.txt: {len(text)} chars")
+
+    text = to_hlo_text(lower_ref(layers, params, image, taps=GOLDEN_TAPS))
+    (out / "squeezenet_taps.hlo.txt").write_text(text)
+    print(f"  squeezenet_taps.hlo.txt: {len(text)} chars")
+
+    print("== lowering Pallas kernel demos ==", flush=True)
+    text = to_hlo_text(lower_pallas_conv_demo())
+    (out / "conv_pallas_demo.hlo.txt").write_text(text)
+    print(f"  conv_pallas_demo.hlo.txt: {len(text)} chars")
+    text = to_hlo_text(lower_pallas_pool_demo())
+    (out / "pool_pallas_demo.hlo.txt").write_text(text)
+    print(f"  pool_pallas_demo.hlo.txt: {len(text)} chars")
+
+    if args.pallas_full:
+        print("== lowering full net via Pallas backend ==", flush=True)
+        names = model.param_order(layers)
+        flat = []
+        for n in names:
+            flat.append(params[n + "_w"])
+            flat.append(params[n + "_b"])
+        fn = functools.partial(model.forward_flat, layers=layers, backend="pallas")
+        specs = [jax.ShapeDtypeStruct(image[None].shape, jnp.float32)] + [
+            jax.ShapeDtypeStruct(a.shape, jnp.float32) for a in flat
+        ]
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        (out / "squeezenet_pallas.hlo.txt").write_text(text)
+        print(f"  squeezenet_pallas.hlo.txt: {len(text)} chars")
+
+    print("artifacts complete:", sorted(p.name for p in out.iterdir()))
+
+
+if __name__ == "__main__":
+    main()

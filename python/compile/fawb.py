@@ -1,0 +1,53 @@
+"""FAWB tensor container — Python writer/reader.
+
+Must stay byte-compatible with ``rust/src/net/weights.rs``:
+
+    magic  b"FAWB", count u32 LE
+    per tensor (sorted by name): name_len u16, name utf-8,
+    ndim u8, dims u32 x ndim, data f32 LE
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"FAWB"
+
+
+def write(path, tensors):
+    """tensors: dict name -> np.ndarray (any float dtype; stored f32)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name], dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read(path):
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == MAGIC, "bad magic"
+    (count,) = struct.unpack_from("<I", data, 4)
+    off = 8
+    out = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off : off + nlen].decode("utf-8")
+        off += nlen
+        (ndim,) = struct.unpack_from("<B", data, off)
+        off += 1
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, dtype="<f4", count=n, offset=off).reshape(dims)
+        off += 4 * n
+        out[name] = arr
+    return out

@@ -1,0 +1,125 @@
+"""L1 Pallas kernels: im2col + GEMM convolution and pooling.
+
+Hardware adaptation (DESIGN.md §2). The paper's RTL streams one *row
+slice* — the k input rows feeding one output row, all channel lanes —
+from host to a BRAM data cache, and keeps an output-channel block of
+weights resident (§4.4, Table 2's "germ"/weight blocks). On TPU the same
+schedule is the natural Pallas decomposition:
+
+* grid = output rows (the per-piece loop of Fig 35);
+* the kernel's working set per grid step = k input rows + the weight
+  matrix, i.e. the BRAM caches become the VMEM-resident refs;
+* the inner computation is exactly the paper's im2col + GEMM (§3.3.1):
+  build the (o_w, k*k*C) patch matrix and hit the MXU with a single
+  ``patches @ wmat`` — channel-first parallelism maps the 8-lane FP16
+  datapath onto the MXU's contraction dimension.
+
+Kernels MUST run with ``interpret=True`` here: the CPU PJRT client
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+Real-TPU tiling/VMEM numbers are estimated in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_row_kernel(x_ref, w_ref, b_ref, o_ref, *, k, stride, o_w, relu):
+    """Compute one output row: x_ref holds the whole padded input (the
+    row window is dynamically sliced — windows overlap by k - stride so
+    they cannot be expressed as disjoint BlockSpec blocks); w_ref is the
+    (k*k*C, N) GEMM matrix; o_ref is the (1, o_w, N) output row block."""
+    y = pl.program_id(0)
+    rows = pl.load(
+        x_ref,
+        (pl.dslice(y * stride, k), slice(None), slice(None)),
+    )  # (k, W, C) — the paper's "germ" row slice
+    # im2col: (o_w, k*k*C) patch matrix. Static unroll over output x —
+    # each patch is the k×k×C window flattened in (ky, kx, c) order,
+    # matching the weight-cache layout.
+    patches = jnp.stack(
+        [rows[:, xo * stride : xo * stride + k, :].reshape(-1) for xo in range(o_w)]
+    )
+    acc = patches @ w_ref[...] + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc[None]
+
+
+def conv2d_relu_pallas(x, w, b, stride=1, padding=0, relu=True):
+    """Pallas convolution + ReLU. x: (H, W, C); w: (N, k, k, C); b: (N,).
+
+    Functionally identical to ``ref.conv2d_relu`` (pytest asserts
+    allclose); the grid/BlockSpec structure mirrors the RTL's row-slice
+    schedule.
+    """
+    n, k, _, c = w.shape
+    xp = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+    h = xp.shape[0]
+    o = (h - k) // stride + 1
+    # Weight-cache layout: (ky, kx, c) rows × N columns.
+    wmat = jnp.transpose(w, (1, 2, 3, 0)).reshape(k * k * c, n)
+
+    kernel = functools.partial(_conv_row_kernel, k=k, stride=stride, o_w=o, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(o,),
+        in_specs=[
+            # Whole padded input resident (windows overlap, see kernel doc).
+            pl.BlockSpec(xp.shape, lambda y: (0, 0, 0)),
+            pl.BlockSpec(wmat.shape, lambda y: (0, 0)),
+            pl.BlockSpec(b.shape, lambda y: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, o, n), lambda y: (y, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((o, o, n), x.dtype),
+        interpret=True,
+    )(xp, wmat, b)
+
+
+def _pool_row_kernel(x_ref, o_ref, *, k, stride, o_w, op, i_side):
+    y = pl.program_id(0)
+    c = x_ref.shape[-1]
+    rows = pl.load(x_ref, (pl.dslice(y * stride, k), slice(None), slice(None)))
+    outs = []
+    for xo in range(o_w):
+        win = rows[:, xo * stride : xo * stride + k, :].reshape(-1, c)
+        if op == "max":
+            outs.append(jnp.max(win, axis=0))
+        else:
+            outs.append(jnp.sum(win, axis=0) / float(k * k))
+    o_ref[...] = jnp.stack(outs)[None]
+
+
+def _pool_pallas(x, kernel, stride, op):
+    i = x.shape[0]
+    o = -(-(i - kernel) // stride) + 1 if op == "max" else (i - kernel) // stride + 1
+    need = (o - 1) * stride + kernel
+    pad = need - i
+    if pad > 0:
+        fill = -jnp.inf if op == "max" else 0.0
+        x = jnp.pad(x, ((0, pad), (0, pad), (0, 0)), constant_values=fill)
+    c = x.shape[-1]
+    body = functools.partial(
+        _pool_row_kernel, k=kernel, stride=stride, o_w=o, op=op, i_side=x.shape[0]
+    )
+    return pl.pallas_call(
+        body,
+        grid=(o,),
+        in_specs=[pl.BlockSpec(x.shape, lambda y: (0, 0, 0))],
+        out_specs=pl.BlockSpec((1, o, c), lambda y: (y, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((o, o, c), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def maxpool2d_pallas(x, kernel, stride):
+    """Ceil-mode max pooling (clipped windows via -inf padding)."""
+    return _pool_pallas(x, kernel, stride, "max")
+
+
+def avgpool2d_pallas(x, kernel, stride):
+    """Average pooling (divides by full k², like the RTL's kernel_size
+    register)."""
+    return _pool_pallas(x, kernel, stride, "avg")

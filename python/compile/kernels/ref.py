@@ -1,0 +1,77 @@
+"""Pure-jnp reference kernels — the FP32 correctness oracle.
+
+These are the semantics of the paper's three engine operations
+(conv+ReLU / max-pool / avg-pool, §4.2) in plain ``jax.numpy``, used
+
+* as the oracle the Pallas kernels are checked against (pytest), and
+* as the 'ref' backend of ``model.py``, whose AOT lowering is the
+  "Caffe-CPU" FP32 oracle the Rust side compares the FP16 simulator to
+  (paper §5, Figs 37-39).
+
+All tensors are HWC / NHWC (§3.4.1) in float32. Weights are OHWI:
+``(o_ch, k, k, i_ch)``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_relu(x, w, b, stride=1, padding=0, relu=True):
+    """Convolution + optional ReLU. x: (H, W, C); w: (N, k, k, C); b: (N,)."""
+    lhs = x[None]  # NHWC
+    rhs = jnp.transpose(w, (1, 2, 3, 0))  # HWIO
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        rhs,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    out = out + b[None, None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def maxpool2d(x, kernel, stride):
+    """Ceil-mode max pooling with clipped (overhanging) windows.
+
+    Matches Caffe/Table 2 geometry: o = ceil((i - k) / s) + 1; windows
+    that overhang the bottom/right border are clipped, which for max is
+    equivalent to -inf padding.
+    """
+    i = x.shape[0]
+    o = -(-(i - kernel) // stride) + 1
+    need = (o - 1) * stride + kernel
+    pad = need - i
+    xp = jnp.pad(x, ((0, pad), (0, pad), (0, 0)), constant_values=-jnp.inf)
+    out = jax.lax.reduce_window(
+        xp[None],
+        -jnp.inf,
+        jax.lax.max,
+        (1, kernel, kernel, 1),
+        (1, stride, stride, 1),
+        "VALID",
+    )[0]
+    return out
+
+
+def avgpool2d(x, kernel, stride):
+    """Average pooling, dividing by the full k^2 (the RTL divides by the
+    command's kernel_size register, Fig 27)."""
+    out = jax.lax.reduce_window(
+        x[None],
+        0.0,
+        jax.lax.add,
+        (1, kernel, kernel, 1),
+        (1, stride, stride, 1),
+        "VALID",
+    )[0]
+    return out / float(kernel * kernel)
+
+
+def softmax(x):
+    """Stable softmax over the last axis (paper Eq. 4)."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

@@ -1,0 +1,140 @@
+"""Bit-exact FP16 emulation of the FusionAccel engine dataflow.
+
+This is the Python half of the numerics contract (DESIGN.md §6): it
+reproduces, in numpy float16 (every op correctly rounded, like the RTL's
+Floating-Point 5.0 units), the exact accumulation order of the engine:
+
+per output element (y, x, oc):
+  fsum <- bias[oc]                               (Fig 25 initial value)
+  for each 8-lane channel group g:
+      psum_l = sum over (ky, kx) row-major of round16(d * w)   per lane
+      fsum <- ((fsum + psum_0) + psum_1) + ... + psum_7        in FP16
+  ReLU = sign-bit test.
+
+Max-pooling lanes run a running max with initial value 0x0000 (Fig 26);
+average pooling accumulates the window in FP16 and divides by the
+int->FP-converted kernel_size (Fig 27).
+
+The Rust functional engine implements the same contract; `aot.py` bakes
+this module's full-network outputs into golden files that the Rust
+integration tests compare against **bit-exactly**.
+
+Vectorized over output pixels / channels (those are independent in the
+RTL too); sequential exactly where the RTL is sequential.
+"""
+
+import numpy as np
+
+F16 = np.float16
+LANES = 8
+
+
+def _pad8(c):
+    return -(-c // LANES) * LANES
+
+
+def quantize(x):
+    """FP32 -> FP16 with a single rounding (host loading blobs)."""
+    return np.asarray(x, dtype=F16)
+
+
+def conv2d_relu_rtl(x16, w16, b16, stride=1, padding=0, relu=True):
+    """x16: (H, W, C) f16; w16: (N, k, k, C) f16; b16: (N,) f16."""
+    assert x16.dtype == F16 and w16.dtype == F16
+    n, k, _, c = w16.shape
+    cp = _pad8(c)
+    xp = np.zeros((x16.shape[0] + 2 * padding, x16.shape[1] + 2 * padding, cp), dtype=F16)
+    xp[padding : padding + x16.shape[0], padding : padding + x16.shape[1], :c] = x16
+    wp = np.zeros((n, k, k, cp), dtype=F16)
+    wp[..., :c] = w16
+    o = (xp.shape[0] - k) // stride + 1
+
+    fsum = np.broadcast_to(b16[None, None, :], (o, o, n)).astype(F16).copy()
+    groups = cp // LANES
+    for g in range(groups):
+        c0 = g * LANES
+        # psum per lane: sequential FP16 MAC over the window, row-major.
+        psum = np.zeros((o, o, n, LANES), dtype=F16)
+        for ky in range(k):
+            for kx in range(k):
+                d = xp[ky : ky + o * stride : stride, kx : kx + o * stride : stride, c0 : c0 + LANES]
+                w = wp[:, ky, kx, c0 : c0 + LANES]  # (N, 8)
+                prod = (d[:, :, None, :] * w[None, None, :, :]).astype(F16)
+                psum = (psum + prod).astype(F16)
+        # fsum: 8 sequential adds per group (Fig 25 final stage).
+        for lane in range(LANES):
+            fsum = (fsum + psum[..., lane]).astype(F16)
+    if relu:
+        # Sign-bit test (§3.2): clears -0 and negative NaNs too.
+        neg = np.signbit(fsum)
+        fsum = fsum.copy()
+        fsum[neg] = F16(0.0)
+    return fsum
+
+
+def maxpool2d_rtl(x16, kernel, stride):
+    """Running max with initial value 0x0000 (Fig 26), ceil-mode clipped
+    windows."""
+    assert x16.dtype == F16
+    i, _, c = x16.shape
+    o = -(-(i - kernel) // stride) + 1
+    best = np.zeros((o, o, c), dtype=F16)
+    for ky in range(kernel):
+        for kx in range(kernel):
+            ys = np.arange(o) * stride + ky
+            xs = np.arange(o) * stride + kx
+            yv = np.minimum(ys, i - 1)
+            xv = np.minimum(xs, i - 1)
+            d = x16[yv][:, xv, :]
+            valid = (ys <= i - 1)[:, None, None] & (xs <= i - 1)[None, :, None]
+            # comparator: replace when d > best (NaN compares false).
+            upd = valid & (d > best)
+            best = np.where(upd, d, best).astype(F16)
+    return best
+
+
+def avgpool2d_rtl(x16, kernel, stride):
+    """FP16 window accumulation (row-major, init 0) then division by the
+    int->FP-converted kernel_size (Fig 27)."""
+    assert x16.dtype == F16
+    i, _, c = x16.shape
+    o = (i - kernel) // stride + 1
+    acc = np.zeros((o, o, c), dtype=F16)
+    for ky in range(kernel):
+        for kx in range(kernel):
+            d = x16[ky : ky + o * stride : stride, kx : kx + o * stride : stride, :]
+            acc = (acc + d).astype(F16)
+    divisor = F16(float(kernel * kernel))
+    return (acc / divisor).astype(F16)
+
+
+def forward_squeezenet_rtl(image_f32, blobs, layer_table):
+    """Full-network FP16 forward in RTL order.
+
+    ``layer_table`` is netspec.SQUEEZENET_LAYERS; ``blobs`` maps
+    '<layer>_w'/'<layer>_b' to f32 arrays. Returns {node_name: f16 array}.
+    """
+    acts = {"input": quantize(image_f32)}
+    for entry in layer_table:
+        kind = entry["kind"]
+        name = entry["name"]
+        src = acts[entry["input"]]
+        if kind == "conv":
+            w = quantize(blobs[name + "_w"])
+            b = quantize(blobs[name + "_b"])
+            acts[name] = conv2d_relu_rtl(
+                src, w, b, stride=entry["stride"], padding=entry["padding"],
+                relu=not entry.get("skip_relu", False),
+            )
+        elif kind == "maxpool":
+            acts[name] = maxpool2d_rtl(src, entry["kernel"], entry["stride"])
+        elif kind == "avgpool":
+            acts[name] = avgpool2d_rtl(src, entry["kernel"], entry["stride"])
+        elif kind == "concat":
+            parts = [acts[i] for i in entry["inputs"]]
+            acts[name] = np.concatenate(parts, axis=-1)
+        elif kind == "softmax":
+            acts[name] = src  # host-side, f32; keep logits
+        else:
+            raise ValueError(kind)
+    return acts

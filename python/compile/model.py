@@ -1,0 +1,89 @@
+"""L2: the JAX model — SqueezeNet v1.1 forward pass (Table 1), built
+from the layer table in ``netspec.py``, with a pluggable kernel backend:
+
+* ``backend='ref'``    — pure-jnp kernels (``kernels/ref.py``). Its AOT
+  lowering is the FP32 "Caffe-CPU" oracle of the paper's §5 comparison.
+* ``backend='pallas'`` — the L1 Pallas kernels (``kernels/conv.py``,
+  interpret mode), lowered into the same HLO; proves the three-layer
+  stack composes.
+
+The forward function's argument order (image, then w/b per conv layer in
+engine order) is the contract with ``rust/src/runtime/oracle_inputs``.
+"""
+
+import jax.numpy as jnp
+
+from . import netspec
+from .kernels import conv as pallas_kernels
+from .kernels import ref as ref_kernels
+
+
+def _backend(name):
+    if name == "ref":
+        return (
+            ref_kernels.conv2d_relu,
+            ref_kernels.maxpool2d,
+            ref_kernels.avgpool2d,
+        )
+    if name == "pallas":
+        return (
+            pallas_kernels.conv2d_relu_pallas,
+            pallas_kernels.maxpool2d_pallas,
+            pallas_kernels.avgpool2d_pallas,
+        )
+    raise ValueError(f"unknown backend {name!r}")
+
+
+def param_order(layers=None):
+    """Names of the conv layers in engine order (one (w, b) pair each)."""
+    layers = layers or netspec.squeezenet_layers()
+    return [e["name"] for e in netspec.conv_layers(layers)]
+
+
+def forward(image, params, layers=None, backend="ref", taps=None):
+    """Forward pass.
+
+    image: (1, 227, 227, 3) or (227, 227, 3) f32 (preprocessed).
+    params: dict name -> (w (N,k,k,C), b (N,)).
+    taps: optional list of node names; when given, returns a tuple of
+    those activations instead of the softmax probabilities.
+    """
+    layers = layers or netspec.squeezenet_layers()
+    conv_f, maxp_f, avgp_f = _backend(backend)
+
+    x = image[0] if image.ndim == 4 else image
+    acts = {"input": x}
+    for e in layers:
+        kind, name = e["kind"], e["name"]
+        if kind == "conv":
+            w, b = params[name]
+            acts[name] = conv_f(
+                acts[e["input"]], w, b, stride=e["stride"], padding=e["padding"],
+                relu=not e.get("skip_relu", False),
+            )
+        elif kind == "maxpool":
+            acts[name] = maxp_f(acts[e["input"]], e["kernel"], e["stride"])
+        elif kind == "avgpool":
+            acts[name] = avgp_f(acts[e["input"]], e["kernel"], e["stride"])
+        elif kind == "concat":
+            acts[name] = jnp.concatenate([acts[i] for i in e["inputs"]], axis=-1)
+        elif kind == "softmax":
+            logits = acts[e["input"]].reshape(-1)
+            acts[name] = ref_kernels.softmax(logits)
+        else:
+            raise ValueError(kind)
+    if taps is not None:
+        return tuple(acts[t] for t in taps)
+    return acts[layers[-1]["name"]]
+
+
+def forward_flat(image, *flat_params, layers=None, backend="ref", taps=None):
+    """Same, but with (w, b) pairs splatted as positional args — the
+    signature that gets jitted and lowered for the Rust runtime."""
+    layers = layers or netspec.squeezenet_layers()
+    names = param_order(layers)
+    assert len(flat_params) == 2 * len(names), (len(flat_params), len(names))
+    params = {
+        name: (flat_params[2 * i], flat_params[2 * i + 1]) for i, name in enumerate(names)
+    }
+    return forward(image, params, layers=layers, backend=backend, taps=taps)

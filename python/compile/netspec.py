@@ -1,0 +1,98 @@
+"""Network specifications shared by model.py / rtl_ref.py / aot.py.
+
+Mirrors ``rust/src/net/squeezenet.rs`` (Table 1/2 of the paper) — the
+pytest suite cross-checks the 96-bit command encodings against the same
+Table 2 golden strings the Rust tests use.
+"""
+
+FIRES = [
+    ("fire2", 16, 64),
+    ("fire3", 16, 64),
+    ("fire4", 32, 128),
+    ("fire5", 32, 128),
+    ("fire6", 48, 192),
+    ("fire7", 48, 192),
+    ("fire8", 64, 256),
+    ("fire9", 64, 256),
+]
+
+
+def _conv(name, input_, kernel, stride, padding, i_side, i_ch, o_ch, slot=0, skip_relu=False):
+    o_side = (i_side + 2 * padding - kernel) // stride + 1
+    return dict(
+        kind="conv", name=name, input=input_, kernel=kernel, stride=stride,
+        padding=padding, i_side=i_side, o_side=o_side, i_ch=i_ch, o_ch=o_ch,
+        slot=slot, skip_relu=skip_relu,
+    )
+
+
+def _maxpool(name, input_, kernel, stride, i_side, ch):
+    o_side = -(-(i_side - kernel) // stride) + 1  # ceil mode
+    return dict(
+        kind="maxpool", name=name, input=input_, kernel=kernel, stride=stride,
+        padding=0, i_side=i_side, o_side=o_side, i_ch=ch, o_ch=ch, slot=0,
+    )
+
+
+def _avgpool(name, input_, kernel, stride, i_side, ch):
+    o_side = (i_side - kernel) // stride + 1
+    return dict(
+        kind="avgpool", name=name, input=input_, kernel=kernel, stride=stride,
+        padding=0, i_side=i_side, o_side=o_side, i_ch=ch, o_ch=ch, slot=0,
+    )
+
+
+def squeezenet_layers():
+    """SqueezeNet v1.1 as an ordered layer table (Table 1/2)."""
+    layers = [
+        _conv("conv1", "input", 3, 2, 0, 227, 3, 64),
+        _maxpool("pool1", "conv1", 3, 2, 113, 64),
+    ]
+    cur, side, ch = "pool1", 56, 64
+    for i, (name, sq, ex) in enumerate(FIRES):
+        layers.append(_conv(f"{name}/squeeze1x1", cur, 1, 1, 0, side, ch, sq))
+        layers.append(_conv(f"{name}/expand1x1", f"{name}/squeeze1x1", 1, 1, 0, side, sq, ex, slot=1))
+        layers.append(_conv(f"{name}/expand3x3", f"{name}/squeeze1x1", 3, 1, 1, side, sq, ex, slot=5))
+        layers.append(dict(kind="concat", name=f"{name}/concat",
+                           inputs=[f"{name}/expand1x1", f"{name}/expand3x3"],
+                           input=f"{name}/expand1x1"))
+        cur, ch = f"{name}/concat", 2 * ex
+        if i == 1:
+            layers.append(_maxpool("pool3", cur, 3, 2, side, ch))
+            cur, side = "pool3", 28
+        elif i == 3:
+            layers.append(_maxpool("pool5", cur, 3, 2, side, ch))
+            cur, side = "pool5", 14
+    layers.append(_conv("conv10", cur, 1, 1, 0, 14, 512, 1000))
+    layers.append(_avgpool("pool10", "conv10", 14, 1, 14, 1000))
+    layers.append(dict(kind="softmax", name="prob", input="pool10"))
+    return layers
+
+
+def engine_layers(layers):
+    """Only the on-device ops, in CMDFIFO order."""
+    return [e for e in layers if e["kind"] in ("conv", "maxpool", "avgpool")]
+
+
+def conv_layers(layers):
+    return [e for e in layers if e["kind"] == "conv"]
+
+
+OP_CODES = {"conv": 1, "maxpool": 2, "avgpool": 3}
+
+
+def encode_command(e):
+    """The 96-bit layer command (Fig 33 / Table 2) as three dwords —
+    must match ``rust/src/net/layer.rs``."""
+    op = OP_CODES[e["kind"]] | (0x8 if e.get("skip_relu") else 0)
+    d0 = (e["o_side"] << 24) | (e["i_side"] << 16) | (e["kernel"] << 8) | (e["stride"] << 4) | op
+    d1 = (e["o_ch"] << 16) | e["i_ch"]
+    k2 = e["kernel"] * e["kernel"]
+    s2 = e["stride"] * e["kernel"]
+    d2 = (s2 << 16) | (k2 << 8) | (e["slot"] << 4) | e["padding"]
+    return d0, d1, d2
+
+
+def command_hex(e):
+    d0, d1, d2 = encode_command(e)
+    return f"{d0 >> 16:04X}_{d0 & 0xFFFF:04X} {d1 >> 16:04X}_{d1 & 0xFFFF:04X} {d2 >> 16:04X}_{d2 & 0xFFFF:04X}"

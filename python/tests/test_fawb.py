@@ -1,0 +1,68 @@
+"""FAWB container: byte-level format pin (the cross-language contract
+with rust/src/net/weights.rs) + roundtrip."""
+
+import struct
+
+import numpy as np
+import pytest
+
+from compile import fawb
+
+
+def test_byte_layout_pinned(tmp_path):
+    """The exact byte stream both sides must agree on."""
+    path = tmp_path / "t.bin"
+    fawb.write(path, {"ab": np.array([[1.0, 2.0]], dtype=np.float32)})
+    data = path.read_bytes()
+    expect = (
+        b"FAWB"
+        + struct.pack("<I", 1)          # count
+        + struct.pack("<H", 2) + b"ab"  # name
+        + struct.pack("<B", 2)          # ndim
+        + struct.pack("<II", 1, 2)      # dims
+        + struct.pack("<ff", 1.0, 2.0)  # data, f32 LE
+    )
+    assert data == expect
+
+
+def test_roundtrip_multiple_tensors(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "conv1_w": rng.normal(size=(4, 3, 3, 2)).astype(np.float32),
+        "conv1_b": rng.normal(size=(4,)).astype(np.float32),
+        "input": rng.normal(size=(5, 5, 3)).astype(np.float32),
+    }
+    path = tmp_path / "r.bin"
+    fawb.write(path, tensors)
+    back = fawb.read(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+def test_names_written_sorted(tmp_path):
+    """Rust's BTreeMap writer sorts by name; Python must match so byte
+    streams are reproducible."""
+    path = tmp_path / "s.bin"
+    fawb.write(path, {"zz": np.zeros(1, np.float32), "aa": np.ones(1, np.float32)})
+    data = path.read_bytes()
+    assert data.find(b"aa") < data.find(b"zz")
+
+
+def test_read_rejects_bad_magic(tmp_path):
+    path = tmp_path / "bad.bin"
+    path.write_bytes(b"NOPE" + b"\x00" * 8)
+    with pytest.raises(AssertionError):
+        fawb.read(path)
+
+
+def test_artifacts_weights_parse_if_present():
+    import pathlib
+
+    p = pathlib.Path(__file__).resolve().parent.parent.parent / "artifacts" / "squeezenet_weights.bin"
+    if not p.exists():
+        pytest.skip("artifacts not built")
+    blobs = fawb.read(p)
+    assert len(blobs) == 52
+    assert blobs["conv1_w"].shape == (64, 3, 3, 3)
+    assert blobs["conv10_b"].shape == (1000,)

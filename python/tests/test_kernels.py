@@ -1,0 +1,110 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/strides/paddings; assert_allclose against
+ref.py — the CORE kernel correctness signal of the three-layer stack.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import conv as pk
+from compile.kernels import ref
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    side=st.integers(5, 12),
+    c=st.integers(1, 9),
+    n=st.integers(1, 6),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.integers(1, 2),
+    padding=st.integers(0, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_pallas_matches_ref(side, c, n, k, stride, padding, seed):
+    if side + 2 * padding < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = rand(rng, side, side, c)
+    w = rand(rng, n, k, k, c)
+    b = rand(rng, n)
+    got = pk.conv2d_relu_pallas(x, w, b, stride=stride, padding=padding)
+    exp = ref.conv2d_relu(x, w, b, stride=stride, padding=padding)
+    assert got.shape == exp.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    side=st.integers(4, 14),
+    c=st.integers(1, 8),
+    k=st.sampled_from([2, 3]),
+    stride=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_pallas_matches_ref(side, c, k, stride, seed):
+    if side < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = rand(rng, side, side, c)
+    got = pk.maxpool2d_pallas(x, k, stride)
+    exp = ref.maxpool2d(x, k, stride)
+    assert got.shape == exp.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=0, atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    side=st.integers(4, 14),
+    c=st.integers(1, 8),
+    k=st.sampled_from([2, 3, 4]),
+    stride=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_avgpool_pallas_matches_ref(side, c, k, stride, seed):
+    if side < k or (side - k) % stride != 0 and side < k + stride:
+        return
+    rng = np.random.default_rng(seed)
+    x = rand(rng, side, side, c)
+    got = pk.avgpool2d_pallas(x, k, stride)
+    exp = ref.avgpool2d(x, k, stride)
+    assert got.shape == exp.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-5, atol=1e-6)
+
+
+def test_conv_relu_is_applied():
+    x = jnp.full((3, 3, 1), -1.0)
+    w = jnp.ones((1, 1, 1, 1))
+    b = jnp.zeros((1,))
+    out = pk.conv2d_relu_pallas(x, w, b)
+    assert float(jnp.max(out)) == 0.0
+    out_nr = pk.conv2d_relu_pallas(x, w, b, relu=False)
+    assert float(jnp.min(out_nr)) == -1.0
+
+
+def test_ceil_mode_pool_geometry():
+    # pool3 of SqueezeNet: 56 -> 28 needs the clipped overhang.
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(56, 56, 4)).astype(np.float32))
+    got = pk.maxpool2d_pallas(x, 3, 2)
+    assert got.shape == (28, 28, 4)
+    exp = ref.maxpool2d(x, 3, 2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+@pytest.mark.parametrize("shape,k,s", [((113, 113, 8), 3, 2), ((14, 14, 16), 14, 1)])
+def test_paper_pool_shapes(shape, k, s):
+    x = jnp.zeros(shape)
+    if k <= shape[0]:
+        if s == 1 and k == 14:
+            out = pk.avgpool2d_pallas(x, k, s)
+            assert out.shape == (1, 1, shape[2])
+        else:
+            out = pk.maxpool2d_pallas(x, k, s)
+            assert out.shape[0] == -(-(shape[0] - k) // s) + 1

@@ -1,0 +1,103 @@
+"""The FP16 RTL-order emulation: rounding semantics + agreement with the
+FP32 reference within the FP16 error envelope."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref, rtl_ref
+
+
+def test_accumulation_order_pinned():
+    """The documented case from the Rust test suite: 8 lanes of 1024.0
+    then 8 lanes of 0.5 — group-sequential FP16 accumulation sticks at
+    8192 (an f32 reference would give 8196)."""
+    x = np.zeros((1, 1, 16), dtype=np.float16)
+    x[0, 0, :8] = np.float16(1024.0)
+    x[0, 0, 8:] = np.float16(0.5)
+    w = np.ones((1, 1, 1, 16), dtype=np.float16)
+    b = np.zeros((1,), dtype=np.float16)
+    out = rtl_ref.conv2d_relu_rtl(x, w, b)
+    assert out[0, 0, 0] == np.float16(8192.0)
+
+
+def test_maxpool_zero_init_quirk():
+    """All-negative windows clamp to 0 (Fig 26 initial value 0x0000)."""
+    x = -np.ones((2, 2, 1), dtype=np.float16)
+    out = rtl_ref.maxpool2d_rtl(x, 2, 1)
+    assert out[0, 0, 0] == np.float16(0.0)
+
+
+def test_avgpool_divides_by_kernel_size():
+    x = np.ones((14, 14, 3), dtype=np.float16)
+    out = rtl_ref.avgpool2d_rtl(x, 14, 1)
+    np.testing.assert_array_equal(out, np.ones((1, 1, 3), dtype=np.float16))
+
+
+def test_ceil_mode_clipping_matches_ref_geometry():
+    rng = np.random.default_rng(3)
+    x = np.abs(rng.normal(size=(56, 56, 4))).astype(np.float16)
+    got = rtl_ref.maxpool2d_rtl(x, 3, 2)
+    exp = ref.maxpool2d(jnp.asarray(x.astype(np.float32)), 3, 2)
+    assert got.shape == exp.shape == (28, 28, 4)
+    # max-pool involves no arithmetic: values must agree exactly.
+    np.testing.assert_array_equal(got.astype(np.float32), np.asarray(exp))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    side=st.integers(5, 10),
+    c=st.integers(1, 12),
+    n=st.integers(1, 4),
+    k=st.sampled_from([1, 3]),
+    stride=st.integers(1, 2),
+    padding=st.integers(0, 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rtl_conv_within_fp16_envelope_of_ref(side, c, n, k, stride, padding, seed):
+    """FP16 RTL-order result vs FP32 reference: relative error bounded by
+    the FP16 precision times the accumulation length."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(side, side, c)).astype(np.float32)
+    w = (rng.normal(size=(n, k, k, c)) * 0.3).astype(np.float32)
+    b = (rng.normal(size=(n,)) * 0.1).astype(np.float32)
+    got = rtl_ref.conv2d_relu_rtl(
+        x.astype(np.float16), w.astype(np.float16), b.astype(np.float16),
+        stride=stride, padding=padding,
+    ).astype(np.float32)
+    exp = np.asarray(ref.conv2d_relu(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                                     stride=stride, padding=padding))
+    # accumulation length = k*k*c + 1; each FP16 op adds ~2^-11 relative.
+    scale = np.maximum(np.abs(exp), 1.0)
+    tol = (k * k * c + 16) * 2.0 ** -11 * scale + 1e-3
+    assert np.all(np.abs(got - exp) <= tol), np.max(np.abs(got - exp) / scale)
+
+
+def test_full_squeezenet_rtl_runs_on_tiny_surrogate():
+    """Exercise forward_squeezenet_rtl wiring on a shrunken layer table."""
+    from compile import netspec
+
+    layers = [
+        dict(kind="conv", name="conv1", input="input", kernel=3, stride=1,
+             padding=0, i_side=8, o_side=6, i_ch=3, o_ch=4, slot=0),
+        dict(kind="conv", name="e1", input="conv1", kernel=1, stride=1,
+             padding=0, i_side=6, o_side=6, i_ch=4, o_ch=4, slot=1),
+        dict(kind="conv", name="e3", input="conv1", kernel=3, stride=1,
+             padding=1, i_side=6, o_side=6, i_ch=4, o_ch=4, slot=5),
+        dict(kind="concat", name="cat", inputs=["e1", "e3"], input="e1"),
+        dict(kind="maxpool", name="pool", input="cat", kernel=2, stride=2,
+             padding=0, i_side=6, o_side=3, i_ch=8, o_ch=8, slot=0),
+        dict(kind="softmax", name="prob", input="pool"),
+    ]
+    rng = np.random.default_rng(0)
+    blobs = {}
+    for e in netspec.conv_layers(layers):
+        k, ic, oc = e["kernel"], e["i_ch"], e["o_ch"]
+        blobs[e["name"] + "_w"] = rng.normal(size=(oc, k, k, ic)).astype(np.float32) * 0.3
+        blobs[e["name"] + "_b"] = rng.normal(size=(oc,)).astype(np.float32) * 0.1
+    image = rng.normal(size=(8, 8, 3)).astype(np.float32)
+    acts = rtl_ref.forward_squeezenet_rtl(image, blobs, layers)
+    assert acts["cat"].shape == (6, 6, 8)
+    assert acts["pool"].shape == (3, 3, 8)
+    assert acts["pool"].dtype == np.float16

@@ -1,0 +1,196 @@
+//! A1/A2 — the §3.3 algorithm ablations behind the §3.4 design choices:
+//!
+//! * bitonic sort vs the sequential comparator chain (§3.3.3/§3.4.1);
+//! * pipeline accumulation's cycle/readout irregularity (§3.3.4, Fig 13);
+//! * im2col+GEMM vs MEC memory-access counts (§3.3.1/2, §3.4.3);
+//! * channel-first vs surface-first parallelism slots (§3.4.3);
+//! * the overlapped-pipeline engine (engine::timed) vs the shipped
+//!   serialized-round engine (perfmodel) — what a filled pipeline buys.
+//!
+//!     cargo bench --bench ablation_algos
+
+use fusionaccel::algos::{bitonic, convolution, pipeline_accum};
+use fusionaccel::benchkit::{bench, black_box, section, table};
+use fusionaccel::fp16::F16;
+use fusionaccel::net::layer::LayerSpec;
+use fusionaccel::net::tensor::{ConvWeights, Tensor};
+use fusionaccel::perfmodel;
+use fusionaccel::prop::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xA81A);
+
+    section("A1a — bitonic sort network (Fig 12) vs sequential max");
+    let mut rows = Vec::new();
+    for m in [3u32, 4, 6, 8] {
+        let n = 1usize << m;
+        let vals: Vec<F16> = (0..n).map(|_| F16::from_f32(rng.normal(5.0))).collect();
+        let mut s = vals.clone();
+        let rep = bitonic::bitonic_sort(&mut s);
+        let (_, seq_cmps) = bitonic::sequential_max(&vals);
+        rows.push(vec![
+            n.to_string(),
+            rep.stages.to_string(),
+            rep.comparisons.to_string(),
+            format!("{} (n/2)", n / 2),
+            seq_cmps.to_string(),
+        ]);
+    }
+    table(&["n", "stages (cycles)", "total cmps", "parallel cmps", "sequential cmps"], &rows);
+    println!("  8 elements sort in 6 comparator cycles (Fig 12); rejected because the");
+    println!("  channel-first NHWC cache would need 4× the comparators (§3.4.1).");
+
+    section("A1b — pipeline accumulation (Fig 13: 169 values, 32 adders)");
+    let vals: Vec<F16> = (0..169).map(|_| F16::from_u32(rng.below(8) as u32)).collect();
+    let (_, rep) = pipeline_accum::pipeline_accumulate(&vals, 32);
+    println!("  reads per cycle: {:?}", rep.reads_per_cycle);
+    println!(
+        "  cycles {} | adder utilization {:.0}% (paper: 'always a moment the\n\
+         \x20 utilization ratio is less or significantly less than 100%')",
+        rep.cycles,
+        100.0 * rep.utilization
+    );
+    let mut rows = Vec::new();
+    for adders in [1usize, 8, 32, 128] {
+        let (_, r) = pipeline_accum::pipeline_accumulate(&vals, adders);
+        rows.push(vec![
+            adders.to_string(),
+            r.cycles.to_string(),
+            format!("{:.0}%", 100.0 * r.utilization),
+        ]);
+    }
+    table(&["adders", "cycles", "utilization"], &rows);
+
+    section("A2 — im2col+GEMM vs MEC (fire2/expand3x3-like geometry)");
+    let input = Tensor::from_vec(16, 16, 8, (0..16 * 16 * 8).map(|_| rng.normal(1.0)).collect());
+    let mut w = ConvWeights::zeros(8, 3, 8);
+    for v in w.data.iter_mut() {
+        *v = rng.normal(0.3);
+    }
+    let mut rows = Vec::new();
+    for (stride, label) in [(1usize, "k=3 s=1"), (2, "k=3 s=2")] {
+        let (_, ri) = convolution::im2col_gemm(&input, &w, stride, 1);
+        let (_, rm) = convolution::mec(&input, &w, stride, 1);
+        let (slots, used) = convolution::mec_slots(3, stride);
+        rows.push(vec![
+            label.to_string(),
+            format!("{} / {}", ri.input_reads, rm.input_reads),
+            format!("{:.1}×", ri.input_reads as f64 / rm.input_reads as f64),
+            format!("{}={}", ri.peak_parallelism, ri.min_parallelism),
+            format!("{}..{}", rm.min_parallelism, rm.peak_parallelism),
+            format!("{used}/{slots}"),
+        ]);
+    }
+    table(
+        &["case", "input reads (im2col/MEC)", "ratio", "im2col par", "MEC par", "MEC slots used"],
+        &rows,
+    );
+    println!("  MEC reads less but its parallelism varies and its slots scale with the");
+    println!("  kernel (k=11 ⇒ 11 slots, §3.4.3) — why the paper ships channel-first im2col.");
+
+    section("A2b — engine pipelining: shipped serialized rounds vs filled pipeline");
+    let mut rows = Vec::new();
+    for (k, s, pad, side, ic, oc) in
+        [(1u32, 1u32, 0u32, 56u32, 64u32, 16u32), (3, 1, 1, 56, 16, 64), (3, 2, 0, 113, 64, 64)]
+    {
+        let spec = LayerSpec::conv("x", k, s, pad, side, ic, oc, 0);
+        let serialized = perfmodel::layer_engine_cycles(&spec, 8);
+        let overlapped = fusionaccel::engine::timed::estimate_cycles(&spec);
+        rows.push(vec![
+            format!("k{k} s{s} {side}²×{ic}→{oc}"),
+            serialized.to_string(),
+            overlapped.to_string(),
+            format!("{:.2}×", serialized as f64 / overlapped as f64),
+        ]);
+    }
+    table(&["layer", "serialized (shipped)", "overlapped (FIFO-filled)", "speedup left"], &rows);
+    println!("  a filled three-stage pipeline would cut compute ~1.5–2×: the 'if the");
+    println!("  accumulator can get the result in one cycle … the pipeline is filled'");
+    println!("  remark of §4.2.1 quantified.");
+
+    section("A4 — precision ablation: FP16 (shipped) vs INT8-PTQ vs FP32 (§4)");
+    {
+        use fusionaccel::algos::quantization;
+        use fusionaccel::engine::functional::{conv as conv_f16, ConvWeightsF16};
+        let mut rows = Vec::new();
+        for (side, ic, oc, k, label) in
+            [(14usize, 64usize, 16usize, 3usize, "3×3×64→16"), (14, 128, 32, 1, "1×1×128→32")]
+        {
+            let input = Tensor::from_vec(
+                side,
+                side,
+                ic,
+                (0..side * side * ic).map(|_| rng.normal(1.0)).collect::<Vec<f32>>(),
+            );
+            let mut wq = ConvWeights::zeros(oc, k, ic);
+            for v in wq.data.iter_mut() {
+                *v = rng.normal(0.2);
+            }
+            let pad = if k == 3 { 1 } else { 0 };
+            let (f32_ref, _) = convolution::im2col_gemm(&input, &wq, 1, pad);
+            let f32_relu = fusionaccel::net::tensor::TensorF32 {
+                h: f32_ref.h,
+                w: f32_ref.w,
+                c: f32_ref.c,
+                data: f32_ref.data.iter().map(|v| v.max(0.0)).collect(),
+            };
+            let q8 = quantization::conv_int8(&input, &wq, 1, pad, true);
+            let r8 = quantization::compare(&q8, &f32_relu);
+            let spec = LayerSpec::conv("t", k as u32, 1, pad as u32, side as u32, ic as u32, oc as u32, 0);
+            let wf = ConvWeightsF16::from_f32(&wq);
+            let h = conv_f16(&spec, &input.pad_surface(pad).to_f16(), &wf).to_f32();
+            let rh = quantization::compare(&h, &f32_relu);
+            rows.push(vec![
+                label.to_string(),
+                format!("{:.1} dB", rh.sqnr_db),
+                format!("{:.1} dB", r8.sqnr_db),
+                format!("{:.5}", rh.max_abs),
+                format!("{:.5}", r8.max_abs),
+            ]);
+        }
+        table(&["layer", "FP16 SQNR", "INT8 SQNR", "FP16 max|Δ|", "INT8 max|Δ|"], &rows);
+        println!("  FP16 needs no calibration/retraining and is ~20–30 dB cleaner than");
+        println!("  post-training INT8 — the §4 rationale ('INT8 … have to be quantized");
+        println!("  and retrained'), with half of FP32's storage either way.");
+    }
+
+    section("Fig 25 — engine timing sequence (cycle-accurate, first 64 cycles)");
+    {
+        use fusionaccel::engine::functional::ConvWeightsF16;
+        use fusionaccel::engine::timed::{simulate_conv_traced, Trace};
+        let spec = LayerSpec::conv("fig25", 3, 1, 0, 5, 8, 2, 0);
+        let mut wq = ConvWeights::zeros(2, 3, 8);
+        for v in wq.data.iter_mut() {
+            *v = rng.normal(0.3);
+        }
+        let wf = ConvWeightsF16::from_f32(&wq);
+        let inp16 = Tensor::from_vec(
+            5,
+            5,
+            8,
+            (0..5 * 5 * 8).map(|_| F16::from_f32(rng.normal(1.0))).collect::<Vec<F16>>(),
+        );
+        let mut trace = Trace::new(64);
+        let (_, rep) = simulate_conv_traced(&spec, &inp16, &wf, Some(&mut trace));
+        print!("{}", trace.render());
+        println!("  (k²=9 products stream into the multiplier; the II=2 psum accumulator");
+        println!("   drains P_FIFO at half rate; fsum serializes 8 lane-partials — the");
+        println!("   Fig 25 hand-drawn sequence, generated. {} cycles total.)", rep.cycles);
+    }
+
+    section("microbenchmarks (host-side algorithm cost)");
+    let vals: Vec<F16> = (0..256).map(|_| F16::from_f32(rng.normal(5.0))).collect();
+    bench("bitonic_sort 256", 10, 200, || {
+        let mut s = vals.clone();
+        black_box(bitonic::bitonic_sort(&mut s));
+    });
+    bench("pipeline_accumulate 169/32", 10, 200, || {
+        black_box(pipeline_accum::pipeline_accumulate(&vals[..169], 32));
+    });
+    bench("im2col_gemm 16²×8→8 k3", 3, 30, || {
+        black_box(convolution::im2col_gemm(&input, &w, 1, 1));
+    });
+    bench("mec 16²×8→8 k3", 3, 30, || {
+        black_box(convolution::mec(&input, &w, 1, 1));
+    });
+}

@@ -1,0 +1,112 @@
+//! F37–F39 — regenerate Figures 37–39: FP16 accelerator results vs the
+//! FP32 "Caffe-CPU" oracle.
+//!
+//! * Fig 37: intermediate result of conv1 — first values side by side,
+//!   deviations "from the second or third decimal place";
+//! * Fig 38: final result identity;
+//! * Fig 39: top-5 classes + probabilities from both stacks.
+//!
+//! Needs `make artifacts`.
+//!
+//!     cargo bench --bench fig37_39_accuracy
+
+use std::collections::HashMap;
+
+use fusionaccel::benchkit::{bench, section, table};
+use fusionaccel::host::driver::{deviation_report, forward_functional};
+use fusionaccel::host::postprocess;
+use fusionaccel::net::squeezenet::squeezenet_v11;
+use fusionaccel::net::tensor::{Tensor, TensorF32};
+use fusionaccel::net::weights::Blobs;
+use fusionaccel::runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = runtime::artifacts_dir();
+    if !dir.join("squeezenet_weights.bin").exists() {
+        println!("artifacts missing — run `make artifacts` first; skipping");
+        return Ok(());
+    }
+    let net = squeezenet_v11();
+    let blobs = Blobs::load(&dir.join("squeezenet_weights.bin"))?;
+    let img = Blobs::load(&dir.join("image.bin"))?;
+    let (_, data) = img.get("input")?;
+    let image = Tensor::from_vec(227, 227, 3, data.to_vec());
+
+    section("forward passes");
+    let t0 = std::time::Instant::now();
+    let sim = forward_functional(&net, &blobs, &image)?;
+    println!("  FP16 engine forward: {:.2} s wall", t0.elapsed().as_secs_f64());
+
+    let rt = runtime::Runtime::cpu()?;
+    let model = rt.load_hlo_text(&dir.join("squeezenet_taps.hlo.txt"))?;
+    let inputs = runtime::oracle_inputs(&net, &blobs, &image)?;
+    let t0 = std::time::Instant::now();
+    let taps = model.run_tuple(&inputs)?;
+    println!("  FP32 oracle (PJRT):  {:.2} s wall", t0.elapsed().as_secs_f64());
+
+    let tap_names = ["conv1", "pool1", "fire2/concat", "fire5/concat", "conv10", "pool10"];
+    let mut oracle: HashMap<String, TensorF32> = HashMap::new();
+    for (lit, name) in taps.iter().zip(tap_names) {
+        oracle.insert(name.to_string(), runtime::tensor_from_literal(lit)?);
+    }
+
+    section("Fig 37 — conv1 intermediate values (accelerator vs oracle)");
+    let conv1_i = net.find("conv1").unwrap();
+    let mut rows = Vec::new();
+    for j in 0..10 {
+        let a = sim[conv1_i].data[j].to_f32();
+        let b = oracle["conv1"].data[j];
+        rows.push(vec![
+            format!("conv1[{j}]"),
+            format!("{a:.6}"),
+            format!("{b:.6}"),
+            format!("{:+.6}", a - b),
+        ]);
+    }
+    table(&["element", "FPGA-sim FP16", "oracle FP32", "Δ"], &rows);
+
+    section("per-layer deviation (max / mean / relative)");
+    let rows: Vec<Vec<String>> = deviation_report(&net, &sim, &oracle)
+        .into_iter()
+        .map(|r| {
+            let scale = oracle[&r.name].data.iter().fold(0f32, |m, v| m.max(v.abs()));
+            vec![
+                r.name.clone(),
+                format!("{:.5}", r.max_abs),
+                format!("{:.6}", r.mean_abs),
+                format!("{:.2e}", r.max_abs / scale.max(1e-9)),
+            ]
+        })
+        .collect();
+    table(&["layer", "max |Δ|", "mean |Δ|", "max rel"], &rows);
+    println!("  (paper: 'deviations just start from the second or third decimal place')");
+
+    section("Figs 38/39 — final classification");
+    let pool10_i = net.find("pool10").unwrap();
+    let sim_logits: Vec<f32> = sim[pool10_i].data.iter().map(|v| v.to_f32()).collect();
+    let sim_probs = postprocess::softmax(&sim_logits);
+    let oracle_probs = postprocess::softmax(&oracle["pool10"].data);
+    let st = postprocess::argsort_desc(&sim_probs);
+    let ot = postprocess::argsort_desc(&oracle_probs);
+    let rows: Vec<Vec<String>> = (0..5)
+        .map(|i| {
+            vec![
+                format!("{}", i + 1),
+                format!("{}", st[i]),
+                format!("{:.6}", sim_probs[st[i]]),
+                format!("{}", ot[i]),
+                format!("{:.6}", oracle_probs[ot[i]]),
+            ]
+        })
+        .collect();
+    table(&["rank", "sim class", "sim p", "oracle class", "oracle p"], &rows);
+    assert_eq!(st[0], ot[0], "top-1 agreement (the paper's 'identical' claim)");
+    let overlap = st[..5].iter().filter(|c| ot[..5].contains(c)).count();
+    println!("  top-1 agrees; top-5 overlap {overlap}/5");
+
+    section("oracle throughput");
+    bench("PJRT oracle forward (taps)", 1, 5, || {
+        let _ = model.run_tuple(&inputs).unwrap();
+    });
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! P — the §Perf hot-path benchmark: the L3 request-path components that
+//! dominate wall-clock in the simulator — FP16 arithmetic, the
+//! functional conv engine, GEMM slicing, SERDES packing, and the whole
+//! sliced device flow — measured individually so the optimization log in
+//! EXPERIMENTS.md §Perf has stable numbers.
+//!
+//!     cargo bench --bench gemm_hotpath
+
+use fusionaccel::accel::stream::StreamAccelerator;
+use fusionaccel::benchkit::{bench, black_box, section};
+use fusionaccel::engine::functional::{self, ConvWeightsF16};
+use fusionaccel::fp16::{softfloat, F16};
+use fusionaccel::host::driver::HostDriver;
+use fusionaccel::host::gemm;
+use fusionaccel::hw::serdes::Serdes;
+use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::graph::Network;
+use fusionaccel::net::layer::LayerSpec;
+use fusionaccel::net::tensor::{ConvWeights, Tensor, TensorF16};
+use fusionaccel::net::weights::synthesize_weights;
+use fusionaccel::prop::Rng;
+
+fn rand_f16(rng: &mut Rng, n: usize) -> Vec<F16> {
+    (0..n).map(|_| F16::from_f32(rng.normal(1.0))).collect()
+}
+
+fn main() {
+    let mut rng = Rng::new(0x907);
+
+    section("FP16 primitive ops (per-op cost × 4M)");
+    let xs = rand_f16(&mut rng, 4096);
+    let ys = rand_f16(&mut rng, 4096);
+    let m = bench("fast mul+add 4096²/1024 pairs", 5, 50, || {
+        let mut acc = F16::ZERO;
+        for i in 0..4096 {
+            acc = acc.add(xs[i].mul(ys[(i * 7) & 4095]));
+        }
+        black_box(acc);
+    });
+    println!(
+        "  → {:.2} ns per MAC (mul+add)",
+        m.median_ns / 4096.0
+    );
+    bench("softfloat mul+add 4096 pairs", 5, 50, || {
+        let mut acc = F16::ZERO;
+        for i in 0..4096 {
+            acc = softfloat::add(acc, softfloat::mul(xs[i], ys[(i * 7) & 4095]));
+        }
+        black_box(acc);
+    });
+
+    section("functional conv engine (fire2/expand3x3 geometry)");
+    let spec = LayerSpec::conv("e3", 3, 1, 1, 56, 16, 64, 0);
+    let mut w = ConvWeights::zeros(64, 3, 16);
+    for v in w.data.iter_mut() {
+        *v = rng.normal(0.3);
+    }
+    let wf = ConvWeightsF16::from_f32(&w);
+    let input: TensorF16 =
+        Tensor::from_vec(56, 56, 16, rand_f16(&mut rng, 56 * 56 * 16));
+    let padded = input.to_f32().pad_surface(1).to_f16();
+    let m = bench("conv 56²×16→64 k3 (4.6 M MACs)", 2, 10, || {
+        black_box(functional::conv(&spec, &padded, &wf));
+    });
+    let macs = spec.macs() as f64;
+    println!(
+        "  → {:.1} M MAC/s functional-engine throughput",
+        macs / m.median_ns * 1e3
+    );
+
+    section("pooling engines");
+    let pspec = LayerSpec::maxpool("p", 3, 2, 113, 64);
+    let pin: TensorF16 = Tensor::from_vec(113, 113, 64, rand_f16(&mut rng, 113 * 113 * 64));
+    bench("maxpool 113²×64 k3s2", 2, 20, || {
+        black_box(functional::maxpool(&pspec, &pin));
+    });
+    let aspec = LayerSpec::avgpool("a", 14, 1, 14, 1000);
+    let ain: TensorF16 = Tensor::from_vec(14, 14, 1000, rand_f16(&mut rng, 14 * 14 * 1000));
+    bench("avgpool 14²×1000 k14", 2, 20, || {
+        black_box(functional::avgpool(&aspec, &ain));
+    });
+
+    section("host GEMM slicing + SERDES");
+    bench("conv_row_slice 227×8×3", 10, 200, || {
+        black_box(gemm::conv_row_slice(&padded, 0, 3));
+    });
+    let slice = gemm::conv_row_slice(&padded, 0, 3);
+    bench("serdes pack_stream 2.8k values", 10, 200, || {
+        black_box(Serdes::pack_stream(&slice));
+    });
+    bench("weight_block 8 oc", 10, 200, || {
+        black_box(gemm::weight_block(&wf, 0, 8));
+    });
+
+    section("whole sliced device flow (fire-module micro net)");
+    let mut net = Network::new("micro");
+    let inp = net.input(28, 16);
+    let sq = net.engine(LayerSpec::conv("sq", 1, 1, 0, 28, 16, 8, 0), inp);
+    let e1 = net.engine(LayerSpec::conv("e1", 1, 1, 0, 28, 8, 16, 1), sq);
+    let e3 = net.engine(LayerSpec::conv("e3", 3, 1, 1, 28, 8, 16, 5), sq);
+    let cat = net.concat("cat", vec![e1, e3]);
+    net.engine(LayerSpec::maxpool("pool", 3, 2, 28, 32), cat);
+    let blobs = synthesize_weights(&net, 9);
+    let image = Tensor::from_vec(28, 28, 16, (0..28 * 28 * 16).map(|_| rng.normal(1.0)).collect());
+    let m = bench("device forward (micro fire net)", 2, 10, || {
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        black_box(HostDriver::new(&mut dev).forward(&net, &blobs, &image).unwrap());
+    });
+    println!(
+        "  → {:.1} M MAC/s end-to-end sliced-device throughput",
+        net.total_macs() as f64 / m.median_ns * 1e3
+    );
+}

@@ -1,0 +1,119 @@
+//! S5 + A3 — regenerate the §5 timing results (compute 10.7 s / whole
+//! process 40.9 s at parallelism 8 over USB3.0) and the §3.4.2
+//! stream-vs-generic architecture trade-off.
+//!
+//!     cargo bench --bench sec5_timing
+
+use fusionaccel::accel::generic;
+use fusionaccel::benchkit::{section, table};
+use fusionaccel::hw::mcb::McbConfig;
+use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::squeezenet::squeezenet_v11;
+use fusionaccel::perfmodel;
+
+fn main() {
+    let net = squeezenet_v11();
+
+    section("§5 headline — SqueezeNet v1.1 @ parallelism 8, USB3.0");
+    let rep = perfmodel::model_network(&net, 8, UsbLink::usb3_frontpanel());
+    let rows = vec![
+        vec![
+            "compute".to_string(),
+            "10.7 s".to_string(),
+            format!("{:.2} s", rep.compute_seconds()),
+            format!("{:.2}×", rep.compute_seconds() / 10.7),
+        ],
+        vec![
+            "whole process".to_string(),
+            "40.9 s".to_string(),
+            format!("{:.2} s", rep.whole_process_seconds()),
+            format!("{:.2}×", rep.whole_process_seconds() / 40.9),
+        ],
+        vec![
+            "whole/compute ratio".to_string(),
+            format!("{:.2}", 40.9 / 10.7),
+            format!("{:.2}", rep.whole_process_seconds() / rep.compute_seconds()),
+            "-".to_string(),
+        ],
+    ];
+    table(&["quantity", "paper", "model", "model/paper"], &rows);
+    println!(
+        "  MAC bound at 8 lanes/cycle would be {:.2} s — the accumulator II=2 and the\n\
+         \x20 serialized per-round FSM put the real engine ~15× above it, as measured.",
+        net.total_macs() as f64 / 8.0 / 100e6
+    );
+
+    section("per-layer breakdown (top 10 by engine cycles)");
+    let mut layers = rep.layers.clone();
+    layers.sort_by_key(|l| std::cmp::Reverse(l.engine_cycles));
+    let rows: Vec<Vec<String>> = layers
+        .iter()
+        .take(10)
+        .map(|l| {
+            vec![
+                l.name.clone(),
+                format!("{:.3} s", l.engine_cycles as f64 / 100e6),
+                format!("{:.2} MB", (l.bytes_in + l.bytes_out) as f64 / 1e6),
+                l.txns.to_string(),
+            ]
+        })
+        .collect();
+    table(&["layer", "engine", "traffic", "txns"], &rows);
+
+    section("§6.1 what-ifs — parallelism and link");
+    let mut rows = Vec::new();
+    for p in [8u64, 16, 32] {
+        for (link, lname) in [(UsbLink::usb3_frontpanel(), "USB3"), (UsbLink::pcie_gen2_x4(), "PCIe")] {
+            let r = perfmodel::model_network(&net, p, link);
+            rows.push(vec![
+                format!("P={p} {lname}"),
+                format!("{:.2} s", r.compute_seconds()),
+                format!("{:.2} s", r.transfer_seconds()),
+                format!("{:.2} s", r.whole_process_seconds()),
+            ]);
+        }
+    }
+    table(&["config", "compute", "transfer", "whole"], &rows);
+
+    section("§3.4.2 — stream vs generic (DRAM) architecture");
+    let gen = generic::simulate_network(&net, McbConfig::default(), UsbLink::usb3_frontpanel());
+    let stream = &rep;
+    let rows = vec![
+        vec![
+            "stream (shipped)".to_string(),
+            format!("{:.2} s", stream.compute_seconds()),
+            format!("{:.2} s", stream.transfer_seconds()),
+            format!("{:.2} s", stream.whole_process_seconds()),
+            format!("{}", stream.total_txns()),
+        ],
+        vec![
+            "generic (DRAM)".to_string(),
+            format!("{:.2} s", gen.total_engine_seconds()),
+            format!("{:.2} s", gen.total_dram_seconds() + gen.initial_load_seconds),
+            format!("{:.2} s", gen.total_seconds()),
+            format!("{}", gen.total_dma_txns()),
+        ],
+    ];
+    table(&["architecture", "compute", "data movement", "total", "txns"], &rows);
+    println!(
+        "  generic pays {:.1} M DMA transactions × ~27-cycle MCB latency for im2col's\n\
+         \x20 scattered reads, but avoids per-piece USB latency: {:.1} s vs {:.1} s total.\n\
+         \x20 The paper chose stream for design simplicity + timing closure (three clock\n\
+         \x20 domains 'hardly meet the timing constraint' in the generic design).",
+        gen.total_dma_txns() as f64 / 1e6,
+        gen.total_seconds(),
+        stream.whole_process_seconds()
+    );
+
+    section("MCB latency sensitivity (UG388: 22–32 cycles)");
+    let mut rows = Vec::new();
+    for lat in [22u32, 27, 32] {
+        let g = generic::simulate_network(
+            &net,
+            McbConfig { read_latency: lat, ..Default::default() },
+            UsbLink::usb3_frontpanel(),
+        );
+        rows.push(vec![format!("{lat} cycles"), format!("{:.2} s", g.total_seconds())]);
+    }
+    table(&["MCB read latency", "generic total"], &rows);
+}

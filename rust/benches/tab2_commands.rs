@@ -1,0 +1,82 @@
+//! T2 — regenerate Table 2: per-layer network parameters and the 96-bit
+//! configuration commands of SqueezeNet v1.1, plus the derived transfer
+//! block sizes ("germ size", weight block/total) the table reports.
+//!
+//!     cargo bench --bench tab2_commands
+
+use fusionaccel::benchkit::{bench, black_box, section, table};
+use fusionaccel::net::layer::OpType;
+use fusionaccel::net::squeezenet::{squeezenet_v11, TABLE2_COMMANDS};
+use fusionaccel::perfmodel;
+
+fn main() {
+    let net = squeezenet_v11();
+    section("Table 2 — SqueezeNet v1.1 network parameters + commands");
+
+    let mut rows = Vec::new();
+    for spec in net.engine_layers() {
+        let lanes = (spec.i_ch as u64).div_ceil(8) * 8;
+        let germ = match spec.op {
+            OpType::ConvRelu => spec.kernel as u64 * (spec.i_side as u64 + 2 * spec.padding as u64) * lanes,
+            _ => spec.kernel as u64 * spec.i_side as u64 * 8,
+        };
+        rows.push(vec![
+            spec.name.clone(),
+            format!("{:?}", spec.op),
+            spec.kernel.to_string(),
+            spec.stride.to_string(),
+            spec.padding.to_string(),
+            format!("{}", spec.i_side),
+            format!("{}", spec.o_side),
+            format!("{}", spec.i_ch),
+            format!("{}", spec.o_ch),
+            format!("{}", spec.output_elems()),
+            germ.to_string(),
+            spec.weight_total().to_string(),
+            spec.command_hex(),
+        ]);
+    }
+    table(
+        &[
+            "layer", "op", "k", "s", "pad", "i_side", "o_side", "i_ch", "o_ch",
+            "out size", "germ size", "wt total", "command",
+        ],
+        &rows,
+    );
+
+    section("golden check vs the paper's command column");
+    let mut ok = 0;
+    for (name, hex) in TABLE2_COMMANDS {
+        let i = net.find(name).expect(name);
+        if let fusionaccel::net::graph::Node::Engine { spec, .. } = &net.nodes[i] {
+            assert_eq!(spec.command_hex(), hex, "{name}");
+            ok += 1;
+        }
+    }
+    println!("  {ok}/{} Table 2 command rows match bit-for-bit", TABLE2_COMMANDS.len());
+    println!("  (the published table has OCR defects — e.g. fire6/expand1x1 o_ch");
+    println!("   printed as 0000 — the golden strings are the self-consistent values)");
+
+    section("totals");
+    println!(
+        "  MACs {:.1} M   weights transferred {} values ({:.2} MB as 32-bit words)",
+        net.total_macs() as f64 / 1e6,
+        net.total_weights(),
+        net.total_weights() as f64 * 4.0 / 1e6
+    );
+    let rep = perfmodel::model_network(&net, 8, fusionaccel::hw::usb::UsbLink::usb3_frontpanel());
+    println!("  modeled traffic {:.1} MB over {} transactions", rep.total_bytes() as f64 / 1e6, rep.total_txns());
+
+    section("microbenchmarks");
+    let specs = net.engine_layers();
+    bench("encode 30 commands", 100, 1000, || {
+        for s in &specs {
+            black_box(s.encode());
+        }
+    });
+    bench("decode 30 commands", 100, 1000, || {
+        for s in &specs {
+            black_box(fusionaccel::net::layer::LayerSpec::decode("x", s.encode()));
+        }
+    });
+}

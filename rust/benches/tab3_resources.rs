@@ -1,0 +1,57 @@
+//! T3 — regenerate Table 3: FPGA resource utilization of the accelerator
+//! on the Spartan-6 XC6SLX45, from the parametric resource model, plus
+//! the §5/§6.2 scaling observations (P=16 does not fit; FP32 doubles).
+//!
+//!     cargo bench --bench tab3_resources
+
+use fusionaccel::benchkit::{section, table};
+use fusionaccel::resources::{estimate, AccelConfig, TABLE3_P8, XC6SLX45};
+
+fn main() {
+    section("Table 3 — resource utilization @ parallelism 8, FP16");
+    let est = estimate(AccelConfig::default());
+    let paper = [
+        ("Slice LUTs", TABLE3_P8.luts, est.luts),
+        ("Slice Registers", TABLE3_P8.ffs, est.ffs),
+        ("DSP48A1s", TABLE3_P8.dsp48a1, est.dsp48a1),
+        ("RAMB16BWERs", TABLE3_P8.ramb16, est.ramb16),
+        ("RAMB8BWERs", TABLE3_P8.ramb8, est.ramb8),
+    ];
+    let rows: Vec<Vec<String>> = paper
+        .iter()
+        .map(|(n, p, m)| {
+            let err = if *p > 0 {
+                format!("{:+.1}%", 100.0 * (*m as f64 - *p as f64) / *p as f64)
+            } else {
+                "-".into()
+            };
+            vec![n.to_string(), p.to_string(), m.to_string(), err]
+        })
+        .collect();
+    table(&["resource", "paper (ISE)", "model", "error"], &rows);
+    println!("  occupied slices: paper 3706, model {}", est.slices());
+    assert!(est.fits(&XC6SLX45));
+
+    section("scaling sweep (the §5/§6.2 claims)");
+    let mut rows = Vec::new();
+    for (p, prec) in [(4u32, 16u32), (8, 16), (16, 16), (32, 16), (8, 32)] {
+        let e = estimate(AccelConfig { parallelism: p, precision: prec });
+        rows.push(vec![
+            format!("P={p} FP{prec}"),
+            format!("{} ({:.0}%)", e.luts, 100.0 * e.luts as f64 / XC6SLX45.luts as f64),
+            format!("{} ({:.0}%)", e.ffs, 100.0 * e.ffs as f64 / XC6SLX45.ffs as f64),
+            format!("{} ({:.0}%)", e.ramb16, 100.0 * e.ramb16 as f64 / XC6SLX45.ramb16 as f64),
+            e.dsp48a1.to_string(),
+            if e.fits(&XC6SLX45) { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    table(&["config", "LUTs", "FFs", "RAMB16", "DSP", "fits"], &rows);
+
+    let p16 = estimate(AccelConfig { parallelism: 16, precision: 16 });
+    assert!(!p16.fits(&XC6SLX45), "paper: chip cannot hold parallelism 16");
+    assert!(p16.luts as f64 / XC6SLX45.luts as f64 > 0.70, "paper: >70% LUTs at P=16");
+    println!("\n  reproduced: P=16 exceeds the chip (RAMB16 {}/116, LUT {:.0}%)",
+        p16.ramb16, 100.0 * p16.luts as f64 / XC6SLX45.luts as f64);
+    println!("  reproduced: RAMB16 is the binding constraint at P=8 (88% paper / {:.0}% model)",
+        100.0 * estimate(AccelConfig::default()).ramb16 as f64 / XC6SLX45.ramb16 as f64);
+}

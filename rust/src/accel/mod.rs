@@ -1,0 +1,7 @@
+//! Accelerator top-levels: the shipped stream architecture (Fig 22) and
+//! the generic DRAM-based architecture (Fig 14) it was chosen over.
+
+pub mod generic;
+pub mod stream;
+
+pub use stream::{SliceTask, StreamAccelerator};

@@ -1,0 +1,506 @@
+//! The stream accelerator (Figs 22, 35): CMDFIFO + RESFIFO + three BRAM
+//! caches + the engine, fed directly by the host over USB3.0 — the
+//! architecture the paper ships (§3.4.2 picks it over the generic
+//! DRAM-based design).
+//!
+//! The device is passive: the host drives the Fig 35 flow — load
+//! commands, then per layer / per piece: load bias+weights, load a GEMM
+//! data slice, pulse `restart_engine`, read RESFIFO. Every USB transfer
+//! is routed through the [`UsbPort`] model so the S5 timing bench can
+//! replay the exact traffic; every BRAM/FIFO access is counted by the
+//! hardware models.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::engine::csb::Csb;
+use crate::fp16::F16;
+use crate::hw::bram::{Bram, Word128};
+use crate::hw::fifo::Fifo;
+use crate::hw::serdes::Serdes;
+use crate::hw::usb::{Endpoint, UsbLink, UsbPort};
+use crate::net::layer::{LayerSpec, OpType};
+
+/// Data cache: 128 bits × 1024 (§4.4).
+pub const DATA_CACHE_WORDS: usize = 1024;
+/// Weight cache: 128 bits × 8192.
+pub const WEIGHT_CACHE_WORDS: usize = 8192;
+/// Bias cache: 128 bits × 1024.
+pub const BIAS_CACHE_WORDS: usize = 1024;
+/// Result FIFO: 32 bits × 1024.
+pub const RES_FIFO_DEPTH: usize = 1024;
+
+/// What the engine should compute from the current cache contents —
+/// the per-piece state the CSB derives from the layer register plus the
+/// host's slicing (Fig 35 "by layer and by piece").
+#[derive(Clone, Debug)]
+pub struct SliceTask {
+    pub op: OpType,
+    pub k: usize,
+    pub stride: usize,
+    /// Output elements along x this pass.
+    pub out_cols: usize,
+    /// Input-channel groups resident in the data cache.
+    pub groups: usize,
+    /// Output channels this pass (conv; pooling processes one 8-lane
+    /// group per pass).
+    pub oc_count: usize,
+    /// Word pitch of one data row in the cache.
+    pub data_width: usize,
+    /// Rows resident (may be < k for a clipped ceil-mode pool window).
+    pub data_rows: usize,
+    /// Pixel mode: the data cache holds a single k×k window.
+    pub pixel_mode: bool,
+    /// kernel_size register value (avg-pool divisor).
+    pub kernel_size_reg: u32,
+    pub skip_relu: bool,
+    /// Word offset of this pass's weights in the weight cache (several
+    /// 8-channel blocks can be resident at once — the host loads a
+    /// super-block and sweeps passes over it, which is how Table 2's
+    /// "data transferred once" accounting comes about).
+    pub weight_base: usize,
+    /// Index offset of this pass's biases in the bias cache.
+    pub bias_base: usize,
+    /// Virtual pooling padding (GoogLeNet-style "same" pooling): window
+    /// elements at col/row < pad or beyond the surface are skipped.
+    pub pool_pad: usize,
+}
+
+/// Accumulated engine-side counters.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    /// Engine-clock cycles (closed-form per slice, validated against the
+    /// cycle-accurate simulator — see `engine::timed`).
+    pub cycles: u64,
+    /// Engine passes (restart_engine pulses).
+    pub passes: u64,
+    /// Interrupts raised (one per completed pass).
+    pub interrupts: u64,
+}
+
+/// The device.
+pub struct StreamAccelerator {
+    pub csb: Csb,
+    pub res_fifo: Fifo<F16>,
+    pub data_cache: Bram<Word128>,
+    pub weight_cache: Bram<Word128>,
+    pub bias_cache: Bram<Word128>,
+    pub usb: UsbPort,
+    pub stats: EngineStats,
+    /// Current layer register (decoded by the CSB).
+    pub layer: Option<LayerSpec>,
+    /// §Perf step 3: pre-widened shadows of the data/weight caches,
+    /// updated once per load instead of once per engine pass. Pure
+    /// simulator acceleration — values are exactly the cache contents.
+    data_f64: Vec<f64>,
+    weight_f64: Vec<f64>,
+}
+
+impl StreamAccelerator {
+    pub fn new(link: UsbLink) -> StreamAccelerator {
+        StreamAccelerator {
+            csb: Csb::new(),
+            res_fifo: Fifo::new("RESFIFO", RES_FIFO_DEPTH),
+            data_cache: Bram::new("data_cache", DATA_CACHE_WORDS),
+            weight_cache: Bram::new("weight_cache", WEIGHT_CACHE_WORDS),
+            bias_cache: Bram::new("bias_cache", BIAS_CACHE_WORDS),
+            usb: UsbPort::new(UsbLink { ..link }),
+            stats: EngineStats::default(),
+            layer: None,
+            data_f64: vec![0.0; DATA_CACHE_WORDS * 8],
+            weight_f64: vec![0.0; WEIGHT_CACHE_WORDS * 8],
+        }
+    }
+
+    /// Load the full command stream (Fig 36 "Load Commands"): one USB
+    /// block transfer of 12 bytes per layer.
+    pub fn load_commands(&mut self, layers: &[&LayerSpec]) -> Result<()> {
+        for spec in layers {
+            ensure!(self.csb.load_command(spec), "CMDFIFO overflow at {}", spec.name);
+        }
+        self.usb.transfer(Endpoint::PipeIn, 12 * layers.len() as u64);
+        Ok(())
+    }
+
+    /// Advance the CSB to the next layer (Fig 36 "Load Layer").
+    pub fn load_layer(&mut self) -> Option<LayerSpec> {
+        let spec = self.csb.next_layer()?;
+        self.layer = Some(spec.clone());
+        Some(spec)
+    }
+
+    /// Pipe a block of FP16 values into a cache. Each value moves as a
+    /// 32-bit USB word (low 16 bits valid, §4.4) and is SERDES-packed
+    /// into 128-bit cache words.
+    fn pipe_in(&mut self, which: Cache, base_word: usize, values: &[F16]) -> Result<()> {
+        let words = Serdes::pack_stream(values);
+        let cache = match which {
+            Cache::Data => &mut self.data_cache,
+            Cache::Weight => &mut self.weight_cache,
+            Cache::Bias => &mut self.bias_cache,
+        };
+        ensure!(
+            base_word + words.len() <= cache.depth(),
+            "{} overflow: {} + {} words",
+            cache.name(),
+            base_word,
+            words.len()
+        );
+        cache.load(base_word, &words);
+        // Maintain the pre-widened shadow (see struct docs).
+        let shadow = match which {
+            Cache::Data => Some(&mut self.data_f64),
+            Cache::Weight => Some(&mut self.weight_f64),
+            Cache::Bias => None,
+        };
+        if let Some(shadow) = shadow {
+            for (wi, word) in words.iter().enumerate() {
+                let base = (base_word + wi) * 8;
+                for (l, v) in word.iter().enumerate() {
+                    shadow[base + l] = v.to_f64();
+                }
+            }
+        }
+        self.usb.transfer(Endpoint::PipeIn, 4 * values.len() as u64);
+        Ok(())
+    }
+
+    /// Load a GEMM data slice ("Load Gemm").
+    pub fn load_data(&mut self, values: &[F16]) -> Result<()> {
+        self.pipe_in(Cache::Data, 0, values)
+    }
+
+    /// Load a weight block ("load weight & bias"). The bias cache stores
+    /// one value per word (only the low 16 bits of each 128-bit word are
+    /// valid, §4.4) — so bias values are loaded one word each.
+    pub fn load_weights(&mut self, values: &[F16]) -> Result<()> {
+        self.pipe_in(Cache::Weight, 0, values)
+    }
+
+    pub fn load_bias(&mut self, values: &[F16]) -> Result<()> {
+        ensure!(values.len() <= BIAS_CACHE_WORDS, "bias cache overflow");
+        for (i, &b) in values.iter().enumerate() {
+            let mut w = [F16::ZERO; 8];
+            w[0] = b;
+            self.bias_cache.write(i, w);
+        }
+        // Each bias still crosses USB as a 32-bit word, padded to a full
+        // 128-bit cache word device-side.
+        self.usb.transfer(Endpoint::PipeIn, 4 * values.len() as u64);
+        Ok(())
+    }
+
+    /// "Restart Engine": compute one slice from the resident caches,
+    /// pushing results into RESFIFO. Returns the number of results.
+    pub fn restart_engine(&mut self, task: &SliceTask) -> Result<usize> {
+        ensure!(self.layer.is_some(), "no layer loaded");
+        let produced = match task.op {
+            OpType::ConvRelu => self.run_conv_slice(task)?,
+            OpType::MaxPool | OpType::AvgPool => self.run_pool_slice(task)?,
+            OpType::Idle => 0,
+        };
+        self.stats.passes += 1;
+        self.stats.interrupts += 1;
+        Ok(produced)
+    }
+
+    /// Wait-for-interrupt + "Read Output": drain `n` results over USB
+    /// (32-bit words each, Fig 37's "between every two results there is a
+    /// padded 0").
+    pub fn read_results(&mut self, n: usize) -> Result<Vec<F16>> {
+        // Interrupt check is a Wire Out read.
+        self.usb.transfer(Endpoint::WireOut, 4);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.res_fifo.pop() {
+                Some(v) => out.push(v),
+                None => bail!("RESFIFO underflow: asked {n}, had {}", out.len()),
+            }
+        }
+        self.usb.transfer(Endpoint::PipeOut, 4 * n as u64);
+        Ok(out)
+    }
+
+    // ---- engine internals ------------------------------------------------
+
+    fn data_word(&mut self, ky: usize, x: usize, g: usize, task: &SliceTask) -> Word128 {
+        let addr = if task.pixel_mode {
+            (ky * task.k + x) * task.groups + g
+        } else {
+            (ky * task.data_width + x) * task.groups + g
+        };
+        self.data_cache.read(addr)
+    }
+
+    fn run_conv_slice(&mut self, task: &SliceTask) -> Result<usize> {
+        let k = task.k;
+        let k2 = k * k;
+        ensure!(task.out_cols * task.oc_count <= self.res_fifo.space(), "RESFIFO would overflow");
+        let mut produced = 0;
+
+        // §Perf steps 2+3: the fused-rounding MAC chain (see
+        // engine::functional) over the pre-widened cache shadows —
+        // bit-identical to the word-by-word F16 loop. BRAM read counters
+        // are bulk-updated with exactly the reads the per-cycle loop
+        // would have issued.
+        let data_words = if task.pixel_mode {
+            k2 * task.groups
+        } else {
+            task.data_rows * task.data_width * task.groups
+        };
+        let weight_words = task.oc_count * k2 * task.groups;
+        let din = &self.data_f64[..data_words * 8];
+        let wdat = &self.weight_f64[task.weight_base * 8..(task.weight_base + weight_words) * 8];
+        let lanes = task.groups * 8;
+
+        // Fig 24 traversal: output channel outermost, then x, then the
+        // channel groups, then the window.
+        for oc in 0..task.oc_count {
+            let bias = self.bias_cache.read(task.bias_base + oc)[0].to_f64();
+            let wbase_oc = oc * k2 * lanes;
+            for xo in 0..task.out_cols {
+                let mut fsum = bias;
+                for g in 0..task.groups {
+                    let c0 = g * 8;
+                    let mut psum = [0f64; 8];
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let x = if task.pixel_mode { kx } else { xo * task.stride + kx };
+                            let db = if task.pixel_mode {
+                                (ky * k + x) * lanes + c0
+                            } else {
+                                (ky * task.data_width + x) * lanes + c0
+                            };
+                            let wb = wbase_oc + (ky * k + kx) * lanes + c0;
+                            for l in 0..8 {
+                                let prod = crate::fp16::round16_64(din[db + l] * wdat[wb + l]);
+                                psum[l] = crate::fp16::round16_64(psum[l] + prod);
+                            }
+                        }
+                    }
+                    for p in psum {
+                        fsum = crate::fp16::round16_64(fsum + p);
+                    }
+                }
+                let v16 = F16::from_f64(fsum);
+                let v = if task.skip_relu { v16 } else { v16.relu() };
+                self.res_fifo.push_checked(v);
+                produced += 1;
+            }
+        }
+        // Model the per-cycle BRAM word reads the RTL issues.
+        let word_reads = (task.out_cols * task.oc_count * task.groups * k2) as u64;
+        self.data_cache.count_reads(word_reads);
+        self.weight_cache.count_reads(word_reads);
+
+        // Serialized-round slice timing (see perfmodel::layer_engine_cycles):
+        // 3·k² + 2·8 + 10 cycles per (output element, channel group) round.
+        let per_word = 3 * k2 as u64 + 26;
+        self.stats.cycles += task.out_cols as u64 * task.oc_count as u64 * task.groups as u64 * per_word;
+        Ok(produced)
+    }
+
+    fn run_pool_slice(&mut self, task: &SliceTask) -> Result<usize> {
+        ensure!(task.groups == 1, "pooling processes one channel group per slice");
+        ensure!(task.out_cols * 8 <= self.res_fifo.space(), "RESFIFO would overflow");
+        let divisor = F16::from_u32(task.kernel_size_reg);
+        let mut produced = 0;
+        let mut elems_total = 0u64;
+        for xo in 0..task.out_cols {
+            let mut acc = [F16::ZERO; 8];
+            for ky in 0..task.data_rows {
+                for kx in 0..task.k {
+                    let x = (xo * task.stride + kx).wrapping_sub(task.pool_pad);
+                    if x >= task.data_width {
+                        continue; // clipped (left via wrap, right direct)
+                    }
+                    let d = self.data_word(ky, x, 0, task);
+                    elems_total += 1;
+                    for l in 0..8 {
+                        acc[l] = match task.op {
+                            OpType::MaxPool => {
+                                if d[l].gt(acc[l]) {
+                                    d[l]
+                                } else {
+                                    acc[l]
+                                }
+                            }
+                            _ => acc[l].add(d[l]),
+                        };
+                    }
+                }
+            }
+            for a in acc {
+                let v = if task.op == OpType::AvgPool { a.div(divisor) } else { a };
+                self.res_fifo.push_checked(v);
+                produced += 1;
+            }
+        }
+        let per_elem = 2u64; // II of the comparator/accumulator
+        let tail = if task.op == OpType::AvgPool { 6 } else { 4 };
+        self.stats.cycles += elems_total * per_elem + task.out_cols as u64 * tail;
+        Ok(produced)
+    }
+}
+
+enum Cache {
+    Data,
+    Weight,
+    Bias,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::functional::{self, ConvWeightsF16};
+    use crate::host::gemm;
+    use crate::net::tensor::{ConvWeights, Tensor, TensorF16};
+    use crate::prop::Rng;
+
+    fn rand_tensor(rng: &mut Rng, side: usize, c: usize) -> TensorF16 {
+        Tensor::from_vec(
+            side,
+            side,
+            c,
+            (0..side * side * c).map(|_| F16::from_f32(rng.normal(1.0))).collect(),
+        )
+    }
+
+    #[test]
+    fn conv_slice_matches_functional_row() {
+        let mut rng = Rng::new(0x57AEA);
+        let spec = LayerSpec::conv("t", 3, 1, 1, 6, 16, 8, 0);
+        let mut w = ConvWeights::zeros(8, 3, 16);
+        for v in w.data.iter_mut() {
+            *v = rng.normal(0.3);
+        }
+        for b in w.bias.iter_mut() {
+            *b = rng.normal(0.1);
+        }
+        let wf = ConvWeightsF16::from_f32(&w);
+        let raw = rand_tensor(&mut rng, 6, 16);
+        let padded = raw.to_f32().pad_surface(1).to_f16();
+        let expect = functional::conv(&spec, &padded, &wf);
+
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        dev.load_commands(&[&spec]).unwrap();
+        dev.load_layer().unwrap();
+        dev.load_weights(&gemm::weight_block(&wf, 0, 8)).unwrap();
+        dev.load_bias(&gemm::bias_block(&wf, 0, 8)).unwrap();
+        for y in 0..spec.o_side as usize {
+            let slice = gemm::conv_row_slice(&padded, y * spec.stride as usize, 3);
+            dev.load_data(&slice).unwrap();
+            let task = SliceTask {
+                op: OpType::ConvRelu,
+                k: 3,
+                stride: 1,
+                out_cols: 6,
+                groups: 2,
+                oc_count: 8,
+                data_width: 8,
+                data_rows: 3,
+                pixel_mode: false,
+                kernel_size_reg: 9,
+                skip_relu: false,
+                weight_base: 0,
+                bias_base: 0,
+                pool_pad: 0,
+            };
+            let n = dev.restart_engine(&task).unwrap();
+            assert_eq!(n, 6 * 8);
+            let res = dev.read_results(n).unwrap();
+            // Result order: oc outer, x inner.
+            for oc in 0..8 {
+                for x in 0..6 {
+                    assert_eq!(
+                        res[oc * 6 + x].to_bits(),
+                        expect.get(y, x, oc).to_bits(),
+                        "y={y} oc={oc} x={x}"
+                    );
+                }
+            }
+        }
+        assert!(dev.stats.cycles > 0);
+        assert_eq!(dev.stats.passes, 6);
+        assert!(dev.usb.total_bytes() > 0);
+    }
+
+    #[test]
+    fn pool_slice_matches_functional() {
+        let mut rng = Rng::new(0x900);
+        let spec = LayerSpec::maxpool("p", 3, 2, 9, 16);
+        let inp = rand_tensor(&mut rng, 9, 16);
+        let expect = functional::maxpool(&spec, &inp);
+
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        dev.load_commands(&[&spec]).unwrap();
+        dev.load_layer().unwrap();
+        let o = spec.o_side as usize;
+        for g in 0..2 {
+            for y in 0..o {
+                let y0 = y * 2;
+                let rows = 3.min(9 - y0);
+                let slice = gemm::pool_slice(&inp, y0, rows, g);
+                dev.load_data(&slice).unwrap();
+                let task = SliceTask {
+                    op: OpType::MaxPool,
+                    k: 3,
+                    stride: 2,
+                    out_cols: o,
+                    groups: 1,
+                    oc_count: 8,
+                    data_width: 9,
+                    data_rows: rows,
+                    pixel_mode: false,
+                    kernel_size_reg: 9,
+                    skip_relu: false,
+                    weight_base: 0,
+                    bias_base: 0,
+                    pool_pad: 0,
+                };
+                let n = dev.restart_engine(&task).unwrap();
+                let res = dev.read_results(n).unwrap();
+                for x in 0..o {
+                    for l in 0..8 {
+                        assert_eq!(
+                            res[x * 8 + l].to_bits(),
+                            expect.get(y, x, g * 8 + l).to_bits(),
+                            "g={g} y={y} x={x} l={l}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resfifo_overflow_is_rejected() {
+        let spec = LayerSpec::conv("t", 1, 1, 0, 200, 8, 8, 0);
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        dev.load_commands(&[&spec]).unwrap();
+        dev.load_layer().unwrap();
+        let task = SliceTask {
+            op: OpType::ConvRelu,
+            k: 1,
+            stride: 1,
+            out_cols: 200,
+            groups: 1,
+            oc_count: 8, // 1600 results > 1024
+            data_width: 200,
+            data_rows: 1,
+            pixel_mode: false,
+            kernel_size_reg: 1,
+            skip_relu: false,
+            weight_base: 0,
+            bias_base: 0,
+            pool_pad: 0,
+        };
+        assert!(dev.restart_engine(&task).is_err());
+    }
+
+    #[test]
+    fn cache_overflow_is_rejected() {
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let too_big = vec![F16::ZERO; DATA_CACHE_WORDS * 8 + 8];
+        assert!(dev.load_data(&too_big).is_err());
+    }
+}

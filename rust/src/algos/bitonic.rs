@@ -1,0 +1,151 @@
+//! Bitonic sort (§3.3.3) — the hardware sorting network the paper
+//! evaluated (and rejected for the channel-first cache layout, §3.4.1).
+//!
+//! The network sorts n = 2^m elements in (log n)(log n + 1)/2 comparison
+//! stages; with n/2 parallel comparators each stage is one "cycle", so
+//! the parallel depth is O((log n)²) — Fig 12's 8-element example runs in
+//! 6 comparator cycles.
+
+use crate::fp16::F16;
+
+/// Cost/trace report of one sort.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SortReport {
+    /// Total pairwise comparisons performed.
+    pub comparisons: u64,
+    /// Parallel stages (= cycles with n/2 comparators).
+    pub stages: u32,
+}
+
+/// In-place bitonic sort, ascending. `xs.len()` must be a power of two
+/// (§3.3.3: "the total number of elements must be an integer power of 2").
+/// Returns the cost report.
+pub fn bitonic_sort(xs: &mut [F16]) -> SortReport {
+    let n = xs.len();
+    assert!(n.is_power_of_two(), "bitonic sort needs 2^m elements, got {n}");
+    let mut rep = SortReport::default();
+    let mut k = 2;
+    while k <= n {
+        let mut j = k / 2;
+        while j > 0 {
+            rep.stages += 1;
+            for i in 0..n {
+                let l = i ^ j;
+                if l > i {
+                    rep.comparisons += 1;
+                    let ascending = (i & k) == 0;
+                    let a = xs[i].total_cmp_key();
+                    let b = xs[l].total_cmp_key();
+                    if (ascending && a > b) || (!ascending && a < b) {
+                        xs.swap(i, l);
+                    }
+                }
+            }
+            j /= 2;
+        }
+        k *= 2;
+    }
+    rep
+}
+
+/// Max-of-n via the sorting network (what a bitonic max-pooling unit
+/// would do) — returns (max, report).
+pub fn bitonic_max(values: &[F16]) -> (F16, SortReport) {
+    let n = values.len().next_power_of_two();
+    let mut padded = vec![F16::NEG_INFINITY; n];
+    padded[..values.len()].copy_from_slice(values);
+    let rep = bitonic_sort(&mut padded);
+    (padded[n - 1], rep)
+}
+
+/// Sequential compare chain (what the shipped RTL does, Fig 26): n−1
+/// comparisons, n−1 "cycles" at II=1 per comparator... but at II=2 for
+/// the accumulating comparator. Returns (max, comparisons).
+pub fn sequential_max(values: &[F16]) -> (F16, u64) {
+    let mut best = F16::NEG_INFINITY;
+    let mut cmps = 0;
+    for &v in values {
+        cmps += 1;
+        if v.gt(best) {
+            best = v;
+        }
+    }
+    (best, cmps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Rng};
+
+    #[test]
+    fn sorts_known_sequence() {
+        let mut xs: Vec<F16> =
+            [3.0f32, -1.0, 7.5, 0.0, -2.25, 8.0, 1.0, 1.0].iter().map(|&v| F16::from_f32(v)).collect();
+        let rep = bitonic_sort(&mut xs);
+        let vals: Vec<f32> = xs.iter().map(|v| v.to_f32()).collect();
+        assert_eq!(vals, vec![-2.25, -1.0, 0.0, 1.0, 1.0, 3.0, 7.5, 8.0]);
+        // Fig 12: 8 elements → 6 stages.
+        assert_eq!(rep.stages, 6);
+        // n/2 · stages comparisons total.
+        assert_eq!(rep.comparisons, 4 * 6);
+    }
+
+    #[test]
+    fn stage_count_is_quadratic_in_log_n() {
+        for m in 1..=7u32 {
+            let n = 1usize << m;
+            let mut xs: Vec<F16> = (0..n).map(|i| F16::from_u32((n - i) as u32)).collect();
+            let rep = bitonic_sort(&mut xs);
+            assert_eq!(rep.stages, m * (m + 1) / 2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn sort_property_random() {
+        forall(
+            0xB170,
+            300,
+            |r: &mut Rng| {
+                let m = r.below(6) + 1;
+                (0..(1usize << m)).map(|_| F16::from_f32(r.normal(10.0))).collect::<Vec<_>>()
+            },
+            |xs| {
+                let mut sorted = xs.clone();
+                bitonic_sort(&mut sorted);
+                // Must be a permutation, and non-decreasing.
+                let mut a: Vec<u16> = xs.iter().map(|v| v.to_bits()).collect();
+                let mut b: Vec<u16> = sorted.iter().map(|v| v.to_bits()).collect();
+                a.sort_unstable_by_key(|&v| F16::from_bits(v).total_cmp_key());
+                b.sort_unstable_by_key(|&v| F16::from_bits(v).total_cmp_key());
+                if a != b {
+                    return Err("not a permutation".into());
+                }
+                for w in sorted.windows(2) {
+                    if w[0].total_cmp_key() > w[1].total_cmp_key() {
+                        return Err("not sorted".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn bitonic_and_sequential_max_agree() {
+        forall(
+            0x3A30,
+            200,
+            |r: &mut Rng| (0..(r.below(60) + 1)).map(|_| F16::from_f32(r.normal(5.0))).collect::<Vec<_>>(),
+            |xs| {
+                let (a, _) = bitonic_max(xs);
+                let (b, _) = sequential_max(xs);
+                if a.to_bits() == b.to_bits() {
+                    Ok(())
+                } else {
+                    Err(format!("{a:?} vs {b:?}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,222 @@
+//! im2col+GEMM vs MEC convolution (§3.3.1, §3.3.2, §3.4.3) — functional
+//! implementations with memory-access counters, so the A2 ablation can
+//! reproduce the paper's trade-off: MEC reads each input element once
+//! (surface-first parallelism) at the cost of stride-dependent slot
+//! logic and kernel-proportional hardware; im2col re-reads overlapped
+//! window data but keeps the control logic uniform (channel-first).
+
+use crate::net::tensor::{ConvWeights, Tensor, TensorF32};
+
+/// Access statistics of one convolution run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConvAccessReport {
+    /// Scalar reads from the input activation memory.
+    pub input_reads: u64,
+    /// Scalar reads from the weight memory.
+    pub weight_reads: u64,
+    /// Multiply-accumulates.
+    pub macs: u64,
+    /// Peak parallel multiplier slots in use (MEC's varying parallelism
+    /// vs im2col's constant lanes).
+    pub peak_parallelism: u32,
+    /// Minimum parallel slots in use over steady state.
+    pub min_parallelism: u32,
+}
+
+/// Plain im2col + GEMM convolution (f32 reference semantics): builds the
+/// lowered matrix explicitly (every window element copied once per use,
+/// §3.3.1) and multiplies.
+pub fn im2col_gemm(
+    input: &TensorF32,
+    w: &ConvWeights,
+    stride: usize,
+    pad: usize,
+) -> (TensorF32, ConvAccessReport) {
+    let k = w.k;
+    let padded = input.pad_surface(pad);
+    let o = (padded.h - k) / stride + 1;
+    let cols = k * k * input.c;
+    let mut rep = ConvAccessReport {
+        peak_parallelism: 8,
+        min_parallelism: 8,
+        ..Default::default()
+    };
+
+    // im2col: (o*o) × (k*k*c) matrix — each element is one input read.
+    let mut lowered = vec![0f32; o * o * cols];
+    for y in 0..o {
+        for x in 0..o {
+            let mut col = 0;
+            for ky in 0..k {
+                for kx in 0..k {
+                    for c in 0..input.c {
+                        lowered[(y * o + x) * cols + col] = padded.get(y * stride + ky, x * stride + kx, c);
+                        rep.input_reads += 1;
+                        col += 1;
+                    }
+                }
+            }
+        }
+    }
+    // GEMM: [o², cols] × [cols, o_ch].
+    let mut out = Tensor::zeros(o, o, w.o_ch);
+    for y in 0..o {
+        for x in 0..o {
+            for oc in 0..w.o_ch {
+                let mut acc = w.bias[oc];
+                for ky in 0..k {
+                    for kx in 0..k {
+                        for c in 0..input.c {
+                            let col = (ky * k + kx) * input.c + c;
+                            acc += lowered[(y * o + x) * cols + col] * w.get(oc, ky, kx, c);
+                            rep.weight_reads += 1;
+                            rep.macs += 1;
+                        }
+                    }
+                }
+                out.set(y, x, oc, acc);
+            }
+        }
+    }
+    (out, rep)
+}
+
+/// MEC convolution (§3.3.2, Figs 11/19/20): slide the kernel down one
+/// *column strip* of the input; each strip element is read once and
+/// shared by the (k − stride + 1 …) overlapping windows via parallel
+/// slots. Functionally identical to im2col; the access counts differ.
+pub fn mec(
+    input: &TensorF32,
+    w: &ConvWeights,
+    stride: usize,
+    pad: usize,
+) -> (TensorF32, ConvAccessReport) {
+    let k = w.k;
+    let padded = input.pad_surface(pad);
+    let o = (padded.h - k) / stride + 1;
+    let mut rep = ConvAccessReport { min_parallelism: u32::MAX, ..Default::default() };
+
+    let mut out = Tensor::zeros(o, o, w.o_ch);
+    // Partial sums per (output row within strip, output channel).
+    // Process one output column x at a time: read the k input columns
+    // x·s .. x·s+k once ("sequentially reads out input_side · kernel
+    // data"), and accumulate into all o output rows in pipeline.
+    for x in 0..o {
+        // acc[y][oc]
+        let mut acc: Vec<Vec<f32>> = vec![w.bias.clone(); o];
+        for iy in 0..padded.h {
+            // Which output rows' windows cover input row iy?
+            // y·s ≤ iy < y·s + k.
+            let y_hi = iy / stride;
+            let y_lo = iy.saturating_sub(k - 1).div_ceil(stride);
+            let mut active = 0u32;
+            for kx in 0..k {
+                for c in 0..input.c {
+                    let v = padded.get(iy, x * stride + kx, c);
+                    rep.input_reads += 1;
+                    for y in y_lo..=y_hi.min(o - 1) {
+                        let ky = iy - y * stride;
+                        active = active.max((y_hi.min(o - 1) - y_lo + 1) as u32);
+                        for oc in 0..w.o_ch {
+                            acc[y][oc] += v * w.get(oc, ky, kx, c);
+                            rep.weight_reads += 1;
+                            rep.macs += 1;
+                        }
+                    }
+                }
+            }
+            if active > 0 {
+                rep.peak_parallelism = rep.peak_parallelism.max(active);
+                rep.min_parallelism = rep.min_parallelism.min(active);
+            }
+        }
+        for y in 0..o {
+            for oc in 0..w.o_ch {
+                out.set(y, x, oc, acc[y][oc]);
+            }
+        }
+    }
+    if rep.min_parallelism == u32::MAX {
+        rep.min_parallelism = 0;
+    }
+    (out, rep)
+}
+
+/// Number of parallel computation slots surface-first parallelism needs
+/// (§3.4.3): `kernel − stride + 1` groups; a slot is idle when
+/// stride ≥ 2 ("there is a slot that is always empty").
+pub fn mec_slots(kernel: usize, stride: usize) -> (usize, usize) {
+    let total = kernel;
+    let used = kernel.saturating_sub(stride) + 1;
+    (total, used.min(total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::Rng;
+
+    fn rand_case(rng: &mut Rng, side: usize, c: usize, oc: usize, k: usize) -> (TensorF32, ConvWeights) {
+        let input = Tensor::from_vec(side, side, c, (0..side * side * c).map(|_| rng.normal(1.0)).collect());
+        let mut w = ConvWeights::zeros(oc, k, c);
+        for v in w.data.iter_mut() {
+            *v = rng.normal(0.3);
+        }
+        for b in w.bias.iter_mut() {
+            *b = rng.normal(0.1);
+        }
+        (input, w)
+    }
+
+    #[test]
+    fn mec_matches_im2col_functionally() {
+        let mut rng = Rng::new(0x3EC);
+        for (k, s, pad) in [(3usize, 1usize, 0usize), (3, 1, 1), (3, 2, 0), (1, 1, 0), (5, 2, 2)] {
+            let (input, w) = rand_case(&mut rng, 9, 4, 3, k);
+            let (a, _) = im2col_gemm(&input, &w, s, pad);
+            let (b, _) = mec(&input, &w, s, pad);
+            assert_eq!(a.h, b.h);
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert!((x - y).abs() < 1e-3, "k={k} s={s}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn mec_reads_each_input_once_im2col_rereads() {
+        let mut rng = Rng::new(7);
+        let (input, w) = rand_case(&mut rng, 9, 4, 2, 3);
+        let (_, rep_i) = im2col_gemm(&input, &w, 1, 0);
+        let (_, rep_m) = mec(&input, &w, 1, 0);
+        let input_elems = (9 * 9 * 4) as u64;
+        // im2col reads ≈ k² copies of interior elements.
+        assert!(rep_i.input_reads > 5 * input_elems, "{}", rep_i.input_reads);
+        // MEC reads each strip element once per output column: ≤ k× total
+        // (columns overlap by k−s), far fewer than im2col.
+        assert!(rep_m.input_reads < rep_i.input_reads / 2);
+        assert_eq!(rep_i.macs, rep_m.macs);
+    }
+
+    #[test]
+    fn mec_parallelism_varies_im2col_constant() {
+        let mut rng = Rng::new(8);
+        let (input, w) = rand_case(&mut rng, 9, 4, 2, 3);
+        let (_, rep_i) = im2col_gemm(&input, &w, 1, 0);
+        let (_, rep_m) = mec(&input, &w, 1, 0);
+        assert_eq!(rep_i.peak_parallelism, rep_i.min_parallelism);
+        // MEC ramps up at strip edges (§3.4.3: "the parallel computation
+        // units are not all activated" at start).
+        assert!(rep_m.peak_parallelism > rep_m.min_parallelism);
+    }
+
+    #[test]
+    fn slot_occupancy_matches_paper() {
+        // k=3, s=1: all 3 slots occupied (sum_enable = 111, Fig 19).
+        assert_eq!(mec_slots(3, 1), (3, 3));
+        // k=3, s=2: one slot always empty (Fig 20).
+        assert_eq!(mec_slots(3, 2), (3, 2));
+        // k=11 (AlexNet): slot count grows with the kernel — the §3.4.3
+        // scalability objection.
+        assert_eq!(mec_slots(11, 1).0, 11);
+    }
+}

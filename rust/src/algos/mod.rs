@@ -1,0 +1,14 @@
+//! The §3.3 "optional optimization algorithms" — implemented so the
+//! paper's §3.4 trade-off decisions can be measured, not just asserted:
+//! bitonic sorting networks, pipeline accumulation, and MEC vs
+//! im2col+GEMM convolution with access counters.
+
+pub mod bitonic;
+pub mod convolution;
+pub mod pipeline_accum;
+pub mod quantization;
+
+pub use bitonic::{bitonic_max, bitonic_sort, sequential_max, SortReport};
+pub use convolution::{im2col_gemm, mec, mec_slots, ConvAccessReport};
+pub use pipeline_accum::{pipeline_accumulate, sequential_accumulate, AccumReport};
+pub use quantization::{compare as quant_compare, conv_int8, quantize_tensor, QuantReport};

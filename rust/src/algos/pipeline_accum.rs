@@ -1,0 +1,140 @@
+//! Pipeline accumulation (§3.3.4, Fig 13): summing an array with a fixed
+//! pool of adders, trading time for space. The paper's Fig 13 example —
+//! 32 adders summing 13×13 = 169 numbers — reads 64, 32, 32, 32, 4, 2,
+//! 2, 0, 0, 1 values over 10 cycles; the irregular readout is one of the
+//! reasons the algorithm was rejected (§3.4.1).
+
+use crate::fp16::F16;
+
+/// Cycle-by-cycle trace of a pipeline accumulation.
+#[derive(Clone, Debug, Default)]
+pub struct AccumReport {
+    /// Values read from memory each cycle (the §3.3.4 irregularity).
+    pub reads_per_cycle: Vec<u64>,
+    /// Adders active each cycle.
+    pub active_adders: Vec<u64>,
+    /// Total cycles.
+    pub cycles: u32,
+    /// Mean adder utilization over the run (≤ 1; the paper notes it is
+    /// "always a moment that the computation utilization ratio is less or
+    /// significantly less than 100%").
+    pub utilization: f64,
+}
+
+/// Sum `values` with `adders` parallel FP16 adders, Fig 13 style:
+/// each cycle every adder can combine two operands drawn from (pending
+/// inputs ++ partial sums from previous cycles). Returns (sum, report).
+pub fn pipeline_accumulate(values: &[F16], adders: usize) -> (F16, AccumReport) {
+    assert!(adders > 0);
+    let mut rep = AccumReport::default();
+    if values.is_empty() {
+        return (F16::ZERO, rep);
+    }
+    let mut pending: std::collections::VecDeque<F16> = values.iter().copied().collect();
+    let mut partials: Vec<F16> = Vec::new();
+    let total_inputs = values.len();
+    let mut reads_done = 0usize;
+
+    while pending.len() + partials.len() > 1 {
+        // Operand pool this cycle: partial sums first (they are registered
+        // on-chip), then as many fresh reads as adders still need.
+        let mut pool: Vec<F16> = std::mem::take(&mut partials);
+        let mut reads = 0u64;
+        while pool.len() < 2 * adders && !pending.is_empty() {
+            pool.push(pending.pop_front().unwrap());
+            reads += 1;
+        }
+        let pairs = pool.len() / 2;
+        let mut next: Vec<F16> = Vec::with_capacity(pairs + 1);
+        for i in 0..pairs {
+            next.push(pool[2 * i].add(pool[2 * i + 1]));
+        }
+        if pool.len() % 2 == 1 {
+            next.push(pool[pool.len() - 1]);
+        }
+        reads_done += reads as usize;
+        rep.reads_per_cycle.push(reads);
+        rep.active_adders.push(pairs as u64);
+        rep.cycles += 1;
+        partials = next;
+        assert!(rep.cycles < 10_000, "accumulation did not converge");
+    }
+    // A single remaining input never enters the adder array — it passes
+    // straight through below.
+    debug_assert_eq!(reads_done + pending.len(), total_inputs);
+    let sum = partials.first().copied().or_else(|| pending.pop_front()).unwrap_or(F16::ZERO);
+    let used: u64 = rep.active_adders.iter().sum();
+    rep.utilization = used as f64 / (rep.cycles as u64 * adders as u64) as f64;
+    (sum, rep)
+}
+
+/// The RTL's actual approach (Fig 27): one accumulator per lane adding
+/// sequentially at II=2. Returns (sum, cycles).
+pub fn sequential_accumulate(values: &[F16]) -> (F16, u32) {
+    let mut acc = F16::ZERO;
+    for &v in values {
+        acc = acc.add(v);
+    }
+    (acc, 2 * values.len() as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Rng};
+
+    #[test]
+    fn fig13_geometry_169_values_32_adders() {
+        let values: Vec<F16> = (0..169).map(|_| F16::ONE).collect();
+        let (sum, rep) = pipeline_accumulate(&values, 32);
+        assert_eq!(sum.to_f32(), 169.0); // exact in FP16
+        // First cycle reads 2·32 = 64 fresh values, as in Fig 13.
+        assert_eq!(rep.reads_per_cycle[0], 64);
+        // Reads must total 169 and taper off irregularly.
+        assert_eq!(rep.reads_per_cycle.iter().sum::<u64>(), 169);
+        assert!(rep.cycles <= 12, "{}", rep.cycles);
+        // Utilization strictly below 100% (the §3.3.4 drawback).
+        assert!(rep.utilization < 1.0);
+    }
+
+    #[test]
+    fn fewer_adders_cost_more_cycles() {
+        let values: Vec<F16> = (0..169).map(|_| F16::ONE).collect();
+        let (_, r32) = pipeline_accumulate(&values, 32);
+        let (_, r8) = pipeline_accumulate(&values, 8);
+        let (_, r1) = pipeline_accumulate(&values, 1);
+        assert!(r8.cycles > r32.cycles);
+        assert!(r1.cycles > r8.cycles);
+        assert_eq!(r1.cycles, 168); // one add per cycle, n-1 adds
+    }
+
+    #[test]
+    fn tree_sum_exact_for_exact_inputs() {
+        // Integer-valued FP16 inputs small enough that every partial sum
+        // is exact — pipeline and sequential must agree exactly.
+        forall(
+            0xACC,
+            300,
+            |r: &mut Rng| {
+                let n = r.below(200) + 1;
+                (0..n).map(|_| F16::from_u32(r.below(8) as u32)).collect::<Vec<_>>()
+            },
+            |xs| {
+                let (a, _) = pipeline_accumulate(xs, 16);
+                let (b, _) = sequential_accumulate(xs);
+                if a.to_bits() == b.to_bits() {
+                    Ok(())
+                } else {
+                    Err(format!("{a:?} vs {b:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(pipeline_accumulate(&[], 4).0.to_bits(), 0);
+        let one = [F16::from_f32(2.5)];
+        assert_eq!(pipeline_accumulate(&one, 4).0.to_f32(), 2.5);
+    }
+}

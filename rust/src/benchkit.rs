@@ -1,0 +1,105 @@
+//! Tiny benchmark runner used by the `harness = false` bench targets.
+//!
+//! `criterion` is not available offline (DESIGN.md §7); this provides the
+//! subset we need: warmup, repeated timed runs, median/min/mean reporting,
+//! and a uniform table printer so each bench target can print the rows of
+//! the paper table/figure it regenerates.
+
+use std::time::Instant;
+
+/// Result of one measured benchmark.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl Measurement {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+}
+
+/// Time `f` (called once per iteration) `iters` times after `warmup`
+/// untimed calls. Returns per-iteration statistics.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let min = samples[0];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        median_ns: median,
+        min_ns: min,
+        mean_ns: mean,
+    };
+    println!(
+        "  bench {:<44} median {:>12}  min {:>12}  mean {:>12}  (n={})",
+        m.name,
+        fmt_ns(m.median_ns),
+        fmt_ns(m.min_ns),
+        fmt_ns(m.mean_ns),
+        m.iters
+    );
+    m
+}
+
+/// Human duration formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print an aligned table: header row + data rows.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("  {}", s.trim_end());
+    };
+    line(headers.iter().map(|s| s.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+/// A black-box to prevent the optimizer deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

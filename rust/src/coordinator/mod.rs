@@ -1,0 +1,227 @@
+//! Multi-device inference coordinator — the §6.2 scalability story made
+//! operational: "more computation units … can be used to boost up the
+//! forwarding process; the host logic can also be migrated" — here the
+//! host drives N simulated accelerators from a shared request queue.
+//!
+//! Plain std threads (no async runtime is available offline, and the
+//! workload is compute-bound simulation): one worker thread per device,
+//! each pulling requests from a shared queue, forwarding through its own
+//! [`StreamAccelerator`], and reporting results + metrics over a channel.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::accel::stream::StreamAccelerator;
+use crate::host::driver::HostDriver;
+use crate::hw::usb::UsbLink;
+use crate::net::graph::Network;
+use crate::net::tensor::TensorF32;
+use crate::net::weights::Blobs;
+
+/// A queued inference request.
+#[derive(Clone, Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub image: TensorF32,
+}
+
+/// A completed inference.
+#[derive(Clone, Debug)]
+pub struct InferenceResponse {
+    pub id: u64,
+    /// Softmax probabilities.
+    pub probs: Vec<f32>,
+    /// Top-1 class.
+    pub argmax: usize,
+    /// Which device served it.
+    pub worker: usize,
+    /// Wall-clock seconds in the worker (real simulation time).
+    pub service_seconds: f64,
+    /// Modeled device time (engine + link) for this request.
+    pub modeled_seconds: f64,
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub served: usize,
+    pub per_worker: Vec<usize>,
+    pub wall_seconds: f64,
+    /// Requests per wall second.
+    pub throughput: f64,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+}
+
+/// Serve `requests` across `n_workers` simulated devices; blocks until
+/// every request is answered. Deterministic results (each forward is a
+/// pure function of the image), non-deterministic assignment.
+pub fn serve(
+    net: &Network,
+    blobs: &Blobs,
+    link: UsbLink,
+    n_workers: usize,
+    requests: Vec<InferenceRequest>,
+) -> Result<(Vec<InferenceResponse>, ServeStats)> {
+    assert!(n_workers > 0);
+    let total = requests.len();
+    let queue = Arc::new(Mutex::new(requests.into_iter().collect::<VecDeque<_>>()));
+    let (tx, rx) = mpsc::channel::<InferenceResponse>();
+    let t0 = Instant::now();
+
+    std::thread::scope(|scope| {
+        for worker in 0..n_workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            let net = net.clone();
+            scope.spawn(move || {
+                let mut dev = StreamAccelerator::new(link);
+                loop {
+                    let req = { queue.lock().unwrap().pop_front() };
+                    let Some(req) = req else { break };
+                    let st = Instant::now();
+                    let before = dev.usb.total_seconds()
+                        + crate::hw::clock::ClockDomain::ENGINE.secs(dev.stats.cycles);
+                    let res = HostDriver::new(&mut dev)
+                        .forward(&net, blobs, &req.image)
+                        .expect("forward failed");
+                    let after = dev.usb.total_seconds()
+                        + crate::hw::clock::ClockDomain::ENGINE.secs(dev.stats.cycles);
+                    let argmax =
+                        crate::host::postprocess::argmax(&res.probs).unwrap_or(0);
+                    tx.send(InferenceResponse {
+                        id: req.id,
+                        probs: res.probs,
+                        argmax,
+                        worker,
+                        service_seconds: st.elapsed().as_secs_f64(),
+                        modeled_seconds: after - before,
+                    })
+                    .expect("response channel closed");
+                }
+            });
+        }
+        drop(tx);
+    });
+
+    let mut responses: Vec<InferenceResponse> = rx.into_iter().collect();
+    let wall = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(responses.len() == total, "lost responses: {}/{total}", responses.len());
+    responses.sort_by_key(|r| r.id);
+
+    let mut per_worker = vec![0usize; n_workers];
+    for r in &responses {
+        per_worker[r.worker] += 1;
+    }
+    let mut lat: Vec<f64> = responses.iter().map(|r| r.service_seconds).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat[(((lat.len() - 1) as f64) * p) as usize];
+    let stats = ServeStats {
+        served: total,
+        per_worker,
+        wall_seconds: wall,
+        throughput: total as f64 / wall.max(1e-12),
+        p50_latency: if lat.is_empty() { 0.0 } else { pct(0.5) },
+        p99_latency: if lat.is_empty() { 0.0 } else { pct(0.99) },
+    };
+    Ok((responses, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::layer::LayerSpec;
+    use crate::net::weights::synthesize_weights;
+    use crate::prop::Rng;
+
+    fn tiny_net() -> Network {
+        let mut n = Network::new("tiny");
+        let inp = n.input(8, 3);
+        let c1 = n.engine(LayerSpec::conv("c1", 3, 1, 0, 8, 3, 8, 0), inp);
+        let gap = n.engine(LayerSpec::avgpool("gap", 6, 1, 6, 8), c1);
+        n.softmax("prob", gap);
+        n
+    }
+
+    fn rand_requests(n: usize, seed: u64) -> Vec<InferenceRequest> {
+        let mut rng = Rng::new(seed);
+        (0..n as u64)
+            .map(|id| InferenceRequest {
+                id,
+                image: crate::net::tensor::Tensor::from_vec(
+                    8,
+                    8,
+                    3,
+                    (0..8 * 8 * 3).map(|_| rng.normal(1.0)).collect(),
+                ),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_request_served_exactly_once() {
+        let net = tiny_net();
+        let blobs = synthesize_weights(&net, 1);
+        let reqs = rand_requests(16, 7);
+        let (resps, stats) =
+            serve(&net, &blobs, UsbLink::usb3_frontpanel(), 4, reqs).unwrap();
+        assert_eq!(resps.len(), 16);
+        let ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..16).collect::<Vec<_>>());
+        assert_eq!(stats.served, 16);
+        assert_eq!(stats.per_worker.iter().sum::<usize>(), 16);
+        assert!(stats.throughput > 0.0);
+    }
+
+    #[test]
+    fn results_independent_of_worker_count() {
+        let net = tiny_net();
+        let blobs = synthesize_weights(&net, 2);
+        let (a, _) = serve(&net, &blobs, UsbLink::usb3_frontpanel(), 1, rand_requests(8, 3)).unwrap();
+        let (b, _) = serve(&net, &blobs, UsbLink::usb3_frontpanel(), 3, rand_requests(8, 3)).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.probs, y.probs, "req {}", x.id);
+            assert_eq!(x.argmax, y.argmax);
+        }
+    }
+
+    #[test]
+    fn routing_uses_multiple_workers_under_load() {
+        let net = tiny_net();
+        let blobs = synthesize_weights(&net, 3);
+        let (_, stats) =
+            serve(&net, &blobs, UsbLink::usb3_frontpanel(), 4, rand_requests(32, 9)).unwrap();
+        let active = stats.per_worker.iter().filter(|&&c| c > 0).count();
+        assert!(active >= 2, "expected work spread, got {:?}", stats.per_worker);
+    }
+
+    #[test]
+    fn serve_property_ids_preserved_random_sizes() {
+        crate::prop::forall(
+            0x5EFE,
+            8,
+            |r| (r.below(10) + 1, r.below(4) + 1),
+            |&(n, w)| {
+                let net = tiny_net();
+                let blobs = synthesize_weights(&net, 4);
+                let (resps, _) =
+                    serve(&net, &blobs, UsbLink::usb3_frontpanel(), w, rand_requests(n, 5))
+                        .map_err(|e| e.to_string())?;
+                if resps.len() != n {
+                    return Err(format!("served {} of {n}", resps.len()));
+                }
+                for (i, r) in resps.iter().enumerate() {
+                    if r.id != i as u64 {
+                        return Err("ids out of order after sort".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

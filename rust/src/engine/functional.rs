@@ -1,0 +1,432 @@
+//! Functional engine: bit-exact FP16 semantics of the three computation
+//! units (§4.2.1–4.2.3) without cycle accounting.
+//!
+//! **Normative accumulation order** (DESIGN.md §6) — identical to the RTL
+//! dataflow of Figs 24–25 and to `python/compile/kernels/rtl_ref.py`:
+//!
+//! For each output element `(y, x, oc)` of a convolution:
+//! 1. `fsum ← bias[oc]` (the fsum accumulator's initial value, Fig 25);
+//! 2. for each 8-lane input-channel group `g` (channels padded to 8):
+//!    each lane `l` forms `psum_l = Σ_{(ky,kx) row-major} round16(d·w)`,
+//!    products rounded to FP16 and accumulated in FP16 sequentially
+//!    (psum accumulator initial value 0x0000);
+//!    then `fsum ← ((fsum + psum_0) + psum_1) + … + psum_7`, in FP16;
+//! 3. ReLU = sign-bit test (§3.2), unless the layer's skip_relu
+//!    extension bit is set.
+//!
+//! Max-pooling lanes run a running max with **initial value 0x0000**
+//! (Fig 26 — a quirk we preserve: negative inputs clamp to zero, which is
+//! harmless after ReLU). Average pooling accumulates the window in FP16
+//! then divides by the int→FP-converted `kernel_size` (Fig 27).
+
+use crate::fp16::F16;
+use crate::net::layer::{LayerSpec, OpType};
+use crate::net::tensor::{Tensor, TensorF16};
+
+/// FP16 convolution weights, OHWI, with the input-channel dimension
+/// padded to a multiple of 8 lanes (zeros) the way the host transfers
+/// them (Table 2's weight totals include this padding).
+#[derive(Clone, Debug)]
+pub struct ConvWeightsF16 {
+    pub o_ch: usize,
+    pub k: usize,
+    /// Padded input channels (multiple of 8).
+    pub i_ch_padded: usize,
+    pub data: Vec<F16>,
+    pub bias: Vec<F16>,
+}
+
+impl ConvWeightsF16 {
+    /// Quantize FP32 OHWI weights, padding input channels to 8 lanes.
+    pub fn from_f32(w: &crate::net::tensor::ConvWeights) -> ConvWeightsF16 {
+        let icp = w.i_ch.div_ceil(8) * 8;
+        let mut data = vec![F16::ZERO; w.o_ch * w.k * w.k * icp];
+        for oc in 0..w.o_ch {
+            for ky in 0..w.k {
+                for kx in 0..w.k {
+                    for ic in 0..w.i_ch {
+                        data[((oc * w.k + ky) * w.k + kx) * icp + ic] =
+                            F16::from_f32(w.get(oc, ky, kx, ic));
+                    }
+                }
+            }
+        }
+        ConvWeightsF16 {
+            o_ch: w.o_ch,
+            k: w.k,
+            i_ch_padded: icp,
+            data,
+            bias: w.bias.iter().map(|&b| F16::from_f32(b)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, oc: usize, ky: usize, kx: usize, ic: usize) -> F16 {
+        self.data[((oc * self.k + ky) * self.k + kx) * self.i_ch_padded + ic]
+    }
+}
+
+/// Convolution + fused ReLU (§4.2.1). `input` must already be
+/// surface-padded by `spec.padding` (the host pads before slicing, Fig
+/// 36 "Process Gemm") and channel-padded to a multiple of 8.
+pub fn conv(spec: &LayerSpec, input: &TensorF16, w: &ConvWeightsF16) -> TensorF16 {
+    assert_eq!(spec.op, OpType::ConvRelu);
+    let k = spec.kernel as usize;
+    let s = spec.stride as usize;
+    let o = spec.o_side as usize;
+    let icp = w.i_ch_padded;
+    assert_eq!(input.h, spec.i_side as usize + 2 * spec.padding as usize, "{}", spec.name);
+    assert_eq!(input.c, icp, "{}: input channels must be lane-padded", spec.name);
+    assert_eq!(w.k, k);
+    assert_eq!(w.o_ch, spec.o_ch as usize);
+
+    let groups = icp / 8;
+    let mut out = Tensor::zeros(o, o, w.o_ch);
+
+    // §Perf hot path (EXPERIMENTS.md §Perf step 1): every FP16 value is
+    // exactly representable in f64, products of two f16 values and the
+    // rounded partial sums are exact in f64 — so the whole MAC chain runs
+    // on pre-widened f64 operands with one fused `round16_64` per
+    // operation, which is bit-identical to the scalar F16 path (the
+    // `conv_fast_path_matches_scalar` test pins this).
+    let din: Vec<f64> = input.data.iter().map(|v| v.to_f64()).collect();
+    let wdat: Vec<f64> = w.data.iter().map(|v| v.to_f64()).collect();
+    let iw = input.w;
+    for oc in 0..w.o_ch {
+        let wbase_oc = oc * k * k * icp;
+        for y in 0..o {
+            for x in 0..o {
+                // fsum initial value = bias (Fig 25, 0xac88 example).
+                let mut fsum = w.bias[oc].to_f64();
+                for g in 0..groups {
+                    let c0 = g * 8;
+                    let mut psum = [0f64; 8];
+                    // Window scan row-major; the 8 lanes are consecutive
+                    // channels of one 128-bit cache word.
+                    for ky in 0..k {
+                        let drow = ((y * s + ky) * iw + x * s) * icp + c0;
+                        let wrow = wbase_oc + ky * k * icp + c0;
+                        for kx in 0..k {
+                            let db = drow + kx * icp;
+                            let wb = wrow + kx * icp;
+                            for l in 0..8 {
+                                let prod = crate::fp16::round16_64(din[db + l] * wdat[wb + l]);
+                                psum[l] = crate::fp16::round16_64(psum[l] + prod);
+                            }
+                        }
+                    }
+                    // Final-stage single fsum accumulator (Fig 25).
+                    for p in psum {
+                        fsum = crate::fp16::round16_64(fsum + p);
+                    }
+                }
+                let v16 = F16::from_f64(fsum);
+                let v = if spec.skip_relu { v16 } else { v16.relu() };
+                out.set(y, x, oc, v);
+            }
+        }
+    }
+    out
+}
+
+/// The original scalar-F16 convolution — kept as the readable reference
+/// the optimized path is verified against.
+pub fn conv_scalar(spec: &LayerSpec, input: &TensorF16, w: &ConvWeightsF16) -> TensorF16 {
+    assert_eq!(spec.op, OpType::ConvRelu);
+    let k = spec.kernel as usize;
+    let s = spec.stride as usize;
+    let o = spec.o_side as usize;
+    let groups = w.i_ch_padded / 8;
+    let mut out = Tensor::zeros(o, o, w.o_ch);
+    let mut psum = [F16::ZERO; 8];
+    for oc in 0..w.o_ch {
+        for y in 0..o {
+            for x in 0..o {
+                let mut fsum = w.bias[oc];
+                for g in 0..groups {
+                    let base_c = g * 8;
+                    for (l, p) in psum.iter_mut().enumerate() {
+                        *p = F16::ZERO;
+                        let c = base_c + l;
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let d = input.get(y * s + ky, x * s + kx, c);
+                                let wv = w.get(oc, ky, kx, c);
+                                *p = p.add(d.mul(wv));
+                            }
+                        }
+                    }
+                    for p in &psum {
+                        fsum = fsum.add(*p);
+                    }
+                }
+                let v = if spec.skip_relu { fsum } else { fsum.relu() };
+                out.set(y, x, oc, v);
+            }
+        }
+    }
+    out
+}
+
+/// Max-pooling (§4.2.2). Ceil-mode windows overhang the bottom/right
+/// edge and are clipped (Table 2's pool3/pool5 geometry).
+pub fn maxpool(spec: &LayerSpec, input: &TensorF16) -> TensorF16 {
+    assert_eq!(spec.op, OpType::MaxPool);
+    let k = spec.kernel as usize;
+    let s = spec.stride as usize;
+    let o = spec.o_side as usize;
+    let pad = spec.padding as usize;
+    assert_eq!(input.h, spec.i_side as usize);
+    assert_eq!(input.c as u32, spec.i_ch);
+
+    let mut out = Tensor::zeros(o, o, input.c);
+    for y in 0..o {
+        for x in 0..o {
+            for c in 0..input.c {
+                // Running max, initial value 0x0000 (Fig 26). Padding is
+                // virtual: out-of-range window elements are skipped
+                // (≡ -inf padding), on all four sides.
+                let mut best = F16::ZERO;
+                for ky in 0..k {
+                    let iy = (y * s + ky).wrapping_sub(pad);
+                    if iy >= input.h {
+                        continue; // clipped (top via wrap, bottom direct)
+                    }
+                    for kx in 0..k {
+                        let ix = (x * s + kx).wrapping_sub(pad);
+                        if ix >= input.w {
+                            continue;
+                        }
+                        let d = input.get(iy, ix, c);
+                        if d.gt(best) {
+                            best = d;
+                        }
+                    }
+                }
+                out.set(y, x, c, best);
+            }
+        }
+    }
+    out
+}
+
+/// Average pooling (§4.2.3): FP16 window accumulation (initial 0x0000,
+/// row-major), then division by the int→FP-converted kernel_size (the
+/// 0x5948 = 169.0 example of Fig 27).
+pub fn avgpool(spec: &LayerSpec, input: &TensorF16) -> TensorF16 {
+    assert_eq!(spec.op, OpType::AvgPool);
+    let k = spec.kernel as usize;
+    let s = spec.stride as usize;
+    let o = spec.o_side as usize;
+    assert_eq!(input.h, spec.i_side as usize);
+
+    let divisor = F16::from_u32(spec.kernel_size());
+    let mut out = Tensor::zeros(o, o, input.c);
+    for y in 0..o {
+        for x in 0..o {
+            for c in 0..input.c {
+                let mut acc = F16::ZERO;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        acc = acc.add(input.get(y * s + ky, x * s + kx, c));
+                    }
+                }
+                out.set(y, x, c, acc.div(divisor));
+            }
+        }
+    }
+    out
+}
+
+/// Dispatch one engine layer. Surface/channel padding must match the
+/// `conv` contract; pooling takes the raw tensor.
+pub fn run_layer(spec: &LayerSpec, input: &TensorF16, w: Option<&ConvWeightsF16>) -> TensorF16 {
+    match spec.op {
+        OpType::ConvRelu => conv(spec, input, w.expect("conv needs weights")),
+        OpType::MaxPool => maxpool(spec, input),
+        OpType::AvgPool => avgpool(spec, input),
+        OpType::Idle => input.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::tensor::ConvWeights;
+    use crate::prop::Rng;
+
+    fn f16t(h: usize, w: usize, c: usize, vals: &[f32]) -> TensorF16 {
+        Tensor::from_vec(h, w, c, vals.iter().map(|&v| F16::from_f32(v)).collect())
+    }
+
+    #[test]
+    fn conv_1x1_identity_kernel() {
+        // 1×1 conv with identity weights on 8 channels = input + bias, relu'd.
+        let spec = LayerSpec::conv("t", 1, 1, 0, 2, 8, 8, 0);
+        let mut w = ConvWeights::zeros(8, 1, 8);
+        for c in 0..8 {
+            w.set(c, 0, 0, c, 1.0);
+        }
+        let wf = ConvWeightsF16::from_f32(&w);
+        let vals: Vec<f32> = (0..32).map(|i| i as f32 - 16.0).collect();
+        let inp = f16t(2, 2, 8, &vals);
+        let out = conv(&spec, &inp, &wf);
+        for y in 0..2 {
+            for x in 0..2 {
+                for c in 0..8 {
+                    let expect = (vals[(y * 2 + x) * 8 + c]).max(0.0);
+                    assert_eq!(out.get(y, x, c).to_f32(), expect);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_matches_f32_reference_within_fp16_tolerance() {
+        let mut rng = Rng::new(0xC04);
+        let spec = LayerSpec::conv("t", 3, 1, 1, 6, 8, 4, 0);
+        let mut w = ConvWeights::zeros(4, 3, 8);
+        for v in w.data.iter_mut() {
+            *v = rng.normal(0.2);
+        }
+        for b in w.bias.iter_mut() {
+            *b = rng.normal(0.1);
+        }
+        let vals: Vec<f32> = (0..6 * 6 * 8).map(|_| rng.normal(1.0)).collect();
+        let inp_f32 = crate::net::tensor::TensorF32::from_vec(6, 6, 8, vals);
+        let padded = inp_f32.pad_surface(1).to_f16();
+        let wf = ConvWeightsF16::from_f32(&w);
+        let out = conv(&spec, &padded, &wf);
+
+        // Plain f32 reference.
+        let p32 = inp_f32.pad_surface(1);
+        for y in 0..6 {
+            for x in 0..6 {
+                for oc in 0..4 {
+                    let mut acc = w.bias[oc];
+                    for ky in 0..3 {
+                        for kx in 0..3 {
+                            for c in 0..8 {
+                                acc += p32.get(y + ky, x + kx, c) * w.get(oc, ky, kx, c);
+                            }
+                        }
+                    }
+                    let expect = acc.max(0.0);
+                    let got = out.get(y, x, oc).to_f32();
+                    let tol = 0.02 * expect.abs().max(1.0);
+                    assert!(
+                        (got - expect).abs() < tol,
+                        "({y},{x},{oc}): {got} vs {expect}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn maxpool_basic_and_clipping() {
+        // 3→2 with k=2,s=2 would be exact; use 3→2 with k=2, s=1... take
+        // ceil case: i=3, k=2, s=2 → o = ceil(1/2)+1 = 2 (clipped window).
+        let spec = LayerSpec::maxpool("p", 2, 2, 3, 1);
+        assert_eq!(spec.o_side, 2);
+        let inp = f16t(3, 3, 1, &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        let out = maxpool(&spec, &inp);
+        assert_eq!(out.get(0, 0, 0).to_f32(), 5.0);
+        assert_eq!(out.get(0, 1, 0).to_f32(), 6.0); // clipped to col 2
+        assert_eq!(out.get(1, 0, 0).to_f32(), 8.0);
+        assert_eq!(out.get(1, 1, 0).to_f32(), 9.0); // single corner elem
+    }
+
+    #[test]
+    fn maxpool_zero_init_clamps_negatives() {
+        // The RTL quirk (Fig 26): all-negative windows produce 0.
+        let spec = LayerSpec::maxpool("p", 2, 1, 2, 1);
+        let inp = f16t(2, 2, 1, &[-1., -2., -3., -4.]);
+        let out = maxpool(&spec, &inp);
+        assert_eq!(out.get(0, 0, 0).to_f32(), 0.0);
+    }
+
+    #[test]
+    fn avgpool_exact_small() {
+        let spec = LayerSpec::avgpool("a", 2, 2, 4, 1);
+        let vals: Vec<f32> = (1..=16).map(|i| i as f32).collect();
+        let inp = f16t(4, 4, 1, &vals);
+        let out = avgpool(&spec, &inp);
+        // mean of [1,2,5,6] = 3.5 — exact in FP16.
+        assert_eq!(out.get(0, 0, 0).to_f32(), 3.5);
+        assert_eq!(out.get(1, 1, 0).to_f32(), 13.5);
+    }
+
+    #[test]
+    fn avgpool_14x14_uses_kernel_size_divisor() {
+        // pool10 geometry: 14×14 global average of ones = 196/196 = 1.
+        let spec = LayerSpec::avgpool("pool10", 14, 1, 14, 2);
+        let inp = f16t(14, 14, 2, &vec![1.0; 14 * 14 * 2]);
+        let out = avgpool(&spec, &inp);
+        // FP16 accumulation of 196 ones is exact (196 < 2048).
+        assert_eq!(out.get(0, 0, 0).to_f32(), 1.0);
+        assert_eq!(out.get(0, 0, 1).to_f32(), 1.0);
+    }
+
+    #[test]
+    fn conv_fast_path_matches_scalar() {
+        // The f64 fused-rounding hot path must be bit-identical to the
+        // scalar F16 reference, including overflow/Inf cases.
+        let mut rng = Rng::new(0xFA57);
+        for (k, s, pad, side, ic, oc, scale) in [
+            (1u32, 1u32, 0u32, 6usize, 8usize, 4usize, 1.0f32),
+            (3, 1, 1, 7, 16, 5, 1.0),
+            (3, 2, 0, 9, 24, 3, 1.0),
+            (3, 1, 0, 6, 8, 2, 180.0), // large values → overflow paths
+        ] {
+            let spec = LayerSpec::conv("t", k, s, pad, side as u32, ic as u32, oc as u32, 0);
+            let mut w = ConvWeights::zeros(oc, k as usize, ic);
+            for v in w.data.iter_mut() {
+                *v = rng.normal(scale);
+            }
+            for b in w.bias.iter_mut() {
+                *b = rng.normal(0.1);
+            }
+            let wf = ConvWeightsF16::from_f32(&w);
+            let vals: Vec<f32> = (0..side * side * ic).map(|_| rng.normal(scale)).collect();
+            let inp = crate::net::tensor::TensorF32::from_vec(side, side, ic, vals)
+                .pad_surface(pad as usize)
+                .to_f16();
+            let fast = conv(&spec, &inp, &wf);
+            let slow = conv_scalar(&spec, &inp, &wf);
+            for (a, b) in fast.data.iter().zip(&slow.data) {
+                if a.is_nan() || b.is_nan() {
+                    assert_eq!(a.is_nan(), b.is_nan());
+                } else {
+                    assert_eq!(a.to_bits(), b.to_bits(), "k={k} scale={scale}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulation_order_is_group_then_window() {
+        // Construct a case where FP16 ordering matters and pin the result:
+        // large + small values that cancel differently per order.
+        let spec = LayerSpec::conv("t", 1, 1, 0, 1, 16, 1, 0);
+        let mut w = ConvWeights::zeros(1, 1, 16);
+        for c in 0..16 {
+            w.set(0, 0, 0, c, 1.0);
+        }
+        let wf = ConvWeightsF16::from_f32(&w);
+        // Lane values: group 0 = 1024.0 ×8, group 1 = 0.5 ×8.
+        // psums: each lane is a single product.
+        // fsum = ((…(0 + 1024)+1024…)+…) then +0.5 ×8.
+        // 8×1024 = 8192; 8192 + 0.5 → rounds to 8192 (ulp at 8192 is 4);
+        // repeated 8 times stays 8192 in FP16.
+        let mut vals = vec![0.0f32; 16];
+        for (c, v) in vals.iter_mut().enumerate() {
+            *v = if c < 8 { 1024.0 } else { 0.5 };
+        }
+        let inp = f16t(1, 1, 16, &vals);
+        let out = conv(&spec, &inp, &wf);
+        assert_eq!(out.get(0, 0, 0).to_f32(), 8192.0);
+        // An f32 reference would give 8196 — the difference IS the FP16
+        // dataflow we are pinning.
+    }
+}

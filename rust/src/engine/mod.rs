@@ -1,0 +1,15 @@
+//! The computation engine (§4.2): convolution, max-pooling and
+//! average-pooling units plus the control signal block.
+//!
+//! Two execution modes share one numeric contract (DESIGN.md §6):
+//! [`functional`] computes the bit-exact FP16 result fast; [`timed`]
+//! steps the three-stage pipeline of Figs 25–27 cycle by cycle and
+//! returns both the (identical) result and a timing report.
+
+pub mod csb;
+pub mod functional;
+pub mod timed;
+
+pub use csb::Csb;
+pub use functional::{avgpool, conv, maxpool, run_layer, ConvWeightsF16};
+pub use timed::{estimate_cycles, simulate_avgpool, simulate_conv, simulate_maxpool, TimedReport};

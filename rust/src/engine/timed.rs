@@ -1,0 +1,549 @@
+//! Cycle-level engine simulation — the timing half of Figs 25–27.
+//!
+//! The three conv stages (8 multipliers → P_FIFO → 8 psum accumulators →
+//! F_FIFO → 1 fsum accumulator) run as concurrent FSMs stepped cycle by
+//! cycle, connected by the same FIFOs the RTL uses. Latencies follow
+//! §4.2: multipliers are fully pipelined (new operands every cycle, 6
+//! cycles to result); adders/comparators are *accumulators* — they accept
+//! new data only every 2 cycles ("new data should be fed after the
+//! accumulators or comparators are finished rather than in every cycle"),
+//! which is exactly why the engine pipeline is not filled and the paper's
+//! measured compute time is an order of magnitude above the MAC bound.
+//!
+//! Numerics are computed along the way in FP16, so the timed simulation
+//! doubles as a cross-check of the functional engine (tests assert the
+//! outputs are bit-identical).
+
+use crate::fp16::F16;
+use crate::hw::fifo::Fifo;
+use crate::net::layer::{LayerSpec, OpType};
+use crate::net::tensor::{Tensor, TensorF16};
+
+use super::functional::ConvWeightsF16;
+
+/// One 8-lane word travelling through the pipeline.
+type Word = [F16; 8];
+
+/// Timing/occupancy report for one simulated layer.
+#[derive(Clone, Debug, Default)]
+pub struct TimedReport {
+    /// Engine-clock cycles from enable to last result write.
+    pub cycles: u64,
+    /// 8-lane multiplier issue slots actually used.
+    pub mult_issues: u64,
+    /// Words retired through the psum stage.
+    pub psum_words: u64,
+    /// Output elements produced.
+    pub outputs: u64,
+    /// Multiplier utilization = issues / cycles (the §Perf occupancy
+    /// number; 8 MACs per issue slot).
+    pub mult_utilization: f64,
+    /// P_FIFO / F_FIFO high-water marks (depth sizing, §4.4).
+    pub p_fifo_high: usize,
+    pub f_fifo_high: usize,
+}
+
+/// A word-wide pipelined unit: `latency` cycles to result, one issue per
+/// `ii` cycles (II=1 pipelined multiplier, II=2 accumulators).
+struct WordPipe {
+    latency: u64,
+    ii: u64,
+    last_issue: Option<u64>,
+    q: std::collections::VecDeque<(u64, Word)>,
+}
+
+impl WordPipe {
+    fn new(latency: u64, ii: u64) -> WordPipe {
+        WordPipe { latency, ii, last_issue: None, q: Default::default() }
+    }
+
+    fn can_issue(&self, now: u64) -> bool {
+        self.last_issue.is_none_or(|t| now >= t + self.ii)
+    }
+
+    fn issue(&mut self, now: u64, w: Word) {
+        debug_assert!(self.can_issue(now));
+        self.last_issue = Some(now);
+        self.q.push_back((now + self.latency, w));
+    }
+
+    fn retire(&mut self, now: u64) -> Option<Word> {
+        if let Some(&(t, w)) = self.q.front() {
+            if t <= now {
+                self.q.pop_front();
+                return Some(w);
+            }
+        }
+        None
+    }
+}
+
+const MUL_LAT: u64 = 6;
+const ADD_LAT: u64 = 2;
+const CMP_LAT: u64 = 2;
+const DIV_LAT: u64 = 6;
+
+/// Per-cycle signal capture — reproduces the Fig 25 timing sequence for
+/// small runs. One sample per engine cycle per signal.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// (signal name, 0/1 per cycle) in display order.
+    pub signals: Vec<(&'static str, Vec<bool>)>,
+    limit: usize,
+}
+
+impl Trace {
+    /// Capture at most `limit` cycles.
+    pub fn new(limit: usize) -> Trace {
+        Trace {
+            signals: vec![
+                ("cmac_enable", Vec::new()),
+                ("mult_issue", Vec::new()),
+                ("p_fifo_has_data", Vec::new()),
+                ("psum_accumulating", Vec::new()),
+                ("f_fifo_has_data", Vec::new()),
+                ("fsum_busy", Vec::new()),
+                ("result_write", Vec::new()),
+            ],
+            limit,
+        }
+    }
+
+    fn sample(&mut self, values: [bool; 7]) {
+        if self.signals[0].1.len() >= self.limit {
+            return;
+        }
+        for (slot, v) in self.signals.iter_mut().zip(values) {
+            slot.1.push(v);
+        }
+    }
+
+    /// Render as an ASCII waveform (Fig 25 style: ▔ high, ▁ low).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, samples) in &self.signals {
+            out.push_str(&format!("{name:>18} "));
+            for &v in samples {
+                out.push(if v { '▔' } else { '▁' });
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Cycle-accurate convolution (Fig 25). `input` is surface-padded and
+/// channel-padded exactly as for [`super::functional::conv`].
+pub fn simulate_conv(spec: &LayerSpec, input: &TensorF16, w: &ConvWeightsF16) -> (TensorF16, TimedReport) {
+    simulate_conv_traced(spec, input, w, None)
+}
+
+/// Like [`simulate_conv`], optionally sampling a [`Trace`] each cycle.
+pub fn simulate_conv_traced(
+    spec: &LayerSpec,
+    input: &TensorF16,
+    w: &ConvWeightsF16,
+    mut trace: Option<&mut Trace>,
+) -> (TensorF16, TimedReport) {
+    assert_eq!(spec.op, OpType::ConvRelu);
+    let k = spec.kernel as usize;
+    let s = spec.stride as usize;
+    let o = spec.o_side as usize;
+    let groups = w.i_ch_padded / 8;
+    let k2 = k * k;
+
+    let mut out = Tensor::zeros(o, o, w.o_ch);
+    let mut report = TimedReport::default();
+
+    // Atom stream: (oc, y, x, g, j) with j scanning the window row-major —
+    // the Fig 24 five-dimension traversal.
+    let total_words = (w.o_ch * o * o * groups * k2) as u64;
+    let mut next_word: u64 = 0;
+
+    let mut mult = WordPipe::new(MUL_LAT, 1);
+    let mut p_fifo: Fifo<Word> = Fifo::new("P_FIFO", 64);
+    let mut f_fifo: Fifo<Word> = Fifo::new("F_FIFO", 64);
+
+    // PSUM stage state: 8 lanes lockstep accumulating k2 product words.
+    let mut psum_acc: Word = [F16::ZERO; 8];
+    let mut psum_count = 0usize;
+    let mut psum_next_at: u64 = 0;
+    let mut psum_pipe = WordPipe::new(ADD_LAT, ADD_LAT); // result delay
+
+    // FSUM stage: per output pixel, 8 sequential adds per group word.
+    let mut fsum_groups_done = 0usize;
+    let mut fsum_out_idx: u64 = 0; // output element index (oc,y,x) flattened
+    let mut fsum_acc = F16::ZERO;
+    let mut fsum_busy_until: u64 = 0;
+
+    let word_coords = |idx: u64| -> (usize, usize, usize, usize, usize) {
+        let mut r = idx as usize;
+        let j = r % k2;
+        r /= k2;
+        let g = r % groups;
+        r /= groups;
+        let x = r % o;
+        r /= o;
+        let y = r % o;
+        r /= o;
+        (r, y, x, g, j) // (oc, y, x, g, j)
+    };
+
+    let mut t: u64 = 0;
+    let outputs_total = (w.o_ch * o * o) as u64;
+    let max_cycles = 64 * total_words + 10_000;
+    while report.outputs < outputs_total {
+        // ---- MULT stage: issue one 8-lane product word per cycle while
+        // P_FIFO has headroom for everything in flight.
+        if next_word < total_words
+            && mult.can_issue(t)
+            && p_fifo.space() > mult.q.len()
+        {
+            let (oc, y, x, g, j) = word_coords(next_word);
+            let (ky, kx) = (j / k, j % k);
+            let mut prod = [F16::ZERO; 8];
+            for (l, p) in prod.iter_mut().enumerate() {
+                let c = g * 8 + l;
+                let d = input.get(y * s + ky, x * s + kx, c);
+                let wv = w.get(oc, ky, kx, c);
+                *p = d.mul(wv);
+            }
+            mult.issue(t, prod);
+            next_word += 1;
+            report.mult_issues += 1;
+        }
+        if let Some(prod) = mult.retire(t) {
+            p_fifo.push_checked(prod);
+            report.p_fifo_high = report.p_fifo_high.max(p_fifo.len());
+        }
+
+        // ---- PSUM stage: accumulate k2 words per group, one add per
+        // ADD_LAT cycles per lane (8 lanes in parallel).
+        if t >= psum_next_at && !p_fifo.is_empty() && f_fifo.space() > psum_pipe.q.len() {
+            let prod = p_fifo.pop().unwrap();
+            for l in 0..8 {
+                psum_acc[l] = psum_acc[l].add(prod[l]);
+            }
+            psum_count += 1;
+            psum_next_at = t + ADD_LAT;
+            if psum_count == k2 {
+                psum_pipe.issue(t, psum_acc);
+                psum_acc = [F16::ZERO; 8];
+                psum_count = 0;
+            }
+        }
+        if let Some(word) = psum_pipe.retire(t) {
+            f_fifo.push_checked(word);
+            report.psum_words += 1;
+            report.f_fifo_high = report.f_fifo_high.max(f_fifo.len());
+        }
+
+        // ---- FSUM stage: 8 sequential adds per group word (2 cycles
+        // each), bias as the pixel's initial value, ReLU on the final
+        // group of each pixel.
+        if t >= fsum_busy_until && !f_fifo.is_empty() {
+            let word = f_fifo.pop().unwrap();
+            if fsum_groups_done == 0 {
+                let oc = (fsum_out_idx as usize) / (o * o);
+                fsum_acc = w.bias[oc];
+            }
+            for v in word {
+                fsum_acc = fsum_acc.add(v);
+            }
+            fsum_busy_until = t + 8 * ADD_LAT;
+            fsum_groups_done += 1;
+            if fsum_groups_done == groups {
+                let idx = fsum_out_idx as usize;
+                let oc = idx / (o * o);
+                let y = (idx / o) % o;
+                let x = idx % o;
+                let v = if spec.skip_relu { fsum_acc } else { fsum_acc.relu() };
+                out.set(y, x, oc, v);
+                fsum_groups_done = 0;
+                fsum_out_idx += 1;
+                report.outputs += 1;
+            }
+        }
+
+        if let Some(tr) = trace.as_deref_mut() {
+            let mult_issued_this_cycle = mult.last_issue == Some(t);
+            let fsum_wrote = report.outputs > 0 && fsum_busy_until == t + 8 * ADD_LAT;
+            tr.sample([
+                true,
+                mult_issued_this_cycle,
+                !p_fifo.is_empty(),
+                psum_count > 0,
+                !f_fifo.is_empty(),
+                t < fsum_busy_until,
+                fsum_wrote,
+            ]);
+        }
+        t += 1;
+        assert!(t < max_cycles, "timed conv stalled at cycle {t} ({})", spec.name);
+    }
+    report.cycles = t + ADD_LAT; // final result write settles
+    report.mult_utilization = report.mult_issues as f64 / report.cycles as f64;
+    (out, report)
+}
+
+/// Cycle-accurate max-pooling (Fig 26): one comparator chain per lane,
+/// new comparison every CMP_LAT cycles, running max initial value 0.
+pub fn simulate_maxpool(spec: &LayerSpec, input: &TensorF16) -> (TensorF16, TimedReport) {
+    assert_eq!(spec.op, OpType::MaxPool);
+    let (k, s, o) = (spec.kernel as usize, spec.stride as usize, spec.o_side as usize);
+    let groups = input.c.div_ceil(8);
+    let mut out = Tensor::zeros(o, o, input.c);
+    let mut report = TimedReport::default();
+
+    let mut t: u64 = 0;
+    for y in 0..o {
+        for x in 0..o {
+            for g in 0..groups {
+                let mut best = [F16::ZERO; 8];
+                let mut elems = 0u64;
+                for ky in 0..k {
+                    let iy = y * s + ky;
+                    if iy >= input.h {
+                        break;
+                    }
+                    for kx in 0..k {
+                        let ix = x * s + kx;
+                        if ix >= input.w {
+                            break;
+                        }
+                        for (l, b) in best.iter_mut().enumerate() {
+                            let c = g * 8 + l;
+                            if c < input.c {
+                                let d = input.get(iy, ix, c);
+                                if d.gt(*b) {
+                                    *b = d;
+                                }
+                            }
+                        }
+                        elems += 1;
+                    }
+                }
+                // BRAM feeds 1 word/cycle but the comparator accepts one
+                // every CMP_LAT cycles; + latency to drain the last one.
+                t += elems * CMP_LAT + CMP_LAT;
+                report.mult_issues += elems;
+                for (l, b) in best.iter().enumerate() {
+                    let c = g * 8 + l;
+                    if c < input.c {
+                        out.set(y, x, c, *b);
+                    }
+                }
+                report.outputs += 8.min(input.c - g * 8) as u64;
+            }
+        }
+    }
+    report.cycles = t;
+    report.mult_utilization = 0.0;
+    (out, report)
+}
+
+/// Cycle-accurate average pooling (Fig 27): accumulate then divide
+/// (divider latency 6, pipelined across channel groups).
+pub fn simulate_avgpool(spec: &LayerSpec, input: &TensorF16) -> (TensorF16, TimedReport) {
+    assert_eq!(spec.op, OpType::AvgPool);
+    let (k, s, o) = (spec.kernel as usize, spec.stride as usize, spec.o_side as usize);
+    let groups = input.c.div_ceil(8);
+    let divisor = F16::from_u32(spec.kernel_size());
+    let mut out = Tensor::zeros(o, o, input.c);
+    let mut report = TimedReport::default();
+
+    let mut t: u64 = 0;
+    for y in 0..o {
+        for x in 0..o {
+            for g in 0..groups {
+                let mut acc = [F16::ZERO; 8];
+                let mut elems = 0u64;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        for (l, a) in acc.iter_mut().enumerate() {
+                            let c = g * 8 + l;
+                            if c < input.c {
+                                *a = a.add(input.get(y * s + ky, x * s + kx, c));
+                            }
+                        }
+                        elems += 1;
+                    }
+                }
+                // adds at II=2, then one divider pass (6 cycles).
+                t += elems * ADD_LAT + DIV_LAT;
+                for (l, a) in acc.iter().enumerate() {
+                    let c = g * 8 + l;
+                    if c < input.c {
+                        out.set(y, x, c, a.div(divisor));
+                    }
+                }
+                report.outputs += 8.min(input.c - g * 8) as u64;
+                report.mult_issues += elems;
+            }
+        }
+    }
+    report.cycles = t;
+    (out, report)
+}
+
+/// Closed-form cycle estimate for a layer — derived from the FSM
+/// structure above and validated against the cycle-accurate simulation
+/// (see tests). Used by [`crate::perfmodel`] for full-network totals
+/// where cycle-stepping half a billion cycles would be pointless.
+pub fn estimate_cycles(spec: &LayerSpec) -> u64 {
+    let k2 = spec.kernel_size() as u64;
+    let o2 = spec.o_side as u64 * spec.o_side as u64;
+    let groups = (spec.i_ch as u64).div_ceil(8);
+    match spec.op {
+        // Steady state: psum consumes a product word every 2 cycles
+        // (2·k² per group word) while fsum needs 16 cycles per group
+        // word; the slower one bounds throughput.
+        OpType::ConvRelu => {
+            let per_word = (2 * k2).max(8 * ADD_LAT);
+            o2 * spec.o_ch as u64 * groups * per_word + MUL_LAT + 2 * ADD_LAT
+        }
+        OpType::MaxPool => {
+            // Interior windows are k², edge windows clipped; upper bound
+            // with full windows (exact for non-overhanging geometry).
+            o2 * groups * (k2 * CMP_LAT + CMP_LAT)
+        }
+        OpType::AvgPool => o2 * groups * (k2 * ADD_LAT + DIV_LAT),
+        OpType::Idle => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::functional;
+    use crate::net::tensor::ConvWeights;
+    use crate::prop::Rng;
+
+    fn rand_input(rng: &mut Rng, side: usize, c: usize) -> TensorF16 {
+        let v: Vec<F16> = (0..side * side * c).map(|_| F16::from_f32(rng.normal(1.0))).collect();
+        Tensor::from_vec(side, side, c, v)
+    }
+
+    #[test]
+    fn timed_conv_matches_functional_bit_exact() {
+        let mut rng = Rng::new(0x71AED);
+        for (k, s, pad, side, ic, oc) in
+            [(1u32, 1u32, 0u32, 5usize, 8usize, 3usize), (3, 1, 1, 6, 16, 4), (3, 2, 0, 9, 8, 2)]
+        {
+            let spec = LayerSpec::conv("t", k, s, pad, side as u32, ic as u32, oc as u32, 0);
+            let mut w = ConvWeights::zeros(oc, k as usize, ic);
+            for v in w.data.iter_mut() {
+                *v = rng.normal(0.3);
+            }
+            for b in w.bias.iter_mut() {
+                *b = rng.normal(0.1);
+            }
+            let wf = ConvWeightsF16::from_f32(&w);
+            let raw = rand_input(&mut rng, side, ic);
+            let padded = raw.to_f32().pad_surface(pad as usize).to_f16();
+            let f = functional::conv(&spec, &padded, &wf);
+            let (tm, rep) = simulate_conv(&spec, &padded, &wf);
+            assert_eq!(f.data.len(), tm.data.len());
+            for (a, b) in f.data.iter().zip(&tm.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "k={k} s={s}");
+            }
+            assert!(rep.cycles > 0 && rep.outputs == (spec.o_side * spec.o_side * spec.o_ch) as u64);
+        }
+    }
+
+    #[test]
+    fn timed_pools_match_functional() {
+        let mut rng = Rng::new(0xBEEF);
+        let inp = rand_input(&mut rng, 8, 16);
+        let mspec = LayerSpec::maxpool("m", 3, 2, 8, 16);
+        let (tm, _) = simulate_maxpool(&mspec, &inp);
+        let fm = functional::maxpool(&mspec, &inp);
+        assert_eq!(tm.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   fm.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+
+        let aspec = LayerSpec::avgpool("a", 4, 4, 8, 16);
+        let (ta, _) = simulate_avgpool(&aspec, &inp);
+        let fa = functional::avgpool(&aspec, &inp);
+        assert_eq!(ta.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   fa.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn trace_captures_pipeline_signals() {
+        let mut rng = Rng::new(0x7ACE);
+        let spec = LayerSpec::conv("t", 3, 1, 0, 5, 8, 2, 0);
+        let mut w = ConvWeights::zeros(2, 3, 8);
+        for v in w.data.iter_mut() {
+            *v = rng.normal(0.3);
+        }
+        let wf = ConvWeightsF16::from_f32(&w);
+        let inp = rand_input(&mut rng, 5, 8);
+        let mut trace = Trace::new(128);
+        let (_, rep) = simulate_conv_traced(&spec, &inp, &wf, Some(&mut trace));
+        // All signals sampled the same number of cycles, capped at limit.
+        let n = trace.signals[0].1.len();
+        assert!(n > 0 && n <= 128);
+        assert!(trace.signals.iter().all(|(_, v)| v.len() == n));
+        // cmac_enable is high throughout; mult issues on cycle 0; the
+        // psum stage wakes only after the 6-cycle multiplier latency.
+        let by_name: std::collections::HashMap<_, _> =
+            trace.signals.iter().map(|(k, v)| (*k, v.clone())).collect();
+        assert!(by_name["cmac_enable"].iter().all(|&v| v));
+        assert!(by_name["mult_issue"][0]);
+        assert!(!by_name["psum_accumulating"][..6].iter().any(|&v| v));
+        assert!(by_name["psum_accumulating"][6..20].iter().any(|&v| v));
+        // Render produces one line per signal.
+        assert_eq!(trace.render().lines().count(), 7);
+        assert!(rep.cycles > 0);
+    }
+
+    #[test]
+    fn closed_form_tracks_simulation() {
+        let mut rng = Rng::new(0xCAFE);
+        for (k, s, pad, side, ic, oc) in
+            [(1u32, 1u32, 0u32, 6usize, 16usize, 4usize), (3, 1, 1, 6, 8, 4), (3, 2, 0, 9, 8, 2)]
+        {
+            let spec = LayerSpec::conv("t", k, s, pad, side as u32, ic as u32, oc as u32, 0);
+            let mut w = ConvWeights::zeros(oc, k as usize, ic);
+            for v in w.data.iter_mut() {
+                *v = rng.normal(0.3);
+            }
+            let wf = ConvWeightsF16::from_f32(&w);
+            let raw = rand_input(&mut rng, side, ic);
+            let padded = raw.to_f32().pad_surface(pad as usize).to_f16();
+            let (_, rep) = simulate_conv(&spec, &padded, &wf);
+            let est = estimate_cycles(&spec);
+            let ratio = rep.cycles as f64 / est as f64;
+            assert!(
+                (0.8..1.25).contains(&ratio),
+                "k={k}: sim {} vs estimate {est} (ratio {ratio:.3})",
+                rep.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn accumulator_ii_makes_engine_slower_than_mac_bound() {
+        // The whole point of §4.2's FIFO discussion: with II=2 accumulators
+        // the engine cannot reach 8 MACs/cycle.
+        let spec = LayerSpec::conv("t", 3, 1, 0, 8, 8, 4, 0);
+        let est = estimate_cycles(&spec);
+        let mac_bound = spec.macs().div_ceil(8);
+        assert!(est >= 2 * mac_bound, "est {est} macs/8 {mac_bound}");
+    }
+
+    #[test]
+    fn mult_utilization_below_half_with_ii2_psum() {
+        let mut rng = Rng::new(1);
+        let spec = LayerSpec::conv("t", 3, 1, 0, 8, 8, 4, 0);
+        let mut w = ConvWeights::zeros(4, 3, 8);
+        for v in w.data.iter_mut() {
+            *v = rng.normal(0.3);
+        }
+        let wf = ConvWeightsF16::from_f32(&w);
+        let inp = rand_input(&mut rng, 8, 8);
+        let (_, rep) = simulate_conv(&spec, &inp, &wf);
+        assert!(rep.mult_utilization <= 0.55, "{}", rep.mult_utilization);
+        assert!(rep.p_fifo_high <= 64 && rep.f_fifo_high <= 64);
+    }
+}

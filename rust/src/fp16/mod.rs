@@ -1,0 +1,616 @@
+//! IEEE 754 binary16 ("FP16") arithmetic — the numeric substrate of the
+//! FusionAccel engine.
+//!
+//! The paper's RTL computes everything in FP16 (Xilinx Floating-Point
+//! Operator 5.0 IP: multiplier, adder/accumulator, comparator, divider,
+//! int→FP converter; §4). The simulator must therefore round exactly like
+//! the hardware does: every primitive operation produces the correctly
+//! rounded (round-to-nearest-even) binary16 result.
+//!
+//! Two implementations live here:
+//!
+//! * the **fast path** in this module — operate in `f64` and round once.
+//!   For binary16 this is *provably* correctly rounded for `+ - × ÷`:
+//!   - add/sub: both operands have ≤11-bit significands and the exponent
+//!     range spans only 40 binades, so the exact sum fits in ≤51 bits —
+//!     exact in `f64`, then a single rounding to 11 bits.
+//!   - mul: 11 × 11 = 22-bit product — exact in `f64`.
+//!   - div: if the true quotient p/q is not exactly a 12-bit dyadic value,
+//!     it is at distance ≥ 1/(q·2¹²) ≥ 2⁻²³ (relative) from every such
+//!     value, while the `f64` rounding moves it by ≤ 2⁻⁵³ — the `f64`
+//!     result can therefore never land on a binary16 tie it was not
+//!     already on, so double rounding never occurs.
+//! * the **bit-level softfloat** in [`softfloat`] — models the RTL units
+//!   directly (guard/round/sticky, significand alignment). Used as the
+//!   cross-check oracle in tests and by the timed hardware models.
+//!
+//! `F16` is a transparent wrapper over the raw `u16` bit pattern so that
+//! BRAM/FIFO models can move it as plain bits.
+
+pub mod softfloat;
+
+/// A binary16 value, stored as its raw bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct F16(pub u16);
+
+pub const SIGN_MASK: u16 = 0x8000;
+pub const EXP_MASK: u16 = 0x7C00;
+pub const FRAC_MASK: u16 = 0x03FF;
+/// Exponent bias of binary16.
+pub const BIAS: i32 = 15;
+
+impl F16 {
+    pub const ZERO: F16 = F16(0x0000);
+    pub const NEG_ZERO: F16 = F16(0x8000);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    /// Canonical quiet NaN (matches what the Xilinx FP 5.0 IP emits).
+    pub const NAN: F16 = F16(0x7E00);
+    /// Largest finite value, 65504.
+    pub const MAX: F16 = F16(0x7BFF);
+    /// Smallest positive normal value, 2^-14.
+    pub const MIN_POSITIVE: F16 = F16(0x0400);
+    /// Smallest positive subnormal value, 2^-24.
+    pub const MIN_SUBNORMAL: F16 = F16(0x0001);
+
+    #[inline]
+    pub fn from_bits(bits: u16) -> F16 {
+        F16(bits)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & EXP_MASK) == EXP_MASK && (self.0 & FRAC_MASK) != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & !SIGN_MASK) == EXP_MASK
+    }
+
+    #[inline]
+    pub fn is_finite(self) -> bool {
+        (self.0 & EXP_MASK) != EXP_MASK
+    }
+
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        (self.0 & !SIGN_MASK) == 0
+    }
+
+    #[inline]
+    pub fn is_subnormal(self) -> bool {
+        (self.0 & EXP_MASK) == 0 && (self.0 & FRAC_MASK) != 0
+    }
+
+    #[inline]
+    pub fn is_sign_negative(self) -> bool {
+        (self.0 & SIGN_MASK) != 0
+    }
+
+    /// Sign-flip. Exact (bit operation) like the RTL's sign-bit toggle.
+    #[inline]
+    pub fn neg(self) -> F16 {
+        F16(self.0 ^ SIGN_MASK)
+    }
+
+    /// Absolute value (clears the sign bit).
+    #[inline]
+    pub fn abs(self) -> F16 {
+        F16(self.0 & !SIGN_MASK)
+    }
+
+    /// Exact widening conversion binary16 → binary32.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        let bits = self.0 as u32;
+        let sign = (bits & 0x8000) << 16;
+        let exp = (bits >> 10) & 0x1F;
+        let frac = bits & 0x3FF;
+        let out = if exp == 0 {
+            if frac == 0 {
+                sign // signed zero
+            } else {
+                // Subnormal: value = frac * 2^-24. Normalize into f32.
+                let shift = frac.leading_zeros() - 21; // make bit 10 the MSB
+                let frac = (frac << shift) & 0x3FF;
+                let exp32 = 127 - 15 - shift + 1;
+                sign | (exp32 << 23) | (frac << 13)
+            }
+        } else if exp == 0x1F {
+            // Inf / NaN — preserve payload.
+            sign | 0x7F80_0000 | (frac << 13)
+        } else {
+            sign | ((exp + 127 - 15) << 23) | (frac << 13)
+        };
+        f32::from_bits(out)
+    }
+
+    /// Exact widening conversion binary16 → binary64.
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        self.to_f32() as f64
+    }
+
+    /// Round a binary32 value to binary16 (round-to-nearest-even).
+    ///
+    /// NOTE: this is a *single* rounding of the given `f32`; it is only a
+    /// correctly rounded f16 operation result when the `f32` itself is
+    /// exact (see the module docs for when that holds).
+    #[inline]
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let frac = bits & 0x7F_FFFF;
+
+        if exp == 0xFF {
+            // Inf or NaN.
+            return if frac == 0 {
+                F16(sign | EXP_MASK)
+            } else {
+                F16(sign | 0x7E00 | ((frac >> 13) as u16 & FRAC_MASK))
+            };
+        }
+        // Unbiased exponent of the f32 value (f32 subnormals are below the
+        // f16 subnormal range entirely — they round to zero via the
+        // shift-out path below).
+        let e = exp - 127;
+        if e > 15 {
+            return F16(sign | EXP_MASK); // overflow → ±Inf
+        }
+        // Significand with hidden bit, Q23.
+        let sig = if exp == 0 { frac } else { frac | 0x80_0000 };
+        if e >= -14 {
+            // Normal f16 range: keep 10 fraction bits, round on bit 12.
+            let shifted = sig >> 13;
+            let rem = sig & 0x1FFF;
+            let half = 0x1000u32;
+            let mut out = ((e + 15) as u32) << 10 | (shifted & 0x3FF);
+            if rem > half || (rem == half && (shifted & 1) != 0) {
+                out += 1; // may carry into exponent — that is correct
+                          // (1.111..11 rounds up to 2.0 · 2^e)
+            }
+            if out >= 0x7C00 {
+                return F16(sign | EXP_MASK);
+            }
+            return F16(sign | out as u16);
+        }
+        // Subnormal f16 range: shift the significand right so the result
+        // is frac · 2^-24, round on the shifted-out bits.
+        let shift = (-14 - e) as u32 + 13;
+        if shift >= 32 || (sig >> shift.min(31)) == 0 && shift > 24 + 13 {
+            // Entirely shifted out (incl. all f32 subnormals): round to 0
+            // unless exactly half of the smallest subnormal... which a
+            // finite f32 this small can't reach the tie for — plain 0.
+            if shift >= 38 {
+                return F16(sign);
+            }
+        }
+        if shift >= 38 {
+            return F16(sign);
+        }
+        let shifted = (sig >> shift) as u16;
+        let rem_mask = (1u32 << shift) - 1;
+        let rem = sig & rem_mask;
+        let half = 1u32 << (shift - 1);
+        let mut out = shifted;
+        if rem > half || (rem == half && (shifted & 1) != 0) {
+            out += 1;
+        }
+        F16(sign | out)
+    }
+
+    /// Round a binary64 value to binary16 (round-to-nearest-even), with a
+    /// single rounding. This is the fast-path primitive: do the arithmetic
+    /// in `f64`, round once here.
+    #[inline]
+    pub fn from_f64(x: f64) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 48) & 0x8000) as u16;
+        let exp = ((bits >> 52) & 0x7FF) as i32;
+        let frac = bits & 0xF_FFFF_FFFF_FFFF;
+
+        if exp == 0x7FF {
+            return if frac == 0 {
+                F16(sign | EXP_MASK)
+            } else {
+                F16(sign | 0x7E00 | ((frac >> 42) as u16 & FRAC_MASK))
+            };
+        }
+        let e = exp - 1023;
+        if e > 15 {
+            return F16(sign | EXP_MASK);
+        }
+        let sig = if exp == 0 { frac } else { frac | 0x10_0000_0000_0000 };
+        if e >= -14 {
+            let shifted = (sig >> 42) as u32;
+            let rem = sig & 0x3FF_FFFF_FFFF;
+            let half = 0x200_0000_0000u64;
+            let mut out = ((e + 15) as u32) << 10 | (shifted & 0x3FF);
+            if rem > half || (rem == half && (shifted & 1) != 0) {
+                out += 1;
+            }
+            if out >= 0x7C00 {
+                return F16(sign | EXP_MASK);
+            }
+            return F16(sign | out as u16);
+        }
+        let shift = (-14 - e) as u64 + 42;
+        if shift >= 64 || shift > 42 + 25 {
+            return F16(sign);
+        }
+        let shifted = (sig >> shift) as u16;
+        let half = 1u64 << (shift - 1);
+        let rem = sig & ((1u64 << shift) - 1);
+        let mut out = shifted;
+        if rem > half || (rem == half && (shifted & 1) != 0) {
+            out += 1;
+        }
+        F16(sign | out)
+    }
+
+    /// `self + rhs`, correctly rounded (fast path; see module docs).
+    #[inline]
+    pub fn add(self, rhs: F16) -> F16 {
+        F16::from_f64(self.to_f64() + rhs.to_f64())
+    }
+
+    /// `self - rhs`, correctly rounded.
+    #[inline]
+    pub fn sub(self, rhs: F16) -> F16 {
+        F16::from_f64(self.to_f64() - rhs.to_f64())
+    }
+
+    /// `self * rhs`, correctly rounded.
+    #[inline]
+    pub fn mul(self, rhs: F16) -> F16 {
+        F16::from_f64(self.to_f64() * rhs.to_f64())
+    }
+
+    /// `self / rhs`, correctly rounded (double rounding impossible — see
+    /// the module docs for the argument).
+    #[inline]
+    pub fn div(self, rhs: F16) -> F16 {
+        F16::from_f64(self.to_f64() / rhs.to_f64())
+    }
+
+    /// IEEE "greater than" — what the RTL comparator in the max-pooling
+    /// unit computes (Fig 26: `a_cmp > b_cmp`). NaN compares false.
+    #[inline]
+    pub fn gt(self, rhs: F16) -> bool {
+        self.to_f32() > rhs.to_f32()
+    }
+
+    #[inline]
+    pub fn lt(self, rhs: F16) -> bool {
+        self.to_f32() < rhs.to_f32()
+    }
+
+    /// Total ordering for sorting networks (bitonic sort ablation):
+    /// -NaN < -Inf < ... < -0 < +0 < ... < +Inf < +NaN.
+    #[inline]
+    pub fn total_cmp_key(self) -> i32 {
+        let b = self.0 as i32;
+        if b & 0x8000 != 0 {
+            0x8000 - b
+        } else {
+            b + 0x8000
+        }
+    }
+
+    /// Int→FP conversion, as done by the RTL int-FP converter feeding the
+    /// average-pooling divider (`b_div` = kernel_size, e.g. 169 → 0x5948).
+    #[inline]
+    pub fn from_u32(v: u32) -> F16 {
+        F16::from_f64(v as f64)
+    }
+
+    /// ReLU: max(x, 0). In hardware this only inspects the sign bit (§3.2);
+    /// note this maps -0.0 and NaN-with-sign to +0.0 exactly like a
+    /// sign-bit test does.
+    #[inline]
+    pub fn relu(self) -> F16 {
+        if self.0 & SIGN_MASK != 0 {
+            F16::ZERO
+        } else {
+            self
+        }
+    }
+
+    /// Units-in-last-place distance between two finite values (saturating;
+    /// for test tolerances).
+    pub fn ulp_distance(self, other: F16) -> u32 {
+        (self.total_cmp_key() - other.total_cmp_key()).unsigned_abs()
+    }
+}
+
+impl std::fmt::Debug for F16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "F16({:#06x} = {})", self.0, self.to_f32())
+    }
+}
+
+impl std::fmt::Display for F16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+/// Round an `f64` to the nearest binary16 value and return it **as an
+/// `f64`** — the §Perf hot-path primitive. Semantically identical to
+/// `F16::from_f64(x).to_f64()` (property-tested), but the common case
+/// (normal f16 range) is 6 integer ops on the f64 bit pattern instead of
+/// a narrow→widen round trip:
+///
+/// round-to-nearest-even at bit 42 of the f64 mantissa = add the
+/// carry-propagating constant `0x1FF_FFFF_FFFF + lsb` and clear the low
+/// 42 bits. Overflow past 65504, subnormals and NaN/Inf take the slow
+/// path.
+#[inline]
+pub fn round16_64(x: f64) -> f64 {
+    const LOW: u64 = 0x3FF_FFFF_FFFF; // 42 mantissa bits below f16 lsb
+    let bits = x.to_bits();
+    let exp = ((bits >> 52) & 0x7FF) as i32 - 1023;
+    // Fast path: strictly inside the normal f16 range, where RNE on the
+    // f64 mantissa cannot overflow past the exponent field's validity.
+    if (-14..15).contains(&exp) {
+        let lsb = (bits >> 42) & 1;
+        let rounded = (bits.wrapping_add(LOW / 2 + lsb)) & !LOW;
+        return f64::from_bits(rounded);
+    }
+    // exp == 15 may overflow to Inf; everything else is subnormal /
+    // zero / Inf / NaN — delegate to the exact scalar path.
+    F16::from_f64(x).to_f64()
+}
+
+/// Fused multiply-round: `round16(a · b)` over pre-widened f16 values.
+#[inline]
+pub fn mul16_64(a: f64, b: f64) -> f64 {
+    round16_64(a * b)
+}
+
+/// Fused add-round: `round16(a + b)` over pre-widened f16 values.
+#[inline]
+pub fn add16_64(a: f64, b: f64) -> f64 {
+    round16_64(a + b)
+}
+
+/// Convert a slice of f32 to FP16 bits (single rounding each).
+pub fn quantize_f32(xs: &[f32]) -> Vec<F16> {
+    xs.iter().map(|&x| F16::from_f32(x)).collect()
+}
+
+/// Widen a slice of FP16 to f32.
+pub fn widen_f32(xs: &[F16]) -> Vec<f32> {
+    xs.iter().map(|x| x.to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::Rng;
+
+    fn f16s(bits: u16) -> F16 {
+        F16::from_bits(bits)
+    }
+
+    #[test]
+    fn constants_roundtrip() {
+        assert_eq!(F16::ONE.to_f32(), 1.0);
+        assert_eq!(F16::ZERO.to_f32(), 0.0);
+        assert_eq!(F16::MAX.to_f32(), 65504.0);
+        assert_eq!(F16::MIN_POSITIVE.to_f32(), 2f32.powi(-14));
+        assert_eq!(F16::MIN_SUBNORMAL.to_f32(), 2f32.powi(-24));
+        assert!(F16::NAN.is_nan());
+        assert!(F16::INFINITY.is_infinite());
+        assert!(F16::NEG_INFINITY.is_infinite());
+        assert!(F16::NEG_INFINITY.is_sign_negative());
+    }
+
+    #[test]
+    fn exhaustive_f32_roundtrip() {
+        // Every one of the 65536 bit patterns must survive a widen/narrow
+        // round-trip (NaN payloads may canonicalize but must stay NaN).
+        for bits in 0..=u16::MAX {
+            let h = f16s(bits);
+            let rt = F16::from_f32(h.to_f32());
+            if h.is_nan() {
+                assert!(rt.is_nan(), "bits {bits:#06x}");
+            } else {
+                assert_eq!(rt.to_bits(), bits, "bits {bits:#06x}");
+            }
+            let rt64 = F16::from_f64(h.to_f64());
+            if h.is_nan() {
+                assert!(rt64.is_nan());
+            } else {
+                assert_eq!(rt64.to_bits(), bits, "f64 path bits {bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        // 0x5948 = 169.0 — the paper's Fig 27 int-FP converted kernel_size
+        // for the 13x13 average pool.
+        assert_eq!(F16::from_u32(169).to_bits(), 0x5948);
+        // 0xac88 appears in Fig 25 as a bias value: -0.0708..
+        assert!((f16s(0xac88).to_f32() - -0.070801).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rounding_ties_to_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10 → even (1.0)
+        assert_eq!(F16::from_f64(1.0 + 2f64.powi(-11)).to_bits(), F16::ONE.to_bits());
+        // 1 + 3·2^-11 is halfway between 1+2^-10 and 1+2^-9 → even (1+2^-9)
+        assert_eq!(F16::from_f64(1.0 + 3.0 * 2f64.powi(-11)).to_bits(), 0x3C02);
+        // Just above the halfway point rounds up.
+        assert_eq!(F16::from_f64(1.0 + 2f64.powi(-11) + 2f64.powi(-30)).to_bits(), 0x3C01);
+    }
+
+    #[test]
+    fn overflow_and_underflow() {
+        assert_eq!(F16::from_f64(65520.0), F16::INFINITY); // > halfway to 65536
+        assert_eq!(F16::from_f64(65504.0), F16::MAX);
+        assert_eq!(F16::from_f64(-65520.0), F16::NEG_INFINITY);
+        // Halfway between 0 and the smallest subnormal rounds to even (0).
+        assert_eq!(F16::from_f64(2f64.powi(-25)).to_bits(), 0);
+        assert_eq!(F16::from_f64(2f64.powi(-25) * 1.5).to_bits(), 1);
+        // f32 subnormals collapse to zero.
+        assert_eq!(F16::from_f32(f32::from_bits(1)).to_bits(), 0);
+    }
+
+    #[test]
+    fn arithmetic_specials() {
+        assert!(F16::INFINITY.sub(F16::INFINITY).is_nan());
+        assert!(F16::ZERO.mul(F16::INFINITY).is_nan());
+        assert!(F16::ZERO.div(F16::ZERO).is_nan());
+        assert_eq!(F16::ONE.div(F16::ZERO), F16::INFINITY);
+        assert_eq!(F16::ONE.neg().div(F16::ZERO), F16::NEG_INFINITY);
+        assert_eq!(F16::MAX.add(F16::MAX), F16::INFINITY);
+        assert!(!F16::NAN.gt(F16::ZERO));
+        assert!(!F16::ZERO.gt(F16::NAN));
+    }
+
+    #[test]
+    fn relu_is_sign_bit_test() {
+        assert_eq!(f16s(0x8001).relu(), F16::ZERO); // -subnormal → +0
+        assert_eq!(F16::NEG_ZERO.relu(), F16::ZERO);
+        assert_eq!(f16s(0x3C00).relu(), F16::ONE);
+        // A negative NaN goes to +0 under a pure sign-bit test; that is
+        // exactly what the RTL does and we preserve it.
+        assert_eq!(f16s(0xFE00).relu(), F16::ZERO);
+    }
+
+    #[test]
+    fn fast_ops_match_softfloat_random() {
+        // Cross-check the fast (via-f64) path against the bit-level
+        // softfloat model on a large random sample incl. special values.
+        let mut rng = Rng::new(0xF16F16);
+        let mut checked = 0u64;
+        for _ in 0..200_000 {
+            let a = f16s(rng.next_u32() as u16);
+            let b = f16s(rng.next_u32() as u16);
+            let cases = [
+                (a.add(b), softfloat::add(a, b), "add"),
+                (a.sub(b), softfloat::sub(a, b), "sub"),
+                (a.mul(b), softfloat::mul(a, b), "mul"),
+                (a.div(b), softfloat::div(a, b), "div"),
+            ];
+            for (fast, slow, op) in cases {
+                if fast.is_nan() || slow.is_nan() {
+                    assert_eq!(fast.is_nan(), slow.is_nan(), "{op} {a:?} {b:?}");
+                } else {
+                    assert_eq!(fast.to_bits(), slow.to_bits(), "{op} {a:?} {b:?}");
+                }
+                checked += 1;
+            }
+        }
+        assert!(checked >= 800_000);
+    }
+
+    #[test]
+    fn fast_ops_match_softfloat_edges() {
+        let edges: Vec<F16> = [
+            0x0000, 0x8000, 0x0001, 0x8001, 0x03FF, 0x0400, 0x7BFF, 0x7C00,
+            0xFC00, 0x7E00, 0x3C00, 0xBC00, 0x3C01, 0x5948, 0xac88, 0x0002,
+            0x8002, 0x7BFE, 0xFBFF, 0x4000, 0x4248,
+        ]
+        .iter()
+        .map(|&b| f16s(b))
+        .collect();
+        for &a in &edges {
+            for &b in &edges {
+                for (fast, slow, op) in [
+                    (a.add(b), softfloat::add(a, b), "add"),
+                    (a.sub(b), softfloat::sub(a, b), "sub"),
+                    (a.mul(b), softfloat::mul(a, b), "mul"),
+                    (a.div(b), softfloat::div(a, b), "div"),
+                ] {
+                    if fast.is_nan() || slow.is_nan() {
+                        assert_eq!(fast.is_nan(), slow.is_nan(), "{op} {a:?} {b:?}");
+                    } else {
+                        assert_eq!(fast.to_bits(), slow.to_bits(), "{op} {a:?} {b:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn total_cmp_key_orders_all_finite() {
+        let mut rng = Rng::new(42);
+        for _ in 0..50_000 {
+            let a = f16s(rng.next_u32() as u16);
+            let b = f16s(rng.next_u32() as u16);
+            if a.is_nan() || b.is_nan() {
+                continue;
+            }
+            let (fa, fb) = (a.to_f32(), b.to_f32());
+            if fa < fb {
+                assert!(a.total_cmp_key() < b.total_cmp_key(), "{a:?} {b:?}");
+            } else if fa > fb {
+                assert!(a.total_cmp_key() > b.total_cmp_key(), "{a:?} {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn round16_64_matches_from_f64_random() {
+        let mut rng = Rng::new(0x64F16);
+        for _ in 0..300_000 {
+            // Random f64s spanning products/sums of f16 values: take two
+            // random f16s and test x·y and x+y plus raw bit patterns.
+            let a = f16s(rng.next_u32() as u16).to_f64();
+            let b = f16s(rng.next_u32() as u16).to_f64();
+            for x in [a * b, a + b, a - b] {
+                let fast = round16_64(x);
+                let slow = F16::from_f64(x).to_f64();
+                if fast.is_nan() || slow.is_nan() {
+                    assert_eq!(fast.is_nan(), slow.is_nan(), "{x}");
+                } else {
+                    assert_eq!(fast.to_bits(), slow.to_bits(), "x={x} ({:#x})", x.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round16_64_edges() {
+        for x in [
+            0.0f64, -0.0, 65504.0, 65519.999, 65520.0, -65520.0, 1e300, -1e300,
+            f64::INFINITY, f64::NEG_INFINITY, f64::NAN, 2f64.powi(-14), 2f64.powi(-15),
+            2f64.powi(-24), 2f64.powi(-25), 2f64.powi(-25) * 1.5, 6e-8, 1.0 + 2f64.powi(-11),
+            1.0 + 3.0 * 2f64.powi(-11), -1.0 - 2f64.powi(-11), 2047.5, 2048.5, 4095.0,
+        ] {
+            let fast = round16_64(x);
+            let slow = F16::from_f64(x).to_f64();
+            if fast.is_nan() || slow.is_nan() {
+                assert_eq!(fast.is_nan(), slow.is_nan(), "{x}");
+            } else {
+                assert_eq!(fast.to_bits(), slow.to_bits(), "x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn commutativity_property() {
+        let mut rng = Rng::new(7);
+        for _ in 0..50_000 {
+            let a = f16s(rng.next_u32() as u16);
+            let b = f16s(rng.next_u32() as u16);
+            if a.is_nan() || b.is_nan() {
+                continue;
+            }
+            assert_eq!(a.add(b).to_bits(), b.add(a).to_bits());
+            assert_eq!(a.mul(b).to_bits(), b.mul(a).to_bits());
+        }
+    }
+}

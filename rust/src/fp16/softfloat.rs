@@ -1,0 +1,319 @@
+//! Bit-level binary16 softfloat — a direct model of the RTL floating-point
+//! units (Xilinx Floating-Point Operator 5.0 behaviour: IEEE 754, round to
+//! nearest even, no denormal flushing).
+//!
+//! This is the *reference* implementation: it follows the classic
+//! align → operate → normalize → round pipeline with explicit
+//! guard/round/sticky bits, exactly the structure the FPGA IP implements
+//! in stages (which is where the 6-cycle multiplier / 2-cycle adder
+//! latencies of §4.2 come from). The fast via-f64 path in the parent
+//! module is cross-checked against this one in tests.
+
+use super::{F16, BIAS, EXP_MASK, FRAC_MASK, SIGN_MASK};
+
+/// Decoded operand: sign, unbiased exponent, significand with the hidden
+/// bit explicit at bit 10 (zero significand ⇔ value is zero).
+#[derive(Clone, Copy, Debug)]
+struct Unpacked {
+    sign: u16,
+    exp: i32,
+    /// Q10 significand: in [1<<10, 1<<11) for normals (after
+    /// normalization), or the raw fraction for zero.
+    sig: u32,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Class {
+    Nan,
+    Inf(u16),
+    Zero(u16),
+    Finite(Unpacked),
+}
+
+fn classify(x: F16) -> Class {
+    let bits = x.0;
+    let sign = bits & SIGN_MASK;
+    let exp = ((bits & EXP_MASK) >> 10) as i32;
+    let frac = (bits & FRAC_MASK) as u32;
+    if exp == 0x1F {
+        if frac == 0 {
+            Class::Inf(sign)
+        } else {
+            Class::Nan
+        }
+    } else if exp == 0 {
+        if frac == 0 {
+            Class::Zero(sign)
+        } else {
+            // Subnormal: normalize so the MSB sits at bit 10.
+            let shift = frac.leading_zeros() - 21;
+            Class::Finite(Unpacked { sign, exp: 1 - BIAS - shift as i32, sig: frac << shift })
+        }
+    } else {
+        Class::Finite(Unpacked { sign, exp: exp - BIAS, sig: frac | 0x400 })
+    }
+}
+
+/// Round and pack a result. `sig` is a Q(10+3) significand — the value is
+/// `sig · 2^(exp-13)` with the three low bits being guard/round/sticky —
+/// normalized so that bit 13 is the MSB (i.e. `sig ∈ [1<<13, 1<<14)`),
+/// unless the value is subnormal after exponent clamping.
+fn round_pack(sign: u16, mut exp: i32, mut sig: u32) -> F16 {
+    debug_assert!(sig != 0);
+    // Subnormal handling: if the exponent is below the normal range,
+    // shift right, OR-ing shifted-out bits into sticky.
+    if exp < -BIAS + 1 {
+        let shift = (-BIAS + 1 - exp) as u32;
+        if shift >= 27 {
+            sig = 1; // pure sticky
+        } else {
+            let sticky = if sig & ((1 << shift) - 1) != 0 { 1 } else { 0 };
+            sig = (sig >> shift) | sticky;
+        }
+        exp = -BIAS + 1;
+    }
+    // Round to nearest even on the 3 GRS bits.
+    let lsb = (sig >> 3) & 1;
+    let grs = sig & 0x7;
+    let mut frac = sig >> 3;
+    if grs > 4 || (grs == 4 && lsb == 1) {
+        frac += 1;
+        if frac == 1 << 11 {
+            frac >>= 1;
+            exp += 1;
+        }
+    }
+    if frac < (1 << 10) {
+        // Stayed subnormal (or rounded to zero).
+        return F16(sign | frac as u16);
+    }
+    if exp > 15 {
+        return F16(sign | EXP_MASK); // overflow → ±Inf
+    }
+    F16(sign | (((exp + BIAS) as u16) << 10) | (frac as u16 & FRAC_MASK))
+}
+
+/// Bit-level addition (the RTL adder/accumulator unit).
+pub fn add(a: F16, b: F16) -> F16 {
+    add_signed(a, b, 0)
+}
+
+/// Bit-level subtraction.
+pub fn sub(a: F16, b: F16) -> F16 {
+    add_signed(a, b, SIGN_MASK)
+}
+
+fn add_signed(a: F16, b: F16, b_flip: u16) -> F16 {
+    let ca = classify(a);
+    let cb = classify(F16(b.0 ^ b_flip));
+    match (ca, cb) {
+        (Class::Nan, _) | (_, Class::Nan) => F16::NAN,
+        (Class::Inf(sa), Class::Inf(sb)) => {
+            if sa == sb {
+                F16(sa | EXP_MASK)
+            } else {
+                F16::NAN // Inf - Inf
+            }
+        }
+        (Class::Inf(s), _) => F16(s | EXP_MASK),
+        (_, Class::Inf(s)) => F16(s | EXP_MASK),
+        (Class::Zero(sa), Class::Zero(sb)) => {
+            // +0 + -0 = +0 under RNE.
+            F16(sa & sb)
+        }
+        (Class::Zero(_), Class::Finite(_)) => F16(b.0 ^ b_flip),
+        (Class::Finite(_), Class::Zero(_)) => a,
+        (Class::Finite(ua), Class::Finite(ub)) => add_finite(ua, ub),
+    }
+}
+
+fn add_finite(a: Unpacked, b: Unpacked) -> F16 {
+    // Work in Q13 (three extra bits for GRS).
+    let (hi, lo) = if (a.exp, a.sig) >= (b.exp, b.sig) { (a, b) } else { (b, a) };
+    let mut sig_hi = hi.sig << 3;
+    let mut sig_lo = lo.sig << 3;
+    let diff = (hi.exp - lo.exp) as u32;
+    if diff > 0 {
+        if diff >= 14 {
+            // Entirely below guard: only sticky survives.
+            sig_lo = if sig_lo != 0 { 1 } else { 0 };
+        } else {
+            let sticky = if sig_lo & ((1 << diff) - 1) != 0 { 1 } else { 0 };
+            sig_lo = (sig_lo >> diff) | sticky;
+        }
+    }
+    if hi.sign == lo.sign {
+        let mut sum = sig_hi + sig_lo;
+        let mut exp = hi.exp;
+        if sum >= (1 << 14) {
+            let sticky = sum & 1;
+            sum = (sum >> 1) | sticky;
+            exp += 1;
+        }
+        round_pack(hi.sign, exp, sum)
+    } else {
+        // Magnitude subtract (hi ≥ lo in magnitude by construction).
+        let mut dif = sig_hi - sig_lo;
+        if dif == 0 {
+            return F16::ZERO; // exact cancellation → +0 under RNE
+        }
+        let mut exp = hi.exp;
+        // Renormalize: shift left until bit 13 is set (sticky bit cannot
+        // be shifted into a wrong position because when diff ≤ 1 the
+        // subtraction is exact, and when diff ≥ 2 at most one left shift
+        // is needed).
+        let lead = dif.leading_zeros() as i32 - 18; // want MSB at bit 13
+        if lead > 0 {
+            dif <<= lead;
+            exp -= lead;
+        }
+        let _ = &mut sig_hi;
+        round_pack(hi.sign, exp, dif)
+    }
+}
+
+/// Bit-level multiplication (the RTL multiplier unit — DSP48A1-backed).
+pub fn mul(a: F16, b: F16) -> F16 {
+    let (ca, cb) = (classify(a), classify(b));
+    let sign = (a.0 ^ b.0) & SIGN_MASK;
+    match (ca, cb) {
+        (Class::Nan, _) | (_, Class::Nan) => F16::NAN,
+        (Class::Inf(_), Class::Zero(_)) | (Class::Zero(_), Class::Inf(_)) => F16::NAN,
+        (Class::Inf(_), _) | (_, Class::Inf(_)) => F16(sign | EXP_MASK),
+        (Class::Zero(_), _) | (_, Class::Zero(_)) => F16(sign),
+        (Class::Finite(ua), Class::Finite(ub)) => {
+            // 11-bit × 11-bit → 22-bit product; value = prod · 2^(ea+eb-20).
+            let prod = ua.sig * ub.sig; // ≤ (2^11-1)^2 < 2^22
+            let mut exp = ua.exp + ub.exp;
+            // Normalize so MSB is at bit 21 (prod of two [1,2) numbers is
+            // in [1,4)), then keep Q13 with sticky.
+            let mut p = prod;
+            if p >= (1 << 21) {
+                exp += 1;
+            } else {
+                p <<= 1;
+            }
+            // p now has MSB at bit 21; reduce 22 bits → 14 bits (Q13) with
+            // sticky from the low 8 bits.
+            let sticky = if p & 0xFF != 0 { 1 } else { 0 };
+            let sig = (p >> 8) | sticky;
+            round_pack(sign, exp, sig)
+        }
+    }
+}
+
+/// Bit-level division (the RTL divider unit, 6-cycle latency @100 MHz).
+pub fn div(a: F16, b: F16) -> F16 {
+    let (ca, cb) = (classify(a), classify(b));
+    let sign = (a.0 ^ b.0) & SIGN_MASK;
+    match (ca, cb) {
+        (Class::Nan, _) | (_, Class::Nan) => F16::NAN,
+        (Class::Inf(_), Class::Inf(_)) => F16::NAN,
+        (Class::Zero(_), Class::Zero(_)) => F16::NAN,
+        (Class::Inf(_), _) => F16(sign | EXP_MASK),
+        (_, Class::Inf(_)) => F16(sign),
+        (Class::Zero(_), _) => F16(sign),
+        (_, Class::Zero(_)) => F16(sign | EXP_MASK), // x/0 = ±Inf
+        (Class::Finite(ua), Class::Finite(ub)) => {
+            // Long division: numerator shifted so quotient has ≥14 bits.
+            let mut exp = ua.exp - ub.exp;
+            let mut num = (ua.sig as u64) << 16; // Q26
+            let den = ub.sig as u64; // Q10
+            let mut q = (num / den) as u32; // Q16 quotient ∈ (2^15, 2^17)
+            let rem = (num % den) as u32;
+            // Normalize q to have MSB at bit 16.
+            if q >= (1 << 17) {
+                unreachable!()
+            }
+            if q < (1 << 16) {
+                // quotient in [0.5,1): shift left one, recompute remainder
+                // bit by scaling.
+                num <<= 1;
+                q = (num / den) as u32;
+                let rem2 = (num % den) as u32;
+                exp -= 1;
+                let sticky = if rem2 != 0 { 1 } else { 0 };
+                let low_sticky = if q & 0x7 != 0 { 1 } else { 0 };
+                let sig = (q >> 3) | sticky | low_sticky;
+                return round_pack(sign, exp, sig);
+            }
+            // q in [1<<16, 1<<17): Q16 → Q13 with sticky.
+            let sticky = if rem != 0 || q & 0x7 != 0 { 1 } else { 0 };
+            let sig = (q >> 3) | sticky;
+            round_pack(sign, exp, sig)
+        }
+    }
+}
+
+/// Bit-level compare: returns `Some(ordering)` or `None` if unordered
+/// (either operand NaN) — the RTL comparator's "invalid" flag.
+pub fn cmp(a: F16, b: F16) -> Option<std::cmp::Ordering> {
+    use std::cmp::Ordering::*;
+    if a.is_nan() || b.is_nan() {
+        return None;
+    }
+    if a.is_zero() && b.is_zero() {
+        return Some(Equal);
+    }
+    let ka = a.total_cmp_key();
+    let kb = b.total_cmp_key();
+    Some(if ka < kb {
+        Less
+    } else if ka > kb {
+        Greater
+    } else {
+        Equal
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_identities() {
+        let one = F16::ONE;
+        let two = F16::from_f32(2.0);
+        assert_eq!(add(one, one).to_bits(), two.to_bits());
+        assert_eq!(mul(two, two).to_bits(), F16::from_f32(4.0).to_bits());
+        assert_eq!(div(F16::from_f32(4.0), two).to_bits(), two.to_bits());
+        assert_eq!(sub(two, one).to_bits(), one.to_bits());
+    }
+
+    #[test]
+    fn signed_zero_rules() {
+        assert_eq!(add(F16::NEG_ZERO, F16::ZERO).to_bits(), 0);
+        assert_eq!(add(F16::NEG_ZERO, F16::NEG_ZERO).to_bits(), 0x8000);
+        assert_eq!(sub(F16::ONE, F16::ONE).to_bits(), 0); // exact cancel → +0
+        assert_eq!(mul(F16::NEG_ZERO, F16::ONE).to_bits(), 0x8000);
+    }
+
+    #[test]
+    fn subnormal_arithmetic() {
+        let tiny = F16::MIN_SUBNORMAL;
+        assert_eq!(add(tiny, tiny).to_bits(), 0x0002);
+        assert_eq!(sub(F16::MIN_POSITIVE, tiny).to_bits(), 0x03FF);
+        // Underflow: tiny/2 rounds to even (0).
+        assert_eq!(div(tiny, F16::from_f32(2.0)).to_bits(), 0);
+        // 3*tiny/2 rounds to 2*tiny.
+        assert_eq!(div(F16(0x0003), F16::from_f32(2.0)).to_bits(), 0x0002);
+    }
+
+    #[test]
+    fn division_exactness() {
+        // 1/3 in FP16 = 0x3555 (0.333251953125)
+        assert_eq!(div(F16::ONE, F16::from_f32(3.0)).to_bits(), 0x3555);
+        // 169-sum divided by 169 (the Fig 27 average pool case).
+        let s = F16::from_f32(169.0);
+        assert_eq!(div(s, s).to_bits(), F16::ONE.to_bits());
+    }
+
+    #[test]
+    fn cmp_semantics() {
+        use std::cmp::Ordering::*;
+        assert_eq!(cmp(F16::ONE, F16::ZERO), Some(Greater));
+        assert_eq!(cmp(F16::NEG_ZERO, F16::ZERO), Some(Equal));
+        assert_eq!(cmp(F16::NEG_INFINITY, F16::MAX), Some(Less));
+        assert_eq!(cmp(F16::NAN, F16::ONE), None);
+    }
+}

@@ -1,0 +1,333 @@
+//! Weight-resident batched inference — the transfer-side optimization
+//! the paper's single-image flow leaves on the table (§5: the whole
+//! process is ~4× compute because every piece crosses USB; §6.2 asks
+//! for higher throughput).
+//!
+//! `forward_batch` runs B images layer by layer: per weight super-block
+//! the weights cross the link **once** and all B images' GEMM slices are
+//! swept against the resident block, so the per-image weight traffic
+//! drops by B×. Results are bit-identical to B independent
+//! [`super::driver::HostDriver::forward`] calls (same slices, same
+//! engine passes, same order per image — property-tested).
+
+use anyhow::{ensure, Context, Result};
+
+use crate::accel::stream::{SliceTask, StreamAccelerator, WEIGHT_CACHE_WORDS};
+use crate::engine::functional::ConvWeightsF16;
+use crate::host::driver::pad_for_engine;
+use crate::host::gemm;
+use crate::host::postprocess;
+use crate::net::graph::{Network, Node};
+use crate::net::layer::{LayerSpec, OpType};
+use crate::net::tensor::{Tensor, TensorF16, TensorF32};
+use crate::net::weights::Blobs;
+
+/// Per-image output of a batched forward.
+#[derive(Debug)]
+pub struct BatchItemResult {
+    pub probs: Vec<f32>,
+    pub argmax: usize,
+}
+
+/// Batch report: per-image results + shared transfer statistics.
+#[derive(Debug)]
+pub struct BatchResult {
+    pub items: Vec<BatchItemResult>,
+    /// Final FP16 logits per image (for bit-exactness checks).
+    pub logits: Vec<TensorF16>,
+}
+
+/// Run `images` through `net` with weight-resident batching.
+pub fn forward_batch(
+    dev: &mut StreamAccelerator,
+    net: &Network,
+    blobs: &Blobs,
+    images: &[TensorF32],
+) -> Result<BatchResult> {
+    net.check().map_err(anyhow::Error::msg)?;
+    ensure!(!images.is_empty(), "empty batch");
+    let b = images.len();
+    let layers = net.engine_layers();
+    dev.load_commands(&layers).context("load commands")?;
+
+    // acts[img][node]
+    let mut acts: Vec<Vec<TensorF16>> = vec![Vec::with_capacity(net.nodes.len()); b];
+    for (ni, node) in net.nodes.iter().enumerate() {
+        match node {
+            Node::Input { side, ch } => {
+                for (i, img) in images.iter().enumerate() {
+                    ensure!(
+                        (img.h, img.c) == (*side as usize, *ch as usize),
+                        "image {i} shape mismatch"
+                    );
+                    acts[i].push(img.to_f16());
+                }
+            }
+            Node::Engine { spec, input } => {
+                let reg = dev.load_layer().with_context(|| format!("CSB empty at {}", spec.name))?;
+                ensure!(reg.encode() == spec.encode(), "layer register mismatch at {}", spec.name);
+                match spec.op {
+                    OpType::ConvRelu => conv_batch(dev, spec, blobs, *input, &mut acts)?,
+                    OpType::MaxPool | OpType::AvgPool => pool_batch(dev, spec, *input, &mut acts)?,
+                    OpType::Idle => {
+                        for a in acts.iter_mut() {
+                            let t = a[*input].clone();
+                            a.push(t);
+                        }
+                    }
+                }
+            }
+            Node::Concat { inputs, .. } => {
+                for a in acts.iter_mut() {
+                    let parts: Vec<&TensorF16> = inputs.iter().map(|&j| &a[j]).collect();
+                    a.push(Tensor::concat_channels(&parts));
+                }
+            }
+            Node::Softmax { input, .. } => {
+                for a in acts.iter_mut() {
+                    let t = a[*input].clone();
+                    a.push(t);
+                }
+            }
+        }
+        debug_assert!(acts.iter().all(|a| a.len() == ni + 1));
+    }
+
+    let mut items = Vec::with_capacity(b);
+    let mut logits_all = Vec::with_capacity(b);
+    for a in &acts {
+        let last = a.last().unwrap();
+        let logits: Vec<f32> = last.data.iter().map(|v| v.to_f32()).collect();
+        let probs = postprocess::softmax(&logits);
+        let argmax = postprocess::argmax(&probs).unwrap_or(0);
+        items.push(BatchItemResult { probs, argmax });
+        logits_all.push(last.clone());
+    }
+    Ok(BatchResult { items, logits: logits_all })
+}
+
+/// Conv layer over the batch: weights cross the link once per
+/// super-block; each image's data slices sweep the resident block.
+fn conv_batch(
+    dev: &mut StreamAccelerator,
+    spec: &LayerSpec,
+    blobs: &Blobs,
+    input_node: usize,
+    acts: &mut [Vec<TensorF16>],
+) -> Result<()> {
+    let k = spec.kernel as usize;
+    let s = spec.stride as usize;
+    let o = spec.o_side as usize;
+    let w32 = blobs.conv_weights(&spec.name, k, spec.i_ch as usize, spec.o_ch as usize)?;
+    let wf = ConvWeightsF16::from_f32(&w32);
+    let icp = wf.i_ch_padded;
+    let groups = icp / 8;
+
+    let padded: Vec<TensorF16> = acts
+        .iter()
+        .map(|a| pad_for_engine(&a[input_node], spec.padding as usize, icp))
+        .collect();
+    let pw = padded[0].w;
+
+    let per_oc_values = k * k * icp;
+    let max_oc_resident = (WEIGHT_CACHE_WORDS * 8 / per_oc_values).max(1);
+    let oc_pass = gemm::oc_block_size(k, icp);
+    let super_block = max_oc_resident.min(spec.o_ch as usize).max(oc_pass);
+    let granularity = gemm::conv_granularity(k, pw, icp);
+    ensure!(
+        granularity == gemm::ConvGranularity::Row,
+        "{}: batched driver supports row granularity (kernel fits the data cache)",
+        spec.name
+    );
+
+    let mut outs: Vec<TensorF16> = (0..acts.len()).map(|_| Tensor::zeros(o, o, spec.o_ch as usize)).collect();
+    let mut oc0 = 0usize;
+    while oc0 < spec.o_ch as usize {
+        let resident = super_block.min(spec.o_ch as usize - oc0);
+        // The batch win: ONE weight+bias load for all images.
+        dev.load_weights(&gemm::weight_block(&wf, oc0, resident))?;
+        dev.load_bias(&gemm::bias_block(&wf, oc0, resident))?;
+        for (img, pad_img) in padded.iter().enumerate() {
+            for y in 0..o {
+                dev.load_data(&gemm::conv_row_slice(pad_img, y * s, k))?;
+                let mut oc_local = 0usize;
+                while oc_local < resident {
+                    let n_oc = oc_pass.min(resident - oc_local);
+                    let task = SliceTask {
+                        op: OpType::ConvRelu,
+                        k,
+                        stride: s,
+                        out_cols: o,
+                        groups,
+                        oc_count: n_oc,
+                        data_width: pw,
+                        data_rows: k,
+                        pixel_mode: false,
+                        kernel_size_reg: spec.kernel_size(),
+                        skip_relu: spec.skip_relu,
+                        weight_base: oc_local * per_oc_values / 8,
+                        bias_base: oc_local,
+                        pool_pad: 0,
+                    };
+                    let n = dev.restart_engine(&task)?;
+                    let res = dev.read_results(n)?;
+                    for (j, v) in res.iter().enumerate() {
+                        outs[img].set(y, j % o, oc0 + oc_local + j / o, *v);
+                    }
+                    oc_local += n_oc;
+                }
+            }
+        }
+        oc0 += resident;
+    }
+    for (a, out) in acts.iter_mut().zip(outs) {
+        a.push(out);
+    }
+    Ok(())
+}
+
+/// Pooling has no weights to amortize; images are processed in turn.
+fn pool_batch(
+    dev: &mut StreamAccelerator,
+    spec: &LayerSpec,
+    input_node: usize,
+    acts: &mut [Vec<TensorF16>],
+) -> Result<()> {
+    let k = spec.kernel as usize;
+    let s = spec.stride as usize;
+    let o = spec.o_side as usize;
+    let pad = spec.padding as usize;
+    let mut outs = Vec::with_capacity(acts.len());
+    for a in acts.iter() {
+        let input = &a[input_node];
+        let groups = input.c.div_ceil(8);
+        let mut out = Tensor::zeros(o, o, input.c);
+        for g in 0..groups {
+            for y in 0..o {
+                let y0 = (y * s).saturating_sub(pad);
+                let rows = (y * s + k - pad).min(input.h) - y0;
+                dev.load_data(&gemm::pool_slice(input, y0, rows, g))?;
+                let task = SliceTask {
+                    op: spec.op,
+                    k,
+                    stride: s,
+                    out_cols: o,
+                    groups: 1,
+                    oc_count: 8,
+                    data_width: input.h,
+                    data_rows: rows,
+                    pixel_mode: false,
+                    kernel_size_reg: spec.kernel_size(),
+                    skip_relu: spec.skip_relu,
+                    weight_base: 0,
+                    bias_base: 0,
+                    pool_pad: pad,
+                };
+                let n = dev.restart_engine(&task)?;
+                let res = dev.read_results(n)?;
+                for x in 0..o {
+                    for l in 0..8 {
+                        let c = g * 8 + l;
+                        if c < input.c {
+                            out.set(y, x, c, res[x * 8 + l]);
+                        }
+                    }
+                }
+            }
+        }
+        outs.push(out);
+    }
+    for (a, out) in acts.iter_mut().zip(outs) {
+        a.push(out);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::host::driver::HostDriver;
+    use crate::hw::usb::UsbLink;
+    use crate::net::weights::synthesize_weights;
+    use crate::prop::Rng;
+
+    fn fire_net() -> Network {
+        let mut n = Network::new("batch_fire");
+        let inp = n.input(12, 3);
+        let c1 = n.engine(LayerSpec::conv("c1", 3, 1, 0, 12, 3, 8, 0), inp);
+        let p1 = n.engine(LayerSpec::maxpool("p1", 3, 2, 10, 8), c1); // 5
+        let e1 = n.engine(LayerSpec::conv("e1", 1, 1, 0, 5, 8, 16, 1), p1);
+        let e3 = n.engine(LayerSpec::conv("e3", 3, 1, 1, 5, 8, 16, 5), p1);
+        let cat = n.concat("cat", vec![e1, e3]);
+        let g = n.engine(LayerSpec::avgpool("gap", 5, 1, 5, 32), cat);
+        n.softmax("prob", g);
+        n
+    }
+
+    fn images(rng: &mut Rng, n: usize) -> Vec<TensorF32> {
+        (0..n)
+            .map(|_| {
+                Tensor::from_vec(12, 12, 3, (0..12 * 12 * 3).map(|_| rng.normal(1.0)).collect())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_is_bit_identical_to_sequential() {
+        let net = fire_net();
+        let blobs = synthesize_weights(&net, 8);
+        let mut rng = Rng::new(0xBA7C);
+        let imgs = images(&mut rng, 4);
+
+        let mut dev_b = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let batch = forward_batch(&mut dev_b, &net, &blobs, &imgs).unwrap();
+
+        for (i, img) in imgs.iter().enumerate() {
+            let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+            let single = HostDriver::new(&mut dev).forward(&net, &blobs, img).unwrap();
+            let single_last = single.outputs.last().unwrap();
+            assert_eq!(batch.logits[i].data.len(), single_last.data.len());
+            for (a, b) in batch.logits[i].data.iter().zip(&single_last.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "image {i}");
+            }
+            assert_eq!(batch.items[i].argmax, postprocess::argmax(&single.probs).unwrap());
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_weight_traffic() {
+        let net = fire_net();
+        let blobs = synthesize_weights(&net, 8);
+        let mut rng = Rng::new(1);
+        let b = 8usize;
+        let imgs = images(&mut rng, b);
+
+        let mut dev_b = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        forward_batch(&mut dev_b, &net, &blobs, &imgs).unwrap();
+        let batched_bytes = dev_b.usb.pipe_in.bytes;
+
+        let mut seq_bytes = 0u64;
+        for img in &imgs {
+            let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+            HostDriver::new(&mut dev).forward(&net, &blobs, img).unwrap();
+            seq_bytes += dev.usb.pipe_in.bytes;
+        }
+        // Weights cross once instead of B times; data traffic is equal.
+        let weight_bytes = 4 * net.total_weights();
+        let saved = seq_bytes - batched_bytes;
+        assert!(
+            saved >= (b as u64 - 1) * weight_bytes,
+            "saved {saved} < expected {}",
+            (b as u64 - 1) * weight_bytes
+        );
+    }
+
+    #[test]
+    fn batch_rejects_mismatched_image() {
+        let net = fire_net();
+        let blobs = synthesize_weights(&net, 8);
+        let bad = vec![Tensor::zeros(9, 9, 3)];
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        assert!(forward_batch(&mut dev, &net, &blobs, &bad).is_err());
+    }
+}

@@ -1,0 +1,491 @@
+//! The PC-host driver — the software flow of Fig 36, in Rust, on the
+//! request path.
+//!
+//! Per layer the driver: reads the layer register via the device CSB,
+//! processes + loads weights/biases (super-blocks of output channels that
+//! fit the weight cache, so activations usually transfer once), slices
+//! the padded input into GEMM blocks, loads each block, pulses the
+//! engine, and reads back results; concat / softmax / argsort run on the
+//! host exactly as in the paper (§4.1, §5).
+
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+
+use crate::accel::stream::{SliceTask, StreamAccelerator, WEIGHT_CACHE_WORDS};
+use crate::engine::functional::ConvWeightsF16;
+use crate::host::gemm;
+use crate::host::postprocess;
+use crate::hw::clock::{ClockDomain, PhaseTimes};
+use crate::net::graph::{Network, Node};
+use crate::net::layer::{LayerSpec, OpType};
+use crate::net::tensor::{Tensor, TensorF16, TensorF32};
+use crate::net::weights::Blobs;
+
+/// Result of one full forward pass.
+#[derive(Debug)]
+pub struct ForwardResult {
+    /// FP16 output of every node (indexed like `net.nodes`).
+    pub outputs: Vec<TensorF16>,
+    /// Softmax probabilities of the final node (f32, host-side).
+    pub probs: Vec<f32>,
+    /// Modeled device/link timing per Fig 36 phase.
+    pub phases: PhaseTimes,
+    /// Engine cycles and modeled engine time.
+    pub engine_cycles: u64,
+    /// Host wall-clock seconds actually spent (slicing, concat, …).
+    pub host_seconds: f64,
+}
+
+impl ForwardResult {
+    /// Modeled engine compute time (the paper's "computation time").
+    pub fn compute_seconds(&self) -> f64 {
+        ClockDomain::ENGINE.secs(self.engine_cycles)
+    }
+
+    /// Modeled whole-process time: engine + link (the paper's 40.9 s
+    /// counterpart; host CPU time is reported separately since our host
+    /// is not a 2019 Python script).
+    pub fn whole_process_seconds(&self) -> f64 {
+        self.phases.total()
+    }
+
+    /// Top-k (class, probability), descending.
+    pub fn top_k(&self, k: usize) -> Vec<(usize, f32)> {
+        postprocess::argsort_desc(&self.probs).into_iter().take(k).map(|i| (i, self.probs[i])).collect()
+    }
+}
+
+/// Drives one [`StreamAccelerator`] through a whole network.
+pub struct HostDriver<'d> {
+    pub dev: &'d mut StreamAccelerator,
+}
+
+impl<'d> HostDriver<'d> {
+    pub fn new(dev: &'d mut StreamAccelerator) -> HostDriver<'d> {
+        HostDriver { dev }
+    }
+
+    /// Run `image` through `net` (weights in `blobs`), returning every
+    /// intermediate FP16 tensor plus timing. `image` is the
+    /// *preprocessed* H×W×C input (see [`crate::host::preprocess`]).
+    pub fn forward(&mut self, net: &Network, blobs: &Blobs, image: &TensorF32) -> Result<ForwardResult> {
+        net.check().map_err(anyhow::Error::msg)?;
+        let host_t0 = std::time::Instant::now();
+        let mut phases = PhaseTimes::new();
+
+        // Read Blob + Load Commands (Fig 36).
+        let usb_before = self.dev.usb.total_seconds();
+        let layers = net.engine_layers();
+        ensure!(!layers.is_empty(), "network has no engine layers");
+        self.dev.load_commands(&layers).context("load commands")?;
+        phases.add("load_commands", self.dev.usb.total_seconds() - usb_before);
+
+        let mut outputs: Vec<TensorF16> = Vec::with_capacity(net.nodes.len());
+        for (i, node) in net.nodes.iter().enumerate() {
+            let out = match node {
+                Node::Input { side, ch } => {
+                    ensure!(
+                        (image.h, image.w, image.c) == (*side as usize, *side as usize, *ch as usize),
+                        "image shape {}×{}×{} != input {side}×{side}×{ch}",
+                        image.h,
+                        image.w,
+                        image.c
+                    );
+                    image.to_f16()
+                }
+                Node::Engine { spec, input } => {
+                    let reg = self
+                        .dev
+                        .load_layer()
+                        .with_context(|| format!("CSB empty at {}", spec.name))?;
+                    ensure!(reg.encode() == spec.encode(), "layer register mismatch at {}", spec.name);
+                    let inp = &outputs[*input];
+                    match spec.op {
+                        OpType::ConvRelu => self.run_conv(spec, inp, blobs, &mut phases)?,
+                        OpType::MaxPool | OpType::AvgPool => self.run_pool(spec, inp, &mut phases)?,
+                        OpType::Idle => inp.clone(),
+                    }
+                }
+                Node::Concat { inputs, .. } => {
+                    let parts: Vec<&TensorF16> = inputs.iter().map(|&j| &outputs[j]).collect();
+                    Tensor::concat_channels(&parts)
+                }
+                Node::Softmax { input, .. } => outputs[*input].clone(),
+            };
+            debug_assert_eq!(i, outputs.len());
+            outputs.push(out);
+        }
+
+        // Softmax & Argsort on the host (FP32, §5 Eq. 4).
+        let last = outputs.last().unwrap();
+        let logits: Vec<f32> = last.data.iter().map(|v| v.to_f32()).collect();
+        let probs = postprocess::softmax(&logits);
+
+        phases.add("engine_compute", ClockDomain::ENGINE.secs(self.dev.stats.cycles));
+        Ok(ForwardResult {
+            outputs,
+            probs,
+            phases,
+            engine_cycles: self.dev.stats.cycles,
+            host_seconds: host_t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// One convolution layer: weight super-blocks → row/pixel GEMM slices.
+    fn run_conv(
+        &mut self,
+        spec: &LayerSpec,
+        input: &TensorF16,
+        blobs: &Blobs,
+        phases: &mut PhaseTimes,
+    ) -> Result<TensorF16> {
+        let k = spec.kernel as usize;
+        let s = spec.stride as usize;
+        let o = spec.o_side as usize;
+        let w32 = blobs.conv_weights(&spec.name, k, spec.i_ch as usize, spec.o_ch as usize)?;
+        let wf = ConvWeightsF16::from_f32(&w32);
+        let icp = wf.i_ch_padded;
+        let groups = icp / 8;
+
+        // Process Gemm: surface padding + channel lane padding, host-side.
+        let padded = pad_for_engine(input, spec.padding as usize, icp);
+        let pw = padded.w;
+
+        // Weight super-block: as many output channels as fit the cache.
+        let per_oc_values = k * k * icp;
+        let max_oc_resident = (WEIGHT_CACHE_WORDS * 8 / per_oc_values).max(1);
+        let oc_pass = gemm::oc_block_size(k, icp); // ≤ 8 per engine pass
+        let super_block = max_oc_resident.min(spec.o_ch as usize).max(oc_pass);
+        let granularity = gemm::conv_granularity(k, pw, icp);
+
+        let mut out = Tensor::zeros(o, o, spec.o_ch as usize);
+        let mut oc0 = 0usize;
+        while oc0 < spec.o_ch as usize {
+            let resident = super_block.min(spec.o_ch as usize - oc0);
+            // Process Weight Bias + load weight & bias.
+            let t0 = self.dev.usb.total_seconds();
+            self.dev.load_weights(&gemm::weight_block(&wf, oc0, resident))?;
+            self.dev.load_bias(&gemm::bias_block(&wf, oc0, resident))?;
+            phases.add("load_weights", self.dev.usb.total_seconds() - t0);
+
+            match granularity {
+                gemm::ConvGranularity::Row => {
+                    for y in 0..o {
+                        let t0 = self.dev.usb.total_seconds();
+                        self.dev.load_data(&gemm::conv_row_slice(&padded, y * s, k))?;
+                        phases.add("load_gemm", self.dev.usb.total_seconds() - t0);
+                        let mut oc_local = 0usize;
+                        while oc_local < resident {
+                            let n_oc = oc_pass.min(resident - oc_local);
+                            let task = SliceTask {
+                                op: OpType::ConvRelu,
+                                k,
+                                stride: s,
+                                out_cols: o,
+                                groups,
+                                oc_count: n_oc,
+                                data_width: pw,
+                                data_rows: k,
+                                pixel_mode: false,
+                                kernel_size_reg: spec.kernel_size(),
+                                skip_relu: spec.skip_relu,
+                                weight_base: oc_local * per_oc_values / 8,
+                                bias_base: oc_local,
+                                pool_pad: 0,
+                            };
+                            let n = self.dev.restart_engine(&task)?;
+                            let t0 = self.dev.usb.total_seconds();
+                            let res = self.dev.read_results(n)?;
+                            phases.add("read_output", self.dev.usb.total_seconds() - t0);
+                            for (j, v) in res.iter().enumerate() {
+                                let oc = oc0 + oc_local + j / o;
+                                let x = j % o;
+                                out.set(y, x, oc, *v);
+                            }
+                            oc_local += n_oc;
+                        }
+                    }
+                }
+                gemm::ConvGranularity::Pixel => {
+                    for y in 0..o {
+                        for x in 0..o {
+                            let t0 = self.dev.usb.total_seconds();
+                            self.dev.load_data(&gemm::conv_pixel_slice(&padded, y * s, x * s, k))?;
+                            phases.add("load_gemm", self.dev.usb.total_seconds() - t0);
+                            let mut oc_local = 0usize;
+                            while oc_local < resident {
+                                let n_oc = oc_pass.min(resident - oc_local);
+                                let task = SliceTask {
+                                    op: OpType::ConvRelu,
+                                    k,
+                                    stride: s,
+                                    out_cols: 1,
+                                    groups,
+                                    oc_count: n_oc,
+                                    data_width: k,
+                                    data_rows: k,
+                                    pixel_mode: true,
+                                    kernel_size_reg: spec.kernel_size(),
+                                    skip_relu: spec.skip_relu,
+                                    weight_base: oc_local * per_oc_values / 8,
+                                    bias_base: oc_local,
+                                    pool_pad: 0,
+                                };
+                                let n = self.dev.restart_engine(&task)?;
+                                let t0 = self.dev.usb.total_seconds();
+                                let res = self.dev.read_results(n)?;
+                                phases.add("read_output", self.dev.usb.total_seconds() - t0);
+                                for (j, v) in res.iter().enumerate() {
+                                    out.set(y, x, oc0 + oc_local + j, *v);
+                                }
+                                oc_local += n_oc;
+                            }
+                        }
+                    }
+                }
+            }
+            oc0 += resident;
+        }
+        Ok(out)
+    }
+
+    /// One pooling layer: per 8-channel group, per output row.
+    fn run_pool(&mut self, spec: &LayerSpec, input: &TensorF16, phases: &mut PhaseTimes) -> Result<TensorF16> {
+        let k = spec.kernel as usize;
+        let s = spec.stride as usize;
+        let o = spec.o_side as usize;
+        let i_side = spec.i_side as usize;
+        ensure!(input.h == i_side, "{}: input side {} != {}", spec.name, input.h, i_side);
+        let groups = input.c.div_ceil(8);
+        let slice_values = k * i_side * 8;
+        if slice_values > gemm::DATA_CACHE_VALUES {
+            bail!("{}: pool slice {} values exceeds data cache", spec.name, slice_values);
+        }
+
+        let pad = spec.padding as usize;
+        let mut out = Tensor::zeros(o, o, input.c);
+        for g in 0..groups {
+            for y in 0..o {
+                // Window rows [y·s − pad, y·s − pad + k) clipped to the
+                // surface (ceil-mode bottom overhang + "same"-pool top pad).
+                let y0 = (y * s).saturating_sub(pad);
+                let rows = (y * s + k - pad).min(input.h) - y0;
+                let t0 = self.dev.usb.total_seconds();
+                self.dev.load_data(&gemm::pool_slice(input, y0, rows, g))?;
+                phases.add("load_gemm", self.dev.usb.total_seconds() - t0);
+                let task = SliceTask {
+                    op: spec.op,
+                    k,
+                    stride: s,
+                    out_cols: o,
+                    groups: 1,
+                    oc_count: 8,
+                    data_width: i_side,
+                    data_rows: rows,
+                    pixel_mode: false,
+                    kernel_size_reg: spec.kernel_size(),
+                    skip_relu: spec.skip_relu,
+                    weight_base: 0,
+                    bias_base: 0,
+                    pool_pad: pad,
+                };
+                let n = self.dev.restart_engine(&task)?;
+                let t0 = self.dev.usb.total_seconds();
+                let res = self.dev.read_results(n)?;
+                phases.add("read_output", self.dev.usb.total_seconds() - t0);
+                for x in 0..o {
+                    for l in 0..8 {
+                        let c = g * 8 + l;
+                        if c < input.c {
+                            out.set(y, x, c, res[x * 8 + l]);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Host-side padding before slicing: surface zeros + channel lanes.
+pub fn pad_for_engine(t: &TensorF16, pad: usize, lanes_to: usize) -> TensorF16 {
+    let mut p = if pad > 0 { t.pad_surface(pad) } else { t.clone() };
+    if p.c < lanes_to {
+        p = p.pad_channels_to(8);
+    }
+    assert_eq!(p.c, lanes_to);
+    p
+}
+
+/// Reference forward pass entirely through the functional engine (no
+/// device, no slicing) — used to validate that the sliced device flow is
+/// bit-identical, and by tests that don't care about transfers.
+pub fn forward_functional(net: &Network, blobs: &Blobs, image: &TensorF32) -> Result<Vec<TensorF16>> {
+    let mut outputs: Vec<TensorF16> = Vec::with_capacity(net.nodes.len());
+    for node in &net.nodes {
+        let out = match node {
+            Node::Input { .. } => image.to_f16(),
+            Node::Engine { spec, input } => {
+                let inp = &outputs[*input];
+                match spec.op {
+                    OpType::ConvRelu => {
+                        let w32 = blobs.conv_weights(
+                            &spec.name,
+                            spec.kernel as usize,
+                            spec.i_ch as usize,
+                            spec.o_ch as usize,
+                        )?;
+                        let wf = ConvWeightsF16::from_f32(&w32);
+                        let padded = pad_for_engine(inp, spec.padding as usize, wf.i_ch_padded);
+                        crate::engine::functional::conv(spec, &padded, &wf)
+                    }
+                    OpType::MaxPool => crate::engine::functional::maxpool(spec, inp),
+                    OpType::AvgPool => crate::engine::functional::avgpool(spec, inp),
+                    OpType::Idle => inp.clone(),
+                }
+            }
+            Node::Concat { inputs, .. } => {
+                let parts: Vec<&TensorF16> = inputs.iter().map(|&j| &outputs[j]).collect();
+                Tensor::concat_channels(&parts)
+            }
+            Node::Softmax { input, .. } => outputs[*input].clone(),
+        };
+        outputs.push(out);
+    }
+    Ok(outputs)
+}
+
+/// Per-node max |device − oracle| report entry.
+#[derive(Clone, Debug)]
+pub struct DeviationRow {
+    pub name: String,
+    pub max_abs: f32,
+    pub mean_abs: f32,
+}
+
+/// Compare FP16 outputs against FP32 oracle outputs node by node.
+pub fn deviation_report(
+    net: &Network,
+    got: &[TensorF16],
+    oracle: &HashMap<String, TensorF32>,
+) -> Vec<DeviationRow> {
+    let mut rows = Vec::new();
+    for (i, out) in got.iter().enumerate() {
+        let name = net.node_name(i);
+        if let Some(exp) = oracle.get(name) {
+            let mut max_abs = 0.0f32;
+            let mut sum = 0.0f64;
+            for (a, b) in out.data.iter().zip(&exp.data) {
+                let d = (a.to_f32() - b).abs();
+                max_abs = max_abs.max(d);
+                sum += d as f64;
+            }
+            rows.push(DeviationRow {
+                name: name.to_string(),
+                max_abs,
+                mean_abs: (sum / out.data.len() as f64) as f32,
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::usb::UsbLink;
+    use crate::net::weights::synthesize_weights;
+    use crate::prop::Rng;
+
+    /// A SqueezeNet-shaped micro network exercising conv/pool/concat.
+    fn micro_net() -> Network {
+        let mut n = Network::new("micro");
+        let inp = n.input(12, 3);
+        let c1 = n.engine(LayerSpec::conv("conv1", 3, 1, 0, 12, 3, 8, 0), inp);
+        let p1 = n.engine(LayerSpec::maxpool("pool1", 3, 2, 10, 8), c1); // ceil mode: 10 -> 5
+        let sq = n.engine(LayerSpec::conv("f/squeeze1x1", 1, 1, 0, 5, 8, 4, 0), p1);
+        let e1 = n.engine(LayerSpec::conv("f/expand1x1", 1, 1, 0, 5, 4, 8, 1), sq);
+        let e3 = n.engine(LayerSpec::conv("f/expand3x3", 3, 1, 1, 5, 4, 8, 5), sq);
+        let cat = n.concat("f/concat", vec![e1, e3]);
+        let gap = n.engine(LayerSpec::avgpool("gap", 5, 1, 5, 16), cat);
+        n.softmax("prob", gap);
+        n
+    }
+
+    fn rand_image(rng: &mut Rng, side: usize, c: usize) -> TensorF32 {
+        Tensor::from_vec(side, side, c, (0..side * side * c).map(|_| rng.normal(1.0)).collect())
+    }
+
+    #[test]
+    fn device_flow_is_bit_identical_to_functional() {
+        let net = micro_net();
+        let blobs = synthesize_weights(&net, 11);
+        let mut rng = Rng::new(0xD1CE);
+        let img = rand_image(&mut rng, 12, 3);
+
+        let reference = forward_functional(&net, &blobs, &img).unwrap();
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let res = HostDriver::new(&mut dev).forward(&net, &blobs, &img).unwrap();
+
+        for (i, (a, b)) in res.outputs.iter().zip(&reference).enumerate() {
+            assert_eq!(a.data.len(), b.data.len(), "node {i}");
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "node {} ({})", i, net.node_name(i));
+            }
+        }
+        assert!((res.probs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(res.engine_cycles > 0);
+        assert!(res.whole_process_seconds() > 0.0);
+    }
+
+    #[test]
+    fn pixel_granularity_conv_matches_functional() {
+        // A kernel too large for row slicing (k=5 over 96 channels).
+        let mut n = Network::new("bigk");
+        let inp = n.input(20, 96);
+        n.engine(LayerSpec::conv("cbig", 5, 1, 2, 20, 96, 4, 0), inp);
+        let blobs = synthesize_weights(&n, 3);
+        let mut rng = Rng::new(5);
+        let img = rand_image(&mut rng, 20, 96);
+        assert_eq!(gemm::conv_granularity(5, 24, 96), gemm::ConvGranularity::Pixel);
+
+        let reference = forward_functional(&n, &blobs, &img).unwrap();
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let res = HostDriver::new(&mut dev).forward(&n, &blobs, &img).unwrap();
+        let (a, b) = (res.outputs.last().unwrap(), reference.last().unwrap());
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn weight_superblock_splits_when_cache_small() {
+        // conv with o_ch=20 and oc_pass=8: passes of 8/8/4 must reassemble.
+        let mut n = Network::new("sb");
+        let inp = n.input(5, 8);
+        n.engine(LayerSpec::conv("c", 1, 1, 0, 5, 8, 20, 0), inp);
+        let blobs = synthesize_weights(&n, 9);
+        let mut rng = Rng::new(6);
+        let img = rand_image(&mut rng, 5, 8);
+        let reference = forward_functional(&n, &blobs, &img).unwrap();
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let res = HostDriver::new(&mut dev).forward(&n, &blobs, &img).unwrap();
+        for (x, y) in res.outputs.last().unwrap().data.iter().zip(&reference.last().unwrap().data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn deviation_report_computes_stats() {
+        let net = micro_net();
+        let blobs = synthesize_weights(&net, 11);
+        let mut rng = Rng::new(0xD1CE);
+        let img = rand_image(&mut rng, 12, 3);
+        let outs = forward_functional(&net, &blobs, &img).unwrap();
+        let mut oracle = HashMap::new();
+        oracle.insert("conv1".to_string(), outs[net.find("conv1").unwrap()].to_f32());
+        let rows = deviation_report(&net, &outs, &oracle);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].max_abs, 0.0); // identical by construction
+    }
+}

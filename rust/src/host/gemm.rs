@@ -1,0 +1,218 @@
+//! Host-side GEMM slicing — the "Process Gemm" stage of Fig 36.
+//!
+//! The stream architecture keeps only a slice of the im2col matrix on
+//! chip at a time (§3.4.2: data comes from the host, not off-chip DRAM).
+//! The host pads the input (surface zeros + channel lanes), then cuts it
+//! into blocks that fit the 1024×128-bit data cache:
+//!
+//! * **conv row slice** — the `k` input rows that produce one output row,
+//!   full width, all channel groups (Table 2's "germ size", e.g. conv1:
+//!   227·8·3 = 5448 values);
+//! * **conv pixel slice** — one k×k window, all groups (fallback when a
+//!   row slice exceeds the cache, e.g. AlexNet's 11×11 conv1);
+//! * **pool slice** — `k` rows × width × one 8-channel group (pool1:
+//!   113·8·3 = 2712 values).
+//!
+//! Streams are emitted in exactly the order the SERDES shifts them into
+//! BRAM, so the device load is a linear copy.
+
+use crate::engine::functional::ConvWeightsF16;
+use crate::fp16::F16;
+use crate::net::tensor::TensorF16;
+
+/// Data-cache capacity in FP16 values (1024 words × 8 lanes, §4.4).
+pub const DATA_CACHE_VALUES: usize = 1024 * 8;
+/// Weight-cache capacity in FP16 values (8192 words × 8 lanes).
+pub const WEIGHT_CACHE_VALUES: usize = 8192 * 8;
+/// Result FIFO capacity in values (1024 × 32-bit words, low 16 valid).
+pub const RES_FIFO_VALUES: usize = 1024;
+
+/// How a conv layer's data is cut.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvGranularity {
+    /// One output row per slice (preferred).
+    Row,
+    /// One output pixel per slice (large-kernel fallback).
+    Pixel,
+}
+
+/// Pick the slicing granularity for a conv layer: a row slice needs
+/// `k · padded_width · lanes` values in the data cache.
+pub fn conv_granularity(k: usize, padded_width: usize, lanes: usize) -> ConvGranularity {
+    if k * padded_width * lanes <= DATA_CACHE_VALUES {
+        ConvGranularity::Row
+    } else {
+        ConvGranularity::Pixel
+    }
+}
+
+/// Output channels per engine pass: at most 8 (the bias/output
+/// parallelism, §4.4), fewer if one pass's weights would overflow the
+/// weight cache (e.g. fc6-style fat reductions).
+pub fn oc_block_size(k: usize, lanes: usize) -> usize {
+    let per_oc = k * k * lanes;
+    assert!(
+        per_oc <= WEIGHT_CACHE_VALUES,
+        "single output channel needs {per_oc} weight values > cache"
+    );
+    (WEIGHT_CACHE_VALUES / per_oc).min(8).max(1)
+}
+
+/// Conv row slice: rows `y0 .. y0+k` of the padded input, all channel
+/// groups, in `(ky, x, group, lane)` order.
+pub fn conv_row_slice(padded: &TensorF16, y0: usize, k: usize) -> Vec<F16> {
+    let groups = padded.c / 8;
+    debug_assert_eq!(padded.c % 8, 0);
+    let mut out = Vec::with_capacity(k * padded.w * padded.c);
+    for ky in 0..k {
+        for x in 0..padded.w {
+            for g in 0..groups {
+                for l in 0..8 {
+                    out.push(padded.get(y0 + ky, x, g * 8 + l));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Conv pixel slice: one k×k window at `(y0, x0)`, `(ky, kx, group,
+/// lane)` order.
+pub fn conv_pixel_slice(padded: &TensorF16, y0: usize, x0: usize, k: usize) -> Vec<F16> {
+    let groups = padded.c / 8;
+    let mut out = Vec::with_capacity(k * k * padded.c);
+    for ky in 0..k {
+        for kx in 0..k {
+            for g in 0..groups {
+                for l in 0..8 {
+                    out.push(padded.get(y0 + ky, x0 + kx, g * 8 + l));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Weight block for output channels `oc0 .. oc0+n`, `(oc, ky, kx, group,
+/// lane)` order — matches the weight-cache addressing of the engine.
+pub fn weight_block(w: &ConvWeightsF16, oc0: usize, n: usize) -> Vec<F16> {
+    let groups = w.i_ch_padded / 8;
+    let mut out = Vec::with_capacity(n * w.k * w.k * w.i_ch_padded);
+    for oc in oc0..oc0 + n {
+        for ky in 0..w.k {
+            for kx in 0..w.k {
+                for g in 0..groups {
+                    for l in 0..8 {
+                        out.push(w.get(oc, ky, kx, g * 8 + l));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Bias block for output channels `oc0 .. oc0+n` — one value per channel;
+/// the device stores each in the low lane of a 128-bit word (§4.4).
+pub fn bias_block(w: &ConvWeightsF16, oc0: usize, n: usize) -> Vec<F16> {
+    w.bias[oc0..oc0 + n].to_vec()
+}
+
+/// Pool slice: rows `y0 .. y0+rows` (clipped by the caller), one
+/// 8-channel group, `(ky, x, lane)` order.
+pub fn pool_slice(t: &TensorF16, y0: usize, rows: usize, g: usize) -> Vec<F16> {
+    let mut out = Vec::with_capacity(rows * t.w * 8);
+    for ky in 0..rows {
+        for x in 0..t.w {
+            for l in 0..8 {
+                let c = g * 8 + l;
+                out.push(if c < t.c { t.get(y0 + ky, x, c) } else { F16::ZERO });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::tensor::{ConvWeights, Tensor};
+
+    fn seq_tensor(h: usize, w: usize, c: usize) -> TensorF16 {
+        let data: Vec<F16> = (0..h * w * c).map(|i| F16::from_u32(i as u32 % 1000)).collect();
+        Tensor::from_vec(h, w, c, data)
+    }
+
+    #[test]
+    fn granularity_thresholds() {
+        // SqueezeNet conv1: 3·227·8 = 5448 ≤ 8192 → row.
+        assert_eq!(conv_granularity(3, 227, 8), ConvGranularity::Row);
+        // AlexNet conv1: 11·227·8 = 19976 > 8192 → pixel.
+        assert_eq!(conv_granularity(11, 227, 8), ConvGranularity::Pixel);
+        // AlexNet conv2: 5·31·96 = 14880 > 8192 → pixel.
+        assert_eq!(conv_granularity(5, 31, 96), ConvGranularity::Pixel);
+    }
+
+    #[test]
+    fn oc_block_adapts_to_weight_cache() {
+        assert_eq!(oc_block_size(3, 8), 8); // conv1: 72 values/oc
+        assert_eq!(oc_block_size(1, 512), 8); // conv10: 512 values/oc
+        // AlexNet fc6 (as 6×6 conv over 256ch): 9216/oc → 65536/9216 = 7.
+        assert_eq!(oc_block_size(6, 256), 7);
+    }
+
+    #[test]
+    fn row_slice_sizes_match_table2_germ() {
+        // conv1 germ size: 227×8×3 = 5448 (Table 2).
+        let padded = seq_tensor(227, 227, 8);
+        let s = conv_row_slice(&padded, 0, 3);
+        assert_eq!(s.len(), 5448);
+        // pool1 germ: 113×8×3 = 2712.
+        let t = seq_tensor(113, 113, 64);
+        let p = pool_slice(&t, 0, 3, 0);
+        assert_eq!(p.len(), 2712);
+    }
+
+    #[test]
+    fn row_slice_order_is_ky_x_group_lane() {
+        let t = seq_tensor(4, 3, 16);
+        let s = conv_row_slice(&t, 1, 2);
+        // First value = (y=1, x=0, c=0).
+        assert_eq!(s[0].to_bits(), t.get(1, 0, 0).to_bits());
+        // 9th value (after lanes 0-7 of group 0) = (1, 0, c=8).
+        assert_eq!(s[8].to_bits(), t.get(1, 0, 8).to_bits());
+        // After 16 channels: (1, x=1, 0).
+        assert_eq!(s[16].to_bits(), t.get(1, 1, 0).to_bits());
+        // Second row starts after 3*16 values: (2, 0, 0).
+        assert_eq!(s[48].to_bits(), t.get(2, 0, 0).to_bits());
+    }
+
+    #[test]
+    fn weight_block_layout() {
+        let mut w = ConvWeights::zeros(4, 2, 8);
+        for oc in 0..4 {
+            for ky in 0..2 {
+                for kx in 0..2 {
+                    for ic in 0..8 {
+                        w.set(oc, ky, kx, ic, (1000 * oc + 100 * ky + 10 * kx + ic) as f32);
+                    }
+                }
+            }
+        }
+        let wf = ConvWeightsF16::from_f32(&w);
+        let blk = weight_block(&wf, 1, 2);
+        assert_eq!(blk.len(), 2 * 4 * 8);
+        assert_eq!(blk[0].to_f32(), 1000.0); // oc=1, ky=0, kx=0, ic=0
+        assert_eq!(blk[8].to_f32(), 1010.0); // oc=1, kx=1
+        assert_eq!(blk[32].to_f32(), 2000.0); // oc=2
+    }
+
+    #[test]
+    fn pool_slice_pads_partial_group() {
+        let t = seq_tensor(4, 4, 12); // group 1 has only 4 real channels
+        let p = pool_slice(&t, 0, 2, 1);
+        assert_eq!(p.len(), 2 * 4 * 8);
+        assert_eq!(p[0].to_bits(), t.get(0, 0, 8).to_bits());
+        assert_eq!(p[4].to_bits(), F16::ZERO.to_bits()); // lane 12 padded
+    }
+}

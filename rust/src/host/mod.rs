@@ -1,0 +1,12 @@
+//! The PC-host software (paper §5, Fig 36): preprocessing, GEMM slicing,
+//! the device driver, and softmax/argsort postprocessing. This is the L3
+//! request path — pure Rust, no Python.
+
+pub mod batch;
+pub mod driver;
+pub mod gemm;
+pub mod postprocess;
+pub mod preprocess;
+
+pub use batch::{forward_batch, BatchResult};
+pub use driver::{forward_functional, pad_for_engine, DeviationRow, ForwardResult, HostDriver};

@@ -1,0 +1,52 @@
+//! Softmax & Argsort — the last host stage of Fig 36 (§5 Eq. 4).
+
+/// Numerically stable softmax in f32 (host-side; the paper notes softmax
+/// "amplifies the result of the final-layer convolution", §5).
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    if logits.is_empty() {
+        return Vec::new();
+    }
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&v| (v - m).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+/// Indices sorted by value, descending (stable for ties).
+pub fn argsort_desc(vals: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..vals.len()).collect();
+    idx.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+/// Top-1 class.
+pub fn argmax(vals: &[f32]) -> Option<usize> {
+    argsort_desc(vals).first().copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant_and_stable() {
+        let a = softmax(&[1.0, 2.0]);
+        let b = softmax(&[1001.0, 1002.0]); // would overflow naive exp
+        assert!((a[0] - b[0]).abs() < 1e-6);
+        assert!(b.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn argsort_descending() {
+        assert_eq!(argsort_desc(&[0.1, 0.9, 0.5]), vec![1, 2, 0]);
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), Some(1));
+        assert_eq!(argmax(&[]), None);
+    }
+}

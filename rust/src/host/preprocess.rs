@@ -1,0 +1,108 @@
+//! Image preprocessing — the paper's `preprocess.py` (Fig 28) in Rust:
+//! move channels, swap RGB→BGR, subtract the dataset mean per channel,
+//! rescale [0,1] → [0,255]. Since ImageNet images and the ILSVRC-2012
+//! mean file are not available offline, a deterministic synthetic image
+//! stands in (DESIGN.md §3) — the preprocessing path is identical.
+
+use crate::net::tensor::{Tensor, TensorF32};
+use crate::prop::Rng;
+
+/// ILSVRC-2012 channel means in BGR order (the values the BVLC mean file
+/// reduces to — Fig 28 prints them during preprocessing).
+pub const IMAGENET_MEAN_BGR: [f32; 3] = [104.00699, 116.66877, 122.67892];
+
+/// Preprocess an RGB [0,1] image: RGB→BGR, ×255, subtract channel mean.
+pub fn preprocess_rgb01(img: &TensorF32) -> TensorF32 {
+    assert_eq!(img.c, 3, "expected RGB");
+    let mut out = Tensor::zeros(img.h, img.w, 3);
+    for y in 0..img.h {
+        for x in 0..img.w {
+            for c in 0..3 {
+                // BGR channel c comes from RGB channel 2-c.
+                let v = img.get(y, x, 2 - c) * 255.0 - IMAGENET_MEAN_BGR[c];
+                out.set(y, x, c, v);
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic synthetic "photo": smooth low-frequency blobs in [0,1]
+/// per channel, so convolutions see realistic spatial correlation rather
+/// than white noise.
+pub fn synthetic_image(seed: u64, side: usize) -> TensorF32 {
+    let mut rng = Rng::new(seed);
+    // Sum of random 2-D cosine modes.
+    let modes: Vec<(f32, f32, f32, f32, usize)> = (0..12)
+        .map(|_| {
+            (
+                rng.f32_range(0.5, 6.0),  // fy
+                rng.f32_range(0.5, 6.0),  // fx
+                rng.f32_range(0.0, 6.28), // phase
+                rng.f32_range(0.1, 0.5),  // amplitude
+                rng.below(3),             // channel
+            )
+        })
+        .collect();
+    let mut img = Tensor::zeros(side, side, 3);
+    for y in 0..side {
+        for x in 0..side {
+            for c in 0..3 {
+                let mut v = 0.5f32;
+                for &(fy, fx, ph, a, mc) in &modes {
+                    if mc == c {
+                        let t = fy * y as f32 / side as f32 + fx * x as f32 / side as f32;
+                        v += a * (6.2832 * t + ph).cos();
+                    }
+                }
+                img.set(y, x, c, v.clamp(0.0, 1.0));
+            }
+        }
+    }
+    img
+}
+
+/// The standard input for the end-to-end experiments: synthetic image,
+/// preprocessed, 227×227×3.
+pub fn standard_input(seed: u64) -> TensorF32 {
+    preprocess_rgb01(&synthetic_image(seed, 227))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preprocess_swaps_and_centers() {
+        let mut img = Tensor::zeros(1, 1, 3);
+        img.set(0, 0, 0, 1.0); // R
+        img.set(0, 0, 1, 0.5); // G
+        img.set(0, 0, 2, 0.0); // B
+        let out = preprocess_rgb01(&img);
+        // BGR order: channel 0 = B = 0*255 - mean_B
+        assert!((out.get(0, 0, 0) - (0.0 - IMAGENET_MEAN_BGR[0])).abs() < 1e-4);
+        assert!((out.get(0, 0, 1) - (127.5 - IMAGENET_MEAN_BGR[1])).abs() < 1e-4);
+        assert!((out.get(0, 0, 2) - (255.0 - IMAGENET_MEAN_BGR[2])).abs() < 1e-4);
+    }
+
+    #[test]
+    fn synthetic_image_is_deterministic_and_bounded() {
+        let a = synthetic_image(42, 32);
+        let b = synthetic_image(42, 32);
+        let c = synthetic_image(43, 32);
+        assert_eq!(a.data, b.data);
+        assert_ne!(a.data, c.data);
+        assert!(a.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // Not constant.
+        let mean: f32 = a.data.iter().sum::<f32>() / a.data.len() as f32;
+        assert!(a.data.iter().any(|&v| (v - mean).abs() > 0.05));
+    }
+
+    #[test]
+    fn standard_input_shape_and_range() {
+        let x = standard_input(1);
+        assert_eq!((x.h, x.w, x.c), (227, 227, 3));
+        // Mean-subtracted values stay within FP16 range comfortably.
+        assert!(x.data.iter().all(|&v| v.abs() < 300.0));
+    }
+}

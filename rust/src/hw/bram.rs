@@ -1,0 +1,124 @@
+//! Block RAM model (§4.4): single-port, one word per cycle, no wait
+//! states — the reason channel-first parallelism wins the §3.4.3
+//! trade-off ("data are cached in BRAM that requires only one cycle for
+//! each readout, which is significantly faster than computation units").
+//!
+//! Words are generic: the data/weight caches are 128-bit words modeled as
+//! `[F16; 8]`, the bias cache carries one valid F16 in the low lane.
+
+/// Single-port BRAM with access statistics.
+#[derive(Clone, Debug)]
+pub struct Bram<T: Copy + Default> {
+    name: &'static str,
+    mem: Vec<T>,
+    /// Total read accesses (≙ cycles spent reading; 1 word/cycle).
+    pub reads: u64,
+    /// Total write accesses.
+    pub writes: u64,
+}
+
+impl<T: Copy + Default> Bram<T> {
+    pub fn new(name: &'static str, depth: usize) -> Bram<T> {
+        Bram { name, mem: vec![T::default(); depth], reads: 0, writes: 0 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn depth(&self) -> usize {
+        self.mem.len()
+    }
+
+    /// Synchronous read: the RTL registers the output, so data is valid
+    /// the next cycle; the cycle cost is accounted by the caller's FSM.
+    #[inline]
+    pub fn read(&mut self, addr: usize) -> T {
+        self.reads += 1;
+        self.mem[addr]
+    }
+
+    #[inline]
+    pub fn write(&mut self, addr: usize, v: T) {
+        self.writes += 1;
+        self.mem[addr] = v;
+    }
+
+    /// Bulk load (what the SERDES path fills during Load Gemm / Load
+    /// Weight; counted as one write per word).
+    pub fn load(&mut self, base: usize, data: &[T]) {
+        assert!(
+            base + data.len() <= self.mem.len(),
+            "BRAM {} overflow: base {} + {} > depth {}",
+            self.name,
+            base,
+            data.len(),
+            self.mem.len()
+        );
+        for (i, &v) in data.iter().enumerate() {
+            self.write(base + i, v);
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.reads = 0;
+        self.writes = 0;
+    }
+
+    /// Account `n` modeled reads without touching data — used by the
+    /// optimized engine slice path, which snapshots a cache region once
+    /// and then *models* the per-cycle word reads the RTL would issue
+    /// (the counter stays exactly what the word-by-word loop produced).
+    pub fn count_reads(&mut self, n: u64) {
+        self.reads += n;
+    }
+
+    /// Raw word slice access for snapshotting (no read accounting; pair
+    /// with [`Bram::count_reads`]).
+    pub fn words(&self, base: usize, len: usize) -> &[T] {
+        &self.mem[base..base + len]
+    }
+}
+
+/// A 128-bit BRAM word: 8 FP16 lanes (the channel-parallel group).
+pub type Word128 = [crate::fp16::F16; 8];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp16::F16;
+
+    #[test]
+    fn read_write_roundtrip() {
+        let mut b: Bram<u32> = Bram::new("t", 16);
+        b.write(3, 99);
+        assert_eq!(b.read(3), 99);
+        assert_eq!(b.read(0), 0);
+        assert_eq!((b.reads, b.writes), (2, 1));
+    }
+
+    #[test]
+    fn bulk_load() {
+        let mut b: Bram<u32> = Bram::new("t", 8);
+        b.load(2, &[1, 2, 3]);
+        assert_eq!(b.read(2), 1);
+        assert_eq!(b.read(4), 3);
+        assert_eq!(b.writes, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn load_overflow_panics() {
+        let mut b: Bram<u32> = Bram::new("t", 4);
+        b.load(2, &[1, 2, 3]);
+    }
+
+    #[test]
+    fn word128_is_8_lanes() {
+        let w: Word128 = [F16::ONE; 8];
+        assert_eq!(w.len(), 8);
+        let mut b: Bram<Word128> = Bram::new("data_cache", 1024);
+        b.write(0, w);
+        assert_eq!(b.read(0)[7], F16::ONE);
+    }
+}

@@ -1,0 +1,102 @@
+//! Clock domains (§3.4.2, §4): the stream accelerator spans the host
+//! clock (100.8 MHz), the engine clock (100 MHz), and — in the generic
+//! baseline — the DRAM clock (333.3 MHz). Asynchronous FIFOs bridge them
+//! (Fig 23); this module just converts cycle counts to wall time and
+//! accumulates per-phase totals.
+
+/// A named clock domain.
+#[derive(Clone, Copy, Debug)]
+pub struct ClockDomain {
+    pub name: &'static str,
+    pub freq_hz: f64,
+}
+
+impl ClockDomain {
+    pub const HOST: ClockDomain = ClockDomain { name: "host", freq_hz: 100.8e6 };
+    pub const ENGINE: ClockDomain = ClockDomain { name: "engine", freq_hz: 100.0e6 };
+    pub const DRAM: ClockDomain = ClockDomain { name: "dram", freq_hz: 333.3e6 };
+
+    #[inline]
+    pub fn secs(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.freq_hz
+    }
+
+    #[inline]
+    pub fn cycles(&self, secs: f64) -> u64 {
+        (secs * self.freq_hz).ceil() as u64
+    }
+}
+
+/// Accumulates named phase durations (Load Commands, Load Gemm, Compute,
+/// Read Output, … — the Fig 36 stages) so benches can print the §5-style
+/// compute-vs-whole-process breakdown.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimes {
+    phases: Vec<(String, f64)>,
+}
+
+impl PhaseTimes {
+    pub fn new() -> PhaseTimes {
+        PhaseTimes::default()
+    }
+
+    pub fn add(&mut self, phase: &str, secs: f64) {
+        if let Some(e) = self.phases.iter_mut().find(|(n, _)| n == phase) {
+            e.1 += secs;
+        } else {
+            self.phases.push((phase.to_string(), secs));
+        }
+    }
+
+    pub fn get(&self, phase: &str) -> f64 {
+        self.phases.iter().find(|(n, _)| n == phase).map(|(_, s)| *s).unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.phases
+    }
+
+    /// Merge another accumulator into this one.
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        for (n, s) in &other.phases {
+            self.add(n, *s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frequencies_match_paper() {
+        assert_eq!(ClockDomain::HOST.freq_hz, 100.8e6);
+        assert_eq!(ClockDomain::ENGINE.freq_hz, 100.0e6);
+        assert!((ClockDomain::DRAM.freq_hz - 333.3e6).abs() < 1e3);
+    }
+
+    #[test]
+    fn cycle_second_conversion() {
+        let e = ClockDomain::ENGINE;
+        assert_eq!(e.secs(100_000_000), 1.0);
+        assert_eq!(e.cycles(0.5), 50_000_000);
+    }
+
+    #[test]
+    fn phases_accumulate_and_merge() {
+        let mut p = PhaseTimes::new();
+        p.add("compute", 1.0);
+        p.add("compute", 0.5);
+        p.add("load", 2.0);
+        assert_eq!(p.get("compute"), 1.5);
+        assert_eq!(p.total(), 3.5);
+        let mut q = PhaseTimes::new();
+        q.add("load", 1.0);
+        p.merge(&q);
+        assert_eq!(p.get("load"), 3.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Asynchronous FIFO model (paper Fig 23: Xilinx FIFO Generator with
+//! independent read/write clock domains and full/empty handshake).
+//!
+//! The functional simulator uses it as a plain bounded queue with
+//! occupancy statistics; the timed simulator additionally consults
+//! `full()`/`empty()` each cycle exactly as the RTL's `wr_en`/`rd_en`
+//! gating does. Clock-domain crossing latency is accounted for by the
+//! enclosing [`crate::hw::clock`] scheduler, not inside the queue.
+
+use std::collections::VecDeque;
+
+/// Bounded FIFO with handshake flags and statistics.
+#[derive(Clone, Debug)]
+pub struct Fifo<T> {
+    name: &'static str,
+    depth: usize,
+    q: VecDeque<T>,
+    /// Total successful pushes.
+    pub pushes: u64,
+    /// Total successful pops.
+    pub pops: u64,
+    /// Rejected pushes (would-overflow) — the RTL would drop/stall here.
+    pub overflows: u64,
+    /// Rejected pops (empty) — pipeline bubbles.
+    pub underflows: u64,
+    /// Highest occupancy observed (for depth sizing, §4.4).
+    pub high_water: usize,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(name: &'static str, depth: usize) -> Fifo<T> {
+        assert!(depth > 0);
+        Fifo {
+            name,
+            depth,
+            q: VecDeque::with_capacity(depth),
+            pushes: 0,
+            pops: 0,
+            overflows: 0,
+            underflows: 0,
+            high_water: 0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// `full` flag — write-side handshake.
+    pub fn full(&self) -> bool {
+        self.q.len() >= self.depth
+    }
+
+    /// Try to push; returns false (and counts an overflow) when full.
+    pub fn push(&mut self, v: T) -> bool {
+        if self.full() {
+            self.overflows += 1;
+            return false;
+        }
+        self.q.push_back(v);
+        self.pushes += 1;
+        self.high_water = self.high_water.max(self.q.len());
+        true
+    }
+
+    /// Push that panics on overflow — for flows where the producer is
+    /// gated by `full()` and overflow is a simulator bug.
+    pub fn push_checked(&mut self, v: T) {
+        assert!(self.push(v), "FIFO {} overflow (depth {})", self.name, self.depth);
+    }
+
+    /// Try to pop; returns None (and counts an underflow) when empty.
+    pub fn pop(&mut self) -> Option<T> {
+        match self.q.pop_front() {
+            Some(v) => {
+                self.pops += 1;
+                Some(v)
+            }
+            None => {
+                self.underflows += 1;
+                None
+            }
+        }
+    }
+
+    /// Peek without consuming.
+    pub fn front(&self) -> Option<&T> {
+        self.q.front()
+    }
+
+    /// Free slots (what FrontPanel's EP_READY is derived from, §4.3).
+    pub fn space(&self) -> usize {
+        self.depth - self.q.len()
+    }
+
+    pub fn clear(&mut self) {
+        self.q.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handshake_flags() {
+        let mut f: Fifo<u32> = Fifo::new("t", 2);
+        assert!(f.is_empty() && !f.full());
+        assert!(f.push(1));
+        assert!(f.push(2));
+        assert!(f.full());
+        assert!(!f.push(3)); // overflow counted, value dropped
+        assert_eq!(f.overflows, 1);
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), None);
+        assert_eq!(f.underflows, 1);
+    }
+
+    #[test]
+    fn statistics_track_occupancy() {
+        let mut f: Fifo<u8> = Fifo::new("t", 8);
+        for i in 0..5 {
+            f.push(i);
+        }
+        f.pop();
+        f.push(9);
+        assert_eq!(f.high_water, 5);
+        assert_eq!(f.pushes, 6);
+        assert_eq!(f.pops, 1);
+        assert_eq!(f.space(), 3);
+    }
+
+    #[test]
+    fn fifo_preserves_order_property() {
+        crate::prop::forall(
+            0xF1F0,
+            500,
+            |r| {
+                let n = r.below(64) + 1;
+                (0..n).map(|_| r.next_u32()).collect::<Vec<_>>()
+            },
+            |xs| {
+                let mut f: Fifo<u32> = Fifo::new("p", xs.len());
+                for &x in xs {
+                    f.push_checked(x);
+                }
+                let out: Vec<u32> = std::iter::from_fn(|| f.pop()).collect();
+                if out == *xs {
+                    Ok(())
+                } else {
+                    Err("order not preserved".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,193 @@
+//! Pipelined floating-point unit models (§4.2): at 100 MHz the Xilinx
+//! Floating-Point 5.0 IP instances have these latencies —
+//!
+//! | unit        | latency | pipelined?                       |
+//! |-------------|---------|----------------------------------|
+//! | multiplier  | 6       | yes — new operands every cycle   |
+//! | adder       | 2       | used as accumulator → new data only after the previous add finishes |
+//! | comparator  | 2       | accumulating (running max)       |
+//! | divider     | 6       | yes                              |
+//!
+//! The timed engine drives these cycle by cycle; the functional engine
+//! bypasses them and calls [`crate::fp16`] directly (same numerics).
+
+use crate::fp16::F16;
+
+/// Kinds of FP16 unit, with their §4.2 latencies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FpuKind {
+    Mul,
+    Add,
+    Cmp,
+    Div,
+}
+
+impl FpuKind {
+    /// Cycles from operand issue to result-ready at 100 MHz.
+    pub fn latency(self) -> u32 {
+        match self {
+            FpuKind::Mul => 6,
+            FpuKind::Add => 2,
+            FpuKind::Cmp => 2,
+            FpuKind::Div => 6,
+        }
+    }
+
+    /// Issue interval: 1 = fully pipelined (can accept operands every
+    /// cycle), latency = not pipelined in accumulate mode (§4.2: "new
+    /// data should be fed after the accumulators or comparators are
+    /// finished rather than in every cycle").
+    pub fn initiation_interval(self, accumulate: bool) -> u32 {
+        if accumulate {
+            self.latency()
+        } else {
+            1
+        }
+    }
+
+    fn compute(self, a: F16, b: F16) -> F16 {
+        match self {
+            FpuKind::Mul => a.mul(b),
+            FpuKind::Add => a.add(b),
+            FpuKind::Div => a.div(b),
+            FpuKind::Cmp => {
+                // Comparator in max mode: returns the larger (running max).
+                if b.gt(a) {
+                    b
+                } else {
+                    a
+                }
+            }
+        }
+    }
+}
+
+/// In-flight operation.
+#[derive(Clone, Copy, Debug)]
+struct InFlight {
+    result: F16,
+    ready_at: u64,
+}
+
+/// A pipelined FP16 unit: operands go in with `issue`, results come out
+/// `latency` cycles later. Statistics track utilization for the §Perf
+/// pipeline-occupancy analysis.
+#[derive(Clone, Debug)]
+pub struct PipelinedFpu {
+    pub kind: FpuKind,
+    pipe: std::collections::VecDeque<InFlight>,
+    last_issue: Option<u64>,
+    accumulate: bool,
+    /// Total operations issued.
+    pub issued: u64,
+    /// Cycle of the last result retirement (for utilization accounting).
+    pub last_ready: u64,
+}
+
+impl PipelinedFpu {
+    pub fn new(kind: FpuKind, accumulate: bool) -> PipelinedFpu {
+        PipelinedFpu {
+            kind,
+            pipe: std::collections::VecDeque::new(),
+            last_issue: None,
+            accumulate,
+            issued: 0,
+            last_ready: 0,
+        }
+    }
+
+    /// Can a new operand pair be accepted at `now`? Enforces the
+    /// initiation interval.
+    pub fn can_issue(&self, now: u64) -> bool {
+        match self.last_issue {
+            None => true,
+            Some(t) => now >= t + self.kind.initiation_interval(self.accumulate) as u64,
+        }
+    }
+
+    /// Issue `a ∘ b` at cycle `now`; result available at
+    /// `now + latency`. Panics if the issue rule is violated (a simulator
+    /// bug, not a model condition).
+    pub fn issue(&mut self, now: u64, a: F16, b: F16) {
+        assert!(self.can_issue(now), "{:?} II violation at {now}", self.kind);
+        let ready_at = now + self.kind.latency() as u64;
+        self.pipe.push_back(InFlight { result: self.kind.compute(a, b), ready_at });
+        self.last_issue = Some(now);
+        self.issued += 1;
+        self.last_ready = self.last_ready.max(ready_at);
+    }
+
+    /// Retire the oldest result if it is ready at `now`.
+    pub fn retire(&mut self, now: u64) -> Option<F16> {
+        if let Some(f) = self.pipe.front() {
+            if f.ready_at <= now {
+                let r = self.pipe.pop_front().unwrap();
+                return Some(r.result);
+            }
+        }
+        None
+    }
+
+    /// Number of in-flight operations.
+    pub fn in_flight(&self) -> usize {
+        self.pipe.len()
+    }
+
+    pub fn busy(&self) -> bool {
+        !self.pipe.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latencies_match_paper() {
+        assert_eq!(FpuKind::Mul.latency(), 6);
+        assert_eq!(FpuKind::Add.latency(), 2);
+        assert_eq!(FpuKind::Cmp.latency(), 2);
+        assert_eq!(FpuKind::Div.latency(), 6);
+    }
+
+    #[test]
+    fn pipelined_mult_accepts_every_cycle() {
+        let mut m = PipelinedFpu::new(FpuKind::Mul, false);
+        for t in 0..6u64 {
+            assert!(m.can_issue(t));
+            m.issue(t, F16::from_f32(2.0), F16::from_f32(t as f32));
+        }
+        // First result ready at t=6, then one per cycle.
+        assert!(m.retire(5).is_none());
+        for t in 6..12u64 {
+            let r = m.retire(t).expect("result ready");
+            assert_eq!(r.to_f32(), 2.0 * (t - 6) as f32);
+        }
+    }
+
+    #[test]
+    fn accumulator_waits_full_latency() {
+        let mut a = PipelinedFpu::new(FpuKind::Add, true);
+        a.issue(0, F16::ONE, F16::ONE);
+        assert!(!a.can_issue(1)); // II = latency = 2
+        assert!(a.can_issue(2));
+        assert_eq!(a.retire(2).unwrap().to_f32(), 2.0);
+    }
+
+    #[test]
+    fn comparator_acts_as_running_max() {
+        let mut c = PipelinedFpu::new(FpuKind::Cmp, true);
+        c.issue(0, F16::from_f32(3.0), F16::from_f32(5.0));
+        assert_eq!(c.retire(2).unwrap().to_f32(), 5.0);
+        c.issue(2, F16::from_f32(5.0), F16::from_f32(-1.0));
+        assert_eq!(c.retire(4).unwrap().to_f32(), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "II violation")]
+    fn issue_rule_enforced() {
+        let mut a = PipelinedFpu::new(FpuKind::Add, true);
+        a.issue(0, F16::ONE, F16::ONE);
+        a.issue(1, F16::ONE, F16::ONE);
+    }
+}

@@ -1,0 +1,136 @@
+//! Spartan-6 Memory Controller Block (MCB) + DMA model — the substrate
+//! of the *generic accelerator* baseline (§3.4.2, Figs 14–18).
+//!
+//! Per Xilinx UG388, a read command sees 22–32 cycles of latency before
+//! data streams out; the paper's DMA FSM (Fig 18) spends a minimum of 4
+//! cycles per transaction (command, rd_en, data, idle). Small random
+//! accesses — which im2col's scattered reads produce — therefore "empty
+//! the pipeline and waste the parallel computing resource" (§3.4.2): this
+//! model makes that cost explicit.
+
+/// MCB port timing parameters (DRAM clock domain, 333.3 MHz).
+#[derive(Clone, Copy, Debug)]
+pub struct McbConfig {
+    /// Command→first-data latency in DRAM cycles (UG388: 22–32; a fixed
+    /// mid value keeps the model deterministic).
+    pub read_latency: u32,
+    /// Data beats per cycle after latency (16-bit DDR port streams one
+    /// 32-bit word per controller cycle).
+    pub words_per_cycle: u32,
+    /// Minimum DMA FSM overhead per transaction (Fig 18: 4 states).
+    pub dma_overhead: u32,
+    /// Max burst length per command (MCB BL is 64 × 32-bit words).
+    pub max_burst: u32,
+}
+
+impl Default for McbConfig {
+    fn default() -> McbConfig {
+        McbConfig { read_latency: 27, words_per_cycle: 1, dma_overhead: 4, max_burst: 64 }
+    }
+}
+
+/// Cycle-cost and traffic accounting for one MCB port.
+#[derive(Clone, Debug)]
+pub struct McbPort {
+    pub cfg: McbConfig,
+    /// Total DRAM-domain cycles consumed.
+    pub cycles: u64,
+    /// 32-bit words moved.
+    pub words: u64,
+    /// Transactions issued.
+    pub txns: u64,
+}
+
+impl McbPort {
+    pub fn new(cfg: McbConfig) -> McbPort {
+        McbPort { cfg, cycles: 0, words: 0, txns: 0 }
+    }
+
+    /// Cost of one burst read of `words` 32-bit words, splitting at the
+    /// MCB's max burst length.
+    pub fn read_burst(&mut self, words: u32) -> u64 {
+        let mut remaining = words;
+        let mut total = 0u64;
+        while remaining > 0 {
+            let burst = remaining.min(self.cfg.max_burst);
+            let c = self.cfg.dma_overhead as u64
+                + self.cfg.read_latency as u64
+                + (burst / self.cfg.words_per_cycle).max(1) as u64;
+            total += c;
+            self.txns += 1;
+            self.words += burst as u64;
+            remaining -= burst;
+        }
+        self.cycles += total;
+        total
+    }
+
+    /// Cost of one burst write (no read latency; command + data beats).
+    pub fn write_burst(&mut self, words: u32) -> u64 {
+        let mut remaining = words;
+        let mut total = 0u64;
+        while remaining > 0 {
+            let burst = remaining.min(self.cfg.max_burst);
+            let c = self.cfg.dma_overhead as u64 + burst as u64;
+            total += c;
+            self.txns += 1;
+            self.words += burst as u64;
+            remaining -= burst;
+        }
+        self.cycles += total;
+        total
+    }
+
+    /// Effective words/cycle over everything issued so far — shows how
+    /// access granularity wrecks DRAM efficiency (§3.4.2).
+    pub fn efficiency(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.words as f64 / self.cycles as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_word_read_pays_full_latency() {
+        let mut p = McbPort::new(McbConfig::default());
+        let c = p.read_burst(1);
+        assert_eq!(c, 4 + 27 + 1);
+        assert_eq!(p.txns, 1);
+    }
+
+    #[test]
+    fn long_bursts_amortize_latency() {
+        let mut small = McbPort::new(McbConfig::default());
+        let mut big = McbPort::new(McbConfig::default());
+        for _ in 0..64 {
+            small.read_burst(1);
+        }
+        big.read_burst(64);
+        assert_eq!(small.words, big.words);
+        assert!(small.cycles > 10 * big.cycles, "{} vs {}", small.cycles, big.cycles);
+        assert!(big.efficiency() > 0.6);
+        assert!(small.efficiency() < 0.05);
+    }
+
+    #[test]
+    fn bursts_split_at_max_length() {
+        let mut p = McbPort::new(McbConfig::default());
+        p.read_burst(100); // 64 + 36 → two transactions
+        assert_eq!(p.txns, 2);
+        assert_eq!(p.words, 100);
+    }
+
+    #[test]
+    fn writes_skip_read_latency() {
+        let mut p = McbPort::new(McbConfig::default());
+        let w = p.write_burst(16);
+        let mut q = McbPort::new(McbConfig::default());
+        let r = q.read_burst(16);
+        assert!(w < r);
+    }
+}

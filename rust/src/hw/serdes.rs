@@ -1,0 +1,130 @@
+//! SERDES before BRAM (paper Fig 34): the USB path delivers 32-bit words
+//! whose low 16 bits carry one FP16 value; eight consecutive values are
+//! shifted into one 128-bit cache word (`BURST_LEN = 8` cycles per word).
+
+use crate::fp16::F16;
+use crate::hw::bram::Word128;
+
+/// Deserializer: collects 16-bit values into 128-bit (8-lane) words.
+#[derive(Clone, Debug, Default)]
+pub struct Serdes {
+    buf: Vec<F16>,
+    /// Completed 128-bit words emitted.
+    pub words_out: u64,
+    /// Input values consumed.
+    pub values_in: u64,
+}
+
+impl Serdes {
+    pub fn new() -> Serdes {
+        Serdes::default()
+    }
+
+    /// Shift in one 32-bit USB word (low 16 bits valid — §4.4); returns a
+    /// completed 128-bit word every 8th call.
+    pub fn push_u32(&mut self, w: u32) -> Option<Word128> {
+        self.push_f16(F16::from_bits(w as u16))
+    }
+
+    pub fn push_f16(&mut self, v: F16) -> Option<Word128> {
+        self.buf.push(v);
+        self.values_in += 1;
+        if self.buf.len() == 8 {
+            let mut word = [F16::ZERO; 8];
+            word.copy_from_slice(&self.buf);
+            self.buf.clear();
+            self.words_out += 1;
+            Some(word)
+        } else {
+            None
+        }
+    }
+
+    /// Flush a partial group zero-padded (end of a transfer whose length
+    /// is not a multiple of 8 — the host pads, but be defensive).
+    pub fn flush(&mut self) -> Option<Word128> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let mut word = [F16::ZERO; 8];
+        for (i, &v) in self.buf.iter().enumerate() {
+            word[i] = v;
+        }
+        self.buf.clear();
+        self.words_out += 1;
+        Some(word)
+    }
+
+    /// Deserialize a full FP16 stream into 128-bit words (bulk helper for
+    /// the functional path; identical grouping to the cycle path).
+    pub fn pack_stream(values: &[F16]) -> Vec<Word128> {
+        let mut s = Serdes::new();
+        let mut out = Vec::with_capacity(values.len().div_ceil(8));
+        for &v in values {
+            if let Some(w) = s.push_f16(v) {
+                out.push(w);
+            }
+        }
+        if let Some(w) = s.flush() {
+            out.push(w);
+        }
+        out
+    }
+}
+
+/// Serializer: 128-bit result words back to a 16-bit stream (the
+/// "parallel results are serialized and written back" step, Fig 15/35).
+pub fn unpack_stream(words: &[Word128], take: usize) -> Vec<F16> {
+    words.iter().flatten().copied().take(take).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_every_8_values() {
+        let mut s = Serdes::new();
+        for i in 0..7u16 {
+            assert!(s.push_u32(i as u32).is_none());
+        }
+        let w = s.push_u32(7).expect("8th value completes a word");
+        assert_eq!(w[0].to_bits(), 0);
+        assert_eq!(w[7].to_bits(), 7);
+        assert_eq!(s.words_out, 1);
+    }
+
+    #[test]
+    fn flush_pads_with_zero() {
+        let mut s = Serdes::new();
+        s.push_f16(F16::ONE);
+        let w = s.flush().unwrap();
+        assert_eq!(w[0], F16::ONE);
+        assert_eq!(w[1], F16::ZERO);
+        assert!(s.flush().is_none());
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_property() {
+        crate::prop::forall(
+            0x5E12DE5,
+            300,
+            |r| {
+                let n = r.below(100) + 1;
+                (0..n).map(|_| F16::from_bits(r.next_u32() as u16)).collect::<Vec<_>>()
+            },
+            |vals| {
+                let words = Serdes::pack_stream(vals);
+                if words.len() != vals.len().div_ceil(8) {
+                    return Err("wrong word count".into());
+                }
+                let back = unpack_stream(&words, vals.len());
+                if back.iter().zip(vals).all(|(a, b)| a.to_bits() == b.to_bits()) {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,31 @@
+//! # FusionAccel
+//!
+//! A full-system reproduction of *"FusionAccel: A General Re-configurable
+//! Deep Learning Inference Accelerator on FPGA for Convolutional Neural
+//! Networks"* (Shi Shi, 2019) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! * **L3 (this crate)** — the PC-host driver software (paper Fig 36), a
+//!   functional + cycle-level simulator of the RTL accelerator (Figs
+//!   22–27, 31–35), and a multi-device inference coordinator.
+//! * **L2 (python/compile/model.py)** — SqueezeNet v1.1 / AlexNet in JAX,
+//!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT as
+//!   the FP32 "Caffe-CPU" oracle.
+//! * **L1 (python/compile/kernels/)** — Pallas im2col+GEMM convolution
+//!   and pooling kernels (interpret mode), validated against `ref.py`.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index,
+//! and EXPERIMENTS.md for measured results.
+
+pub mod accel;
+pub mod algos;
+pub mod benchkit;
+pub mod coordinator;
+pub mod engine;
+pub mod fp16;
+pub mod host;
+pub mod hw;
+pub mod net;
+pub mod perfmodel;
+pub mod prop;
+pub mod resources;
+pub mod runtime;

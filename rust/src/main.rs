@@ -1,0 +1,183 @@
+//! `fusionaccel` CLI — the leader entrypoint.
+//!
+//! Subcommands (args are hand-parsed: no clap in the offline crate set):
+//!
+//! * `infer`     — run a network through the simulated device
+//! * `commands`  — print the 96-bit command stream (Table 2) for a net
+//! * `resources` — resource model (Table 3) for a configuration
+//! * `timing`    — §5 timing model for a network/parallelism/link
+//! * `selftest`  — quick functional sanity run
+
+use anyhow::{bail, Context, Result};
+
+use fusionaccel::accel::stream::StreamAccelerator;
+use fusionaccel::benchkit;
+use fusionaccel::host::driver::HostDriver;
+use fusionaccel::host::preprocess;
+use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::graph::Network;
+use fusionaccel::net::tensor::Tensor;
+use fusionaccel::net::weights::{synthesize_weights, Blobs};
+use fusionaccel::net::{alexnet, prototxt, squeezenet};
+use fusionaccel::perfmodel;
+use fusionaccel::resources::{estimate, AccelConfig, XC6SLX45};
+use fusionaccel::runtime;
+
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_else(|| "help".to_string());
+    let mut flags = std::collections::HashMap::new();
+    let mut key: Option<String> = None;
+    for a in args {
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some(k) = key.take() {
+                flags.insert(k, "true".to_string());
+            }
+            key = Some(stripped.to_string());
+        } else if let Some(k) = key.take() {
+            flags.insert(k, a);
+        }
+    }
+    if let Some(k) = key.take() {
+        flags.insert(k, "true".to_string());
+    }
+    Args { cmd, flags }
+}
+
+fn load_net(flags: &std::collections::HashMap<String, String>) -> Result<Network> {
+    match flags.get("net").map(|s| s.as_str()).unwrap_or("squeezenet") {
+        "squeezenet" => Ok(squeezenet::squeezenet_v11()),
+        "alexnet" => Ok(alexnet::alexnet()),
+        "googlenet" => Ok(fusionaccel::net::googlenet::googlenet()),
+        path => prototxt::load(std::path::Path::new(path))
+            .with_context(|| format!("parse prototxt {path}")),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    match args.cmd.as_str() {
+        "commands" => {
+            let net = load_net(&args.flags)?;
+            println!("network {} — {} engine layers", net.name, net.engine_layers().len());
+            let rows: Vec<Vec<String>> = net
+                .engine_layers()
+                .iter()
+                .map(|s| vec![s.name.clone(), s.command_hex()])
+                .collect();
+            benchkit::table(&["layer", "96-bit command"], &rows);
+        }
+        "resources" => {
+            let p: u32 = args.flags.get("parallelism").map(|v| v.parse()).transpose()?.unwrap_or(8);
+            let prec: u32 = args.flags.get("precision").map(|v| v.parse()).transpose()?.unwrap_or(16);
+            let est = estimate(AccelConfig { parallelism: p, precision: prec });
+            println!("configuration: parallelism {p}, FP{prec} (Fig 40 macros)");
+            let rows: Vec<Vec<String>> = est
+                .utilization(&XC6SLX45)
+                .into_iter()
+                .map(|(n, used, avail, f)| {
+                    vec![n.to_string(), used.to_string(), avail.to_string(), format!("{:.0}%", 100.0 * f)]
+                })
+                .collect();
+            benchkit::table(&["resource", "used", "available", "utilization"], &rows);
+            println!("fits XC6SLX45: {}", est.fits(&XC6SLX45));
+        }
+        "timing" => {
+            let net = load_net(&args.flags)?;
+            let p: u64 = args.flags.get("parallelism").map(|v| v.parse()).transpose()?.unwrap_or(8);
+            let link = match args.flags.get("link").map(|s| s.as_str()).unwrap_or("usb3") {
+                "usb3" => UsbLink::usb3_frontpanel(),
+                "pcie" => UsbLink::pcie_gen2_x4(),
+                other => bail!("unknown link {other} (usb3|pcie)"),
+            };
+            let rep = perfmodel::model_network(&net, p, link);
+            println!("network {} @ parallelism {p}", net.name);
+            println!("compute        {:.2} s ({} engine cycles)", rep.compute_seconds(), rep.engine_cycles());
+            println!(
+                "transfer       {:.2} s ({} txns, {:.1} MB)",
+                rep.transfer_seconds(),
+                rep.total_txns(),
+                rep.total_bytes() as f64 / 1e6
+            );
+            println!("whole process  {:.2} s", rep.whole_process_seconds());
+        }
+        "infer" => {
+            let net = load_net(&args.flags)?;
+            let blobs = match args.flags.get("weights") {
+                Some(path) => Blobs::load(std::path::Path::new(path))?,
+                None => {
+                    let dir = runtime::artifacts_dir();
+                    let default = dir.join("squeezenet_weights.bin");
+                    if net.name == "squeezenet_v1.1" && default.exists() {
+                        Blobs::load(&default)?
+                    } else {
+                        println!("(no --weights given: synthesizing, seed 1)");
+                        synthesize_weights(&net, 1)
+                    }
+                }
+            };
+            let (side, ch) = net.out_shape(0);
+            let image = match args.flags.get("image") {
+                Some(path) => {
+                    let b = Blobs::load(std::path::Path::new(path))?;
+                    let (dims, data) = b.get("input")?;
+                    Tensor::from_vec(dims[0] as usize, dims[1] as usize, dims[2] as usize, data.to_vec())
+                }
+                None if side == 227 && ch == 3 => preprocess::standard_input(1),
+                None => bail!("network input {side}×{side}×{ch} needs --image <fawb file>"),
+            };
+            println!(
+                "running {} ({} layers) on the simulated device...",
+                net.name,
+                net.engine_layers().len()
+            );
+            let t0 = std::time::Instant::now();
+            let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+            let res = HostDriver::new(&mut dev).forward(&net, &blobs, &image)?;
+            println!(
+                "wall {:.2} s | modeled compute {:.2} s, link {:.2} s ({} txns)",
+                t0.elapsed().as_secs_f64(),
+                res.compute_seconds(),
+                dev.usb.total_seconds(),
+                dev.usb.total_txns()
+            );
+            println!("top-5:");
+            for (c, p) in res.top_k(5) {
+                println!("  class {c:>4}  p = {p:.6}");
+            }
+        }
+        "selftest" => {
+            let mut net = Network::new("selftest");
+            let inp = net.input(14, 3);
+            let c = net.engine(fusionaccel::net::layer::LayerSpec::conv("c", 3, 1, 1, 14, 3, 8, 0), inp);
+            let g = net.engine(fusionaccel::net::layer::LayerSpec::avgpool("g", 14, 1, 14, 8), c);
+            net.softmax("prob", g);
+            let blobs = synthesize_weights(&net, 3);
+            let image = Tensor::from_vec(14, 14, 3, vec![0.25; 14 * 14 * 3]);
+            let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+            let res = HostDriver::new(&mut dev).forward(&net, &blobs, &image)?;
+            anyhow::ensure!((res.probs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+            println!("selftest OK ({} engine passes)", dev.stats.passes);
+        }
+        _ => {
+            println!(
+                "fusionaccel — FusionAccel (Shi, 2019) reproduction\n\n\
+                 USAGE: fusionaccel <command> [--flags]\n\n\
+                 commands:\n\
+                 \x20 infer     --net squeezenet|alexnet|googlenet|<prototxt> [--weights f.bin] [--image f.bin]\n\
+                 \x20 commands  --net ...          print the Table 2 command stream\n\
+                 \x20 resources --parallelism 8 --precision 16\n\
+                 \x20 timing    --net ... --parallelism 8 --link usb3|pcie\n\
+                 \x20 selftest\n\n\
+                 examples: quickstart, squeezenet_e2e, alexnet_infer,\n\
+                 parallelism_sweep, serve (cargo run --release --example <name>)"
+            );
+        }
+    }
+    Ok(())
+}

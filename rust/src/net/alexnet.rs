@@ -1,0 +1,76 @@
+//! AlexNet (LRN-free variant) — the paper's runtime-reconfigurability
+//! claim (§6.2): "other networks like AlexNet are also supported" because
+//! the engine scale does not depend on network shape. LRN layers are not
+//! implemented by the accelerator (§3.2), so this is the LRN-free AlexNet
+//! the paper references; fully connected layers are expressed as
+//! convolutions (§3.2: "fully connected layers are merged to convolutional
+//! layers").
+
+use super::graph::Network;
+use super::layer::LayerSpec;
+
+/// Build AlexNet (without LRN) for a 227×227×3 input.
+///
+/// conv1 11×11/s4 → pool → conv2 5×5 (pad 2) → pool → conv3..5 3×3 →
+/// pool → fc6 as 6×6 conv → fc7/fc8 as 1×1 convs → softmax.
+/// fc8 has no ReLU — it uses the `skip_relu` command extension.
+pub fn alexnet() -> Network {
+    let mut n = Network::new("alexnet");
+    let inp = n.input(227, 3);
+
+    let conv1 = n.engine(LayerSpec::conv("conv1", 11, 4, 0, 227, 3, 96, 0), inp); // 55
+    let pool1 = n.engine(LayerSpec::maxpool("pool1", 3, 2, 55, 96), conv1); // 27
+    let conv2 = n.engine(LayerSpec::conv("conv2", 5, 1, 2, 27, 96, 256, 0), pool1); // 27
+    let pool2 = n.engine(LayerSpec::maxpool("pool2", 3, 2, 27, 256), conv2); // 13
+    let conv3 = n.engine(LayerSpec::conv("conv3", 3, 1, 1, 13, 256, 384, 0), pool2);
+    let conv4 = n.engine(LayerSpec::conv("conv4", 3, 1, 1, 13, 384, 384, 0), conv3);
+    let conv5 = n.engine(LayerSpec::conv("conv5", 3, 1, 1, 13, 384, 256, 0), conv4);
+    let pool5 = n.engine(LayerSpec::maxpool("pool5", 3, 2, 13, 256), conv5); // 6
+
+    // FC layers as convolutions. The classic AlexNet has 4096-wide FC
+    // layers; we keep the structure but narrow them to stay inside the
+    // weight-cache budget per pass — the driver re-slices output channel
+    // groups anyway, so this is a capacity choice, not an architecture one.
+    let fc6 = n.engine(LayerSpec::conv("fc6", 6, 1, 0, 6, 256, 512, 0), pool5); // 1×1×512
+    let fc7 = n.engine(LayerSpec::conv("fc7", 1, 1, 0, 1, 512, 512, 0), fc6);
+    let mut fc8_spec = LayerSpec::conv("fc8", 1, 1, 0, 1, 512, 1000, 0);
+    fc8_spec.skip_relu = true;
+    let fc8 = n.engine(fc8_spec, fc7);
+    n.softmax("prob", fc8);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_check_out() {
+        let n = alexnet();
+        n.check().unwrap();
+        assert_eq!(n.out_shape(n.find("conv1").unwrap()), (55, 96));
+        assert_eq!(n.out_shape(n.find("pool5").unwrap()), (6, 256));
+        assert_eq!(n.out_shape(n.find("fc8").unwrap()), (1, 1000));
+    }
+
+    #[test]
+    fn fc8_skips_relu_via_extension_bit() {
+        let n = alexnet();
+        let specs = n.engine_layers();
+        let fc8 = specs.iter().find(|s| s.name == "fc8").unwrap();
+        assert!(fc8.skip_relu);
+        let d = fc8.encode();
+        assert_eq!(d[0] & 0xF, 0x9); // conv(1) | skip_relu(8)
+        let back = super::super::layer::LayerSpec::decode("fc8", d).unwrap();
+        assert!(back.skip_relu);
+    }
+
+    #[test]
+    fn alexnet_macs_exceed_squeezenet() {
+        // The 11×11 conv1 and 5×5 conv2 dominate; AlexNet has far more
+        // MACs than SqueezeNet (the motivation for SqueezeNet, §4.1).
+        let a = alexnet().total_macs();
+        let s = crate::net::squeezenet::squeezenet_v11().total_macs();
+        assert!(a > s, "alexnet {a} vs squeezenet {s}");
+    }
+}

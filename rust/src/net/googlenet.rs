@@ -1,0 +1,189 @@
+//! GoogLeNet (LRN-free) — the second network the paper names as
+//! LRN-free-capable (§3.2: "there are AlexNet and GoogLeNet without LRN
+//! proposed"). Exercises everything SqueezeNet doesn't:
+//!
+//! * 4-way inception concats (vs SqueezeNet's 2-way fire modules),
+//!   including the max-pool projection branch — which needs *padded*
+//!   "same" pooling (3×3/s1/p1), driving the `maxpool_padded` /
+//!   `pool_pad` machinery through the whole device stack;
+//! * 7×7/s2 stem convolution (pixel-granularity GEMM slicing);
+//! * a 7×7 global average pool.
+//!
+//! Geometry follows Szegedy et al. 2015 at 227×227 input (stem conv
+//! pad 3 → 114 … global pool 7×7); LRN layers are dropped per §3.2.
+
+use super::graph::Network;
+use super::layer::LayerSpec;
+
+/// One inception module's channel plan.
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    n: &mut Network,
+    name: &str,
+    input: usize,
+    side: u32,
+    in_ch: u32,
+    c1: u32,
+    c3r: u32,
+    c3: u32,
+    c5r: u32,
+    c5: u32,
+    pp: u32,
+) -> (usize, u32) {
+    let b1 = n.engine(LayerSpec::conv(&format!("{name}/1x1"), 1, 1, 0, side, in_ch, c1, 0), input);
+    let r3 = n.engine(
+        LayerSpec::conv(&format!("{name}/3x3_reduce"), 1, 1, 0, side, in_ch, c3r, 0),
+        input,
+    );
+    let b3 = n.engine(LayerSpec::conv(&format!("{name}/3x3"), 3, 1, 1, side, c3r, c3, 0), r3);
+    let r5 = n.engine(
+        LayerSpec::conv(&format!("{name}/5x5_reduce"), 1, 1, 0, side, in_ch, c5r, 0),
+        input,
+    );
+    let b5 = n.engine(LayerSpec::conv(&format!("{name}/5x5"), 5, 1, 2, side, c5r, c5, 0), r5);
+    // The pool-projection branch: "same" max pooling then 1×1 conv.
+    let mp = n.engine(
+        LayerSpec::maxpool_padded(&format!("{name}/pool"), 3, 1, 1, side, in_ch),
+        input,
+    );
+    let bp = n.engine(LayerSpec::conv(&format!("{name}/pool_proj"), 1, 1, 0, side, in_ch, pp, 0), mp);
+    let cat = n.concat(&format!("{name}/output"), vec![b1, b3, b5, bp]);
+    (cat, c1 + c3 + c5 + pp)
+}
+
+/// Build GoogLeNet (inception v1, LRN-free) for a 227×227×3 input.
+pub fn googlenet() -> Network {
+    let mut n = Network::new("googlenet");
+    let inp = n.input(227, 3);
+    // Stem: 7×7/2 pad 3 → 114; pool/2 → 57; 1×1; 3×3 pad 1; pool/2 → 28.
+    let c1 = n.engine(LayerSpec::conv("conv1/7x7_s2", 7, 2, 3, 227, 3, 64, 0), inp);
+    let p1 = n.engine(LayerSpec::maxpool("pool1/3x3_s2", 3, 2, 114, 64), c1); // 57
+    let c2r = n.engine(LayerSpec::conv("conv2/3x3_reduce", 1, 1, 0, 57, 64, 64, 0), p1);
+    let c2 = n.engine(LayerSpec::conv("conv2/3x3", 3, 1, 1, 57, 64, 192, 0), c2r);
+    let p2 = n.engine(LayerSpec::maxpool("pool2/3x3_s2", 3, 2, 57, 192), c2); // 29
+
+    let side = n.out_shape(p2).0;
+    let (i3a, ch) = inception(&mut n, "inception_3a", p2, side, 192, 64, 96, 128, 16, 32, 32);
+    let (i3b, ch) = inception(&mut n, "inception_3b", i3a, side, ch, 128, 128, 192, 32, 96, 64);
+    debug_assert_eq!(ch, 480);
+    let p3 = n.engine(LayerSpec::maxpool("pool3/3x3_s2", 3, 2, side, ch), i3b);
+
+    let side = n.out_shape(p3).0;
+    let (i4a, ch) = inception(&mut n, "inception_4a", p3, side, 480, 192, 96, 208, 16, 48, 64);
+    let (i4b, ch) = inception(&mut n, "inception_4b", i4a, side, ch, 160, 112, 224, 24, 64, 64);
+    let (i4c, ch) = inception(&mut n, "inception_4c", i4b, side, ch, 128, 128, 256, 24, 64, 64);
+    let (i4d, ch) = inception(&mut n, "inception_4d", i4c, side, ch, 112, 144, 288, 32, 64, 64);
+    let (i4e, ch) = inception(&mut n, "inception_4e", i4d, side, ch, 256, 160, 320, 32, 128, 128);
+    debug_assert_eq!(ch, 832);
+    let p4 = n.engine(LayerSpec::maxpool("pool4/3x3_s2", 3, 2, side, ch), i4e);
+
+    let side = n.out_shape(p4).0;
+    let (i5a, ch) = inception(&mut n, "inception_5a", p4, side, 832, 256, 160, 320, 32, 128, 128);
+    let (i5b, ch) = inception(&mut n, "inception_5b", i5a, side, ch, 384, 192, 384, 48, 128, 128);
+    debug_assert_eq!(ch, 1024);
+
+    let gap = n.engine(LayerSpec::avgpool("pool5/avg", side, 1, side, ch), i5b);
+    // loss3/classifier is a FC = 1×1 conv to 1000 classes, no ReLU.
+    let mut fc = LayerSpec::conv("loss3/classifier", 1, 1, 0, 1, 1024, 1000, 0);
+    fc.skip_relu = true;
+    let fc = n.engine(fc, gap);
+    n.softmax("prob", fc);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::stream::StreamAccelerator;
+    use crate::host::driver::{forward_functional, HostDriver};
+    use crate::hw::usb::UsbLink;
+    use crate::net::tensor::Tensor;
+    use crate::net::weights::synthesize_weights;
+    use crate::prop::Rng;
+
+    #[test]
+    fn structure_checks_out() {
+        let net = googlenet();
+        net.check().unwrap();
+        assert_eq!(net.out_shape(net.find("conv1/7x7_s2").unwrap()), (114, 64));
+        assert_eq!(net.out_shape(net.find("inception_3a/output").unwrap()).1, 256);
+        assert_eq!(net.out_shape(net.find("inception_5b/output").unwrap()).1, 1024);
+        assert_eq!(net.out_shape(net.find("loss3/classifier").unwrap()), (1, 1000));
+        // 2 convs per reduce-branch etc: 6 convs + 1 pool per inception ×9
+        // + stem/classifier: substantial layer count.
+        assert!(net.engine_layers().len() > 60, "{}", net.engine_layers().len());
+    }
+
+    #[test]
+    fn same_pooling_keeps_surface() {
+        let spec = LayerSpec::maxpool_padded("p", 3, 1, 1, 28, 16);
+        assert_eq!(spec.o_side, 28);
+        // command round-trips with padding in the low nibble.
+        let d = spec.encode();
+        let back = LayerSpec::decode("p", d).unwrap();
+        assert_eq!(back.padding, 1);
+        assert_eq!(back.o_side, 28);
+    }
+
+    #[test]
+    fn padded_maxpool_matches_reference_semantics() {
+        // "same" pooling: each output = max of the 3×3 neighborhood with
+        // borders clipped; compare against a direct computation.
+        let mut rng = Rng::new(0x611);
+        let side = 6;
+        let vals: Vec<f32> = (0..side * side * 8).map(|_| rng.normal(1.0).abs()).collect();
+        let inp = Tensor::from_vec(side, side, 8, vals.clone()).to_f16();
+        let spec = LayerSpec::maxpool_padded("p", 3, 1, 1, side as u32, 8);
+        let out = crate::engine::functional::maxpool(&spec, &inp);
+        assert_eq!(out.h, side);
+        let f32in = Tensor::from_vec(side, side, 8, vals);
+        for y in 0..side {
+            for x in 0..side {
+                for c in 0..8 {
+                    let mut best = 0f32; // RTL 0-init
+                    for ky in 0..3usize {
+                        for kx in 0..3usize {
+                            let (iy, ix) = (y + ky, x + kx);
+                            if iy < 1 || ix < 1 || iy > side || ix > side {
+                                continue;
+                            }
+                            let v = crate::fp16::F16::from_f32(f32in.get(iy - 1, ix - 1, c)).to_f32();
+                            best = best.max(v);
+                        }
+                    }
+                    assert_eq!(out.get(y, x, c).to_f32(), best, "({y},{x},{c})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inception_module_runs_on_device_bit_exact() {
+        // One inception module end-to-end through the sliced device flow
+        // vs the functional engine — covers the padded-pool slicing path.
+        let mut n = Network::new("inception_mini");
+        let inp = n.input(10, 16);
+        let (_, ch) = inception(&mut n, "inc", inp, 10, 16, 8, 4, 8, 4, 8, 8);
+        assert_eq!(ch, 32);
+        n.check().unwrap();
+        let blobs = synthesize_weights(&n, 21);
+        let mut rng = Rng::new(3);
+        let img = Tensor::from_vec(10, 10, 16, (0..10 * 10 * 16).map(|_| rng.normal(1.0)).collect());
+        let reference = forward_functional(&n, &blobs, &img).unwrap();
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let res = HostDriver::new(&mut dev).forward(&n, &blobs, &img).unwrap();
+        for (i, (a, b)) in res.outputs.iter().zip(&reference).enumerate() {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "node {} ({})", i, n.node_name(i));
+            }
+        }
+    }
+
+    #[test]
+    fn googlenet_macs_about_1_5g() {
+        let net = googlenet();
+        let macs = net.total_macs();
+        // GoogLeNet ≈ 1.5 G MACs at 224/227 input.
+        assert!(macs > 1_000_000_000 && macs < 2_500_000_000, "{macs}");
+    }
+}

@@ -1,0 +1,194 @@
+//! Network graph: the host-side representation of a CNN to forward.
+//!
+//! The engine executes only conv+ReLU / max-pool / avg-pool (§4.2); the
+//! remaining inference glue — concatenation of parallel fire-module
+//! branches, dropout (identity at inference), softmax — runs on the host
+//! (§4.1, §5), exactly as in the paper.
+
+use super::layer::{LayerSpec, OpType};
+
+/// A node in the inference DAG. `usize` edges index into `Network::nodes`.
+#[derive(Clone, Debug)]
+pub enum Node {
+    /// Network input: `side × side × ch` image.
+    Input { side: u32, ch: u32 },
+    /// A layer executed on the accelerator engine.
+    Engine { spec: LayerSpec, input: usize },
+    /// Host-side channel concatenation (fire-module merge).
+    Concat { name: String, inputs: Vec<usize> },
+    /// Host-side softmax over a 1×1×C tensor.
+    Softmax { name: String, input: usize },
+}
+
+/// An inference network: DAG of nodes, topologically ordered by
+/// construction (every edge points backwards).
+#[derive(Clone, Debug, Default)]
+pub struct Network {
+    pub name: String,
+    pub nodes: Vec<Node>,
+}
+
+impl Network {
+    pub fn new(name: &str) -> Network {
+        Network { name: name.to_string(), nodes: Vec::new() }
+    }
+
+    pub fn input(&mut self, side: u32, ch: u32) -> usize {
+        self.push(Node::Input { side, ch })
+    }
+
+    pub fn engine(&mut self, spec: LayerSpec, input: usize) -> usize {
+        self.push(Node::Engine { spec, input })
+    }
+
+    pub fn concat(&mut self, name: &str, inputs: Vec<usize>) -> usize {
+        self.push(Node::Concat { name: name.to_string(), inputs })
+    }
+
+    pub fn softmax(&mut self, name: &str, input: usize) -> usize {
+        self.push(Node::Softmax { name: name.to_string(), input })
+    }
+
+    fn push(&mut self, node: Node) -> usize {
+        if let Node::Engine { input, .. } = &node {
+            assert!(*input < self.nodes.len(), "edge must point backwards");
+        }
+        self.nodes.push(node);
+        self.nodes.len() - 1
+    }
+
+    /// (side, channels) produced by node `i`.
+    pub fn out_shape(&self, i: usize) -> (u32, u32) {
+        match &self.nodes[i] {
+            Node::Input { side, ch } => (*side, *ch),
+            Node::Engine { spec, .. } => (spec.o_side, spec.o_ch),
+            Node::Concat { inputs, .. } => {
+                let (side, _) = self.out_shape(inputs[0]);
+                let ch = inputs.iter().map(|&j| self.out_shape(j).1).sum();
+                (side, ch)
+            }
+            Node::Softmax { input, .. } => self.out_shape(*input),
+        }
+    }
+
+    /// All engine layers in execution order — what gets loaded into
+    /// CMDFIFO (§4.4: "theoretically 341 layers are supported").
+    pub fn engine_layers(&self) -> Vec<&LayerSpec> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n {
+                Node::Engine { spec, .. } => Some(spec),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Name of node `i` for reporting.
+    pub fn node_name(&self, i: usize) -> &str {
+        match &self.nodes[i] {
+            Node::Input { .. } => "input",
+            Node::Engine { spec, .. } => &spec.name,
+            Node::Concat { name, .. } => name,
+            Node::Softmax { name, .. } => name,
+        }
+    }
+
+    /// Look up a node index by name.
+    pub fn find(&self, name: &str) -> Option<usize> {
+        (0..self.nodes.len()).find(|&i| self.node_name(i) == name)
+    }
+
+    /// Total multiply-accumulates of all engine conv layers.
+    pub fn total_macs(&self) -> u64 {
+        self.engine_layers().iter().map(|s| s.macs()).sum()
+    }
+
+    /// Total FP16 weights transferred (incl. channel padding + biases).
+    pub fn total_weights(&self) -> u64 {
+        self.engine_layers().iter().map(|s| s.weight_total()).sum()
+    }
+
+    /// Validate shape consistency along every edge.
+    pub fn check(&self) -> Result<(), String> {
+        for (i, node) in self.nodes.iter().enumerate() {
+            match node {
+                Node::Input { .. } => {}
+                Node::Engine { spec, input } => {
+                    let (side, ch) = self.out_shape(*input);
+                    if side != spec.i_side {
+                        return Err(format!(
+                            "{}: input side {} != spec {}",
+                            spec.name, side, spec.i_side
+                        ));
+                    }
+                    if ch != spec.i_ch {
+                        return Err(format!(
+                            "{}: input ch {} != spec {}",
+                            spec.name, ch, spec.i_ch
+                        ));
+                    }
+                    match spec.op {
+                        OpType::MaxPool | OpType::AvgPool if spec.i_ch != spec.o_ch => {
+                            return Err(format!("{}: pooling must keep channels", spec.name));
+                        }
+                        _ => {}
+                    }
+                    let _ = i;
+                }
+                Node::Concat { inputs, name } => {
+                    let (side, _) = self.out_shape(inputs[0]);
+                    for &j in inputs {
+                        if self.out_shape(j).0 != side {
+                            return Err(format!("{name}: concat surface mismatch"));
+                        }
+                    }
+                }
+                Node::Softmax { .. } => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Network {
+        let mut n = Network::new("tiny");
+        let inp = n.input(8, 3);
+        let c1 = n.engine(LayerSpec::conv("c1", 3, 1, 1, 8, 3, 4, 0), inp);
+        let e1 = n.engine(LayerSpec::conv("e1", 1, 1, 0, 8, 4, 4, 1), c1);
+        let e3 = n.engine(LayerSpec::conv("e3", 3, 1, 1, 8, 4, 4, 5), c1);
+        let cat = n.concat("cat", vec![e1, e3]);
+        let p = n.engine(LayerSpec::avgpool("gap", 8, 1, 8, 8), cat);
+        n.softmax("prob", p);
+        n
+    }
+
+    #[test]
+    fn shapes_propagate() {
+        let n = tiny();
+        n.check().unwrap();
+        let cat = n.find("cat").unwrap();
+        assert_eq!(n.out_shape(cat), (8, 8));
+        let gap = n.find("gap").unwrap();
+        assert_eq!(n.out_shape(gap), (1, 8));
+    }
+
+    #[test]
+    fn check_catches_bad_edges() {
+        let mut n = Network::new("bad");
+        let inp = n.input(8, 3);
+        n.engine(LayerSpec::conv("c1", 3, 1, 1, 9, 3, 4, 0), inp); // wrong i_side
+        assert!(n.check().is_err());
+    }
+
+    #[test]
+    fn engine_layer_enumeration() {
+        let n = tiny();
+        let names: Vec<_> = n.engine_layers().iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names, vec!["c1", "e1", "e3", "gap"]);
+        assert!(n.total_macs() > 0);
+    }
+}

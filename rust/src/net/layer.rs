@@ -1,0 +1,372 @@
+//! Engine layer descriptors and the 96-bit configuration command encoding
+//! (paper Fig 33 + Table 2).
+//!
+//! The encoding implemented here is the one actually used by the shipped
+//! product (reverse-engineered from Table 2's "Command" column), which
+//! differs slightly from the draft layout of Fig 33:
+//!
+//! ```text
+//! dword0: [31:24] output_side  [23:16] input_side  [15:8] kernel
+//!         [7:4] stride         [3:0] op_type
+//! dword1: [31:16] output_channels            [15:0] input_channels
+//! dword2: [31:16] stride2 (= stride·kernel)  [15:8] kernel_size (= k²)
+//!         [7:4] slot           [3:0] padding
+//! ```
+//!
+//! e.g. conv1 of SqueezeNet v1.1 encodes as `71E3_0321 0040_0003
+//! 0006_0900` — o=0x71=113, i=0xE3=227, k=3, s=2, op=1(conv);
+//! o_ch=64, i_ch=3; stride2=6, kernel_size=9, slot=0, pad=0 — exactly the
+//! Table 2 row. Fig 33's 3-bit op codes (001/100/101) are the draft; the
+//! product uses 1=conv, 2=maxpool, 3=avgpool.
+//!
+//! **Extension** (documented deviation): bit 3 of the op nibble is spare
+//! in the paper; we use it as a `skip_relu` flag so networks whose final
+//! convolution has no activation (e.g. AlexNet fc8) run on the engine
+//! without a host-side fixup. All paper commands have this bit 0.
+
+/// Engine operation selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpType {
+    Idle,
+    /// Convolution fused with ReLU (§3.2: ReLU is a sign-bit test).
+    ConvRelu,
+    MaxPool,
+    AvgPool,
+}
+
+impl OpType {
+    pub fn code(self) -> u32 {
+        match self {
+            OpType::Idle => 0,
+            OpType::ConvRelu => 1,
+            OpType::MaxPool => 2,
+            OpType::AvgPool => 3,
+        }
+    }
+
+    pub fn from_code(c: u32) -> Option<OpType> {
+        Some(match c {
+            0 => OpType::Idle,
+            1 => OpType::ConvRelu,
+            2 => OpType::MaxPool,
+            3 => OpType::AvgPool,
+            _ => return None,
+        })
+    }
+}
+
+/// Parameters of a single engine layer — the information carried by one
+/// 12-byte command (Fig 33), plus the layer name for reporting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerSpec {
+    pub name: String,
+    pub op: OpType,
+    pub kernel: u32,
+    pub stride: u32,
+    /// Symmetric zero padding applied by the host before slicing.
+    pub padding: u32,
+    pub i_side: u32,
+    pub o_side: u32,
+    pub i_ch: u32,
+    pub o_ch: u32,
+    /// Parallel-layer tag (§4.4): bits [1:0] = position among parallel
+    /// layers, bits [3:2] = number of parallel siblings. 0 for sequential
+    /// layers, 1/5 for the expand1x1/expand3x3 pair of a fire module.
+    pub slot: u32,
+    /// Extension: suppress the fused ReLU (see module docs).
+    pub skip_relu: bool,
+}
+
+impl LayerSpec {
+    pub fn conv(
+        name: &str,
+        kernel: u32,
+        stride: u32,
+        padding: u32,
+        i_side: u32,
+        i_ch: u32,
+        o_ch: u32,
+        slot: u32,
+    ) -> LayerSpec {
+        let o_side = (i_side + 2 * padding - kernel) / stride + 1;
+        LayerSpec {
+            name: name.to_string(),
+            op: OpType::ConvRelu,
+            kernel,
+            stride,
+            padding,
+            i_side,
+            o_side,
+            i_ch,
+            o_ch,
+            slot,
+            skip_relu: false,
+        }
+    }
+
+    /// Max-pooling layer. `o_side` follows Caffe's ceil mode — windows may
+    /// overhang the bottom/right border and are clipped (§4.1's pool3/pool5
+    /// "padding layers" in Table 1 are exactly this overhang).
+    pub fn maxpool(name: &str, kernel: u32, stride: u32, i_side: u32, ch: u32) -> LayerSpec {
+        let o_side = (i_side - kernel).div_ceil(stride) + 1;
+        LayerSpec {
+            name: name.to_string(),
+            op: OpType::MaxPool,
+            kernel,
+            stride,
+            padding: 0,
+            i_side,
+            o_side,
+            i_ch: ch,
+            o_ch: ch,
+            slot: 0,
+            skip_relu: false,
+        }
+    }
+
+    /// Max-pooling with symmetric padding — needed by GoogLeNet's
+    /// inception pool branches (3×3/s1/p1 "same" pooling). Padding is
+    /// virtual: windows are clipped on all four sides, which for max is
+    /// equivalent to -inf padding (and interacts with the RTL's 0x0000
+    /// comparator init exactly like border clipping does).
+    pub fn maxpool_padded(
+        name: &str,
+        kernel: u32,
+        stride: u32,
+        padding: u32,
+        i_side: u32,
+        ch: u32,
+    ) -> LayerSpec {
+        let o_side = (i_side + 2 * padding - kernel).div_ceil(stride) + 1;
+        LayerSpec { padding, ..LayerSpec::maxpool(name, kernel, stride, i_side, ch) }
+            .with_o_side(o_side)
+    }
+
+    fn with_o_side(mut self, o: u32) -> LayerSpec {
+        self.o_side = o;
+        self
+    }
+
+    pub fn avgpool(name: &str, kernel: u32, stride: u32, i_side: u32, ch: u32) -> LayerSpec {
+        let o_side = (i_side - kernel) / stride + 1;
+        LayerSpec {
+            name: name.to_string(),
+            op: OpType::AvgPool,
+            kernel,
+            stride,
+            padding: 0,
+            i_side,
+            o_side,
+            i_ch: ch,
+            o_ch: ch,
+            slot: 0,
+            skip_relu: false,
+        }
+    }
+
+    /// `kernel_size` field value (k², precomputed host-side to save an
+    /// on-chip integer multiplier — §4.4).
+    pub fn kernel_size(&self) -> u32 {
+        self.kernel * self.kernel
+    }
+
+    /// `stride2` field value (stride·kernel — §4.4).
+    pub fn stride2(&self) -> u32 {
+        self.stride * self.kernel
+    }
+
+    /// Number of output elements (Table 2 "size" column).
+    pub fn output_elems(&self) -> u64 {
+        self.o_side as u64 * self.o_side as u64 * self.o_ch as u64
+    }
+
+    /// Number of multiply-accumulates this layer performs (conv only).
+    pub fn macs(&self) -> u64 {
+        match self.op {
+            OpType::ConvRelu => {
+                self.output_elems() * self.kernel_size() as u64 * self.i_ch as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Total FP16 weight values incl. bias that the host transfers
+    /// (Table 2 "total" column). The input channel count is padded to the
+    /// lane width (8): conv1's 3 channels become 8, giving 9·8·64+64 =
+    /// 4672 exactly as in the table.
+    pub fn weight_total(&self) -> u64 {
+        match self.op {
+            OpType::ConvRelu => {
+                let ic_padded = (self.i_ch as u64).div_ceil(8) * 8;
+                self.kernel_size() as u64 * ic_padded * self.o_ch as u64 + self.o_ch as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Encode to the three command dwords.
+    pub fn encode(&self) -> [u32; 3] {
+        assert!(self.o_side < 256 && self.i_side < 256, "side field is 8 bits");
+        assert!(self.kernel < 256 && self.stride < 16 && self.padding < 16);
+        assert!(
+            self.kernel_size() < 256 && self.stride2() < 65536,
+            "{}: kernel {} overflows the 8-bit kernel_size field (max 15)",
+            self.name,
+            self.kernel
+        );
+        assert!(self.i_ch < 65536 && self.o_ch < 65536 && self.slot < 16);
+        let op = self.op.code() | if self.skip_relu { 0x8 } else { 0 };
+        [
+            (self.o_side << 24) | (self.i_side << 16) | (self.kernel << 8) | (self.stride << 4) | op,
+            (self.o_ch << 16) | self.i_ch,
+            (self.stride2() << 16) | (self.kernel_size() << 8) | (self.slot << 4) | self.padding,
+        ]
+    }
+
+    /// Decode from the three command dwords (what the CSB does — §4.1).
+    pub fn decode(name: &str, d: [u32; 3]) -> Option<LayerSpec> {
+        let op_raw = d[0] & 0xF;
+        let op = OpType::from_code(op_raw & 0x7)?;
+        let spec = LayerSpec {
+            name: name.to_string(),
+            op,
+            kernel: (d[0] >> 8) & 0xFF,
+            stride: (d[0] >> 4) & 0xF,
+            padding: d[2] & 0xF,
+            i_side: (d[0] >> 16) & 0xFF,
+            o_side: (d[0] >> 24) & 0xFF,
+            i_ch: d[1] & 0xFFFF,
+            o_ch: (d[1] >> 16) & 0xFFFF,
+            slot: (d[2] >> 4) & 0xF,
+            skip_relu: op_raw & 0x8 != 0,
+        };
+        // Validate the redundant precomputed fields.
+        if (d[2] >> 16) != spec.stride2() || ((d[2] >> 8) & 0xFF) != spec.kernel_size() {
+            return None;
+        }
+        Some(spec)
+    }
+
+    /// Render the command like Table 2's hex column, e.g.
+    /// `71E3_0321 0040_0003 0006_0900`.
+    pub fn command_hex(&self) -> String {
+        let d = self.encode();
+        format!(
+            "{:04X}_{:04X} {:04X}_{:04X} {:04X}_{:04X}",
+            d[0] >> 16,
+            d[0] & 0xFFFF,
+            d[1] >> 16,
+            d[1] & 0xFFFF,
+            d[2] >> 16,
+            d[2] & 0xFFFF
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv1_matches_table2() {
+        let conv1 = LayerSpec::conv("conv1", 3, 2, 0, 227, 3, 64, 0);
+        assert_eq!(conv1.o_side, 113);
+        assert_eq!(conv1.command_hex(), "71E3_0321 0040_0003 0006_0900");
+    }
+
+    #[test]
+    fn pool1_matches_table2() {
+        let pool1 = LayerSpec::maxpool("pool1", 3, 2, 113, 64);
+        assert_eq!(pool1.o_side, 56);
+        assert_eq!(pool1.command_hex(), "3871_0322 0040_0040 0006_0900");
+    }
+
+    #[test]
+    fn expand3x3_matches_table2() {
+        let e = LayerSpec::conv("fire2/expand3x3", 3, 1, 1, 56, 16, 64, 5);
+        assert_eq!(e.o_side, 56);
+        assert_eq!(e.command_hex(), "3838_0311 0040_0010 0003_0951");
+    }
+
+    #[test]
+    fn pool10_matches_table2() {
+        let p = LayerSpec::avgpool("pool10", 14, 1, 14, 1000);
+        assert_eq!(p.o_side, 1);
+        assert_eq!(p.command_hex(), "010E_0E13 03E8_03E8 000E_C400");
+    }
+
+    #[test]
+    fn ceil_mode_pooling_sides() {
+        // pool3: 56 → 28 and pool5: 28 → 14 need ceil mode (Table 2).
+        assert_eq!(LayerSpec::maxpool("pool3", 3, 2, 56, 128).o_side, 28);
+        assert_eq!(LayerSpec::maxpool("pool5", 3, 2, 28, 256).o_side, 14);
+        // pool1: exact division, same under floor and ceil.
+        assert_eq!(LayerSpec::maxpool("pool1", 3, 2, 113, 64).o_side, 56);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        crate::prop::forall(
+            0xC0DE,
+            2000,
+            |r| {
+                let kernel = *r.choose(&[1u32, 3, 5, 7, 11, 14]);
+                let stride = r.range(1, 4) as u32;
+                let i_side = r.range(kernel as i64, 255) as u32;
+                let mut s = LayerSpec::conv(
+                    "t",
+                    kernel,
+                    stride,
+                    r.range(0, 3) as u32,
+                    i_side,
+                    r.range(1, 4096) as u32,
+                    r.range(1, 4096) as u32,
+                    r.range(0, 15) as u32,
+                );
+                s.skip_relu = r.chance(0.3);
+                match r.below(3) {
+                    0 => {
+                        s.op = OpType::MaxPool;
+                        s.padding = 0;
+                    }
+                    1 => {
+                        s.op = OpType::AvgPool;
+                        s.padding = 0;
+                    }
+                    _ => {}
+                }
+                s
+            },
+            |s| {
+                if s.o_side >= 256 {
+                    return Ok(()); // out of field range, skip
+                }
+                let d = s.encode();
+                let back = LayerSpec::decode("t", d)
+                    .ok_or_else(|| "decode failed".to_string())?;
+                if back == *s {
+                    Ok(())
+                } else {
+                    Err(format!("roundtrip mismatch: {back:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn decode_rejects_bad_derived_fields() {
+        let s = LayerSpec::conv("x", 3, 2, 0, 227, 3, 64, 0);
+        let mut d = s.encode();
+        d[2] ^= 0x0001_0000; // corrupt stride2
+        assert!(LayerSpec::decode("x", d).is_none());
+    }
+
+    #[test]
+    fn macs_and_weight_totals() {
+        let conv1 = LayerSpec::conv("conv1", 3, 2, 0, 227, 3, 64, 0);
+        assert_eq!(conv1.output_elems(), 113 * 113 * 64);
+        assert_eq!(conv1.weight_total(), 4672); // Table 2 "total": 9·8·64 + 64
+        let sq = LayerSpec::conv("fire2/squeeze1x1", 1, 1, 0, 56, 64, 16, 0);
+        assert_eq!(sq.weight_total(), 1040); // Table 2: 1·64·16 + 16
+    }
+}

@@ -1,0 +1,17 @@
+//! CNN network substrate: tensors, layer specs + 96-bit commands, the
+//! inference DAG, SqueezeNet v1.1 / AlexNet builders, a Caffe prototxt
+//! front-end, and the FAWB weight container shared with Python.
+
+pub mod alexnet;
+pub mod googlenet;
+pub mod graph;
+pub mod layer;
+pub mod prototxt;
+pub mod squeezenet;
+pub mod tensor;
+pub mod weights;
+
+pub use graph::{Network, Node};
+pub use layer::{LayerSpec, OpType};
+pub use tensor::{ConvWeights, Tensor, TensorF16, TensorF32};
+pub use weights::Blobs;

@@ -1,0 +1,264 @@
+//! NHWC tensors (batch = 1, so effectively HWC) — the storage layout the
+//! paper picks in §3.4.1: input channel is the lowest dimension so that a
+//! 128-bit BRAM word holds 8 consecutive FP16 channels, which is what the
+//! 8 parallel lanes consume each cycle.
+
+use crate::fp16::F16;
+
+/// A dense H×W×C tensor over element type `T`, row-major with channels
+/// innermost (NHWC with N=1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<T>,
+}
+
+pub type TensorF32 = Tensor<f32>;
+pub type TensorF16 = Tensor<F16>;
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Tensor<T> {
+        Tensor { h, w, c, data: vec![T::default(); h * w * c] }
+    }
+
+    pub fn from_vec(h: usize, w: usize, c: usize, data: Vec<T>) -> Tensor<T> {
+        assert_eq!(data.len(), h * w * c, "tensor shape/data mismatch");
+        Tensor { h, w, c, data }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn idx(&self, y: usize, x: usize, ch: usize) -> usize {
+        debug_assert!(y < self.h && x < self.w && ch < self.c);
+        (y * self.w + x) * self.c + ch
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> T {
+        self.data[self.idx(y, x, ch)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: T) {
+        let i = self.idx(y, x, ch);
+        self.data[i] = v;
+    }
+
+    /// Channel-concatenate (the host-side Concat of fire modules; §4.1 —
+    /// "Concatenation layers can be realized by Numpy matrix operations").
+    pub fn concat_channels(parts: &[&Tensor<T>]) -> Tensor<T> {
+        assert!(!parts.is_empty());
+        let (h, w) = (parts[0].h, parts[0].w);
+        for p in parts {
+            assert_eq!((p.h, p.w), (h, w), "concat surface mismatch");
+        }
+        let c: usize = parts.iter().map(|p| p.c).sum();
+        let mut out = Tensor::zeros(h, w, c);
+        for y in 0..h {
+            for x in 0..w {
+                let mut co = 0;
+                for p in parts {
+                    for ch in 0..p.c {
+                        out.set(y, x, co, p.get(y, x, ch));
+                        co += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Zero-pad the surface by `pad` on every side (the pre-padding the
+    /// host does before slicing GEMM blocks; Fig 16 discussion).
+    pub fn pad_surface(&self, pad: usize) -> Tensor<T> {
+        if pad == 0 {
+            return self.clone();
+        }
+        let mut out = Tensor::zeros(self.h + 2 * pad, self.w + 2 * pad, self.c);
+        for y in 0..self.h {
+            for x in 0..self.w {
+                for ch in 0..self.c {
+                    out.set(y + pad, x + pad, ch, self.get(y, x, ch));
+                }
+            }
+        }
+        out
+    }
+
+    /// Pad the channel dimension up to a multiple of `lane` with zeros
+    /// (§3.4.3: "we do not need to consider padding 0 in the input channel
+    /// dimension except the initial layer whose channel is 3").
+    pub fn pad_channels_to(&self, lane: usize) -> Tensor<T> {
+        let cp = self.c.div_ceil(lane) * lane;
+        if cp == self.c {
+            return self.clone();
+        }
+        let mut out = Tensor::zeros(self.h, self.w, cp);
+        for y in 0..self.h {
+            for x in 0..self.w {
+                for ch in 0..self.c {
+                    out.set(y, x, ch, self.get(y, x, ch));
+                }
+            }
+        }
+        out
+    }
+
+    /// Drop channels above `c` (undo lane padding).
+    pub fn truncate_channels(&self, c: usize) -> Tensor<T> {
+        assert!(c <= self.c);
+        let mut out = Tensor::zeros(self.h, self.w, c);
+        for y in 0..self.h {
+            for x in 0..self.w {
+                for ch in 0..c {
+                    out.set(y, x, ch, self.get(y, x, ch));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl TensorF32 {
+    /// Quantize to FP16 (one rounding per element) — what happens when the
+    /// host loads FP32 blobs onto the FP16 device.
+    pub fn to_f16(&self) -> TensorF16 {
+        Tensor {
+            h: self.h,
+            w: self.w,
+            c: self.c,
+            data: self.data.iter().map(|&x| F16::from_f32(x)).collect(),
+        }
+    }
+}
+
+impl TensorF16 {
+    /// Widen to FP32 (exact).
+    pub fn to_f32(&self) -> TensorF32 {
+        Tensor {
+            h: self.h,
+            w: self.w,
+            c: self.c,
+            data: self.data.iter().map(|x| x.to_f32()).collect(),
+        }
+    }
+
+    /// Max absolute difference vs an f32 tensor (for oracle comparisons).
+    pub fn max_abs_diff(&self, other: &TensorF32) -> f32 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a.to_f32() - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Convolution weights in O-H-W-I layout: `[o_ch][ky][kx][i_ch]`, matching
+/// the NHWC data layout so the 8-lane channel groups line up.
+#[derive(Clone, Debug)]
+pub struct ConvWeights {
+    pub o_ch: usize,
+    pub k: usize,
+    pub i_ch: usize,
+    /// len = o_ch * k * k * i_ch
+    pub data: Vec<f32>,
+    /// len = o_ch
+    pub bias: Vec<f32>,
+}
+
+impl ConvWeights {
+    pub fn zeros(o_ch: usize, k: usize, i_ch: usize) -> ConvWeights {
+        ConvWeights {
+            o_ch,
+            k,
+            i_ch,
+            data: vec![0.0; o_ch * k * k * i_ch],
+            bias: vec![0.0; o_ch],
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, oc: usize, ky: usize, kx: usize, ic: usize) -> usize {
+        ((oc * self.k + ky) * self.k + kx) * self.i_ch + ic
+    }
+
+    #[inline]
+    pub fn get(&self, oc: usize, ky: usize, kx: usize, ic: usize) -> f32 {
+        self.data[self.idx(oc, ky, kx, ic)]
+    }
+
+    pub fn set(&mut self, oc: usize, ky: usize, kx: usize, ic: usize, v: f32) {
+        let i = self.idx(oc, ky, kx, ic);
+        self.data[i] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut t: TensorF32 = Tensor::zeros(3, 4, 5);
+        t.set(2, 3, 4, 9.0);
+        assert_eq!(t.get(2, 3, 4), 9.0);
+        assert_eq!(t.idx(0, 0, 1), 1); // channels innermost
+        assert_eq!(t.idx(0, 1, 0), 5);
+        assert_eq!(t.idx(1, 0, 0), 20);
+    }
+
+    #[test]
+    fn concat_matches_channel_order() {
+        let mut a: TensorF32 = Tensor::zeros(2, 2, 1);
+        let mut b: TensorF32 = Tensor::zeros(2, 2, 2);
+        a.set(1, 1, 0, 1.0);
+        b.set(1, 1, 1, 2.0);
+        let c = Tensor::concat_channels(&[&a, &b]);
+        assert_eq!(c.c, 3);
+        assert_eq!(c.get(1, 1, 0), 1.0);
+        assert_eq!(c.get(1, 1, 2), 2.0);
+    }
+
+    #[test]
+    fn pad_surface_places_interior() {
+        let mut t: TensorF32 = Tensor::zeros(2, 2, 1);
+        t.set(0, 0, 0, 7.0);
+        let p = t.pad_surface(1);
+        assert_eq!((p.h, p.w), (4, 4));
+        assert_eq!(p.get(1, 1, 0), 7.0);
+        assert_eq!(p.get(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn channel_padding_roundtrip() {
+        let mut t: TensorF32 = Tensor::zeros(1, 1, 3);
+        t.set(0, 0, 2, 5.0);
+        let p = t.pad_channels_to(8);
+        assert_eq!(p.c, 8);
+        assert_eq!(p.get(0, 0, 2), 5.0);
+        assert_eq!(p.get(0, 0, 7), 0.0);
+        let u = p.truncate_channels(3);
+        assert_eq!(u, t);
+    }
+
+    #[test]
+    fn f16_roundtrip_quantization() {
+        let t = TensorF32::from_vec(1, 1, 3, vec![1.0, 0.333333, -2.5]);
+        let h = t.to_f16();
+        let back = h.to_f32();
+        assert_eq!(back.get(0, 0, 0), 1.0);
+        assert!((back.get(0, 0, 1) - 0.333333).abs() < 1e-3);
+        assert_eq!(back.get(0, 0, 2), -2.5);
+    }
+}

@@ -1,0 +1,246 @@
+//! Weight/tensor container ("FAWB" format) shared with the Python side.
+//!
+//! The paper extracts FP32 weights from a caffemodel into an `.npz`
+//! (extract.py, Fig 29) which the host script consumes. We use a simpler
+//! self-describing binary container written by `python/compile/aot.py`
+//! and read here — no numpy dependency on the request path.
+//!
+//! Layout (little endian):
+//! ```text
+//! magic  b"FAWB"            (4 bytes)
+//! count  u32                number of tensors
+//! per tensor:
+//!   name_len u16, name bytes (utf-8)
+//!   ndim u8, dims u32 × ndim
+//!   data f32 × prod(dims)
+//! ```
+//!
+//! Convolution weights are stored in **OHWI** layout
+//! (`[o_ch][ky][kx][i_ch]`) to line up with the NHWC activation layout
+//! (§3.4.1); biases as 1-D `[o_ch]`.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::graph::{Network, Node};
+use super::layer::OpType;
+use super::tensor::ConvWeights;
+use crate::prop::Rng;
+
+/// A named tensor bundle.
+#[derive(Clone, Debug, Default)]
+pub struct Blobs {
+    pub tensors: BTreeMap<String, (Vec<u32>, Vec<f32>)>,
+}
+
+impl Blobs {
+    pub fn new() -> Blobs {
+        Blobs::default()
+    }
+
+    pub fn insert(&mut self, name: &str, dims: Vec<u32>, data: Vec<f32>) {
+        assert_eq!(dims.iter().product::<u32>() as usize, data.len(), "{name}");
+        self.tensors.insert(name.to_string(), (dims, data));
+    }
+
+    pub fn get(&self, name: &str) -> Result<(&[u32], &[f32])> {
+        let (dims, data) = self
+            .tensors
+            .get(name)
+            .with_context(|| format!("missing tensor {name:?}"))?;
+        Ok((dims, data))
+    }
+
+    /// Serialize to FAWB bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"FAWB");
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, (dims, data)) in &self.tensors {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(dims.len() as u8);
+            for d in dims {
+                out.extend_from_slice(&d.to_le_bytes());
+            }
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Parse FAWB bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Blobs> {
+        let mut cur = std::io::Cursor::new(bytes);
+        let mut magic = [0u8; 4];
+        cur.read_exact(&mut magic)?;
+        if &magic != b"FAWB" {
+            bail!("bad magic {magic:?}");
+        }
+        let count = read_u32(&mut cur)?;
+        let mut blobs = Blobs::new();
+        for _ in 0..count {
+            let name_len = read_u16(&mut cur)? as usize;
+            let mut name = vec![0u8; name_len];
+            cur.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name not utf-8")?;
+            let ndim = read_u8(&mut cur)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut cur)?);
+            }
+            let n: usize = dims.iter().product::<u32>() as usize;
+            let mut data = vec![0f32; n];
+            let mut buf = vec![0u8; n * 4];
+            cur.read_exact(&mut buf)?;
+            for (i, chunk) in buf.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            blobs.insert(&name, dims, data);
+        }
+        Ok(blobs)
+    }
+
+    pub fn load(path: &Path) -> Result<Blobs> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Blobs::from_bytes(&bytes)
+    }
+
+    /// Extract the conv weights + bias for an engine layer. Names follow
+    /// the `<layer>_w` / `<layer>_b` convention (slashes kept).
+    pub fn conv_weights(&self, layer: &str, k: usize, i_ch: usize, o_ch: usize) -> Result<ConvWeights> {
+        let (wd, w) = self.get(&format!("{layer}_w"))?;
+        let (bd, b) = self.get(&format!("{layer}_b"))?;
+        if wd != [o_ch as u32, k as u32, k as u32, i_ch as u32] {
+            bail!("{layer}: weight dims {wd:?} != OHWI [{o_ch},{k},{k},{i_ch}]");
+        }
+        if bd != [o_ch as u32] {
+            bail!("{layer}: bias dims {bd:?}");
+        }
+        Ok(ConvWeights { o_ch, k, i_ch, data: w.to_vec(), bias: b.to_vec() })
+    }
+}
+
+fn read_u8(cur: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    cur.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_u16(cur: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    cur.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(cur: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    cur.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Generate deterministic synthetic weights for every conv layer of a
+/// network (He-scaled normals). Substitutes for the pre-trained
+/// caffemodel (DESIGN.md §3) — the identity-with-oracle claim is about
+/// dataflow and rounding, not the particular weight values.
+pub fn synthesize_weights(net: &Network, seed: u64) -> Blobs {
+    let mut blobs = Blobs::new();
+    let mut rng = Rng::new(seed);
+    for node in &net.nodes {
+        if let Node::Engine { spec, .. } = node {
+            if spec.op != OpType::ConvRelu {
+                continue;
+            }
+            let (k, ic, oc) = (spec.kernel as usize, spec.i_ch as usize, spec.o_ch as usize);
+            let fan_in = (k * k * ic) as f32;
+            let sd = (2.0 / fan_in).sqrt();
+            let n = oc * k * k * ic;
+            let w: Vec<f32> = (0..n).map(|_| rng.normal(sd)).collect();
+            let b: Vec<f32> = (0..oc).map(|_| rng.normal(0.05)).collect();
+            blobs.insert(
+                &format!("{}_w", spec.name),
+                vec![oc as u32, k as u32, k as u32, ic as u32],
+                w,
+            );
+            blobs.insert(&format!("{}_b", spec.name), vec![oc as u32], b);
+        }
+    }
+    blobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::squeezenet::squeezenet_v11;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let mut b = Blobs::new();
+        b.insert("a_w", vec![2, 1, 1, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        b.insert("a_b", vec![2], vec![0.5, -0.5]);
+        let bytes = b.to_bytes();
+        let back = Blobs::from_bytes(&bytes).unwrap();
+        assert_eq!(back.get("a_w").unwrap().1, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(back.get("a_b").unwrap().0, &[2]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(Blobs::from_bytes(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn truncated_file_is_rejected() {
+        let mut b = Blobs::new();
+        b.insert("t_w", vec![4, 1, 1, 4], vec![1.0; 16]);
+        let bytes = b.to_bytes();
+        for cut in [5, 10, bytes.len() - 1] {
+            assert!(Blobs::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn conv_weights_extraction_validates_dims() {
+        let mut b = Blobs::new();
+        b.insert("c_w", vec![2, 3, 3, 4], vec![0.0; 72]);
+        b.insert("c_b", vec![2], vec![0.0; 2]);
+        assert!(b.conv_weights("c", 3, 4, 2).is_ok());
+        assert!(b.conv_weights("c", 3, 4, 3).is_err()); // wrong o_ch
+        assert!(b.conv_weights("missing", 3, 4, 2).is_err());
+    }
+
+    #[test]
+    fn synthesized_weights_cover_all_convs() {
+        let net = squeezenet_v11();
+        let blobs = synthesize_weights(&net, 1);
+        // 26 convs × 2 tensors (w + b).
+        assert_eq!(blobs.tensors.len(), 26 * 2);
+        let (dims, w) = blobs.get("conv1_w").unwrap();
+        assert_eq!(dims, &[64, 3, 3, 3]);
+        // He init: values are small and not all identical.
+        assert!(w.iter().all(|v| v.abs() < 3.0));
+        assert!(w.iter().any(|v| *v != w[0]));
+    }
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        let net = squeezenet_v11();
+        let a = synthesize_weights(&net, 7);
+        let b = synthesize_weights(&net, 7);
+        let c = synthesize_weights(&net, 8);
+        assert_eq!(a.get("conv10_w").unwrap().1, b.get("conv10_w").unwrap().1);
+        assert_ne!(a.get("conv10_w").unwrap().1, c.get("conv10_w").unwrap().1);
+    }
+}

@@ -1,0 +1,237 @@
+//! End-to-end timing model (§5): engine cycles + link traffic for a whole
+//! network, parametric in parallelism and link, so the S5 experiment can
+//! reproduce the paper's measured numbers (10.7 s compute / 40.9 s whole
+//! process for SqueezeNet v1.1 at parallelism 8 over USB3.0) and predict
+//! the §6.1 what-ifs (more parallelism, PCIe instead of USB).
+//!
+//! The transfer model replicates the driver's slicing arithmetic
+//! analytically (validated against the actual driver's USB counters in
+//! `rust/tests/`); engine cycles use the closed form validated against
+//! the cycle-accurate simulator in [`crate::engine::timed`].
+
+use crate::hw::clock::ClockDomain;
+use crate::hw::usb::UsbLink;
+use crate::net::graph::Network;
+use crate::net::layer::{LayerSpec, OpType};
+
+/// Data/weight cache capacities in values, parametric in parallelism
+/// (the §4.4 widths scale with `BURST_LEN`).
+fn data_cache_values(p: u64) -> u64 {
+    1024 * p
+}
+fn weight_cache_values(p: u64) -> u64 {
+    8192 * p
+}
+
+/// Per-layer timing/traffic breakdown.
+#[derive(Clone, Debug)]
+pub struct LayerTiming {
+    pub name: String,
+    pub engine_cycles: u64,
+    /// Bytes moved host→device (weights + bias + data slices).
+    pub bytes_in: u64,
+    /// Bytes device→host (results as 32-bit words).
+    pub bytes_out: u64,
+    /// Link transactions (each paying the per-transaction latency).
+    pub txns: u64,
+}
+
+/// Whole-network timing report.
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    pub parallelism: u64,
+    pub link: UsbLink,
+    pub layers: Vec<LayerTiming>,
+}
+
+impl TimingReport {
+    pub fn engine_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.engine_cycles).sum()
+    }
+
+    /// The paper's "computation time" (10.7 s @ P=8).
+    pub fn compute_seconds(&self) -> f64 {
+        ClockDomain::ENGINE.secs(self.engine_cycles())
+    }
+
+    pub fn transfer_seconds(&self) -> f64 {
+        let bytes: u64 = self.layers.iter().map(|l| l.bytes_in + l.bytes_out).sum();
+        let txns: u64 = self.layers.iter().map(|l| l.txns).sum();
+        txns as f64 * self.link.txn_latency + bytes as f64 / self.link.bandwidth
+    }
+
+    /// The paper's "whole process" time (40.9 s @ P=8): compute and
+    /// transfer do not overlap in the Fig 35/36 flow.
+    pub fn whole_process_seconds(&self) -> f64 {
+        self.compute_seconds() + self.transfer_seconds()
+    }
+
+    pub fn total_txns(&self) -> u64 {
+        self.layers.iter().map(|l| l.txns).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.bytes_in + l.bytes_out).sum()
+    }
+}
+
+/// Engine cycles for one layer at parallelism `p`.
+///
+/// This is the **serialized-round** model of the shipped RTL (Fig 25's
+/// description: "new data should be fed after the accumulators … are
+/// finished", i.e. rounds do not overlap): per (output element, channel
+/// group) round the engine pays k² multiplier-feed cycles + 6 multiplier
+/// latency + 2·k² psum accumulation + 2 psum latency + 2·p fsum chain +
+/// 2 = 3·k² + 2·p + 10 cycles. At p = 8 over SqueezeNet v1.1 this lands
+/// at ≈ 7.8 s — the same regime as the paper's measured 10.7 s, an order
+/// of magnitude above the 8-MAC/cycle bound, exactly as the paper's
+/// filled-pipeline remark predicts. (A hypothetical *overlapped* engine
+/// is the `engine::timed` simulator, which pipelines rounds through the
+/// FIFOs and would cut compute ≈ 2×; see the A-series benches.)
+pub fn layer_engine_cycles(spec: &LayerSpec, p: u64) -> u64 {
+    let k2 = spec.kernel_size() as u64;
+    let o2 = spec.o_side as u64 * spec.o_side as u64;
+    let groups = (spec.i_ch as u64).div_ceil(p);
+    match spec.op {
+        OpType::ConvRelu => o2 * spec.o_ch as u64 * groups * (3 * k2 + 2 * p + 10),
+        OpType::MaxPool => o2 * groups * (2 * k2 + 4),
+        OpType::AvgPool => o2 * groups * (2 * k2 + 6),
+        OpType::Idle => 0,
+    }
+}
+
+/// Transfer traffic for one layer at parallelism `p` — the driver's
+/// slicing arithmetic, analytically:
+/// * conv: weights in super-blocks that fit the weight cache; per
+///   super-block, one data slice per output row (or per pixel when a row
+///   slice exceeds the data cache); engine passes of ≤ p output
+///   channels; one result read per pass;
+/// * pool: one slice per (channel group, output row).
+pub fn layer_traffic(spec: &LayerSpec, p: u64) -> (u64, u64, u64) {
+    let k = spec.kernel as u64;
+    let o = spec.o_side as u64;
+    let lanes = (spec.i_ch as u64).div_ceil(p) * p;
+    match spec.op {
+        OpType::ConvRelu => {
+            let per_oc_values = k * k * lanes;
+            let oc_pass = (weight_cache_values(p) / per_oc_values).clamp(1, p);
+            let super_block = (weight_cache_values(p) / per_oc_values).max(1).min(spec.o_ch as u64);
+            let n_super = (spec.o_ch as u64).div_ceil(super_block);
+            let padded_w = spec.i_side as u64 + 2 * spec.padding as u64;
+            let row_slice = k * padded_w * lanes;
+            let (slices_per_sweep, slice_values, passes_per_slice) =
+                if row_slice <= data_cache_values(p) {
+                    (o, row_slice, super_block.div_ceil(oc_pass))
+                } else {
+                    (o * o, k * k * lanes, super_block.div_ceil(oc_pass))
+                };
+
+            let weight_bytes = n_super * 4 * (super_block * per_oc_values + super_block);
+            let data_bytes = n_super * slices_per_sweep * 4 * slice_values;
+            let bytes_in = weight_bytes + data_bytes;
+            let result_reads = n_super * slices_per_sweep * passes_per_slice;
+            let bytes_out = 4 * o * o * spec.o_ch as u64;
+            // txns: per super-block: 2 (weights+bias); per slice: 1 data;
+            // per pass: 1 wire-out + 1 pipe-out.
+            let txns = n_super * 2 + n_super * slices_per_sweep + 2 * result_reads;
+            (bytes_in, bytes_out, txns)
+        }
+        OpType::MaxPool | OpType::AvgPool => {
+            let groups = (spec.i_ch as u64).div_ceil(p);
+            let slice_values = k * spec.i_side as u64 * p;
+            let slices = groups * o;
+            let bytes_in = 4 * slices * slice_values;
+            let bytes_out = 4 * o * o * spec.i_ch as u64;
+            let txns = slices + 2 * slices;
+            (bytes_in, bytes_out, txns)
+        }
+        OpType::Idle => (0, 0, 0),
+    }
+}
+
+/// Model a whole network.
+pub fn model_network(net: &Network, p: u64, link: UsbLink) -> TimingReport {
+    let mut layers = Vec::new();
+    for spec in net.engine_layers() {
+        let (bytes_in, bytes_out, txns) = layer_traffic(spec, p);
+        layers.push(LayerTiming {
+            name: spec.name.clone(),
+            engine_cycles: layer_engine_cycles(spec, p),
+            bytes_in,
+            bytes_out,
+            txns,
+        });
+    }
+    // Command load: 12 bytes per layer, one transaction.
+    if let Some(first) = layers.first_mut() {
+        first.bytes_in += 12 * net.engine_layers().len() as u64;
+        first.txns += 1;
+    }
+    TimingReport { parallelism: p, link, layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::squeezenet::squeezenet_v11;
+
+    #[test]
+    fn p8_compute_time_reproduces_paper_magnitude() {
+        // Paper §5: computation time 10.7 s at parallelism 8 / 100 MHz.
+        // The model must land in the same regime (an order of magnitude
+        // above the 0.5 s MAC bound — the accumulator-II effect).
+        let net = squeezenet_v11();
+        let rep = model_network(&net, 8, UsbLink::usb3_frontpanel());
+        let t = rep.compute_seconds();
+        assert!(t > 5.0 && t < 16.0, "compute {t:.2}s vs paper 10.7s");
+    }
+
+    #[test]
+    fn whole_process_exceeds_compute_substantially() {
+        // Paper: 40.9 s whole process vs 10.7 s compute — transfers and
+        // per-transaction latency dominate. Shape check: whole ≥ 2×.
+        let net = squeezenet_v11();
+        let rep = model_network(&net, 8, UsbLink::usb3_frontpanel());
+        let whole = rep.whole_process_seconds();
+        let compute = rep.compute_seconds();
+        assert!(whole > 2.0 * compute, "whole {whole:.1}s compute {compute:.1}s");
+        assert!(whole > 20.0 && whole < 70.0, "whole {whole:.1}s vs paper 40.9s");
+    }
+
+    #[test]
+    fn parallelism_scales_compute_down() {
+        // §5: "If there are more hardware resource to improve parallelism,
+        // the computation time will be proportionally reduced."
+        let net = squeezenet_v11();
+        let t8 = model_network(&net, 8, UsbLink::usb3_frontpanel()).compute_seconds();
+        let t16 = model_network(&net, 16, UsbLink::usb3_frontpanel()).compute_seconds();
+        let t32 = model_network(&net, 32, UsbLink::usb3_frontpanel()).compute_seconds();
+        assert!(t16 < t8 && t32 < t16);
+        // Not perfectly linear (fsum chain grows with p), but substantial.
+        assert!(t8 / t16 > 1.2, "{}", t8 / t16);
+    }
+
+    #[test]
+    fn pcie_cuts_transfer_time() {
+        // §6.1: "If USB3.0 can be replaced by PCIe buses, the latency will
+        // be improved."
+        let net = squeezenet_v11();
+        let usb = model_network(&net, 8, UsbLink::usb3_frontpanel());
+        let pcie = model_network(&net, 8, UsbLink::pcie_gen2_x4());
+        assert!(pcie.transfer_seconds() < usb.transfer_seconds() / 5.0);
+        assert_eq!(usb.engine_cycles(), pcie.engine_cycles());
+    }
+
+    #[test]
+    fn traffic_matches_table2_weight_totals() {
+        // Weight bytes of conv1 = 4 × (Table 2 total 4672) per super-block
+        // sweep; conv1 fits in one super-block.
+        let spec = LayerSpec::conv("conv1", 3, 2, 0, 227, 3, 64, 0);
+        let (bytes_in, _, _) = layer_traffic(&spec, 8);
+        let weight_bytes = 4 * 4672;
+        assert!(bytes_in > weight_bytes);
+        // Data bytes: one row slice (5448 values, Table 2 germ) × 113 rows.
+        let data_bytes = 113 * 4 * 5448;
+        assert_eq!(bytes_in, weight_bytes + data_bytes);
+    }
+}

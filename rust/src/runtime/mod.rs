@@ -1,0 +1,164 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts (HLO text
+//! emitted by `python/compile/aot.py`) and executes them on the XLA CPU
+//! client. This is how the "Caffe-CPU" FP32 oracle of §5 runs *inside*
+//! the Rust request path: Python authored the computation once at build
+//! time, and is never loaded at runtime.
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto` — the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit instruction
+//! ids, while the text parser reassigns ids (see /opt/xla-example).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::net::tensor::{Tensor, TensorF32};
+
+/// Directory where `make artifacts` deposits the HLO text + blobs.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("FUSIONACCEL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// A PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled executable (single tuple-wrapped output).
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO text file.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {}", path.display()))?;
+        Ok(LoadedModel {
+            exe,
+            name: path.file_stem().and_then(|s| s.to_str()).unwrap_or("model").to_string(),
+        })
+    }
+
+    /// Load `artifacts/<name>.hlo.txt`.
+    pub fn load_artifact(&self, name: &str) -> Result<LoadedModel> {
+        self.load_hlo_text(&artifacts_dir().join(format!("{name}.hlo.txt")))
+    }
+}
+
+impl LoadedModel {
+    /// Execute with the given inputs; the jax lowering emits a tuple
+    /// (`return_tuple=True`) with one element per model output.
+    pub fn run_tuple(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.name))?;
+        let out = result[0][0].to_literal_sync()?;
+        out.to_tuple().with_context(|| format!("unpack output tuple of {}", self.name))
+    }
+
+    /// Execute a single-output model.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let mut outs = self.run_tuple(inputs)?;
+        anyhow::ensure!(outs.len() == 1, "{}: expected 1 output, got {}", self.name, outs.len());
+        Ok(outs.pop().unwrap())
+    }
+
+    /// Execute and read the single output back as an f32 vector.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        Ok(self.run(inputs)?.to_vec::<f32>()?)
+    }
+}
+
+/// HWC tensor → f32 literal of shape [1, h, w, c] (NHWC, §3.4.1).
+pub fn literal_from_tensor(t: &TensorF32) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&t.data).reshape(&[1, t.h as i64, t.w as i64, t.c as i64])?)
+}
+
+/// Flat f32 data + dims → literal.
+pub fn literal_from_parts(dims: &[u32], data: &[f32]) -> Result<xla::Literal> {
+    let dims64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    ensure!(
+        dims.iter().product::<u32>() as usize == data.len(),
+        "dims {dims:?} vs len {}",
+        data.len()
+    );
+    Ok(xla::Literal::vec1(data).reshape(&dims64)?)
+}
+
+/// [1,h,w,c] (or lower-rank) literal → HWC tensor.
+pub fn tensor_from_literal(lit: &xla::Literal) -> Result<TensorF32> {
+    let shape = lit.array_shape()?;
+    let dims = shape.dims();
+    let (h, w, c) = match dims.len() {
+        4 => {
+            ensure!(dims[0] == 1, "batch must be 1, got {:?}", dims);
+            (dims[1] as usize, dims[2] as usize, dims[3] as usize)
+        }
+        3 => (dims[0] as usize, dims[1] as usize, dims[2] as usize),
+        2 => (1, 1, (dims[0] * dims[1]) as usize),
+        1 => (1, 1, dims[0] as usize),
+        _ => anyhow::bail!("unsupported rank {:?}", dims),
+    };
+    Ok(Tensor::from_vec(h, w, c, lit.to_vec::<f32>()?))
+}
+
+/// Build the oracle input list for a network: image first, then for each
+/// conv layer in engine order its weights (OHWI) and bias — the argument
+/// order `python/compile/model.py` lowers with.
+pub fn oracle_inputs(
+    net: &crate::net::graph::Network,
+    blobs: &crate::net::weights::Blobs,
+    image: &TensorF32,
+) -> Result<Vec<xla::Literal>> {
+    let mut inputs = vec![literal_from_tensor(image)?];
+    for spec in net.engine_layers() {
+        if spec.op == crate::net::layer::OpType::ConvRelu {
+            let (wd, w) = blobs.get(&format!("{}_w", spec.name))?;
+            inputs.push(literal_from_parts(wd, w)?);
+            let (bd, b) = blobs.get(&format!("{}_b", spec.name))?;
+            inputs.push(literal_from_parts(bd, b)?);
+        }
+    }
+    Ok(inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/ (they need artifacts);
+    // here we only test the pure conversion helpers.
+
+    #[test]
+    fn literal_tensor_roundtrip() {
+        let t = Tensor::from_vec(2, 3, 4, (0..24).map(|i| i as f32).collect());
+        let lit = literal_from_tensor(&t).unwrap();
+        let back = tensor_from_literal(&lit).unwrap();
+        assert_eq!(back.data, t.data);
+        assert_eq!((back.h, back.w, back.c), (2, 3, 4));
+    }
+
+    #[test]
+    fn literal_from_parts_validates() {
+        assert!(literal_from_parts(&[2, 2], &[1.0, 2.0, 3.0]).is_err());
+        let l = literal_from_parts(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(l.element_count(), 4);
+    }
+}

@@ -1,0 +1,208 @@
+//! Property tests on the L3 coordinator invariants (routing, batching,
+//! state) and on the host-driver/device state machine, per the project
+//! test plan: proptest-style sweeps via the homegrown `prop` helper
+//! (proptest itself is unavailable offline — DESIGN.md §7).
+
+use fusionaccel::accel::stream::StreamAccelerator;
+use fusionaccel::coordinator::{serve, InferenceRequest};
+use fusionaccel::host::driver::{forward_functional, HostDriver};
+use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::graph::Network;
+use fusionaccel::net::layer::LayerSpec;
+use fusionaccel::net::tensor::{Tensor, TensorF32};
+use fusionaccel::net::weights::synthesize_weights;
+use fusionaccel::prop::{forall, Rng};
+
+/// Generate a random but valid engine network (conv/pool chains with an
+/// optional parallel expand pair), 8–20-ish pixels on a side.
+fn random_net(rng: &mut Rng) -> Network {
+    let mut net = Network::new("rand");
+    let mut side = (rng.below(10) + 8) as u32;
+    let mut ch = (rng.below(6) + 1) as u32;
+    let inp = net.input(side, ch);
+    let mut cur = inp;
+    let n_stages = rng.below(3) + 1;
+    for s in 0..n_stages {
+        match rng.below(4) {
+            0 | 1 => {
+                // conv stage
+                let k = *rng.choose(&[1u32, 3]);
+                let pad = if k == 3 && rng.chance(0.5) { 1 } else { 0 };
+                let stride = if side > 8 && rng.chance(0.3) { 2 } else { 1 };
+                if side + 2 * pad < k {
+                    continue;
+                }
+                let oc = (rng.below(12) + 1) as u32;
+                let spec = LayerSpec::conv(&format!("conv{s}"), k, stride, pad, side, ch, oc, 0);
+                side = spec.o_side;
+                ch = oc;
+                cur = net.engine(spec, cur);
+            }
+            2 => {
+                if side >= 3 {
+                    let spec = if rng.chance(0.4) {
+                        // GoogLeNet-style "same" pooling.
+                        LayerSpec::maxpool_padded(&format!("max{s}"), 3, 1, 1, side, ch)
+                    } else {
+                        LayerSpec::maxpool(&format!("max{s}"), 2, 2, side, ch)
+                    };
+                    side = spec.o_side;
+                    cur = net.engine(spec, cur);
+                }
+            }
+            _ => {
+                // parallel expand pair + concat
+                let oc = (rng.below(8) + 1) as u32;
+                let e1 = net.engine(
+                    LayerSpec::conv(&format!("e1_{s}"), 1, 1, 0, side, ch, oc, 1),
+                    cur,
+                );
+                let e3 = net.engine(
+                    LayerSpec::conv(&format!("e3_{s}"), 3, 1, 1, side, ch, oc, 5),
+                    cur,
+                );
+                cur = net.concat(&format!("cat{s}"), vec![e1, e3]);
+                ch = 2 * oc;
+            }
+        }
+    }
+    net.softmax("prob", cur);
+    net
+}
+
+fn random_image(rng: &mut Rng, net: &Network) -> TensorF32 {
+    let (side, ch) = net.out_shape(0);
+    let (s, c) = (side as usize, ch as usize);
+    Tensor::from_vec(s, s, c, (0..s * s * c).map(|_| rng.normal(1.0)).collect())
+}
+
+/// INVARIANT: the sliced device flow (BRAM addressing, SERDES packing,
+/// super-blocks, RESFIFO draining) is bit-identical to the straight-line
+/// functional engine for *any* valid network.
+#[test]
+fn prop_device_flow_bit_identical_on_random_nets() {
+    forall(
+        0xD117, // seed
+        25,
+        |rng| {
+            let net = random_net(rng);
+            let seed = rng.next_u64();
+            let img_seed = rng.next_u64();
+            (net, seed, img_seed)
+        },
+        |(net, seed, img_seed)| {
+            net.check()?;
+            let blobs = synthesize_weights(net, *seed);
+            let mut rng = Rng::new(*img_seed);
+            let image = random_image(&mut rng, net);
+            let reference =
+                forward_functional(net, &blobs, &image).map_err(|e| e.to_string())?;
+            let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+            let res = HostDriver::new(&mut dev)
+                .forward(net, &blobs, &image)
+                .map_err(|e| format!("{e:#}"))?;
+            for (i, (a, b)) in res.outputs.iter().zip(&reference).enumerate() {
+                if a.data.len() != b.data.len() {
+                    return Err(format!("node {i}: shape mismatch"));
+                }
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!(
+                            "node {i} ({}): {x:?} != {y:?}",
+                            net.node_name(i)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// INVARIANT: the coordinator serves every request exactly once with
+/// results independent of the worker count, under random loads.
+#[test]
+fn prop_coordinator_exactly_once_any_worker_count() {
+    let mut net = Network::new("serve");
+    let inp = net.input(8, 3);
+    let c1 = net.engine(LayerSpec::conv("c1", 3, 1, 0, 8, 3, 8, 0), inp);
+    let gap = net.engine(LayerSpec::avgpool("gap", 6, 1, 6, 8), c1);
+    net.softmax("prob", gap);
+    let blobs = synthesize_weights(&net, 99);
+
+    forall(
+        0x5E4E,
+        6,
+        |rng| {
+            let n_req = rng.below(12) + 1;
+            let workers = rng.below(5) + 1;
+            let img_seed = rng.next_u64();
+            (n_req, workers, img_seed)
+        },
+        |&(n_req, workers, img_seed)| {
+            let make_reqs = || {
+                let mut rng = Rng::new(img_seed);
+                (0..n_req as u64)
+                    .map(|id| InferenceRequest {
+                        id,
+                        image: Tensor::from_vec(
+                            8,
+                            8,
+                            3,
+                            (0..8 * 8 * 3).map(|_| rng.normal(1.0)).collect(),
+                        ),
+                    })
+                    .collect::<Vec<_>>()
+            };
+            let (multi, stats) =
+                serve(&net, &blobs, UsbLink::usb3_frontpanel(), workers, make_reqs())
+                    .map_err(|e| e.to_string())?;
+            let (single, _) = serve(&net, &blobs, UsbLink::usb3_frontpanel(), 1, make_reqs())
+                .map_err(|e| e.to_string())?;
+            if multi.len() != n_req || stats.served != n_req {
+                return Err(format!("served {} of {n_req}", multi.len()));
+            }
+            for (a, b) in multi.iter().zip(&single) {
+                if a.id != b.id || a.probs != b.probs {
+                    return Err(format!("req {} differs across worker counts", a.id));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// INVARIANT: CSB command round-trip + device layer sequencing never
+/// desynchronizes: the device refuses to run when the host's layer
+/// order and the CMDFIFO disagree.
+#[test]
+fn prop_layer_register_mismatch_detected() {
+    forall(
+        0xC5B,
+        30,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let mut net = Network::new("a");
+            let inp = net.input(8, 3);
+            net.engine(LayerSpec::conv("c1", 3, 1, 0, 8, 3, 4, 0), inp);
+            // A *different* net the driver will try to run.
+            let mut net2 = Network::new("b");
+            let inp2 = net2.input(8, 3);
+            let oc = (rng.below(6) + 5) as u32; // differs from 4
+            net2.engine(LayerSpec::conv("c1", 3, 1, 0, 8, 3, oc, 0), inp2);
+
+            let blobs = synthesize_weights(&net2, seed);
+            let image = Tensor::from_vec(8, 8, 3, vec![0.5; 8 * 8 * 3]);
+            let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+            // Preload commands from net *a*, then drive with net *b*.
+            dev.load_commands(&net.engine_layers()).map_err(|e| e.to_string())?;
+            let r = HostDriver::new(&mut dev).forward(&net2, &blobs, &image);
+            match r {
+                Err(e) if format!("{e:#}").contains("mismatch") || format!("{e:#}").contains("CSB") => Ok(()),
+                Err(e) => Err(format!("wrong error: {e:#}")),
+                Ok(_) => Err("desync not detected".into()),
+            }
+        },
+    );
+}
