@@ -1,0 +1,67 @@
+//! S6 — serving-runtime throughput: batch size × worker count over the
+//! micro-SqueezeNet workload, reporting modeled device throughput (what
+//! real hardware would sustain) and simulator wall time. The §6.2
+//! claim, quantified: throughput scales with devices, and batching
+//! multiplies it again by amortizing per-transaction link latency.
+//!
+//!     cargo bench --bench serve_throughput
+
+use fusionaccel::benchkit::{section, table};
+use fusionaccel::coordinator::{serve_batched, synthetic_requests, InferenceRequest, ServeConfig};
+use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::squeezenet::micro_squeezenet;
+use fusionaccel::net::weights::synthesize_weights;
+
+fn requests(n: usize) -> Vec<InferenceRequest> {
+    synthetic_requests(n, 0x5EE5, 32, 3)
+}
+
+fn main() {
+    let net = micro_squeezenet();
+    let blobs = synthesize_weights(&net, 77);
+    let n_req = 32usize;
+
+    section("serving throughput: batch × workers (modeled req/s)");
+    let batches = [1usize, 2, 4, 8];
+    let workers = [1usize, 2, 4];
+    let mut rows = Vec::new();
+    for &b in &batches {
+        let mut row = vec![format!("{b}")];
+        for &w in &workers {
+            let cfg = ServeConfig::new(UsbLink::usb3_frontpanel(), w, b);
+            let (resps, stats) = serve_batched(&net, &blobs, &cfg, requests(n_req)).unwrap();
+            assert_eq!(resps.len(), n_req);
+            assert_eq!(stats.failed, 0);
+            row.push(format!(
+                "{:.1} req/s ({:.2} s)",
+                stats.modeled_throughput, stats.modeled_seconds
+            ));
+        }
+        rows.push(row);
+    }
+    table(
+        &["batch", "1 worker", "2 workers", "4 workers"],
+        &rows,
+    );
+
+    section("weight-cache reuse and link share at batch 8, 2 workers");
+    let cfg = ServeConfig::new(UsbLink::usb3_frontpanel(), 2, 8);
+    let (_, stats) = serve_batched(&net, &blobs, &cfg, requests(n_req)).unwrap();
+    let rows: Vec<Vec<String>> = stats
+        .workers
+        .iter()
+        .map(|w| {
+            let modeled = w.modeled_seconds().max(1e-12);
+            vec![
+                format!("{}", w.worker),
+                format!("{}", w.batches),
+                format!("{:.1}", w.weight_reuse()),
+                format!("{:.0}%", 100.0 * w.link_seconds / modeled),
+                format!("{:.0}%", 100.0 * w.engine_seconds / modeled),
+            ]
+        })
+        .collect();
+    table(&["worker", "batches", "wt reuse", "link share", "engine share"], &rows);
+    println!("\nbatch hist: {}", stats.batch_hist.summary());
+    println!("serve_throughput OK");
+}

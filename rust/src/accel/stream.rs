@@ -63,6 +63,12 @@ pub struct SliceTask {
     /// Virtual pooling padding (GoogLeNet-style "same" pooling): window
     /// elements at col/row < pad or beyond the surface are skipped.
     pub pool_pad: usize,
+    /// Word offset of this pass's data slice in the data cache — the
+    /// data-side mirror of `weight_base`. The batched host loads several
+    /// images' slices side by side in one transfer and sweeps the engine
+    /// across them, so per-transaction link latency is paid once per
+    /// group of images instead of once per image.
+    pub data_base: usize,
 }
 
 /// Accumulated engine-side counters.
@@ -75,6 +81,25 @@ pub struct EngineStats {
     pub passes: u64,
     /// Interrupts raised (one per completed pass).
     pub interrupts: u64,
+    /// Weight-cache load transfers (one per `load_weights` call).
+    pub weight_loads: u64,
+    /// Conv engine passes that swept resident weights. Together with
+    /// `weight_loads` this measures how far batching amortizes weight
+    /// traffic: sequential serving reloads per image, batched serving
+    /// sweeps many passes per load.
+    pub weight_sweeps: u64,
+}
+
+impl EngineStats {
+    /// Conv passes per weight load — the weight-cache reuse factor the
+    /// batched host driver exists to raise.
+    pub fn weight_reuse(&self) -> f64 {
+        if self.weight_loads == 0 {
+            0.0
+        } else {
+            self.weight_sweeps as f64 / self.weight_loads as f64
+        }
+    }
 }
 
 /// The device.
@@ -173,6 +198,7 @@ impl StreamAccelerator {
     /// one value per word (only the low 16 bits of each 128-bit word are
     /// valid, §4.4) — so bias values are loaded one word each.
     pub fn load_weights(&mut self, values: &[F16]) -> Result<()> {
+        self.stats.weight_loads += 1;
         self.pipe_in(Cache::Weight, 0, values)
     }
 
@@ -228,7 +254,7 @@ impl StreamAccelerator {
         } else {
             (ky * task.data_width + x) * task.groups + g
         };
-        self.data_cache.read(addr)
+        self.data_cache.read(task.data_base + addr)
     }
 
     fn run_conv_slice(&mut self, task: &SliceTask) -> Result<usize> {
@@ -248,7 +274,13 @@ impl StreamAccelerator {
             task.data_rows * task.data_width * task.groups
         };
         let weight_words = task.oc_count * k2 * task.groups;
-        let din = &self.data_f64[..data_words * 8];
+        ensure!(
+            task.data_base + data_words <= DATA_CACHE_WORDS,
+            "data slice {} + {} words exceeds data cache",
+            task.data_base,
+            data_words
+        );
+        let din = &self.data_f64[task.data_base * 8..(task.data_base + data_words) * 8];
         let wdat = &self.weight_f64[task.weight_base * 8..(task.weight_base + weight_words) * 8];
         let lanes = task.groups * 8;
 
@@ -296,12 +328,19 @@ impl StreamAccelerator {
         // 3·k² + 2·8 + 10 cycles per (output element, channel group) round.
         let per_word = 3 * k2 as u64 + 26;
         self.stats.cycles += task.out_cols as u64 * task.oc_count as u64 * task.groups as u64 * per_word;
+        self.stats.weight_sweeps += 1;
         Ok(produced)
     }
 
     fn run_pool_slice(&mut self, task: &SliceTask) -> Result<usize> {
         ensure!(task.groups == 1, "pooling processes one channel group per slice");
         ensure!(task.out_cols * 8 <= self.res_fifo.space(), "RESFIFO would overflow");
+        ensure!(
+            task.data_base + task.data_rows * task.data_width <= DATA_CACHE_WORDS,
+            "pool slice {} + {} words exceeds data cache",
+            task.data_base,
+            task.data_rows * task.data_width
+        );
         let divisor = F16::from_u32(task.kernel_size_reg);
         let mut produced = 0;
         let mut elems_total = 0u64;
@@ -404,6 +443,7 @@ mod tests {
                 weight_base: 0,
                 bias_base: 0,
                 pool_pad: 0,
+                data_base: 0,
             };
             let n = dev.restart_engine(&task).unwrap();
             assert_eq!(n, 6 * 8);
@@ -456,6 +496,7 @@ mod tests {
                     weight_base: 0,
                     bias_base: 0,
                     pool_pad: 0,
+                    data_base: 0,
                 };
                 let n = dev.restart_engine(&task).unwrap();
                 let res = dev.read_results(n).unwrap();
@@ -493,6 +534,7 @@ mod tests {
             weight_base: 0,
             bias_base: 0,
             pool_pad: 0,
+            data_base: 0,
         };
         assert!(dev.restart_engine(&task).is_err());
     }
@@ -502,5 +544,79 @@ mod tests {
         let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
         let too_big = vec![F16::ZERO; DATA_CACHE_WORDS * 8 + 8];
         assert!(dev.load_data(&too_big).is_err());
+    }
+
+    #[test]
+    fn data_base_sweeps_coalesced_slices() {
+        let mut rng = Rng::new(0xC0A1);
+        let spec = LayerSpec::conv("t", 3, 1, 0, 6, 8, 8, 0);
+        let mut w = ConvWeights::zeros(8, 3, 8);
+        for v in w.data.iter_mut() {
+            *v = rng.normal(0.3);
+        }
+        for b in w.bias.iter_mut() {
+            *b = rng.normal(0.1);
+        }
+        let wf = ConvWeightsF16::from_f32(&w);
+        let imgs: Vec<TensorF16> = (0..3).map(|_| rand_tensor(&mut rng, 6, 8)).collect();
+        let task = SliceTask {
+            op: OpType::ConvRelu,
+            k: 3,
+            stride: 1,
+            out_cols: 4,
+            groups: 1,
+            oc_count: 8,
+            data_width: 6,
+            data_rows: 3,
+            pixel_mode: false,
+            kernel_size_reg: 9,
+            skip_relu: false,
+            weight_base: 0,
+            bias_base: 0,
+            pool_pad: 0,
+            data_base: 0,
+        };
+
+        // Reference: one device per image, slice loaded at word 0.
+        let mut expect = Vec::new();
+        for img in &imgs {
+            let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+            dev.load_commands(&[&spec]).unwrap();
+            dev.load_layer().unwrap();
+            dev.load_weights(&gemm::weight_block(&wf, 0, 8)).unwrap();
+            dev.load_bias(&gemm::bias_block(&wf, 0, 8)).unwrap();
+            dev.load_data(&gemm::conv_row_slice(img, 0, 3)).unwrap();
+            let n = dev.restart_engine(&task).unwrap();
+            expect.push(dev.read_results(n).unwrap());
+        }
+
+        // Coalesced: all three slices in one load, swept via data_base.
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        dev.load_commands(&[&spec]).unwrap();
+        dev.load_layer().unwrap();
+        dev.load_weights(&gemm::weight_block(&wf, 0, 8)).unwrap();
+        dev.load_bias(&gemm::bias_block(&wf, 0, 8)).unwrap();
+        let mut slab = Vec::new();
+        for img in &imgs {
+            slab.extend(gemm::conv_row_slice(img, 0, 3));
+        }
+        dev.load_data(&slab).unwrap();
+        let words_per_img = 3 * 6 * 8 / 8;
+        for (i, exp) in expect.iter().enumerate() {
+            let t = SliceTask { data_base: i * words_per_img, ..task.clone() };
+            let n = dev.restart_engine(&t).unwrap();
+            let got = dev.read_results(n).unwrap();
+            for (a, b) in got.iter().zip(exp) {
+                assert_eq!(a.to_bits(), b.to_bits(), "img {i}");
+            }
+        }
+        // One weight load swept by three conv passes.
+        assert_eq!(dev.stats.weight_loads, 1);
+        assert_eq!(dev.stats.weight_sweeps, 3);
+        assert!(dev.stats.weight_reuse() > 2.9);
+
+        // A slice based past the cache end is rejected, not wrapped.
+        let bad = SliceTask { data_base: DATA_CACHE_WORDS, ..task };
+        assert!(dev.restart_engine(&bad).is_err());
     }
 }

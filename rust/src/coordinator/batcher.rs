@@ -1,0 +1,148 @@
+//! Adaptive micro-batching: drain the shared queue into batches that
+//! are as large as the traffic allows without holding early requests
+//! hostage.
+//!
+//! A worker's [`next_batch`] takes the first request *blocking* (no
+//! busy spin when idle), then keeps filling until either `max_batch`
+//! requests are aboard or `batch_timeout` has elapsed since the batch
+//! opened — whichever comes first. Under load this converges to full
+//! batches (maximum weight-traffic amortization, see
+//! [`crate::host::batch`]); at low rates it degrades to latency-bounded
+//! small batches; with `max_batch == 1` it is exactly the paper's
+//! single-image serving flow.
+
+use std::time::{Duration, Instant};
+
+use super::scheduler::{Pop, QueuedRequest, Scheduler};
+
+/// Micro-batch assembly policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Largest batch a worker may assemble (≥ 1).
+    pub max_batch: usize,
+    /// How long an open, non-full batch may wait for stragglers.
+    pub batch_timeout: Duration,
+}
+
+impl BatchPolicy {
+    /// The degenerate single-image policy (the pre-batching behavior).
+    pub fn single() -> BatchPolicy {
+        BatchPolicy { max_batch: 1, batch_timeout: Duration::ZERO }
+    }
+
+    /// Batch up to `max_batch` with a default 2 ms straggler window.
+    pub fn batched(max_batch: usize) -> BatchPolicy {
+        BatchPolicy { max_batch, batch_timeout: Duration::from_millis(2) }
+    }
+}
+
+/// Assemble the next micro-batch, or `None` when the queue is closed
+/// and drained (worker shutdown).
+pub fn next_batch(sched: &Scheduler, policy: &BatchPolicy) -> Option<Vec<QueuedRequest>> {
+    assert!(policy.max_batch >= 1, "max_batch must be at least 1");
+    let first = sched.pop_blocking()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.batch_timeout;
+    while batch.len() < policy.max_batch {
+        match sched.try_pop() {
+            Pop::Item(q) => batch.push(q),
+            Pop::Closed => break,
+            Pop::Empty => {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                sched.wait_for_work(deadline - now);
+            }
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::InferenceRequest;
+    use crate::net::tensor::Tensor;
+
+    fn fill(sched: &Scheduler, n: u64) {
+        sched.push_all((0..n).map(|id| InferenceRequest { id, image: Tensor::zeros(1, 1, 1) }));
+    }
+
+    #[test]
+    fn full_batch_returns_without_waiting() {
+        let s = Scheduler::new();
+        fill(&s, 10);
+        let t0 = Instant::now();
+        let b = next_batch(
+            &s,
+            &BatchPolicy { max_batch: 4, batch_timeout: Duration::from_secs(5) },
+        )
+        .unwrap();
+        assert_eq!(b.len(), 4);
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not sit out the timeout");
+        let ids: Vec<u64> = b.iter().map(|q| q.request.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let s = Scheduler::new();
+        fill(&s, 3); // fewer than max_batch, queue stays open
+        let timeout = Duration::from_millis(30);
+        let t0 = Instant::now();
+        let b = next_batch(&s, &BatchPolicy { max_batch: 8, batch_timeout: timeout }).unwrap();
+        assert_eq!(b.len(), 3, "partial batch must flush on timeout");
+        assert!(t0.elapsed() >= timeout, "flushed before the deadline");
+    }
+
+    #[test]
+    fn closed_queue_flushes_immediately_and_ends() {
+        let s = Scheduler::new();
+        fill(&s, 3);
+        s.close();
+        let t0 = Instant::now();
+        let b = next_batch(
+            &s,
+            &BatchPolicy { max_batch: 8, batch_timeout: Duration::from_secs(5) },
+        )
+        .unwrap();
+        assert_eq!(b.len(), 3);
+        assert!(t0.elapsed() < Duration::from_secs(1), "closed queue must not wait");
+        assert!(next_batch(&s, &BatchPolicy::single()).is_none());
+    }
+
+    #[test]
+    fn single_policy_is_one_request_per_batch() {
+        let s = Scheduler::new();
+        fill(&s, 5);
+        s.close();
+        let mut sizes = Vec::new();
+        while let Some(b) = next_batch(&s, &BatchPolicy::single()) {
+            sizes.push(b.len());
+        }
+        assert_eq!(sizes, vec![1; 5]);
+    }
+
+    #[test]
+    fn straggler_joins_open_batch() {
+        let s = Scheduler::new();
+        fill(&s, 1);
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                std::thread::sleep(Duration::from_millis(10));
+                s.push(InferenceRequest { id: 99, image: Tensor::zeros(1, 1, 1) });
+                s.close();
+            });
+            let b = next_batch(
+                &s,
+                &BatchPolicy { max_batch: 4, batch_timeout: Duration::from_secs(5) },
+            )
+            .unwrap();
+            // The straggler arrived inside the window and closed the
+            // queue, so the batch is exactly the two requests.
+            assert_eq!(b.len(), 2);
+            assert_eq!(b[1].request.id, 99);
+        });
+    }
+}

@@ -1,0 +1,254 @@
+//! Serving metrics: batch-size histograms, per-worker modeled
+//! link-vs-engine seconds, and latency/queue-wait percentiles — the
+//! observability the §6.2 scaling story needs to be an experiment
+//! rather than an anecdote.
+
+/// Histogram of assembled batch sizes (index = batch size).
+#[derive(Clone, Debug, Default)]
+pub struct BatchHistogram {
+    counts: Vec<usize>,
+}
+
+impl BatchHistogram {
+    pub fn new() -> BatchHistogram {
+        BatchHistogram::default()
+    }
+
+    pub fn record(&mut self, size: usize) {
+        if self.counts.len() <= size {
+            self.counts.resize(size + 1, 0);
+        }
+        self.counts[size] += 1;
+    }
+
+    /// `counts()[s]` = number of batches of size `s`.
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    /// Total batches recorded.
+    pub fn batches(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// Total requests across all batches.
+    pub fn requests(&self) -> usize {
+        self.counts.iter().enumerate().map(|(s, c)| s * c).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let b = self.batches();
+        if b == 0 {
+            0.0
+        } else {
+            self.requests() as f64 / b as f64
+        }
+    }
+
+    pub fn max_size(&self) -> usize {
+        self.counts.iter().rposition(|&c| c > 0).unwrap_or(0)
+    }
+
+    /// Compact `size×count` rendering, e.g. `"8×12 3×1"`.
+    pub fn summary(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for (size, &count) in self.counts.iter().enumerate().rev() {
+            if count > 0 {
+                parts.push(format!("{size}×{count}"));
+            }
+        }
+        if parts.is_empty() {
+            "-".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
+/// A request whose forward failed or panicked — reported instead of
+/// hanging the response channel.
+#[derive(Clone, Debug)]
+pub struct FailedRequest {
+    pub id: u64,
+    pub worker: usize,
+    pub error: String,
+}
+
+/// Per-worker accounting, split into modeled device time (link vs
+/// engine — the §5 decomposition) and host wall time.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub worker: usize,
+    /// Requests served (excludes failed ones).
+    pub served: usize,
+    /// Micro-batches forwarded.
+    pub batches: usize,
+    /// Modeled USB/PCIe link seconds spent by this worker's device.
+    pub link_seconds: f64,
+    /// Modeled engine-clock seconds spent by this worker's device.
+    pub engine_seconds: f64,
+    /// Host wall-clock seconds spent inside forwards.
+    pub busy_seconds: f64,
+    /// Weight-cache load transfers issued.
+    pub weight_loads: u64,
+    /// Conv passes swept over resident weights.
+    pub weight_sweeps: u64,
+}
+
+impl WorkerStats {
+    /// Modeled device time (link + engine) — the quantity the paper's
+    /// "whole process" clock measures.
+    pub fn modeled_seconds(&self) -> f64 {
+        self.link_seconds + self.engine_seconds
+    }
+
+    /// Conv passes per weight load (batch amortization factor).
+    pub fn weight_reuse(&self) -> f64 {
+        if self.weight_loads == 0 {
+            0.0
+        } else {
+            self.weight_sweeps as f64 / self.weight_loads as f64
+        }
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Successfully served requests.
+    pub served: usize,
+    /// Requests whose forward failed or panicked (drained, not hung).
+    pub failed: usize,
+    /// Details of the failed requests, by id.
+    pub failures: Vec<FailedRequest>,
+    /// Served requests per worker.
+    pub per_worker: Vec<usize>,
+    /// Host wall-clock seconds for the whole run.
+    pub wall_seconds: f64,
+    /// Served requests per host wall second.
+    pub throughput: f64,
+    /// End-to-end latency percentiles (queue wait + service).
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    /// Queue-wait percentiles alone.
+    pub p50_queue_wait: f64,
+    pub p99_queue_wait: f64,
+    /// Histogram of assembled batch sizes.
+    pub batch_hist: BatchHistogram,
+    /// Per-worker modeled link/engine breakdown.
+    pub workers: Vec<WorkerStats>,
+    /// Modeled makespan: max over workers of modeled device seconds —
+    /// what the wall clock would be on real hardware.
+    pub modeled_seconds: f64,
+    /// Served requests per modeled second.
+    pub modeled_throughput: f64,
+}
+
+impl ServeStats {
+    /// Fold worker/latency samples into the final report.
+    pub(crate) fn finalize(
+        &mut self,
+        latencies: &mut [f64],
+        queue_waits: &mut [f64],
+        wall_seconds: f64,
+    ) {
+        self.wall_seconds = wall_seconds;
+        self.throughput = self.served as f64 / wall_seconds.max(1e-12);
+        sort_f64(latencies);
+        sort_f64(queue_waits);
+        self.p50_latency = percentile(latencies, 0.5);
+        self.p99_latency = percentile(latencies, 0.99);
+        self.p50_queue_wait = percentile(queue_waits, 0.5);
+        self.p99_queue_wait = percentile(queue_waits, 0.99);
+        self.per_worker = self.workers.iter().map(|w| w.served).collect();
+        self.modeled_seconds =
+            self.workers.iter().map(WorkerStats::modeled_seconds).fold(0.0, f64::max);
+        self.modeled_throughput = if self.modeled_seconds > 0.0 {
+            self.served as f64 / self.modeled_seconds
+        } else {
+            0.0
+        };
+    }
+}
+
+pub(crate) fn sort_f64(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (0.0 for an
+/// empty one).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let mut h = BatchHistogram::new();
+        for s in [8, 8, 8, 3, 1] {
+            h.record(s);
+        }
+        assert_eq!(h.batches(), 5);
+        assert_eq!(h.requests(), 28);
+        assert_eq!(h.max_size(), 8);
+        assert!((h.mean() - 5.6).abs() < 1e-12);
+        assert_eq!(h.counts()[8], 3);
+        assert_eq!(h.summary(), "8×3 3×1 1×1");
+        assert_eq!(BatchHistogram::new().summary(), "-");
+        assert_eq!(BatchHistogram::new().mean(), 0.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(percentile(&xs, 0.5), 51.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn worker_stats_reuse_and_modeled() {
+        let w = WorkerStats {
+            worker: 0,
+            served: 4,
+            batches: 1,
+            link_seconds: 2.0,
+            engine_seconds: 1.0,
+            busy_seconds: 0.1,
+            weight_loads: 5,
+            weight_sweeps: 40,
+        };
+        assert_eq!(w.modeled_seconds(), 3.0);
+        assert_eq!(w.weight_reuse(), 8.0);
+        assert_eq!(WorkerStats::default().weight_reuse(), 0.0);
+    }
+
+    #[test]
+    fn finalize_fills_derived_fields() {
+        let mut s = ServeStats {
+            served: 3,
+            workers: vec![
+                WorkerStats { worker: 0, served: 2, link_seconds: 1.0, ..Default::default() },
+                WorkerStats { worker: 1, served: 1, link_seconds: 0.5, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        let mut lat = vec![0.3, 0.1, 0.2];
+        let mut qw = vec![0.0, 0.01, 0.02];
+        s.finalize(&mut lat, &mut qw, 2.0);
+        assert_eq!(s.throughput, 1.5);
+        assert_eq!(s.per_worker, vec![2, 1]);
+        assert_eq!(s.p50_latency, 0.2);
+        assert_eq!(s.modeled_seconds, 1.0);
+        assert_eq!(s.modeled_throughput, 3.0);
+    }
+}

@@ -1,26 +1,48 @@
-//! Multi-device inference coordinator — the §6.2 scalability story made
-//! operational: "more computation units … can be used to boost up the
-//! forwarding process; the host logic can also be migrated" — here the
-//! host drives N simulated accelerators from a shared request queue.
+//! Multi-device batched serving runtime — the §6.2 scalability story
+//! made operational: "more computation units … can be used to boost up
+//! the forwarding process; the host logic can also be migrated" — here
+//! the host drives N simulated accelerators from a shared request
+//! queue, and each device forwards *micro-batches* so weight traffic
+//! amortizes across requests (see [`crate::host::batch`]).
+//!
+//! The subsystem splits into:
+//!
+//! * [`scheduler`] — closable MPMC request queue with enqueue
+//!   timestamps (queue-wait accounting);
+//! * [`batcher`] — adaptive micro-batch assembly: up to
+//!   [`BatchPolicy::max_batch`] requests or the `batch_timeout`
+//!   deadline, whichever first;
+//! * [`worker`] (private) — one thread per simulated device; batch=1
+//!   rides the classic single-image driver, larger batches the
+//!   weight-resident batched driver; failures/panics are reported and
+//!   drained instead of wedging the run;
+//! * [`metrics`] — batch-size histograms, per-worker modeled
+//!   link-vs-engine seconds, latency and queue-wait percentiles.
 //!
 //! Plain std threads (no async runtime is available offline, and the
-//! workload is compute-bound simulation): one worker thread per device,
-//! each pulling requests from a shared queue, forwarding through its own
-//! [`StreamAccelerator`], and reporting results + metrics over a channel.
+//! workload is compute-bound simulation). Results are deterministic:
+//! each forward is a pure function of the image and batching is
+//! bit-identical to sequential serving (property-tested), so worker
+//! count and batch size change only the timing, never the numbers.
 
-use std::collections::VecDeque;
+pub mod batcher;
+pub mod metrics;
+pub mod scheduler;
+mod worker;
+
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
-use crate::accel::stream::StreamAccelerator;
-use crate::host::driver::HostDriver;
 use crate::hw::usb::UsbLink;
 use crate::net::graph::Network;
 use crate::net::tensor::TensorF32;
 use crate::net::weights::Blobs;
+
+pub use batcher::BatchPolicy;
+pub use metrics::{BatchHistogram, FailedRequest, ServeStats, WorkerStats};
+pub use scheduler::{Pop, QueuedRequest, Scheduler};
 
 /// A queued inference request.
 #[derive(Clone, Debug)]
@@ -39,27 +61,65 @@ pub struct InferenceResponse {
     pub argmax: usize,
     /// Which device served it.
     pub worker: usize,
-    /// Wall-clock seconds in the worker (real simulation time).
+    /// Host wall-clock seconds the carrying micro-batch spent in its
+    /// forward (real simulation time, shared by the whole batch).
     pub service_seconds: f64,
-    /// Modeled device time (engine + link) for this request.
+    /// Modeled device time (engine + link) apportioned to this request:
+    /// the batch's modeled seconds divided by its size.
     pub modeled_seconds: f64,
+    /// Seconds spent queued before a worker picked the request up.
+    pub queue_wait_seconds: f64,
+    /// Size of the micro-batch this request rode in.
+    pub batch_size: usize,
 }
 
-/// Aggregate serving statistics.
-#[derive(Clone, Debug, Default)]
-pub struct ServeStats {
-    pub served: usize,
-    pub per_worker: Vec<usize>,
-    pub wall_seconds: f64,
-    /// Requests per wall second.
-    pub throughput: f64,
-    pub p50_latency: f64,
-    pub p99_latency: f64,
+/// Serving-run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Link model every simulated device hangs off.
+    pub link: UsbLink,
+    /// Simulated devices (one worker thread each).
+    pub n_workers: usize,
+    /// Micro-batch assembly policy.
+    pub policy: BatchPolicy,
 }
 
-/// Serve `requests` across `n_workers` simulated devices; blocks until
-/// every request is answered. Deterministic results (each forward is a
-/// pure function of the image), non-deterministic assignment.
+impl ServeConfig {
+    /// Batched serving with the default straggler window.
+    pub fn new(link: UsbLink, n_workers: usize, max_batch: usize) -> ServeConfig {
+        ServeConfig { link, n_workers, policy: BatchPolicy::batched(max_batch) }
+    }
+
+    /// The pre-batching single-image flow (`max_batch = 1`).
+    pub fn single(link: UsbLink, n_workers: usize) -> ServeConfig {
+        ServeConfig { link, n_workers, policy: BatchPolicy::single() }
+    }
+}
+
+/// Deterministic synthetic load: `n` seeded-random `side×side×ch`
+/// images with ids `0..n` — the shared workload builder for the serve
+/// example, the throughput bench, and tests, so they all measure the
+/// same traffic.
+pub fn synthetic_requests(n: usize, seed: u64, side: usize, ch: usize) -> Vec<InferenceRequest> {
+    let mut rng = crate::prop::Rng::new(seed);
+    (0..n as u64)
+        .map(|id| InferenceRequest {
+            id,
+            image: crate::net::tensor::Tensor::from_vec(
+                side,
+                side,
+                ch,
+                (0..side * side * ch).map(|_| rng.normal(40.0)).collect(),
+            ),
+        })
+        .collect()
+}
+
+/// Serve `requests` across `n_workers` simulated devices, one request
+/// per forward — the classic flow, now a thin wrapper over
+/// [`serve_batched`] with `max_batch = 1`. Blocks until every request
+/// is answered or reported failed. Deterministic results,
+/// non-deterministic assignment.
 pub fn serve(
     net: &Network,
     blobs: &Blobs,
@@ -67,67 +127,85 @@ pub fn serve(
     n_workers: usize,
     requests: Vec<InferenceRequest>,
 ) -> Result<(Vec<InferenceResponse>, ServeStats)> {
-    assert!(n_workers > 0);
+    serve_batched(net, blobs, &ServeConfig::single(link, n_workers), requests)
+}
+
+/// Serve `requests` with dynamic micro-batching: each worker drains the
+/// shared queue into batches (up to `cfg.policy.max_batch` requests or
+/// the batch timeout, whichever first) and forwards them through the
+/// weight-resident batched driver. Responses come back sorted by id;
+/// requests whose forward failed or panicked are listed in
+/// [`ServeStats::failures`] — completed responses are always drained,
+/// never lost to a wedged channel.
+pub fn serve_batched(
+    net: &Network,
+    blobs: &Blobs,
+    cfg: &ServeConfig,
+    requests: Vec<InferenceRequest>,
+) -> Result<(Vec<InferenceResponse>, ServeStats)> {
+    ensure!(cfg.n_workers > 0, "need at least one worker");
+    ensure!(cfg.policy.max_batch > 0, "max_batch must be at least 1");
     let total = requests.len();
-    let queue = Arc::new(Mutex::new(requests.into_iter().collect::<VecDeque<_>>()));
-    let (tx, rx) = mpsc::channel::<InferenceResponse>();
+    let sched = Scheduler::new();
+    sched.push_all(requests);
+    sched.close();
+    let (tx, rx) = mpsc::channel::<worker::WorkerEvent>();
     let t0 = Instant::now();
 
     std::thread::scope(|scope| {
-        for worker in 0..n_workers {
-            let queue = Arc::clone(&queue);
+        for w in 0..cfg.n_workers {
             let tx = tx.clone();
             let net = net.clone();
-            scope.spawn(move || {
-                let mut dev = StreamAccelerator::new(link);
-                loop {
-                    let req = { queue.lock().unwrap().pop_front() };
-                    let Some(req) = req else { break };
-                    let st = Instant::now();
-                    let before = dev.usb.total_seconds()
-                        + crate::hw::clock::ClockDomain::ENGINE.secs(dev.stats.cycles);
-                    let res = HostDriver::new(&mut dev)
-                        .forward(&net, blobs, &req.image)
-                        .expect("forward failed");
-                    let after = dev.usb.total_seconds()
-                        + crate::hw::clock::ClockDomain::ENGINE.secs(dev.stats.cycles);
-                    let argmax =
-                        crate::host::postprocess::argmax(&res.probs).unwrap_or(0);
-                    tx.send(InferenceResponse {
-                        id: req.id,
-                        probs: res.probs,
-                        argmax,
-                        worker,
-                        service_seconds: st.elapsed().as_secs_f64(),
-                        modeled_seconds: after - before,
-                    })
-                    .expect("response channel closed");
-                }
-            });
+            let sched = &sched;
+            let policy = &cfg.policy;
+            let link = cfg.link;
+            scope.spawn(move || worker::run_worker(w, &net, blobs, link, sched, policy, &tx));
         }
         drop(tx);
     });
 
-    let mut responses: Vec<InferenceResponse> = rx.into_iter().collect();
-    let wall = t0.elapsed().as_secs_f64();
-    anyhow::ensure!(responses.len() == total, "lost responses: {}/{total}", responses.len());
-    responses.sort_by_key(|r| r.id);
-
-    let mut per_worker = vec![0usize; n_workers];
-    for r in &responses {
-        per_worker[r.worker] += 1;
-    }
-    let mut lat: Vec<f64> = responses.iter().map(|r| r.service_seconds).collect();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| lat[(((lat.len() - 1) as f64) * p) as usize];
-    let stats = ServeStats {
-        served: total,
-        per_worker,
-        wall_seconds: wall,
-        throughput: total as f64 / wall.max(1e-12),
-        p50_latency: if lat.is_empty() { 0.0 } else { pct(0.5) },
-        p99_latency: if lat.is_empty() { 0.0 } else { pct(0.99) },
+    let mut responses: Vec<InferenceResponse> = Vec::with_capacity(total);
+    let mut latencies: Vec<f64> = Vec::with_capacity(total);
+    let mut queue_waits: Vec<f64> = Vec::with_capacity(total);
+    let mut stats = ServeStats {
+        workers: (0..cfg.n_workers)
+            .map(|w| WorkerStats { worker: w, ..Default::default() })
+            .collect(),
+        ..Default::default()
     };
+    for ev in rx {
+        match ev {
+            worker::WorkerEvent::Done(r) => {
+                latencies.push(r.queue_wait_seconds + r.service_seconds);
+                queue_waits.push(r.queue_wait_seconds);
+                stats.workers[r.worker].served += 1;
+                responses.push(r);
+            }
+            worker::WorkerEvent::Batch(m) => {
+                stats.batch_hist.record(m.size);
+                let w = &mut stats.workers[m.worker];
+                w.batches += 1;
+                w.link_seconds += m.link_seconds;
+                w.engine_seconds += m.engine_seconds;
+                w.busy_seconds += m.service_seconds;
+                w.weight_loads += m.weight_loads;
+                w.weight_sweeps += m.weight_sweeps;
+            }
+            worker::WorkerEvent::Failed(f) => stats.failures.push(f),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    stats.served = responses.len();
+    stats.failed = stats.failures.len();
+    ensure!(
+        stats.served + stats.failed == total,
+        "lost responses: {} served + {} failed != {total}",
+        stats.served,
+        stats.failed
+    );
+    responses.sort_by_key(|r| r.id);
+    stats.failures.sort_by_key(|f| f.id);
+    stats.finalize(&mut latencies, &mut queue_waits, wall);
     Ok((responses, stats))
 }
 
@@ -135,6 +213,7 @@ pub fn serve(
 mod tests {
     use super::*;
     use crate::net::layer::LayerSpec;
+    use crate::net::tensor::Tensor;
     use crate::net::weights::synthesize_weights;
     use crate::prop::Rng;
 
@@ -173,8 +252,12 @@ mod tests {
         let ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
         assert_eq!(ids, (0..16).collect::<Vec<_>>());
         assert_eq!(stats.served, 16);
+        assert_eq!(stats.failed, 0);
         assert_eq!(stats.per_worker.iter().sum::<usize>(), 16);
         assert!(stats.throughput > 0.0);
+        // batch=1 serving records only size-1 batches.
+        assert_eq!(stats.batch_hist.max_size(), 1);
+        assert_eq!(stats.batch_hist.batches(), 16);
     }
 
     #[test]
@@ -223,5 +306,55 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn batched_serving_is_bit_identical_to_single() {
+        let net = tiny_net();
+        let blobs = synthesize_weights(&net, 5);
+        let (single, _) =
+            serve(&net, &blobs, UsbLink::usb3_frontpanel(), 1, rand_requests(12, 11)).unwrap();
+        let cfg = ServeConfig::new(UsbLink::usb3_frontpanel(), 2, 4);
+        let (batched, stats) = serve_batched(&net, &blobs, &cfg, rand_requests(12, 11)).unwrap();
+        assert_eq!(batched.len(), 12);
+        for (x, y) in single.iter().zip(&batched) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.probs, y.probs, "req {}", x.id);
+            assert_eq!(x.argmax, y.argmax);
+        }
+        // Micro-batches actually formed (queue was full when workers
+        // started, so batches of max_batch dominate).
+        assert!(stats.batch_hist.mean() > 1.0, "hist {:?}", stats.batch_hist);
+        assert!(stats.batch_hist.max_size() <= 4);
+        assert_eq!(stats.batch_hist.requests(), 12);
+        assert!(stats.modeled_seconds > 0.0);
+        assert!(stats.modeled_throughput > 0.0);
+        for r in &batched {
+            assert!((1..=4).contains(&r.batch_size));
+            assert!(r.modeled_seconds > 0.0);
+        }
+    }
+
+    #[test]
+    fn failed_requests_drain_instead_of_hanging() {
+        let net = tiny_net();
+        let blobs = synthesize_weights(&net, 6);
+        let mut reqs = rand_requests(6, 13);
+        // Requests 1 and 4 carry wrong-shaped images: their forwards
+        // error out; the run must still drain the other four.
+        for &bad in &[1usize, 4] {
+            reqs[bad].image = Tensor::zeros(5, 5, 3);
+        }
+        let cfg = ServeConfig::single(UsbLink::usb3_frontpanel(), 2);
+        let (resps, stats) = serve_batched(&net, &blobs, &cfg, reqs).unwrap();
+        assert_eq!(stats.served, 4);
+        assert_eq!(stats.failed, 2);
+        let failed_ids: Vec<u64> = stats.failures.iter().map(|f| f.id).collect();
+        assert_eq!(failed_ids, vec![1, 4]);
+        let ok_ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+        assert_eq!(ok_ids, vec![0, 2, 3, 5]);
+        for f in &stats.failures {
+            assert!(!f.error.is_empty());
+        }
     }
 }

@@ -1,0 +1,195 @@
+//! Shared request queue — the intake side of the serving runtime.
+//!
+//! A [`Scheduler`] is a closable MPMC queue: producers [`push`]
+//! requests, workers pop them (blocking or not), and [`close`] marks
+//! the end of the stream so idle workers drain and exit instead of
+//! waiting forever. Every request is timestamped at enqueue so the
+//! metrics layer can split queue wait from service time.
+//!
+//! [`push`]: Scheduler::push
+//! [`close`]: Scheduler::close
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::InferenceRequest;
+
+/// A request handed to a worker, with its measured time-in-queue.
+#[derive(Clone, Debug)]
+pub struct QueuedRequest {
+    pub request: InferenceRequest,
+    /// Seconds between enqueue and hand-off to a worker.
+    pub queue_wait: f64,
+}
+
+/// Result of a non-blocking pop.
+pub enum Pop {
+    /// A request was dequeued.
+    Item(QueuedRequest),
+    /// Queue momentarily empty, but more requests may arrive.
+    Empty,
+    /// Queue empty and closed — no request will ever arrive.
+    Closed,
+}
+
+struct State {
+    queue: VecDeque<(InferenceRequest, Instant)>,
+    closed: bool,
+}
+
+/// Closable MPMC request queue with enqueue timestamps.
+pub struct Scheduler {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Scheduler::new()
+    }
+}
+
+impl Scheduler {
+    pub fn new() -> Scheduler {
+        Scheduler {
+            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue one request. Panics if the queue was already closed —
+    /// closing is the producer's promise that no more work arrives.
+    pub fn push(&self, request: InferenceRequest) {
+        let mut s = self.state.lock().unwrap();
+        assert!(!s.closed, "push after close");
+        s.queue.push_back((request, Instant::now()));
+        drop(s);
+        self.cv.notify_one();
+    }
+
+    /// Enqueue a whole load.
+    pub fn push_all<I: IntoIterator<Item = InferenceRequest>>(&self, requests: I) {
+        let mut s = self.state.lock().unwrap();
+        assert!(!s.closed, "push after close");
+        let now = Instant::now();
+        for r in requests {
+            s.queue.push_back((r, now));
+        }
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Mark the end of the request stream; blocked workers wake up,
+    /// drain what is left and exit.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.lock().unwrap().queue.is_empty()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Pop {
+        let mut s = self.state.lock().unwrap();
+        match s.queue.pop_front() {
+            Some((request, t)) => {
+                Pop::Item(QueuedRequest { request, queue_wait: t.elapsed().as_secs_f64() })
+            }
+            None if s.closed => Pop::Closed,
+            None => Pop::Empty,
+        }
+    }
+
+    /// Blocking pop: waits until a request arrives or the queue is
+    /// closed and drained (→ `None`).
+    pub fn pop_blocking(&self) -> Option<QueuedRequest> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some((request, t)) = s.queue.pop_front() {
+                return Some(QueuedRequest { request, queue_wait: t.elapsed().as_secs_f64() });
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+
+    /// Park for at most `timeout` or until work arrives / the queue
+    /// closes — the batcher's deadline wait. Spurious wakeups are fine:
+    /// the caller re-checks with [`Scheduler::try_pop`].
+    pub(crate) fn wait_for_work(&self, timeout: Duration) {
+        let s = self.state.lock().unwrap();
+        if s.queue.is_empty() && !s.closed {
+            let _ = self.cv.wait_timeout(s, timeout).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::tensor::Tensor;
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest { id, image: Tensor::zeros(1, 1, 1) }
+    }
+
+    #[test]
+    fn fifo_order_and_close_semantics() {
+        let s = Scheduler::new();
+        s.push_all((0..4).map(req));
+        assert_eq!(s.len(), 4);
+        for want in 0..4 {
+            match s.try_pop() {
+                Pop::Item(q) => assert_eq!(q.request.id, want),
+                _ => panic!("expected item {want}"),
+            }
+        }
+        assert!(matches!(s.try_pop(), Pop::Empty));
+        s.close();
+        assert!(matches!(s.try_pop(), Pop::Closed));
+        assert!(s.pop_blocking().is_none());
+    }
+
+    #[test]
+    fn queue_wait_is_measured() {
+        let s = Scheduler::new();
+        s.push(req(0));
+        std::thread::sleep(Duration::from_millis(5));
+        match s.try_pop() {
+            Pop::Item(q) => assert!(q.queue_wait >= 0.004, "wait {}", q.queue_wait),
+            _ => panic!("expected item"),
+        }
+    }
+
+    #[test]
+    fn pop_blocking_wakes_on_push() {
+        let s = Scheduler::new();
+        std::thread::scope(|scope| {
+            let h = scope.spawn(|| s.pop_blocking().map(|q| q.request.id));
+            std::thread::sleep(Duration::from_millis(5));
+            s.push(req(7));
+            assert_eq!(h.join().unwrap(), Some(7));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "push after close")]
+    fn push_after_close_is_a_bug() {
+        let s = Scheduler::new();
+        s.close();
+        s.push(req(0));
+    }
+}

@@ -1,0 +1,304 @@
+//! Device worker: owns one simulated [`StreamAccelerator`], drains the
+//! shared queue into micro-batches and forwards them.
+//!
+//! Batches of one ride the classic single-image
+//! [`HostDriver::forward`] path (the `batch=1` degenerate case);
+//! larger batches go through the weight-resident
+//! [`forward_batch`] so each weight super-block crosses the link once
+//! per batch. A failing or panicking forward no longer takes the whole
+//! run down: the device is re-created (its caches and FIFOs may be
+//! mid-flight) and a failed *multi-request* batch is retried member by
+//! member so only the truly poisoned requests are reported failed —
+//! innocent requests that merely shared a batch still get answers, and
+//! completed responses are always drained.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::accel::stream::StreamAccelerator;
+use crate::host::batch::forward_batch;
+use crate::host::driver::HostDriver;
+use crate::host::postprocess;
+use crate::hw::clock::ClockDomain;
+use crate::hw::usb::UsbLink;
+use crate::net::graph::Network;
+use crate::net::tensor::TensorF32;
+use crate::net::weights::Blobs;
+
+use super::batcher::{self, BatchPolicy};
+use super::metrics::FailedRequest;
+use super::scheduler::{QueuedRequest, Scheduler};
+use super::InferenceResponse;
+
+/// What a worker reports back to the coordinator.
+pub(crate) enum WorkerEvent {
+    /// One request finished.
+    Done(InferenceResponse),
+    /// One micro-batch finished (metrics only).
+    Batch(BatchMetric),
+    /// One request failed (forward error or panic).
+    Failed(FailedRequest),
+}
+
+/// Per-batch accounting emitted by a worker.
+#[derive(Clone, Debug)]
+pub(crate) struct BatchMetric {
+    pub worker: usize,
+    pub size: usize,
+    /// Modeled link seconds this batch added on this worker's device.
+    pub link_seconds: f64,
+    /// Modeled engine seconds this batch added.
+    pub engine_seconds: f64,
+    /// Host wall seconds inside the forward.
+    pub service_seconds: f64,
+    pub weight_loads: u64,
+    pub weight_sweeps: u64,
+}
+
+/// Everything a worker needs besides the device and the batch at hand.
+struct WorkerCtx<'a> {
+    worker: usize,
+    net: &'a Network,
+    blobs: &'a Blobs,
+    link: UsbLink,
+    tx: &'a mpsc::Sender<WorkerEvent>,
+}
+
+/// Run one worker until the queue closes. Never panics outward; errors
+/// surface as [`WorkerEvent::Failed`].
+pub(crate) fn run_worker(
+    worker: usize,
+    net: &Network,
+    blobs: &Blobs,
+    link: UsbLink,
+    sched: &Scheduler,
+    policy: &BatchPolicy,
+    tx: &mpsc::Sender<WorkerEvent>,
+) {
+    let ctx = WorkerCtx { worker, net, blobs, link, tx };
+    let mut dev = StreamAccelerator::new(link);
+    while let Some(batch) = batcher::next_batch(sched, policy) {
+        if !run_batch(&mut dev, &ctx, &batch) {
+            return; // coordinator went away
+        }
+    }
+}
+
+/// Forward one micro-batch and report results. On failure the device is
+/// re-created and a multi-request batch is retried member by member, so
+/// only truly poisoned requests fail. Returns `false` when the response
+/// channel is gone (coordinator dropped).
+fn run_batch(dev: &mut StreamAccelerator, ctx: &WorkerCtx, batch: &[QueuedRequest]) -> bool {
+    let size = batch.len();
+    let images: Vec<TensorF32> = batch.iter().map(|q| q.request.image.clone()).collect();
+    let link_before = dev.usb.total_seconds();
+    let engine_before = ClockDomain::ENGINE.secs(dev.stats.cycles);
+    let loads_before = dev.stats.weight_loads;
+    let sweeps_before = dev.stats.weight_sweeps;
+    let t0 = Instant::now();
+    let outcome =
+        match catch_unwind(AssertUnwindSafe(|| forward_probs(dev, ctx.net, ctx.blobs, &images))) {
+            Ok(Ok(probs)) => Ok(probs),
+            Ok(Err(err)) => Err(format!("{err:#}")),
+            Err(panic) => Err(panic_message(panic.as_ref())),
+        };
+    let service_seconds = t0.elapsed().as_secs_f64();
+    match outcome {
+        Ok(all_probs) => {
+            let link_seconds = dev.usb.total_seconds() - link_before;
+            let engine_seconds = ClockDomain::ENGINE.secs(dev.stats.cycles) - engine_before;
+            let modeled_each = (link_seconds + engine_seconds) / size as f64;
+            for (q, probs) in batch.iter().zip(all_probs) {
+                let argmax = postprocess::argmax(&probs).unwrap_or(0);
+                let done = WorkerEvent::Done(InferenceResponse {
+                    id: q.request.id,
+                    probs,
+                    argmax,
+                    worker: ctx.worker,
+                    service_seconds,
+                    modeled_seconds: modeled_each,
+                    queue_wait_seconds: q.queue_wait,
+                    batch_size: size,
+                });
+                if ctx.tx.send(done).is_err() {
+                    return false;
+                }
+            }
+            let metric = BatchMetric {
+                worker: ctx.worker,
+                size,
+                link_seconds,
+                engine_seconds,
+                service_seconds,
+                weight_loads: dev.stats.weight_loads - loads_before,
+                weight_sweeps: dev.stats.weight_sweeps - sweeps_before,
+            };
+            ctx.tx.send(WorkerEvent::Batch(metric)).is_ok()
+        }
+        Err(error) => {
+            // The device may be mid-transfer: start from a clean one.
+            *dev = StreamAccelerator::new(ctx.link);
+            if size == 1 {
+                fail_batch(batch, ctx.worker, error, ctx.tx).is_ok()
+            } else {
+                // Don't let one poisoned request fail its batch-mates:
+                // replay each member alone (recursion depth is 1).
+                for q in batch {
+                    if !run_batch(dev, ctx, std::slice::from_ref(q)) {
+                        return false;
+                    }
+                }
+                true
+            }
+        }
+    }
+}
+
+/// Forward a batch and return per-image softmax probabilities.
+fn forward_probs(
+    dev: &mut StreamAccelerator,
+    net: &Network,
+    blobs: &Blobs,
+    images: &[TensorF32],
+) -> Result<Vec<Vec<f32>>> {
+    if images.len() == 1 {
+        let r = HostDriver::new(dev).forward(net, blobs, &images[0])?;
+        Ok(vec![r.probs])
+    } else {
+        let b = forward_batch(dev, net, blobs, images)?;
+        Ok(b.items.into_iter().map(|i| i.probs).collect())
+    }
+}
+
+fn fail_batch(
+    batch: &[QueuedRequest],
+    worker: usize,
+    error: String,
+    tx: &mpsc::Sender<WorkerEvent>,
+) -> Result<(), mpsc::SendError<WorkerEvent>> {
+    for q in batch {
+        tx.send(WorkerEvent::Failed(FailedRequest {
+            id: q.request.id,
+            worker,
+            error: error.clone(),
+        }))?;
+    }
+    Ok(())
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        format!("worker panicked: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("worker panicked: {s}")
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::InferenceRequest;
+    use crate::net::layer::LayerSpec;
+    use crate::net::tensor::Tensor;
+    use crate::net::weights::synthesize_weights;
+    use crate::prop::Rng;
+
+    fn tiny_net() -> Network {
+        let mut n = Network::new("w");
+        let inp = n.input(6, 3);
+        let c1 = n.engine(LayerSpec::conv("c1", 3, 1, 0, 6, 3, 8, 0), inp);
+        let gap = n.engine(LayerSpec::avgpool("gap", 4, 1, 4, 8), c1);
+        n.softmax("prob", gap);
+        n
+    }
+
+    fn good_request(id: u64, rng: &mut Rng) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            image: Tensor::from_vec(6, 6, 3, (0..6 * 6 * 3).map(|_| rng.normal(1.0)).collect()),
+        }
+    }
+
+    #[test]
+    fn worker_drains_queue_and_reports_metrics() {
+        let net = tiny_net();
+        let blobs = synthesize_weights(&net, 3);
+        let sched = Scheduler::new();
+        let mut rng = Rng::new(1);
+        sched.push_all((0..5).map(|id| good_request(id, &mut rng)));
+        sched.close();
+        let (tx, rx) = mpsc::channel();
+        run_worker(
+            0,
+            &net,
+            &blobs,
+            crate::hw::usb::UsbLink::usb3_frontpanel(),
+            &sched,
+            &BatchPolicy::batched(4),
+            &tx,
+        );
+        drop(tx);
+        let mut done = 0;
+        let mut batches = Vec::new();
+        for ev in rx {
+            match ev {
+                WorkerEvent::Done(r) => {
+                    assert_eq!(r.worker, 0);
+                    assert!(r.modeled_seconds > 0.0);
+                    done += 1;
+                }
+                WorkerEvent::Batch(m) => batches.push(m.size),
+                WorkerEvent::Failed(f) => panic!("unexpected failure: {}", f.error),
+            }
+        }
+        assert_eq!(done, 5);
+        assert_eq!(batches.iter().sum::<usize>(), 5);
+        assert!(batches.len() >= 2, "4+1 expected, got {batches:?}");
+    }
+
+    #[test]
+    fn worker_survives_panicking_request() {
+        let net = tiny_net();
+        let blobs = synthesize_weights(&net, 3);
+        let sched = Scheduler::new();
+        let mut rng = Rng::new(2);
+        // Request 0: right shape header but truncated data — the
+        // forward indexes out of bounds and panics mid-layer.
+        sched.push(InferenceRequest {
+            id: 0,
+            image: Tensor { h: 6, w: 6, c: 3, data: vec![0.5; 10] },
+        });
+        sched.push(good_request(1, &mut rng));
+        sched.close();
+        let (tx, rx) = mpsc::channel();
+        run_worker(
+            0,
+            &net,
+            &blobs,
+            crate::hw::usb::UsbLink::usb3_frontpanel(),
+            &sched,
+            &BatchPolicy::single(),
+            &tx,
+        );
+        drop(tx);
+        let mut failed = Vec::new();
+        let mut done = Vec::new();
+        for ev in rx {
+            match ev {
+                WorkerEvent::Done(r) => done.push(r.id),
+                WorkerEvent::Failed(f) => {
+                    assert!(f.error.contains("panicked"), "error: {}", f.error);
+                    failed.push(f.id);
+                }
+                WorkerEvent::Batch(_) => {}
+            }
+        }
+        assert_eq!(failed, vec![0]);
+        assert_eq!(done, vec![1], "worker must keep serving after a panic");
+    }
+}

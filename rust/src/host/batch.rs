@@ -3,17 +3,30 @@
 //! process is ~4× compute because every piece crosses USB; §6.2 asks
 //! for higher throughput).
 //!
-//! `forward_batch` runs B images layer by layer: per weight super-block
-//! the weights cross the link **once** and all B images' GEMM slices are
-//! swept against the resident block, so the per-image weight traffic
-//! drops by B×. Results are bit-identical to B independent
+//! `forward_batch` runs B images layer by layer and amortizes the link
+//! on both operand streams:
+//!
+//! * **weights** — per weight super-block the weights cross the link
+//!   **once** and all B images' GEMM slices are swept against the
+//!   resident block, so per-image weight traffic drops by B×;
+//! * **data** — per output row the row slices of as many images as fit
+//!   the 1024-word data cache are packed into **one** PipeIn transfer
+//!   (each image's slice at its own `data_base`), and results of many
+//!   engine passes accumulate in RESFIFO and drain in one PipeOut, so
+//!   the §3.4.2 per-transaction latency is paid once per image group
+//!   instead of once per image.
+//!
+//! Results are bit-identical to B independent
 //! [`super::driver::HostDriver::forward`] calls (same slices, same
-//! engine passes, same order per image — property-tested).
+//! engine passes, same per-image order — property-tested): coalescing
+//! moves the same values over the link and the engine consumes them
+//! from the same cache words.
 
 use anyhow::{ensure, Context, Result};
 
-use crate::accel::stream::{SliceTask, StreamAccelerator, WEIGHT_CACHE_WORDS};
+use crate::accel::stream::{SliceTask, StreamAccelerator, DATA_CACHE_WORDS, WEIGHT_CACHE_WORDS};
 use crate::engine::functional::ConvWeightsF16;
+use crate::fp16::F16;
 use crate::host::driver::pad_for_engine;
 use crate::host::gemm;
 use crate::host::postprocess;
@@ -106,8 +119,42 @@ pub fn forward_batch(
     Ok(BatchResult { items, logits: logits_all })
 }
 
+/// An engine pass whose results sit in RESFIFO awaiting a coalesced
+/// drain: `count` values belonging to `img`, output row `y`, output
+/// channels `oc0..`.
+struct PendingConv {
+    img: usize,
+    y: usize,
+    oc0: usize,
+    count: usize,
+}
+
+/// Drain all pending conv passes in one WireOut + PipeOut and scatter
+/// the values into the per-image output tensors.
+fn drain_conv(
+    dev: &mut StreamAccelerator,
+    pending: &mut Vec<PendingConv>,
+    outs: &mut [TensorF16],
+    o: usize,
+) -> Result<()> {
+    let total: usize = pending.iter().map(|p| p.count).sum();
+    if total == 0 {
+        return Ok(());
+    }
+    let res = dev.read_results(total)?;
+    let mut off = 0usize;
+    for p in pending.drain(..) {
+        for j in 0..p.count {
+            outs[p.img].set(p.y, j % o, p.oc0 + j / o, res[off + j]);
+        }
+        off += p.count;
+    }
+    Ok(())
+}
+
 /// Conv layer over the batch: weights cross the link once per
-/// super-block; each image's data slices sweep the resident block.
+/// super-block; per output row the slices of a whole image group cross
+/// in one transfer and are swept via `data_base`.
 fn conv_batch(
     dev: &mut StreamAccelerator,
     spec: &LayerSpec,
@@ -140,42 +187,68 @@ fn conv_batch(
         spec.name
     );
 
-    let mut outs: Vec<TensorF16> = (0..acts.len()).map(|_| Tensor::zeros(o, o, spec.o_ch as usize)).collect();
+    // Image-group size: as many row slices as fit the data cache.
+    let slice_words = k * pw * icp / 8;
+    let imgs_per_load = (DATA_CACHE_WORDS / slice_words).clamp(1, acts.len());
+
+    let mut outs: Vec<TensorF16> =
+        (0..acts.len()).map(|_| Tensor::zeros(o, o, spec.o_ch as usize)).collect();
+    let mut pending: Vec<PendingConv> = Vec::new();
     let mut oc0 = 0usize;
     while oc0 < spec.o_ch as usize {
         let resident = super_block.min(spec.o_ch as usize - oc0);
-        // The batch win: ONE weight+bias load for all images.
+        // The weight win: ONE weight+bias load for all images.
         dev.load_weights(&gemm::weight_block(&wf, oc0, resident))?;
         dev.load_bias(&gemm::bias_block(&wf, oc0, resident))?;
-        for (img, pad_img) in padded.iter().enumerate() {
-            for y in 0..o {
-                dev.load_data(&gemm::conv_row_slice(pad_img, y * s, k))?;
-                let mut oc_local = 0usize;
-                while oc_local < resident {
-                    let n_oc = oc_pass.min(resident - oc_local);
-                    let task = SliceTask {
-                        op: OpType::ConvRelu,
-                        k,
-                        stride: s,
-                        out_cols: o,
-                        groups,
-                        oc_count: n_oc,
-                        data_width: pw,
-                        data_rows: k,
-                        pixel_mode: false,
-                        kernel_size_reg: spec.kernel_size(),
-                        skip_relu: spec.skip_relu,
-                        weight_base: oc_local * per_oc_values / 8,
-                        bias_base: oc_local,
-                        pool_pad: 0,
-                    };
-                    let n = dev.restart_engine(&task)?;
-                    let res = dev.read_results(n)?;
-                    for (j, v) in res.iter().enumerate() {
-                        outs[img].set(y, j % o, oc0 + oc_local + j / o, *v);
-                    }
-                    oc_local += n_oc;
+        for y in 0..o {
+            for (chunk_i, chunk) in padded.chunks(imgs_per_load).enumerate() {
+                let img0 = chunk_i * imgs_per_load;
+                // The data win: ONE transfer for the whole image group.
+                let mut slab: Vec<F16> = Vec::with_capacity(chunk.len() * slice_words * 8);
+                for p in chunk {
+                    slab.extend(gemm::conv_row_slice(p, y * s, k));
                 }
+                dev.load_data(&slab)?;
+                for ci in 0..chunk.len() {
+                    let mut oc_local = 0usize;
+                    while oc_local < resident {
+                        let n_oc = oc_pass.min(resident - oc_local);
+                        let n_results = o * n_oc;
+                        if dev.res_fifo.space() < n_results {
+                            drain_conv(dev, &mut pending, &mut outs, o)?;
+                        }
+                        let task = SliceTask {
+                            op: OpType::ConvRelu,
+                            k,
+                            stride: s,
+                            out_cols: o,
+                            groups,
+                            oc_count: n_oc,
+                            data_width: pw,
+                            data_rows: k,
+                            pixel_mode: false,
+                            kernel_size_reg: spec.kernel_size(),
+                            skip_relu: spec.skip_relu,
+                            weight_base: oc_local * per_oc_values / 8,
+                            bias_base: oc_local,
+                            pool_pad: 0,
+                            data_base: ci * slice_words,
+                        };
+                        let n = dev.restart_engine(&task)?;
+                        ensure!(n == n_results, "{}: pass produced {n}", spec.name);
+                        pending.push(PendingConv {
+                            img: img0 + ci,
+                            y,
+                            oc0: oc0 + oc_local,
+                            count: n,
+                        });
+                        oc_local += n_oc;
+                    }
+                }
+                // Results survive data-cache reloads (they sit in
+                // RESFIFO), so draining per chunk is a latency choice,
+                // not a correctness one.
+                drain_conv(dev, &mut pending, &mut outs, o)?;
             }
         }
         oc0 += resident;
@@ -186,7 +259,43 @@ fn conv_batch(
     Ok(())
 }
 
-/// Pooling has no weights to amortize; images are processed in turn.
+/// A pooling pass awaiting drain: one 8-lane group of `img` at row `y`.
+struct PendingPool {
+    img: usize,
+    y: usize,
+    g: usize,
+    count: usize,
+}
+
+fn drain_pool(
+    dev: &mut StreamAccelerator,
+    pending: &mut Vec<PendingPool>,
+    outs: &mut [TensorF16],
+    o: usize,
+) -> Result<()> {
+    let total: usize = pending.iter().map(|p| p.count).sum();
+    if total == 0 {
+        return Ok(());
+    }
+    let res = dev.read_results(total)?;
+    let mut off = 0usize;
+    for p in pending.drain(..) {
+        let c_total = outs[p.img].c;
+        for x in 0..o {
+            for l in 0..8 {
+                let c = p.g * 8 + l;
+                if c < c_total {
+                    outs[p.img].set(p.y, x, c, res[off + x * 8 + l]);
+                }
+            }
+        }
+        off += p.count;
+    }
+    Ok(())
+}
+
+/// Pooling has no weights to amortize, but the data slices of a whole
+/// image group still cross the link in one transfer per (group, row).
 fn pool_batch(
     dev: &mut StreamAccelerator,
     spec: &LayerSpec,
@@ -197,45 +306,54 @@ fn pool_batch(
     let s = spec.stride as usize;
     let o = spec.o_side as usize;
     let pad = spec.padding as usize;
-    let mut outs = Vec::with_capacity(acts.len());
-    for a in acts.iter() {
-        let input = &a[input_node];
-        let groups = input.c.div_ceil(8);
-        let mut out = Tensor::zeros(o, o, input.c);
-        for g in 0..groups {
-            for y in 0..o {
-                let y0 = (y * s).saturating_sub(pad);
-                let rows = (y * s + k - pad).min(input.h) - y0;
-                dev.load_data(&gemm::pool_slice(input, y0, rows, g))?;
-                let task = SliceTask {
-                    op: spec.op,
-                    k,
-                    stride: s,
-                    out_cols: o,
-                    groups: 1,
-                    oc_count: 8,
-                    data_width: input.h,
-                    data_rows: rows,
-                    pixel_mode: false,
-                    kernel_size_reg: spec.kernel_size(),
-                    skip_relu: spec.skip_relu,
-                    weight_base: 0,
-                    bias_base: 0,
-                    pool_pad: pad,
-                };
-                let n = dev.restart_engine(&task)?;
-                let res = dev.read_results(n)?;
-                for x in 0..o {
-                    for l in 0..8 {
-                        let c = g * 8 + l;
-                        if c < input.c {
-                            out.set(y, x, c, res[x * 8 + l]);
-                        }
-                    }
+    let inputs: Vec<&TensorF16> = acts.iter().map(|a| &a[input_node]).collect();
+    let (ih, ic) = (inputs[0].h, inputs[0].c);
+    let groups = ic.div_ceil(8);
+
+    let mut outs: Vec<TensorF16> = (0..acts.len()).map(|_| Tensor::zeros(o, o, ic)).collect();
+    let mut pending: Vec<PendingPool> = Vec::new();
+    for g in 0..groups {
+        for y in 0..o {
+            let y0 = (y * s).saturating_sub(pad);
+            let rows = (y * s + k - pad).min(ih) - y0;
+            let slice_words = rows * ih;
+            let imgs_per_load = (DATA_CACHE_WORDS / slice_words).clamp(1, acts.len());
+            for (chunk_i, chunk) in inputs.chunks(imgs_per_load).enumerate() {
+                let img0 = chunk_i * imgs_per_load;
+                let mut slab: Vec<F16> = Vec::with_capacity(chunk.len() * slice_words * 8);
+                for &input in chunk {
+                    slab.extend(gemm::pool_slice(input, y0, rows, g));
                 }
+                dev.load_data(&slab)?;
+                for ci in 0..chunk.len() {
+                    let n_results = o * 8;
+                    if dev.res_fifo.space() < n_results {
+                        drain_pool(dev, &mut pending, &mut outs, o)?;
+                    }
+                    let task = SliceTask {
+                        op: spec.op,
+                        k,
+                        stride: s,
+                        out_cols: o,
+                        groups: 1,
+                        oc_count: 8,
+                        data_width: ih,
+                        data_rows: rows,
+                        pixel_mode: false,
+                        kernel_size_reg: spec.kernel_size(),
+                        skip_relu: spec.skip_relu,
+                        weight_base: 0,
+                        bias_base: 0,
+                        pool_pad: pad,
+                        data_base: ci * slice_words,
+                    };
+                    let n = dev.restart_engine(&task)?;
+                    ensure!(n == n_results, "{}: pass produced {n}", spec.name);
+                    pending.push(PendingPool { img: img0 + ci, y, g, count: n });
+                }
+                drain_pool(dev, &mut pending, &mut outs, o)?;
             }
         }
-        outs.push(out);
     }
     for (a, out) in acts.iter_mut().zip(outs) {
         a.push(out);
@@ -272,19 +390,12 @@ mod tests {
             .collect()
     }
 
-    #[test]
-    fn batch_is_bit_identical_to_sequential() {
-        let net = fire_net();
-        let blobs = synthesize_weights(&net, 8);
-        let mut rng = Rng::new(0xBA7C);
-        let imgs = images(&mut rng, 4);
-
+    fn assert_batch_matches_sequential(net: &Network, blobs: &Blobs, imgs: &[TensorF32]) {
         let mut dev_b = StreamAccelerator::new(UsbLink::usb3_frontpanel());
-        let batch = forward_batch(&mut dev_b, &net, &blobs, &imgs).unwrap();
-
+        let batch = forward_batch(&mut dev_b, net, blobs, imgs).unwrap();
         for (i, img) in imgs.iter().enumerate() {
             let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
-            let single = HostDriver::new(&mut dev).forward(&net, &blobs, img).unwrap();
+            let single = HostDriver::new(&mut dev).forward(net, blobs, img).unwrap();
             let single_last = single.outputs.last().unwrap();
             assert_eq!(batch.logits[i].data.len(), single_last.data.len());
             for (a, b) in batch.logits[i].data.iter().zip(&single_last.data) {
@@ -292,6 +403,15 @@ mod tests {
             }
             assert_eq!(batch.items[i].argmax, postprocess::argmax(&single.probs).unwrap());
         }
+    }
+
+    #[test]
+    fn batch_is_bit_identical_to_sequential() {
+        let net = fire_net();
+        let blobs = synthesize_weights(&net, 8);
+        let mut rng = Rng::new(0xBA7C);
+        let imgs = images(&mut rng, 4);
+        assert_batch_matches_sequential(&net, &blobs, &imgs);
     }
 
     #[test]
@@ -305,12 +425,15 @@ mod tests {
         let mut dev_b = StreamAccelerator::new(UsbLink::usb3_frontpanel());
         forward_batch(&mut dev_b, &net, &blobs, &imgs).unwrap();
         let batched_bytes = dev_b.usb.pipe_in.bytes;
+        let batched_txns = dev_b.usb.total_txns();
 
         let mut seq_bytes = 0u64;
+        let mut seq_txns = 0u64;
         for img in &imgs {
             let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
             HostDriver::new(&mut dev).forward(&net, &blobs, img).unwrap();
             seq_bytes += dev.usb.pipe_in.bytes;
+            seq_txns += dev.usb.total_txns();
         }
         // Weights cross once instead of B times; data traffic is equal.
         let weight_bytes = 4 * net.total_weights();
@@ -320,6 +443,14 @@ mod tests {
             "saved {saved} < expected {}",
             (b as u64 - 1) * weight_bytes
         );
+        // Coalescing collapses per-image transactions: the batched flow
+        // must use far fewer transactions than B sequential forwards.
+        assert!(
+            batched_txns * 2 < seq_txns,
+            "batched {batched_txns} txns vs sequential {seq_txns}"
+        );
+        // The weight cache was reused across images.
+        assert!(dev_b.stats.weight_reuse() >= b as f64, "reuse {}", dev_b.stats.weight_reuse());
     }
 
     #[test]
@@ -329,5 +460,53 @@ mod tests {
         let bad = vec![Tensor::zeros(9, 9, 3)];
         let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
         assert!(forward_batch(&mut dev, &net, &blobs, &bad).is_err());
+    }
+
+    #[test]
+    fn batch_rejects_empty() {
+        let net = fire_net();
+        let blobs = synthesize_weights(&net, 8);
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        assert!(forward_batch(&mut dev, &net, &blobs, &[]).is_err());
+    }
+
+    #[test]
+    fn oversized_batch_chunks_to_data_cache() {
+        // 20×20 input, k=3, pad=1 → 22-wide padded rows, 66 cache words
+        // per slice: 16 images exceed the 1024-word data cache, so the
+        // loader must chunk (15 + 1) and still be bit-identical.
+        let mut n = Network::new("chunk");
+        let inp = n.input(20, 3);
+        let c1 = n.engine(LayerSpec::conv("c1", 3, 1, 1, 20, 3, 8, 0), inp);
+        let g = n.engine(LayerSpec::avgpool("gap", 20, 1, 20, 8), c1);
+        n.softmax("prob", g);
+        let blobs = synthesize_weights(&n, 5);
+        let mut rng = Rng::new(0xC4);
+        let imgs: Vec<TensorF32> = (0..16)
+            .map(|_| {
+                Tensor::from_vec(20, 20, 3, (0..20 * 20 * 3).map(|_| rng.normal(1.0)).collect())
+            })
+            .collect();
+        assert_batch_matches_sequential(&n, &blobs, &imgs);
+    }
+
+    #[test]
+    fn resfifo_mid_chunk_drain_is_bit_identical() {
+        // 6×6×8 input through a 32-channel 1×1 conv: one image group
+        // produces 6·32·8 = 1536 results per row — more than RESFIFO's
+        // 1024 — forcing a mid-chunk drain.
+        let mut n = Network::new("drain");
+        let inp = n.input(6, 8);
+        let c1 = n.engine(LayerSpec::conv("c1", 1, 1, 0, 6, 8, 32, 0), inp);
+        let g = n.engine(LayerSpec::avgpool("gap", 6, 1, 6, 32), c1);
+        n.softmax("prob", g);
+        let blobs = synthesize_weights(&n, 6);
+        let mut rng = Rng::new(0xF1F0);
+        let imgs: Vec<TensorF32> = (0..8)
+            .map(|_| {
+                Tensor::from_vec(6, 6, 8, (0..6 * 6 * 8).map(|_| rng.normal(1.0)).collect())
+            })
+            .collect();
+        assert_batch_matches_sequential(&n, &blobs, &imgs);
     }
 }

@@ -192,6 +192,7 @@ impl<'d> HostDriver<'d> {
                                 weight_base: oc_local * per_oc_values / 8,
                                 bias_base: oc_local,
                                 pool_pad: 0,
+                                data_base: 0,
                             };
                             let n = self.dev.restart_engine(&task)?;
                             let t0 = self.dev.usb.total_seconds();
@@ -230,6 +231,7 @@ impl<'d> HostDriver<'d> {
                                     weight_base: oc_local * per_oc_values / 8,
                                     bias_base: oc_local,
                                     pool_pad: 0,
+                                    data_base: 0,
                                 };
                                 let n = self.dev.restart_engine(&task)?;
                                 let t0 = self.dev.usb.total_seconds();
@@ -288,6 +290,7 @@ impl<'d> HostDriver<'d> {
                     weight_base: 0,
                     bias_base: 0,
                     pool_pad: pad,
+                    data_base: 0,
                 };
                 let n = self.dev.restart_engine(&task)?;
                 let t0 = self.dev.usb.total_seconds();

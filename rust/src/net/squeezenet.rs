@@ -67,6 +67,26 @@ pub fn squeezenet_v11() -> Network {
     n
 }
 
+/// A fire-module micro network for a 32×32×3 input — structurally a
+/// miniature SqueezeNet (conv → pool → squeeze → expand pair → concat →
+/// conv10 → gap → softmax), small enough that serving sweeps finish in
+/// seconds. Shared by `examples/serve.rs` and the serving benches so
+/// the two always measure the same workload.
+pub fn micro_squeezenet() -> Network {
+    let mut n = Network::new("micro_squeezenet");
+    let inp = n.input(32, 3);
+    let c1 = n.engine(LayerSpec::conv("conv1", 3, 2, 0, 32, 3, 16, 0), inp); // 15
+    let p1 = n.engine(LayerSpec::maxpool("pool1", 3, 2, 15, 16), c1); // 7
+    let sq = n.engine(LayerSpec::conv("f/squeeze", 1, 1, 0, 7, 16, 8, 0), p1);
+    let e1 = n.engine(LayerSpec::conv("f/expand1x1", 1, 1, 0, 7, 8, 16, 1), sq);
+    let e3 = n.engine(LayerSpec::conv("f/expand3x3", 3, 1, 1, 7, 8, 16, 5), sq);
+    let cat = n.concat("f/concat", vec![e1, e3]);
+    let c10 = n.engine(LayerSpec::conv("conv10", 1, 1, 0, 7, 32, 10, 0), cat);
+    let gap = n.engine(LayerSpec::avgpool("pool10", 7, 1, 7, 10), c10);
+    n.softmax("prob", gap);
+    n
+}
+
 /// The 26 engine-op rows of Table 2 in order, as (name, command hex) —
 /// golden data for the T2 experiment.
 pub const TABLE2_COMMANDS: [(&str, &str); 26] = [
@@ -150,6 +170,15 @@ mod tests {
                 panic!("{name} is not an engine node");
             }
         }
+    }
+
+    #[test]
+    fn micro_squeezenet_is_consistent() {
+        let n = micro_squeezenet();
+        n.check().unwrap();
+        assert_eq!(n.engine_layers().len(), 7);
+        let gap = n.find("pool10").unwrap();
+        assert_eq!(n.out_shape(gap), (1, 10));
     }
 
     #[test]

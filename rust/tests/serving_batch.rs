@@ -1,0 +1,198 @@
+//! Integration tests for the batched serving runtime: bit-exactness of
+//! batched vs. sequential serving under random loads, batch-timeout
+//! flushing, degenerate/oversized batches, and failure draining.
+
+use std::time::{Duration, Instant};
+
+use fusionaccel::accel::stream::StreamAccelerator;
+use fusionaccel::coordinator::{
+    batcher, serve, serve_batched, BatchPolicy, InferenceRequest, Scheduler, ServeConfig,
+};
+use fusionaccel::host::batch::forward_batch;
+use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::graph::Network;
+use fusionaccel::net::layer::LayerSpec;
+use fusionaccel::net::tensor::{Tensor, TensorF32};
+use fusionaccel::net::weights::synthesize_weights;
+use fusionaccel::prop::{forall, Rng};
+
+/// Fire-module micro net: conv, pool, parallel expand pair, concat, gap.
+fn fire_net() -> Network {
+    let mut n = Network::new("serve_fire");
+    let inp = n.input(12, 3);
+    let c1 = n.engine(LayerSpec::conv("c1", 3, 1, 0, 12, 3, 8, 0), inp);
+    let p1 = n.engine(LayerSpec::maxpool("p1", 3, 2, 10, 8), c1); // 5
+    let e1 = n.engine(LayerSpec::conv("e1", 1, 1, 0, 5, 8, 16, 1), p1);
+    let e3 = n.engine(LayerSpec::conv("e3", 3, 1, 1, 5, 8, 16, 5), p1);
+    let cat = n.concat("cat", vec![e1, e3]);
+    let g = n.engine(LayerSpec::avgpool("gap", 5, 1, 5, 32), cat);
+    n.softmax("prob", g);
+    n
+}
+
+fn requests(n: usize, seed: u64) -> Vec<InferenceRequest> {
+    let mut rng = Rng::new(seed);
+    (0..n as u64)
+        .map(|id| InferenceRequest {
+            id,
+            image: Tensor::from_vec(
+                12,
+                12,
+                3,
+                (0..12 * 12 * 3).map(|_| rng.normal(1.0)).collect(),
+            ),
+        })
+        .collect()
+}
+
+/// INVARIANT: for any (load, worker count, batch size), batched serving
+/// returns exactly the bits single-image serving returns.
+#[test]
+fn prop_batched_serving_bit_identical_to_sequential() {
+    let net = fire_net();
+    let blobs = synthesize_weights(&net, 0xBEEF);
+    forall(
+        0xBA7C5,
+        6,
+        |rng| {
+            let n_req = rng.below(14) + 1;
+            let workers = rng.below(4) + 1;
+            let max_batch = rng.below(8) + 1;
+            let seed = rng.next_u64();
+            (n_req, workers, max_batch, seed)
+        },
+        |&(n_req, workers, max_batch, seed)| {
+            let (single, _) = serve(&net, &blobs, UsbLink::usb3_frontpanel(), 1, requests(n_req, seed))
+                .map_err(|e| e.to_string())?;
+            let cfg = ServeConfig::new(UsbLink::usb3_frontpanel(), workers, max_batch);
+            let (batched, stats) = serve_batched(&net, &blobs, &cfg, requests(n_req, seed))
+                .map_err(|e| e.to_string())?;
+            if batched.len() != n_req || stats.failed != 0 {
+                return Err(format!("served {} of {n_req}, {} failed", batched.len(), stats.failed));
+            }
+            if stats.batch_hist.requests() != n_req {
+                return Err("batch histogram does not account for every request".into());
+            }
+            if stats.batch_hist.max_size() > max_batch {
+                return Err(format!(
+                    "assembled a batch of {} > max_batch {max_batch}",
+                    stats.batch_hist.max_size()
+                ));
+            }
+            for (a, b) in single.iter().zip(&batched) {
+                if a.id != b.id || a.probs != b.probs || a.argmax != b.argmax {
+                    return Err(format!("req {} differs from sequential serving", a.id));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A partial batch must flush when the timeout expires, not wait for
+/// max_batch forever.
+#[test]
+fn batch_timeout_flushes_partial_batch() {
+    let sched = Scheduler::new();
+    sched.push_all(requests(3, 1)); // queue stays OPEN
+    let timeout = Duration::from_millis(40);
+    let t0 = Instant::now();
+    let batch = batcher::next_batch(
+        &sched,
+        &BatchPolicy { max_batch: 16, batch_timeout: timeout },
+    )
+    .unwrap();
+    assert_eq!(batch.len(), 3, "partial batch must flush on deadline");
+    assert!(t0.elapsed() >= timeout, "returned before the deadline");
+
+    // With the queue closed the next call ends the worker immediately.
+    sched.close();
+    assert!(batcher::next_batch(&sched, &BatchPolicy { max_batch: 16, batch_timeout: timeout })
+        .is_none());
+}
+
+/// Oversized max_batch (bigger than the whole load, bigger than what
+/// the data cache fits at once) still serves correctly: the queue just
+/// yields one big batch and the driver chunks transfers internally.
+#[test]
+fn oversized_batch_is_clamped_by_load_and_cache() {
+    let net = fire_net();
+    let blobs = synthesize_weights(&net, 0xFACE);
+    let n_req = 6;
+    let (single, _) =
+        serve(&net, &blobs, UsbLink::usb3_frontpanel(), 1, requests(n_req, 9)).unwrap();
+    let cfg = ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 64);
+    let (batched, stats) = serve_batched(&net, &blobs, &cfg, requests(n_req, 9)).unwrap();
+    assert_eq!(batched.len(), n_req);
+    // One worker, full queue at start → a single batch of all requests.
+    assert_eq!(stats.batch_hist.max_size(), n_req);
+    assert_eq!(stats.batch_hist.batches(), 1);
+    for (a, b) in single.iter().zip(&batched) {
+        assert_eq!(a.probs, b.probs, "req {}", a.id);
+    }
+}
+
+/// The empty batch is rejected at the driver level (a worker never
+/// assembles one — next_batch blocks until it has at least one item).
+#[test]
+fn empty_batch_is_rejected_by_driver() {
+    let net = fire_net();
+    let blobs = synthesize_weights(&net, 1);
+    let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+    let empty: Vec<TensorF32> = Vec::new();
+    assert!(forward_batch(&mut dev, &net, &blobs, &empty).is_err());
+}
+
+/// Weight amortization is visible end-to-end: serving the same load
+/// with batch 8 moves far fewer link bytes per request than batch 1,
+/// and sustains at least 2× the modeled throughput.
+#[test]
+fn batched_serving_at_least_doubles_modeled_throughput() {
+    let net = fire_net();
+    let blobs = synthesize_weights(&net, 0xAB);
+    let n_req = 16;
+    let cfg1 = ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1);
+    let (_, s1) = serve_batched(&net, &blobs, &cfg1, requests(n_req, 3)).unwrap();
+    let cfg8 = ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 8);
+    let (_, s8) = serve_batched(&net, &blobs, &cfg8, requests(n_req, 3)).unwrap();
+    assert!(
+        s8.modeled_throughput >= 2.0 * s1.modeled_throughput,
+        "batch 8: {:.1} req/s vs batch 1: {:.1} req/s",
+        s8.modeled_throughput,
+        s1.modeled_throughput
+    );
+    // And the weight cache is actually being reused across images.
+    let reuse8 = s8.workers[0].weight_reuse();
+    let reuse1 = s1.workers[0].weight_reuse();
+    assert!(reuse8 > 4.0 * reuse1, "reuse {reuse8:.1} vs {reuse1:.1}");
+}
+
+/// A failing micro-batch is retried member by member: only the truly
+/// poisoned request fails, its batch-mates still get answers, and the
+/// run drains instead of hanging.
+#[test]
+fn failing_batch_retries_singles_and_drains() {
+    let net = fire_net();
+    let blobs = synthesize_weights(&net, 0x5AFE);
+    let mut reqs = requests(8, 4);
+    // Request 6 has the wrong shape: the micro-batch carrying it fails
+    // wholesale, then replays one request at a time.
+    reqs[6].image = Tensor::zeros(4, 4, 3);
+    let (single, _) = {
+        let mut good = requests(8, 4);
+        good.remove(6);
+        serve(&net, &blobs, UsbLink::usb3_frontpanel(), 1, good).unwrap()
+    };
+    let cfg = ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 4);
+    let (resps, stats) = serve_batched(&net, &blobs, &cfg, reqs).unwrap();
+    assert_eq!(stats.served, 7, "batch-mates of the bad request must survive");
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.failures[0].id, 6);
+    let ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+    assert_eq!(ids, vec![0, 1, 2, 3, 4, 5, 7]);
+    // Retried members are still bit-identical to plain serving.
+    for (a, b) in single.iter().zip(&resps) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.probs, b.probs, "req {}", a.id);
+    }
+}
