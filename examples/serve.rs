@@ -7,8 +7,13 @@
 //!     cargo run --release --example serve [n_requests] [max_workers]
 
 use fusionaccel::benchkit;
-use fusionaccel::coordinator::{serve, serve_batched, synthetic_requests, ServeConfig};
+use fusionaccel::compiler::ModelRepo;
+use fusionaccel::coordinator::{
+    serve, serve_batched, serve_multi, synthetic_requests, InferenceRequest, ServeConfig,
+};
 use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::graph::Network;
+use fusionaccel::net::layer::LayerSpec;
 use fusionaccel::net::squeezenet::micro_squeezenet;
 use fusionaccel::net::weights::synthesize_weights;
 
@@ -156,6 +161,49 @@ fn main() -> anyhow::Result<()> {
         "queue wait p50/p99: {:.1} / {:.1} ms",
         stats.p50_queue_wait * 1e3,
         stats.p99_queue_wait * 1e3
+    );
+
+    // ---- multi-network pool + result cache ----------------------------
+    // One pool serves two compiled networks; command streams reload only
+    // on network switches, and duplicate images are shed by the
+    // image-hash result cache before they ever reach the batcher.
+    println!("\n-- multi-network pool + result cache (2 models, duplicate-heavy load) --");
+    let second = {
+        let mut n = Network::new("mini_fire");
+        let inp = n.input(32, 3);
+        let c1 = n.engine(LayerSpec::conv("c1", 3, 2, 0, 32, 3, 8, 0), inp); // 15
+        let p1 = n.engine(LayerSpec::maxpool("p1", 3, 2, 15, 8), c1); // 7
+        let c2 = n.engine(LayerSpec::conv("c2", 1, 1, 0, 7, 8, 16, 0), p1);
+        let gap = n.engine(LayerSpec::avgpool("gap", 7, 1, 7, 16), c2);
+        n.softmax("prob", gap);
+        n
+    };
+    let mut repo = ModelRepo::new();
+    repo.register(net.clone(), blobs.clone())?;
+    repo.register(second.clone(), synthesize_weights(&second, 99))?;
+    // 12 distinct images, each submitted twice, alternating networks.
+    let base = synthetic_requests(12, 5, 32, 3);
+    let mut reqs = Vec::new();
+    for (i, r) in base.iter().chain(base.iter()).enumerate() {
+        let model = if i % 2 == 0 { &net.name } else { &second.name };
+        reqs.push(InferenceRequest::new(i as u64, r.image.clone()).for_network(model));
+    }
+    let cfg = ServeConfig::new(UsbLink::usb3_frontpanel(), workers, 4).with_result_cache(64);
+    let (resps, stats) = serve_multi(&repo, &cfg, reqs)?;
+    anyhow::ensure!(resps.len() == 24 && stats.failed == 0);
+    println!(
+        "served {} over {} models: {} command loads + {} shadow replays, \
+         result-cache hit rate {:.0}% ({} shed)",
+        stats.served,
+        repo.len(),
+        stats.command_loads,
+        stats.command_reuses,
+        100.0 * stats.result_cache_hit_rate(),
+        stats.result_cache_hits
+    );
+    anyhow::ensure!(
+        stats.command_loads < stats.served as u64,
+        "command reloads must stay below the request count"
     );
 
     println!("\nserve OK");

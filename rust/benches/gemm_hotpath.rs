@@ -26,6 +26,9 @@ fn rand_f16(rng: &mut Rng, n: usize) -> Vec<F16> {
 
 fn main() {
     let mut rng = Rng::new(0x907);
+    // Median ns per bench, persisted as BENCH_gemm_hotpath.json when
+    // BENCH_JSON_DIR is set (CI regression artifacts).
+    let mut json: Vec<(String, f64)> = Vec::new();
 
     section("FP16 primitive ops (per-op cost × 4M)");
     let xs = rand_f16(&mut rng, 4096);
@@ -37,17 +40,19 @@ fn main() {
         }
         black_box(acc);
     });
+    json.push((m.name.clone(), m.median_ns));
     println!(
         "  → {:.2} ns per MAC (mul+add)",
         m.median_ns / 4096.0
     );
-    bench("softfloat mul+add 4096 pairs", 5, 50, || {
+    let m = bench("softfloat mul+add 4096 pairs", 5, 50, || {
         let mut acc = F16::ZERO;
         for i in 0..4096 {
             acc = softfloat::add(acc, softfloat::mul(xs[i], ys[(i * 7) & 4095]));
         }
         black_box(acc);
     });
+    json.push((m.name.clone(), m.median_ns));
 
     section("functional conv engine (fire2/expand3x3 geometry)");
     let spec = LayerSpec::conv("e3", 3, 1, 1, 56, 16, 64, 0);
@@ -62,6 +67,7 @@ fn main() {
     let m = bench("conv 56²×16→64 k3 (4.6 M MACs)", 2, 10, || {
         black_box(functional::conv(&spec, &padded, &wf));
     });
+    json.push((m.name.clone(), m.median_ns));
     let macs = spec.macs() as f64;
     println!(
         "  → {:.1} M MAC/s functional-engine throughput",
@@ -71,26 +77,31 @@ fn main() {
     section("pooling engines");
     let pspec = LayerSpec::maxpool("p", 3, 2, 113, 64);
     let pin: TensorF16 = Tensor::from_vec(113, 113, 64, rand_f16(&mut rng, 113 * 113 * 64));
-    bench("maxpool 113²×64 k3s2", 2, 20, || {
+    let m = bench("maxpool 113²×64 k3s2", 2, 20, || {
         black_box(functional::maxpool(&pspec, &pin));
     });
+    json.push((m.name.clone(), m.median_ns));
     let aspec = LayerSpec::avgpool("a", 14, 1, 14, 1000);
     let ain: TensorF16 = Tensor::from_vec(14, 14, 1000, rand_f16(&mut rng, 14 * 14 * 1000));
-    bench("avgpool 14²×1000 k14", 2, 20, || {
+    let m = bench("avgpool 14²×1000 k14", 2, 20, || {
         black_box(functional::avgpool(&aspec, &ain));
     });
+    json.push((m.name.clone(), m.median_ns));
 
     section("host GEMM slicing + SERDES");
-    bench("conv_row_slice 227×8×3", 10, 200, || {
+    let m = bench("conv_row_slice 227×8×3", 10, 200, || {
         black_box(gemm::conv_row_slice(&padded, 0, 3));
     });
+    json.push((m.name.clone(), m.median_ns));
     let slice = gemm::conv_row_slice(&padded, 0, 3);
-    bench("serdes pack_stream 2.8k values", 10, 200, || {
+    let m = bench("serdes pack_stream 2.8k values", 10, 200, || {
         black_box(Serdes::pack_stream(&slice));
     });
-    bench("weight_block 8 oc", 10, 200, || {
+    json.push((m.name.clone(), m.median_ns));
+    let m = bench("weight_block 8 oc", 10, 200, || {
         black_box(gemm::weight_block(&wf, 0, 8));
     });
+    json.push((m.name.clone(), m.median_ns));
 
     section("whole sliced device flow (fire-module micro net)");
     let mut net = Network::new("micro");
@@ -106,8 +117,11 @@ fn main() {
         let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
         black_box(HostDriver::new(&mut dev).forward(&net, &blobs, &image).unwrap());
     });
+    json.push((m.name.clone(), m.median_ns));
     println!(
         "  → {:.1} M MAC/s end-to-end sliced-device throughput",
         net.total_macs() as f64 / m.median_ns * 1e3
     );
+
+    fusionaccel::benchkit::persist_json("gemm_hotpath", &json);
 }

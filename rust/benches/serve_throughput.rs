@@ -20,6 +20,9 @@ fn main() {
     let net = micro_squeezenet();
     let blobs = synthesize_weights(&net, 77);
     let n_req = 32usize;
+    // Modeled throughput per config, persisted as
+    // BENCH_serve_throughput.json when BENCH_JSON_DIR is set.
+    let mut json: Vec<(String, f64)> = Vec::new();
 
     section("serving throughput: batch × workers (modeled req/s)");
     let batches = [1usize, 2, 4, 8];
@@ -36,6 +39,7 @@ fn main() {
                 "{:.1} req/s ({:.2} s)",
                 stats.modeled_throughput, stats.modeled_seconds
             ));
+            json.push((format!("modeled_req_per_s_b{b}_w{w}"), stats.modeled_throughput));
         }
         rows.push(row);
     }
@@ -63,5 +67,14 @@ fn main() {
         .collect();
     table(&["worker", "batches", "wt reuse", "link share", "engine share"], &rows);
     println!("\nbatch hist: {}", stats.batch_hist.summary());
+    let (loads, reuses) = stats
+        .workers
+        .iter()
+        .fold((0u64, 0u64), |(l, r), w| (l + w.command_loads, r + w.command_reuses));
+    println!("command streams: {loads} loaded, {reuses} replayed from the device shadow");
+    json.push(("command_loads_b8_w2".to_string(), loads as f64));
+    json.push(("command_reuses_b8_w2".to_string(), reuses as f64));
+
+    fusionaccel::benchkit::persist_json("serve_throughput", &json);
     println!("serve_throughput OK");
 }

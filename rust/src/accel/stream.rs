@@ -88,6 +88,14 @@ pub struct EngineStats {
     /// traffic: sequential serving reloads per image, batched serving
     /// sweeps many passes per load.
     pub weight_sweeps: u64,
+    /// Command streams loaded over the link (CMDFIFO fills that crossed
+    /// USB). Multi-network serving wants this *below* the request count:
+    /// the compiler's artifact ids let a worker reload commands only on
+    /// a network switch.
+    pub command_loads: u64,
+    /// Command streams replayed from the device-side shadow without any
+    /// link traffic (same artifact as the previous load).
+    pub command_reuses: u64,
 }
 
 impl EngineStats {
@@ -118,6 +126,11 @@ pub struct StreamAccelerator {
     /// simulator acceleration — values are exactly the cache contents.
     data_f64: Vec<f64>,
     weight_f64: Vec<f64>,
+    /// Device-side shadow of the last command stream loaded via
+    /// [`Self::load_commands_cached`]: (artifact key, encoded dwords).
+    /// CMDFIFO itself drains as the engine runs; the shadow lets the
+    /// host replay an unchanged stream without re-crossing the link.
+    cmd_shadow: Option<(String, Vec<u32>)>,
 }
 
 impl StreamAccelerator {
@@ -133,16 +146,45 @@ impl StreamAccelerator {
             layer: None,
             data_f64: vec![0.0; DATA_CACHE_WORDS * 8],
             weight_f64: vec![0.0; WEIGHT_CACHE_WORDS * 8],
+            cmd_shadow: None,
         }
     }
 
     /// Load the full command stream (Fig 36 "Load Commands"): one USB
-    /// block transfer of 12 bytes per layer.
+    /// block transfer of 12 bytes per layer. A keyless load invalidates
+    /// the command shadow — the host did not claim an artifact identity.
     pub fn load_commands(&mut self, layers: &[&LayerSpec]) -> Result<()> {
+        self.cmd_shadow = None;
         for spec in layers {
             ensure!(self.csb.load_command(spec), "CMDFIFO overflow at {}", spec.name);
         }
+        self.stats.command_loads += 1;
         self.usb.transfer(Endpoint::PipeIn, 12 * layers.len() as u64);
+        Ok(())
+    }
+
+    /// Load a command stream under a content-addressed artifact key
+    /// (see [`crate::compiler`]). If `key` matches the stream already
+    /// shadowed on the device, the CMDFIFO is refilled from the shadow
+    /// with **no** link traffic (`command_reuses`); otherwise this is a
+    /// full [`Self::load_commands`] and the shadow is replaced. This is
+    /// what makes a network *switch* the only event that pays command
+    /// transfer time in multi-network serving.
+    pub fn load_commands_cached(&mut self, key: &str, layers: &[&LayerSpec]) -> Result<()> {
+        if let Some((k, dwords)) = &self.cmd_shadow {
+            if k == key {
+                let dwords = dwords.clone();
+                ensure!(self.csb.load_raw(&dwords), "CMDFIFO overflow replaying cached stream {key}");
+                self.stats.command_reuses += 1;
+                return Ok(());
+            }
+        }
+        let mut dwords = Vec::with_capacity(3 * layers.len());
+        for spec in layers {
+            dwords.extend(spec.encode());
+        }
+        self.load_commands(layers)?;
+        self.cmd_shadow = Some((key.to_string(), dwords));
         Ok(())
     }
 
@@ -537,6 +579,40 @@ mod tests {
             data_base: 0,
         };
         assert!(dev.restart_engine(&task).is_err());
+    }
+
+    #[test]
+    fn command_shadow_replays_without_link_traffic() {
+        let spec_a = LayerSpec::conv("a", 3, 2, 0, 227, 3, 64, 0);
+        let spec_b = LayerSpec::maxpool("b", 3, 2, 113, 64);
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+
+        dev.load_commands_cached("netA", &[&spec_a, &spec_b]).unwrap();
+        let bytes_after_load = dev.usb.total_bytes();
+        assert_eq!(dev.stats.command_loads, 1);
+        // Drain like a forward would.
+        assert_eq!(dev.csb.next_layer().unwrap().encode(), spec_a.encode());
+        assert_eq!(dev.csb.next_layer().unwrap().encode(), spec_b.encode());
+
+        // Same artifact key: replay from the shadow, zero new bytes.
+        dev.load_commands_cached("netA", &[&spec_a, &spec_b]).unwrap();
+        assert_eq!(dev.usb.total_bytes(), bytes_after_load);
+        assert_eq!(dev.stats.command_loads, 1);
+        assert_eq!(dev.stats.command_reuses, 1);
+        assert_eq!(dev.csb.next_layer().unwrap().encode(), spec_a.encode());
+        assert_eq!(dev.csb.next_layer().unwrap().encode(), spec_b.encode());
+
+        // Different key: full reload over the link.
+        dev.load_commands_cached("netB", &[&spec_b]).unwrap();
+        assert!(dev.usb.total_bytes() > bytes_after_load);
+        assert_eq!(dev.stats.command_loads, 2);
+        // A keyless load invalidates the shadow entirely.
+        dev.csb.next_layer();
+        dev.load_commands(&[&spec_a]).unwrap();
+        dev.csb.next_layer();
+        dev.load_commands_cached("netB", &[&spec_b]).unwrap();
+        assert_eq!(dev.stats.command_loads, 4);
+        assert_eq!(dev.stats.command_reuses, 1);
     }
 
     #[test]

@@ -103,3 +103,67 @@ pub fn table(headers: &[&str], rows: &[Vec<String>]) {
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
+
+/// Persist a bench run's scalar metrics as JSON for regression diffing.
+///
+/// When `BENCH_JSON_DIR` is set (the CI artifact flow — see
+/// `.github/workflows/ci.yml`, which uploads the directory as the
+/// `BENCH_<run>` artifact), writes `$BENCH_JSON_DIR/BENCH_<name>.json`
+/// with a flat `{"bench": ..., "metrics": {...}}` shape that plain
+/// `diff`/`jq` can compare across runs. When the variable is unset
+/// (local runs), does nothing and returns `None`.
+pub fn persist_json(name: &str, metrics: &[(String, f64)]) -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(std::env::var_os("BENCH_JSON_DIR")?);
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"bench\": \"{}\",\n  \"metrics\": {{\n", json_escape(name)));
+    for (i, (key, value)) in metrics.iter().enumerate() {
+        let sep = if i + 1 == metrics.len() { "" } else { "," };
+        // f64 Display is valid JSON for finite values; guard the rest.
+        let v = if value.is_finite() { format!("{value}") } else { "null".to_string() };
+        out.push_str(&format!("    \"{}\": {v}{sep}\n", json_escape(key)));
+    }
+    out.push_str("  }\n}\n");
+    let path = dir.join(format!("BENCH_{name}.json"));
+    match std::fs::create_dir_all(&dir).and_then(|()| std::fs::write(&path, out)) {
+        Ok(()) => {
+            println!("  bench json → {}", path.display());
+            Some(path)
+        }
+        Err(err) => {
+            eprintln!("benchkit: could not write {}: {err}", path.display());
+            None
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn persist_json_writes_escaped_metrics() {
+        let dir = std::env::temp_dir().join(format!("benchkit_json_{}", std::process::id()));
+        std::env::set_var("BENCH_JSON_DIR", &dir);
+        let metrics = vec![("a b".to_string(), 1.5), ("c\"d".to_string(), f64::NAN)];
+        let path = super::persist_json("unit_test", &metrics).expect("dir is set");
+        std::env::remove_var("BENCH_JSON_DIR");
+        assert!(path.ends_with("BENCH_unit_test.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"bench\": \"unit_test\""), "{text}");
+        assert!(text.contains("\"a b\": 1.5"), "{text}");
+        assert!(text.contains("\"c\\\"d\": null"), "non-finite → null: {text}");
+        std::fs::remove_dir_all(&dir).ok();
+        // Unset env → no-op.
+        assert!(super::persist_json("unit_test", &metrics).is_none());
+    }
+}

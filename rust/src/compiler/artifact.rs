@@ -1,0 +1,269 @@
+//! Compiled command-stream artifacts: content-addressed, validated,
+//! epoch-scheduled lowerings of a [`Network`].
+//!
+//! An artifact is what the serving stack actually distributes: the
+//! optimized graph (after the [`super::passes`] pipeline), the command
+//! stream split into CMDFIFO-sized **reload epochs**, and an id derived
+//! from the optimized graph plus the weights identity — so two
+//! front-ends that describe the same computation (builder vs prototxt)
+//! produce the *same* artifact, and a worker can tell "same network,
+//! skip the command transfer" apart from "new network, reconfigure"
+//! by comparing ids alone (§4.1's re-configurability made cacheable).
+
+use anyhow::Result;
+
+use crate::engine::csb::{CMD_BURST_LEN, CMDFIFO_DEPTH, MAX_LAYERS};
+use crate::net::graph::{Network, Node};
+use crate::net::layer::LayerSpec;
+
+use super::passes::{self, PassReport};
+
+/// FNV-1a 64-bit over a byte stream — the artifact fingerprint hash.
+/// Chosen for determinism and zero dependencies, not cryptography: ids
+/// gate cache reuse, and a stale hit is caught by the CSB's redundant
+/// stride2/kernel_size validation at decode time.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Incremental FNV-1a writer for structured fingerprints.
+#[derive(Clone, Debug)]
+pub struct Fingerprint(u64);
+
+impl Default for Fingerprint {
+    fn default() -> Self {
+        Fingerprint::new()
+    }
+}
+
+impl Fingerprint {
+    pub fn new() -> Fingerprint {
+        Fingerprint(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn bytes(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    /// Length-prefixed string (avoids concatenation ambiguity).
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.u64(s.len() as u64).bytes(s.as_bytes())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Fingerprint of a graph's *computation*: node kinds, edges, layer
+/// commands, and engine-layer names (they bind weights), but not the
+/// cosmetic names of host nodes or of the network itself — so renaming
+/// a concat or the net does not invalidate caches.
+pub fn graph_fingerprint(net: &Network) -> u64 {
+    let mut h = Fingerprint::new();
+    h.bytes(b"fa-graph-v1").u64(net.nodes.len() as u64);
+    for node in &net.nodes {
+        match node {
+            Node::Input { side, ch } => {
+                h.u64(0).u64(*side as u64).u64(*ch as u64);
+            }
+            Node::Engine { spec, input } => {
+                h.u64(1).u64(*input as u64).str(&spec.name);
+                for d in spec.encode() {
+                    h.u64(d as u64);
+                }
+            }
+            Node::Concat { inputs, .. } => {
+                h.u64(2).u64(inputs.len() as u64);
+                for &i in inputs {
+                    h.u64(i as u64);
+                }
+            }
+            Node::Softmax { input, .. } => {
+                h.u64(3).u64(*input as u64);
+            }
+            Node::Relu { input, .. } => {
+                h.u64(4).u64(*input as u64);
+            }
+        }
+    }
+    h.finish()
+}
+
+/// Combine a graph fingerprint with a weights identity into the
+/// registry key / artifact id value.
+pub fn combine(graph_fp: u64, weights_id: u64) -> u64 {
+    let mut h = Fingerprint::new();
+    h.bytes(b"fa-artifact-v1").u64(graph_fp).u64(weights_id);
+    h.finish()
+}
+
+/// One CMDFIFO residency: engine layers `start .. start + len` (indices
+/// into the optimized net's `engine_layers()` order) are loaded as one
+/// command transfer and fully drained before the next epoch loads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EpochPlan {
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Static schedule: split `n_layers` commands into epochs of at most
+/// [`MAX_LAYERS`] (= [`CMDFIFO_DEPTH`] / [`CMD_BURST_LEN`]) so a deep
+/// network reloads the CMDFIFO mid-forward instead of overflowing it at
+/// runtime (§4.4's "theoretically 341 layers" stops being a hard wall).
+pub fn schedule_epochs(n_layers: usize) -> Vec<EpochPlan> {
+    debug_assert_eq!(MAX_LAYERS, CMDFIFO_DEPTH / CMD_BURST_LEN);
+    let mut epochs = Vec::new();
+    let mut start = 0;
+    while start < n_layers {
+        let len = (n_layers - start).min(MAX_LAYERS);
+        epochs.push(EpochPlan { start, len });
+        start += len;
+    }
+    epochs
+}
+
+/// A validated, optimized, content-addressed lowering of a network —
+/// the unit the [`super::registry`] stores and workers reconfigure
+/// from.
+#[derive(Clone, Debug)]
+pub struct CompiledStream {
+    /// Content-addressed artifact id: hex of the optimized-graph
+    /// fingerprint combined with the weights id.
+    pub id: String,
+    /// The optimized graph the driver executes (passes applied; do not
+    /// mutate — `epochs` index its engine-layer order).
+    pub net: Network,
+    /// Identity of the weights this stream was compiled against.
+    pub weights_id: u64,
+    /// Fingerprint of the *source* graph, pre-optimization (the
+    /// registry's memo key component).
+    pub source_fingerprint: u64,
+    /// CMDFIFO reload schedule over the optimized engine layers.
+    pub epochs: Vec<EpochPlan>,
+    /// What each pass did (for logs and tests).
+    pub report: PassReport,
+}
+
+impl CompiledStream {
+    /// Engine layers of epoch `e`, in command order.
+    pub fn epoch_layers(&self, e: usize) -> Vec<&LayerSpec> {
+        let all = self.net.engine_layers();
+        let p = self.epochs[e];
+        all[p.start..p.start + p.len].to_vec()
+    }
+
+    /// Device cache key for epoch `e`. Single-epoch streams (the common
+    /// case) use the bare artifact id so the device shadow survives
+    /// across forwards of the same network.
+    pub fn epoch_key(&self, e: usize) -> String {
+        if self.epochs.len() == 1 {
+            self.id.clone()
+        } else {
+            format!("{}#e{e}", self.id)
+        }
+    }
+
+    /// Total commands across all epochs.
+    pub fn n_commands(&self) -> usize {
+        self.epochs.iter().map(|p| p.len).sum()
+    }
+}
+
+/// Lower `net` into a [`CompiledStream`]: validate, run the pass
+/// pipeline ([`super::passes`]), validate again, schedule epochs, and
+/// fingerprint. `weights_id` is the identity of the weight set the
+/// stream will run against (see [`super::registry::ModelRepo`], which
+/// derives it from the FAWB bytes).
+pub fn compile(net: &Network, weights_id: u64) -> Result<CompiledStream> {
+    net.check().map_err(anyhow::Error::msg)?;
+    let source_fingerprint = graph_fingerprint(net);
+    let (optimized, report) = passes::run_pipeline(net);
+    optimized.check().map_err(anyhow::Error::msg)?;
+    let epochs = schedule_epochs(optimized.engine_layers().len());
+    let id = format!("{:016x}", combine(graph_fingerprint(&optimized), weights_id));
+    Ok(CompiledStream { id, net: optimized, weights_id, source_fingerprint, epochs, report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn fingerprint_is_length_prefixed() {
+        let mut a = Fingerprint::new();
+        a.str("ab").str("c");
+        let mut b = Fingerprint::new();
+        b.str("a").str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn epoch_schedule_covers_exactly() {
+        assert!(schedule_epochs(0).is_empty());
+        assert_eq!(schedule_epochs(30), vec![EpochPlan { start: 0, len: 30 }]);
+        assert_eq!(schedule_epochs(MAX_LAYERS), vec![EpochPlan { start: 0, len: MAX_LAYERS }]);
+        let two = schedule_epochs(MAX_LAYERS + 59);
+        assert_eq!(
+            two,
+            vec![
+                EpochPlan { start: 0, len: MAX_LAYERS },
+                EpochPlan { start: MAX_LAYERS, len: 59 }
+            ]
+        );
+        let big = schedule_epochs(3 * MAX_LAYERS + 1);
+        assert_eq!(big.len(), 4);
+        assert_eq!(big.iter().map(|p| p.len).sum::<usize>(), 3 * MAX_LAYERS + 1);
+        assert!(big.iter().all(|p| p.len <= MAX_LAYERS));
+    }
+
+    #[test]
+    fn graph_fingerprint_ignores_cosmetic_names() {
+        use crate::net::layer::LayerSpec;
+        let build = |net_name: &str, cat_name: &str| {
+            let mut n = Network::new(net_name);
+            let inp = n.input(8, 3);
+            let e1 = n.engine(LayerSpec::conv("e1", 1, 1, 0, 8, 3, 4, 1), inp);
+            let e3 = n.engine(LayerSpec::conv("e3", 3, 1, 1, 8, 3, 4, 5), inp);
+            let cat = n.concat(cat_name, vec![e1, e3]);
+            n.softmax("prob", cat);
+            n
+        };
+        assert_eq!(graph_fingerprint(&build("a", "cat")), graph_fingerprint(&build("b", "merge")));
+        // …but engine-layer names bind weights and must matter.
+        let mut other = build("a", "cat");
+        if let Node::Engine { spec, .. } = &mut other.nodes[1] {
+            spec.name = "renamed".into();
+        }
+        assert_ne!(graph_fingerprint(&build("a", "cat")), graph_fingerprint(&other));
+    }
+
+    #[test]
+    fn compile_rejects_invalid_graphs() {
+        let mut n = Network::new("bad");
+        let inp = n.input(8, 3);
+        n.engine(crate::net::layer::LayerSpec::conv("c", 3, 1, 1, 9, 3, 4, 0), inp);
+        assert!(compile(&n, 0).is_err());
+    }
+}

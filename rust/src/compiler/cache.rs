@@ -1,0 +1,127 @@
+//! Small LRU cache with hit/miss accounting — shared by the per-worker
+//! compiled-model cache and the coordinator's image-hash result cache.
+//!
+//! Capacities on the serving path are tiny (a handful of networks, a
+//! few hundred result entries), so the store is a plain vector in
+//! recency order: linear probes beat hash-map bookkeeping at this size
+//! and keep the eviction order trivially auditable.
+
+/// Fixed-capacity LRU: `insert` evicts the least-recently-used entry
+/// when full, `get` refreshes recency.
+#[derive(Clone, Debug)]
+pub struct LruCache<K, V> {
+    cap: usize,
+    /// Entries in recency order — index 0 is the eviction candidate.
+    entries: Vec<(K, V)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl<K: Eq, V: Clone> LruCache<K, V> {
+    /// `cap` must be at least 1.
+    pub fn new(cap: usize) -> LruCache<K, V> {
+        assert!(cap >= 1, "LRU capacity must be at least 1");
+        LruCache { cap, entries: Vec::new(), hits: 0, misses: 0 }
+    }
+
+    /// Look up `key`, refreshing its recency on a hit.
+    pub fn get(&mut self, key: &K) -> Option<V> {
+        match self.entries.iter().position(|(k, _)| k == key) {
+            Some(i) => {
+                let entry = self.entries.remove(i);
+                let value = entry.1.clone();
+                self.entries.push(entry);
+                self.hits += 1;
+                Some(value)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) `key`, evicting the LRU entry when full.
+    pub fn insert(&mut self, key: K, value: V) {
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.entries.remove(i);
+        } else if self.entries.len() == self.cap {
+            self.entries.remove(0);
+        }
+        self.entries.push((key, value));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Lookups that found an entry.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that missed.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Hits over total lookups (0.0 before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.get(&1), Some(10)); // 1 is now most recent
+        c.insert(3, 30); // evicts 2
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.get(&1), Some(10));
+        assert_eq!(c.get(&3), Some(30));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn reinsert_refreshes_instead_of_duplicating() {
+        let mut c: LruCache<&str, u32> = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        c.insert("a", 3); // refresh, not a new slot
+        assert_eq!(c.len(), 2);
+        c.insert("c", 4); // evicts "b" (LRU), not "a"
+        assert_eq!(c.get(&"b"), None);
+        assert_eq!(c.get(&"a"), Some(3));
+    }
+
+    #[test]
+    fn hit_rate_accounting() {
+        let mut c: LruCache<u32, u32> = LruCache::new(4);
+        assert_eq!(c.hit_rate(), 0.0);
+        c.insert(1, 1);
+        assert!(c.get(&1).is_some());
+        assert!(c.get(&2).is_none());
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,41 @@
+//! Command-stream compiler: lower [`Network`] graphs into optimized,
+//! cacheable CSB artifacts.
+//!
+//! The paper's headline claim is runtime re-configurability — the CSB
+//! re-parses a 12-byte command per layer, so swapping networks is just
+//! swapping command streams (§4.1, §4.4). This module is the layer that
+//! turns that mechanism into a serving feature:
+//!
+//! 1. **Passes** ([`passes`]) — a fixpoint pipeline over the graph:
+//!    conv+ReLU fusion and pool/ReLU folding into single `LayerSpec`
+//!    commands where the datapath supports it, `Idle` stripping, and
+//!    dead-node elimination. Every pass is bit-preserving on the
+//!    network output.
+//! 2. **Artifacts** ([`artifact`]) — the pass output is scheduled into
+//!    CMDFIFO-sized *reload epochs* (networks deeper than the
+//!    341-command FIFO reload mid-forward instead of failing) and
+//!    content-addressed by a fingerprint of the optimized graph plus
+//!    the weights identity.
+//! 3. **Registry** ([`registry`]) — compiles are memoized per source
+//!    graph + weights; [`registry::ModelRepo`] holds the named model
+//!    set a multi-network worker pool serves from, and the device-side
+//!    command shadow
+//!    ([`crate::accel::stream::StreamAccelerator::load_commands_cached`])
+//!    keyed by artifact id makes command transfers happen only on a
+//!    network *switch*.
+//!
+//! Execution of compiled streams lives with the drivers:
+//! [`crate::host::driver::HostDriver::forward_compiled`] and
+//! [`crate::host::batch::forward_batch_compiled`].
+//!
+//! [`Network`]: crate::net::graph::Network
+
+pub mod artifact;
+pub mod cache;
+pub mod passes;
+pub mod registry;
+
+pub use artifact::{compile, fnv1a, graph_fingerprint, CompiledStream, EpochPlan};
+pub use cache::LruCache;
+pub use passes::{run_pipeline, PassReport};
+pub use registry::{ArtifactRegistry, ModelRepo, ServableModel};

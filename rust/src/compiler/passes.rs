@@ -1,0 +1,412 @@
+//! Graph-rewriting passes: lower a general inference DAG onto what the
+//! CSD actually executes.
+//!
+//! Every pass is **bit-preserving on the network output** — the FP16
+//! values of the final node are unchanged (property-tested in
+//! `tests/compiler_pipeline.rs`); passes may drop or rewrite interior
+//! nodes freely. The pipeline runs to a fixpoint, so chained rewrites
+//! (e.g. `relu(relu(conv))`) converge without special-casing.
+//!
+//! | pass             | rewrite                                            |
+//! |------------------|----------------------------------------------------|
+//! | `fuse_conv_relu` | standalone ReLU into its producing conv's fused    |
+//! |                  | activation (§3.2: ReLU is a sign-bit test in the   |
+//! |                  | conv datapath), or dropped if the conv already     |
+//! |                  | applies it                                         |
+//! | `fold_pool_relu` | ReLU adjacent to max-pooling dropped: the RTL      |
+//! |                  | comparator initializes at 0x0000 (Fig 26), so the  |
+//! |                  | pool command absorbs the activation on both sides  |
+//! | `strip_idle`     | `Idle` engine nodes removed (they would desync the |
+//! |                  | CSB, which treats op 0 as end-of-stream)           |
+//! | `eliminate_dead` | nodes unreachable from the output removed, so dead |
+//! |                  | branches never cost commands, weights, or cycles   |
+//!
+//! Adding a pass: write `fn my_pass(&Network) -> (Network, usize)`
+//! returning the rewritten graph and a change count (0 = unchanged;
+//! the [`rebuild`] helper handles node dropping + edge rewiring), then
+//! append it to [`PIPELINE`]. Rules: never reorder surviving engine
+//! nodes (the CSB consumes commands in graph order), and keep the
+//! output bits identical — extend the property test if in doubt.
+
+use crate::net::graph::{Network, Node};
+use crate::net::layer::OpType;
+
+/// What one pass did across all fixpoint rounds.
+#[derive(Clone, Debug)]
+pub struct PassOutcome {
+    pub name: &'static str,
+    /// Nodes fused, folded, or removed by this pass.
+    pub changed: usize,
+}
+
+/// Per-pass change counts for one compilation.
+#[derive(Clone, Debug, Default)]
+pub struct PassReport {
+    pub passes: Vec<PassOutcome>,
+}
+
+impl PassReport {
+    /// Total graph rewrites across all passes.
+    pub fn total_changes(&self) -> usize {
+        self.passes.iter().map(|p| p.changed).sum()
+    }
+
+    /// Compact `pass×count` rendering, e.g. `"fuse_conv_relu×2"`.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = self
+            .passes
+            .iter()
+            .filter(|p| p.changed > 0)
+            .map(|p| format!("{}×{}", p.name, p.changed))
+            .collect();
+        if parts.is_empty() {
+            "no-op".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
+type PassFn = fn(&Network) -> (Network, usize);
+
+/// The default pipeline, in order. See the module docs for the per-pass
+/// contracts and how to extend it.
+pub const PIPELINE: [(&str, PassFn); 4] = [
+    ("fuse_conv_relu", fuse_conv_relu),
+    ("fold_pool_relu", fold_pool_relu),
+    ("strip_idle", strip_idle),
+    ("eliminate_dead", eliminate_dead),
+];
+
+/// Run [`PIPELINE`] to a fixpoint (bounded — each round that changes
+/// anything strictly shrinks or simplifies the graph).
+pub fn run_pipeline(net: &Network) -> (Network, PassReport) {
+    let mut report = PassReport {
+        passes: PIPELINE.iter().map(|(name, _)| PassOutcome { name, changed: 0 }).collect(),
+    };
+    let mut cur = net.clone();
+    // Every change removes a node or clears a flag, so rounds are
+    // bounded by the node count; the cap is belt and braces.
+    for _ in 0..=net.nodes.len() {
+        let mut round_changes = 0;
+        for (i, (_, pass)) in PIPELINE.iter().enumerate() {
+            let (next, changed) = pass(&cur);
+            report.passes[i].changed += changed;
+            round_changes += changed;
+            cur = next;
+        }
+        if round_changes == 0 {
+            break;
+        }
+    }
+    (cur, report)
+}
+
+/// Consumer lists: `consumers[i]` = nodes that read node `i`.
+fn consumers(net: &Network) -> Vec<Vec<usize>> {
+    let mut cons = vec![Vec::new(); net.nodes.len()];
+    for (i, node) in net.nodes.iter().enumerate() {
+        for j in node.inputs() {
+            cons[j].push(i);
+        }
+    }
+    cons
+}
+
+/// Rebuild a network dropping the marked nodes. Edges into a dropped
+/// node are redirected to `repl[node]` (transitively). Dropped nodes
+/// that are still referenced must have `repl[i] != i`; dead nodes
+/// (unreferenced) may keep the default.
+fn rebuild(net: &Network, drop: &[bool], repl: &[usize]) -> Network {
+    let n = net.nodes.len();
+    let resolve = |mut i: usize| {
+        let mut steps = 0;
+        while drop[i] {
+            assert!(repl[i] != i, "dropped node {i} is still referenced");
+            i = repl[i];
+            steps += 1;
+            assert!(steps <= n, "replacement cycle at node {i}");
+        }
+        i
+    };
+    let mut new_index = vec![usize::MAX; n];
+    let mut out = Network::new(&net.name);
+    for i in 0..n {
+        if drop[i] {
+            continue;
+        }
+        // Replacements always point backwards, so resolved targets are
+        // already renumbered when we get here.
+        let node = match &net.nodes[i] {
+            Node::Input { side, ch } => Node::Input { side: *side, ch: *ch },
+            Node::Engine { spec, input } => {
+                Node::Engine { spec: spec.clone(), input: new_index[resolve(*input)] }
+            }
+            Node::Concat { name, inputs } => Node::Concat {
+                name: name.clone(),
+                inputs: inputs.iter().map(|&j| new_index[resolve(j)]).collect(),
+            },
+            Node::Softmax { name, input } => {
+                Node::Softmax { name: name.clone(), input: new_index[resolve(*input)] }
+            }
+            Node::Relu { name, input } => {
+                Node::Relu { name: name.clone(), input: new_index[resolve(*input)] }
+            }
+        };
+        out.nodes.push(node);
+        new_index[i] = out.nodes.len() - 1;
+    }
+    out
+}
+
+/// Fuse standalone [`Node::Relu`] nodes into their producing
+/// convolution (clearing `skip_relu`) when *every* consumer of the conv
+/// is a ReLU — otherwise another branch still needs the pre-activation
+/// values. A ReLU after a conv that already applies its fused ReLU is
+/// plain redundant and dropped.
+pub fn fuse_conv_relu(net: &Network) -> (Network, usize) {
+    let cons = consumers(net);
+    let n = net.nodes.len();
+    let mut out = net.clone();
+    let mut drop = vec![false; n];
+    let mut repl: Vec<usize> = (0..n).collect();
+    let mut changed = 0;
+    for i in 0..n {
+        let Node::Relu { input, .. } = &net.nodes[i] else { continue };
+        let src = *input;
+        let Node::Engine { spec, .. } = &net.nodes[src] else { continue };
+        if spec.op != OpType::ConvRelu {
+            continue;
+        }
+        let fusable = !spec.skip_relu
+            || cons[src].iter().all(|&c| matches!(net.nodes[c], Node::Relu { .. }));
+        if !fusable {
+            continue;
+        }
+        if spec.skip_relu {
+            if let Node::Engine { spec, .. } = &mut out.nodes[src] {
+                spec.skip_relu = false;
+            }
+        }
+        drop[i] = true;
+        repl[i] = src;
+        changed += 1;
+    }
+    if changed == 0 {
+        return (out, 0);
+    }
+    (rebuild(&out, &drop, &repl), changed)
+}
+
+/// Drop ReLU nodes that max-pooling absorbs. The RTL max comparator
+/// initializes at 0x0000 (Fig 26), so a maxpool command computes
+/// `max(0, window)` — which equals `relu(maxpool(x))` *and*
+/// `maxpool(relu(x))`. A ReLU directly after a maxpool, or one consumed
+/// exclusively by maxpools, is therefore free.
+pub fn fold_pool_relu(net: &Network) -> (Network, usize) {
+    let cons = consumers(net);
+    let n = net.nodes.len();
+    let mut drop = vec![false; n];
+    let mut repl: Vec<usize> = (0..n).collect();
+    let mut changed = 0;
+    let is_maxpool = |i: usize| {
+        matches!(&net.nodes[i], Node::Engine { spec, .. } if spec.op == OpType::MaxPool)
+    };
+    for i in 0..n {
+        let Node::Relu { input, .. } = &net.nodes[i] else { continue };
+        let after_pool = is_maxpool(*input);
+        let before_pools = !cons[i].is_empty() && cons[i].iter().all(|&c| is_maxpool(c));
+        if after_pool || before_pools {
+            drop[i] = true;
+            repl[i] = *input;
+            changed += 1;
+        }
+    }
+    if changed == 0 {
+        return (net.clone(), 0);
+    }
+    (rebuild(net, &drop, &repl), changed)
+}
+
+/// Remove `Idle` engine nodes. They are identities to the functional
+/// semantics but poison the command stream: the CSB parses op 0 as
+/// end-of-stream ([`crate::engine::csb::Csb::next_layer`]), so a loaded
+/// Idle command desynchronizes every layer after it.
+pub fn strip_idle(net: &Network) -> (Network, usize) {
+    let n = net.nodes.len();
+    let mut drop = vec![false; n];
+    let mut repl: Vec<usize> = (0..n).collect();
+    let mut changed = 0;
+    for i in 0..n {
+        if let Node::Engine { spec, input } = &net.nodes[i] {
+            if spec.op == OpType::Idle {
+                drop[i] = true;
+                repl[i] = *input;
+                changed += 1;
+            }
+        }
+    }
+    if changed == 0 {
+        return (net.clone(), 0);
+    }
+    (rebuild(net, &drop, &repl), changed)
+}
+
+/// Remove nodes that cannot reach the output (the last node). Dead
+/// engine branches would otherwise still be loaded as commands, still
+/// transfer weights, and still burn engine passes. Input nodes are
+/// always kept — the driver validates the request image against them.
+pub fn eliminate_dead(net: &Network) -> (Network, usize) {
+    let n = net.nodes.len();
+    if n == 0 {
+        return (net.clone(), 0);
+    }
+    let mut live = vec![false; n];
+    let mut stack = vec![n - 1];
+    while let Some(i) = stack.pop() {
+        if live[i] {
+            continue;
+        }
+        live[i] = true;
+        stack.extend(net.nodes[i].inputs());
+    }
+    for (i, node) in net.nodes.iter().enumerate() {
+        if matches!(node, Node::Input { .. }) {
+            live[i] = true;
+        }
+    }
+    let drop: Vec<bool> = live.iter().map(|&l| !l).collect();
+    let changed = drop.iter().filter(|&&d| d).count();
+    if changed == 0 {
+        return (net.clone(), 0);
+    }
+    let repl: Vec<usize> = (0..n).collect(); // dead nodes are unreferenced
+    (rebuild(net, &drop, &repl), changed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::layer::LayerSpec;
+
+    fn conv_no_act(name: &str, side: u32, ic: u32, oc: u32) -> LayerSpec {
+        let mut s = LayerSpec::conv(name, 3, 1, 1, side, ic, oc, 0);
+        s.skip_relu = true;
+        s
+    }
+
+    fn engine_spec<'a>(net: &'a Network, name: &str) -> &'a LayerSpec {
+        match &net.nodes[net.find(name).unwrap()] {
+            Node::Engine { spec, .. } => spec,
+            other => panic!("{name} is not an engine node: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn relu_fuses_into_sole_consumer_conv() {
+        let mut n = Network::new("t");
+        let inp = n.input(8, 3);
+        let c1 = n.engine(conv_no_act("c1", 8, 3, 4), inp);
+        let r = n.relu("r", c1);
+        n.softmax("prob", r);
+        let (opt, report) = run_pipeline(&n);
+        opt.check().unwrap();
+        assert_eq!(report.total_changes(), 1);
+        assert!(opt.find("r").is_none(), "relu node must be gone");
+        assert!(!engine_spec(&opt, "c1").skip_relu, "activation fused into the command");
+        assert_eq!(opt.nodes.len(), 3);
+    }
+
+    #[test]
+    fn relu_not_fused_when_preactivation_is_shared() {
+        // c1 feeds both a relu and a second conv directly: the second
+        // branch needs pre-activation values, so the relu must survive
+        // as a host node.
+        let mut n = Network::new("t");
+        let inp = n.input(8, 3);
+        let c1 = n.engine(conv_no_act("c1", 8, 3, 4), inp);
+        let r = n.relu("r", c1);
+        let a = n.engine(LayerSpec::conv("a", 1, 1, 0, 8, 4, 4, 0), r);
+        let b = n.engine(LayerSpec::conv("b", 1, 1, 0, 8, 4, 4, 0), c1);
+        let cat = n.concat("cat", vec![a, b]);
+        n.softmax("prob", cat);
+        let (opt, _) = run_pipeline(&n);
+        opt.check().unwrap();
+        assert!(opt.find("r").is_some(), "shared pre-activation: relu must remain");
+        assert!(engine_spec(&opt, "c1").skip_relu);
+    }
+
+    #[test]
+    fn chained_relus_converge_to_one_fusion() {
+        let mut n = Network::new("t");
+        let inp = n.input(8, 3);
+        let c1 = n.engine(conv_no_act("c1", 8, 3, 4), inp);
+        let r1 = n.relu("r1", c1);
+        let r2 = n.relu("r2", r1);
+        n.softmax("prob", r2);
+        let (opt, _) = run_pipeline(&n);
+        opt.check().unwrap();
+        assert!(opt.find("r1").is_none() && opt.find("r2").is_none());
+        assert!(!engine_spec(&opt, "c1").skip_relu);
+        assert_eq!(opt.nodes.len(), 3);
+    }
+
+    #[test]
+    fn pool_absorbs_relu_on_both_sides() {
+        let mut n = Network::new("t");
+        let inp = n.input(8, 4);
+        let r_in = n.relu("r_in", inp); // relu before a maxpool
+        let p = n.engine(LayerSpec::maxpool("p", 2, 2, 8, 4), r_in);
+        let r_out = n.relu("r_out", p); // relu after a maxpool
+        n.softmax("prob", r_out);
+        let (opt, report) = run_pipeline(&n);
+        opt.check().unwrap();
+        assert!(opt.find("r_in").is_none());
+        assert!(opt.find("r_out").is_none());
+        assert_eq!(report.total_changes(), 2);
+        // avg pooling must NOT absorb a relu (mean of negatives ≠ 0).
+        let mut m = Network::new("avg");
+        let inp = m.input(8, 4);
+        let r = m.relu("r", inp);
+        let a = m.engine(LayerSpec::avgpool("a", 2, 2, 8, 4), r);
+        m.softmax("prob", a);
+        let (opt, _) = run_pipeline(&m);
+        assert!(opt.find("r").is_some());
+    }
+
+    #[test]
+    fn idle_and_dead_nodes_are_stripped() {
+        let mut n = Network::new("t");
+        let inp = n.input(8, 3);
+        let c1 = n.engine(LayerSpec::conv("c1", 3, 1, 1, 8, 3, 4, 0), inp);
+        // An Idle engine node (would desync the CSB if loaded).
+        let mut idle = LayerSpec::conv("skip", 1, 1, 0, 8, 4, 4, 0);
+        idle.op = OpType::Idle;
+        let id = n.engine(idle, c1);
+        // A dead branch: computed, never consumed.
+        n.engine(LayerSpec::conv("dead", 1, 1, 0, 8, 4, 16, 0), c1);
+        let gap = n.engine(LayerSpec::avgpool("gap", 8, 1, 8, 4), id);
+        n.softmax("prob", gap);
+
+        let (opt, report) = run_pipeline(&n);
+        opt.check().unwrap();
+        assert!(opt.find("skip").is_none());
+        assert!(opt.find("dead").is_none());
+        let names: Vec<_> = opt.engine_layers().iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names, vec!["c1", "gap"]);
+        assert_eq!(report.total_changes(), 2);
+        assert!(report.summary().contains("strip_idle×1"));
+        assert!(report.summary().contains("eliminate_dead×1"));
+    }
+
+    #[test]
+    fn clean_graph_is_untouched() {
+        let net = crate::net::squeezenet::squeezenet_v11();
+        let fp = super::super::artifact::graph_fingerprint(&net);
+        let (opt, report) = run_pipeline(&net);
+        assert_eq!(report.total_changes(), 0);
+        assert_eq!(report.summary(), "no-op");
+        assert_eq!(super::super::artifact::graph_fingerprint(&opt), fp);
+        assert_eq!(opt.nodes.len(), net.nodes.len());
+    }
+}

@@ -1,0 +1,231 @@
+//! Artifact registry and model repo — where compiled command streams
+//! live between requests.
+//!
+//! [`ArtifactRegistry`] memoizes [`compile`] by a hash of the *source*
+//! graph + weights identity, so re-registering an unchanged network (or
+//! the same network arriving from a different front-end instance) costs
+//! one map lookup. [`ModelRepo`] is the serving-side view: named,
+//! immutable entries of (compiled stream, weights) that a worker pool
+//! shares by reference and reconfigures from per batch.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::net::graph::Network;
+use crate::net::weights::Blobs;
+
+use super::artifact::{combine, compile, fnv1a, graph_fingerprint, CompiledStream};
+
+/// Compile memo keyed by `combine(graph_fingerprint(source), weights_id)`.
+#[derive(Debug, Default)]
+pub struct ArtifactRegistry {
+    memo: Mutex<HashMap<u64, Arc<CompiledStream>>>,
+    compiles: AtomicU64,
+    hits: AtomicU64,
+}
+
+impl ArtifactRegistry {
+    pub fn new() -> ArtifactRegistry {
+        ArtifactRegistry::default()
+    }
+
+    /// Return the compiled stream for `net` + `weights_id`, compiling
+    /// at most once per distinct source.
+    pub fn get_or_compile(&self, net: &Network, weights_id: u64) -> Result<Arc<CompiledStream>> {
+        let key = combine(graph_fingerprint(net), weights_id);
+        let mut memo = self.memo.lock().unwrap();
+        if let Some(found) = memo.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(found.clone());
+        }
+        let stream = Arc::new(compile(net, weights_id)?);
+        memo.insert(key, stream.clone());
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        Ok(stream)
+    }
+
+    /// Compilations actually performed.
+    pub fn compiles(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// Memo hits (source graph + weights already compiled).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Distinct artifacts held.
+    pub fn len(&self) -> usize {
+        self.memo.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One servable network: its compiled stream and the weights it binds.
+#[derive(Clone, Debug)]
+pub struct ServableModel {
+    /// Registration name (the network's name).
+    pub name: String,
+    pub stream: Arc<CompiledStream>,
+    pub blobs: Blobs,
+}
+
+/// Named, immutable model set for a serving run. Built up front, then
+/// shared by reference across the worker pool — workers resolve a
+/// request's `network` name here and cache the `Arc` handles in their
+/// per-worker LRU.
+#[derive(Debug, Default)]
+pub struct ModelRepo {
+    registry: ArtifactRegistry,
+    by_name: HashMap<String, Arc<ServableModel>>,
+    /// First registered model — what untagged requests resolve to.
+    default: Option<String>,
+}
+
+impl ModelRepo {
+    pub fn new() -> ModelRepo {
+        ModelRepo::default()
+    }
+
+    /// Compile and register `net` under its own name. The weights
+    /// identity is derived from the FAWB byte serialization, so the
+    /// artifact id changes iff the graph or the weights change.
+    /// Returns the artifact id.
+    pub fn register(&mut self, net: Network, blobs: Blobs) -> Result<String> {
+        ensure!(
+            !self.by_name.contains_key(&net.name),
+            "model {:?} already registered",
+            net.name
+        );
+        let weights_id = fnv1a(&blobs.to_bytes());
+        let stream = self.registry.get_or_compile(&net, weights_id)?;
+        let id = stream.id.clone();
+        let name = net.name.clone();
+        if self.default.is_none() {
+            self.default = Some(name.clone());
+        }
+        self.by_name.insert(name.clone(), Arc::new(ServableModel { name, stream, blobs }));
+        Ok(id)
+    }
+
+    /// Resolve a request's network tag to a registered name (`None` →
+    /// the default model).
+    pub fn resolve(&self, network: Option<&str>) -> Result<String> {
+        match network {
+            Some(name) => {
+                ensure!(self.by_name.contains_key(name), "unknown network {name:?}");
+                Ok(name.to_string())
+            }
+            None => match &self.default {
+                Some(name) => Ok(name.clone()),
+                None => bail!("no models registered"),
+            },
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ServableModel>> {
+        self.by_name.get(name).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    /// Registered model names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.by_name.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// The underlying compile memo (for reuse stats).
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::layer::LayerSpec;
+    use crate::net::weights::synthesize_weights;
+
+    fn tiny(name: &str) -> Network {
+        let mut n = Network::new(name);
+        let inp = n.input(8, 3);
+        let c1 = n.engine(LayerSpec::conv("c1", 3, 1, 0, 8, 3, 8, 0), inp);
+        let gap = n.engine(LayerSpec::avgpool("gap", 6, 1, 6, 8), c1);
+        n.softmax("prob", gap);
+        n
+    }
+
+    #[test]
+    fn registry_memoizes_compiles() {
+        let reg = ArtifactRegistry::new();
+        let net = tiny("t");
+        let a = reg.get_or_compile(&net, 7).unwrap();
+        let b = reg.get_or_compile(&net, 7).unwrap();
+        assert_eq!(a.id, b.id);
+        assert_eq!(reg.compiles(), 1);
+        assert_eq!(reg.hits(), 1);
+        // Different weights identity → different artifact.
+        let c = reg.get_or_compile(&net, 8).unwrap();
+        assert_ne!(a.id, c.id);
+        assert_eq!(reg.compiles(), 2);
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn repo_registers_resolves_and_defaults() {
+        let mut repo = ModelRepo::new();
+        let net_a = tiny("alpha");
+        let blobs_a = synthesize_weights(&net_a, 1);
+        let net_b = tiny("beta");
+        let blobs_b = synthesize_weights(&net_b, 2);
+        let id_a = repo.register(net_a, blobs_a).unwrap();
+        let id_b = repo.register(net_b, blobs_b).unwrap();
+        // Same graph shape, different weights → different artifacts.
+        assert_ne!(id_a, id_b);
+        assert_eq!(repo.len(), 2);
+        assert_eq!(repo.names(), vec!["alpha".to_string(), "beta".to_string()]);
+        assert_eq!(repo.resolve(None).unwrap(), "alpha");
+        assert_eq!(repo.resolve(Some("beta")).unwrap(), "beta");
+        assert!(repo.resolve(Some("ghost")).is_err());
+        assert!(repo.get("alpha").is_some());
+        assert!(repo.get("ghost").is_none());
+    }
+
+    #[test]
+    fn duplicate_registration_is_rejected() {
+        let mut repo = ModelRepo::new();
+        let net = tiny("dup");
+        let blobs = synthesize_weights(&net, 1);
+        repo.register(net.clone(), blobs.clone()).unwrap();
+        assert!(repo.register(net, blobs).is_err());
+    }
+
+    #[test]
+    fn identical_weights_share_the_artifact() {
+        // Two names, same graph *and* same weight bytes: one compile,
+        // one artifact id — content addressing at work.
+        let mut repo = ModelRepo::new();
+        let net = tiny("same");
+        let blobs = synthesize_weights(&net, 5);
+        let id_a = repo.register(net.clone(), blobs.clone()).unwrap();
+        let renamed = Network { name: "same2".to_string(), nodes: net.nodes };
+        let id_b = repo.register(renamed, blobs).unwrap();
+        assert_eq!(id_a, id_b);
+        assert_eq!(repo.registry().compiles(), 1);
+        assert_eq!(repo.registry().hits(), 1);
+    }
+}

@@ -38,15 +38,24 @@ impl BatchPolicy {
 
 /// Assemble the next micro-batch, or `None` when the queue is closed
 /// and drained (worker shutdown).
+///
+/// Batches are **per network**: the first (blocking) pop fixes the
+/// batch's network tag, and the fill loop only admits requests with
+/// the same tag — a micro-batch is forwarded through one command
+/// stream, so mixing networks is impossible by construction. When only
+/// other-network requests remain queued, the open batch flushes
+/// immediately instead of sitting out the straggler window: holding it
+/// would delay both this batch and the queued network switch.
 pub fn next_batch(sched: &Scheduler, policy: &BatchPolicy) -> Option<Vec<QueuedRequest>> {
     assert!(policy.max_batch >= 1, "max_batch must be at least 1");
     let first = sched.pop_blocking()?;
+    let network = first.request.network.clone();
     let mut batch = vec![first];
     let deadline = Instant::now() + policy.batch_timeout;
     while batch.len() < policy.max_batch {
-        match sched.try_pop() {
+        match sched.try_pop_matching(network.as_deref()) {
             Pop::Item(q) => batch.push(q),
-            Pop::Closed => break,
+            Pop::Closed | Pop::NoMatch => break,
             Pop::Empty => {
                 let now = Instant::now();
                 if now >= deadline {
@@ -66,7 +75,7 @@ mod tests {
     use crate::net::tensor::Tensor;
 
     fn fill(sched: &Scheduler, n: u64) {
-        sched.push_all((0..n).map(|id| InferenceRequest { id, image: Tensor::zeros(1, 1, 1) }));
+        sched.push_all((0..n).map(|id| InferenceRequest::new(id, Tensor::zeros(1, 1, 1))));
     }
 
     #[test]
@@ -125,13 +134,49 @@ mod tests {
     }
 
     #[test]
+    fn batches_never_mix_networks() {
+        let s = Scheduler::new();
+        for (id, net) in [(0u64, "a"), (1, "a"), (2, "b"), (3, "a"), (4, "b")] {
+            s.push(InferenceRequest::new(id, Tensor::zeros(1, 1, 1)).for_network(net));
+        }
+        s.close();
+        let policy = BatchPolicy { max_batch: 8, batch_timeout: Duration::from_secs(5) };
+        let t0 = Instant::now();
+        let first = next_batch(&s, &policy).unwrap();
+        // All three "a" requests batch together, skipping the "b"s.
+        let ids: Vec<u64> = first.iter().map(|q| q.request.id).collect();
+        assert_eq!(ids, vec![0, 1, 3]);
+        assert!(first.iter().all(|q| q.request.network.as_deref() == Some("a")));
+        let second = next_batch(&s, &policy).unwrap();
+        let ids: Vec<u64> = second.iter().map(|q| q.request.id).collect();
+        assert_eq!(ids, vec![2, 4]);
+        assert!(next_batch(&s, &policy).is_none());
+        assert!(t0.elapsed() < Duration::from_secs(1), "closed queue must not wait");
+    }
+
+    #[test]
+    fn other_network_head_flushes_open_batch() {
+        let s = Scheduler::new();
+        s.push(InferenceRequest::new(0, Tensor::zeros(1, 1, 1)).for_network("a"));
+        s.push(InferenceRequest::new(1, Tensor::zeros(1, 1, 1)).for_network("b"));
+        // Queue stays OPEN: without the NoMatch flush this would sit
+        // out the whole (long) straggler window.
+        let policy = BatchPolicy { max_batch: 8, batch_timeout: Duration::from_secs(5) };
+        let t0 = Instant::now();
+        let batch = next_batch(&s, &policy).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].request.id, 0);
+        assert!(t0.elapsed() < Duration::from_secs(1), "must flush on a foreign head-of-line");
+    }
+
+    #[test]
     fn straggler_joins_open_batch() {
         let s = Scheduler::new();
         fill(&s, 1);
         std::thread::scope(|scope| {
             scope.spawn(|| {
                 std::thread::sleep(Duration::from_millis(10));
-                s.push(InferenceRequest { id: 99, image: Tensor::zeros(1, 1, 1) });
+                s.push(InferenceRequest::new(99, Tensor::zeros(1, 1, 1)));
                 s.close();
             });
             let b = next_batch(

@@ -70,6 +70,8 @@ impl BatchHistogram {
 #[derive(Clone, Debug)]
 pub struct FailedRequest {
     pub id: u64,
+    /// Worker that failed it; `usize::MAX` when the request never
+    /// reached a worker (rejected at admission, e.g. unknown network).
     pub worker: usize,
     pub error: String,
 }
@@ -93,6 +95,15 @@ pub struct WorkerStats {
     pub weight_loads: u64,
     /// Conv passes swept over resident weights.
     pub weight_sweeps: u64,
+    /// Command streams loaded over the link (network switches and cold
+    /// starts; see [`crate::accel::stream::EngineStats::command_loads`]).
+    pub command_loads: u64,
+    /// Command streams replayed from the device-side shadow (same
+    /// network as the previous batch — no link traffic).
+    pub command_reuses: u64,
+    /// Per-worker model-handle LRU hits/misses (repo fetches saved).
+    pub model_cache_hits: u64,
+    pub model_cache_misses: u64,
 }
 
 impl WorkerStats {
@@ -108,6 +119,18 @@ impl WorkerStats {
             0.0
         } else {
             self.weight_sweeps as f64 / self.weight_loads as f64
+        }
+    }
+
+    /// Fraction of command-stream loads served from the device shadow
+    /// (0.0 before any load). High = the worker mostly stayed on one
+    /// network; low = it kept switching.
+    pub fn command_reuse_rate(&self) -> f64 {
+        let total = self.command_loads + self.command_reuses;
+        if total == 0 {
+            0.0
+        } else {
+            self.command_reuses as f64 / total as f64
         }
     }
 }
@@ -142,6 +165,18 @@ pub struct ServeStats {
     pub modeled_seconds: f64,
     /// Served requests per modeled second.
     pub modeled_throughput: f64,
+    /// Command-stream link loads across all workers. Multi-network
+    /// serving with working caches keeps this well below `served`:
+    /// commands reload only on a network switch.
+    pub command_loads: u64,
+    /// Command-stream shadow replays across all workers.
+    pub command_reuses: u64,
+    /// Requests answered without a forward: duplicates of an in-flight
+    /// or cached (network, image) pair, shed in front of the scheduler.
+    pub result_cache_hits: usize,
+    /// Requests that went through the full pipeline while the result
+    /// cache was enabled.
+    pub result_cache_misses: usize,
 }
 
 impl ServeStats {
@@ -168,6 +203,19 @@ impl ServeStats {
         } else {
             0.0
         };
+        self.command_loads = self.workers.iter().map(|w| w.command_loads).sum();
+        self.command_reuses = self.workers.iter().map(|w| w.command_reuses).sum();
+    }
+
+    /// Fraction of requests shed by the image-keyed result cache (0.0
+    /// when the cache is disabled or saw no traffic).
+    pub fn result_cache_hit_rate(&self) -> f64 {
+        let total = self.result_cache_hits + self.result_cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.result_cache_hits as f64 / total as f64
+        }
     }
 }
 
@@ -226,10 +274,24 @@ mod tests {
             busy_seconds: 0.1,
             weight_loads: 5,
             weight_sweeps: 40,
+            command_loads: 2,
+            command_reuses: 6,
+            ..Default::default()
         };
         assert_eq!(w.modeled_seconds(), 3.0);
         assert_eq!(w.weight_reuse(), 8.0);
+        assert_eq!(w.command_reuse_rate(), 0.75);
         assert_eq!(WorkerStats::default().weight_reuse(), 0.0);
+        assert_eq!(WorkerStats::default().command_reuse_rate(), 0.0);
+    }
+
+    #[test]
+    fn result_cache_hit_rate_guards_zero() {
+        let mut s = ServeStats::default();
+        assert_eq!(s.result_cache_hit_rate(), 0.0);
+        s.result_cache_hits = 3;
+        s.result_cache_misses = 1;
+        assert_eq!(s.result_cache_hit_rate(), 0.75);
     }
 
     #[test]

@@ -1,40 +1,56 @@
-//! Multi-device batched serving runtime — the §6.2 scalability story
-//! made operational: "more computation units … can be used to boost up
-//! the forwarding process; the host logic can also be migrated" — here
-//! the host drives N simulated accelerators from a shared request
-//! queue, and each device forwards *micro-batches* so weight traffic
-//! amortizes across requests (see [`crate::host::batch`]).
+//! Multi-device, multi-network batched serving runtime — the §6.2
+//! scalability story made operational: "more computation units … can be
+//! used to boost up the forwarding process; the host logic can also be
+//! migrated" — here the host drives N simulated accelerators from a
+//! shared request queue, each device forwards *micro-batches* so weight
+//! traffic amortizes across requests (see [`crate::host::batch`]), and
+//! requests carry a **network tag** so one device pool serves several
+//! compiled networks concurrently (see [`crate::compiler`]).
 //!
 //! The subsystem splits into:
 //!
 //! * [`scheduler`] — closable MPMC request queue with enqueue
-//!   timestamps (queue-wait accounting);
+//!   timestamps (queue-wait accounting) and per-network matching pops;
 //! * [`batcher`] — adaptive micro-batch assembly: up to
-//!   [`BatchPolicy::max_batch`] requests or the `batch_timeout`
-//!   deadline, whichever first;
-//! * [`worker`] (private) — one thread per simulated device; batch=1
-//!   rides the classic single-image driver, larger batches the
+//!   [`BatchPolicy::max_batch`] *same-network* requests or the
+//!   `batch_timeout` deadline, whichever first;
+//! * [`worker`] (private) — one thread per simulated device; resolves a
+//!   batch's network against the shared [`ModelRepo`] (per-worker LRU
+//!   of model handles) and forwards through the compiled stream, so
+//!   command transfers happen only on a network switch; batch=1 rides
+//!   the classic single-image driver, larger batches the
 //!   weight-resident batched driver; failures/panics are reported and
 //!   drained instead of wedging the run;
 //! * [`metrics`] — batch-size histograms, per-worker modeled
-//!   link-vs-engine seconds, latency and queue-wait percentiles.
+//!   link-vs-engine seconds, command reload/reuse counts, latency and
+//!   queue-wait percentiles, result-cache hit rate.
+//!
+//! In front of the scheduler sits an optional **result cache**
+//! ([`ServeConfig::result_cache`]): forwards are pure functions of
+//! (network, image), so duplicate requests are shed at admission —
+//! answered from an LRU keyed by the exact (network, image) content,
+//! or parked on the identical in-flight request and answered when it
+//! completes.
 //!
 //! Plain std threads (no async runtime is available offline, and the
 //! workload is compute-bound simulation). Results are deterministic:
-//! each forward is a pure function of the image and batching is
-//! bit-identical to sequential serving (property-tested), so worker
-//! count and batch size change only the timing, never the numbers.
+//! each forward is a pure function of the network and image, and
+//! batching is bit-identical to sequential serving (property-tested),
+//! so worker count, batch size, caching, and network mix change only
+//! the timing, never the numbers.
 
 pub mod batcher;
 pub mod metrics;
 pub mod scheduler;
 mod worker;
 
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
+use crate::compiler::{LruCache, ModelRepo};
 use crate::hw::usb::UsbLink;
 use crate::net::graph::Network;
 use crate::net::tensor::TensorF32;
@@ -49,12 +65,30 @@ pub use scheduler::{Pop, QueuedRequest, Scheduler};
 pub struct InferenceRequest {
     pub id: u64,
     pub image: TensorF32,
+    /// Which registered network should serve this request (`None` = the
+    /// repo's default model). Batches never mix networks.
+    pub network: Option<String>,
+}
+
+impl InferenceRequest {
+    /// A request for the default network.
+    pub fn new(id: u64, image: TensorF32) -> InferenceRequest {
+        InferenceRequest { id, image, network: None }
+    }
+
+    /// Tag the request for a specific registered network.
+    pub fn for_network(mut self, network: &str) -> InferenceRequest {
+        self.network = Some(network.to_string());
+        self
+    }
 }
 
 /// A completed inference.
 #[derive(Clone, Debug)]
 pub struct InferenceResponse {
     pub id: u64,
+    /// The network that served it (resolved name).
+    pub network: String,
     /// Softmax probabilities.
     pub probs: Vec<f32>,
     /// Top-1 class.
@@ -69,7 +103,8 @@ pub struct InferenceResponse {
     pub modeled_seconds: f64,
     /// Seconds spent queued before a worker picked the request up.
     pub queue_wait_seconds: f64,
-    /// Size of the micro-batch this request rode in.
+    /// Size of the micro-batch this request rode in (0 = answered from
+    /// the result cache, no forward of its own).
     pub batch_size: usize,
 }
 
@@ -82,17 +117,42 @@ pub struct ServeConfig {
     pub n_workers: usize,
     /// Micro-batch assembly policy.
     pub policy: BatchPolicy,
+    /// Result cache capacity in front of the scheduler (0 = disabled).
+    /// Duplicate (network, image) requests — matched on exact image
+    /// content — are shed before batching and answered from the cache
+    /// or from the identical in-flight request.
+    pub result_cache: usize,
+    /// Per-worker LRU capacity for compiled-model handles.
+    pub model_cache: usize,
 }
 
 impl ServeConfig {
     /// Batched serving with the default straggler window.
     pub fn new(link: UsbLink, n_workers: usize, max_batch: usize) -> ServeConfig {
-        ServeConfig { link, n_workers, policy: BatchPolicy::batched(max_batch) }
+        ServeConfig {
+            link,
+            n_workers,
+            policy: BatchPolicy::batched(max_batch),
+            result_cache: 0,
+            model_cache: 4,
+        }
     }
 
     /// The pre-batching single-image flow (`max_batch = 1`).
     pub fn single(link: UsbLink, n_workers: usize) -> ServeConfig {
-        ServeConfig { link, n_workers, policy: BatchPolicy::single() }
+        ServeConfig {
+            link,
+            n_workers,
+            policy: BatchPolicy::single(),
+            result_cache: 0,
+            model_cache: 4,
+        }
+    }
+
+    /// Enable the image-keyed result cache with `capacity` entries.
+    pub fn with_result_cache(mut self, capacity: usize) -> ServeConfig {
+        self.result_cache = capacity;
+        self
     }
 }
 
@@ -103,14 +163,16 @@ impl ServeConfig {
 pub fn synthetic_requests(n: usize, seed: u64, side: usize, ch: usize) -> Vec<InferenceRequest> {
     let mut rng = crate::prop::Rng::new(seed);
     (0..n as u64)
-        .map(|id| InferenceRequest {
-            id,
-            image: crate::net::tensor::Tensor::from_vec(
-                side,
-                side,
-                ch,
-                (0..side * side * ch).map(|_| rng.normal(40.0)).collect(),
-            ),
+        .map(|id| {
+            InferenceRequest::new(
+                id,
+                crate::net::tensor::Tensor::from_vec(
+                    side,
+                    side,
+                    ch,
+                    (0..side * side * ch).map(|_| rng.normal(40.0)).collect(),
+                ),
+            )
         })
         .collect()
 }
@@ -130,24 +192,132 @@ pub fn serve(
     serve_batched(net, blobs, &ServeConfig::single(link, n_workers), requests)
 }
 
-/// Serve `requests` with dynamic micro-batching: each worker drains the
-/// shared queue into batches (up to `cfg.policy.max_batch` requests or
-/// the batch timeout, whichever first) and forwards them through the
-/// weight-resident batched driver. Responses come back sorted by id;
-/// requests whose forward failed or panicked are listed in
-/// [`ServeStats::failures`] — completed responses are always drained,
-/// never lost to a wedged channel.
+/// Serve a single network with dynamic micro-batching: compiles `net`
+/// into a one-model [`ModelRepo`] and runs [`serve_multi`]. Responses
+/// come back sorted by id; requests whose forward failed or panicked
+/// are listed in [`ServeStats::failures`] — completed responses are
+/// always drained, never lost to a wedged channel.
 pub fn serve_batched(
     net: &Network,
     blobs: &Blobs,
     cfg: &ServeConfig,
     requests: Vec<InferenceRequest>,
 ) -> Result<(Vec<InferenceResponse>, ServeStats)> {
+    let mut repo = ModelRepo::new();
+    repo.register(net.clone(), blobs.clone())?;
+    serve_multi(&repo, cfg, requests)
+}
+
+/// Result-cache entry: everything needed to answer a duplicate request
+/// without a forward.
+#[derive(Clone, Debug)]
+struct CachedResult {
+    network: String,
+    probs: Vec<f32>,
+    argmax: usize,
+    worker: usize,
+}
+
+/// Exact content key of a request: network name + image dims + image
+/// bits. The full bits (not a hash) are the key, so a cache hit can
+/// never alias a different image — the bit-identical serving claim
+/// holds unconditionally, at the cost of one image copy per in-flight
+/// cache entry (bounded by the load size plus the LRU capacity).
+type RequestKey = (String, Vec<u32>);
+
+fn request_key(network: &str, image: &TensorF32) -> RequestKey {
+    let mut bits = Vec::with_capacity(3 + image.data.len());
+    bits.push(image.h as u32);
+    bits.push(image.w as u32);
+    bits.push(image.c as u32);
+    bits.extend(image.data.iter().map(|v| v.to_bits()));
+    (network.to_string(), bits)
+}
+
+/// Serve a mixed workload over one device pool: each request's
+/// `network` tag resolves against `repo` (compiled artifacts), batches
+/// form per network, and workers reconfigure between batches by
+/// swapping command streams — reloading over the link only on an
+/// actual network switch. With [`ServeConfig::result_cache`] enabled,
+/// duplicate (network, image) requests never reach the scheduler.
+///
+/// Results are bit-identical to serving each network's requests alone
+/// (property-tested in `tests/serving_multi.rs`): forwards are pure,
+/// and neither batching, caching, nor interleaving changes the bits.
+pub fn serve_multi(
+    repo: &ModelRepo,
+    cfg: &ServeConfig,
+    requests: Vec<InferenceRequest>,
+) -> Result<(Vec<InferenceResponse>, ServeStats)> {
     ensure!(cfg.n_workers > 0, "need at least one worker");
     ensure!(cfg.policy.max_batch > 0, "max_batch must be at least 1");
+    ensure!(!repo.is_empty(), "no models registered");
     let total = requests.len();
+    let mut stats = ServeStats {
+        workers: (0..cfg.n_workers)
+            .map(|w| WorkerStats { worker: w, ..Default::default() })
+            .collect(),
+        ..Default::default()
+    };
+    let mut responses: Vec<InferenceResponse> = Vec::with_capacity(total);
+    let mut latencies: Vec<f64> = Vec::with_capacity(total);
+    let mut queue_waits: Vec<f64> = Vec::with_capacity(total);
+
+    // Admission: resolve network tags; with the result cache enabled,
+    // shed duplicates of an identical (network, image) pair — either
+    // answered from the LRU or parked on the in-flight representative.
+    let mut cache: LruCache<RequestKey, CachedResult> = LruCache::new(cfg.result_cache.max(1));
+    let mut inflight: HashMap<RequestKey, u64> = HashMap::new(); // content key → representative id
+    let mut parked: HashMap<u64, Vec<u64>> = HashMap::new(); // representative id → duplicate ids
+    let mut key_of: HashMap<u64, RequestKey> = HashMap::new(); // representative id → content key
+    let mut admitted: Vec<InferenceRequest> = Vec::with_capacity(total);
+    for mut req in requests {
+        let name = match repo.resolve(req.network.as_deref()) {
+            Ok(name) => name,
+            Err(err) => {
+                // Never reached a worker: reported with worker = MAX.
+                stats.failures.push(FailedRequest {
+                    id: req.id,
+                    worker: usize::MAX,
+                    error: format!("{err:#}"),
+                });
+                continue;
+            }
+        };
+        req.network = Some(name.clone());
+        if cfg.result_cache > 0 {
+            let key = request_key(&name, &req.image);
+            if let Some(hit) = cache.get(&key) {
+                stats.result_cache_hits += 1;
+                latencies.push(0.0);
+                queue_waits.push(0.0);
+                responses.push(InferenceResponse {
+                    id: req.id,
+                    network: hit.network,
+                    probs: hit.probs,
+                    argmax: hit.argmax,
+                    worker: hit.worker,
+                    service_seconds: 0.0,
+                    modeled_seconds: 0.0,
+                    queue_wait_seconds: 0.0,
+                    batch_size: 0,
+                });
+                continue;
+            }
+            if let Some(&rep) = inflight.get(&key) {
+                stats.result_cache_hits += 1;
+                parked.entry(rep).or_default().push(req.id);
+                continue;
+            }
+            inflight.insert(key.clone(), req.id);
+            key_of.insert(req.id, key);
+            stats.result_cache_misses += 1;
+        }
+        admitted.push(req);
+    }
+
     let sched = Scheduler::new();
-    sched.push_all(requests);
+    sched.push_all(admitted);
     sched.close();
     let (tx, rx) = mpsc::channel::<worker::WorkerEvent>();
     let t0 = Instant::now();
@@ -155,30 +325,48 @@ pub fn serve_batched(
     std::thread::scope(|scope| {
         for w in 0..cfg.n_workers {
             let tx = tx.clone();
-            let net = net.clone();
             let sched = &sched;
             let policy = &cfg.policy;
             let link = cfg.link;
-            scope.spawn(move || worker::run_worker(w, &net, blobs, link, sched, policy, &tx));
+            let model_cache = cfg.model_cache;
+            scope.spawn(move || worker::run_worker(w, repo, link, sched, policy, model_cache, &tx));
         }
         drop(tx);
     });
 
-    let mut responses: Vec<InferenceResponse> = Vec::with_capacity(total);
-    let mut latencies: Vec<f64> = Vec::with_capacity(total);
-    let mut queue_waits: Vec<f64> = Vec::with_capacity(total);
-    let mut stats = ServeStats {
-        workers: (0..cfg.n_workers)
-            .map(|w| WorkerStats { worker: w, ..Default::default() })
-            .collect(),
-        ..Default::default()
-    };
     for ev in rx {
         match ev {
             worker::WorkerEvent::Done(r) => {
-                latencies.push(r.queue_wait_seconds + r.service_seconds);
+                let turnaround = r.queue_wait_seconds + r.service_seconds;
+                latencies.push(turnaround);
                 queue_waits.push(r.queue_wait_seconds);
                 stats.workers[r.worker].served += 1;
+                if let Some(key) = key_of.get(&r.id) {
+                    cache.insert(
+                        key.clone(),
+                        CachedResult {
+                            network: r.network.clone(),
+                            probs: r.probs.clone(),
+                            argmax: r.argmax,
+                            worker: r.worker,
+                        },
+                    );
+                    for id in parked.remove(&r.id).unwrap_or_default() {
+                        latencies.push(turnaround);
+                        queue_waits.push(turnaround);
+                        responses.push(InferenceResponse {
+                            id,
+                            network: r.network.clone(),
+                            probs: r.probs.clone(),
+                            argmax: r.argmax,
+                            worker: r.worker,
+                            service_seconds: 0.0,
+                            modeled_seconds: 0.0,
+                            queue_wait_seconds: turnaround,
+                            batch_size: 0,
+                        });
+                    }
+                }
                 responses.push(r);
             }
             worker::WorkerEvent::Batch(m) => {
@@ -190,8 +378,25 @@ pub fn serve_batched(
                 w.busy_seconds += m.service_seconds;
                 w.weight_loads += m.weight_loads;
                 w.weight_sweeps += m.weight_sweeps;
+                w.command_loads += m.command_loads;
+                w.command_reuses += m.command_reuses;
+                if m.model_cache_hit {
+                    w.model_cache_hits += 1;
+                } else {
+                    w.model_cache_misses += 1;
+                }
             }
-            worker::WorkerEvent::Failed(f) => stats.failures.push(f),
+            worker::WorkerEvent::Failed(f) => {
+                // Duplicates parked on a failed representative fail too.
+                for id in parked.remove(&f.id).unwrap_or_default() {
+                    stats.failures.push(FailedRequest {
+                        id,
+                        worker: f.worker,
+                        error: f.error.clone(),
+                    });
+                }
+                stats.failures.push(f);
+            }
         }
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -229,14 +434,16 @@ mod tests {
     fn rand_requests(n: usize, seed: u64) -> Vec<InferenceRequest> {
         let mut rng = Rng::new(seed);
         (0..n as u64)
-            .map(|id| InferenceRequest {
-                id,
-                image: crate::net::tensor::Tensor::from_vec(
-                    8,
-                    8,
-                    3,
-                    (0..8 * 8 * 3).map(|_| rng.normal(1.0)).collect(),
-                ),
+            .map(|id| {
+                InferenceRequest::new(
+                    id,
+                    crate::net::tensor::Tensor::from_vec(
+                        8,
+                        8,
+                        3,
+                        (0..8 * 8 * 3).map(|_| rng.normal(1.0)).collect(),
+                    ),
+                )
             })
             .collect()
     }
@@ -258,6 +465,10 @@ mod tests {
         // batch=1 serving records only size-1 batches.
         assert_eq!(stats.batch_hist.max_size(), 1);
         assert_eq!(stats.batch_hist.batches(), 16);
+        // One network: commands cross the link at most once per worker.
+        assert!(stats.command_loads <= 4, "loads {}", stats.command_loads);
+        assert_eq!(stats.command_loads + stats.command_reuses, 16);
+        assert!(resps.iter().all(|r| r.network == "tiny"));
     }
 
     #[test]
@@ -356,5 +567,56 @@ mod tests {
         for f in &stats.failures {
             assert!(!f.error.is_empty());
         }
+    }
+
+    #[test]
+    fn result_cache_sheds_duplicates_bit_identically() {
+        let net = tiny_net();
+        let blobs = synthesize_weights(&net, 8);
+        // 4 distinct images, each submitted 3 times (ids interleaved).
+        let distinct = rand_requests(4, 21);
+        let mut reqs = Vec::new();
+        for copy in 0..3u64 {
+            for r in &distinct {
+                reqs.push(InferenceRequest::new(copy * 4 + r.id, r.image.clone()));
+            }
+        }
+        let base_cfg = ServeConfig::new(UsbLink::usb3_frontpanel(), 2, 4);
+        let (plain, plain_stats) = serve_batched(&net, &blobs, &base_cfg, reqs.clone()).unwrap();
+        let cached_cfg = base_cfg.with_result_cache(64);
+        let (cached, stats) = serve_batched(&net, &blobs, &cached_cfg, reqs).unwrap();
+        assert_eq!(cached.len(), 12);
+        // Identical answers, duplicate traffic shed before batching.
+        for (a, b) in plain.iter().zip(&cached) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.probs, b.probs, "req {}", a.id);
+            assert_eq!(a.argmax, b.argmax);
+        }
+        assert_eq!(stats.result_cache_hits, 8, "8 of 12 are duplicates");
+        assert_eq!(stats.result_cache_misses, 4);
+        assert!((stats.result_cache_hit_rate() - 8.0 / 12.0).abs() < 1e-12);
+        // Shed requests never rode a batch…
+        assert_eq!(stats.batch_hist.requests(), 4);
+        assert!(cached.iter().filter(|r| r.batch_size == 0).count() == 8);
+        // …while the uncached run forwarded all 12.
+        assert_eq!(plain_stats.batch_hist.requests(), 12);
+        assert_eq!(plain_stats.result_cache_hits, 0);
+    }
+
+    #[test]
+    fn unknown_network_fails_at_admission() {
+        let net = tiny_net();
+        let blobs = synthesize_weights(&net, 9);
+        let mut reqs = rand_requests(3, 17);
+        reqs[1] = reqs[1].clone().for_network("nonexistent");
+        let cfg = ServeConfig::single(UsbLink::usb3_frontpanel(), 1);
+        let (resps, stats) = serve_batched(&net, &blobs, &cfg, reqs).unwrap();
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.failures[0].id, 1);
+        assert!(stats.failures[0].error.contains("nonexistent"));
+        assert_eq!(stats.failures[0].worker, usize::MAX, "never reached a worker");
+        let ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2]);
     }
 }

@@ -31,6 +31,9 @@ pub enum Pop {
     Empty,
     /// Queue empty and closed — no request will ever arrive.
     Closed,
+    /// Queue has requests, but none for the asked-for network
+    /// (only returned by [`Scheduler::try_pop_matching`]).
+    NoMatch,
 }
 
 struct State {
@@ -111,6 +114,25 @@ impl Scheduler {
         }
     }
 
+    /// Non-blocking pop of the first request tagged for `network` —
+    /// the batcher's per-network fill: a batch rides one command
+    /// stream, so only same-network requests may join it. Skipped-over
+    /// requests keep their queue position (no starvation: another
+    /// worker, or this one's next batch, takes them in order).
+    pub fn try_pop_matching(&self, network: Option<&str>) -> Pop {
+        let mut s = self.state.lock().unwrap();
+        if s.queue.is_empty() {
+            return if s.closed { Pop::Closed } else { Pop::Empty };
+        }
+        match s.queue.iter().position(|(r, _)| r.network.as_deref() == network) {
+            Some(i) => {
+                let (request, t) = s.queue.remove(i).expect("position is in range");
+                Pop::Item(QueuedRequest { request, queue_wait: t.elapsed().as_secs_f64() })
+            }
+            None => Pop::NoMatch,
+        }
+    }
+
     /// Blocking pop: waits until a request arrives or the queue is
     /// closed and drained (→ `None`).
     pub fn pop_blocking(&self) -> Option<QueuedRequest> {
@@ -143,7 +165,7 @@ mod tests {
     use crate::net::tensor::Tensor;
 
     fn req(id: u64) -> InferenceRequest {
-        InferenceRequest { id, image: Tensor::zeros(1, 1, 1) }
+        InferenceRequest::new(id, Tensor::zeros(1, 1, 1))
     }
 
     #[test]
@@ -161,6 +183,30 @@ mod tests {
         s.close();
         assert!(matches!(s.try_pop(), Pop::Closed));
         assert!(s.pop_blocking().is_none());
+    }
+
+    #[test]
+    fn matching_pop_skips_other_networks_in_order() {
+        let s = Scheduler::new();
+        s.push(req(0).for_network("a"));
+        s.push(req(1).for_network("b"));
+        s.push(req(2).for_network("a"));
+        // Pop the "a" requests in FIFO order, skipping the "b".
+        for want in [0u64, 2] {
+            match s.try_pop_matching(Some("a")) {
+                Pop::Item(q) => assert_eq!(q.request.id, want),
+                _ => panic!("expected item {want}"),
+            }
+        }
+        assert!(matches!(s.try_pop_matching(Some("a")), Pop::NoMatch));
+        // The skipped request kept its place.
+        match s.try_pop_matching(Some("b")) {
+            Pop::Item(q) => assert_eq!(q.request.id, 1),
+            _ => panic!("expected the b request"),
+        }
+        assert!(matches!(s.try_pop_matching(Some("b")), Pop::Empty));
+        s.close();
+        assert!(matches!(s.try_pop_matching(Some("b")), Pop::Closed));
     }
 
     #[test]

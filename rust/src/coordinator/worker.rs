@@ -1,12 +1,22 @@
 //! Device worker: owns one simulated [`StreamAccelerator`], drains the
-//! shared queue into micro-batches and forwards them.
+//! shared queue into per-network micro-batches and forwards them
+//! through compiled command streams.
 //!
-//! Batches of one ride the classic single-image
-//! [`HostDriver::forward`] path (the `batch=1` degenerate case);
-//! larger batches go through the weight-resident
-//! [`forward_batch`] so each weight super-block crosses the link once
-//! per batch. A failing or panicking forward no longer takes the whole
-//! run down: the device is re-created (its caches and FIFOs may be
+//! Reconfiguration is the whole point (§4.1): a batch carries a network
+//! tag, the worker resolves it against the shared
+//! [`ModelRepo`] (through a small per-worker LRU of model handles) and
+//! forwards through [`HostDriver::forward_compiled`] /
+//! [`forward_batch_compiled`]. Command streams are loaded under their
+//! artifact id, so the device's command shadow turns consecutive
+//! same-network batches into zero-command-traffic replays — only a
+//! network *switch* pays the transfer (counted in
+//! [`crate::accel::stream::EngineStats`]).
+//!
+//! Batches of one ride the classic single-image path (the `batch=1`
+//! degenerate case); larger batches go through the weight-resident
+//! batched driver so each weight super-block crosses the link once per
+//! batch. A failing or panicking forward no longer takes the whole run
+//! down: the device is re-created (its caches and FIFOs may be
 //! mid-flight) and a failed *multi-request* batch is retried member by
 //! member so only the truly poisoned requests are reported failed —
 //! innocent requests that merely shared a batch still get answers, and
@@ -14,19 +24,19 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::accel::stream::StreamAccelerator;
-use crate::host::batch::forward_batch;
+use crate::compiler::{LruCache, ModelRepo, ServableModel};
+use crate::host::batch::forward_batch_compiled;
 use crate::host::driver::HostDriver;
 use crate::host::postprocess;
 use crate::hw::clock::ClockDomain;
 use crate::hw::usb::UsbLink;
-use crate::net::graph::Network;
 use crate::net::tensor::TensorF32;
-use crate::net::weights::Blobs;
 
 use super::batcher::{self, BatchPolicy};
 use super::metrics::FailedRequest;
@@ -56,32 +66,61 @@ pub(crate) struct BatchMetric {
     pub service_seconds: f64,
     pub weight_loads: u64,
     pub weight_sweeps: u64,
+    /// Command-stream link loads / shadow replays this batch added.
+    pub command_loads: u64,
+    pub command_reuses: u64,
+    /// Whether the model handle came from the per-worker LRU.
+    pub model_cache_hit: bool,
 }
 
 /// Everything a worker needs besides the device and the batch at hand.
 struct WorkerCtx<'a> {
     worker: usize,
-    net: &'a Network,
-    blobs: &'a Blobs,
+    repo: &'a ModelRepo,
     link: UsbLink,
     tx: &'a mpsc::Sender<WorkerEvent>,
+    /// Per-worker LRU of resolved model handles (network name → model).
+    models: LruCache<String, Arc<ServableModel>>,
+}
+
+impl WorkerCtx<'_> {
+    /// Resolve a batch's network tag to a model handle, LRU-cached.
+    /// Returns the handle and whether it was a cache hit.
+    fn model(&mut self, network: Option<&str>) -> Result<(Arc<ServableModel>, bool)> {
+        let name = self.repo.resolve(network)?;
+        if let Some(model) = self.models.get(&name) {
+            return Ok((model, true));
+        }
+        let model = self
+            .repo
+            .get(&name)
+            .with_context(|| format!("model {name:?} vanished from the repo"))?;
+        self.models.insert(name, model.clone());
+        Ok((model, false))
+    }
 }
 
 /// Run one worker until the queue closes. Never panics outward; errors
 /// surface as [`WorkerEvent::Failed`].
 pub(crate) fn run_worker(
     worker: usize,
-    net: &Network,
-    blobs: &Blobs,
+    repo: &ModelRepo,
     link: UsbLink,
     sched: &Scheduler,
     policy: &BatchPolicy,
+    model_cache: usize,
     tx: &mpsc::Sender<WorkerEvent>,
 ) {
-    let ctx = WorkerCtx { worker, net, blobs, link, tx };
+    let mut ctx = WorkerCtx {
+        worker,
+        repo,
+        link,
+        tx,
+        models: LruCache::new(model_cache.max(1)),
+    };
     let mut dev = StreamAccelerator::new(link);
     while let Some(batch) = batcher::next_batch(sched, policy) {
-        if !run_batch(&mut dev, &ctx, &batch) {
+        if !run_batch(&mut dev, &mut ctx, &batch) {
             return; // coordinator went away
         }
     }
@@ -91,16 +130,26 @@ pub(crate) fn run_worker(
 /// re-created and a multi-request batch is retried member by member, so
 /// only truly poisoned requests fail. Returns `false` when the response
 /// channel is gone (coordinator dropped).
-fn run_batch(dev: &mut StreamAccelerator, ctx: &WorkerCtx, batch: &[QueuedRequest]) -> bool {
+fn run_batch(dev: &mut StreamAccelerator, ctx: &mut WorkerCtx, batch: &[QueuedRequest]) -> bool {
     let size = batch.len();
+    let (model, model_cache_hit) = match ctx.model(batch[0].request.network.as_deref()) {
+        Ok(found) => found,
+        Err(err) => {
+            // Admission normally filters unknown networks; failing the
+            // batch keeps the run draining even if one slips through.
+            return fail_batch(batch, ctx.worker, format!("{err:#}"), ctx.tx).is_ok();
+        }
+    };
     let images: Vec<TensorF32> = batch.iter().map(|q| q.request.image.clone()).collect();
     let link_before = dev.usb.total_seconds();
     let engine_before = ClockDomain::ENGINE.secs(dev.stats.cycles);
     let loads_before = dev.stats.weight_loads;
     let sweeps_before = dev.stats.weight_sweeps;
+    let cmd_loads_before = dev.stats.command_loads;
+    let cmd_reuses_before = dev.stats.command_reuses;
     let t0 = Instant::now();
     let outcome =
-        match catch_unwind(AssertUnwindSafe(|| forward_probs(dev, ctx.net, ctx.blobs, &images))) {
+        match catch_unwind(AssertUnwindSafe(|| forward_probs(dev, &model, &images))) {
             Ok(Ok(probs)) => Ok(probs),
             Ok(Err(err)) => Err(format!("{err:#}")),
             Err(panic) => Err(panic_message(panic.as_ref())),
@@ -115,6 +164,7 @@ fn run_batch(dev: &mut StreamAccelerator, ctx: &WorkerCtx, batch: &[QueuedReques
                 let argmax = postprocess::argmax(&probs).unwrap_or(0);
                 let done = WorkerEvent::Done(InferenceResponse {
                     id: q.request.id,
+                    network: model.name.clone(),
                     probs,
                     argmax,
                     worker: ctx.worker,
@@ -135,6 +185,9 @@ fn run_batch(dev: &mut StreamAccelerator, ctx: &WorkerCtx, batch: &[QueuedReques
                 service_seconds,
                 weight_loads: dev.stats.weight_loads - loads_before,
                 weight_sweeps: dev.stats.weight_sweeps - sweeps_before,
+                command_loads: dev.stats.command_loads - cmd_loads_before,
+                command_reuses: dev.stats.command_reuses - cmd_reuses_before,
+                model_cache_hit,
             };
             ctx.tx.send(WorkerEvent::Batch(metric)).is_ok()
         }
@@ -157,18 +210,18 @@ fn run_batch(dev: &mut StreamAccelerator, ctx: &WorkerCtx, batch: &[QueuedReques
     }
 }
 
-/// Forward a batch and return per-image softmax probabilities.
+/// Forward a batch through the compiled stream and return per-image
+/// softmax probabilities.
 fn forward_probs(
     dev: &mut StreamAccelerator,
-    net: &Network,
-    blobs: &Blobs,
+    model: &ServableModel,
     images: &[TensorF32],
 ) -> Result<Vec<Vec<f32>>> {
     if images.len() == 1 {
-        let r = HostDriver::new(dev).forward(net, blobs, &images[0])?;
+        let r = HostDriver::new(dev).forward_compiled(&model.stream, &model.blobs, &images[0])?;
         Ok(vec![r.probs])
     } else {
-        let b = forward_batch(dev, net, blobs, images)?;
+        let b = forward_batch_compiled(dev, &model.stream, &model.blobs, images)?;
         Ok(b.items.into_iter().map(|i| i.probs).collect())
     }
 }
@@ -203,6 +256,7 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 mod tests {
     use super::*;
     use crate::coordinator::InferenceRequest;
+    use crate::net::graph::Network;
     use crate::net::layer::LayerSpec;
     use crate::net::tensor::Tensor;
     use crate::net::weights::synthesize_weights;
@@ -217,17 +271,24 @@ mod tests {
         n
     }
 
+    fn tiny_repo() -> ModelRepo {
+        let net = tiny_net();
+        let blobs = synthesize_weights(&net, 3);
+        let mut repo = ModelRepo::new();
+        repo.register(net, blobs).unwrap();
+        repo
+    }
+
     fn good_request(id: u64, rng: &mut Rng) -> InferenceRequest {
-        InferenceRequest {
+        InferenceRequest::new(
             id,
-            image: Tensor::from_vec(6, 6, 3, (0..6 * 6 * 3).map(|_| rng.normal(1.0)).collect()),
-        }
+            Tensor::from_vec(6, 6, 3, (0..6 * 6 * 3).map(|_| rng.normal(1.0)).collect()),
+        )
     }
 
     #[test]
     fn worker_drains_queue_and_reports_metrics() {
-        let net = tiny_net();
-        let blobs = synthesize_weights(&net, 3);
+        let repo = tiny_repo();
         let sched = Scheduler::new();
         let mut rng = Rng::new(1);
         sched.push_all((0..5).map(|id| good_request(id, &mut rng)));
@@ -235,54 +296,60 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         run_worker(
             0,
-            &net,
-            &blobs,
+            &repo,
             crate::hw::usb::UsbLink::usb3_frontpanel(),
             &sched,
             &BatchPolicy::batched(4),
+            4,
             &tx,
         );
         drop(tx);
         let mut done = 0;
         let mut batches = Vec::new();
+        let mut cmd_loads = 0u64;
+        let mut cmd_reuses = 0u64;
         for ev in rx {
             match ev {
                 WorkerEvent::Done(r) => {
                     assert_eq!(r.worker, 0);
+                    assert_eq!(r.network, "w");
                     assert!(r.modeled_seconds > 0.0);
                     done += 1;
                 }
-                WorkerEvent::Batch(m) => batches.push(m.size),
+                WorkerEvent::Batch(m) => {
+                    batches.push(m.size);
+                    cmd_loads += m.command_loads;
+                    cmd_reuses += m.command_reuses;
+                }
                 WorkerEvent::Failed(f) => panic!("unexpected failure: {}", f.error),
             }
         }
         assert_eq!(done, 5);
         assert_eq!(batches.iter().sum::<usize>(), 5);
         assert!(batches.len() >= 2, "4+1 expected, got {batches:?}");
+        // One network: commands crossed the link once, then replayed.
+        assert_eq!(cmd_loads, 1);
+        assert_eq!(cmd_reuses, batches.len() as u64 - 1);
     }
 
     #[test]
     fn worker_survives_panicking_request() {
-        let net = tiny_net();
-        let blobs = synthesize_weights(&net, 3);
+        let repo = tiny_repo();
         let sched = Scheduler::new();
         let mut rng = Rng::new(2);
         // Request 0: right shape header but truncated data — the
         // forward indexes out of bounds and panics mid-layer.
-        sched.push(InferenceRequest {
-            id: 0,
-            image: Tensor { h: 6, w: 6, c: 3, data: vec![0.5; 10] },
-        });
+        sched.push(InferenceRequest::new(0, Tensor { h: 6, w: 6, c: 3, data: vec![0.5; 10] }));
         sched.push(good_request(1, &mut rng));
         sched.close();
         let (tx, rx) = mpsc::channel();
         run_worker(
             0,
-            &net,
-            &blobs,
+            &repo,
             crate::hw::usb::UsbLink::usb3_frontpanel(),
             &sched,
             &BatchPolicy::single(),
+            4,
             &tx,
         );
         drop(tx);
@@ -300,5 +367,40 @@ mod tests {
         }
         assert_eq!(failed, vec![0]);
         assert_eq!(done, vec![1], "worker must keep serving after a panic");
+    }
+
+    #[test]
+    fn unknown_network_fails_the_batch_not_the_worker() {
+        let repo = tiny_repo();
+        let sched = Scheduler::new();
+        let mut rng = Rng::new(3);
+        sched.push(good_request(0, &mut rng).for_network("ghost"));
+        sched.push(good_request(1, &mut rng));
+        sched.close();
+        let (tx, rx) = mpsc::channel();
+        run_worker(
+            0,
+            &repo,
+            crate::hw::usb::UsbLink::usb3_frontpanel(),
+            &sched,
+            &BatchPolicy::single(),
+            4,
+            &tx,
+        );
+        drop(tx);
+        let mut failed = Vec::new();
+        let mut done = Vec::new();
+        for ev in rx {
+            match ev {
+                WorkerEvent::Done(r) => done.push(r.id),
+                WorkerEvent::Failed(f) => {
+                    assert!(f.error.contains("ghost"), "error: {}", f.error);
+                    failed.push(f.id);
+                }
+                WorkerEvent::Batch(_) => {}
+            }
+        }
+        assert_eq!(failed, vec![0]);
+        assert_eq!(done, vec![1]);
     }
 }

@@ -45,6 +45,21 @@ impl Csb {
         true
     }
 
+    /// Refill the CMDFIFO from already-encoded command dwords — the
+    /// replay path of the device-side command shadow
+    /// ([`crate::accel::stream::StreamAccelerator::load_commands_cached`]):
+    /// no re-encoding, no host transfer, just the FIFO write. Returns
+    /// false (writing nothing) if the dwords would not fit.
+    pub fn load_raw(&mut self, dwords: &[u32]) -> bool {
+        if self.cmd_fifo.space() < dwords.len() {
+            return false;
+        }
+        for &d in dwords {
+            self.cmd_fifo.push_checked(d);
+        }
+        true
+    }
+
     /// Engine side: pop and decode the next layer command (Load Layer
     /// stage). Returns None when the FIFO is drained or on a malformed
     /// command (decode validates the redundant stride2/kernel_size
@@ -104,6 +119,21 @@ mod tests {
             loaded += 1;
         }
         assert_eq!(loaded, 341);
+    }
+
+    #[test]
+    fn raw_replay_decodes_like_load_command() {
+        let spec = LayerSpec::conv("x", 3, 2, 0, 227, 3, 64, 0);
+        let mut csb = Csb::new();
+        assert!(csb.load_raw(&spec.encode()));
+        let got = csb.next_layer().expect("replayed command decodes");
+        assert_eq!(got.encode(), spec.encode());
+        // A replay that would overflow is refused without writing.
+        let mut full = Csb::new();
+        let dwords: Vec<u32> = std::iter::repeat(spec.encode()).take(MAX_LAYERS).flatten().collect();
+        assert!(full.load_raw(&dwords));
+        assert!(!full.load_raw(&spec.encode()));
+        assert_eq!(full.pending(), MAX_LAYERS);
     }
 
     #[test]

@@ -238,6 +238,14 @@ pub fn avgpool(spec: &LayerSpec, input: &TensorF16) -> TensorF16 {
     out
 }
 
+/// Standalone host-side ReLU over a tensor — the semantics of a
+/// [`crate::net::graph::Node::Relu`] node the compiler could not fuse
+/// into an engine command. Same sign-bit test as the fused path
+/// ([`F16::relu`]), so fusing it later is bit-preserving.
+pub fn relu(input: &TensorF16) -> TensorF16 {
+    Tensor::from_vec(input.h, input.w, input.c, input.data.iter().map(|v| v.relu()).collect())
+}
+
 /// Dispatch one engine layer. Surface/channel padding must match the
 /// `conv` contract; pooling takes the raw tensor.
 pub fn run_layer(spec: &LayerSpec, input: &TensorF16, w: Option<&ConvWeightsF16>) -> TensorF16 {

@@ -25,6 +25,7 @@
 use anyhow::{ensure, Context, Result};
 
 use crate::accel::stream::{SliceTask, StreamAccelerator, DATA_CACHE_WORDS, WEIGHT_CACHE_WORDS};
+use crate::compiler::CompiledStream;
 use crate::engine::functional::ConvWeightsF16;
 use crate::fp16::F16;
 use crate::host::driver::pad_for_engine;
@@ -57,11 +58,37 @@ pub fn forward_batch(
     blobs: &Blobs,
     images: &[TensorF32],
 ) -> Result<BatchResult> {
+    forward_batch_inner(dev, net, blobs, images, None)
+}
+
+/// Batched forward of a compiled stream: the optimized graph, commands
+/// loaded per reload epoch under the artifact id (see
+/// [`crate::compiler`] and
+/// [`crate::accel::stream::StreamAccelerator::load_commands_cached`]).
+pub fn forward_batch_compiled(
+    dev: &mut StreamAccelerator,
+    stream: &CompiledStream,
+    blobs: &Blobs,
+    images: &[TensorF32],
+) -> Result<BatchResult> {
+    forward_batch_inner(dev, &stream.net, blobs, images, Some(stream))
+}
+
+fn forward_batch_inner(
+    dev: &mut StreamAccelerator,
+    net: &Network,
+    blobs: &Blobs,
+    images: &[TensorF32],
+    stream: Option<&CompiledStream>,
+) -> Result<BatchResult> {
     net.check().map_err(anyhow::Error::msg)?;
     ensure!(!images.is_empty(), "empty batch");
     let b = images.len();
-    let layers = net.engine_layers();
-    dev.load_commands(&layers).context("load commands")?;
+    if stream.is_none() {
+        dev.load_commands(&net.engine_layers()).context("load commands")?;
+    }
+    let mut engine_idx = 0usize;
+    let mut epoch = 0usize;
 
     // acts[img][node]
     let mut acts: Vec<Vec<TensorF16>> = vec![Vec::with_capacity(net.nodes.len()); b];
@@ -77,6 +104,14 @@ pub fn forward_batch(
                 }
             }
             Node::Engine { spec, input } => {
+                if let Some(cs) = stream {
+                    if epoch < cs.epochs.len() && engine_idx == cs.epochs[epoch].start {
+                        dev.load_commands_cached(&cs.epoch_key(epoch), &cs.epoch_layers(epoch))
+                            .with_context(|| format!("load epoch {epoch}"))?;
+                        epoch += 1;
+                    }
+                }
+                engine_idx += 1;
                 let reg = dev.load_layer().with_context(|| format!("CSB empty at {}", spec.name))?;
                 ensure!(reg.encode() == spec.encode(), "layer register mismatch at {}", spec.name);
                 match spec.op {
@@ -99,6 +134,12 @@ pub fn forward_batch(
             Node::Softmax { input, .. } => {
                 for a in acts.iter_mut() {
                     let t = a[*input].clone();
+                    a.push(t);
+                }
+            }
+            Node::Relu { input, .. } => {
+                for a in acts.iter_mut() {
+                    let t = crate::engine::functional::relu(&a[*input]);
                     a.push(t);
                 }
             }

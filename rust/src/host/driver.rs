@@ -12,6 +12,7 @@ use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 
 use crate::accel::stream::{SliceTask, StreamAccelerator, WEIGHT_CACHE_WORDS};
+use crate::compiler::CompiledStream;
 use crate::engine::functional::ConvWeightsF16;
 use crate::host::gemm;
 use crate::host::postprocess;
@@ -69,16 +70,45 @@ impl<'d> HostDriver<'d> {
     /// intermediate FP16 tensor plus timing. `image` is the
     /// *preprocessed* H×W×C input (see [`crate::host::preprocess`]).
     pub fn forward(&mut self, net: &Network, blobs: &Blobs, image: &TensorF32) -> Result<ForwardResult> {
+        self.forward_inner(net, blobs, image, None)
+    }
+
+    /// Run `image` through a compiled stream ([`crate::compiler`]):
+    /// executes the *optimized* graph, loads commands per reload epoch
+    /// (so streams deeper than the CMDFIFO work), and keys each command
+    /// transfer by artifact id so an unchanged network replays from the
+    /// device-side shadow with zero command link traffic.
+    pub fn forward_compiled(
+        &mut self,
+        stream: &CompiledStream,
+        blobs: &Blobs,
+        image: &TensorF32,
+    ) -> Result<ForwardResult> {
+        self.forward_inner(&stream.net, blobs, image, Some(stream))
+    }
+
+    fn forward_inner(
+        &mut self,
+        net: &Network,
+        blobs: &Blobs,
+        image: &TensorF32,
+        stream: Option<&CompiledStream>,
+    ) -> Result<ForwardResult> {
         net.check().map_err(anyhow::Error::msg)?;
         let host_t0 = std::time::Instant::now();
         let mut phases = PhaseTimes::new();
 
-        // Read Blob + Load Commands (Fig 36).
-        let usb_before = self.dev.usb.total_seconds();
+        // Read Blob + Load Commands (Fig 36). The classic path loads the
+        // whole stream up front; the compiled path loads per epoch below.
         let layers = net.engine_layers();
         ensure!(!layers.is_empty(), "network has no engine layers");
-        self.dev.load_commands(&layers).context("load commands")?;
-        phases.add("load_commands", self.dev.usb.total_seconds() - usb_before);
+        if stream.is_none() {
+            let usb_before = self.dev.usb.total_seconds();
+            self.dev.load_commands(&layers).context("load commands")?;
+            phases.add("load_commands", self.dev.usb.total_seconds() - usb_before);
+        }
+        let mut engine_idx = 0usize;
+        let mut epoch = 0usize;
 
         let mut outputs: Vec<TensorF16> = Vec::with_capacity(net.nodes.len());
         for (i, node) in net.nodes.iter().enumerate() {
@@ -94,6 +124,17 @@ impl<'d> HostDriver<'d> {
                     image.to_f16()
                 }
                 Node::Engine { spec, input } => {
+                    if let Some(cs) = stream {
+                        if epoch < cs.epochs.len() && engine_idx == cs.epochs[epoch].start {
+                            let usb_before = self.dev.usb.total_seconds();
+                            self.dev
+                                .load_commands_cached(&cs.epoch_key(epoch), &cs.epoch_layers(epoch))
+                                .with_context(|| format!("load epoch {epoch}"))?;
+                            phases.add("load_commands", self.dev.usb.total_seconds() - usb_before);
+                            epoch += 1;
+                        }
+                    }
+                    engine_idx += 1;
                     let reg = self
                         .dev
                         .load_layer()
@@ -111,6 +152,10 @@ impl<'d> HostDriver<'d> {
                     Tensor::concat_channels(&parts)
                 }
                 Node::Softmax { input, .. } => outputs[*input].clone(),
+                // A ReLU the compiler could not fuse (or an uncompiled
+                // graph): host-side sign-bit test, bit-identical to the
+                // engine's fused activation.
+                Node::Relu { input, .. } => crate::engine::functional::relu(&outputs[*input]),
             };
             debug_assert_eq!(i, outputs.len());
             outputs.push(out);
@@ -352,6 +397,7 @@ pub fn forward_functional(net: &Network, blobs: &Blobs, image: &TensorF32) -> Re
                 Tensor::concat_channels(&parts)
             }
             Node::Softmax { input, .. } => outputs[*input].clone(),
+            Node::Relu { input, .. } => crate::engine::functional::relu(&outputs[*input]),
         };
         outputs.push(out);
     }

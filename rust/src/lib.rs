@@ -19,6 +19,7 @@
 pub mod accel;
 pub mod algos;
 pub mod benchkit;
+pub mod compiler;
 pub mod coordinator;
 pub mod engine;
 pub mod fp16;

@@ -151,6 +151,26 @@ fn main() -> Result<()> {
                 println!("  class {c:>4}  p = {p:.6}");
             }
         }
+        "compile" => {
+            let net = load_net(&args.flags)?;
+            let seed: u64 =
+                args.flags.get("weights-seed").map(|v| v.parse()).transpose()?.unwrap_or(1);
+            let blobs = synthesize_weights(&net, seed);
+            let stream =
+                fusionaccel::compiler::compile(&net, fusionaccel::compiler::fnv1a(&blobs.to_bytes()))?;
+            println!("network {} — compiled command-stream artifact", net.name);
+            println!("artifact id    {}", stream.id);
+            println!("source fp      {:016x}", stream.source_fingerprint);
+            println!("passes         {}", stream.report.summary());
+            println!(
+                "commands       {} in {} epoch(s) (CMDFIFO holds 341)",
+                stream.n_commands(),
+                stream.epochs.len()
+            );
+            for (e, plan) in stream.epochs.iter().enumerate() {
+                println!("  epoch {e}: layers {}..{}", plan.start, plan.start + plan.len);
+            }
+        }
         "selftest" => {
             let mut net = Network::new("selftest");
             let inp = net.input(14, 3);
@@ -171,6 +191,7 @@ fn main() -> Result<()> {
                  commands:\n\
                  \x20 infer     --net squeezenet|alexnet|googlenet|<prototxt> [--weights f.bin] [--image f.bin]\n\
                  \x20 commands  --net ...          print the Table 2 command stream\n\
+                 \x20 compile   --net ... [--weights-seed 1]   lower to a CSB artifact (passes, epochs, id)\n\
                  \x20 resources --parallelism 8 --precision 16\n\
                  \x20 timing    --net ... --parallelism 8 --link usb3|pcie\n\
                  \x20 selftest\n\n\

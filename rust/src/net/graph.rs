@@ -18,6 +18,25 @@ pub enum Node {
     Concat { name: String, inputs: Vec<usize> },
     /// Host-side softmax over a 1×1×C tensor.
     Softmax { name: String, input: usize },
+    /// A standalone ReLU. The engine has no ReLU op — it only *fuses*
+    /// ReLU into convolutions (§3.2) — so this node either runs on the
+    /// host or, preferably, is fused/folded away by the command-stream
+    /// compiler ([`crate::compiler`]). Front-ends emit it when an
+    /// activation cannot be attached to its producer at build time.
+    Relu { name: String, input: usize },
+}
+
+impl Node {
+    /// Indices of the nodes this node reads from.
+    pub fn inputs(&self) -> Vec<usize> {
+        match self {
+            Node::Input { .. } => Vec::new(),
+            Node::Engine { input, .. } => vec![*input],
+            Node::Concat { inputs, .. } => inputs.clone(),
+            Node::Softmax { input, .. } => vec![*input],
+            Node::Relu { input, .. } => vec![*input],
+        }
+    }
 }
 
 /// An inference network: DAG of nodes, topologically ordered by
@@ -49,9 +68,13 @@ impl Network {
         self.push(Node::Softmax { name: name.to_string(), input })
     }
 
+    pub fn relu(&mut self, name: &str, input: usize) -> usize {
+        self.push(Node::Relu { name: name.to_string(), input })
+    }
+
     fn push(&mut self, node: Node) -> usize {
-        if let Node::Engine { input, .. } = &node {
-            assert!(*input < self.nodes.len(), "edge must point backwards");
+        for input in node.inputs() {
+            assert!(input < self.nodes.len(), "edge must point backwards");
         }
         self.nodes.push(node);
         self.nodes.len() - 1
@@ -68,6 +91,7 @@ impl Network {
                 (side, ch)
             }
             Node::Softmax { input, .. } => self.out_shape(*input),
+            Node::Relu { input, .. } => self.out_shape(*input),
         }
     }
 
@@ -90,6 +114,7 @@ impl Network {
             Node::Engine { spec, .. } => &spec.name,
             Node::Concat { name, .. } => name,
             Node::Softmax { name, .. } => name,
+            Node::Relu { name, .. } => name,
         }
     }
 
@@ -144,6 +169,7 @@ impl Network {
                     }
                 }
                 Node::Softmax { .. } => {}
+                Node::Relu { .. } => {}
             }
         }
         Ok(())
@@ -182,6 +208,22 @@ mod tests {
         let inp = n.input(8, 3);
         n.engine(LayerSpec::conv("c1", 3, 1, 1, 9, 3, 4, 0), inp); // wrong i_side
         assert!(n.check().is_err());
+    }
+
+    #[test]
+    fn relu_nodes_pass_shapes_through() {
+        let mut n = Network::new("r");
+        let inp = n.input(8, 3);
+        let mut spec = LayerSpec::conv("c1", 3, 1, 1, 8, 3, 4, 0);
+        spec.skip_relu = true;
+        let c1 = n.engine(spec, inp);
+        let r = n.relu("c1_relu", c1);
+        n.check().unwrap();
+        assert_eq!(n.out_shape(r), (8, 4));
+        assert_eq!(n.node_name(r), "c1_relu");
+        // Relu is a host node: the engine command stream does not grow.
+        assert_eq!(n.engine_layers().len(), 1);
+        assert_eq!(n.nodes[r].inputs(), vec![c1]);
     }
 
     #[test]

@@ -292,12 +292,24 @@ pub fn build_network(root: &PBlock) -> Result<Network> {
                     if let super::graph::Node::Engine { spec, .. } = &mut net.nodes[idx] {
                         spec.skip_relu = false;
                     }
+                    if top != *b {
+                        let e = blobs[b];
+                        blobs.insert(top, e);
+                    }
                 } else {
-                    bail!("{lname}: ReLU on non-conv blob {b:?} unsupported");
-                }
-                if top != *b {
-                    let e = blobs[b];
-                    blobs.insert(top, e);
+                    // ReLU over a pool/concat output: emit a host-side
+                    // Relu node; the command-stream compiler folds it
+                    // into max-pooling where the datapath absorbs it.
+                    let (inode, side, ch) = lookup(&blobs, b)?;
+                    let idx = net.relu(&lname, inode);
+                    if top == *b {
+                        // In-place: downstream readers of the blob see
+                        // the activation. A non-in-place ReLU leaves the
+                        // bottom blob raw (Caffe semantics) — other
+                        // consumers keep the pre-activation values.
+                        blobs.insert(b.clone(), (idx, side, ch));
+                    }
+                    blobs.insert(top, (idx, side, ch));
                 }
             }
             "Pooling" => {
@@ -414,6 +426,56 @@ layer { name: "prob" type: "Softmax" bottom: "pool" top: "prob" }
         assert_eq!(e1.slot, 1); // Table 2 convention for expand1x1
         assert_eq!(e3.slot, 5); // expand3x3
         assert_eq!(net.out_shape(net.find("pool").unwrap()), (1, 8));
+    }
+
+    #[test]
+    fn relu_on_pool_output_becomes_host_node() {
+        let src = r#"
+layer { name: "data" type: "Input" top: "data"
+  input_param { shape { dim: 1 dim: 8 dim: 8 dim: 8 } } }
+layer { name: "pool" type: "Pooling" bottom: "data" top: "pool"
+  pooling_param { pool: MAX kernel_size: 2 stride: 2 } }
+layer { name: "relu_p" type: "ReLU" bottom: "pool" top: "pool" }
+layer { name: "prob" type: "Softmax" bottom: "pool" top: "prob" }
+"#;
+        let net = build_network(&parse(src).unwrap()).unwrap();
+        net.check().unwrap();
+        let r = net.find("relu_p").expect("host relu node emitted");
+        assert_eq!(net.out_shape(r), (4, 8));
+        // Downstream consumers read the relu'd blob.
+        match &net.nodes[net.find("prob").unwrap()] {
+            super::super::graph::Node::Softmax { input, .. } => assert_eq!(*input, r),
+            other => panic!("unexpected node {other:?}"),
+        }
+    }
+
+    #[test]
+    fn non_inplace_relu_keeps_bottom_blob_raw() {
+        // `relu_p` writes a NEW top blob; a later consumer of the raw
+        // "pool" blob must keep reading pre-activation values.
+        let src = r#"
+layer { name: "data" type: "Input" top: "data"
+  input_param { shape { dim: 1 dim: 8 dim: 8 dim: 8 } } }
+layer { name: "pool" type: "Pooling" bottom: "data" top: "pool"
+  pooling_param { pool: MAX kernel_size: 2 stride: 2 } }
+layer { name: "relu_p" type: "ReLU" bottom: "pool" top: "pool_r" }
+layer { name: "c_act" type: "Convolution" bottom: "pool_r" top: "c_act"
+  convolution_param { num_output: 4 kernel_size: 1 } }
+layer { name: "c_raw" type: "Convolution" bottom: "pool" top: "c_raw"
+  convolution_param { num_output: 4 kernel_size: 1 } }
+layer { name: "cat" type: "Concat" bottom: "c_act" bottom: "c_raw" top: "cat" }
+layer { name: "prob" type: "Softmax" bottom: "cat" top: "prob" }
+"#;
+        let net = build_network(&parse(src).unwrap()).unwrap();
+        net.check().unwrap();
+        let pool = net.find("pool").unwrap();
+        let relu = net.find("relu_p").unwrap();
+        let input_of = |name: &str| match &net.nodes[net.find(name).unwrap()] {
+            super::super::graph::Node::Engine { input, .. } => *input,
+            other => panic!("unexpected node {other:?}"),
+        };
+        assert_eq!(input_of("c_act"), relu, "top blob reads the activation");
+        assert_eq!(input_of("c_raw"), pool, "bottom blob stays pre-activation");
     }
 
     #[test]

@@ -1,0 +1,310 @@
+//! Integration tests for the command-stream compiler: pass-pipeline
+//! bit-identity on random graphs, CMDFIFO reload epochs for deep
+//! streams, device-side command-shadow reuse, and front-end
+//! convergence (prototxt vs builder → same artifact hash).
+
+use fusionaccel::accel::stream::StreamAccelerator;
+use fusionaccel::compiler::{compile, fnv1a, ArtifactRegistry, CompiledStream};
+use fusionaccel::host::driver::{forward_functional, HostDriver};
+use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::graph::{Network, Node};
+use fusionaccel::net::layer::LayerSpec;
+use fusionaccel::net::prototxt;
+use fusionaccel::net::squeezenet::micro_squeezenet;
+use fusionaccel::net::tensor::{Tensor, TensorF32};
+use fusionaccel::net::weights::{synthesize_weights, Blobs};
+use fusionaccel::prop::{forall, Rng};
+
+/// Random valid network that *needs* compiling: standalone ReLU nodes
+/// (some fusable, some pool-adjacent), dead branches, shared
+/// pre-activations.
+fn random_raw_net(rng: &mut Rng) -> Network {
+    let mut net = Network::new("raw");
+    let mut side = (rng.below(5) + 8) as u32;
+    let mut ch = (rng.below(5) + 1) as u32;
+    let inp = net.input(side, ch);
+    // Guaranteed live conv so the optimized stream is never empty.
+    let stem = LayerSpec::conv("stem", 3, 1, 1, side, ch, 4, 0);
+    ch = 4;
+    let mut cur = net.engine(stem, inp);
+    let n_stages = rng.below(3) + 2;
+    for s in 0..n_stages {
+        match rng.below(5) {
+            0 | 1 => {
+                let k = *rng.choose(&[1u32, 3]);
+                let pad = if k == 3 && rng.chance(0.5) { 1 } else { 0 };
+                if side + 2 * pad < k {
+                    continue;
+                }
+                let oc = (rng.below(8) + 1) as u32;
+                let mut spec = LayerSpec::conv(&format!("conv{s}"), k, 1, pad, side, ch, oc, 0);
+                let standalone = rng.chance(0.6);
+                if standalone {
+                    spec.skip_relu = true;
+                }
+                side = spec.o_side;
+                ch = oc;
+                cur = net.engine(spec, cur);
+                if standalone {
+                    cur = net.relu(&format!("relu{s}"), cur);
+                }
+            }
+            2 => {
+                if side >= 3 {
+                    if rng.chance(0.4) {
+                        cur = net.relu(&format!("prerelu{s}"), cur);
+                    }
+                    let spec = LayerSpec::maxpool(&format!("max{s}"), 2, 2, side, ch);
+                    side = spec.o_side;
+                    cur = net.engine(spec, cur);
+                    if rng.chance(0.4) {
+                        cur = net.relu(&format!("postrelu{s}"), cur);
+                    }
+                }
+            }
+            3 => {
+                // Dead branch: computed by the naive flow, eliminated
+                // by the compiler.
+                let oc = (rng.below(4) + 1) as u32;
+                net.engine(LayerSpec::conv(&format!("dead{s}"), 1, 1, 0, side, ch, oc, 0), cur);
+            }
+            _ => {
+                // Parallel pair sharing one producer; the left branch
+                // carries a standalone relu the compiler fuses.
+                let oc = (rng.below(6) + 1) as u32;
+                let mut e1s = LayerSpec::conv(&format!("e1_{s}"), 1, 1, 0, side, ch, oc, 1);
+                e1s.skip_relu = true;
+                let e1 = net.engine(e1s, cur);
+                let r1 = net.relu(&format!("e1r_{s}"), e1);
+                let e3 = net.engine(LayerSpec::conv(&format!("e3_{s}"), 3, 1, 1, side, ch, oc, 5), cur);
+                cur = net.concat(&format!("cat{s}"), vec![r1, e3]);
+                ch = 2 * oc;
+            }
+        }
+    }
+    net.softmax("prob", cur);
+    net
+}
+
+fn random_image(rng: &mut Rng, net: &Network) -> TensorF32 {
+    let (side, ch) = net.out_shape(0);
+    let (s, c) = (side as usize, ch as usize);
+    Tensor::from_vec(s, s, c, (0..s * s * c).map(|_| rng.normal(1.0)).collect())
+}
+
+fn last_bits(outputs: &[fusionaccel::net::tensor::TensorF16]) -> Vec<u16> {
+    outputs.last().unwrap().data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// INVARIANT: compiling (fusion, folding, dead-node elimination) and
+/// executing on the sliced device is bit-identical to the uncompiled
+/// functional engine, for any valid graph.
+#[test]
+fn prop_compiled_device_flow_bit_identical_to_raw_functional() {
+    forall(
+        0xC0117,
+        20,
+        |rng| {
+            let net = random_raw_net(rng);
+            (net, rng.next_u64(), rng.next_u64())
+        },
+        |(net, seed, img_seed)| {
+            net.check()?;
+            let blobs = synthesize_weights(net, *seed);
+            let mut rng = Rng::new(*img_seed);
+            let image = random_image(&mut rng, net);
+            let reference = forward_functional(net, &blobs, &image).map_err(|e| e.to_string())?;
+            let stream = compile(net, *seed).map_err(|e| format!("{e:#}"))?;
+            stream.net.check()?;
+            if stream.net.nodes.len() > net.nodes.len() {
+                return Err("compiler grew the graph".into());
+            }
+            let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+            let res = HostDriver::new(&mut dev)
+                .forward_compiled(&stream, &blobs, &image)
+                .map_err(|e| format!("{e:#}"))?;
+            if last_bits(&res.outputs) != last_bits(&reference) {
+                return Err(format!(
+                    "compiled output differs from raw functional (passes: {})",
+                    stream.report.summary()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A stream deeper than the 341-command CMDFIFO fails outright on the
+/// classic driver but compiles into reload epochs and runs bit-exactly.
+#[test]
+fn deep_stream_splits_into_reload_epochs() {
+    let mut net = Network::new("deep");
+    let inp = net.input(4, 8);
+    let mut cur = inp;
+    for i in 0..400 {
+        cur = net.engine(LayerSpec::conv(&format!("c{i}"), 1, 1, 0, 4, 8, 8, 0), cur);
+    }
+    net.softmax("prob", cur);
+    net.check().unwrap();
+    let blobs = synthesize_weights(&net, 0xDEE9);
+    let mut rng = Rng::new(0x1D);
+    let image = random_image(&mut rng, &net);
+
+    // The naive flow hits the FIFO wall at load time.
+    let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+    let err = HostDriver::new(&mut dev).forward(&net, &blobs, &image).unwrap_err();
+    assert!(format!("{err:#}").contains("CMDFIFO overflow"), "got: {err:#}");
+
+    // Compiled: 341 + 59 commands, reloaded mid-forward.
+    let stream = compile(&net, 1).unwrap();
+    assert_eq!(stream.epochs.len(), 2);
+    assert_eq!(stream.n_commands(), 400);
+    assert_eq!(stream.epochs[0].len, 341);
+    assert_eq!(stream.epochs[1].len, 59);
+    assert_ne!(stream.epoch_key(0), stream.epoch_key(1));
+
+    let reference = forward_functional(&net, &blobs, &image).unwrap();
+    let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+    let res = HostDriver::new(&mut dev).forward_compiled(&stream, &blobs, &image).unwrap();
+    assert_eq!(last_bits(&res.outputs), last_bits(&reference));
+    assert_eq!(dev.stats.command_loads, 2, "one link transfer per epoch");
+}
+
+/// Compiled forwards equal classic forwards on a clean net, and the
+/// second forward on the same device replays commands from the shadow.
+#[test]
+fn compiled_forward_matches_classic_and_reuses_commands() {
+    let net = micro_squeezenet();
+    let blobs = synthesize_weights(&net, 77);
+    let mut rng = Rng::new(0xA11CE);
+    let image = random_image(&mut rng, &net);
+
+    let mut dev_classic = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+    let classic = HostDriver::new(&mut dev_classic).forward(&net, &blobs, &image).unwrap();
+
+    let stream = compile(&net, fnv1a(&blobs.to_bytes())).unwrap();
+    assert_eq!(stream.report.total_changes(), 0, "clean net: passes are no-ops");
+    let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+    let first = HostDriver::new(&mut dev).forward_compiled(&stream, &blobs, &image).unwrap();
+    // Same graph → same per-node outputs, bit for bit.
+    for (i, (a, b)) in first.outputs.iter().zip(&classic.outputs).enumerate() {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "node {i}");
+        }
+    }
+    assert_eq!(dev.stats.command_loads, 1);
+    assert_eq!(dev.stats.command_reuses, 0);
+
+    let second = HostDriver::new(&mut dev).forward_compiled(&stream, &blobs, &image).unwrap();
+    assert_eq!(dev.stats.command_loads, 1, "unchanged network: no reload");
+    assert_eq!(dev.stats.command_reuses, 1);
+    assert_eq!(first.probs, second.probs);
+}
+
+const TINY_PROTOTXT: &str = r#"
+name: "tiny"
+layer { name: "data" type: "Input" top: "data"
+  input_param { shape { dim: 1 dim: 3 dim: 8 dim: 8 } } }
+layer { name: "conv1" type: "Convolution" bottom: "data" top: "conv1"
+  convolution_param { num_output: 4 kernel_size: 3 stride: 1 pad: 1 } }
+layer { name: "relu1" type: "ReLU" bottom: "conv1" top: "conv1" }
+layer { name: "e1" type: "Convolution" bottom: "conv1" top: "e1"
+  convolution_param { num_output: 4 kernel_size: 1 } }
+layer { name: "relu_e1" type: "ReLU" bottom: "e1" top: "e1" }
+layer { name: "e3" type: "Convolution" bottom: "conv1" top: "e3"
+  convolution_param { num_output: 4 kernel_size: 3 pad: 1 } }
+layer { name: "relu_e3" type: "ReLU" bottom: "e3" top: "e3" }
+layer { name: "cat" type: "Concat" bottom: "e1" bottom: "e3" top: "cat" }
+layer { name: "pool" type: "Pooling" bottom: "cat" top: "pool"
+  pooling_param { pool: AVE kernel_size: 8 stride: 1 } }
+layer { name: "prob" type: "Softmax" bottom: "pool" top: "prob" }
+"#;
+
+/// Builder-side description of the same computation, written the way a
+/// hand-built graph would be: activations as explicit Relu nodes the
+/// compiler has to fuse. Structurally different source, same semantics.
+fn builder_tiny() -> Network {
+    let mut b = Network::new("tiny");
+    let inp = b.input(8, 3);
+    let mut c1 = LayerSpec::conv("conv1", 3, 1, 1, 8, 3, 4, 0);
+    c1.skip_relu = true;
+    let c1n = b.engine(c1, inp);
+    let c1r = b.relu("relu1", c1n);
+    let mut e1 = LayerSpec::conv("e1", 1, 1, 0, 8, 4, 4, 1);
+    e1.skip_relu = true;
+    let e1n = b.engine(e1, c1r);
+    let e1r = b.relu("relu_e1", e1n);
+    let mut e3 = LayerSpec::conv("e3", 3, 1, 1, 8, 4, 4, 5);
+    e3.skip_relu = true;
+    let e3n = b.engine(e3, c1r);
+    let e3r = b.relu("relu_e3", e3n);
+    let cat = b.concat("cat", vec![e1r, e3r]);
+    let p = b.engine(LayerSpec::avgpool("pool", 8, 1, 8, 8), cat);
+    b.softmax("prob", p);
+    b
+}
+
+/// Satellite acceptance: a prototxt-built net compiles to the same
+/// artifact hash as the equivalent builder-built net — the compiler is
+/// the canonicalizer, not the front-end.
+#[test]
+fn prototxt_and_builder_compile_to_same_artifact() {
+    let from_ptxt = prototxt::build_network(&prototxt::parse(TINY_PROTOTXT).unwrap()).unwrap();
+    let from_builder = builder_tiny();
+    // Same weights for both (engine layer names match by design).
+    let blobs = synthesize_weights(&from_ptxt, 42);
+    let weights_id = fnv1a(&blobs.to_bytes());
+
+    let registry = ArtifactRegistry::new();
+    let a = registry.get_or_compile(&from_ptxt, weights_id).unwrap();
+    let b = registry.get_or_compile(&from_builder, weights_id).unwrap();
+    // The sources really are different graphs (no memo short-circuit)…
+    assert_ne!(a.source_fingerprint, b.source_fingerprint);
+    assert_eq!(registry.compiles(), 2);
+    // …but canonicalize to the same artifact.
+    assert_eq!(a.id, b.id);
+    assert_eq!(a.n_commands(), b.n_commands());
+    assert_eq!(a.n_commands(), 4); // conv1, e1, e3, pool
+
+    // And different weights shift the artifact id.
+    let other = registry.get_or_compile(&from_ptxt, weights_id ^ 1).unwrap();
+    assert_ne!(other.id, a.id);
+
+    // Belt and braces: both artifacts forward bit-identically.
+    let mut rng = Rng::new(9);
+    let image = random_image(&mut rng, &from_ptxt);
+    let run = |stream: &CompiledStream, blobs: &Blobs| {
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let res = HostDriver::new(&mut dev).forward_compiled(stream, blobs, &image).unwrap();
+        last_bits(&res.outputs)
+    };
+    assert_eq!(run(&a, &blobs), run(&b, &blobs));
+}
+
+/// The compiler's optimized graph never reorders surviving engine
+/// layers — the CSB consumes commands strictly in graph order.
+#[test]
+fn passes_preserve_engine_order() {
+    let mut rng = Rng::new(0x0D3);
+    for _ in 0..10 {
+        let net = random_raw_net(&mut rng);
+        let stream = compile(&net, 0).unwrap();
+        let raw_order: Vec<String> = net.engine_layers().iter().map(|s| s.name.clone()).collect();
+        let opt_order: Vec<String> =
+            stream.net.engine_layers().iter().map(|s| s.name.clone()).collect();
+        // Optimized order is a subsequence of the raw order.
+        let mut it = raw_order.iter();
+        for name in &opt_order {
+            assert!(
+                it.any(|r| r == name),
+                "{name} out of order: raw {raw_order:?} vs opt {opt_order:?}"
+            );
+        }
+        // No idle ops and no dead `dead*` layers survive.
+        assert!(stream.net.nodes.iter().all(|n| !matches!(
+            n,
+            Node::Engine { spec, .. } if spec.op == fusionaccel::net::layer::OpType::Idle
+        )));
+        assert!(opt_order.iter().all(|n| !n.starts_with("dead")));
+    }
+}

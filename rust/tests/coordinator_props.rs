@@ -143,14 +143,16 @@ fn prop_coordinator_exactly_once_any_worker_count() {
             let make_reqs = || {
                 let mut rng = Rng::new(img_seed);
                 (0..n_req as u64)
-                    .map(|id| InferenceRequest {
-                        id,
-                        image: Tensor::from_vec(
-                            8,
-                            8,
-                            3,
-                            (0..8 * 8 * 3).map(|_| rng.normal(1.0)).collect(),
-                        ),
+                    .map(|id| {
+                        InferenceRequest::new(
+                            id,
+                            Tensor::from_vec(
+                                8,
+                                8,
+                                3,
+                                (0..8 * 8 * 3).map(|_| rng.normal(1.0)).collect(),
+                            ),
+                        )
                     })
                     .collect::<Vec<_>>()
             };

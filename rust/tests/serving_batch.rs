@@ -33,14 +33,11 @@ fn fire_net() -> Network {
 fn requests(n: usize, seed: u64) -> Vec<InferenceRequest> {
     let mut rng = Rng::new(seed);
     (0..n as u64)
-        .map(|id| InferenceRequest {
-            id,
-            image: Tensor::from_vec(
-                12,
-                12,
-                3,
-                (0..12 * 12 * 3).map(|_| rng.normal(1.0)).collect(),
-            ),
+        .map(|id| {
+            InferenceRequest::new(
+                id,
+                Tensor::from_vec(12, 12, 3, (0..12 * 12 * 3).map(|_| rng.normal(1.0)).collect()),
+            )
         })
         .collect()
 }

@@ -1,0 +1,206 @@
+//! Multi-network serving acceptance: one device pool serves several
+//! compiled networks concurrently, batches stay per-network, results
+//! are bit-identical to per-network sequential serving, and command
+//! streams reload only on network switches (reload count < requests).
+
+use fusionaccel::compiler::ModelRepo;
+use fusionaccel::coordinator::{serve, serve_multi, InferenceRequest, ServeConfig};
+use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::graph::Network;
+use fusionaccel::net::layer::LayerSpec;
+use fusionaccel::net::squeezenet::micro_squeezenet;
+use fusionaccel::net::tensor::Tensor;
+use fusionaccel::net::weights::{synthesize_weights, Blobs};
+use fusionaccel::prop::Rng;
+
+/// AlexNet-flavored mini: big-kernel stem conv, pool, FC-as-conv tail
+/// with `skip_relu` on the classifier.
+fn mini_alex() -> Network {
+    let mut n = Network::new("mini_alex");
+    let inp = n.input(20, 3);
+    let c1 = n.engine(LayerSpec::conv("conv1", 5, 2, 0, 20, 3, 8, 0), inp); // 8
+    let p1 = n.engine(LayerSpec::maxpool("pool1", 2, 2, 8, 8), c1); // 4
+    let mut fc = LayerSpec::conv("fc", 4, 1, 0, 4, 8, 16, 0);
+    fc.skip_relu = true;
+    let fcn = n.engine(fc, p1);
+    n.softmax("prob", fcn);
+    n
+}
+
+/// GoogLeNet-flavored mini: an inception-ish module with a padded
+/// "same" max-pool projection branch, then pool + global average.
+fn mini_goog() -> Network {
+    let mut n = Network::new("mini_goog");
+    let inp = n.input(16, 3);
+    let stem = n.engine(LayerSpec::conv("stem", 3, 1, 1, 16, 3, 8, 0), inp);
+    let b1 = n.engine(LayerSpec::conv("i/1x1", 1, 1, 0, 16, 8, 4, 0), stem);
+    let b3 = n.engine(LayerSpec::conv("i/3x3", 3, 1, 1, 16, 8, 4, 0), stem);
+    let mp = n.engine(LayerSpec::maxpool_padded("i/pool", 3, 1, 1, 16, 8), stem);
+    let bp = n.engine(LayerSpec::conv("i/pool_proj", 1, 1, 0, 16, 8, 4, 0), mp);
+    let cat = n.concat("i/output", vec![b1, b3, bp]);
+    let p = n.engine(LayerSpec::maxpool("pool2", 2, 2, 16, 12), cat); // 8
+    let gap = n.engine(LayerSpec::avgpool("gap", 8, 1, 8, 12), p);
+    n.softmax("prob", gap);
+    n
+}
+
+/// Deterministic per-network request load with globally unique ids.
+fn grouped_requests(groups: &[(&Network, usize, u64)]) -> Vec<InferenceRequest> {
+    let mut reqs = Vec::new();
+    let mut id = 0u64;
+    for (net, count, seed) in groups {
+        let (side, ch) = net.out_shape(0);
+        let (s, c) = (side as usize, ch as usize);
+        let mut rng = Rng::new(*seed);
+        for _ in 0..*count {
+            let image =
+                Tensor::from_vec(s, s, c, (0..s * s * c).map(|_| rng.normal(1.0)).collect());
+            reqs.push(InferenceRequest::new(id, image).for_network(&net.name));
+            id += 1;
+        }
+    }
+    reqs
+}
+
+fn build_repo(models: &[(&Network, &Blobs)]) -> ModelRepo {
+    let mut repo = ModelRepo::new();
+    for (net, blobs) in models {
+        repo.register((*net).clone(), (*blobs).clone()).unwrap();
+    }
+    repo
+}
+
+/// The tentpole acceptance: SqueezeNet-, AlexNet-, and GoogLeNet-
+/// flavored networks served through ONE batched pool, bit-identical to
+/// per-network sequential serving, with command reloads < requests.
+#[test]
+fn mixed_pool_matches_per_network_sequential_serving() {
+    let nets = [micro_squeezenet(), mini_alex(), mini_goog()];
+    let blobs: Vec<Blobs> =
+        nets.iter().enumerate().map(|(i, n)| synthesize_weights(n, 100 + i as u64)).collect();
+    let per_net = 10usize;
+    let groups: Vec<(&Network, usize, u64)> =
+        nets.iter().enumerate().map(|(i, n)| (n, per_net, 0x5EED + i as u64)).collect();
+    let requests = grouped_requests(&groups);
+    let total = per_net * nets.len();
+
+    // One pool, one worker (deterministic batch order → provable
+    // command reuse), per-network micro-batches of up to 5.
+    let repo = build_repo(&nets.iter().zip(&blobs).map(|(n, b)| (n, b)).collect::<Vec<_>>());
+    let cfg = ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 5);
+    let (mixed, stats) = serve_multi(&repo, &cfg, requests.clone()).unwrap();
+    assert_eq!(mixed.len(), total);
+    assert_eq!(stats.failed, 0);
+
+    // Reference: each network's requests served alone, sequentially.
+    let mut reference = Vec::new();
+    for (i, net) in nets.iter().enumerate() {
+        let own: Vec<InferenceRequest> = requests
+            .iter()
+            .filter(|r| r.network.as_deref() == Some(net.name.as_str()))
+            .map(|r| InferenceRequest::new(r.id, r.image.clone()))
+            .collect();
+        assert_eq!(own.len(), per_net);
+        let (resps, _) = serve(net, &blobs[i], UsbLink::usb3_frontpanel(), 1, own).unwrap();
+        reference.extend(resps);
+    }
+    reference.sort_by_key(|r| r.id);
+
+    for (a, b) in mixed.iter().zip(&reference) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.probs, b.probs, "req {} ({})", a.id, a.network);
+        assert_eq!(a.argmax, b.argmax);
+    }
+    // Every response is tagged with the network that served it.
+    for r in &mixed {
+        let expect = &nets[(r.id as usize) / per_net].name;
+        assert_eq!(&r.network, expect, "req {}", r.id);
+    }
+
+    // Acceptance: command-reload count < request count — grouped
+    // arrival means consecutive same-network batches replay from the
+    // device shadow instead of re-crossing the link.
+    assert!(
+        stats.command_loads < stats.served as u64,
+        "loads {} !< served {}",
+        stats.command_loads,
+        stats.served
+    );
+    assert!(stats.command_reuses > 0, "expected shadow replays, got none");
+    assert_eq!(
+        stats.command_loads + stats.command_reuses,
+        stats.batch_hist.batches() as u64,
+        "each batch loads or replays exactly once"
+    );
+    // Per-network batching: 10 requests per net at max_batch 5 → every
+    // batch is full; none mixes networks (sizes would drift otherwise).
+    assert_eq!(stats.batch_hist.max_size(), 5);
+    assert_eq!(stats.batch_hist.batches(), 6);
+    // With 3 models and a 4-deep per-worker LRU, repeats are hits.
+    let w = &stats.workers[0];
+    assert_eq!(w.model_cache_misses, 3);
+    assert_eq!(w.model_cache_hits, 3);
+    // Compile memo: one compile per model, no rebuilds during serving.
+    assert_eq!(repo.registry().compiles(), 3);
+}
+
+/// Interleaved arrival across several workers: still bit-identical,
+/// still fewer reloads than requests.
+#[test]
+fn interleaved_mixed_load_is_bit_identical_and_caches() {
+    let nets = [micro_squeezenet(), mini_alex()];
+    let blobs: Vec<Blobs> =
+        nets.iter().enumerate().map(|(i, n)| synthesize_weights(n, 7 + i as u64)).collect();
+    let per_net = 8usize;
+    let groups: Vec<(&Network, usize, u64)> =
+        nets.iter().enumerate().map(|(i, n)| (n, per_net, 0xA0 + i as u64)).collect();
+    let grouped = grouped_requests(&groups);
+    // Interleave A, B, A, B, … to force network alternation pressure.
+    let mut interleaved = Vec::new();
+    for i in 0..per_net {
+        interleaved.push(grouped[i].clone());
+        interleaved.push(grouped[per_net + i].clone());
+    }
+
+    let repo = build_repo(&nets.iter().zip(&blobs).map(|(n, b)| (n, b)).collect::<Vec<_>>());
+    let cfg = ServeConfig::new(UsbLink::usb3_frontpanel(), 2, 4);
+    let (mixed, stats) = serve_multi(&repo, &cfg, interleaved).unwrap();
+    assert_eq!(mixed.len(), 2 * per_net);
+    assert_eq!(stats.failed, 0);
+    assert!(stats.command_loads < stats.served as u64);
+
+    // Reference per network, sequential.
+    for (i, net) in nets.iter().enumerate() {
+        let slice = &grouped[i * per_net..(i + 1) * per_net];
+        let own: Vec<InferenceRequest> =
+            slice.iter().map(|r| InferenceRequest::new(r.id, r.image.clone())).collect();
+        let (resps, _) = serve(net, &blobs[i], UsbLink::usb3_frontpanel(), 1, own).unwrap();
+        for r in resps {
+            let got = mixed.iter().find(|m| m.id == r.id).unwrap();
+            assert_eq!(got.probs, r.probs, "req {}", r.id);
+            assert_eq!(got.network, net.name);
+        }
+    }
+}
+
+/// serve_multi input validation.
+#[test]
+fn serve_multi_rejects_empty_repo_and_bad_config() {
+    let repo = ModelRepo::new();
+    let cfg = ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 2);
+    assert!(serve_multi(&repo, &cfg, Vec::new()).is_err(), "empty repo must be rejected");
+
+    let net = mini_alex();
+    let blobs = synthesize_weights(&net, 1);
+    let repo = build_repo(&[(&net, &blobs)]);
+    let mut bad = ServeConfig::new(UsbLink::usb3_frontpanel(), 0, 2);
+    assert!(serve_multi(&repo, &bad, Vec::new()).is_err(), "zero workers");
+    bad.n_workers = 1;
+    bad.policy.max_batch = 0;
+    assert!(serve_multi(&repo, &bad, Vec::new()).is_err(), "zero batch");
+
+    // Empty request list on a valid setup is a clean no-op.
+    let (resps, stats) = serve_multi(&repo, &cfg, Vec::new()).unwrap();
+    assert!(resps.is_empty());
+    assert_eq!(stats.served + stats.failed, 0);
+}
