@@ -60,20 +60,34 @@ fn main() {
                 format!("{}", w.worker),
                 format!("{}", w.batches),
                 format!("{:.1}", w.weight_reuse()),
+                format!("{}", w.weight_reuses),
                 format!("{:.0}%", 100.0 * w.link_seconds / modeled),
                 format!("{:.0}%", 100.0 * w.engine_seconds / modeled),
             ]
         })
         .collect();
-    table(&["worker", "batches", "wt reuse", "link share", "engine share"], &rows);
+    table(&["worker", "batches", "wt reuse", "resident hits", "link share", "engine share"], &rows);
     println!("\nbatch hist: {}", stats.batch_hist.summary());
     let (loads, reuses) = stats
         .workers
         .iter()
         .fold((0u64, 0u64), |(l, r), w| (l + w.command_loads, r + w.command_reuses));
     println!("command streams: {loads} loaded, {reuses} replayed from the device shadow");
+    println!(
+        "weights: {} loads, {} sweeps (reuse ×{:.1}), {} super-blocks reused across batches",
+        stats.weight_loads,
+        stats.weight_sweeps,
+        stats.weight_reuse(),
+        stats.weight_reuses
+    );
     json.push(("command_loads_b8_w2".to_string(), loads as f64));
     json.push(("command_reuses_b8_w2".to_string(), reuses as f64));
+    // The system-wide amortization metric the CI bench-diff gate tracks
+    // alongside throughput: conv passes per weight load, and how many
+    // super-blocks never re-crossed the link at all.
+    json.push(("weight_reuse_b8_w2".to_string(), stats.weight_reuse()));
+    json.push(("weight_loads_b8_w2".to_string(), stats.weight_loads as f64));
+    json.push(("weight_resident_reuses_b8_w2".to_string(), stats.weight_reuses as f64));
 
     fusionaccel::benchkit::persist_json("serve_throughput", &json);
     println!("serve_throughput OK");

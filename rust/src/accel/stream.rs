@@ -88,6 +88,11 @@ pub struct EngineStats {
     /// traffic: sequential serving reloads per image, batched serving
     /// sweeps many passes per load.
     pub weight_sweeps: u64,
+    /// Weight super-blocks found still resident under their content key
+    /// (see [`StreamAccelerator::load_weight_block_cached`]) — loads
+    /// that crossed **zero** link bytes because a previous batch of the
+    /// same artifact left the block in the cache.
+    pub weight_reuses: u64,
     /// Command streams loaded over the link (CMDFIFO fills that crossed
     /// USB). Multi-network serving wants this *below* the request count:
     /// the compiler's artifact ids let a worker reload commands only on
@@ -131,6 +136,26 @@ pub struct StreamAccelerator {
     /// CMDFIFO itself drains as the engine runs; the shadow lets the
     /// host replay an unchanged stream without re-crossing the link.
     cmd_shadow: Option<(String, Vec<u32>)>,
+    /// Weight-side mirror of the command shadow: which keyed weight
+    /// super-blocks are still resident, and the cache ranges they own.
+    /// Any load that overlaps a region evicts it; a keyed load whose
+    /// region is intact skips the link entirely (`weight_reuses`).
+    weight_shadow: Vec<WeightRegion>,
+}
+
+/// One shadowed weight super-block: its content key plus the weight-
+/// and bias-cache ranges it occupies.
+#[derive(Clone, Debug)]
+struct WeightRegion {
+    key: String,
+    wbase: usize,
+    wwords: usize,
+    bbase: usize,
+    bslots: usize,
+}
+
+fn ranges_overlap(a0: usize, alen: usize, b0: usize, blen: usize) -> bool {
+    a0 < b0 + blen && b0 < a0 + alen
 }
 
 impl StreamAccelerator {
@@ -147,6 +172,7 @@ impl StreamAccelerator {
             data_f64: vec![0.0; DATA_CACHE_WORDS * 8],
             weight_f64: vec![0.0; WEIGHT_CACHE_WORDS * 8],
             cmd_shadow: None,
+            weight_shadow: Vec::new(),
         }
     }
 
@@ -236,25 +262,94 @@ impl StreamAccelerator {
         self.pipe_in(Cache::Data, 0, values)
     }
 
-    /// Load a weight block ("load weight & bias"). The bias cache stores
-    /// one value per word (only the low 16 bits of each 128-bit word are
-    /// valid, §4.4) — so bias values are loaded one word each.
+    /// Load a weight block ("load weight & bias") at word 0. The bias
+    /// cache stores one value per word (only the low 16 bits of each
+    /// 128-bit word are valid, §4.4) — so bias values are loaded one
+    /// word each.
     pub fn load_weights(&mut self, values: &[F16]) -> Result<()> {
+        self.load_weights_at(0, values)
+    }
+
+    /// Load a weight block at an arbitrary word base. Any shadowed
+    /// super-block the write overlaps is evicted — a keyless load makes
+    /// no residency claim.
+    pub fn load_weights_at(&mut self, base: usize, values: &[F16]) -> Result<()> {
+        let words = values.len().div_ceil(8);
+        self.weight_shadow.retain(|r| !ranges_overlap(r.wbase, r.wwords, base, words));
         self.stats.weight_loads += 1;
-        self.pipe_in(Cache::Weight, 0, values)
+        self.pipe_in(Cache::Weight, base, values)
     }
 
     pub fn load_bias(&mut self, values: &[F16]) -> Result<()> {
-        ensure!(values.len() <= BIAS_CACHE_WORDS, "bias cache overflow");
+        self.load_bias_at(0, values)
+    }
+
+    /// Load biases starting at slot `base`, evicting overlapped shadow
+    /// regions (by their bias range).
+    pub fn load_bias_at(&mut self, base: usize, values: &[F16]) -> Result<()> {
+        ensure!(base + values.len() <= BIAS_CACHE_WORDS, "bias cache overflow");
+        self.weight_shadow.retain(|r| !ranges_overlap(r.bbase, r.bslots, base, values.len()));
         for (i, &b) in values.iter().enumerate() {
             let mut w = [F16::ZERO; 8];
             w[0] = b;
-            self.bias_cache.write(i, w);
+            self.bias_cache.write(base + i, w);
         }
         // Each bias still crosses USB as a 32-bit word, padded to a full
         // 128-bit cache word device-side.
         self.usb.transfer(Endpoint::PipeIn, 4 * values.len() as u64);
         Ok(())
+    }
+
+    /// Whether the keyed super-block is still resident at exactly these
+    /// cache ranges. Counts a `weight_reuses` on a hit — this is the
+    /// zero-cost pre-check that lets the host skip not just the link
+    /// transfer but the host-side weight gather too.
+    pub fn weight_block_resident(
+        &mut self,
+        key: &str,
+        wbase: usize,
+        wwords: usize,
+        bbase: usize,
+        bslots: usize,
+    ) -> bool {
+        let hit = self.weight_shadow.iter().any(|r| {
+            r.key == key && r.wbase == wbase && r.wwords == wwords && r.bbase == bbase && r.bslots == bslots
+        });
+        if hit {
+            self.stats.weight_reuses += 1;
+        }
+        hit
+    }
+
+    /// Load a weight super-block + its biases under a content key — the
+    /// weight-side mirror of [`Self::load_commands_cached`]. If the
+    /// keyed region is still resident at exactly these bases (nothing
+    /// overwrote it since a previous batch of the same artifact), both
+    /// transfers are skipped with **zero** link traffic and the call
+    /// counts as a `weight_reuses`; otherwise the block loads normally
+    /// and is shadowed. Returns whether the block was resident.
+    pub fn load_weight_block_cached(
+        &mut self,
+        key: &str,
+        wbase: usize,
+        weights: &[F16],
+        bbase: usize,
+        bias: &[F16],
+    ) -> Result<bool> {
+        let wwords = weights.len().div_ceil(8);
+        if self.weight_block_resident(key, wbase, wwords, bbase, bias.len()) {
+            return Ok(true);
+        }
+        self.load_weights_at(wbase, weights)?;
+        self.load_bias_at(bbase, bias)?;
+        self.weight_shadow.push(WeightRegion {
+            key: key.to_string(),
+            wbase,
+            wwords,
+            bbase,
+            bslots: bias.len(),
+        });
+        Ok(false)
     }
 
     /// "Restart Engine": compute one slice from the resident caches,
@@ -321,6 +416,12 @@ impl StreamAccelerator {
             "data slice {} + {} words exceeds data cache",
             task.data_base,
             data_words
+        );
+        ensure!(
+            task.weight_base + weight_words <= WEIGHT_CACHE_WORDS,
+            "weight block {} + {} words exceeds weight cache",
+            task.weight_base,
+            weight_words
         );
         let din = &self.data_f64[task.data_base * 8..(task.data_base + data_words) * 8];
         let wdat = &self.weight_f64[task.weight_base * 8..(task.weight_base + weight_words) * 8];
@@ -613,6 +714,39 @@ mod tests {
         dev.load_commands_cached("netB", &[&spec_b]).unwrap();
         assert_eq!(dev.stats.command_loads, 4);
         assert_eq!(dev.stats.command_reuses, 1);
+    }
+
+    #[test]
+    fn weight_shadow_skips_resident_block_and_evicts_on_overlap() {
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let wa: Vec<F16> = (0..64).map(F16::from_u32).collect();
+        let ba: Vec<F16> = (0..4).map(F16::from_u32).collect();
+        let wb: Vec<F16> = (100..164).map(F16::from_u32).collect();
+        let bb: Vec<F16> = (100..104).map(F16::from_u32).collect();
+
+        // Two keyed blocks at disjoint homes.
+        assert!(!dev.load_weight_block_cached("art/L0#b0", 0, &wa, 0, &ba).unwrap());
+        assert!(!dev.load_weight_block_cached("art/L1#b0", 8, &wb, 4, &bb).unwrap());
+        assert_eq!(dev.stats.weight_loads, 2);
+        let bytes = dev.usb.total_bytes();
+
+        // Both still resident: replays cross zero bytes.
+        assert!(dev.load_weight_block_cached("art/L0#b0", 0, &wa, 0, &ba).unwrap());
+        assert!(dev.load_weight_block_cached("art/L1#b0", 8, &wb, 4, &bb).unwrap());
+        assert_eq!(dev.usb.total_bytes(), bytes);
+        assert_eq!(dev.stats.weight_loads, 2);
+        assert_eq!(dev.stats.weight_reuses, 2);
+        // The cache words really are the keyed block's values.
+        assert_eq!(dev.weight_cache.read(8)[0].to_bits(), F16::from_u32(100).to_bits());
+
+        // A keyless load over words [0, 8) evicts only the first block.
+        dev.load_weights(&wa).unwrap();
+        assert!(!dev.load_weight_block_cached("art/L0#b0", 0, &wa, 0, &ba).unwrap());
+        assert!(dev.load_weight_block_cached("art/L1#b0", 8, &wb, 4, &bb).unwrap());
+
+        // A different key at the same home is a miss, never an alias.
+        assert!(!dev.load_weight_block_cached("other/L1#b0", 8, &wb, 4, &bb).unwrap());
+        assert!(!dev.load_weight_block_cached("art/L1#b0", 8, &wb, 4, &bb).unwrap());
     }
 
     #[test]

@@ -148,8 +148,308 @@ fn json_escape(s: &str) -> String {
         .collect()
 }
 
+// ---- bench-diff: parse + compare persisted bench JSON ------------------
+
+/// One parsed `BENCH_<name>.json` file: bench name + finite metrics in
+/// file order (non-finite values persist as `null` and are dropped).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchFile {
+    pub bench: String,
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl BenchFile {
+    pub fn metric(&self, key: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+}
+
+/// Parse the flat `{"bench": ..., "metrics": {...}}` shape that
+/// [`persist_json`] writes. Hand-rolled (no serde offline), tolerant of
+/// whitespace and key order but not of nested objects outside
+/// `metrics`.
+pub fn parse_bench_json(text: &str) -> Result<BenchFile, String> {
+    let mut c = JsonCursor { s: text.as_bytes(), i: 0 };
+    c.expect(b'{')?;
+    let mut bench: Option<String> = None;
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    loop {
+        let key = c.parse_string()?;
+        c.expect(b':')?;
+        if key == "metrics" {
+            c.expect(b'{')?;
+            if c.peek()? == b'}' {
+                c.expect(b'}')?;
+            } else {
+                loop {
+                    let mk = c.parse_string()?;
+                    c.expect(b':')?;
+                    if let Some(v) = c.parse_number_or_null()? {
+                        metrics.push((mk, v));
+                    }
+                    if c.peek()? == b',' {
+                        c.expect(b',')?;
+                    } else {
+                        c.expect(b'}')?;
+                        break;
+                    }
+                }
+            }
+        } else if c.peek()? == b'"' {
+            let v = c.parse_string()?;
+            if key == "bench" {
+                bench = Some(v);
+            }
+        } else {
+            c.parse_number_or_null()?;
+        }
+        if c.peek()? == b',' {
+            c.expect(b',')?;
+        } else {
+            c.expect(b'}')?;
+            break;
+        }
+    }
+    Ok(BenchFile { bench: bench.ok_or("missing \"bench\" field")?, metrics })
+}
+
+struct JsonCursor<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl JsonCursor<'_> {
+    fn peek(&mut self) -> Result<u8, String> {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+        self.s.get(self.i).copied().ok_or_else(|| "unexpected end of JSON".to_string())
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        let got = self.peek()?;
+        if got != c {
+            return Err(format!("expected '{}' at byte {}, found '{}'", c as char, self.i, got as char));
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn parse_string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        // Accumulate raw bytes so multi-byte UTF-8 (e.g. the "²"/"→" in
+        // bench names) survives intact, decoding once at the end.
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let b = *self.s.get(self.i).ok_or("unterminated string")?;
+            self.i += 1;
+            match b {
+                b'"' => return String::from_utf8(out).map_err(|e| e.to_string()),
+                b'\\' => {
+                    let e = *self.s.get(self.i).ok_or("unterminated escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' | b'\\' | b'/' => out.push(e),
+                        b'n' => out.push(b'\n'),
+                        b't' => out.push(b'\t'),
+                        b'r' => out.push(b'\r'),
+                        b'u' => {
+                            let hex = self.s.get(self.i..self.i + 4).ok_or("truncated \\u escape")?;
+                            let hex = std::str::from_utf8(hex).map_err(|e| e.to_string())?;
+                            let cp = u32::from_str_radix(hex, 16).map_err(|e| e.to_string())?;
+                            let c = char::from_u32(cp).ok_or("bad \\u escape")?;
+                            out.extend_from_slice(c.to_string().as_bytes());
+                            self.i += 4;
+                        }
+                        other => return Err(format!("unsupported escape '\\{}'", other as char)),
+                    }
+                }
+                _ => out.push(b),
+            }
+        }
+    }
+
+    fn parse_number_or_null(&mut self) -> Result<Option<f64>, String> {
+        if self.peek()? == b'n' {
+            let lit = self.s.get(self.i..self.i + 4).ok_or("truncated literal")?;
+            if lit != b"null" {
+                return Err("expected a number or null".to_string());
+            }
+            self.i += 4;
+            return Ok(None);
+        }
+        let start = self.i;
+        while self
+            .s
+            .get(self.i)
+            .is_some_and(|&b| b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.s[start..self.i]).map_err(|e| e.to_string())?;
+        text.parse::<f64>().map(Some).map_err(|e| format!("bad number {text:?}: {e}"))
+    }
+}
+
+/// How a metric is judged by the regression gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricDirection {
+    /// Timing medians (gemm_hotpath): a higher value is a regression.
+    LowerIsBetter,
+    /// Throughputs (`*req_per_s*`): a lower value is a regression.
+    HigherIsBetter,
+    /// Counters (command/weight loads, reuse factors): tracked, never
+    /// gated.
+    Informational,
+}
+
+/// Classify a metric for the gate: serve-throughput `req_per_s` keys
+/// are higher-better, every `gemm_hotpath` metric is a nanosecond
+/// median (lower-better), and everything else is informational.
+pub fn metric_direction(bench: &str, key: &str) -> MetricDirection {
+    if key.contains("req_per_s") {
+        MetricDirection::HigherIsBetter
+    } else if bench == "gemm_hotpath" {
+        MetricDirection::LowerIsBetter
+    } else {
+        MetricDirection::Informational
+    }
+}
+
+/// One metric compared across two runs.
+#[derive(Clone, Debug)]
+pub struct MetricDiff {
+    pub bench: String,
+    pub key: String,
+    pub old: f64,
+    pub new: f64,
+    /// Relative change, `(new − old) / old`.
+    pub change: f64,
+    pub direction: MetricDirection,
+    /// Whether the change is a regression beyond the gate's threshold.
+    pub regressed: bool,
+}
+
+/// Compare two runs' bench files (matched by bench name) and flag
+/// regressions beyond `threshold` (e.g. `0.15` = 15%). Metrics present
+/// on only one side are skipped — adding or retiring a metric must not
+/// trip the gate.
+pub fn diff_benches(old: &[BenchFile], new: &[BenchFile], threshold: f64) -> Vec<MetricDiff> {
+    let mut out = Vec::new();
+    for n in new {
+        let Some(o) = old.iter().find(|o| o.bench == n.bench) else {
+            continue;
+        };
+        for (key, new_v) in &n.metrics {
+            let Some(old_v) = o.metric(key) else {
+                continue;
+            };
+            if old_v == 0.0 {
+                continue; // no baseline magnitude to compare against
+            }
+            let change = (new_v - old_v) / old_v;
+            let direction = metric_direction(&n.bench, key);
+            let regressed = match direction {
+                MetricDirection::LowerIsBetter => change > threshold,
+                MetricDirection::HigherIsBetter => change < -threshold,
+                MetricDirection::Informational => false,
+            };
+            out.push(MetricDiff {
+                bench: n.bench.clone(),
+                key: key.clone(),
+                old: old_v,
+                new: *new_v,
+                change,
+                direction,
+                regressed,
+            });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_persist_json_shape() {
+        let text = r#"{
+  "bench": "serve_throughput",
+  "metrics": {
+    "modeled_req_per_s_b8_w2": 42.5,
+    "conv 56²×16→64 k3": 3.25,
+    "a b": 1.5,
+    "c\"d": null
+  }
+}
+"#;
+        let f = parse_bench_json(text).unwrap();
+        assert_eq!(f.bench, "serve_throughput");
+        assert_eq!(f.metric("modeled_req_per_s_b8_w2"), Some(42.5));
+        assert_eq!(f.metric("conv 56²×16→64 k3"), Some(3.25), "multi-byte UTF-8 keys survive");
+        assert_eq!(f.metric("a b"), Some(1.5));
+        assert_eq!(f.metric("c\"d"), None, "null metrics are dropped");
+        assert_eq!(f.metrics.len(), 3);
+        assert!(parse_bench_json("{\"metrics\": {}}").is_err(), "bench field is required");
+        assert!(parse_bench_json("{\"bench\": \"x\", \"metrics\": {}}").unwrap().metrics.is_empty());
+        assert!(parse_bench_json("not json").is_err());
+    }
+
+    #[test]
+    fn metric_directions_classify_the_gate() {
+        assert_eq!(
+            metric_direction("serve_throughput", "modeled_req_per_s_b8_w2"),
+            MetricDirection::HigherIsBetter
+        );
+        assert_eq!(
+            metric_direction("gemm_hotpath", "conv 56²×16→64 k3 (4.6 M MACs)"),
+            MetricDirection::LowerIsBetter
+        );
+        assert_eq!(
+            metric_direction("serve_throughput", "command_loads_b8_w2"),
+            MetricDirection::Informational
+        );
+        assert_eq!(
+            metric_direction("serve_throughput", "weight_reuse_b8_w2"),
+            MetricDirection::Informational
+        );
+    }
+
+    #[test]
+    fn diff_flags_regressions_in_the_right_direction() {
+        let old = vec![
+            BenchFile {
+                bench: "serve_throughput".into(),
+                metrics: vec![("modeled_req_per_s_b8_w2".into(), 100.0), ("command_loads_b8_w2".into(), 2.0)],
+            },
+            BenchFile { bench: "gemm_hotpath".into(), metrics: vec![("conv".into(), 1000.0)] },
+        ];
+        // Throughput −20% and timing +20%: both beyond a 15% gate.
+        let new = vec![
+            BenchFile {
+                bench: "serve_throughput".into(),
+                metrics: vec![
+                    ("modeled_req_per_s_b8_w2".into(), 80.0),
+                    ("command_loads_b8_w2".into(), 100.0),
+                    ("brand_new_metric".into(), 7.0),
+                ],
+            },
+            BenchFile { bench: "gemm_hotpath".into(), metrics: vec![("conv".into(), 1200.0)] },
+        ];
+        let diffs = diff_benches(&old, &new, 0.15);
+        let regressed: Vec<&str> = diffs.iter().filter(|d| d.regressed).map(|d| d.key.as_str()).collect();
+        assert_eq!(regressed, vec!["modeled_req_per_s_b8_w2", "conv"]);
+        // Informational counters and one-sided metrics never gate.
+        assert!(diffs.iter().all(|d| d.key != "brand_new_metric"));
+        let cmd = diffs.iter().find(|d| d.key == "command_loads_b8_w2").unwrap();
+        assert!(!cmd.regressed);
+        // Within-threshold moves pass.
+        let ok = diff_benches(&old, &old, 0.15);
+        assert!(ok.iter().all(|d| !d.regressed));
+        assert!((ok[0].change).abs() < 1e-12);
+    }
+
     #[test]
     fn persist_json_writes_escaped_metrics() {
         let dir = std::env::temp_dir().join(format!("benchkit_json_{}", std::process::id()));

@@ -13,6 +13,7 @@
 use anyhow::Result;
 
 use crate::engine::csb::{CMD_BURST_LEN, CMDFIFO_DEPTH, MAX_LAYERS};
+use crate::host::gemm::WeightPlan;
 use crate::net::graph::{Network, Node};
 use crate::net::layer::LayerSpec;
 
@@ -156,6 +157,10 @@ pub struct CompiledStream {
     pub epochs: Vec<EpochPlan>,
     /// What each pass did (for logs and tests).
     pub report: PassReport,
+    /// Cross-batch weight residency plan (fixed weight/bias-cache homes
+    /// per conv super-block when the whole net fits; empty otherwise).
+    /// Computed once here so the per-request drivers never rebuild it.
+    pub weight_plan: WeightPlan,
 }
 
 impl CompiledStream {
@@ -195,7 +200,8 @@ pub fn compile(net: &Network, weights_id: u64) -> Result<CompiledStream> {
     optimized.check().map_err(anyhow::Error::msg)?;
     let epochs = schedule_epochs(optimized.engine_layers().len());
     let id = format!("{:016x}", combine(graph_fingerprint(&optimized), weights_id));
-    Ok(CompiledStream { id, net: optimized, weights_id, source_fingerprint, epochs, report })
+    let weight_plan = WeightPlan::plan(&id, &optimized.engine_layers());
+    Ok(CompiledStream { id, net: optimized, weights_id, source_fingerprint, epochs, report, weight_plan })
 }
 
 #[cfg(test)]

@@ -47,8 +47,31 @@ impl BatchPolicy {
 /// immediately instead of sitting out the straggler window: holding it
 /// would delay both this batch and the queued network switch.
 pub fn next_batch(sched: &Scheduler, policy: &BatchPolicy) -> Option<Vec<QueuedRequest>> {
+    next_batch_preferring(sched, policy, None)
+}
+
+/// [`next_batch`] with **network affinity**: when `prefer` names the
+/// network the worker's device served last, the first pop takes the
+/// oldest queued request *for that network* (if any) instead of the
+/// queue head — so consecutive batches stay on one artifact and the
+/// device's command and weight shadows keep paying off. Falls back to
+/// plain FIFO when no preferred request is queued, so a network switch
+/// still happens as soon as only other-network work remains; within a
+/// network requests are still served oldest-first.
+pub fn next_batch_preferring(
+    sched: &Scheduler,
+    policy: &BatchPolicy,
+    prefer: Option<&str>,
+) -> Option<Vec<QueuedRequest>> {
     assert!(policy.max_batch >= 1, "max_batch must be at least 1");
-    let first = sched.pop_blocking()?;
+    let first = match prefer {
+        Some(name) => match sched.try_pop_matching(Some(name)) {
+            Pop::Item(q) => q,
+            Pop::Closed => return None,
+            Pop::Empty | Pop::NoMatch => sched.pop_blocking()?,
+        },
+        None => sched.pop_blocking()?,
+    };
     let network = first.request.network.clone();
     let mut batch = vec![first];
     let deadline = Instant::now() + policy.batch_timeout;
@@ -167,6 +190,26 @@ mod tests {
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].request.id, 0);
         assert!(t0.elapsed() < Duration::from_secs(1), "must flush on a foreign head-of-line");
+    }
+
+    #[test]
+    fn preferred_network_batches_before_queue_head() {
+        let s = Scheduler::new();
+        for (id, net) in [(0u64, "b"), (1, "a"), (2, "b"), (3, "a")] {
+            s.push(InferenceRequest::new(id, Tensor::zeros(1, 1, 1)).for_network(net));
+        }
+        s.close();
+        let policy = BatchPolicy { max_batch: 8, batch_timeout: Duration::from_secs(5) };
+        // Affinity: the worker that just served "a" keeps serving "a"
+        // even though "b" is at the head of the queue.
+        let first = next_batch_preferring(&s, &policy, Some("a")).unwrap();
+        let ids: Vec<u64> = first.iter().map(|q| q.request.id).collect();
+        assert_eq!(ids, vec![1, 3]);
+        // No "a" left: falls back to FIFO and switches to "b".
+        let second = next_batch_preferring(&s, &policy, Some("a")).unwrap();
+        let ids: Vec<u64> = second.iter().map(|q| q.request.id).collect();
+        assert_eq!(ids, vec![0, 2]);
+        assert!(next_batch_preferring(&s, &policy, Some("a")).is_none());
     }
 
     #[test]

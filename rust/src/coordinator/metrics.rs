@@ -95,6 +95,10 @@ pub struct WorkerStats {
     pub weight_loads: u64,
     /// Conv passes swept over resident weights.
     pub weight_sweeps: u64,
+    /// Weight super-blocks found still resident across batches (keyed
+    /// weight-shadow hits — zero link traffic, see
+    /// [`crate::accel::stream::EngineStats::weight_reuses`]).
+    pub weight_reuses: u64,
     /// Command streams loaded over the link (network switches and cold
     /// starts; see [`crate::accel::stream::EngineStats::command_loads`]).
     pub command_loads: u64,
@@ -171,6 +175,14 @@ pub struct ServeStats {
     pub command_loads: u64,
     /// Command-stream shadow replays across all workers.
     pub command_reuses: u64,
+    /// Weight-cache load transfers across all workers — batching plus
+    /// cross-batch residency push this *down* per request.
+    pub weight_loads: u64,
+    /// Conv passes swept over resident weights across all workers.
+    pub weight_sweeps: u64,
+    /// Cross-batch weight-shadow hits across all workers (super-blocks
+    /// reused with zero link traffic).
+    pub weight_reuses: u64,
     /// Requests answered without a forward: duplicates of an in-flight
     /// or cached (network, image) pair, shed in front of the scheduler.
     pub result_cache_hits: usize,
@@ -205,6 +217,22 @@ impl ServeStats {
         };
         self.command_loads = self.workers.iter().map(|w| w.command_loads).sum();
         self.command_reuses = self.workers.iter().map(|w| w.command_reuses).sum();
+        self.weight_loads = self.workers.iter().map(|w| w.weight_loads).sum();
+        self.weight_sweeps = self.workers.iter().map(|w| w.weight_sweeps).sum();
+        self.weight_reuses = self.workers.iter().map(|w| w.weight_reuses).sum();
+    }
+
+    /// Conv passes per weight load across the whole run — the
+    /// system-wide amortization factor (the per-device
+    /// [`crate::accel::stream::EngineStats::weight_reuse`], aggregated):
+    /// batching sweeps many images per load, and cross-batch residency
+    /// removes loads outright, so serving wants this *high*.
+    pub fn weight_reuse(&self) -> f64 {
+        if self.weight_loads == 0 {
+            0.0
+        } else {
+            self.weight_sweeps as f64 / self.weight_loads as f64
+        }
     }
 
     /// Fraction of requests shed by the image-keyed result cache (0.0
@@ -299,8 +327,24 @@ mod tests {
         let mut s = ServeStats {
             served: 3,
             workers: vec![
-                WorkerStats { worker: 0, served: 2, link_seconds: 1.0, ..Default::default() },
-                WorkerStats { worker: 1, served: 1, link_seconds: 0.5, ..Default::default() },
+                WorkerStats {
+                    worker: 0,
+                    served: 2,
+                    link_seconds: 1.0,
+                    weight_loads: 4,
+                    weight_sweeps: 30,
+                    weight_reuses: 2,
+                    ..Default::default()
+                },
+                WorkerStats {
+                    worker: 1,
+                    served: 1,
+                    link_seconds: 0.5,
+                    weight_loads: 1,
+                    weight_sweeps: 10,
+                    weight_reuses: 1,
+                    ..Default::default()
+                },
             ],
             ..Default::default()
         };
@@ -312,5 +356,12 @@ mod tests {
         assert_eq!(s.p50_latency, 0.2);
         assert_eq!(s.modeled_seconds, 1.0);
         assert_eq!(s.modeled_throughput, 3.0);
+        // Weight amortization rolls up across workers: 40 sweeps over
+        // 5 loads, with 3 resident-block reuses.
+        assert_eq!(s.weight_loads, 5);
+        assert_eq!(s.weight_sweeps, 40);
+        assert_eq!(s.weight_reuses, 3);
+        assert_eq!(s.weight_reuse(), 8.0);
+        assert_eq!(ServeStats::default().weight_reuse(), 0.0);
     }
 }

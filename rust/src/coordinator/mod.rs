@@ -378,6 +378,7 @@ pub fn serve_multi(
                 w.busy_seconds += m.service_seconds;
                 w.weight_loads += m.weight_loads;
                 w.weight_sweeps += m.weight_sweeps;
+                w.weight_reuses += m.weight_reuses;
                 w.command_loads += m.command_loads;
                 w.command_reuses += m.command_reuses;
                 if m.model_cache_hit {

@@ -10,7 +10,12 @@
 //! artifact id, so the device's command shadow turns consecutive
 //! same-network batches into zero-command-traffic replays — only a
 //! network *switch* pays the transfer (counted in
-//! [`crate::accel::stream::EngineStats`]).
+//! [`crate::accel::stream::EngineStats`]). The worker loop has
+//! **network affinity**: it prefers the network its device served last
+//! (see [`batcher::next_batch_preferring`]), maximizing those
+//! same-artifact runs so the command shadow *and* the cross-batch
+//! weight residency (`gemm::WeightPlan` + the device's keyed weight
+//! shadow) keep paying off.
 //!
 //! Batches of one ride the classic single-image path (the `batch=1`
 //! degenerate case); larger batches go through the weight-resident
@@ -66,6 +71,9 @@ pub(crate) struct BatchMetric {
     pub service_seconds: f64,
     pub weight_loads: u64,
     pub weight_sweeps: u64,
+    /// Weight super-blocks found still resident from a previous batch
+    /// (zero-traffic reloads via the device's keyed weight shadow).
+    pub weight_reuses: u64,
     /// Command-stream link loads / shadow replays this batch added.
     pub command_loads: u64,
     pub command_reuses: u64,
@@ -119,7 +127,13 @@ pub(crate) fn run_worker(
         models: LruCache::new(model_cache.max(1)),
     };
     let mut dev = StreamAccelerator::new(link);
-    while let Some(batch) = batcher::next_batch(sched, policy) {
+    // Network affinity: keep draining the network this device served
+    // last, so its command + weight shadows stay hot and consecutive
+    // same-artifact batches skip both transfers; switch only when no
+    // same-network request is queued.
+    let mut last_network: Option<String> = None;
+    while let Some(batch) = batcher::next_batch_preferring(sched, policy, last_network.as_deref()) {
+        last_network = batch[0].request.network.clone();
         if !run_batch(&mut dev, &mut ctx, &batch) {
             return; // coordinator went away
         }
@@ -145,6 +159,7 @@ fn run_batch(dev: &mut StreamAccelerator, ctx: &mut WorkerCtx, batch: &[QueuedRe
     let engine_before = ClockDomain::ENGINE.secs(dev.stats.cycles);
     let loads_before = dev.stats.weight_loads;
     let sweeps_before = dev.stats.weight_sweeps;
+    let wreuses_before = dev.stats.weight_reuses;
     let cmd_loads_before = dev.stats.command_loads;
     let cmd_reuses_before = dev.stats.command_reuses;
     let t0 = Instant::now();
@@ -185,6 +200,7 @@ fn run_batch(dev: &mut StreamAccelerator, ctx: &mut WorkerCtx, batch: &[QueuedRe
                 service_seconds,
                 weight_loads: dev.stats.weight_loads - loads_before,
                 weight_sweeps: dev.stats.weight_sweeps - sweeps_before,
+                weight_reuses: dev.stats.weight_reuses - wreuses_before,
                 command_loads: dev.stats.command_loads - cmd_loads_before,
                 command_reuses: dev.stats.command_reuses - cmd_reuses_before,
                 model_cache_hit,

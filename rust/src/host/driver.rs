@@ -11,7 +11,7 @@
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 
-use crate::accel::stream::{SliceTask, StreamAccelerator, WEIGHT_CACHE_WORDS};
+use crate::accel::stream::{SliceTask, StreamAccelerator};
 use crate::compiler::CompiledStream;
 use crate::engine::functional::ConvWeightsF16;
 use crate::host::gemm;
@@ -107,6 +107,12 @@ impl<'d> HostDriver<'d> {
             self.dev.load_commands(&layers).context("load commands")?;
             phases.add("load_commands", self.dev.usb.total_seconds() - usb_before);
         }
+        // Compiled streams carry a cross-batch weight residency plan:
+        // when the whole network's weights fit the caches, each
+        // super-block lives at a fixed home and a consecutive forward of
+        // the same artifact skips every weight transfer (see
+        // gemm::WeightPlan, computed once at compile time).
+        let plan = stream.map(|cs| &cs.weight_plan).filter(|p| p.is_resident());
         let mut engine_idx = 0usize;
         let mut epoch = 0usize;
 
@@ -134,6 +140,7 @@ impl<'d> HostDriver<'d> {
                             epoch += 1;
                         }
                     }
+                    let eidx = engine_idx;
                     engine_idx += 1;
                     let reg = self
                         .dev
@@ -142,7 +149,7 @@ impl<'d> HostDriver<'d> {
                     ensure!(reg.encode() == spec.encode(), "layer register mismatch at {}", spec.name);
                     let inp = &outputs[*input];
                     match spec.op {
-                        OpType::ConvRelu => self.run_conv(spec, inp, blobs, &mut phases)?,
+                        OpType::ConvRelu => self.run_conv(spec, eidx, plan, inp, blobs, &mut phases)?,
                         OpType::MaxPool | OpType::AvgPool => self.run_pool(spec, inp, &mut phases)?,
                         OpType::Idle => inp.clone(),
                     }
@@ -180,6 +187,8 @@ impl<'d> HostDriver<'d> {
     fn run_conv(
         &mut self,
         spec: &LayerSpec,
+        eidx: usize,
+        plan: Option<&gemm::WeightPlan>,
         input: &TensorF16,
         blobs: &Blobs,
         phases: &mut PhaseTimes,
@@ -197,20 +206,21 @@ impl<'d> HostDriver<'d> {
         let pw = padded.w;
 
         // Weight super-block: as many output channels as fit the cache.
-        let per_oc_values = k * k * icp;
-        let max_oc_resident = (WEIGHT_CACHE_WORDS * 8 / per_oc_values).max(1);
-        let oc_pass = gemm::oc_block_size(k, icp); // ≤ 8 per engine pass
-        let super_block = max_oc_resident.min(spec.o_ch as usize).max(oc_pass);
+        let layout = gemm::conv_layout(k, spec.i_ch as usize, spec.o_ch as usize);
+        let per_oc_values = layout.per_oc_values;
+        let oc_pass = layout.oc_pass; // ≤ 8 per engine pass
         let granularity = gemm::conv_granularity(k, pw, icp);
 
         let mut out = Tensor::zeros(o, o, spec.o_ch as usize);
         let mut oc0 = 0usize;
+        let mut block = 0usize;
         while oc0 < spec.o_ch as usize {
-            let resident = super_block.min(spec.o_ch as usize - oc0);
-            // Process Weight Bias + load weight & bias.
+            let resident = layout.super_block.min(spec.o_ch as usize - oc0);
+            // Process Weight Bias + load weight & bias. With a residency
+            // plan the block has a fixed home and may still be resident
+            // from a previous forward of the same artifact.
             let t0 = self.dev.usb.total_seconds();
-            self.dev.load_weights(&gemm::weight_block(&wf, oc0, resident))?;
-            self.dev.load_bias(&gemm::bias_block(&wf, oc0, resident))?;
+            let (wbase, bbase) = load_conv_superblock(self.dev, plan, eidx, block, &wf, oc0, resident)?;
             phases.add("load_weights", self.dev.usb.total_seconds() - t0);
 
             match granularity {
@@ -234,8 +244,8 @@ impl<'d> HostDriver<'d> {
                                 pixel_mode: false,
                                 kernel_size_reg: spec.kernel_size(),
                                 skip_relu: spec.skip_relu,
-                                weight_base: oc_local * per_oc_values / 8,
-                                bias_base: oc_local,
+                                weight_base: wbase + oc_local * per_oc_values / 8,
+                                bias_base: bbase + oc_local,
                                 pool_pad: 0,
                                 data_base: 0,
                             };
@@ -273,8 +283,8 @@ impl<'d> HostDriver<'d> {
                                     pixel_mode: true,
                                     kernel_size_reg: spec.kernel_size(),
                                     skip_relu: spec.skip_relu,
-                                    weight_base: oc_local * per_oc_values / 8,
-                                    bias_base: oc_local,
+                                    weight_base: wbase + oc_local * per_oc_values / 8,
+                                    bias_base: bbase + oc_local,
                                     pool_pad: 0,
                                     data_base: 0,
                                 };
@@ -292,6 +302,7 @@ impl<'d> HostDriver<'d> {
                 }
             }
             oc0 += resident;
+            block += 1;
         }
         Ok(out)
     }
@@ -352,6 +363,43 @@ impl<'d> HostDriver<'d> {
             }
         }
         Ok(out)
+    }
+}
+
+/// Load (or find resident) weight super-block `block` of engine layer
+/// `eidx` — the one residency protocol shared by the single-image and
+/// batched drivers. Planned blocks go to their fixed homes under their
+/// content key, and a resident hit skips even the host-side weight
+/// gather; keyless blocks (no plan / non-resident net) load at word 0.
+/// Returns the block's (weight base, bias base).
+pub(crate) fn load_conv_superblock(
+    dev: &mut StreamAccelerator,
+    plan: Option<&gemm::WeightPlan>,
+    eidx: usize,
+    block: usize,
+    wf: &ConvWeightsF16,
+    oc0: usize,
+    resident: usize,
+) -> Result<(usize, usize)> {
+    match plan.and_then(|p| p.slot(eidx, block)) {
+        Some(slot) => {
+            let wwords = resident * wf.k * wf.k * wf.i_ch_padded / 8;
+            if !dev.weight_block_resident(&slot.key, slot.weight_base, wwords, slot.bias_base, resident) {
+                dev.load_weight_block_cached(
+                    &slot.key,
+                    slot.weight_base,
+                    &gemm::weight_block(wf, oc0, resident),
+                    slot.bias_base,
+                    &gemm::bias_block(wf, oc0, resident),
+                )?;
+            }
+            Ok((slot.weight_base, slot.bias_base))
+        }
+        None => {
+            dev.load_weights(&gemm::weight_block(wf, oc0, resident))?;
+            dev.load_bias(&gemm::bias_block(wf, oc0, resident))?;
+            Ok((0, 0))
+        }
     }
 }
 

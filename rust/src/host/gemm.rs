@@ -16,14 +16,19 @@
 //! Streams are emitted in exactly the order the SERDES shifts them into
 //! BRAM, so the device load is a linear copy.
 
+use std::collections::HashMap;
+
 use crate::engine::functional::ConvWeightsF16;
 use crate::fp16::F16;
+use crate::net::layer::{LayerSpec, OpType};
 use crate::net::tensor::TensorF16;
 
 /// Data-cache capacity in FP16 values (1024 words × 8 lanes, §4.4).
 pub const DATA_CACHE_VALUES: usize = 1024 * 8;
 /// Weight-cache capacity in FP16 values (8192 words × 8 lanes).
 pub const WEIGHT_CACHE_VALUES: usize = 8192 * 8;
+/// Bias-cache capacity in values (1024 words, one value per word).
+pub const BIAS_CACHE_SLOTS: usize = 1024;
 /// Result FIFO capacity in values (1024 × 32-bit words, low 16 valid).
 pub const RES_FIFO_VALUES: usize = 1024;
 
@@ -56,6 +61,114 @@ pub fn oc_block_size(k: usize, lanes: usize) -> usize {
         "single output channel needs {per_oc} weight values > cache"
     );
     (WEIGHT_CACHE_VALUES / per_oc).min(8).max(1)
+}
+
+/// How a conv layer's weights are cut for the device — the super-block
+/// arithmetic shared by the single-image driver, the batched driver and
+/// the cross-batch residency planner (one formula, three consumers).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvLayout {
+    /// Input channels padded to the 8-lane width.
+    pub icp: usize,
+    /// FP16 weight values per output channel (k² · icp).
+    pub per_oc_values: usize,
+    /// Output channels per engine pass (≤ 8, weight-cache bounded).
+    pub oc_pass: usize,
+    /// Output channels per resident weight super-block.
+    pub super_block: usize,
+}
+
+impl ConvLayout {
+    /// Number of weight super-blocks a layer with `o_ch` outputs needs.
+    pub fn blocks(&self, o_ch: usize) -> usize {
+        o_ch.div_ceil(self.super_block)
+    }
+}
+
+/// Compute the weight layout of one conv layer.
+pub fn conv_layout(k: usize, i_ch: usize, o_ch: usize) -> ConvLayout {
+    let icp = i_ch.div_ceil(8) * 8;
+    let per_oc_values = k * k * icp;
+    let max_oc_resident = (WEIGHT_CACHE_VALUES / per_oc_values).max(1);
+    let oc_pass = oc_block_size(k, icp);
+    let super_block = max_oc_resident.min(o_ch).max(oc_pass);
+    ConvLayout { icp, per_oc_values, oc_pass, super_block }
+}
+
+/// Where one weight super-block lives when the whole network is
+/// resident: cache bases plus the content key the device shadow uses
+/// to skip the reload (see
+/// [`crate::accel::stream::StreamAccelerator::load_weight_block_cached`]).
+#[derive(Clone, Debug)]
+pub struct BlockSlot {
+    /// Word offset of the super-block in the weight cache.
+    pub weight_base: usize,
+    /// Index offset of the super-block's biases in the bias cache.
+    pub bias_base: usize,
+    /// Content key: artifact id + engine-layer index + block index.
+    pub key: String,
+}
+
+/// Cross-batch weight residency plan for one compiled stream: every
+/// conv super-block gets a disjoint home in the weight/bias caches, so
+/// a later forward of the same artifact finds each block still resident
+/// and skips the `load_weights` transfer entirely — the weight-side
+/// mirror of the command shadow. Networks whose weights exceed the
+/// caches get an **empty** plan: every block overwrites word 0 exactly
+/// as before, and residency (correctly) saves nothing.
+#[derive(Clone, Debug, Default)]
+pub struct WeightPlan {
+    slots: HashMap<(usize, usize), BlockSlot>,
+}
+
+impl WeightPlan {
+    /// Allocate homes for every conv super-block of `layers` (the
+    /// compiled stream's engine layers, in engine order). `artifact` is
+    /// the content-addressed stream id — it already covers both the
+    /// optimized graph and the weights identity, so equal keys imply
+    /// bit-equal cache contents.
+    pub fn plan(artifact: &str, layers: &[&LayerSpec]) -> WeightPlan {
+        let mut slots = HashMap::new();
+        let mut wnext = 0usize;
+        let mut bnext = 0usize;
+        for (eidx, spec) in layers.iter().enumerate() {
+            if spec.op != OpType::ConvRelu {
+                continue;
+            }
+            let l = conv_layout(spec.kernel as usize, spec.i_ch as usize, spec.o_ch as usize);
+            let o_ch = spec.o_ch as usize;
+            let mut oc0 = 0usize;
+            let mut block = 0usize;
+            while oc0 < o_ch {
+                let resident = l.super_block.min(o_ch - oc0);
+                let slot = BlockSlot {
+                    weight_base: wnext,
+                    bias_base: bnext,
+                    key: format!("{artifact}/L{eidx}#b{block}"),
+                };
+                slots.insert((eidx, block), slot);
+                wnext += resident * l.per_oc_values / 8;
+                bnext += resident;
+                oc0 += resident;
+                block += 1;
+            }
+        }
+        if wnext > WEIGHT_CACHE_VALUES / 8 || bnext > BIAS_CACHE_SLOTS {
+            return WeightPlan::default(); // does not fit: not resident
+        }
+        WeightPlan { slots }
+    }
+
+    /// Home of super-block `block` of engine layer `eidx`, or `None`
+    /// when the plan is non-resident (load at word 0, keyless).
+    pub fn slot(&self, eidx: usize, block: usize) -> Option<&BlockSlot> {
+        self.slots.get(&(eidx, block))
+    }
+
+    /// Whether the network's weights fit the caches entirely.
+    pub fn is_resident(&self) -> bool {
+        !self.slots.is_empty()
+    }
 }
 
 /// Conv row slice: rows `y0 .. y0+k` of the padded input, all channel
@@ -205,6 +318,45 @@ mod tests {
         assert_eq!(blk[0].to_f32(), 1000.0); // oc=1, ky=0, kx=0, ic=0
         assert_eq!(blk[8].to_f32(), 1010.0); // oc=1, kx=1
         assert_eq!(blk[32].to_f32(), 2000.0); // oc=2
+    }
+
+    #[test]
+    fn conv_layout_matches_superblock_arithmetic() {
+        // SqueezeNet conv1: 72 values/oc → all 64 oc resident at once.
+        let l = conv_layout(3, 3, 64);
+        assert_eq!((l.icp, l.per_oc_values, l.oc_pass, l.super_block), (8, 72, 8, 64));
+        assert_eq!(l.blocks(64), 1);
+        // AlexNet conv2 (5×5 over 96ch): 2400 values/oc → 27-oc blocks.
+        let l = conv_layout(5, 96, 256);
+        assert_eq!(l.super_block, 27);
+        assert_eq!(l.blocks(256), 10);
+    }
+
+    #[test]
+    fn weight_plan_allocates_disjoint_homes_or_nothing() {
+        // Two small convs + a pool: everything fits → resident plan with
+        // disjoint, bump-allocated homes in engine-layer order.
+        let c1 = LayerSpec::conv("c1", 3, 1, 0, 12, 3, 8, 0);
+        let p1 = LayerSpec::maxpool("p1", 3, 2, 10, 8);
+        let c2 = LayerSpec::conv("c2", 1, 1, 0, 5, 8, 20, 0);
+        let plan = WeightPlan::plan("art", &[&c1, &p1, &c2]);
+        assert!(plan.is_resident());
+        let s0 = plan.slot(0, 0).unwrap();
+        assert_eq!((s0.weight_base, s0.bias_base), (0, 0));
+        // c1: 8 oc × 72 values / 8 lanes = 72 words, 8 biases.
+        let s2 = plan.slot(2, 0).unwrap();
+        assert_eq!((s2.weight_base, s2.bias_base), (72, 8));
+        assert_ne!(s0.key, s2.key);
+        assert!(s0.key.starts_with("art/"));
+        // The pool layer owns no slot; neither does a missing block.
+        assert!(plan.slot(1, 0).is_none());
+        assert!(plan.slot(2, 9).is_none());
+
+        // A layer pile too fat for the weight cache → empty (keyless) plan.
+        let fat = LayerSpec::conv("fat", 5, 1, 2, 14, 96, 64, 0);
+        let plan = WeightPlan::plan("art", &[&fat]);
+        assert!(!plan.is_resident());
+        assert!(plan.slot(0, 0).is_none());
     }
 
     #[test]

@@ -2,11 +2,12 @@
 //!
 //! Subcommands (args are hand-parsed: no clap in the offline crate set):
 //!
-//! * `infer`     — run a network through the simulated device
-//! * `commands`  — print the 96-bit command stream (Table 2) for a net
-//! * `resources` — resource model (Table 3) for a configuration
-//! * `timing`    — §5 timing model for a network/parallelism/link
-//! * `selftest`  — quick functional sanity run
+//! * `infer`      — run a network through the simulated device
+//! * `commands`   — print the 96-bit command stream (Table 2) for a net
+//! * `resources`  — resource model (Table 3) for a configuration
+//! * `timing`     — §5 timing model for a network/parallelism/link
+//! * `bench-diff` — compare two runs' BENCH_*.json, gate regressions
+//! * `selftest`   — quick functional sanity run
 
 use anyhow::{bail, Context, Result};
 
@@ -171,6 +172,13 @@ fn main() -> Result<()> {
                 println!("  epoch {e}: layers {}..{}", plan.start, plan.start + plan.len);
             }
         }
+        "bench-diff" => {
+            let old = args.flags.get("old").map(|s| s.as_str()).context("bench-diff needs --old <dir|file>")?;
+            let new = args.flags.get("new").map(|s| s.as_str()).context("bench-diff needs --new <dir|file>")?;
+            let threshold: f64 =
+                args.flags.get("threshold").map(|v| v.parse()).transpose()?.unwrap_or(0.15);
+            bench_diff(std::path::Path::new(old), std::path::Path::new(new), threshold)?;
+        }
         "selftest" => {
             let mut net = Network::new("selftest");
             let inp = net.input(14, 3);
@@ -194,11 +202,128 @@ fn main() -> Result<()> {
                  \x20 compile   --net ... [--weights-seed 1]   lower to a CSB artifact (passes, epochs, id)\n\
                  \x20 resources --parallelism 8 --precision 16\n\
                  \x20 timing    --net ... --parallelism 8 --link usb3|pcie\n\
+                 \x20 bench-diff --old <dir|file> --new <dir|file> [--threshold 0.15]\n\
+                 \x20            CI regression gate over persisted BENCH_*.json metrics\n\
                  \x20 selftest\n\n\
                  examples: quickstart, squeezenet_e2e, alexnet_infer,\n\
                  parallelism_sweep, serve (cargo run --release --example <name>)"
             );
         }
     }
+    Ok(())
+}
+
+/// Recursively collect `BENCH_*.json` files under `path` (a file is
+/// returned as-is). Artifact-download actions unpack each artifact into
+/// its own subdirectory, so the walk has to recurse.
+fn collect_bench_json(path: &std::path::Path) -> Vec<std::path::PathBuf> {
+    let mut out = Vec::new();
+    if path.is_file() {
+        out.push(path.to_path_buf());
+        return out;
+    }
+    let Ok(entries) = std::fs::read_dir(path) else {
+        return out;
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            out.extend(collect_bench_json(&p));
+        } else if p
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        {
+            out.push(p);
+        }
+    }
+    out.sort();
+    out
+}
+
+fn load_bench_files(paths: &[std::path::PathBuf]) -> Result<Vec<benchkit::BenchFile>> {
+    let mut out = Vec::new();
+    for p in paths {
+        let text = std::fs::read_to_string(p).with_context(|| format!("read {}", p.display()))?;
+        let f = benchkit::parse_bench_json(&text)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", p.display()))?;
+        out.push(f);
+    }
+    Ok(out)
+}
+
+/// The CI bench-regression gate: diff a fresh run's persisted bench
+/// JSON against the latest main-branch baseline and fail on any gated
+/// metric that regressed beyond `threshold`. A missing or empty
+/// baseline (first run, expired artifacts) passes with a notice — the
+/// gate can only compare what exists.
+fn bench_diff(old: &std::path::Path, new: &std::path::Path, threshold: f64) -> Result<()> {
+    let new_paths = collect_bench_json(new);
+    anyhow::ensure!(
+        !new_paths.is_empty(),
+        "no BENCH_*.json found under {} — run the benches with BENCH_JSON_DIR set first",
+        new.display()
+    );
+    let new_files = load_bench_files(&new_paths)?;
+    let old_paths = collect_bench_json(old);
+    if old_paths.is_empty() {
+        println!(
+            "bench-diff: no baseline under {} — first run or expired artifact; gate passes with a notice",
+            old.display()
+        );
+        return Ok(());
+    }
+    let old_files = load_bench_files(&old_paths)?;
+
+    let diffs = benchkit::diff_benches(&old_files, &new_files, threshold);
+    let rows: Vec<Vec<String>> = diffs
+        .iter()
+        .map(|d| {
+            let verdict = if d.regressed {
+                "REGRESSED"
+            } else {
+                match d.direction {
+                    benchkit::MetricDirection::Informational => "info",
+                    _ => "ok",
+                }
+            };
+            vec![
+                d.bench.clone(),
+                d.key.clone(),
+                format!("{:.4}", d.old),
+                format!("{:.4}", d.new),
+                format!("{:+.1}%", 100.0 * d.change),
+                verdict.to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "bench-diff: {} baseline file(s) vs {} fresh file(s), gate at ±{:.0}%",
+        old_paths.len(),
+        new_paths.len(),
+        100.0 * threshold
+    );
+    benchkit::table(&["bench", "metric", "old", "new", "change", "verdict"], &rows);
+    for n in &new_files {
+        if !old_files.iter().any(|o| o.bench == n.bench) {
+            println!("  note: bench {:?} has no baseline yet — skipped", n.bench);
+        }
+    }
+    let regressed: Vec<&benchkit::MetricDiff> = diffs.iter().filter(|d| d.regressed).collect();
+    if !regressed.is_empty() {
+        for d in &regressed {
+            eprintln!(
+                "REGRESSION: {} / {} changed {:+.1}% (old {:.4}, new {:.4}, threshold {:.0}%)",
+                d.bench,
+                d.key,
+                100.0 * d.change,
+                d.old,
+                d.new,
+                100.0 * threshold
+            );
+        }
+        anyhow::bail!("{} bench metric(s) regressed beyond {:.0}%", regressed.len(), 100.0 * threshold);
+    }
+    println!("bench-diff OK — no gated metric regressed beyond {:.0}%", 100.0 * threshold);
     Ok(())
 }

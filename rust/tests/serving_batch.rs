@@ -5,15 +5,18 @@
 use std::time::{Duration, Instant};
 
 use fusionaccel::accel::stream::StreamAccelerator;
+use fusionaccel::compiler::{compile, fnv1a, CompiledStream};
 use fusionaccel::coordinator::{
     batcher, serve, serve_batched, BatchPolicy, InferenceRequest, Scheduler, ServeConfig,
 };
-use fusionaccel::host::batch::forward_batch;
+use fusionaccel::host::batch::{forward_batch, forward_batch_compiled};
+use fusionaccel::host::driver::HostDriver;
+use fusionaccel::host::gemm::{conv_granularity, ConvGranularity};
 use fusionaccel::hw::usb::UsbLink;
 use fusionaccel::net::graph::Network;
 use fusionaccel::net::layer::LayerSpec;
 use fusionaccel::net::tensor::{Tensor, TensorF32};
-use fusionaccel::net::weights::synthesize_weights;
+use fusionaccel::net::weights::{synthesize_weights, Blobs};
 use fusionaccel::prop::{forall, Rng};
 
 /// Fire-module micro net: conv, pool, parallel expand pair, concat, gap.
@@ -158,10 +161,188 @@ fn batched_serving_at_least_doubles_modeled_throughput() {
         s8.modeled_throughput,
         s1.modeled_throughput
     );
-    // And the weight cache is actually being reused across images.
-    let reuse8 = s8.workers[0].weight_reuse();
-    let reuse1 = s1.workers[0].weight_reuse();
-    assert!(reuse8 > 4.0 * reuse1, "reuse {reuse8:.1} vs {reuse1:.1}");
+    // The fire net's weights fit the caches, so cross-batch residency
+    // means *both* runs load each super-block exactly once (batch 1
+    // amortizes across consecutive single forwards too — that's the
+    // point) and replay it from the shadow ever after; batching's edge
+    // on a resident net is per-transaction amortization, measured above.
+    assert_eq!(s8.weight_loads, s1.weight_loads, "resident net: loads are batch-size independent");
+    assert!(s1.weight_reuses > 0, "consecutive singles must reuse resident blocks");
+    assert!(s8.weight_reuses > 0, "consecutive batches must reuse resident blocks");
+    // Sweeps-per-load is high in both runs and no worse batched.
+    assert!(s1.weight_reuse() > 4.0, "reuse {:.1}", s1.weight_reuse());
+    assert!(s8.weight_reuse() >= s1.weight_reuse() * 0.99);
+}
+
+/// Miniaturized AlexNet conv1 shape: k=11/s=4 over a 47-wide 16-channel
+/// input — the row slice (11·47·16 = 8272 values) exceeds the data
+/// cache, forcing pixel granularity. Weights fit the caches, so the
+/// residency plan applies.
+fn pixel_stem_net() -> Network {
+    let mut n = Network::new("pixel_stem");
+    let inp = n.input(47, 16);
+    let c1 = n.engine(LayerSpec::conv("c1", 11, 4, 0, 47, 16, 8, 0), inp); // 10
+    let g = n.engine(LayerSpec::avgpool("gap", 10, 1, 10, 8), c1);
+    n.softmax("prob", g);
+    n
+}
+
+/// AlexNet conv2 shape on the 31-wide input of the issue: k=5/pad=2
+/// over 48 channels — 5·35·48 = 8400 values per row slice → pixel.
+fn pixel_mid_net() -> Network {
+    let mut n = Network::new("pixel_mid");
+    let inp = n.input(31, 48);
+    let c1 = n.engine(LayerSpec::conv("c1", 5, 1, 2, 31, 48, 2, 0), inp); // 31
+    let p = n.engine(LayerSpec::maxpool("p1", 3, 2, 31, 2), c1); // 15
+    let g = n.engine(LayerSpec::avgpool("gap", 15, 1, 15, 2), p);
+    n.softmax("prob", g);
+    n
+}
+
+fn compiled(net: &Network, blobs: &Blobs) -> CompiledStream {
+    compile(net, fnv1a(&blobs.to_bytes())).unwrap()
+}
+
+fn rand_images(side: usize, ch: usize, n: usize, seed: u64) -> Vec<TensorF32> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            Tensor::from_vec(side, side, ch, (0..side * side * ch).map(|_| rng.normal(1.0)).collect())
+        })
+        .collect()
+}
+
+/// PROPERTY (issue #3): pixel-granularity convs batch bit-identically —
+/// for k=11/s=4 and k=5/pad=2-on-31-wide shapes, a batch of 2/4/8
+/// images through `forward_batch_compiled` returns exactly the bits of
+/// sequential `forward_compiled` calls.
+#[test]
+fn pixel_granularity_batching_bit_identical_to_sequential_compiled() {
+    for (net, seed) in [(pixel_stem_net(), 0x51EAu64), (pixel_mid_net(), 0x51EB)] {
+        let blobs = synthesize_weights(&net, seed);
+        let stream = compiled(&net, &blobs);
+        // Both shapes must actually exercise the pixel path.
+        let c1 = net.engine_layers()[0].clone();
+        let icp = (c1.i_ch as usize).div_ceil(8) * 8;
+        let pw = c1.i_side as usize + 2 * c1.padding as usize;
+        assert_eq!(conv_granularity(c1.kernel as usize, pw, icp), ConvGranularity::Pixel, "{}", net.name);
+
+        let imgs = rand_images(c1.i_side as usize, c1.i_ch as usize, 8, seed ^ 1);
+        let seq: Vec<_> = imgs
+            .iter()
+            .map(|img| {
+                let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+                let res = HostDriver::new(&mut dev).forward_compiled(&stream, &blobs, img).unwrap();
+                res.outputs.last().unwrap().clone()
+            })
+            .collect();
+        for b in [2usize, 4, 8] {
+            let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+            let batch = forward_batch_compiled(&mut dev, &stream, &blobs, &imgs[..b]).unwrap();
+            for (i, logits) in batch.logits.iter().enumerate() {
+                assert_eq!(logits.data.len(), seq[i].data.len());
+                for (a, e) in logits.data.iter().zip(&seq[i].data) {
+                    assert_eq!(a.to_bits(), e.to_bits(), "{} batch {b} image {i}", net.name);
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY (issue #3): across two consecutive same-network batches,
+/// weight loads per image strictly decrease as the batch grows — and
+/// the second batch pays **zero** weight transfers, because the
+/// super-blocks are still resident under their artifact keys.
+#[test]
+fn weight_loads_per_image_strictly_decrease_with_batch_size() {
+    let net = pixel_stem_net();
+    let blobs = synthesize_weights(&net, 0xDEC);
+    let stream = compiled(&net, &blobs);
+    let imgs = rand_images(47, 16, 16, 0xDEC0);
+    // Sequential per-image reference for the *second* batch's images —
+    // the bits must survive the zero-transfer resident replay.
+    let seq: Vec<_> = imgs
+        .iter()
+        .map(|img| {
+            let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+            let res = HostDriver::new(&mut dev).forward_compiled(&stream, &blobs, img).unwrap();
+            res.outputs.last().unwrap().clone()
+        })
+        .collect();
+
+    let mut per_image: Vec<f64> = Vec::new();
+    for b in [1usize, 2, 4, 8] {
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        forward_batch_compiled(&mut dev, &stream, &blobs, &imgs[..b]).unwrap();
+        let loads_first = dev.stats.weight_loads;
+        assert!(loads_first > 0, "first batch must load weights");
+        let second = forward_batch_compiled(&mut dev, &stream, &blobs, &imgs[b..2 * b]).unwrap();
+        assert_eq!(
+            dev.stats.weight_loads, loads_first,
+            "batch {b}: second same-network batch must reuse resident weights"
+        );
+        assert!(dev.stats.weight_reuses > 0, "batch {b}: resident reuse must be counted");
+        for (i, logits) in second.logits.iter().enumerate() {
+            for (a, e) in logits.data.iter().zip(&seq[b + i].data) {
+                assert_eq!(a.to_bits(), e.to_bits(), "batch {b} image {i} after resident replay");
+            }
+        }
+        per_image.push(dev.stats.weight_loads as f64 / (2 * b) as f64);
+    }
+    for w in per_image.windows(2) {
+        assert!(w[1] < w[0], "weight loads per image must strictly decrease: {per_image:?}");
+    }
+}
+
+/// ACCEPTANCE (issue #3): an AlexNet-class pixel-granularity network —
+/// big kernel *and* more weights than the caches hold, so cross-batch
+/// residency cannot apply and batching is the only amortization —
+/// serves through `serve_multi` at max_batch ≥ 4, bit-identical to
+/// single-image serving, with fewer weight loads per image at batch 8
+/// than at batch 1.
+#[test]
+fn pixel_granularity_net_serves_batched_with_fewer_weight_loads() {
+    let mut net = Network::new("alex_stem");
+    let inp = net.input(47, 16);
+    // 40 oc × 1936 weight values/oc = 77440 values > the 65536-value
+    // weight cache → two super-blocks, non-resident plan.
+    let c1 = net.engine(LayerSpec::conv("c1", 11, 4, 0, 47, 16, 40, 0), inp); // 10
+    let g = net.engine(LayerSpec::avgpool("gap", 10, 1, 10, 40), c1);
+    net.softmax("prob", g);
+    assert_eq!(conv_granularity(11, 47, 16), ConvGranularity::Pixel);
+    let blobs = synthesize_weights(&net, 0xA1E);
+
+    let n_req = 6;
+    let reqs = |seed| {
+        rand_images(47, 16, n_req, seed)
+            .into_iter()
+            .enumerate()
+            .map(|(id, image)| InferenceRequest::new(id as u64, image))
+            .collect::<Vec<_>>()
+    };
+    let cfg1 = ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1);
+    let (single, s1) = serve_batched(&net, &blobs, &cfg1, reqs(0x47)).unwrap();
+    let cfg8 = ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 8);
+    let (batched, s8) = serve_batched(&net, &blobs, &cfg8, reqs(0x47)).unwrap();
+
+    assert_eq!(s1.failed, 0);
+    assert_eq!(s8.failed, 0);
+    assert!(s8.batch_hist.max_size() >= 4, "hist {:?}", s8.batch_hist);
+    for (a, b) in single.iter().zip(&batched) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.probs, b.probs, "req {}", a.id);
+        assert_eq!(a.argmax, b.argmax);
+    }
+    // The whole point: batched serving loads each super-block once per
+    // *batch*, single-image serving once per *image*.
+    let per_image_1 = s1.weight_loads as f64 / s1.served as f64;
+    let per_image_8 = s8.weight_loads as f64 / s8.served as f64;
+    assert!(
+        per_image_8 < per_image_1,
+        "weight loads/image: batch8 {per_image_8} vs batch1 {per_image_1}"
+    );
+    // And the aggregated amortization metric moves the right way.
+    assert!(s8.weight_reuse() > s1.weight_reuse(), "{} vs {}", s8.weight_reuse(), s1.weight_reuse());
 }
 
 /// A failing micro-batch is retried member by member: only the truly
