@@ -13,7 +13,10 @@
 //!     cargo run --release --example alexnet_infer [--full]
 //!
 //! By default the forward pass runs on a reduced 57×57 input so the
-//! example finishes in seconds; `--full` runs the true 227×227 network.
+//! example finishes in seconds; `--full` runs the true 227×227 network,
+//! whose fc6 (a 6×6 conv over 256 channels — a 1152-word GEMM slice,
+//! bigger than the whole data cache) runs through the channel-split
+//! slicing path (`gemm::ConvGranularity::ChannelSplit`).
 
 use fusionaccel::accel::stream::StreamAccelerator;
 use fusionaccel::benchkit;

@@ -9,6 +9,7 @@
 use fusionaccel::benchkit::{section, table};
 use fusionaccel::coordinator::{serve_batched, synthetic_requests, InferenceRequest, ServeConfig};
 use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::alexnet::fc6_tail;
 use fusionaccel::net::squeezenet::micro_squeezenet;
 use fusionaccel::net::weights::synthesize_weights;
 
@@ -88,6 +89,29 @@ fn main() {
     json.push(("weight_reuse_b8_w2".to_string(), stats.weight_reuse()));
     json.push(("weight_loads_b8_w2".to_string(), stats.weight_loads as f64));
     json.push(("weight_resident_reuses_b8_w2".to_string(), stats.weight_reuses as f64));
+
+    section("giant-kernel FC tail (fc6 channel-split) at batch 4, 2 workers");
+    // The AlexNet-fc6 slice shape (6×6 over 256 ch — a 1152-word window
+    // that exceeds the data cache) through the serving stack: this is
+    // the ChannelSplit path, perf-tracked so a regression in the
+    // chunked protocol shows up in the bench-diff gate. Downscaled
+    // output width keeps the bench quick; the slice/chunk geometry is
+    // exactly full-size fc6's.
+    let tail = fc6_tail(32, 16);
+    let tail_blobs = synthesize_weights(&tail, 0xFC6);
+    let tail_reqs = synthetic_requests(16, 0xFC60, 6, 256);
+    let cfg = ServeConfig::new(UsbLink::usb3_frontpanel(), 2, 4);
+    let (resps, stats) = serve_batched(&tail, &tail_blobs, &cfg, tail_reqs).unwrap();
+    assert_eq!(resps.len(), 16);
+    assert_eq!(stats.failed, 0);
+    println!(
+        "  fc6 tail: {:.1} req/s modeled ({:.2} s), weight reuse ×{:.1}",
+        stats.modeled_throughput,
+        stats.modeled_seconds,
+        stats.weight_reuse()
+    );
+    json.push(("modeled_req_per_s_fc6_b4_w2".to_string(), stats.modeled_throughput));
+    json.push(("weight_reuse_fc6_b4_w2".to_string(), stats.weight_reuse()));
 
     fusionaccel::benchkit::persist_json("serve_throughput", &json);
     println!("serve_throughput OK");

@@ -321,38 +321,51 @@ pub fn metric_direction(bench: &str, key: &str) -> MetricDirection {
 pub struct MetricDiff {
     pub bench: String,
     pub key: String,
-    pub old: f64,
+    /// Baseline value — `None` when the metric does not exist in the
+    /// baseline run (it is *new*).
+    pub old: Option<f64>,
     pub new: f64,
-    /// Relative change, `(new − old) / old`.
-    pub change: f64,
+    /// Relative change, `(new − old) / old`; `None` when there is no
+    /// usable baseline magnitude (metric new, or baseline value 0 —
+    /// dividing by it would report ±inf/NaN, never a gateable number).
+    pub change: Option<f64>,
     pub direction: MetricDirection,
     /// Whether the change is a regression beyond the gate's threshold.
     pub regressed: bool,
 }
 
+impl MetricDiff {
+    /// A metric with no usable baseline — reported as "new", never
+    /// gated (next run, today's value *is* the baseline).
+    pub fn is_new(&self) -> bool {
+        self.change.is_none()
+    }
+}
+
 /// Compare two runs' bench files (matched by bench name) and flag
-/// regressions beyond `threshold` (e.g. `0.15` = 15%). Metrics present
-/// on only one side are skipped — adding or retiring a metric must not
-/// trip the gate.
+/// regressions beyond `threshold` (e.g. `0.15` = 15%). A metric with
+/// no usable baseline — missing from the old run, or recorded there as
+/// exactly 0 (a freshly-added counter, a feature that produced nothing
+/// last run) — is reported with `change: None` ("new") instead of
+/// dividing by it; retired metrics (old-only) are skipped, so adding
+/// or retiring a metric can never trip the gate.
 pub fn diff_benches(old: &[BenchFile], new: &[BenchFile], threshold: f64) -> Vec<MetricDiff> {
     let mut out = Vec::new();
     for n in new {
-        let Some(o) = old.iter().find(|o| o.bench == n.bench) else {
-            continue;
-        };
+        // A bench absent from the baseline run entirely (a just-added
+        // bench target) still surfaces every metric as "new".
+        let o = old.iter().find(|o| o.bench == n.bench);
         for (key, new_v) in &n.metrics {
-            let Some(old_v) = o.metric(key) else {
-                continue;
-            };
-            if old_v == 0.0 {
-                continue; // no baseline magnitude to compare against
-            }
-            let change = (new_v - old_v) / old_v;
             let direction = metric_direction(&n.bench, key);
-            let regressed = match direction {
-                MetricDirection::LowerIsBetter => change > threshold,
-                MetricDirection::HigherIsBetter => change < -threshold,
-                MetricDirection::Informational => false,
+            let old_v = o.and_then(|o| o.metric(key));
+            let change = match old_v {
+                Some(ov) if ov != 0.0 => Some((new_v - ov) / ov),
+                _ => None, // new or zero-valued baseline: nothing to divide by
+            };
+            let regressed = match (change, direction) {
+                (Some(c), MetricDirection::LowerIsBetter) => c > threshold,
+                (Some(c), MetricDirection::HigherIsBetter) => c < -threshold,
+                _ => false,
             };
             out.push(MetricDiff {
                 bench: n.bench.clone(),
@@ -440,14 +453,55 @@ mod tests {
         let diffs = diff_benches(&old, &new, 0.15);
         let regressed: Vec<&str> = diffs.iter().filter(|d| d.regressed).map(|d| d.key.as_str()).collect();
         assert_eq!(regressed, vec!["modeled_req_per_s_b8_w2", "conv"]);
-        // Informational counters and one-sided metrics never gate.
-        assert!(diffs.iter().all(|d| d.key != "brand_new_metric"));
+        // Informational counters never gate.
         let cmd = diffs.iter().find(|d| d.key == "command_loads_b8_w2").unwrap();
         assert!(!cmd.regressed);
+        // A metric with no baseline is reported as "new", never gated.
+        let fresh = diffs.iter().find(|d| d.key == "brand_new_metric").unwrap();
+        assert!(fresh.is_new() && fresh.old.is_none() && !fresh.regressed);
+        assert_eq!(fresh.new, 7.0);
         // Within-threshold moves pass.
         let ok = diff_benches(&old, &old, 0.15);
         assert!(ok.iter().all(|d| !d.regressed));
-        assert!((ok[0].change).abs() < 1e-12);
+        assert!(ok[0].change.unwrap().abs() < 1e-12);
+    }
+
+    #[test]
+    fn diff_guards_zero_and_missing_baselines() {
+        // A gated throughput metric whose baseline is exactly 0 (e.g. a
+        // counter landed one PR before its feature) must not divide by
+        // zero into ±inf/NaN or a spurious REGRESSED — it reports "new"
+        // with today's value, and gates normally the run after.
+        let old = vec![BenchFile {
+            bench: "serve_throughput".into(),
+            metrics: vec![("modeled_req_per_s_fc6".into(), 0.0), ("retired_metric".into(), 3.0)],
+        }];
+        let new = vec![BenchFile {
+            bench: "serve_throughput".into(),
+            metrics: vec![("modeled_req_per_s_fc6".into(), 42.0)],
+        }];
+        let diffs = diff_benches(&old, &new, 0.15);
+        assert_eq!(diffs.len(), 1);
+        let d = &diffs[0];
+        assert_eq!((d.old, d.new), (Some(0.0), 42.0));
+        assert!(d.is_new() && d.change.is_none() && !d.regressed);
+        assert_eq!(d.direction, MetricDirection::HigherIsBetter);
+        // Retired (old-only) metrics are skipped entirely.
+        assert!(diffs.iter().all(|d| d.key != "retired_metric"));
+        // Zero → zero likewise stays ungated.
+        let same = diff_benches(&old, &old, 0.15);
+        assert!(same.iter().all(|d| !d.regressed));
+
+        // A bench file with NO baseline counterpart (a just-added bench
+        // target) surfaces every metric as "new" instead of vanishing.
+        let fresh_bench = vec![BenchFile {
+            bench: "compile_latency".into(),
+            metrics: vec![("median_ns".into(), 123.0)],
+        }];
+        let diffs = diff_benches(&old, &fresh_bench, 0.15);
+        assert_eq!(diffs.len(), 1);
+        assert!(diffs[0].is_new() && diffs[0].old.is_none() && !diffs[0].regressed);
+        assert_eq!((diffs[0].key.as_str(), diffs[0].new), ("median_ns", 123.0));
     }
 
     #[test]

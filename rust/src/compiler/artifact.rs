@@ -13,10 +13,11 @@
 use anyhow::Result;
 
 use crate::engine::csb::{CMD_BURST_LEN, CMDFIFO_DEPTH, MAX_LAYERS};
-use crate::host::gemm::WeightPlan;
+use crate::host::gemm::{ConvGranularity, WeightPlan};
 use crate::net::graph::{Network, Node};
 use crate::net::layer::LayerSpec;
 
+use super::layout;
 use super::passes::{self, PassReport};
 
 /// FNV-1a 64-bit over a byte stream — the artifact fingerprint hash.
@@ -161,6 +162,11 @@ pub struct CompiledStream {
     /// per conv super-block when the whole net fits; empty otherwise).
     /// Computed once here so the per-request drivers never rebuild it.
     pub weight_plan: WeightPlan,
+    /// GEMM slicing granularity per engine layer (the compile-time
+    /// layout pass, [`super::layout::plan_granularities`]): `None` for
+    /// pool/idle layers. The compiled drivers read this instead of
+    /// re-deriving the layout on every forward.
+    pub granularities: Vec<Option<ConvGranularity>>,
 }
 
 impl CompiledStream {
@@ -201,7 +207,17 @@ pub fn compile(net: &Network, weights_id: u64) -> Result<CompiledStream> {
     let epochs = schedule_epochs(optimized.engine_layers().len());
     let id = format!("{:016x}", combine(graph_fingerprint(&optimized), weights_id));
     let weight_plan = WeightPlan::plan(&id, &optimized.engine_layers());
-    Ok(CompiledStream { id, net: optimized, weights_id, source_fingerprint, epochs, report, weight_plan })
+    let granularities = layout::plan_granularities(&optimized);
+    Ok(CompiledStream {
+        id,
+        net: optimized,
+        weights_id,
+        source_fingerprint,
+        epochs,
+        report,
+        weight_plan,
+        granularities,
+    })
 }
 
 #[cfg(test)]

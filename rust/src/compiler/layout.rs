@@ -1,0 +1,71 @@
+//! Compile-time GEMM layout pass: pick each conv layer's slicing
+//! granularity (row / pixel / channel-split) once, when the stream is
+//! built, instead of per forward.
+//!
+//! The decision is a pure function of the layer command — kernel,
+//! padded input width, lane-padded input channels — so it belongs on
+//! the artifact next to the epoch schedule and the weight plan: the
+//! serving hot path (`forward_compiled`, `forward_batch_compiled`)
+//! reads [`crate::compiler::CompiledStream::granularities`] and never
+//! re-derives it. The uncompiled classic flow still computes it on the
+//! fly ([`crate::host::gemm::conv_granularity`] — the same function, so
+//! both flows always agree).
+
+use crate::host::gemm::{self, ConvGranularity};
+use crate::net::graph::Network;
+use crate::net::layer::OpType;
+
+/// Granularity per engine layer (indexed like `net.engine_layers()`);
+/// `None` for pool/idle layers, which have no GEMM layout to pick.
+pub fn plan_granularities(net: &Network) -> Vec<Option<ConvGranularity>> {
+    net.engine_layers()
+        .iter()
+        .map(|spec| {
+            (spec.op == OpType::ConvRelu).then(|| {
+                let icp = (spec.i_ch as usize).div_ceil(8) * 8;
+                let pw = (spec.i_side + 2 * spec.padding) as usize;
+                gemm::conv_granularity(spec.kernel as usize, pw, icp)
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::alexnet::alexnet;
+    use crate::net::squeezenet::squeezenet_v11;
+
+    #[test]
+    fn alexnet_layers_span_all_three_granularities() {
+        let net = alexnet();
+        let layers = net.engine_layers();
+        let plan = plan_granularities(&net);
+        assert_eq!(plan.len(), layers.len());
+        let by_name = |name: &str| {
+            let i = layers.iter().position(|s| s.name == name).unwrap();
+            plan[i]
+        };
+        // conv1 11×11: row slice 19976 > cache, pixel 968 fits.
+        assert_eq!(by_name("conv1"), Some(ConvGranularity::Pixel));
+        // conv3 3×3 over 256 ch at 13+2: row 3·15·256 = 11520 > cache.
+        assert_eq!(by_name("conv3"), Some(ConvGranularity::Pixel));
+        // fc6 6×6 over 256 ch: one window is 1152 words — channel split.
+        assert_eq!(by_name("fc6"), Some(ConvGranularity::ChannelSplit));
+        // fc7/fc8 1×1 over 512: row fits (1·1·512 = 512).
+        assert_eq!(by_name("fc7"), Some(ConvGranularity::Row));
+        // Pool layers have no conv layout.
+        assert_eq!(by_name("pool1"), None);
+    }
+
+    #[test]
+    fn squeezenet_is_all_row() {
+        let net = squeezenet_v11();
+        for (spec, g) in net.engine_layers().iter().zip(plan_granularities(&net)) {
+            match g {
+                Some(g) => assert_eq!(g, ConvGranularity::Row, "{}", spec.name),
+                None => assert_ne!(spec.op, OpType::ConvRelu),
+            }
+        }
+    }
+}

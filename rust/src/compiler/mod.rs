@@ -32,10 +32,12 @@
 
 pub mod artifact;
 pub mod cache;
+pub mod layout;
 pub mod passes;
 pub mod registry;
 
 pub use artifact::{compile, fnv1a, graph_fingerprint, CompiledStream, EpochPlan};
 pub use cache::LruCache;
+pub use layout::plan_granularities;
 pub use passes::{run_pipeline, PassReport};
 pub use registry::{ArtifactRegistry, ModelRepo, ServableModel};

@@ -36,6 +36,15 @@ impl BatchPolicy {
     }
 }
 
+/// Most consecutive same-network batches affinity may take while
+/// other-network work waits: once a worker reports a streak this long,
+/// [`next_batch_preferring`] ignores the preference and takes the queue
+/// head (the oldest — i.e. most-bypassed — request), so sustained
+/// one-network traffic can no longer starve the others indefinitely.
+/// Eight batches keeps the shadow-reuse win on the common grouped
+/// arrival while bounding any request's bypass count.
+pub const MAX_AFFINITY_STREAK: usize = 8;
+
 /// Assemble the next micro-batch, or `None` when the queue is closed
 /// and drained (worker shutdown).
 ///
@@ -47,7 +56,7 @@ impl BatchPolicy {
 /// immediately instead of sitting out the straggler window: holding it
 /// would delay both this batch and the queued network switch.
 pub fn next_batch(sched: &Scheduler, policy: &BatchPolicy) -> Option<Vec<QueuedRequest>> {
-    next_batch_preferring(sched, policy, None)
+    next_batch_preferring(sched, policy, None, 0)
 }
 
 /// [`next_batch`] with **network affinity**: when `prefer` names the
@@ -58,12 +67,22 @@ pub fn next_batch(sched: &Scheduler, policy: &BatchPolicy) -> Option<Vec<QueuedR
 /// plain FIFO when no preferred request is queued, so a network switch
 /// still happens as soon as only other-network work remains; within a
 /// network requests are still served oldest-first.
+///
+/// `streak` is how many consecutive batches the caller has already
+/// served on the preferred network: at [`MAX_AFFINITY_STREAK`] the
+/// preference is dropped for one pop and the queue head is taken
+/// instead — the aging escape hatch that keeps a long-lived service
+/// from starving other-network requests under sustained one-network
+/// load. (If the head happens to be the preferred network anyway, no
+/// one was waiting and the streak simply continues.)
 pub fn next_batch_preferring(
     sched: &Scheduler,
     policy: &BatchPolicy,
     prefer: Option<&str>,
+    streak: usize,
 ) -> Option<Vec<QueuedRequest>> {
     assert!(policy.max_batch >= 1, "max_batch must be at least 1");
+    let prefer = if streak >= MAX_AFFINITY_STREAK { None } else { prefer };
     let first = match prefer {
         Some(name) => match sched.try_pop_matching(Some(name)) {
             Pop::Item(q) => q,
@@ -202,14 +221,57 @@ mod tests {
         let policy = BatchPolicy { max_batch: 8, batch_timeout: Duration::from_secs(5) };
         // Affinity: the worker that just served "a" keeps serving "a"
         // even though "b" is at the head of the queue.
-        let first = next_batch_preferring(&s, &policy, Some("a")).unwrap();
+        let first = next_batch_preferring(&s, &policy, Some("a"), 0).unwrap();
         let ids: Vec<u64> = first.iter().map(|q| q.request.id).collect();
         assert_eq!(ids, vec![1, 3]);
         // No "a" left: falls back to FIFO and switches to "b".
-        let second = next_batch_preferring(&s, &policy, Some("a")).unwrap();
+        let second = next_batch_preferring(&s, &policy, Some("a"), 1).unwrap();
         let ids: Vec<u64> = second.iter().map(|q| q.request.id).collect();
         assert_eq!(ids, vec![0, 2]);
-        assert!(next_batch_preferring(&s, &policy, Some("a")).is_none());
+        assert!(next_batch_preferring(&s, &policy, Some("a"), 2).is_none());
+    }
+
+    #[test]
+    fn affinity_streak_cap_prevents_starvation() {
+        // Sustained "a" traffic with one "b" request waiting mid-queue:
+        // pure affinity would keep popping "a" forever (ROADMAP's
+        // starvation hazard). With the streak cap, the worker loop's
+        // counter forces a FIFO pop at MAX_AFFINITY_STREAK and the
+        // waiting "b" — by then the queue head — is served even though
+        // "a" work remains.
+        let s = Scheduler::new();
+        for id in 0..4u64 {
+            s.push(InferenceRequest::new(id, Tensor::zeros(1, 1, 1)).for_network("a"));
+        }
+        s.push(InferenceRequest::new(99, Tensor::zeros(1, 1, 1)).for_network("b"));
+        for id in 5..30u64 {
+            s.push(InferenceRequest::new(id, Tensor::zeros(1, 1, 1)).for_network("a"));
+        }
+        s.close();
+        let policy = BatchPolicy { max_batch: 1, batch_timeout: Duration::ZERO };
+        // Worker-loop replica: prefer the last-served network, count the
+        // streak, reset it on a switch.
+        let mut last: Option<String> = None;
+        let mut streak = 0usize;
+        let mut served = Vec::new();
+        while let Some(batch) = next_batch_preferring(&s, &policy, last.as_deref(), streak) {
+            let network = batch[0].request.network.clone();
+            if network == last {
+                streak += 1;
+            } else {
+                streak = 1;
+                last = network;
+            }
+            served.push(batch[0].request.id);
+        }
+        assert_eq!(served.len(), 30);
+        let b_pos = served.iter().position(|&id| id == 99).unwrap();
+        assert_eq!(
+            b_pos, MAX_AFFINITY_STREAK,
+            "the waiting \"b\" request must be served right at the cap, got order {served:?}"
+        );
+        // …and affinity resumes afterwards: the rest are all "a".
+        assert!(served[b_pos + 1..].iter().all(|&id| id != 99));
     }
 
     #[test]

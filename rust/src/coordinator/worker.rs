@@ -129,11 +129,21 @@ pub(crate) fn run_worker(
     let mut dev = StreamAccelerator::new(link);
     // Network affinity: keep draining the network this device served
     // last, so its command + weight shadows stay hot and consecutive
-    // same-artifact batches skip both transfers; switch only when no
-    // same-network request is queued.
+    // same-artifact batches skip both transfers; switch when no
+    // same-network request is queued — or when the streak hits the
+    // aging cap (`batcher::MAX_AFFINITY_STREAK`), so sustained
+    // one-network traffic cannot starve queued other-network requests.
     let mut last_network: Option<String> = None;
-    while let Some(batch) = batcher::next_batch_preferring(sched, policy, last_network.as_deref()) {
-        last_network = batch[0].request.network.clone();
+    let mut streak = 0usize;
+    while let Some(batch) = batcher::next_batch_preferring(sched, policy, last_network.as_deref(), streak)
+    {
+        let network = batch[0].request.network.clone();
+        if network == last_network {
+            streak += 1;
+        } else {
+            streak = 1;
+            last_network = network;
+        }
         if !run_batch(&mut dev, &mut ctx, &batch) {
             return; // coordinator went away
         }

@@ -129,7 +129,12 @@ fn forward_batch_inner(
                 let reg = dev.load_layer().with_context(|| format!("CSB empty at {}", spec.name))?;
                 ensure!(reg.encode() == spec.encode(), "layer register mismatch at {}", spec.name);
                 match spec.op {
-                    OpType::ConvRelu => conv_batch(dev, spec, eidx, plan, blobs, *input, &mut acts)?,
+                    OpType::ConvRelu => {
+                        // Compiled streams carry the layout pass's verdict.
+                        let gran =
+                            stream.and_then(|cs| cs.granularities.get(eidx).copied().flatten());
+                        conv_batch(dev, spec, eidx, plan, gran, blobs, *input, &mut acts)?
+                    }
                     OpType::MaxPool | OpType::AvgPool => pool_batch(dev, spec, *input, &mut acts)?,
                     OpType::Idle => {
                         for a in acts.iter_mut() {
@@ -213,14 +218,17 @@ fn drain_conv(
 /// Conv layer over the batch: weights cross the link once per
 /// super-block (or **zero** times when still resident from a previous
 /// batch of the same artifact); per output row — or per output pixel
-/// for large-kernel layers whose row slices exceed the data cache —
-/// the slices of a whole image group cross in one transfer and are
-/// swept via `data_base`.
+/// for large-kernel layers whose row slices exceed the data cache, or
+/// per (pixel, channel chunk) for fc6-class windows bigger than the
+/// cache itself — the slices of a whole image group cross in one
+/// transfer and are swept via `data_base`.
+#[allow(clippy::too_many_arguments)]
 fn conv_batch(
     dev: &mut StreamAccelerator,
     spec: &LayerSpec,
     eidx: usize,
     plan: Option<&gemm::WeightPlan>,
+    gran: Option<gemm::ConvGranularity>,
     blobs: &Blobs,
     input_node: usize,
     acts: &mut [Vec<TensorF16>],
@@ -242,21 +250,27 @@ fn conv_batch(
     let layout = gemm::conv_layout(k, spec.i_ch as usize, spec.o_ch as usize);
     let per_oc_values = layout.per_oc_values;
     let oc_pass = layout.oc_pass;
-    let granularity = gemm::conv_granularity(k, pw, icp);
+    // Compiled hot path: granularity comes off the artifact.
+    let granularity = gran.unwrap_or_else(|| gemm::conv_granularity(k, pw, icp));
+    let chunks = (granularity == gemm::ConvGranularity::ChannelSplit)
+        .then(|| gemm::channel_chunks(k, icp));
 
     // Image-group size: as many slices as fit the data cache — row
     // slices (k input rows, full width) when they fit, otherwise
     // per-pixel k×k patch slices (AlexNet/GoogLeNet-class kernels).
+    // Channel-split layers size their groups per chunk below.
     let slice_words = match granularity {
         gemm::ConvGranularity::Row => k * pw * icp / 8,
-        gemm::ConvGranularity::Pixel => k * k * icp / 8,
+        gemm::ConvGranularity::Pixel | gemm::ConvGranularity::ChannelSplit => k * k * icp / 8,
     };
     ensure!(
-        slice_words <= DATA_CACHE_WORDS,
+        granularity == gemm::ConvGranularity::ChannelSplit || slice_words <= DATA_CACHE_WORDS,
         "{}: a single {} slice ({slice_words} words) exceeds the data cache",
         spec.name,
         if granularity == gemm::ConvGranularity::Row { "row" } else { "pixel" }
     );
+    // ChannelSplit slices exceed the cache (quotient 0 → clamped to 1);
+    // that arm sizes its own per-chunk image groups below.
     let imgs_per_load = (DATA_CACHE_WORDS / slice_words).clamp(1, acts.len());
 
     let mut outs: Vec<TensorF16> =
@@ -270,7 +284,8 @@ fn conv_batch(
         // and none at all (not even the host-side gather) when the
         // planned block survived the previous batch (the device shadow
         // keys it by artifact content).
-        let (wbase, bbase) = load_conv_superblock(dev, plan, eidx, block, &wf, oc0, resident)?;
+        let (wbase, bbase) =
+            load_conv_superblock(dev, plan, eidx, block, &wf, oc0, resident, chunks.as_ref())?;
         match granularity {
             gemm::ConvGranularity::Row => {
                 for y in 0..o {
@@ -384,6 +399,112 @@ fn conv_batch(
                     }
                 }
             }
+            gemm::ConvGranularity::ChannelSplit => {
+                // fc6-class fallback: even one k×k window exceeds the
+                // data cache, so each output pixel runs as a sequence of
+                // channel-group chunks. Per chunk, the chunk slices of a
+                // whole image group still ride one `data_base`-swept
+                // transfer; per (image, oc-pass), chunk c+1 continues
+                // the engine's fsum fold by re-entering chunk c's
+                // drained partial through the bias port, and only the
+                // final chunk applies bias-complete activation — so the
+                // batch stays bit-identical to B single forwards.
+                let cc = chunks.as_ref().unwrap();
+                ensure!(
+                    k * k <= DATA_CACHE_WORDS,
+                    "{}: a single {k}×{k} window exceeds the data cache",
+                    spec.name
+                );
+                let mut partials: Vec<Vec<F16>> = vec![vec![F16::ZERO; resident]; padded.len()];
+                let mut split_pending: Vec<PendingSplit> = Vec::new();
+                for y in 0..o {
+                    for x in 0..o {
+                        for p in partials.iter_mut() {
+                            p.fill(F16::ZERO);
+                        }
+                        for c in 0..cc.count {
+                            let (g0, gn) = cc.chunk(c);
+                            let last = c + 1 == cc.count;
+                            let cw = cc.slice_words(c);
+                            let imgs_per_chunk_load =
+                                (DATA_CACHE_WORDS / cw).clamp(1, padded.len());
+                            for (chunk_i, group) in padded.chunks(imgs_per_chunk_load).enumerate() {
+                                let img0 = chunk_i * imgs_per_chunk_load;
+                                let mut slab: Vec<F16> = Vec::with_capacity(group.len() * cw * 8);
+                                for p in group {
+                                    slab.extend(gemm::conv_pixel_slice_groups(
+                                        p,
+                                        y * s,
+                                        x * s,
+                                        k,
+                                        g0,
+                                        gn,
+                                    ));
+                                }
+                                dev.load_data(&slab)?;
+                                for ci in 0..group.len() {
+                                    let img = img0 + ci;
+                                    let mut oc_local = 0usize;
+                                    while oc_local < resident {
+                                        let n_oc = oc_pass.min(resident - oc_local);
+                                        if dev.res_fifo.space() < n_oc {
+                                            drain_split(
+                                                dev,
+                                                &mut split_pending,
+                                                &mut partials,
+                                                &mut outs,
+                                                (y, x, oc0),
+                                            )?;
+                                        }
+                                        let bias_base = if c == 0 {
+                                            bbase + oc_local
+                                        } else {
+                                            dev.load_bias_at(
+                                                gemm::PARTIAL_BIAS_BASE,
+                                                &partials[img][oc_local..oc_local + n_oc],
+                                            )?;
+                                            gemm::PARTIAL_BIAS_BASE
+                                        };
+                                        let task = SliceTask {
+                                            op: OpType::ConvRelu,
+                                            k,
+                                            stride: s,
+                                            out_cols: 1,
+                                            groups: gn,
+                                            oc_count: n_oc,
+                                            data_width: k,
+                                            data_rows: k,
+                                            pixel_mode: true,
+                                            kernel_size_reg: spec.kernel_size(),
+                                            skip_relu: if last { spec.skip_relu } else { true },
+                                            weight_base: wbase
+                                                + cc.weight_base(resident, c)
+                                                + oc_local * cc.oc_pitch(c),
+                                            bias_base,
+                                            pool_pad: 0,
+                                            data_base: ci * cw,
+                                        };
+                                        let n = dev.restart_engine(&task)?;
+                                        ensure!(n == n_oc, "{}: pass produced {n}", spec.name);
+                                        split_pending.push(PendingSplit {
+                                            img,
+                                            oc_local,
+                                            count: n,
+                                            last,
+                                        });
+                                        oc_local += n_oc;
+                                    }
+                                }
+                            }
+                            // Chunk barrier: the next chunk's passes read
+                            // these partials back through the bias port,
+                            // so each chunk drains before the next starts
+                            // (one PipeOut per image group per chunk).
+                            drain_split(dev, &mut split_pending, &mut partials, &mut outs, (y, x, oc0))?;
+                        }
+                    }
+                }
+            }
         }
         oc0 += resident;
         block += 1;
@@ -394,11 +515,55 @@ fn conv_batch(
     Ok(())
 }
 
-/// A pooling pass awaiting drain: one 8-lane group of `img` at row `y`.
+/// A channel-split engine pass awaiting drain: `count` partial (or, for
+/// the last chunk, final) values of `img`'s output channels
+/// `oc_local ..` at the pixel currently in flight.
+struct PendingSplit {
+    img: usize,
+    oc_local: usize,
+    count: usize,
+    last: bool,
+}
+
+/// Drain pending channel-split passes in one WireOut + PipeOut:
+/// intermediate chunks scatter into the per-image partial-sum buffers
+/// (they re-enter the engine as the next chunk's bias), the final chunk
+/// into the output tensors at pixel `(y, x)` / channel base `oc0`.
+fn drain_split(
+    dev: &mut StreamAccelerator,
+    pending: &mut Vec<PendingSplit>,
+    partials: &mut [Vec<F16>],
+    outs: &mut [TensorF16],
+    (y, x, oc0): (usize, usize, usize),
+) -> Result<()> {
+    let total: usize = pending.iter().map(|p| p.count).sum();
+    if total == 0 {
+        return Ok(());
+    }
+    let res = dev.read_results(total)?;
+    let mut off = 0usize;
+    for p in pending.drain(..) {
+        for j in 0..p.count {
+            if p.last {
+                outs[p.img].set(y, x, oc0 + p.oc_local + j, res[off + j]);
+            } else {
+                partials[p.img][p.oc_local + j] = res[off + j];
+            }
+        }
+        off += p.count;
+    }
+    Ok(())
+}
+
+/// A pooling pass awaiting drain: one 8-lane group of `img` at row `y`,
+/// output columns `x0 .. x0+cols` (a full row for narrow pools, one
+/// column chunk for wide ones).
 struct PendingPool {
     img: usize,
     y: usize,
     g: usize,
+    x0: usize,
+    cols: usize,
     count: usize,
 }
 
@@ -406,7 +571,6 @@ fn drain_pool(
     dev: &mut StreamAccelerator,
     pending: &mut Vec<PendingPool>,
     outs: &mut [TensorF16],
-    o: usize,
 ) -> Result<()> {
     let total: usize = pending.iter().map(|p| p.count).sum();
     if total == 0 {
@@ -416,11 +580,11 @@ fn drain_pool(
     let mut off = 0usize;
     for p in pending.drain(..) {
         let c_total = outs[p.img].c;
-        for x in 0..o {
+        for x in 0..p.cols {
             for l in 0..8 {
                 let c = p.g * 8 + l;
                 if c < c_total {
-                    outs[p.img].set(p.y, x, c, res[off + x * 8 + l]);
+                    outs[p.img].set(p.y, p.x0 + x, c, res[off + x * 8 + l]);
                 }
             }
         }
@@ -430,7 +594,9 @@ fn drain_pool(
 }
 
 /// Pooling has no weights to amortize, but the data slices of a whole
-/// image group still cross the link in one transfer per (group, row).
+/// image group still cross the link in one transfer per (group, row) —
+/// or per (group, row, column chunk) for wide pools whose full-width
+/// rows exceed the data cache (see [`gemm::pool_col_chunks`]).
 fn pool_batch(
     dev: &mut StreamAccelerator,
     spec: &LayerSpec,
@@ -444,6 +610,12 @@ fn pool_batch(
     let inputs: Vec<&TensorF16> = acts.iter().map(|a| &a[input_node]).collect();
     let (ih, ic) = (inputs[0].h, inputs[0].c);
     let groups = ic.div_ceil(8);
+    ensure!(
+        k * k <= DATA_CACHE_WORDS,
+        "{}: a single {k}×{k} pool window exceeds the data cache",
+        spec.name
+    );
+    let col_chunks = gemm::pool_col_chunks(k, s, pad, ih, o);
 
     let mut outs: Vec<TensorF16> = (0..acts.len()).map(|_| Tensor::zeros(o, o, ic)).collect();
     let mut pending: Vec<PendingPool> = Vec::new();
@@ -451,42 +623,51 @@ fn pool_batch(
         for y in 0..o {
             let y0 = (y * s).saturating_sub(pad);
             let rows = (y * s + k - pad).min(ih) - y0;
-            let slice_words = rows * ih;
-            let imgs_per_load = (DATA_CACHE_WORDS / slice_words).clamp(1, acts.len());
-            for (chunk_i, chunk) in inputs.chunks(imgs_per_load).enumerate() {
-                let img0 = chunk_i * imgs_per_load;
-                let mut slab: Vec<F16> = Vec::with_capacity(chunk.len() * slice_words * 8);
-                for &input in chunk {
-                    slab.extend(gemm::pool_slice(input, y0, rows, g));
-                }
-                dev.load_data(&slab)?;
-                for ci in 0..chunk.len() {
-                    let n_results = o * 8;
-                    if dev.res_fifo.space() < n_results {
-                        drain_pool(dev, &mut pending, &mut outs, o)?;
+            for cchunk in &col_chunks {
+                let slice_words = rows * cchunk.width;
+                let imgs_per_load = (DATA_CACHE_WORDS / slice_words).clamp(1, acts.len());
+                for (chunk_i, chunk) in inputs.chunks(imgs_per_load).enumerate() {
+                    let img0 = chunk_i * imgs_per_load;
+                    let mut slab: Vec<F16> = Vec::with_capacity(chunk.len() * slice_words * 8);
+                    for &input in chunk {
+                        slab.extend(gemm::pool_slice_cols(input, y0, rows, g, cchunk.c0, cchunk.width));
                     }
-                    let task = SliceTask {
-                        op: spec.op,
-                        k,
-                        stride: s,
-                        out_cols: o,
-                        groups: 1,
-                        oc_count: 8,
-                        data_width: ih,
-                        data_rows: rows,
-                        pixel_mode: false,
-                        kernel_size_reg: spec.kernel_size(),
-                        skip_relu: spec.skip_relu,
-                        weight_base: 0,
-                        bias_base: 0,
-                        pool_pad: pad,
-                        data_base: ci * slice_words,
-                    };
-                    let n = dev.restart_engine(&task)?;
-                    ensure!(n == n_results, "{}: pass produced {n}", spec.name);
-                    pending.push(PendingPool { img: img0 + ci, y, g, count: n });
+                    dev.load_data(&slab)?;
+                    for ci in 0..chunk.len() {
+                        let n_results = cchunk.cols * 8;
+                        if dev.res_fifo.space() < n_results {
+                            drain_pool(dev, &mut pending, &mut outs)?;
+                        }
+                        let task = SliceTask {
+                            op: spec.op,
+                            k,
+                            stride: s,
+                            out_cols: cchunk.cols,
+                            groups: 1,
+                            oc_count: 8,
+                            data_width: cchunk.width,
+                            data_rows: rows,
+                            pixel_mode: false,
+                            kernel_size_reg: spec.kernel_size(),
+                            skip_relu: spec.skip_relu,
+                            weight_base: 0,
+                            bias_base: 0,
+                            pool_pad: cchunk.pad,
+                            data_base: ci * slice_words,
+                        };
+                        let n = dev.restart_engine(&task)?;
+                        ensure!(n == n_results, "{}: pass produced {n}", spec.name);
+                        pending.push(PendingPool {
+                            img: img0 + ci,
+                            y,
+                            g,
+                            x0: cchunk.x0,
+                            cols: cchunk.cols,
+                            count: n,
+                        });
+                    }
+                    drain_pool(dev, &mut pending, &mut outs)?;
                 }
-                drain_pool(dev, &mut pending, &mut outs, o)?;
             }
         }
     }
@@ -641,6 +822,55 @@ mod tests {
         let imgs: Vec<TensorF32> = (0..4)
             .map(|_| {
                 Tensor::from_vec(47, 47, 16, (0..47 * 47 * 16).map(|_| rng.normal(1.0)).collect())
+            })
+            .collect();
+        assert_batch_matches_sequential(&n, &blobs, &imgs);
+    }
+
+    #[test]
+    fn channel_split_batch_is_bit_identical() {
+        // The fc6 shape (6×6 window over 256 ch = 1152 words > the data
+        // cache) that used to bail in the batched driver: channel-split
+        // chunks with bias-port partial re-entry must stay bit-identical
+        // to sequential single-image forwards at several batch sizes.
+        let mut n = Network::new("fc6_batch");
+        let inp = n.input(6, 256);
+        let c1 = n.engine(LayerSpec::conv("fc6", 6, 1, 0, 6, 256, 10, 0), inp); // 1×1×10
+        let c2 = n.engine(LayerSpec::conv("fc7", 1, 1, 0, 1, 10, 12, 0), c1);
+        n.softmax("prob", c2);
+        assert_eq!(gemm::conv_granularity(6, 6, 256), gemm::ConvGranularity::ChannelSplit);
+        let blobs = synthesize_weights(&n, 0xFC6B);
+        let mut rng = Rng::new(0xFC6C);
+        for b in [2usize, 4] {
+            let imgs: Vec<TensorF32> = (0..b)
+                .map(|_| {
+                    Tensor::from_vec(6, 6, 256, (0..6 * 6 * 256).map(|_| rng.normal(1.0)).collect())
+                })
+                .collect();
+            assert_batch_matches_sequential(&n, &blobs, &imgs);
+        }
+    }
+
+    #[test]
+    fn wide_pool_batch_splits_columns_bit_identically() {
+        // 5·205 = 1025 words: one word past the data cache, so the
+        // batched pool must column-chunk (it used to overflow the cache
+        // load) and still match sequential serving bit for bit.
+        let mut n = Network::new("widepool_batch");
+        let inp = n.input(205, 8);
+        let p1 = n.engine(LayerSpec::maxpool("widemax", 5, 5, 205, 8), inp); // 41
+        let p2 = n.engine(LayerSpec::avgpool("wideavg", 6, 6, 41, 8), p1); // 6
+        n.softmax("prob", p2);
+        let blobs = synthesize_weights(&n, 0x1DE);
+        let mut rng = Rng::new(0x1DF);
+        let imgs: Vec<TensorF32> = (0..2)
+            .map(|_| {
+                Tensor::from_vec(
+                    205,
+                    205,
+                    8,
+                    (0..205 * 205 * 8).map(|_| rng.normal(1.0)).collect(),
+                )
             })
             .collect();
         assert_batch_matches_sequential(&n, &blobs, &imgs);

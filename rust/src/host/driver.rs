@@ -8,7 +8,7 @@
 //! engine, and reads back results; concat / softmax / argsort run on the
 //! host exactly as in the paper (§4.1, §5).
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::collections::HashMap;
 
 use crate::accel::stream::{SliceTask, StreamAccelerator};
@@ -149,7 +149,14 @@ impl<'d> HostDriver<'d> {
                     ensure!(reg.encode() == spec.encode(), "layer register mismatch at {}", spec.name);
                     let inp = &outputs[*input];
                     match spec.op {
-                        OpType::ConvRelu => self.run_conv(spec, eidx, plan, inp, blobs, &mut phases)?,
+                        OpType::ConvRelu => {
+                            // Compiled streams carry the layout pass's
+                            // verdict; the classic flow derives it on
+                            // the fly inside run_conv.
+                            let gran =
+                                stream.and_then(|cs| cs.granularities.get(eidx).copied().flatten());
+                            self.run_conv(spec, eidx, plan, gran, inp, blobs, &mut phases)?
+                        }
                         OpType::MaxPool | OpType::AvgPool => self.run_pool(spec, inp, &mut phases)?,
                         OpType::Idle => inp.clone(),
                     }
@@ -183,12 +190,15 @@ impl<'d> HostDriver<'d> {
         })
     }
 
-    /// One convolution layer: weight super-blocks → row/pixel GEMM slices.
+    /// One convolution layer: weight super-blocks → row/pixel/channel-
+    /// split GEMM slices.
+    #[allow(clippy::too_many_arguments)]
     fn run_conv(
         &mut self,
         spec: &LayerSpec,
         eidx: usize,
         plan: Option<&gemm::WeightPlan>,
+        gran: Option<gemm::ConvGranularity>,
         input: &TensorF16,
         blobs: &Blobs,
         phases: &mut PhaseTimes,
@@ -209,7 +219,10 @@ impl<'d> HostDriver<'d> {
         let layout = gemm::conv_layout(k, spec.i_ch as usize, spec.o_ch as usize);
         let per_oc_values = layout.per_oc_values;
         let oc_pass = layout.oc_pass; // ≤ 8 per engine pass
-        let granularity = gemm::conv_granularity(k, pw, icp);
+        // Compiled hot path: granularity comes off the artifact.
+        let granularity = gran.unwrap_or_else(|| gemm::conv_granularity(k, pw, icp));
+        let chunks = (granularity == gemm::ConvGranularity::ChannelSplit)
+            .then(|| gemm::channel_chunks(k, icp));
 
         let mut out = Tensor::zeros(o, o, spec.o_ch as usize);
         let mut oc0 = 0usize;
@@ -220,7 +233,8 @@ impl<'d> HostDriver<'d> {
             // plan the block has a fixed home and may still be resident
             // from a previous forward of the same artifact.
             let t0 = self.dev.usb.total_seconds();
-            let (wbase, bbase) = load_conv_superblock(self.dev, plan, eidx, block, &wf, oc0, resident)?;
+            let (wbase, bbase) =
+                load_conv_superblock(self.dev, plan, eidx, block, &wf, oc0, resident, chunks.as_ref())?;
             phases.add("load_weights", self.dev.usb.total_seconds() - t0);
 
             match granularity {
@@ -300,6 +314,93 @@ impl<'d> HostDriver<'d> {
                         }
                     }
                 }
+                gemm::ConvGranularity::ChannelSplit => {
+                    // Giant-kernel fallback (fc6-class layers): even one
+                    // k×k window exceeds the data cache, so the window
+                    // is split into channel-group chunks. Chunk 0 runs
+                    // with the real bias; each later chunk continues the
+                    // engine's fsum fold by re-entering the previous
+                    // partial through the bias port (PARTIAL_BIAS_BASE),
+                    // and only the final chunk applies the activation —
+                    // so every output bit matches the unsplit fold.
+                    let cc = chunks.as_ref().unwrap();
+                    ensure!(
+                        k * k <= crate::accel::stream::DATA_CACHE_WORDS,
+                        "{}: a single {k}×{k} window exceeds the data cache",
+                        spec.name
+                    );
+                    let mut partial = vec![crate::fp16::F16::ZERO; resident];
+                    for y in 0..o {
+                        for x in 0..o {
+                            partial.fill(crate::fp16::F16::ZERO);
+                            for c in 0..cc.count {
+                                let (g0, gn) = cc.chunk(c);
+                                let last = c + 1 == cc.count;
+                                let t0 = self.dev.usb.total_seconds();
+                                self.dev.load_data(&gemm::conv_pixel_slice_groups(
+                                    &padded,
+                                    y * s,
+                                    x * s,
+                                    k,
+                                    g0,
+                                    gn,
+                                ))?;
+                                phases.add("load_gemm", self.dev.usb.total_seconds() - t0);
+                                let mut oc_local = 0usize;
+                                while oc_local < resident {
+                                    let n_oc = oc_pass.min(resident - oc_local);
+                                    let bias_base = if c == 0 {
+                                        bbase + oc_local
+                                    } else {
+                                        // Timed apart from "load_weights":
+                                        // partial re-entry is per-pixel
+                                        // data movement, not weight
+                                        // traffic, and never amortizes
+                                        // with residency.
+                                        let t0 = self.dev.usb.total_seconds();
+                                        self.dev.load_bias_at(
+                                            gemm::PARTIAL_BIAS_BASE,
+                                            &partial[oc_local..oc_local + n_oc],
+                                        )?;
+                                        phases.add("load_partials", self.dev.usb.total_seconds() - t0);
+                                        gemm::PARTIAL_BIAS_BASE
+                                    };
+                                    let task = SliceTask {
+                                        op: OpType::ConvRelu,
+                                        k,
+                                        stride: s,
+                                        out_cols: 1,
+                                        groups: gn,
+                                        oc_count: n_oc,
+                                        data_width: k,
+                                        data_rows: k,
+                                        pixel_mode: true,
+                                        kernel_size_reg: spec.kernel_size(),
+                                        skip_relu: if last { spec.skip_relu } else { true },
+                                        weight_base: wbase
+                                            + cc.weight_base(resident, c)
+                                            + oc_local * cc.oc_pitch(c),
+                                        bias_base,
+                                        pool_pad: 0,
+                                        data_base: 0,
+                                    };
+                                    let n = self.dev.restart_engine(&task)?;
+                                    let t0 = self.dev.usb.total_seconds();
+                                    let res = self.dev.read_results(n)?;
+                                    phases.add("read_output", self.dev.usb.total_seconds() - t0);
+                                    for (j, v) in res.iter().enumerate() {
+                                        if last {
+                                            out.set(y, x, oc0 + oc_local + j, *v);
+                                        } else {
+                                            partial[oc_local + j] = *v;
+                                        }
+                                    }
+                                    oc_local += n_oc;
+                                }
+                            }
+                        }
+                    }
+                }
             }
             oc0 += resident;
             block += 1;
@@ -307,7 +408,10 @@ impl<'d> HostDriver<'d> {
         Ok(out)
     }
 
-    /// One pooling layer: per 8-channel group, per output row.
+    /// One pooling layer: per 8-channel group, per output row, per
+    /// column chunk (wide pools whose `k` rows exceed the data cache
+    /// split along the row — every window still computes whole in one
+    /// pass, so chunking never changes a bit).
     fn run_pool(&mut self, spec: &LayerSpec, input: &TensorF16, phases: &mut PhaseTimes) -> Result<TensorF16> {
         let k = spec.kernel as usize;
         let s = spec.stride as usize;
@@ -315,12 +419,14 @@ impl<'d> HostDriver<'d> {
         let i_side = spec.i_side as usize;
         ensure!(input.h == i_side, "{}: input side {} != {}", spec.name, input.h, i_side);
         let groups = input.c.div_ceil(8);
-        let slice_values = k * i_side * 8;
-        if slice_values > gemm::DATA_CACHE_VALUES {
-            bail!("{}: pool slice {} values exceeds data cache", spec.name, slice_values);
-        }
+        ensure!(
+            k * k * 8 <= gemm::DATA_CACHE_VALUES,
+            "{}: a single {k}×{k} pool window exceeds the data cache",
+            spec.name
+        );
 
         let pad = spec.padding as usize;
+        let chunks = gemm::pool_col_chunks(k, s, pad, i_side, o);
         let mut out = Tensor::zeros(o, o, input.c);
         for g in 0..groups {
             for y in 0..o {
@@ -328,35 +434,37 @@ impl<'d> HostDriver<'d> {
                 // surface (ceil-mode bottom overhang + "same"-pool top pad).
                 let y0 = (y * s).saturating_sub(pad);
                 let rows = (y * s + k - pad).min(input.h) - y0;
-                let t0 = self.dev.usb.total_seconds();
-                self.dev.load_data(&gemm::pool_slice(input, y0, rows, g))?;
-                phases.add("load_gemm", self.dev.usb.total_seconds() - t0);
-                let task = SliceTask {
-                    op: spec.op,
-                    k,
-                    stride: s,
-                    out_cols: o,
-                    groups: 1,
-                    oc_count: 8,
-                    data_width: i_side,
-                    data_rows: rows,
-                    pixel_mode: false,
-                    kernel_size_reg: spec.kernel_size(),
-                    skip_relu: spec.skip_relu,
-                    weight_base: 0,
-                    bias_base: 0,
-                    pool_pad: pad,
-                    data_base: 0,
-                };
-                let n = self.dev.restart_engine(&task)?;
-                let t0 = self.dev.usb.total_seconds();
-                let res = self.dev.read_results(n)?;
-                phases.add("read_output", self.dev.usb.total_seconds() - t0);
-                for x in 0..o {
-                    for l in 0..8 {
-                        let c = g * 8 + l;
-                        if c < input.c {
-                            out.set(y, x, c, res[x * 8 + l]);
+                for ch in &chunks {
+                    let t0 = self.dev.usb.total_seconds();
+                    self.dev.load_data(&gemm::pool_slice_cols(input, y0, rows, g, ch.c0, ch.width))?;
+                    phases.add("load_gemm", self.dev.usb.total_seconds() - t0);
+                    let task = SliceTask {
+                        op: spec.op,
+                        k,
+                        stride: s,
+                        out_cols: ch.cols,
+                        groups: 1,
+                        oc_count: 8,
+                        data_width: ch.width,
+                        data_rows: rows,
+                        pixel_mode: false,
+                        kernel_size_reg: spec.kernel_size(),
+                        skip_relu: spec.skip_relu,
+                        weight_base: 0,
+                        bias_base: 0,
+                        pool_pad: ch.pad,
+                        data_base: 0,
+                    };
+                    let n = self.dev.restart_engine(&task)?;
+                    let t0 = self.dev.usb.total_seconds();
+                    let res = self.dev.read_results(n)?;
+                    phases.add("read_output", self.dev.usb.total_seconds() - t0);
+                    for x in 0..ch.cols {
+                        for l in 0..8 {
+                            let c = g * 8 + l;
+                            if c < input.c {
+                                out.set(y, ch.x0 + x, c, res[x * 8 + l]);
+                            }
                         }
                     }
                 }
@@ -371,7 +479,11 @@ impl<'d> HostDriver<'d> {
 /// batched drivers. Planned blocks go to their fixed homes under their
 /// content key, and a resident hit skips even the host-side weight
 /// gather; keyless blocks (no plan / non-resident net) load at word 0.
-/// Returns the block's (weight base, bias base).
+/// Channel-split layers pass their chunking so the super-block is
+/// gathered chunk-major ([`gemm::weight_block_chunked`]) — same size,
+/// same home, same key (granularity is fixed per layer, so a key always
+/// names one layout). Returns the block's (weight base, bias base).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn load_conv_superblock(
     dev: &mut StreamAccelerator,
     plan: Option<&gemm::WeightPlan>,
@@ -380,7 +492,12 @@ pub(crate) fn load_conv_superblock(
     wf: &ConvWeightsF16,
     oc0: usize,
     resident: usize,
+    chunks: Option<&gemm::ChannelChunks>,
 ) -> Result<(usize, usize)> {
+    let gather = |oc0: usize, n: usize| match chunks {
+        Some(cc) => gemm::weight_block_chunked(wf, oc0, n, cc),
+        None => gemm::weight_block(wf, oc0, n),
+    };
     match plan.and_then(|p| p.slot(eidx, block)) {
         Some(slot) => {
             let wwords = resident * wf.k * wf.k * wf.i_ch_padded / 8;
@@ -388,7 +505,7 @@ pub(crate) fn load_conv_superblock(
                 dev.load_weight_block_cached(
                     &slot.key,
                     slot.weight_base,
-                    &gemm::weight_block(wf, oc0, resident),
+                    &gather(oc0, resident),
                     slot.bias_base,
                     &gemm::bias_block(wf, oc0, resident),
                 )?;
@@ -396,7 +513,7 @@ pub(crate) fn load_conv_superblock(
             Ok((slot.weight_base, slot.bias_base))
         }
         None => {
-            dev.load_weights(&gemm::weight_block(wf, oc0, resident))?;
+            dev.load_weights(&gather(oc0, resident))?;
             dev.load_bias(&gemm::bias_block(wf, oc0, resident))?;
             Ok((0, 0))
         }
@@ -569,6 +686,86 @@ mod tests {
         let res = HostDriver::new(&mut dev).forward(&n, &blobs, &img).unwrap();
         for (x, y) in res.outputs.last().unwrap().data.iter().zip(&reference.last().unwrap().data) {
             assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn channel_split_conv_is_bit_identical_to_functional() {
+        // The fc6 shape that used to fail in both drivers: a 6×6 window
+        // over 256 channels is 1152 words — larger than the whole data
+        // cache — so the window must split into channel-group chunks.
+        // o_ch = 10 with a 7-oc super-block also exercises block and
+        // pass splitting on top of the chunking.
+        let mut n = Network::new("fc6_micro");
+        let inp = n.input(6, 256);
+        n.engine(LayerSpec::conv("fc6", 6, 1, 0, 6, 256, 10, 0), inp);
+        assert_eq!(gemm::conv_granularity(6, 6, 256), gemm::ConvGranularity::ChannelSplit);
+        let blobs = synthesize_weights(&n, 0xFC6);
+        let mut rng = Rng::new(0xFC66);
+        let img = rand_image(&mut rng, 6, 256);
+
+        let reference = forward_functional(&n, &blobs, &img).unwrap();
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let res = HostDriver::new(&mut dev).forward(&n, &blobs, &img).unwrap();
+        let (a, b) = (res.outputs.last().unwrap(), reference.last().unwrap());
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Two chunks per pixel per oc-pass, with partial re-entry
+        // through the bias port: more passes than a pixel conv would
+        // take, and every one swept the resident chunk-major block.
+        assert!(dev.stats.passes > 0);
+        assert!(dev.stats.cycles > 0);
+    }
+
+    #[test]
+    fn channel_split_conv_without_relu_keeps_negative_outputs() {
+        // skip_relu must defer to the LAST chunk only: intermediate
+        // partials always pass unclipped, and a skip_relu layer's final
+        // negatives survive.
+        let mut n = Network::new("fc_norelu");
+        let inp = n.input(6, 256);
+        let mut fc = LayerSpec::conv("fc", 6, 1, 0, 6, 256, 8, 0);
+        fc.skip_relu = true;
+        n.engine(fc, inp);
+        let blobs = synthesize_weights(&n, 77);
+        let mut rng = Rng::new(0x7A);
+        let img = rand_image(&mut rng, 6, 256);
+        let reference = forward_functional(&n, &blobs, &img).unwrap();
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let res = HostDriver::new(&mut dev).forward(&n, &blobs, &img).unwrap();
+        let (a, b) = (res.outputs.last().unwrap(), reference.last().unwrap());
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert!(
+            b.data.iter().any(|v| v.is_sign_negative() && !v.is_zero()),
+            "test net should produce at least one negative logit"
+        );
+    }
+
+    #[test]
+    fn wide_pools_split_columns_and_match_functional() {
+        // maxpool k=5/s=5 over 205 columns: 5·205 = 1025 words — one
+        // word past the cache — forces a column split (the old driver
+        // bailed here). avgpool k=6/s=6 over 174: 1044 words, same.
+        for (name, spec, side) in [
+            ("widemax", LayerSpec::maxpool("widemax", 5, 5, 205, 8), 205usize),
+            ("wideavg", LayerSpec::avgpool("wideavg", 6, 6, 174, 8), 174usize),
+        ] {
+            let mut n = Network::new(name);
+            let inp = n.input(side as u32, 8);
+            n.engine(spec, inp);
+            let blobs = synthesize_weights(&n, 0x500);
+            let mut rng = Rng::new(0x501);
+            let img = rand_image(&mut rng, side, 8);
+            let reference = forward_functional(&n, &blobs, &img).unwrap();
+            let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+            let res = HostDriver::new(&mut dev).forward(&n, &blobs, &img).unwrap();
+            let (a, b) = (res.outputs.last().unwrap(), reference.last().unwrap());
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{name}");
+            }
         }
     }
 

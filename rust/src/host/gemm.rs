@@ -39,15 +39,91 @@ pub enum ConvGranularity {
     Row,
     /// One output pixel per slice (large-kernel fallback).
     Pixel,
+    /// One input-channel group range of a k×k window per slice — the
+    /// giant-kernel FC fallback (AlexNet fc6: a 6×6 window over 256
+    /// channels is 1152 words, more than the whole data cache). Chunks
+    /// run in channel order and the running fsum re-enters the next
+    /// chunk's pass through the bias port (see [`channel_chunks`]), so
+    /// the engine's sequential fold — and therefore every output bit —
+    /// is identical to the unsplit computation.
+    ChannelSplit,
 }
 
 /// Pick the slicing granularity for a conv layer: a row slice needs
-/// `k · padded_width · lanes` values in the data cache.
+/// `k · padded_width · lanes` values in the data cache, a pixel slice
+/// `k² · lanes`; when even one pixel's window exceeds the cache the
+/// window itself is split along the input-channel groups.
 pub fn conv_granularity(k: usize, padded_width: usize, lanes: usize) -> ConvGranularity {
     if k * padded_width * lanes <= DATA_CACHE_VALUES {
         ConvGranularity::Row
-    } else {
+    } else if k * k * lanes <= DATA_CACHE_VALUES {
         ConvGranularity::Pixel
+    } else {
+        ConvGranularity::ChannelSplit
+    }
+}
+
+/// Bias-cache slot where channel-split convs stage per-pass partial
+/// sums: chunk `c+1`'s engine pass starts its fsum fold from chunk
+/// `c`'s drained result by loading it here as the pass's "bias"
+/// (intermediate chunks run with `skip_relu`, so no bias is re-applied
+/// and no activation clips a partial). The top 8 slots (one per
+/// engine-pass output channel) are reserved for this —
+/// [`WeightPlan::plan`] never allocates them, so a partial load can
+/// never evict a planned resident block.
+pub const PARTIAL_BIAS_BASE: usize = BIAS_CACHE_SLOTS - 8;
+
+/// Channel-group chunking of one k×k window for
+/// [`ConvGranularity::ChannelSplit`]: the `icp/8` groups are split into
+/// the fewest near-equal chunks whose `k²·groups` slice fits the data
+/// cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChannelChunks {
+    pub k: usize,
+    /// Total input-channel groups (icp / 8).
+    pub groups: usize,
+    /// Number of chunks (`ceil(slice_words / DATA_CACHE_WORDS)`-ish,
+    /// exactly: fewest chunks whose slices all fit).
+    pub count: usize,
+    /// Groups in every chunk but the last (the last takes the rest).
+    pub groups_per_chunk: usize,
+}
+
+/// Plan the channel-group chunking of a k×k window over `icp` padded
+/// input channels. A single chunk means the whole window fits (the
+/// [`ConvGranularity::Pixel`] case — the split path then degenerates to
+/// exactly the pixel path, which the property tests pin).
+pub fn channel_chunks(k: usize, icp: usize) -> ChannelChunks {
+    let groups = icp / 8;
+    debug_assert_eq!(icp % 8, 0);
+    let max_per_chunk = ((DATA_CACHE_VALUES / 8) / (k * k)).max(1);
+    let count = groups.div_ceil(max_per_chunk);
+    ChannelChunks { k, groups, count, groups_per_chunk: groups.div_ceil(count) }
+}
+
+impl ChannelChunks {
+    /// Chunk `c`'s group range as `(first group, group count)`.
+    pub fn chunk(&self, c: usize) -> (usize, usize) {
+        let g0 = c * self.groups_per_chunk;
+        (g0, self.groups_per_chunk.min(self.groups - g0))
+    }
+
+    /// Data-cache words of chunk `c`'s k×k slice.
+    pub fn slice_words(&self, c: usize) -> usize {
+        self.k * self.k * self.chunk(c).1
+    }
+
+    /// Word offset of chunk `c`'s weight sub-block inside a chunk-major
+    /// super-block of `resident` output channels (see
+    /// [`weight_block_chunked`]).
+    pub fn weight_base(&self, resident: usize, c: usize) -> usize {
+        resident * self.k * self.k * self.chunk(c).0
+    }
+
+    /// Weight-cache words per output channel within chunk `c`'s
+    /// sub-block.
+    pub fn oc_pitch(&self, c: usize) -> usize {
+        self.k * self.k * self.chunk(c).1
     }
 }
 
@@ -153,7 +229,10 @@ impl WeightPlan {
                 block += 1;
             }
         }
-        if wnext > WEIGHT_CACHE_VALUES / 8 || bnext > BIAS_CACHE_SLOTS {
+        // The top 8 bias slots stay free for channel-split partial sums
+        // ([`PARTIAL_BIAS_BASE`]); a plan that needed them would have
+        // its residents evicted by every chunked pass.
+        if wnext > WEIGHT_CACHE_VALUES / 8 || bnext > PARTIAL_BIAS_BASE {
             return WeightPlan::default(); // does not fit: not resident
         }
         WeightPlan { slots }
@@ -192,11 +271,24 @@ pub fn conv_row_slice(padded: &TensorF16, y0: usize, k: usize) -> Vec<F16> {
 /// Conv pixel slice: one k×k window at `(y0, x0)`, `(ky, kx, group,
 /// lane)` order.
 pub fn conv_pixel_slice(padded: &TensorF16, y0: usize, x0: usize, k: usize) -> Vec<F16> {
-    let groups = padded.c / 8;
-    let mut out = Vec::with_capacity(k * k * padded.c);
+    conv_pixel_slice_groups(padded, y0, x0, k, 0, padded.c / 8)
+}
+
+/// Conv pixel slice restricted to channel groups `g0 .. g0+gn` — one
+/// chunk of a [`ConvGranularity::ChannelSplit`] window, same `(ky, kx,
+/// group, lane)` order as the full slice.
+pub fn conv_pixel_slice_groups(
+    padded: &TensorF16,
+    y0: usize,
+    x0: usize,
+    k: usize,
+    g0: usize,
+    gn: usize,
+) -> Vec<F16> {
+    let mut out = Vec::with_capacity(k * k * gn * 8);
     for ky in 0..k {
         for kx in 0..k {
-            for g in 0..groups {
+            for g in g0..g0 + gn {
                 for l in 0..8 {
                     out.push(padded.get(y0 + ky, x0 + kx, g * 8 + l));
                 }
@@ -225,6 +317,36 @@ pub fn weight_block(w: &ConvWeightsF16, oc0: usize, n: usize) -> Vec<F16> {
     out
 }
 
+/// Chunk-major weight super-block for a [`ConvGranularity::ChannelSplit`]
+/// layer: the same `n` output channels as [`weight_block`], but laid out
+/// `(chunk, oc, ky, kx, group-within-chunk, lane)` so each chunk's
+/// passes see a contiguous `(oc, window, group)` sub-block at
+/// [`ChannelChunks::weight_base`]. Same total size — the super-block's
+/// cache home (and its residency slot) is layout-independent.
+pub fn weight_block_chunked(
+    w: &ConvWeightsF16,
+    oc0: usize,
+    n: usize,
+    chunks: &ChannelChunks,
+) -> Vec<F16> {
+    let mut out = Vec::with_capacity(n * w.k * w.k * w.i_ch_padded);
+    for c in 0..chunks.count {
+        let (g0, gn) = chunks.chunk(c);
+        for oc in oc0..oc0 + n {
+            for ky in 0..w.k {
+                for kx in 0..w.k {
+                    for g in g0..g0 + gn {
+                        for l in 0..8 {
+                            out.push(w.get(oc, ky, kx, g * 8 + l));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Bias block for output channels `oc0 .. oc0+n` — one value per channel;
 /// the device stores each in the low lane of a 128-bit word (§4.4).
 pub fn bias_block(w: &ConvWeightsF16, oc0: usize, n: usize) -> Vec<F16> {
@@ -234,14 +356,80 @@ pub fn bias_block(w: &ConvWeightsF16, oc0: usize, n: usize) -> Vec<F16> {
 /// Pool slice: rows `y0 .. y0+rows` (clipped by the caller), one
 /// 8-channel group, `(ky, x, lane)` order.
 pub fn pool_slice(t: &TensorF16, y0: usize, rows: usize, g: usize) -> Vec<F16> {
-    let mut out = Vec::with_capacity(rows * t.w * 8);
+    pool_slice_cols(t, y0, rows, g, 0, t.w)
+}
+
+/// Pool slice restricted to input columns `c0 .. c0+width` — one
+/// column chunk of a wide pool row (see [`pool_col_chunks`]), same
+/// `(ky, x, lane)` order.
+pub fn pool_slice_cols(
+    t: &TensorF16,
+    y0: usize,
+    rows: usize,
+    g: usize,
+    c0: usize,
+    width: usize,
+) -> Vec<F16> {
+    let mut out = Vec::with_capacity(rows * width * 8);
     for ky in 0..rows {
-        for x in 0..t.w {
+        for x in c0..c0 + width {
             for l in 0..8 {
                 let c = g * 8 + l;
                 out.push(if c < t.c { t.get(y0 + ky, x, c) } else { F16::ZERO });
             }
         }
+    }
+    out
+}
+
+/// One column chunk of a wide pool row: output columns `x0 .. x0+cols`
+/// computed from resident input columns `c0 .. c0+width`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolColChunk {
+    /// First output column of the chunk.
+    pub x0: usize,
+    /// Output columns this chunk produces.
+    pub cols: usize,
+    /// First resident input column.
+    pub c0: usize,
+    /// Resident input columns (the chunk's `data_width`).
+    pub width: usize,
+    /// Virtual left padding *within the chunk* (`pad − x0·s` clipped at
+    /// 0): the first chunk keeps the layer padding, later chunks start
+    /// inside the surface and need none.
+    pub pad: usize,
+}
+
+/// Split a pool layer's output columns into chunks whose `k · width`
+/// input slice fits the data cache — the wide-pool counterpart of the
+/// conv channel split, but **without** partial sums: every window is
+/// still computed whole in one pass (only the resident column range
+/// moves), so results are exactly the unsplit ones element by element.
+/// Narrow pools (`k · in_w ≤ cache`) produce a single chunk identical
+/// to the classic full-width slice. Requires `k² ≤ cache words` (a
+/// single window must fit — true for every real pool kernel).
+pub fn pool_col_chunks(k: usize, s: usize, pad: usize, in_w: usize, o_cols: usize) -> Vec<PoolColChunk> {
+    let budget = DATA_CACHE_VALUES / 8; // words; rows ≤ k ⇒ k·width bounds every row count
+    debug_assert!(k * k <= budget, "single pool window exceeds the data cache");
+    let mut out = Vec::new();
+    let mut x0 = 0usize;
+    while x0 < o_cols {
+        let c0 = (x0 * s).saturating_sub(pad);
+        // Input columns needed by output columns x0 .. x0+cols, clipped
+        // to the surface.
+        let end = |cols: usize| (((x0 + cols - 1) * s + k).saturating_sub(pad)).min(in_w);
+        let mut cols = 1usize;
+        while x0 + cols < o_cols && k * (end(cols + 1) - c0) <= budget {
+            cols += 1;
+        }
+        out.push(PoolColChunk {
+            x0,
+            cols,
+            c0,
+            width: end(cols) - c0,
+            pad: pad.saturating_sub(x0 * s),
+        });
+        x0 += cols;
     }
     out
 }
@@ -260,10 +448,150 @@ mod tests {
     fn granularity_thresholds() {
         // SqueezeNet conv1: 3·227·8 = 5448 ≤ 8192 → row.
         assert_eq!(conv_granularity(3, 227, 8), ConvGranularity::Row);
-        // AlexNet conv1: 11·227·8 = 19976 > 8192 → pixel.
+        // AlexNet conv1: 11·227·8 = 19976 > 8192 → pixel (11·11·8 = 968 fits).
         assert_eq!(conv_granularity(11, 227, 8), ConvGranularity::Pixel);
         // AlexNet conv2: 5·31·96 = 14880 > 8192 → pixel.
         assert_eq!(conv_granularity(5, 31, 96), ConvGranularity::Pixel);
+        // AlexNet fc6: even one 6×6 window over 256 ch is 9216 values
+        // (1152 words) > the whole cache → channel split.
+        assert_eq!(conv_granularity(6, 6, 256), ConvGranularity::ChannelSplit);
+    }
+
+    #[test]
+    fn channel_chunks_balance_and_fit() {
+        // fc6: 32 groups, 1024/36 = 28 groups max per chunk → 2×16.
+        let cc = channel_chunks(6, 256);
+        assert_eq!((cc.groups, cc.count, cc.groups_per_chunk), (32, 2, 16));
+        assert_eq!(cc.chunk(0), (0, 16));
+        assert_eq!(cc.chunk(1), (16, 16));
+        assert_eq!(cc.slice_words(0), 576);
+        assert!(cc.slice_words(0) <= DATA_CACHE_VALUES / 8);
+        // Sub-block bases inside a chunk-major super-block of 7 oc.
+        assert_eq!(cc.weight_base(7, 0), 0);
+        assert_eq!(cc.weight_base(7, 1), 7 * 36 * 16);
+        assert_eq!(cc.oc_pitch(0), 36 * 16);
+
+        // A pixel-size window degenerates to one chunk covering all groups.
+        let one = channel_chunks(5, 96);
+        assert_eq!((one.count, one.chunk(0)), (1, (0, 12)));
+
+        // Uneven split: 3×3 over 1036 groups-worth (k²=9 → 113 max) —
+        // last chunk takes the remainder, every chunk fits.
+        let cc = channel_chunks(3, 8 * 230);
+        assert_eq!(cc.count, 3);
+        assert_eq!(cc.chunk(0).1 + cc.chunk(1).1 + cc.chunk(2).1, 230);
+        for c in 0..cc.count {
+            assert!(cc.slice_words(c) <= DATA_CACHE_VALUES / 8);
+        }
+    }
+
+    #[test]
+    fn chunked_weight_block_is_chunk_major_permutation() {
+        // 2 chunks of a 1×1 conv over 16 lanes (forced by a tiny plan):
+        // chunk-major layout must put chunk 0's groups of ALL oc before
+        // chunk 1's.
+        let mut w = ConvWeights::zeros(3, 1, 16);
+        for oc in 0..3 {
+            for ic in 0..16 {
+                w.set(oc, 0, 0, ic, (100 * oc + ic) as f32);
+            }
+        }
+        let wf = ConvWeightsF16::from_f32(&w);
+        let cc = ChannelChunks { k: 1, groups: 2, count: 2, groups_per_chunk: 1 };
+        let blk = weight_block_chunked(&wf, 0, 3, &cc);
+        assert_eq!(blk.len(), 3 * 16);
+        // Chunk 0: oc0 lanes 0..8, oc1 lanes 0..8, oc2 lanes 0..8.
+        assert_eq!(blk[0].to_f32(), 0.0);
+        assert_eq!(blk[8].to_f32(), 100.0);
+        assert_eq!(blk[16].to_f32(), 200.0);
+        // Chunk 1 starts at weight_base(3, 1)·8 values: oc0 lanes 8..16.
+        let c1 = cc.weight_base(3, 1) * 8;
+        assert_eq!(c1, 24);
+        assert_eq!(blk[c1].to_f32(), 8.0);
+        assert_eq!(blk[c1 + 8].to_f32(), 108.0);
+        // Same multiset as the plain block, different order.
+        let mut a: Vec<u16> = blk.iter().map(|v| v.to_bits()).collect();
+        let mut b: Vec<u16> = weight_block(&wf, 0, 3).iter().map(|v| v.to_bits()).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        // One chunk ≡ the plain layout.
+        let one = ChannelChunks { k: 1, groups: 2, count: 1, groups_per_chunk: 2 };
+        let plain = weight_block(&wf, 0, 3);
+        for (x, y) in weight_block_chunked(&wf, 0, 3, &one).iter().zip(&plain) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn pixel_slice_groups_restrict_the_full_slice() {
+        let t = seq_tensor(8, 8, 32); // 4 groups
+        let full = conv_pixel_slice(&t, 2, 3, 3);
+        let lo = conv_pixel_slice_groups(&t, 2, 3, 3, 0, 2);
+        let hi = conv_pixel_slice_groups(&t, 2, 3, 3, 2, 2);
+        assert_eq!(lo.len() + hi.len(), full.len());
+        // Window position (ky, kx) contributes 16 low-lane values to
+        // `lo` and 16 high-lane values to `hi`, in full-slice order.
+        for (ky, kx) in [(0usize, 0usize), (1, 2), (2, 1)] {
+            let fbase = (ky * 3 + kx) * 32;
+            let cbase = (ky * 3 + kx) * 16;
+            for i in 0..16 {
+                assert_eq!(lo[cbase + i].to_bits(), full[fbase + i].to_bits());
+                assert_eq!(hi[cbase + i].to_bits(), full[fbase + 16 + i].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn pool_col_chunks_narrow_is_identity_wide_splits() {
+        // Narrow pool (113·3 = 339 words): one chunk, full width, layer pad.
+        let one = pool_col_chunks(3, 2, 0, 113, 56);
+        assert_eq!(one, vec![PoolColChunk { x0: 0, cols: 56, c0: 0, width: 113, pad: 0 }]);
+
+        // Wide pool: k=5/s=5 over 205 cols → 5·205 = 1025 words > 1024.
+        let chunks = pool_col_chunks(5, 5, 0, 205, 41);
+        assert!(chunks.len() >= 2);
+        // Chunks tile the output exactly and each slice fits.
+        let mut next_x = 0usize;
+        for c in &chunks {
+            assert_eq!(c.x0, next_x);
+            next_x += c.cols;
+            assert!(5 * c.width <= DATA_CACHE_VALUES / 8, "{c:?}");
+            // Non-overlapping windows (s == k): chunk input range covers
+            // exactly its windows.
+            assert_eq!(c.c0, c.x0 * 5);
+            assert_eq!(c.width, c.cols * 5);
+            assert_eq!(c.pad, 0);
+        }
+        assert_eq!(next_x, 41);
+
+        // Padded wide pool: first chunk keeps the virtual left pad,
+        // later chunks none, right edge clipped to the surface.
+        let padded = pool_col_chunks(3, 1, 1, 2000, 2000);
+        assert_eq!(padded[0].pad, 1);
+        assert_eq!(padded[0].c0, 0);
+        assert!(padded[1..].iter().all(|c| c.pad == 0));
+        let last = padded.last().unwrap();
+        assert_eq!(last.c0 + last.width, 2000);
+        assert_eq!(padded.iter().map(|c| c.cols).sum::<usize>(), 2000);
+    }
+
+    #[test]
+    fn pool_slice_cols_matches_full_slice_window() {
+        let t = seq_tensor(6, 10, 8);
+        let full = pool_slice(&t, 1, 3, 0);
+        let part = pool_slice_cols(&t, 1, 3, 0, 4, 3);
+        assert_eq!(part.len(), 3 * 3 * 8);
+        for ky in 0..3 {
+            for x in 0..3 {
+                for l in 0..8 {
+                    assert_eq!(
+                        part[(ky * 3 + x) * 8 + l].to_bits(),
+                        full[(ky * 10 + 4 + x) * 8 + l].to_bits()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -281,6 +281,10 @@ fn bench_diff(old: &std::path::Path, new: &std::path::Path, threshold: f64) -> R
         .map(|d| {
             let verdict = if d.regressed {
                 "REGRESSED"
+            } else if d.is_new() {
+                // No usable baseline (metric new, or recorded as 0 last
+                // run): today's value becomes the next run's baseline.
+                "new"
             } else {
                 match d.direction {
                     benchkit::MetricDirection::Informational => "info",
@@ -290,9 +294,9 @@ fn bench_diff(old: &std::path::Path, new: &std::path::Path, threshold: f64) -> R
             vec![
                 d.bench.clone(),
                 d.key.clone(),
-                format!("{:.4}", d.old),
+                d.old.map_or_else(|| "—".to_string(), |v| format!("{v:.4}")),
                 format!("{:.4}", d.new),
-                format!("{:+.1}%", 100.0 * d.change),
+                d.change.map_or_else(|| "new".to_string(), |c| format!("{:+.1}%", 100.0 * c)),
                 verdict.to_string(),
             ]
         })
@@ -304,20 +308,17 @@ fn bench_diff(old: &std::path::Path, new: &std::path::Path, threshold: f64) -> R
         100.0 * threshold
     );
     benchkit::table(&["bench", "metric", "old", "new", "change", "verdict"], &rows);
-    for n in &new_files {
-        if !old_files.iter().any(|o| o.bench == n.bench) {
-            println!("  note: bench {:?} has no baseline yet — skipped", n.bench);
-        }
-    }
     let regressed: Vec<&benchkit::MetricDiff> = diffs.iter().filter(|d| d.regressed).collect();
     if !regressed.is_empty() {
         for d in &regressed {
+            // A regression always has a compared baseline (new/zero
+            // baselines can't gate), so the unwraps never default.
             eprintln!(
                 "REGRESSION: {} / {} changed {:+.1}% (old {:.4}, new {:.4}, threshold {:.0}%)",
                 d.bench,
                 d.key,
-                100.0 * d.change,
-                d.old,
+                100.0 * d.change.unwrap_or(f64::NAN),
+                d.old.unwrap_or(f64::NAN),
                 d.new,
                 100.0 * threshold
             );

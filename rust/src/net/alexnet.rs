@@ -15,7 +15,22 @@ use super::layer::LayerSpec;
 /// pool → fc6 as 6×6 conv → fc7/fc8 as 1×1 convs → softmax.
 /// fc8 has no ReLU — it uses the `skip_relu` command extension.
 pub fn alexnet() -> Network {
-    let mut n = Network::new("alexnet");
+    alexnet_with_tail("alexnet", 512, 512)
+}
+
+/// Classic full-size AlexNet tail: 4096-wide fc6/fc7 and the 1000-class
+/// fc8. fc6's 6×6 window over 256 channels is a 1152-word GEMM slice —
+/// larger than the whole data cache — so this network requires the
+/// [`crate::host::gemm::ConvGranularity::ChannelSplit`] path (the
+/// downscaled [`alexnet`] tail has the same slice shape; the full width
+/// is purely an output-channel count and the drivers re-slice those in
+/// super-blocks either way).
+pub fn alexnet_full_tail() -> Network {
+    alexnet_with_tail("alexnet_full", 4096, 4096)
+}
+
+fn alexnet_with_tail(name: &str, fc6_ch: u32, fc7_ch: u32) -> Network {
+    let mut n = Network::new(name);
     let inp = n.input(227, 3);
 
     let conv1 = n.engine(LayerSpec::conv("conv1", 11, 4, 0, 227, 3, 96, 0), inp); // 55
@@ -27,13 +42,29 @@ pub fn alexnet() -> Network {
     let conv5 = n.engine(LayerSpec::conv("conv5", 3, 1, 1, 13, 384, 256, 0), conv4);
     let pool5 = n.engine(LayerSpec::maxpool("pool5", 3, 2, 13, 256), conv5); // 6
 
-    // FC layers as convolutions. The classic AlexNet has 4096-wide FC
-    // layers; we keep the structure but narrow them to stay inside the
-    // weight-cache budget per pass — the driver re-slices output channel
-    // groups anyway, so this is a capacity choice, not an architecture one.
-    let fc6 = n.engine(LayerSpec::conv("fc6", 6, 1, 0, 6, 256, 512, 0), pool5); // 1×1×512
-    let fc7 = n.engine(LayerSpec::conv("fc7", 1, 1, 0, 1, 512, 512, 0), fc6);
-    let mut fc8_spec = LayerSpec::conv("fc8", 1, 1, 0, 1, 512, 1000, 0);
+    // FC layers as convolutions (§3.2). fc6/fc7 width is a parameter:
+    // 4096 for the classic network, 512 for the quicker default — the
+    // fc6 *slice* shape (6×6 over 256 ch, channel-split) is identical.
+    let fc6 = n.engine(LayerSpec::conv("fc6", 6, 1, 0, 6, 256, fc6_ch, 0), pool5); // 1×1
+    let fc7 = n.engine(LayerSpec::conv("fc7", 1, 1, 0, 1, fc6_ch, fc7_ch, 0), fc6);
+    let mut fc8_spec = LayerSpec::conv("fc8", 1, 1, 0, 1, fc7_ch, 1000, 0);
+    fc8_spec.skip_relu = true;
+    let fc8 = n.engine(fc8_spec, fc7);
+    n.softmax("prob", fc8);
+    n
+}
+
+/// Just the AlexNet classifier tail, parameterized: the 6×6×256
+/// channel-split fc6 (the exact slice shape that used to fail in both
+/// drivers), a 1×1 fc7 and a `skip_relu` 1×1 fc8 — small enough for
+/// end-to-end bit-identity tests and the serving bench to run the
+/// giant-kernel path without paying for the full feature extractor.
+pub fn fc6_tail(fc_ch: u32, classes: u32) -> Network {
+    let mut n = Network::new("fc6_tail");
+    let inp = n.input(6, 256);
+    let fc6 = n.engine(LayerSpec::conv("fc6", 6, 1, 0, 6, 256, fc_ch, 0), inp);
+    let fc7 = n.engine(LayerSpec::conv("fc7", 1, 1, 0, 1, fc_ch, fc_ch, 0), fc6);
+    let mut fc8_spec = LayerSpec::conv("fc8", 1, 1, 0, 1, fc_ch, classes, 0);
     fc8_spec.skip_relu = true;
     let fc8 = n.engine(fc8_spec, fc7);
     n.softmax("prob", fc8);
@@ -63,6 +94,29 @@ mod tests {
         assert_eq!(d[0] & 0xF, 0x9); // conv(1) | skip_relu(8)
         let back = super::super::layer::LayerSpec::decode("fc8", d).unwrap();
         assert!(back.skip_relu);
+    }
+
+    #[test]
+    fn full_tail_restores_classic_widths() {
+        let n = alexnet_full_tail();
+        n.check().unwrap();
+        assert_eq!(n.out_shape(n.find("fc6").unwrap()), (1, 4096));
+        assert_eq!(n.out_shape(n.find("fc7").unwrap()), (1, 4096));
+        assert_eq!(n.out_shape(n.find("fc8").unwrap()), (1, 1000));
+        // fc6 needs the channel-split path in both variants.
+        use crate::host::gemm::{conv_granularity, ConvGranularity};
+        assert_eq!(conv_granularity(6, 6, 256), ConvGranularity::ChannelSplit);
+    }
+
+    #[test]
+    fn fc6_tail_is_the_failing_slice_shape() {
+        let n = fc6_tail(16, 10);
+        n.check().unwrap();
+        let fc6 = n.engine_layers()[0].clone();
+        assert_eq!((fc6.kernel, fc6.i_ch), (6, 256));
+        assert_eq!(n.out_shape(n.find("fc8").unwrap()), (1, 10));
+        // 6·6·256 = 9216 values = 1152 cache words > 1024.
+        assert!(6 * 6 * 256 / 8 > crate::accel::stream::DATA_CACHE_WORDS);
     }
 
     #[test]

@@ -308,3 +308,108 @@ fn passes_preserve_engine_order() {
         assert!(opt_order.iter().all(|n| !n.starts_with("dead")));
     }
 }
+
+/// The compile-time layout pass: granularity is recorded on the
+/// artifact per engine layer, so `forward_compiled` reads it instead of
+/// re-deriving it per forward (the former ROADMAP "layout pass" item).
+#[test]
+fn artifact_records_per_layer_granularity() {
+    use fusionaccel::host::gemm::ConvGranularity;
+    use fusionaccel::net::alexnet::fc6_tail;
+
+    let net = fc6_tail(16, 10);
+    let blobs = synthesize_weights(&net, 5);
+    let stream = compile(&net, fnv1a(&blobs.to_bytes())).unwrap();
+    assert_eq!(
+        stream.granularities,
+        vec![
+            Some(ConvGranularity::ChannelSplit), // fc6: 6×6 over 256 ch
+            Some(ConvGranularity::Row),          // fc7: 1×1 over 16
+            Some(ConvGranularity::Row),          // fc8
+        ]
+    );
+    // A pool layer owns no conv layout.
+    let sq = compile(&micro_squeezenet(), 1).unwrap();
+    for (spec, g) in sq.net.engine_layers().iter().zip(&sq.granularities) {
+        assert_eq!(
+            g.is_some(),
+            spec.op == fusionaccel::net::layer::OpType::ConvRelu,
+            "{}",
+            spec.name
+        );
+    }
+}
+
+/// PROPERTY: ChannelSplit at chunk count 1 *is* the Pixel path — same
+/// bits, same engine passes, same link bytes. Forged onto a compiled
+/// artifact, which doubles as proof that the drivers honor the
+/// artifact's recorded granularity rather than re-deriving it.
+#[test]
+fn channel_split_with_one_chunk_equals_pixel_path_exactly() {
+    use fusionaccel::host::gemm::{channel_chunks, conv_granularity, ConvGranularity};
+
+    // k=5 over 96 channels on a 20-wide input: pixel granularity, and
+    // one 2400-value window fits the cache → a single chunk.
+    let mut net = Network::new("pix");
+    let inp = net.input(20, 96);
+    let c = net.engine(LayerSpec::conv("cbig", 5, 1, 2, 20, 96, 12, 0), inp);
+    net.softmax("prob", c);
+    let blobs = synthesize_weights(&net, 0xC0DE);
+    let stream = compile(&net, fnv1a(&blobs.to_bytes())).unwrap();
+    assert_eq!(stream.granularities[0], Some(ConvGranularity::Pixel));
+    assert_eq!(conv_granularity(5, 24, 96), ConvGranularity::Pixel);
+    assert_eq!(channel_chunks(5, 96).count, 1);
+
+    let mut rng = Rng::new(0x5EED5);
+    let image = random_image(&mut rng, &net);
+    let run = |stream: &CompiledStream| {
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let res = HostDriver::new(&mut dev).forward_compiled(stream, &blobs, &image).unwrap();
+        (last_bits(&res.outputs), dev.stats.passes, dev.usb.total_bytes(), dev.usb.total_txns())
+    };
+    let pixel = run(&stream);
+
+    let mut forged = stream.clone();
+    forged.granularities[0] = Some(ConvGranularity::ChannelSplit);
+    let split = run(&forged);
+    assert_eq!(pixel, split, "1-chunk ChannelSplit must be the Pixel path, transfer for transfer");
+}
+
+/// Tentpole acceptance: the full-size fc6 slice shape (6×6 conv over
+/// 256 input channels — the 1152-word window that bailed on main)
+/// through `forward_compiled` AND `forward_batch_compiled` at batch
+/// 2/4, all bit-identical to the uncompiled functional reference.
+#[test]
+fn fc6_tail_compiled_single_and_batched_match_functional() {
+    use fusionaccel::host::batch::forward_batch_compiled;
+    use fusionaccel::net::alexnet::fc6_tail;
+
+    let net = fc6_tail(16, 10);
+    let blobs = synthesize_weights(&net, 0xFC6);
+    let stream = compile(&net, fnv1a(&blobs.to_bytes())).unwrap();
+    let mut rng = Rng::new(0xFC61);
+    let images: Vec<TensorF32> = (0..4).map(|_| random_image(&mut rng, &net)).collect();
+
+    let reference: Vec<Vec<u16>> = images
+        .iter()
+        .map(|img| last_bits(&forward_functional(&net, &blobs, img).unwrap()))
+        .collect();
+
+    // Single compiled forwards.
+    for (img, expect) in images.iter().zip(&reference) {
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let res = HostDriver::new(&mut dev).forward_compiled(&stream, &blobs, img).unwrap();
+        assert_eq!(&last_bits(&res.outputs), expect);
+        assert!(dev.stats.passes > 0);
+    }
+
+    // Batched compiled forwards at 2 and 4.
+    for b in [2usize, 4] {
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let batch = forward_batch_compiled(&mut dev, &stream, &blobs, &images[..b]).unwrap();
+        for (i, logits) in batch.logits.iter().enumerate() {
+            let bits: Vec<u16> = logits.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(&bits, &reference[i], "batch {b} image {i}");
+        }
+    }
+}

@@ -204,3 +204,36 @@ fn serve_multi_rejects_empty_repo_and_bad_config() {
     assert!(resps.is_empty());
     assert_eq!(stats.served + stats.failed, 0);
 }
+
+/// Tentpole acceptance (giant-kernel FC): the fc6 slice shape — a 6×6
+/// conv over 256 input channels whose 1152-word window exceeds the
+/// data cache — served through `serve_multi` at batch ≥ 2, bit-identical
+/// to the uncompiled functional reference.
+#[test]
+fn fc6_tail_serves_batched_bit_identical_to_functional() {
+    use fusionaccel::host::driver::forward_functional;
+    use fusionaccel::host::postprocess;
+    use fusionaccel::net::alexnet::fc6_tail;
+
+    let net = fc6_tail(16, 10);
+    let blobs = synthesize_weights(&net, 0xFC6);
+    let requests = grouped_requests(&[(&net, 6, 0xFC62)]);
+    let images: Vec<_> = requests.iter().map(|r| r.image.clone()).collect();
+
+    let repo = build_repo(&[(&net, &blobs)]);
+    // One worker, micro-batches of up to 4: with 6 requests the worker
+    // must form at least one true multi-image batch.
+    let cfg = ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 4);
+    let (mut resps, stats) = serve_multi(&repo, &cfg, requests).unwrap();
+    assert_eq!(stats.failed, 0);
+    assert!(stats.batch_hist.max_size() >= 2, "expected a real batch, got {:?}", stats.batch_hist);
+    resps.sort_by_key(|r| r.id);
+
+    for (resp, image) in resps.iter().zip(&images) {
+        let reference = forward_functional(&net, &blobs, image).unwrap();
+        let logits: Vec<f32> = reference.last().unwrap().data.iter().map(|v| v.to_f32()).collect();
+        let expect = postprocess::softmax(&logits);
+        assert_eq!(resp.probs, expect, "req {}", resp.id);
+        assert_eq!(resp.argmax, postprocess::argmax(&expect).unwrap());
+    }
+}
