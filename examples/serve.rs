@@ -206,6 +206,49 @@ fn main() -> anyhow::Result<()> {
         "command reloads must stay below the request count"
     );
 
+    // ---- long-lived service: admission during flight -------------------
+    // The closed-batch calls above hand the whole load over up front;
+    // the Service inverts that: it owns the pool, requests are admitted
+    // while earlier batches execute (bounded queue = backpressure), and
+    // each result streams back through its own ticket.
+    println!("\n-- long-lived service (open-loop arrival, bounded queue) --");
+    let svc_cfg = fusionaccel::service::ServiceConfig::new(ServeConfig::new(
+        UsbLink::usb3_frontpanel(),
+        workers,
+        4,
+    ))
+    .with_queue_capacity(4 * workers.max(1) * 4);
+    let svc =
+        fusionaccel::service::Service::start(std::sync::Arc::new(repo.snapshot()), &svc_cfg)?;
+    let mut tickets = Vec::with_capacity(n_req);
+    for req in synthetic_requests(n_req, 7, 32, 3) {
+        // submit_wait = lossless backpressure: blocks when the queue is
+        // at capacity, instead of shedding like plain submit().
+        tickets.push(
+            svc.submit_wait(req).map_err(|e| anyhow::anyhow!("service submit failed: {e}"))?,
+        );
+    }
+    let mut streamed = 0usize;
+    for t in &tickets {
+        let r = t.wait().map_err(|f| anyhow::anyhow!("request {} failed: {}", f.id, f.error))?;
+        anyhow::ensure!(r.network == net.name);
+        streamed += 1;
+    }
+    let stats = svc.shutdown()?;
+    anyhow::ensure!(stats.served == n_req && stats.failed == 0);
+    println!(
+        "streamed {streamed} results from a live service: {:.1} req/s wall, \
+         latency p50/p99/p999 {}, queue wait p50/p99/p999 {}",
+        stats.throughput,
+        stats.latency.summary_ms(),
+        stats.queue_wait.summary_ms()
+    );
+    println!(
+        "batches {} | {} admission rejections (bounded queue, lossless submit_wait)",
+        stats.batch_hist.summary(),
+        stats.admission_rejections
+    );
+
     println!("\nserve OK");
     Ok(())
 }

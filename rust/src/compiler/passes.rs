@@ -16,6 +16,10 @@
 //! | `fold_pool_relu` | ReLU adjacent to max-pooling dropped: the RTL      |
 //! |                  | comparator initializes at 0x0000 (Fig 26), so the  |
 //! |                  | pool command absorbs the activation on both sides  |
+//! | `fold_avgpool_head` | trailing ReLU of a global-average head dropped: |
+//! |                  | when the avg-pool's producer is a conv with its    |
+//! |                  | fused activation, every pooled value is already    |
+//! |                  | non-negative and the ReLU is an identity           |
 //! | `strip_idle`     | `Idle` engine nodes removed (they would desync the |
 //! |                  | CSB, which treats op 0 as end-of-stream)           |
 //! | `eliminate_dead` | nodes unreachable from the output removed, so dead |
@@ -71,9 +75,10 @@ type PassFn = fn(&Network) -> (Network, usize);
 
 /// The default pipeline, in order. See the module docs for the per-pass
 /// contracts and how to extend it.
-pub const PIPELINE: [(&str, PassFn); 4] = [
+pub const PIPELINE: [(&str, PassFn); 5] = [
     ("fuse_conv_relu", fuse_conv_relu),
     ("fold_pool_relu", fold_pool_relu),
+    ("fold_avgpool_head", fold_avgpool_head),
     ("strip_idle", strip_idle),
     ("eliminate_dead", eliminate_dead),
 ];
@@ -228,6 +233,44 @@ pub fn fold_pool_relu(net: &Network) -> (Network, usize) {
     (rebuild(net, &drop, &repl), changed)
 }
 
+/// Drop the trailing ReLU of a global-average-pool head — the
+/// conv+avgpool adjacency of the ROADMAP "folding for global-average
+/// heads" item. Average pooling can never absorb a *preceding* ReLU
+/// (the mean of negatives is not 0 — `fold_pool_relu` deliberately
+/// leaves it alone), but when the avg-pool's producer is a convolution
+/// with its fused activation applied (`!skip_relu`), every window it
+/// averages is non-negative, so the pooled values are non-negative too
+/// (FP16 sums and divisions of non-negatives keep the sign bit clear)
+/// and a ReLU consuming the pool is bitwise an identity. The pass
+/// re-tags that adjacency by dropping the ReLU node; the conservative
+/// conv-producer condition is what makes the rewrite provable from the
+/// commands alone.
+pub fn fold_avgpool_head(net: &Network) -> (Network, usize) {
+    let n = net.nodes.len();
+    let mut drop = vec![false; n];
+    let mut repl: Vec<usize> = (0..n).collect();
+    let mut changed = 0;
+    for i in 0..n {
+        let Node::Relu { input, .. } = &net.nodes[i] else { continue };
+        let pool = *input;
+        let Node::Engine { spec, input: pool_in } = &net.nodes[pool] else { continue };
+        if spec.op != OpType::AvgPool {
+            continue;
+        }
+        let Node::Engine { spec: producer, .. } = &net.nodes[*pool_in] else { continue };
+        if producer.op != OpType::ConvRelu || producer.skip_relu {
+            continue; // pre-activation values can be negative: keep it
+        }
+        drop[i] = true;
+        repl[i] = pool;
+        changed += 1;
+    }
+    if changed == 0 {
+        return (net.clone(), 0);
+    }
+    (rebuild(net, &drop, &repl), changed)
+}
+
 /// Remove `Idle` engine nodes. They are identities to the functional
 /// semantics but poison the command stream: the CSB parses op 0 as
 /// end-of-stream ([`crate::engine::csb::Csb::next_layer`]), so a loaded
@@ -372,6 +415,72 @@ mod tests {
         m.softmax("prob", a);
         let (opt, _) = run_pipeline(&m);
         assert!(opt.find("r").is_some());
+    }
+
+    #[test]
+    fn avgpool_head_drops_trailing_relu_after_activated_conv() {
+        // conv (fused relu) → global avg → relu → softmax: the trailing
+        // relu consumes provably non-negative values and folds away.
+        let mut n = Network::new("gap_head");
+        let inp = n.input(8, 3);
+        let c1 = n.engine(LayerSpec::conv("c1", 3, 1, 1, 8, 3, 4, 0), inp);
+        let gap = n.engine(LayerSpec::avgpool("gap", 8, 1, 8, 4), c1);
+        let r = n.relu("r", gap);
+        n.softmax("prob", r);
+        let (opt, report) = run_pipeline(&n);
+        opt.check().unwrap();
+        assert!(opt.find("r").is_none(), "trailing relu must fold into the gap head");
+        assert!(report.summary().contains("fold_avgpool_head×1"), "{}", report.summary());
+        assert_eq!(opt.nodes.len(), 4);
+    }
+
+    #[test]
+    fn avgpool_head_keeps_relu_over_preactivation_pool() {
+        // conv WITHOUT activation → avg → relu: the pool averages
+        // possibly-negative values, so the relu is load-bearing.
+        let mut n = Network::new("gap_preact");
+        let inp = n.input(8, 3);
+        let c1 = n.engine(conv_no_act("c1", 8, 3, 4), inp);
+        let gap = n.engine(LayerSpec::avgpool("gap", 8, 1, 8, 4), c1);
+        let r = n.relu("r", gap);
+        n.softmax("prob", r);
+        let (opt, _) = run_pipeline(&n);
+        opt.check().unwrap();
+        assert!(opt.find("r").is_some(), "pre-activation gap head: relu must survive");
+
+        // Non-conv producer (maxpool → avg → relu) is also left alone —
+        // the pass only claims the conv adjacency it can prove from the
+        // commands (max(0,·) ≥ 0 would be safe too, but stays out of
+        // scope; see ROADMAP).
+        let mut m = Network::new("gap_maxsrc");
+        let inp = m.input(8, 4);
+        let p = m.engine(LayerSpec::maxpool("p", 2, 2, 8, 4), inp);
+        let gap = m.engine(LayerSpec::avgpool("gap", 4, 1, 4, 4), p);
+        let r = m.relu("r", gap);
+        m.softmax("prob", r);
+        let (opt, _) = run_pipeline(&m);
+        assert!(opt.find("r").is_some());
+    }
+
+    #[test]
+    fn avgpool_head_folds_through_fixpoint_fusion() {
+        // conv (standalone relu) → gap → relu: round 1 fuses the inner
+        // relu into the conv; round 2's fold_avgpool_head then sees an
+        // activated conv under the gap and drops the trailing relu —
+        // the fixpoint chaining the pass table promises.
+        let mut n = Network::new("gap_chain");
+        let inp = n.input(8, 3);
+        let c1 = n.engine(conv_no_act("c1", 8, 3, 4), inp);
+        let r1 = n.relu("r1", c1);
+        let gap = n.engine(LayerSpec::avgpool("gap", 8, 1, 8, 4), r1);
+        let r2 = n.relu("r2", gap);
+        n.softmax("prob", r2);
+        let (opt, report) = run_pipeline(&n);
+        opt.check().unwrap();
+        assert!(opt.find("r1").is_none() && opt.find("r2").is_none());
+        assert!(!engine_spec(&opt, "c1").skip_relu);
+        assert_eq!(report.total_changes(), 2);
+        assert_eq!(opt.nodes.len(), 4);
     }
 
     #[test]

@@ -152,6 +152,19 @@ impl ModelRepo {
     pub fn registry(&self) -> &ArtifactRegistry {
         &self.registry
     }
+
+    /// Cheap serving snapshot: shares every registered model by `Arc`
+    /// (no artifact or weight copies) under a fresh, empty compile
+    /// memo. This is what a long-lived [`crate::service::Service`] pins
+    /// for its whole lifetime while the caller keeps mutating — or just
+    /// keeps — the original repo.
+    pub fn snapshot(&self) -> ModelRepo {
+        ModelRepo {
+            registry: ArtifactRegistry::new(),
+            by_name: self.by_name.clone(),
+            default: self.default.clone(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -212,6 +225,21 @@ mod tests {
         let blobs = synthesize_weights(&net, 1);
         repo.register(net.clone(), blobs.clone()).unwrap();
         assert!(repo.register(net, blobs).is_err());
+    }
+
+    #[test]
+    fn snapshot_shares_models_under_a_fresh_memo() {
+        let mut repo = ModelRepo::new();
+        let net = tiny("snap");
+        repo.register(net, synthesize_weights(&tiny("snap"), 1)).unwrap();
+        let snap = repo.snapshot();
+        assert_eq!(snap.names(), repo.names());
+        assert_eq!(snap.resolve(None).unwrap(), "snap");
+        // Same Arc, not a copy.
+        assert!(Arc::ptr_eq(&snap.get("snap").unwrap(), &repo.get("snap").unwrap()));
+        // The snapshot's compile memo is its own (and empty).
+        assert_eq!(snap.registry().compiles(), 0);
+        assert_eq!(repo.registry().compiles(), 1);
     }
 
     #[test]

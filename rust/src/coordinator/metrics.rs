@@ -65,6 +65,37 @@ impl BatchHistogram {
     }
 }
 
+/// Per-request quantiles of one distribution (latency or queue wait) —
+/// nearest-rank, like [`percentile`]. The tail quantiles (p99.9, max)
+/// are what a long-lived service's SLO needs and a closed batch never
+/// asked for; `p50`/`p99` mirror the legacy flat fields.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Quantiles {
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub max: f64,
+}
+
+impl Quantiles {
+    /// Quantiles of an ascending-sorted sample (all zeros when empty).
+    pub fn from_sorted(sorted: &[f64]) -> Quantiles {
+        Quantiles {
+            p50: percentile(sorted, 0.5),
+            p90: percentile(sorted, 0.9),
+            p99: percentile(sorted, 0.99),
+            p999: percentile(sorted, 0.999),
+            max: sorted.last().copied().unwrap_or(0.0),
+        }
+    }
+
+    /// Compact `p50/p99/p999` rendering in milliseconds.
+    pub fn summary_ms(&self) -> String {
+        format!("{:.1}/{:.1}/{:.1} ms", self.p50 * 1e3, self.p99 * 1e3, self.p999 * 1e3)
+    }
+}
+
 /// A request whose forward failed or panicked — reported instead of
 /// hanging the response channel.
 #[derive(Clone, Debug)]
@@ -160,6 +191,16 @@ pub struct ServeStats {
     /// Queue-wait percentiles alone.
     pub p50_queue_wait: f64,
     pub p99_queue_wait: f64,
+    /// Full per-request latency quantiles (p50/p90/p99/p99.9/max) —
+    /// the service-mode view; `p50_latency`/`p99_latency` above are the
+    /// same numbers kept flat for the older call sites.
+    pub latency: Quantiles,
+    /// Full queue-wait quantiles.
+    pub queue_wait: Quantiles,
+    /// Submissions shed with `SubmitError::QueueFull` by a bounded
+    /// long-lived service ([`crate::service::Service`]); always 0 for
+    /// the closed-batch wrappers (their queue is unbounded).
+    pub admission_rejections: usize,
     /// Histogram of assembled batch sizes.
     pub batch_hist: BatchHistogram,
     /// Per-worker modeled link/engine breakdown.
@@ -203,10 +244,12 @@ impl ServeStats {
         self.throughput = self.served as f64 / wall_seconds.max(1e-12);
         sort_f64(latencies);
         sort_f64(queue_waits);
-        self.p50_latency = percentile(latencies, 0.5);
-        self.p99_latency = percentile(latencies, 0.99);
-        self.p50_queue_wait = percentile(queue_waits, 0.5);
-        self.p99_queue_wait = percentile(queue_waits, 0.99);
+        self.latency = Quantiles::from_sorted(latencies);
+        self.queue_wait = Quantiles::from_sorted(queue_waits);
+        self.p50_latency = self.latency.p50;
+        self.p99_latency = self.latency.p99;
+        self.p50_queue_wait = self.queue_wait.p50;
+        self.p99_queue_wait = self.queue_wait.p99;
         self.per_worker = self.workers.iter().map(|w| w.served).collect();
         self.modeled_seconds =
             self.workers.iter().map(WorkerStats::modeled_seconds).fold(0.0, f64::max);
@@ -292,6 +335,20 @@ mod tests {
     }
 
     #[test]
+    fn quantiles_track_the_tail() {
+        let xs: Vec<f64> = (1..=1000).map(|v| v as f64 / 1000.0).collect();
+        let q = Quantiles::from_sorted(&xs);
+        assert_eq!(q.p50, percentile(&xs, 0.5));
+        assert_eq!(q.p90, percentile(&xs, 0.9));
+        assert_eq!(q.p99, percentile(&xs, 0.99));
+        assert_eq!(q.p999, percentile(&xs, 0.999));
+        assert_eq!(q.max, 1.0);
+        assert!(q.p50 <= q.p90 && q.p90 <= q.p99 && q.p99 <= q.p999 && q.p999 <= q.max);
+        assert_eq!(Quantiles::from_sorted(&[]), Quantiles::default());
+        assert!(q.summary_ms().ends_with("ms"));
+    }
+
+    #[test]
     fn worker_stats_reuse_and_modeled() {
         let w = WorkerStats {
             worker: 0,
@@ -354,6 +411,9 @@ mod tests {
         assert_eq!(s.throughput, 1.5);
         assert_eq!(s.per_worker, vec![2, 1]);
         assert_eq!(s.p50_latency, 0.2);
+        assert_eq!(s.latency.p50, 0.2, "flat field mirrors the quantile struct");
+        assert_eq!(s.latency.max, 0.3);
+        assert_eq!(s.queue_wait.max, 0.02);
         assert_eq!(s.modeled_seconds, 1.0);
         assert_eq!(s.modeled_throughput, 3.0);
         // Weight amortization rolls up across workers: 40 sweeps over

@@ -38,26 +38,33 @@
 //! batching is bit-identical to sequential serving (property-tested),
 //! so worker count, batch size, caching, and network mix change only
 //! the timing, never the numbers.
+//!
+//! Since the long-lived [`crate::service::Service`] landed, every entry
+//! point here is a **closed-batch wrapper** over it: the whole load is
+//! admitted to a *paused* service, the queue closes, the pool opens and
+//! drains, and the tickets are collected — exactly the original
+//! closed-batch semantics (deterministic batch formation included), so
+//! the bit-identity and stats tests in `tests/serving_*.rs` pin the
+//! service's equivalence to the original coordinator.
 
 pub mod batcher;
 pub mod metrics;
 pub mod scheduler;
-mod worker;
+pub(crate) mod worker;
 
-use std::collections::HashMap;
-use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::Arc;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
-use crate::compiler::{LruCache, ModelRepo};
+use crate::compiler::ModelRepo;
 use crate::hw::usb::UsbLink;
 use crate::net::graph::Network;
 use crate::net::tensor::TensorF32;
 use crate::net::weights::Blobs;
+use crate::service::{Service, ServiceConfig};
 
 pub use batcher::BatchPolicy;
-pub use metrics::{BatchHistogram, FailedRequest, ServeStats, WorkerStats};
+pub use metrics::{BatchHistogram, FailedRequest, Quantiles, ServeStats, WorkerStats};
 pub use scheduler::{Pop, QueuedRequest, Scheduler};
 
 /// A queued inference request.
@@ -208,32 +215,6 @@ pub fn serve_batched(
     serve_multi(&repo, cfg, requests)
 }
 
-/// Result-cache entry: everything needed to answer a duplicate request
-/// without a forward.
-#[derive(Clone, Debug)]
-struct CachedResult {
-    network: String,
-    probs: Vec<f32>,
-    argmax: usize,
-    worker: usize,
-}
-
-/// Exact content key of a request: network name + image dims + image
-/// bits. The full bits (not a hash) are the key, so a cache hit can
-/// never alias a different image — the bit-identical serving claim
-/// holds unconditionally, at the cost of one image copy per in-flight
-/// cache entry (bounded by the load size plus the LRU capacity).
-type RequestKey = (String, Vec<u32>);
-
-fn request_key(network: &str, image: &TensorF32) -> RequestKey {
-    let mut bits = Vec::with_capacity(3 + image.data.len());
-    bits.push(image.h as u32);
-    bits.push(image.w as u32);
-    bits.push(image.c as u32);
-    bits.extend(image.data.iter().map(|v| v.to_bits()));
-    (network.to_string(), bits)
-}
-
 /// Serve a mixed workload over one device pool: each request's
 /// `network` tag resolves against `repo` (compiled artifacts), batches
 /// form per network, and workers reconfigure between batches by
@@ -244,174 +225,57 @@ fn request_key(network: &str, image: &TensorF32) -> RequestKey {
 /// Results are bit-identical to serving each network's requests alone
 /// (property-tested in `tests/serving_multi.rs`): forwards are pure,
 /// and neither batching, caching, nor interleaving changes the bits.
+///
+/// Implemented as a closed-batch run of the long-lived
+/// [`crate::service::Service`]: the whole load is admitted to a
+/// *paused* service (so the queue is fully formed before any worker
+/// pops — deterministic batch assembly, exactly the pre-service
+/// behavior), then the queue closes, the pool opens, drains and joins,
+/// and the per-request tickets are collected into the response vector.
 pub fn serve_multi(
     repo: &ModelRepo,
     cfg: &ServeConfig,
     requests: Vec<InferenceRequest>,
 ) -> Result<(Vec<InferenceResponse>, ServeStats)> {
-    ensure!(cfg.n_workers > 0, "need at least one worker");
-    ensure!(cfg.policy.max_batch > 0, "max_batch must be at least 1");
-    ensure!(!repo.is_empty(), "no models registered");
     let total = requests.len();
-    let mut stats = ServeStats {
-        workers: (0..cfg.n_workers)
-            .map(|w| WorkerStats { worker: w, ..Default::default() })
-            .collect(),
-        ..Default::default()
-    };
-    let mut responses: Vec<InferenceResponse> = Vec::with_capacity(total);
-    let mut latencies: Vec<f64> = Vec::with_capacity(total);
-    let mut queue_waits: Vec<f64> = Vec::with_capacity(total);
-
-    // Admission: resolve network tags; with the result cache enabled,
-    // shed duplicates of an identical (network, image) pair — either
-    // answered from the LRU or parked on the in-flight representative.
-    let mut cache: LruCache<RequestKey, CachedResult> = LruCache::new(cfg.result_cache.max(1));
-    let mut inflight: HashMap<RequestKey, u64> = HashMap::new(); // content key → representative id
-    let mut parked: HashMap<u64, Vec<u64>> = HashMap::new(); // representative id → duplicate ids
-    let mut key_of: HashMap<u64, RequestKey> = HashMap::new(); // representative id → content key
-    let mut admitted: Vec<InferenceRequest> = Vec::with_capacity(total);
-    for mut req in requests {
-        let name = match repo.resolve(req.network.as_deref()) {
-            Ok(name) => name,
-            Err(err) => {
-                // Never reached a worker: reported with worker = MAX.
-                stats.failures.push(FailedRequest {
-                    id: req.id,
-                    worker: usize::MAX,
-                    error: format!("{err:#}"),
-                });
-                continue;
-            }
-        };
-        req.network = Some(name.clone());
-        if cfg.result_cache > 0 {
-            let key = request_key(&name, &req.image);
-            if let Some(hit) = cache.get(&key) {
-                stats.result_cache_hits += 1;
-                latencies.push(0.0);
-                queue_waits.push(0.0);
-                responses.push(InferenceResponse {
-                    id: req.id,
-                    network: hit.network,
-                    probs: hit.probs,
-                    argmax: hit.argmax,
-                    worker: hit.worker,
-                    service_seconds: 0.0,
-                    modeled_seconds: 0.0,
-                    queue_wait_seconds: 0.0,
-                    batch_size: 0,
-                });
-                continue;
-            }
-            if let Some(&rep) = inflight.get(&key) {
-                stats.result_cache_hits += 1;
-                parked.entry(rep).or_default().push(req.id);
-                continue;
-            }
-            inflight.insert(key.clone(), req.id);
-            key_of.insert(req.id, key);
-            stats.result_cache_misses += 1;
-        }
-        admitted.push(req);
-    }
-
-    let sched = Scheduler::new();
-    sched.push_all(admitted);
-    sched.close();
-    let (tx, rx) = mpsc::channel::<worker::WorkerEvent>();
-    let t0 = Instant::now();
-
-    std::thread::scope(|scope| {
-        for w in 0..cfg.n_workers {
-            let tx = tx.clone();
-            let sched = &sched;
-            let policy = &cfg.policy;
-            let link = cfg.link;
-            let model_cache = cfg.model_cache;
-            scope.spawn(move || worker::run_worker(w, repo, link, sched, policy, model_cache, &tx));
-        }
-        drop(tx);
-    });
-
-    for ev in rx {
-        match ev {
-            worker::WorkerEvent::Done(r) => {
-                let turnaround = r.queue_wait_seconds + r.service_seconds;
-                latencies.push(turnaround);
-                queue_waits.push(r.queue_wait_seconds);
-                stats.workers[r.worker].served += 1;
-                if let Some(key) = key_of.get(&r.id) {
-                    cache.insert(
-                        key.clone(),
-                        CachedResult {
-                            network: r.network.clone(),
-                            probs: r.probs.clone(),
-                            argmax: r.argmax,
-                            worker: r.worker,
-                        },
-                    );
-                    for id in parked.remove(&r.id).unwrap_or_default() {
-                        latencies.push(turnaround);
-                        queue_waits.push(turnaround);
-                        responses.push(InferenceResponse {
-                            id,
-                            network: r.network.clone(),
-                            probs: r.probs.clone(),
-                            argmax: r.argmax,
-                            worker: r.worker,
-                            service_seconds: 0.0,
-                            modeled_seconds: 0.0,
-                            queue_wait_seconds: turnaround,
-                            batch_size: 0,
-                        });
-                    }
-                }
-                responses.push(r);
-            }
-            worker::WorkerEvent::Batch(m) => {
-                stats.batch_hist.record(m.size);
-                let w = &mut stats.workers[m.worker];
-                w.batches += 1;
-                w.link_seconds += m.link_seconds;
-                w.engine_seconds += m.engine_seconds;
-                w.busy_seconds += m.service_seconds;
-                w.weight_loads += m.weight_loads;
-                w.weight_sweeps += m.weight_sweeps;
-                w.weight_reuses += m.weight_reuses;
-                w.command_loads += m.command_loads;
-                w.command_reuses += m.command_reuses;
-                if m.model_cache_hit {
-                    w.model_cache_hits += 1;
-                } else {
-                    w.model_cache_misses += 1;
-                }
-            }
-            worker::WorkerEvent::Failed(f) => {
-                // Duplicates parked on a failed representative fail too.
-                for id in parked.remove(&f.id).unwrap_or_default() {
-                    stats.failures.push(FailedRequest {
-                        id,
-                        worker: f.worker,
-                        error: f.error.clone(),
-                    });
-                }
-                stats.failures.push(f);
-            }
+    let svc = Service::start_paused(Arc::new(repo.snapshot()), &ServiceConfig::new(*cfg))?;
+    let mut tickets = Vec::with_capacity(total);
+    let mut admission_failures: Vec<FailedRequest> = Vec::new();
+    for req in requests {
+        let id = req.id;
+        match svc.submit(req) {
+            Ok(t) => tickets.push(t),
+            // The queue is unbounded here, so this is a duplicate
+            // in-flight id (the service routes completions by id). Fail
+            // that request alone — the rest of the load still serves.
+            Err(e) => admission_failures.push(FailedRequest {
+                id,
+                worker: usize::MAX,
+                error: format!("closed-batch admission rejected: {e}"),
+            }),
         }
     }
-    let wall = t0.elapsed().as_secs_f64();
-    stats.served = responses.len();
-    stats.failed = stats.failures.len();
+    let mut stats = svc.shutdown()?;
+    stats.failed += admission_failures.len();
+    stats.failures.extend(admission_failures);
+    stats.failures.sort_by_key(|f| f.id);
     ensure!(
         stats.served + stats.failed == total,
         "lost responses: {} served + {} failed != {total}",
         stats.served,
         stats.failed
     );
+    let mut responses: Vec<InferenceResponse> = Vec::with_capacity(stats.served);
+    for t in &tickets {
+        // take() moves each response out of its ticket (this wrapper is
+        // the sole waiter), matching the pre-service move semantics.
+        match t.take() {
+            Some(Ok(r)) => responses.push(r),
+            Some(Err(_)) => {} // already reported in stats.failures
+            None => bail!("ticket {} unresolved after shutdown", t.id()),
+        }
+    }
     responses.sort_by_key(|r| r.id);
-    stats.failures.sort_by_key(|f| f.id);
-    stats.finalize(&mut latencies, &mut queue_waits, wall);
     Ok((responses, stats))
 }
 
@@ -568,6 +432,25 @@ mod tests {
         for f in &stats.failures {
             assert!(!f.error.is_empty());
         }
+    }
+
+    #[test]
+    fn duplicate_ids_fail_only_the_duplicates() {
+        // Ids route completions in the service, so a duplicate of an
+        // outstanding id cannot be admitted — but it must fail alone,
+        // never the rest of the load.
+        let net = tiny_net();
+        let blobs = synthesize_weights(&net, 10);
+        let mut reqs = rand_requests(4, 19);
+        reqs[2].id = 0; // duplicate of the (still queued) request 0
+        let cfg = ServeConfig::single(UsbLink::usb3_frontpanel(), 1);
+        let (resps, stats) = serve_batched(&net, &blobs, &cfg, reqs).unwrap();
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.failures[0].id, 0);
+        assert!(stats.failures[0].error.contains("already outstanding"), "{}", stats.failures[0].error);
+        let ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 3]);
     }
 
     #[test]

@@ -610,11 +610,21 @@ fn pool_batch(
     let inputs: Vec<&TensorF16> = acts.iter().map(|a| &a[input_node]).collect();
     let (ih, ic) = (inputs[0].h, inputs[0].c);
     let groups = ic.div_ceil(8);
-    ensure!(
-        k * k <= DATA_CACHE_WORDS,
-        "{}: a single {k}×{k} pool window exceeds the data cache",
-        spec.name
-    );
+    if k * k > DATA_CACHE_WORDS {
+        // Giant window (k > 32): row-wise fold, max only — mirrors the
+        // single-image driver (see HostDriver::run_giant_maxpool).
+        ensure!(
+            spec.op == OpType::MaxPool,
+            "{}: a {k}×{k} avg-pool window exceeds the data cache (row-wise fold exists only for max)",
+            spec.name
+        );
+        ensure!(
+            k <= DATA_CACHE_WORDS,
+            "{}: a single {k}-wide pool window row exceeds the data cache",
+            spec.name
+        );
+        return giant_maxpool_batch(dev, spec, input_node, acts);
+    }
     let col_chunks = gemm::pool_col_chunks(k, s, pad, ih, o);
 
     let mut outs: Vec<TensorF16> = (0..acts.len()).map(|_| Tensor::zeros(o, o, ic)).collect();
@@ -673,6 +683,119 @@ fn pool_batch(
     }
     for (a, out) in acts.iter_mut().zip(outs) {
         a.push(out);
+    }
+    Ok(())
+}
+
+/// Batched giant-window max-pooling (k > 32): per (group, window, row
+/// chunk) the chunk slices of a whole image group cross the link in one
+/// `data_base`-swept transfer; each pass computes the engine's
+/// `max(0, resident rows)` and the host folds the per-image partial
+/// maxima with the engine's own `gt` comparator — exact, because max is
+/// associative and the 0x0000 comparator init is idempotent across
+/// partials. Bit-identical to B single-image giant-pool forwards.
+fn giant_maxpool_batch(
+    dev: &mut StreamAccelerator,
+    spec: &LayerSpec,
+    input_node: usize,
+    acts: &mut [Vec<TensorF16>],
+) -> Result<()> {
+    let k = spec.kernel as usize;
+    let s = spec.stride as usize;
+    let o = spec.o_side as usize;
+    let pad = spec.padding as usize;
+    let inputs: Vec<&TensorF16> = acts.iter().map(|a| &a[input_node]).collect();
+    let (ih, ic) = (inputs[0].h, inputs[0].c);
+    let groups = ic.div_ceil(8);
+
+    let mut outs: Vec<TensorF16> = (0..acts.len()).map(|_| Tensor::zeros(o, o, ic)).collect();
+    for g in 0..groups {
+        for y in 0..o {
+            let y0 = (y * s).saturating_sub(pad);
+            let rows = (y * s + k - pad).min(ih) - y0;
+            for x in 0..o {
+                let c0 = (x * s).saturating_sub(pad);
+                let width = (x * s + k - pad).min(inputs[0].w) - c0;
+                let cpad = pad.saturating_sub(x * s);
+                let mut best: Vec<[F16; 8]> = vec![[F16::ZERO; 8]; acts.len()];
+                for rc in gemm::pool_row_chunks(rows, width) {
+                    let slice_words = rc.rows * width;
+                    let imgs_per_load = (DATA_CACHE_WORDS / slice_words).clamp(1, acts.len());
+                    for (chunk_i, group) in inputs.chunks(imgs_per_load).enumerate() {
+                        let img0 = chunk_i * imgs_per_load;
+                        let mut slab: Vec<F16> = Vec::with_capacity(group.len() * slice_words * 8);
+                        for &input in group {
+                            slab.extend(gemm::pool_slice_cols(input, y0 + rc.r0, rc.rows, g, c0, width));
+                        }
+                        dev.load_data(&slab)?;
+                        let mut in_flight: Vec<usize> = Vec::with_capacity(group.len());
+                        for ci in 0..group.len() {
+                            if dev.res_fifo.space() < 8 {
+                                drain_giant(dev, &mut in_flight, &mut best)?;
+                            }
+                            let task = SliceTask {
+                                op: spec.op,
+                                k,
+                                stride: s,
+                                out_cols: 1,
+                                groups: 1,
+                                oc_count: 8,
+                                data_width: width,
+                                data_rows: rc.rows,
+                                pixel_mode: false,
+                                kernel_size_reg: spec.kernel_size(),
+                                skip_relu: spec.skip_relu,
+                                weight_base: 0,
+                                bias_base: 0,
+                                pool_pad: cpad,
+                                data_base: ci * slice_words,
+                            };
+                            let n = dev.restart_engine(&task)?;
+                            ensure!(n == 8, "{}: giant pool pass produced {n}", spec.name);
+                            in_flight.push(img0 + ci);
+                        }
+                        // One PipeOut for the whole image group's
+                        // partials, folded host-side into each image's
+                        // running maxima.
+                        drain_giant(dev, &mut in_flight, &mut best)?;
+                    }
+                }
+                for (img, b) in best.iter().enumerate() {
+                    for (l, v) in b.iter().enumerate() {
+                        let c = g * 8 + l;
+                        if c < ic {
+                            outs[img].set(y, x, c, *v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for (a, out) in acts.iter_mut().zip(outs) {
+        a.push(out);
+    }
+    Ok(())
+}
+
+/// Drain pending giant-pool passes (8 partial maxima per image) and
+/// fold them into the per-image running maxima with the engine's `gt`
+/// comparator.
+fn drain_giant(
+    dev: &mut StreamAccelerator,
+    in_flight: &mut Vec<usize>,
+    best: &mut [[F16; 8]],
+) -> Result<()> {
+    if in_flight.is_empty() {
+        return Ok(());
+    }
+    let res = dev.read_results(8 * in_flight.len())?;
+    for (i, img) in in_flight.drain(..).enumerate() {
+        for l in 0..8 {
+            let v = res[i * 8 + l];
+            if v.gt(best[img][l]) {
+                best[img][l] = v;
+            }
+        }
     }
     Ok(())
 }
@@ -874,6 +997,46 @@ mod tests {
             })
             .collect();
         assert_batch_matches_sequential(&n, &blobs, &imgs);
+    }
+
+    #[test]
+    fn giant_window_maxpool_batch_is_bit_identical() {
+        // 33×33 global max (1089 words — a single window bigger than
+        // the data cache) followed by a small conv, batched at 2 and 3:
+        // the row-wise fold must match sequential single-image forwards
+        // bit for bit (the former k > 32 coverage hole, max side).
+        let mut n = Network::new("giant_batch");
+        let inp = n.input(33, 16);
+        let p1 = n.engine(LayerSpec::maxpool("giantmax", 33, 33, 33, 16), inp); // 1×1×16
+        let c1 = n.engine(LayerSpec::conv("head", 1, 1, 0, 1, 16, 8, 0), p1);
+        n.softmax("prob", c1);
+        let blobs = synthesize_weights(&n, 0x61C);
+        let mut rng = Rng::new(0x61D);
+        for b in [2usize, 3] {
+            let imgs: Vec<TensorF32> = (0..b)
+                .map(|_| {
+                    Tensor::from_vec(
+                        33,
+                        33,
+                        16,
+                        (0..33 * 33 * 16).map(|_| rng.normal(1.0)).collect(),
+                    )
+                })
+                .collect();
+            assert_batch_matches_sequential(&n, &blobs, &imgs);
+        }
+    }
+
+    #[test]
+    fn giant_window_avgpool_batch_is_rejected() {
+        let mut n = Network::new("giantavg_batch");
+        let inp = n.input(33, 8);
+        n.engine(LayerSpec::avgpool("gavg", 33, 33, 33, 8), inp);
+        let blobs = synthesize_weights(&n, 1);
+        let imgs = vec![Tensor::zeros(33, 33, 8), Tensor::zeros(33, 33, 8)];
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let err = forward_batch(&mut dev, &n, &blobs, &imgs).unwrap_err();
+        assert!(format!("{err:#}").contains("avg-pool"), "got: {err:#}");
     }
 
     #[test]

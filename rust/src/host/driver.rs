@@ -419,11 +419,24 @@ impl<'d> HostDriver<'d> {
         let i_side = spec.i_side as usize;
         ensure!(input.h == i_side, "{}: input side {} != {}", spec.name, input.h, i_side);
         let groups = input.c.div_ceil(8);
-        ensure!(
-            k * k * 8 <= gemm::DATA_CACHE_VALUES,
-            "{}: a single {k}×{k} pool window exceeds the data cache",
-            spec.name
-        );
+        if k * k * 8 > gemm::DATA_CACHE_VALUES {
+            // Giant window (k > 32): even one window exceeds the data
+            // cache. Max folds row-wise exactly (max is associative and
+            // the comparator's 0x0000 init is idempotent across
+            // partials); avg would need divisor-deferred partials and
+            // stays unsupported (ROADMAP).
+            ensure!(
+                spec.op == OpType::MaxPool,
+                "{}: a {k}×{k} avg-pool window exceeds the data cache (row-wise fold exists only for max)",
+                spec.name
+            );
+            ensure!(
+                k * 8 <= gemm::DATA_CACHE_VALUES,
+                "{}: a single {k}-wide pool window row exceeds the data cache",
+                spec.name
+            );
+            return self.run_giant_maxpool(spec, input, phases);
+        }
 
         let pad = spec.padding as usize;
         let chunks = gemm::pool_col_chunks(k, s, pad, i_side, o);
@@ -465,6 +478,78 @@ impl<'d> HostDriver<'d> {
                             if c < input.c {
                                 out.set(y, ch.x0 + x, c, res[x * 8 + l]);
                             }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Giant-window max-pooling (k > 32, e.g. a 33×33 global max): a
+    /// single window exceeds the data cache, so each window runs as a
+    /// sequence of **row chunks** ([`gemm::pool_row_chunks`]); every
+    /// chunk's pass computes the engine's `max(0, resident rows)` and
+    /// the host folds the partial maxima with the same `gt` comparator
+    /// — bit-identical to the unsplit window because max is associative
+    /// and the 0x0000 comparator init is idempotent across partials.
+    fn run_giant_maxpool(
+        &mut self,
+        spec: &LayerSpec,
+        input: &TensorF16,
+        phases: &mut PhaseTimes,
+    ) -> Result<TensorF16> {
+        let k = spec.kernel as usize;
+        let s = spec.stride as usize;
+        let o = spec.o_side as usize;
+        let pad = spec.padding as usize;
+        let groups = input.c.div_ceil(8);
+        let mut out = Tensor::zeros(o, o, input.c);
+        for g in 0..groups {
+            for y in 0..o {
+                let y0 = (y * s).saturating_sub(pad);
+                let rows = (y * s + k - pad).min(input.h) - y0;
+                for x in 0..o {
+                    let c0 = (x * s).saturating_sub(pad);
+                    let width = (x * s + k - pad).min(input.w) - c0;
+                    let cpad = pad.saturating_sub(x * s);
+                    let mut best = [crate::fp16::F16::ZERO; 8];
+                    for rc in gemm::pool_row_chunks(rows, width) {
+                        let t0 = self.dev.usb.total_seconds();
+                        self.dev.load_data(&gemm::pool_slice_cols(input, y0 + rc.r0, rc.rows, g, c0, width))?;
+                        phases.add("load_gemm", self.dev.usb.total_seconds() - t0);
+                        let task = SliceTask {
+                            op: spec.op,
+                            k,
+                            stride: s,
+                            out_cols: 1,
+                            groups: 1,
+                            oc_count: 8,
+                            data_width: width,
+                            data_rows: rc.rows,
+                            pixel_mode: false,
+                            kernel_size_reg: spec.kernel_size(),
+                            skip_relu: spec.skip_relu,
+                            weight_base: 0,
+                            bias_base: 0,
+                            pool_pad: cpad,
+                            data_base: 0,
+                        };
+                        let n = self.dev.restart_engine(&task)?;
+                        ensure!(n == 8, "{}: giant pool pass produced {n}", spec.name);
+                        let t0 = self.dev.usb.total_seconds();
+                        let res = self.dev.read_results(n)?;
+                        phases.add("read_output", self.dev.usb.total_seconds() - t0);
+                        for (b, v) in best.iter_mut().zip(&res) {
+                            if v.gt(*b) {
+                                *b = *v;
+                            }
+                        }
+                    }
+                    for (l, b) in best.iter().enumerate() {
+                        let c = g * 8 + l;
+                        if c < input.c {
+                            out.set(y, x, c, *b);
                         }
                     }
                 }
@@ -767,6 +852,54 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "{name}");
             }
         }
+    }
+
+    #[test]
+    fn giant_window_maxpool_folds_rows_bit_identically() {
+        // 33×33 global max: a single window is 1089 words — bigger than
+        // the whole 1024-word data cache (the former k > 32 coverage
+        // hole) — so the window folds row-wise. Also a strided 40×40
+        // over 80 (o = 2×2) to exercise the x sweep.
+        for (name, spec, side) in [
+            ("giantmax", LayerSpec::maxpool("giantmax", 33, 33, 33, 16), 33usize),
+            ("giantstride", LayerSpec::maxpool("giantstride", 40, 40, 80, 8), 80usize),
+        ] {
+            let mut n = Network::new(name);
+            let inp = n.input(side as u32, spec.i_ch);
+            let ch = spec.i_ch as usize;
+            n.engine(spec, inp);
+            let blobs = synthesize_weights(&n, 0x61A);
+            let mut rng = Rng::new(0x61B);
+            let img = rand_image(&mut rng, side, ch);
+            let reference = forward_functional(&n, &blobs, &img).unwrap();
+            let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+            let res = HostDriver::new(&mut dev).forward(&n, &blobs, &img).unwrap();
+            let (a, b) = (res.outputs.last().unwrap(), reference.last().unwrap());
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{name}");
+            }
+            // More than one pass per (group, window): rows were chunked.
+            assert!(dev.stats.passes as usize > (spec_o(&n) * spec_o(&n)), "{name}");
+        }
+
+        fn spec_o(n: &Network) -> usize {
+            n.engine_layers()[0].o_side as usize
+        }
+    }
+
+    #[test]
+    fn giant_window_avgpool_is_rejected_with_clear_error() {
+        // The avg side of the coverage hole stays open: the divisor
+        // applies once over the whole window, so a row fold would not
+        // be exact. The driver must refuse loudly, not miscompute.
+        let mut n = Network::new("giantavg");
+        let inp = n.input(33, 8);
+        n.engine(LayerSpec::avgpool("gavg", 33, 33, 33, 8), inp);
+        let blobs = synthesize_weights(&n, 1);
+        let img = Tensor::from_vec(33, 33, 8, vec![0.5; 33 * 33 * 8]);
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        let err = HostDriver::new(&mut dev).forward(&n, &blobs, &img).unwrap_err();
+        assert!(format!("{err:#}").contains("avg-pool"), "got: {err:#}");
     }
 
     #[test]

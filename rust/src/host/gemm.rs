@@ -434,6 +434,45 @@ pub fn pool_col_chunks(k: usize, s: usize, pad: usize, in_w: usize, o_cols: usiz
     out
 }
 
+/// One row chunk of a **giant** pool window — a single window bigger
+/// than the whole data cache (`k² > 1024` words, i.e. `k > 32`, e.g. a
+/// 33×33 global pool): window rows `r0 .. r0+rows` resident.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolRowChunk {
+    /// First resident window row (relative to the window's clipped top).
+    pub r0: usize,
+    /// Resident rows this chunk covers.
+    pub rows: usize,
+}
+
+/// Split one giant pool window's `rows` (already clipped to the
+/// surface) into the fewest near-equal row chunks whose `rows · width`
+/// slice fits the data cache — the window-level counterpart of
+/// [`pool_col_chunks`], for windows where even column chunking cannot
+/// help because a single window exceeds the cache.
+///
+/// This split is exact **for max-pooling only**: max is associative and
+/// the RTL comparator's 0x0000 init (Fig 26) is idempotent across
+/// partials, so `max(0, all rows) = max over chunks of max(0, chunk)`
+/// bit for bit — the host folds the per-chunk partial maxima with the
+/// same `gt` comparator the engine uses. Average pooling has no such
+/// fold here (the divisor applies once over the whole window); a
+/// divisor-deferred partial protocol like the conv channel split
+/// remains open (see ROADMAP).
+pub fn pool_row_chunks(rows: usize, width: usize) -> Vec<PoolRowChunk> {
+    let budget = DATA_CACHE_VALUES / 8; // words
+    assert!(width <= budget, "a single pool row exceeds the data cache");
+    let max_rows = (budget / width).max(1);
+    let count = rows.div_ceil(max_rows);
+    let per = rows.div_ceil(count);
+    (0..count)
+        .map(|c| {
+            let r0 = c * per;
+            PoolRowChunk { r0, rows: per.min(rows - r0) }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -574,6 +613,35 @@ mod tests {
         let last = padded.last().unwrap();
         assert_eq!(last.c0 + last.width, 2000);
         assert_eq!(padded.iter().map(|c| c.cols).sum::<usize>(), 2000);
+    }
+
+    #[test]
+    fn pool_row_chunks_tile_giant_windows_and_fit() {
+        // 33×33 global pool: 1089 words > the 1024-word cache. Fewest
+        // chunks = 2, near-equal 17 + 16 rows, each slice fits.
+        let chunks = pool_row_chunks(33, 33);
+        assert_eq!(
+            chunks,
+            vec![PoolRowChunk { r0: 0, rows: 17 }, PoolRowChunk { r0: 17, rows: 16 }]
+        );
+        for c in &chunks {
+            assert!(c.rows * 33 <= DATA_CACHE_VALUES / 8, "{c:?}");
+        }
+        // 40×40 window (1600 words): 2 chunks of 20 rows.
+        let chunks = pool_row_chunks(40, 40);
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks.iter().map(|c| c.rows).sum::<usize>(), 40);
+        let mut next = 0;
+        for c in &chunks {
+            assert_eq!(c.r0, next);
+            next += c.rows;
+            assert!(c.rows * 40 <= DATA_CACHE_VALUES / 8);
+        }
+        // A window that fits is a single full chunk (degenerate case).
+        assert_eq!(pool_row_chunks(7, 7), vec![PoolRowChunk { r0: 0, rows: 7 }]);
+        // Clipped giant window (fewer resident rows) still chunks by
+        // the resident count, not k.
+        assert_eq!(pool_row_chunks(5, 200), vec![PoolRowChunk { r0: 0, rows: 5 }]);
     }
 
     #[test]

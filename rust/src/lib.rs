@@ -30,3 +30,4 @@ pub mod perfmodel;
 pub mod prop;
 pub mod resources;
 pub mod runtime;
+pub mod service;

@@ -6,8 +6,12 @@
 //! * `commands`   — print the 96-bit command stream (Table 2) for a net
 //! * `resources`  — resource model (Table 3) for a configuration
 //! * `timing`     — §5 timing model for a network/parallelism/link
+//! * `serve`      — drive the long-lived serving service from a
+//!   synthetic request trace (open-loop arrival, bounded queue)
 //! * `bench-diff` — compare two runs' BENCH_*.json, gate regressions
 //! * `selftest`   — quick functional sanity run
+
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -172,6 +176,99 @@ fn main() -> Result<()> {
                 println!("  epoch {e}: layers {}..{}", plan.start, plan.start + plan.len);
             }
         }
+        "serve" => {
+            // Long-lived service driven from a synthetic request trace:
+            // open-loop arrival (sleep between submits) against a
+            // bounded admission queue, per-request results streamed
+            // back, graceful shutdown with cumulative stats.
+            let net = match args.flags.get("net").map(|s| s.as_str()).unwrap_or("micro") {
+                "micro" => fusionaccel::net::squeezenet::micro_squeezenet(),
+                _ => load_net(&args.flags)?,
+            };
+            let n_req: usize = args.flags.get("requests").map(|v| v.parse()).transpose()?.unwrap_or(64);
+            let workers: usize = args.flags.get("workers").map(|v| v.parse()).transpose()?.unwrap_or(2);
+            let batch: usize = args.flags.get("batch").map(|v| v.parse()).transpose()?.unwrap_or(4);
+            let queue: usize = args
+                .flags
+                .get("queue")
+                .map(|v| v.parse())
+                .transpose()?
+                .unwrap_or(2 * workers * batch);
+            // Arrival rate in req/s; 0 = lossless as-fast-as-possible
+            // (submit_wait instead of shedding on QueueFull).
+            let rate: f64 = args.flags.get("rate").map(|v| v.parse()).transpose()?.unwrap_or(0.0);
+            let seed: u64 = args.flags.get("seed").map(|v| v.parse()).transpose()?.unwrap_or(5);
+
+            let blobs = synthesize_weights(&net, seed);
+            let (side, ch) = net.out_shape(0);
+            let mut repo = fusionaccel::compiler::ModelRepo::new();
+            repo.register(net.clone(), blobs)?;
+            let cfg = fusionaccel::service::ServiceConfig::new(fusionaccel::coordinator::ServeConfig::new(
+                UsbLink::usb3_frontpanel(),
+                workers,
+                batch,
+            ))
+            .with_queue_capacity(queue);
+            let svc = fusionaccel::service::Service::start(std::sync::Arc::new(repo), &cfg)?;
+            println!(
+                "serving {} — {n_req} requests, {workers} worker(s), batch ≤ {batch}, queue ≤ {queue}, \
+                 rate {}",
+                net.name,
+                if rate > 0.0 { format!("{rate:.0} req/s") } else { "unthrottled".to_string() }
+            );
+            let trace = fusionaccel::coordinator::synthetic_requests(n_req, seed, side as usize, ch as usize);
+            let interval = if rate > 0.0 { Duration::from_secs_f64(1.0 / rate) } else { Duration::ZERO };
+            let t0 = std::time::Instant::now();
+            let mut tickets = Vec::with_capacity(n_req);
+            let mut shed = 0usize;
+            for (i, req) in trace.into_iter().enumerate() {
+                if rate > 0.0 {
+                    // Open loop: hold the arrival schedule even when the
+                    // queue pushes back; a full queue sheds the arrival.
+                    let due = t0 + interval * i as u32;
+                    if let Some(wait) = due.checked_duration_since(std::time::Instant::now()) {
+                        std::thread::sleep(wait);
+                    }
+                    match svc.submit(req) {
+                        Ok(t) => tickets.push(t),
+                        Err(fusionaccel::service::SubmitError::QueueFull) => shed += 1,
+                        Err(e) => bail!("submit failed: {e}"),
+                    }
+                } else {
+                    tickets.push(svc.submit_wait(req).map_err(|e| anyhow::anyhow!("submit failed: {e}"))?);
+                }
+            }
+            let mut ok = 0usize;
+            let mut failed = 0usize;
+            for t in &tickets {
+                match t.wait() {
+                    Ok(_) => ok += 1,
+                    Err(f) => {
+                        failed += 1;
+                        eprintln!("request {} failed: {}", f.id, f.error);
+                    }
+                }
+            }
+            let stats = svc.shutdown()?;
+            println!(
+                "served {ok}, failed {failed}, shed at admission {shed} \
+                 ({} rejections recorded) in {:.3} s ({:.1} req/s wall, {:.1} req/s modeled)",
+                stats.admission_rejections, stats.wall_seconds, stats.throughput, stats.modeled_throughput
+            );
+            println!(
+                "latency p50/p99/p999 {}  |  queue wait p50/p99/p999 {}",
+                stats.latency.summary_ms(),
+                stats.queue_wait.summary_ms()
+            );
+            println!("batches: {}  (mean size {:.2})", stats.batch_hist.summary(), stats.batch_hist.mean());
+            println!(
+                "commands: {} loads + {} shadow replays; weights: {} loads, reuse ×{:.1}",
+                stats.command_loads,
+                stats.command_reuses,
+                stats.weight_loads,
+                stats.weight_reuse()
+            );
+        }
         "bench-diff" => {
             let old = args.flags.get("old").map(|s| s.as_str()).context("bench-diff needs --old <dir|file>")?;
             let new = args.flags.get("new").map(|s| s.as_str()).context("bench-diff needs --new <dir|file>")?;
@@ -202,6 +299,9 @@ fn main() -> Result<()> {
                  \x20 compile   --net ... [--weights-seed 1]   lower to a CSB artifact (passes, epochs, id)\n\
                  \x20 resources --parallelism 8 --precision 16\n\
                  \x20 timing    --net ... --parallelism 8 --link usb3|pcie\n\
+                 \x20 serve     [--net micro|squeezenet|...] [--requests 64] [--workers 2] [--batch 4]\n\
+                 \x20           [--queue 16] [--rate 200] [--seed 5]\n\
+                 \x20           long-lived service over a synthetic trace; --rate 0 = lossless submit_wait\n\
                  \x20 bench-diff --old <dir|file> --new <dir|file> [--threshold 0.15]\n\
                  \x20            CI regression gate over persisted BENCH_*.json metrics\n\
                  \x20 selftest\n\n\

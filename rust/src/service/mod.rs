@@ -1,0 +1,839 @@
+//! Long-lived serving service: async admission, streaming responses,
+//! and graceful lifecycle on top of the batching coordinator.
+//!
+//! Every earlier entry point ([`serve`], [`serve_batched`],
+//! [`serve_multi`]) is a *closed-batch* call: the full request vector
+//! exists before the worker pool spins up, and nothing can be admitted
+//! while a batch is in flight. [`Service`] inverts that ownership
+//! model — requests flow *into a running system*:
+//!
+//! ```text
+//!   Service::start(repo, cfg)           ← owns the worker pool
+//!        │
+//!   submit(req) ──► admission ──► Scheduler ──► batcher ──► worker ×N
+//!        │            │  result cache /            (admission keeps
+//!        ▼            │  in-flight dedup            going while these
+//!     Ticket ◄────────┴──── collector ◄── per-request completions
+//!        │                  (streams results out as workers finish,
+//!   wait()/try_wait()        not at end-of-batch)
+//!   /wait_timeout()
+//!        │
+//!   shutdown() ──► close queue, drain workers, return ServeStats
+//! ```
+//!
+//! * **Admission during flight** — [`Service::submit`] enqueues while
+//!   earlier batches are still executing. The queue is bounded by
+//!   [`ServiceConfig::queue_capacity`]: at capacity, `submit` returns
+//!   [`SubmitError::QueueFull`] (explicit backpressure the caller can
+//!   shed or retry on) and [`Service::submit_wait`] blocks for space.
+//! * **Streaming responses** — each submission returns a [`Ticket`];
+//!   results are delivered per request as they come off the workers
+//!   ([`Ticket::wait`] / [`try_wait`] / [`wait_timeout`]), so
+//!   completion order is decoupled from submission order: a light
+//!   request submitted late streams out while a heavy earlier one is
+//!   still in flight.
+//! * **Graceful lifecycle** — [`Service::shutdown`] closes the queue,
+//!   drains every in-flight request, joins the pool, and returns the
+//!   cumulative [`ServeStats`] (including the per-request latency
+//!   quantiles in [`crate::coordinator::metrics::Quantiles`]).
+//!
+//! This is what makes the [`BatchPolicy::batch_timeout`] straggler
+//! window *load-bearing*: in a closed batch the queue is closed before
+//! workers start, so partial batches flush via `Pop::Closed`; in a live
+//! service a partial batch genuinely waits out the window for
+//! stragglers, and a submission after the deadline lands in the *next*
+//! batch (tested in `tests/serving_service.rs`).
+//!
+//! The closed-batch entry points are now thin wrappers over this
+//! service ([`Service::start_paused`] + submit-all + [`shutdown`]), so
+//! their bit-identity and stats properties pin the service's
+//! equivalence to the original coordinator.
+//!
+//! Plain std threads + channels (no async runtime is available
+//! offline); "async" here means asynchronous *admission and
+//! completion*, not an executor.
+//!
+//! [`serve`]: crate::coordinator::serve
+//! [`serve_batched`]: crate::coordinator::serve_batched
+//! [`serve_multi`]: crate::coordinator::serve_multi
+//! [`BatchPolicy::batch_timeout`]: crate::coordinator::BatchPolicy
+//! [`try_wait`]: Ticket::try_wait
+//! [`wait_timeout`]: Ticket::wait_timeout
+//! [`shutdown`]: Service::shutdown
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::compiler::{LruCache, ModelRepo};
+use crate::coordinator::metrics::FailedRequest;
+use crate::coordinator::worker::{self, WorkerEvent};
+use crate::coordinator::{InferenceRequest, InferenceResponse, Scheduler, ServeConfig, ServeStats, WorkerStats};
+use crate::net::tensor::TensorF32;
+
+/// Configuration of a long-lived [`Service`]: the underlying pool/batch
+/// settings plus the admission-queue bound.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Worker pool, micro-batch policy, caches — identical semantics to
+    /// the closed-batch entry points.
+    pub serve: ServeConfig,
+    /// Maximum *outstanding* requests — admitted (queued, in flight, or
+    /// parked on an identical in-flight request) but not yet completed.
+    /// At capacity [`Service::submit`] returns
+    /// [`SubmitError::QueueFull`] and [`Service::submit_wait`] blocks.
+    /// `0` = unbounded (the closed-batch wrappers use this).
+    pub queue_capacity: usize,
+}
+
+impl ServiceConfig {
+    /// Unbounded-queue service over `serve` settings.
+    pub fn new(serve: ServeConfig) -> ServiceConfig {
+        ServiceConfig { serve, queue_capacity: 0 }
+    }
+
+    /// Bound the admission queue (backpressure point).
+    pub fn with_queue_capacity(mut self, capacity: usize) -> ServiceConfig {
+        self.queue_capacity = capacity;
+        self
+    }
+}
+
+/// Why a submission was not admitted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is at capacity — shed the request, retry
+    /// later, or use [`Service::submit_wait`].
+    QueueFull,
+    /// [`Service::shutdown`] already began; no new work is admitted.
+    Closed,
+    /// A request with this id is still outstanding — ids must be unique
+    /// among in-flight requests (they key the completion routing).
+    DuplicateId,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "admission queue full"),
+            SubmitError::Closed => write!(f, "service shutting down"),
+            SubmitError::DuplicateId => write!(f, "request id already outstanding"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// How one request ended: the streamed response, or the failure that
+/// would have landed in [`ServeStats::failures`].
+pub type TicketResult = Result<InferenceResponse, FailedRequest>;
+
+/// One-shot completion slot shared between a [`Ticket`] and the
+/// collector thread.
+#[derive(Debug, Default)]
+struct TicketCell {
+    slot: Mutex<Option<TicketResult>>,
+    cv: Condvar,
+}
+
+impl TicketCell {
+    fn fulfill(&self, result: TicketResult) {
+        let mut slot = self.slot.lock().unwrap();
+        debug_assert!(slot.is_none(), "ticket fulfilled twice");
+        *slot = Some(result);
+        drop(slot);
+        self.cv.notify_all();
+    }
+}
+
+/// Handle to one submitted request. Results stream out of the running
+/// service per request — waiting on a ticket never blocks on the rest
+/// of its micro-batch's *delivery*, let alone the whole load.
+#[derive(Clone, Debug)]
+pub struct Ticket {
+    id: u64,
+    cell: Arc<TicketCell>,
+}
+
+impl Ticket {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the request completes (or fails).
+    pub fn wait(&self) -> TicketResult {
+        let mut slot = self.cell.slot.lock().unwrap();
+        loop {
+            if let Some(r) = slot.as_ref() {
+                return r.clone();
+            }
+            slot = self.cell.cv.wait(slot).unwrap();
+        }
+    }
+
+    /// Non-blocking check: `None` while the request is still queued or
+    /// in flight.
+    pub fn try_wait(&self) -> Option<TicketResult> {
+        self.cell.slot.lock().unwrap().clone()
+    }
+
+    /// Move the stored result out (crate-internal: the closed-batch
+    /// wrappers are each ticket's sole waiter, so taking the response
+    /// avoids a deep clone of every probability vector). A taken ticket
+    /// reads as pending afterwards — never expose this to multi-waiter
+    /// callers.
+    pub(crate) fn take(&self) -> Option<TicketResult> {
+        self.cell.slot.lock().unwrap().take()
+    }
+
+    /// Wait at most `timeout`; `None` on expiry.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<TicketResult> {
+        let deadline = Instant::now() + timeout;
+        let mut slot = self.cell.slot.lock().unwrap();
+        loop {
+            if let Some(r) = slot.as_ref() {
+                return Some(r.clone());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (s, _) = self.cell.cv.wait_timeout(slot, deadline - now).unwrap();
+            slot = s;
+        }
+    }
+}
+
+/// Result-cache entry: everything needed to answer a duplicate request
+/// without a forward.
+#[derive(Clone, Debug)]
+struct CachedResult {
+    network: String,
+    probs: Vec<f32>,
+    argmax: usize,
+    worker: usize,
+}
+
+/// Exact content key of a request: network name + image dims + image
+/// bits. The full bits (not a hash) are the key, so a cache hit can
+/// never alias a different image — the bit-identical serving claim
+/// holds unconditionally, at the cost of one image copy per in-flight
+/// cache entry (bounded by the queue capacity plus the LRU capacity).
+type RequestKey = (String, Vec<u32>);
+
+fn request_key(network: &str, image: &TensorF32) -> RequestKey {
+    let mut bits = Vec::with_capacity(3 + image.data.len());
+    bits.push(image.h as u32);
+    bits.push(image.w as u32);
+    bits.push(image.c as u32);
+    bits.extend(image.data.iter().map(|v| v.to_bits()));
+    (network.to_string(), bits)
+}
+
+/// Most (latency, queue-wait) sample pairs a service retains: a
+/// long-lived run must not grow memory per request, so past this cap
+/// the samples degrade to an unbiased reservoir (quantiles become a
+/// uniform sample of the whole run instead of exact). 64 Ki pairs = 1
+/// MiB — far above any closed-batch load, so the wrappers' quantiles
+/// stay exact.
+const MAX_LATENCY_SAMPLES: usize = 1 << 16;
+
+/// Most `FailedRequest` *details* retained in `ServeStats::failures`;
+/// `ServeStats::failed` keeps counting past the cap.
+const MAX_FAILURE_DETAILS: usize = 1024;
+
+/// Everything admission (submit) and completion (collector) share.
+struct State {
+    /// Shutdown began: no further admission.
+    closed: bool,
+    /// Admitted but not yet completed (queued + in flight + parked).
+    outstanding: usize,
+    /// Tickets awaiting resolution, by request id.
+    tickets: HashMap<u64, Arc<TicketCell>>,
+    /// Image-keyed result cache (disabled at capacity 0 — the LruCache
+    /// is still allocated with capacity 1 but never consulted).
+    cache: LruCache<RequestKey, CachedResult>,
+    /// Content key → representative id currently in flight.
+    inflight: HashMap<RequestKey, u64>,
+    /// Representative id → duplicate ids parked on its completion.
+    parked: HashMap<u64, Vec<u64>>,
+    /// Representative id → content key (for cache fill on completion).
+    key_of: HashMap<u64, RequestKey>,
+    /// Cumulative run statistics (finalized at shutdown).
+    stats: ServeStats,
+    /// Bounded (reservoir past [`MAX_LATENCY_SAMPLES`]) per-request
+    /// samples, pushed in lockstep pairs.
+    latencies: Vec<f64>,
+    queue_waits: Vec<f64>,
+    /// Sample pairs observed over the whole run (≥ `latencies.len()`).
+    samples_seen: u64,
+    /// xorshift64 state for reservoir replacement (deterministic seed —
+    /// timing values are wall-clock anyway, so sampling determinism
+    /// only keeps reruns comparable, not bit-equal).
+    sample_rng: u64,
+}
+
+/// Record one completed request's (latency, queue wait) pair, keeping
+/// the retained set an unbiased uniform sample once the cap is hit
+/// (classic reservoir: element `n` survives with probability cap/n).
+fn record_sample(st: &mut State, latency: f64, queue_wait: f64) {
+    st.samples_seen += 1;
+    if st.latencies.len() < MAX_LATENCY_SAMPLES {
+        st.latencies.push(latency);
+        st.queue_waits.push(queue_wait);
+        return;
+    }
+    st.sample_rng ^= st.sample_rng << 13;
+    st.sample_rng ^= st.sample_rng >> 7;
+    st.sample_rng ^= st.sample_rng << 17;
+    let idx = (st.sample_rng % st.samples_seen) as usize;
+    if idx < MAX_LATENCY_SAMPLES {
+        st.latencies[idx] = latency;
+        st.queue_waits[idx] = queue_wait;
+    }
+}
+
+/// Count a failure, retaining its detail row only below the cap.
+fn record_failure(st: &mut State, f: &FailedRequest) {
+    st.stats.failed += 1;
+    if st.stats.failures.len() < MAX_FAILURE_DETAILS {
+        st.stats.failures.push(f.clone());
+    }
+}
+
+/// Shared core of a running service.
+struct Inner {
+    repo: Arc<ModelRepo>,
+    sched: Scheduler,
+    cfg: ServiceConfig,
+    state: Mutex<State>,
+    /// Signalled when outstanding drops (or the service closes) — what
+    /// [`Service::submit_wait`] parks on.
+    space: Condvar,
+}
+
+/// A running (or paused) serving service. See the module docs for the
+/// lifecycle; drop without [`Service::shutdown`] still drains and joins
+/// (best effort), but loses the stats.
+pub struct Service {
+    inner: Arc<Inner>,
+    /// Channel ends held only until [`Service::open`] hands them to the
+    /// pool — a paused service admits but does not yet serve.
+    tx: Option<mpsc::Sender<WorkerEvent>>,
+    rx: Option<mpsc::Receiver<WorkerEvent>>,
+    workers: Vec<JoinHandle<()>>,
+    collector: Option<JoinHandle<()>>,
+    started: Instant,
+}
+
+impl Service {
+    /// Start the full service: validate the configuration, spin up the
+    /// worker pool and the completion collector, and return the owning
+    /// handle. Admission is live immediately.
+    pub fn start(repo: Arc<ModelRepo>, cfg: &ServiceConfig) -> Result<Service> {
+        let mut svc = Service::start_paused(repo, cfg)?;
+        svc.open()?;
+        Ok(svc)
+    }
+
+    /// Start *paused*: admission works (submissions queue and park
+    /// exactly as when live) but no worker runs until [`Service::open`].
+    /// The closed-batch wrappers use this so the whole load is queued
+    /// before the pool spins up — batch formation is then deterministic,
+    /// exactly as in the original closed-batch coordinator. A paused
+    /// service with a bounded queue will hand [`SubmitError::QueueFull`]
+    /// to `submit` once full ([`Service::submit_wait`] would block until
+    /// `open`, since only completions free space).
+    pub fn start_paused(repo: Arc<ModelRepo>, cfg: &ServiceConfig) -> Result<Service> {
+        ensure!(cfg.serve.n_workers > 0, "need at least one worker");
+        ensure!(cfg.serve.policy.max_batch > 0, "max_batch must be at least 1");
+        ensure!(!repo.is_empty(), "no models registered");
+        let stats = ServeStats {
+            workers: (0..cfg.serve.n_workers)
+                .map(|w| WorkerStats { worker: w, ..Default::default() })
+                .collect(),
+            ..Default::default()
+        };
+        let inner = Arc::new(Inner {
+            repo,
+            sched: Scheduler::new(),
+            cfg: *cfg,
+            state: Mutex::new(State {
+                closed: false,
+                outstanding: 0,
+                tickets: HashMap::new(),
+                cache: LruCache::new(cfg.serve.result_cache.max(1)),
+                inflight: HashMap::new(),
+                parked: HashMap::new(),
+                key_of: HashMap::new(),
+                stats,
+                latencies: Vec::new(),
+                queue_waits: Vec::new(),
+                samples_seen: 0,
+                sample_rng: 0x9E37_79B9_7F4A_7C15,
+            }),
+            space: Condvar::new(),
+        });
+        let (tx, rx) = mpsc::channel::<WorkerEvent>();
+        Ok(Service {
+            inner,
+            tx: Some(tx),
+            rx: Some(rx),
+            workers: Vec::new(),
+            collector: None,
+            started: Instant::now(),
+        })
+    }
+
+    /// Spin up the worker pool and collector of a paused service. No-op
+    /// when already open.
+    pub fn open(&mut self) -> Result<()> {
+        let Some(tx) = self.tx.take() else { return Ok(()) };
+        // The run's wall clock starts when the pool starts serving —
+        // for the closed-batch wrappers this excludes the admission
+        // loop, exactly like the original closed-batch coordinator, so
+        // wall-derived throughput stays comparable across the refactor.
+        self.started = Instant::now();
+        let cfg = self.inner.cfg.serve;
+        for w in 0..cfg.n_workers {
+            let inner = self.inner.clone();
+            let tx = tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("fa-worker-{w}"))
+                .spawn(move || {
+                    let policy = inner.cfg.serve.policy;
+                    worker::run_worker(
+                        w,
+                        &inner.repo,
+                        inner.cfg.serve.link,
+                        &inner.sched,
+                        &policy,
+                        inner.cfg.serve.model_cache,
+                        &tx,
+                    )
+                })
+                .context("spawn worker")?;
+            self.workers.push(handle);
+        }
+        drop(tx); // workers hold the only senders: rx ends when they exit
+        let rx = self.rx.take().expect("rx present until first open");
+        let inner = self.inner.clone();
+        self.collector = Some(
+            std::thread::Builder::new()
+                .name("fa-collector".to_string())
+                .spawn(move || collect(&inner, rx))
+                .context("spawn collector")?,
+        );
+        Ok(())
+    }
+
+    /// Whether the pool is running (false = paused).
+    pub fn is_open(&self) -> bool {
+        self.tx.is_none()
+    }
+
+    /// Requests sitting in the scheduler queue right now (admitted, not
+    /// yet picked up by a worker).
+    pub fn queue_depth(&self) -> usize {
+        self.inner.sched.len()
+    }
+
+    /// Admitted-but-unfinished requests (queued + in flight + parked).
+    pub fn outstanding(&self) -> usize {
+        self.inner.state.lock().unwrap().outstanding
+    }
+
+    /// Admit one request without blocking. Errors with
+    /// [`SubmitError::QueueFull`] at capacity; an *unknown network* is
+    /// not a submit error — it streams back through the ticket as the
+    /// failure it would have been in [`ServeStats::failures`] (worker
+    /// `usize::MAX`, same as closed-batch admission).
+    pub fn submit(&self, req: InferenceRequest) -> Result<Ticket, SubmitError> {
+        self.admit(req, false)
+    }
+
+    /// [`Service::submit`], but block until queue space frees up (the
+    /// lossless flavor of backpressure).
+    pub fn submit_wait(&self, req: InferenceRequest) -> Result<Ticket, SubmitError> {
+        self.admit(req, true)
+    }
+
+    fn admit(&self, mut req: InferenceRequest, wait: bool) -> Result<Ticket, SubmitError> {
+        let inner = &self.inner;
+        let mut st = inner.state.lock().unwrap();
+        if st.closed {
+            return Err(SubmitError::Closed);
+        }
+        if st.tickets.contains_key(&req.id) {
+            return Err(SubmitError::DuplicateId);
+        }
+        let cell = Arc::new(TicketCell::default());
+        let ticket = Ticket { id: req.id, cell: cell.clone() };
+        // Admission resolves the network tag up front, exactly like the
+        // closed-batch flow: an unknown network never reaches a worker
+        // (and never needs a queue slot, so no capacity check yet).
+        let name = match inner.repo.resolve(req.network.as_deref()) {
+            Ok(name) => name,
+            Err(err) => {
+                let f = FailedRequest { id: req.id, worker: usize::MAX, error: format!("{err:#}") };
+                record_failure(&mut st, &f);
+                drop(st);
+                cell.fulfill(Err(f));
+                return Ok(ticket);
+            }
+        };
+        req.network = Some(name.clone());
+        let key = (inner.cfg.serve.result_cache > 0).then(|| request_key(&name, &req.image));
+        loop {
+            // A cached answer needs no queue slot, so it is served even
+            // at capacity — and re-checked after every capacity wait,
+            // since the completion that freed space may have been this
+            // very key's representative.
+            if let Some(k) = &key {
+                if let Some(hit) = st.cache.get(k) {
+                    st.stats.result_cache_hits += 1;
+                    st.stats.served += 1;
+                    record_sample(&mut st, 0.0, 0.0);
+                    let resp = InferenceResponse {
+                        id: req.id,
+                        network: hit.network,
+                        probs: hit.probs,
+                        argmax: hit.argmax,
+                        worker: hit.worker,
+                        service_seconds: 0.0,
+                        modeled_seconds: 0.0,
+                        queue_wait_seconds: 0.0,
+                        batch_size: 0,
+                    };
+                    drop(st);
+                    cell.fulfill(Ok(resp));
+                    return Ok(ticket);
+                }
+            }
+            if inner.cfg.queue_capacity == 0 || st.outstanding < inner.cfg.queue_capacity {
+                break;
+            }
+            if !wait {
+                st.stats.admission_rejections += 1;
+                return Err(SubmitError::QueueFull);
+            }
+            st = inner.space.wait(st).unwrap();
+            if st.closed {
+                return Err(SubmitError::Closed);
+            }
+        }
+        if let Some(key) = key {
+            if let Some(&rep) = st.inflight.get(&key) {
+                // Identical request already in flight: park on it (parks
+                // hold a slot — they are answered by a future completion,
+                // so their number must stay bounded too).
+                st.stats.result_cache_hits += 1;
+                st.outstanding += 1;
+                st.tickets.insert(req.id, cell);
+                st.parked.entry(rep).or_default().push(req.id);
+                return Ok(ticket);
+            }
+            st.inflight.insert(key.clone(), req.id);
+            st.key_of.insert(req.id, key);
+            st.stats.result_cache_misses += 1;
+        }
+        st.outstanding += 1;
+        st.tickets.insert(req.id, cell);
+        // Push while holding the state lock: `closed` and the scheduler's
+        // close flag flip together in begin_close, so a push can never
+        // race a concurrent shutdown into the scheduler's
+        // push-after-close panic.
+        inner.sched.push(req);
+        Ok(ticket)
+    }
+
+    /// Stop admission, let the pool drain every queued and in-flight
+    /// request, join all threads, and return the cumulative statistics
+    /// (same [`ServeStats`] the closed-batch calls return, plus the
+    /// service-mode fields: latency quantiles, admission rejections).
+    /// A paused service is opened first so its backlog still drains.
+    pub fn shutdown(mut self) -> Result<ServeStats> {
+        self.begin_close();
+        self.open()?; // a never-opened service still owes its backlog
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(c) = self.collector.take() {
+            let _ = c.join();
+        }
+        let wall = self.started.elapsed().as_secs_f64();
+        let mut st = self.inner.state.lock().unwrap();
+        // Defensive: a worker thread that died outside its panic guard
+        // would strand tickets; resolve them as lost instead of hanging
+        // their waiters forever.
+        let leftovers: Vec<u64> = st.tickets.keys().copied().collect();
+        for id in leftovers {
+            let f = FailedRequest {
+                id,
+                worker: usize::MAX,
+                error: "request lost at shutdown (worker died)".to_string(),
+            };
+            record_failure(&mut st, &f);
+            if let Some(cell) = st.tickets.remove(&id) {
+                cell.fulfill(Err(f));
+            }
+        }
+        st.outstanding = 0;
+        let mut stats = std::mem::take(&mut st.stats);
+        let mut latencies = std::mem::take(&mut st.latencies);
+        let mut queue_waits = std::mem::take(&mut st.queue_waits);
+        drop(st);
+        stats.failures.sort_by_key(|f| f.id);
+        stats.finalize(&mut latencies, &mut queue_waits, wall);
+        Ok(stats)
+    }
+
+    /// Flip to closed and close the scheduler under one state lock, so
+    /// admission can never push into a closed queue.
+    fn begin_close(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        if !st.closed {
+            st.closed = true;
+            self.inner.sched.close();
+        }
+        drop(st);
+        self.inner.space.notify_all();
+    }
+}
+
+impl Drop for Service {
+    /// Best-effort drain on drop (shutdown without the stats): close the
+    /// queue and join whatever threads are running, so a dropped handle
+    /// never leaks a worker pool. Never-opened backlogs are *not* served
+    /// here (drop must not spawn threads); their tickets resolve as lost.
+    fn drop(&mut self) {
+        self.begin_close();
+        self.rx.take(); // collector never spawned: drop the channel end
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(c) = self.collector.take() {
+            let _ = c.join();
+        }
+        let mut st = self.inner.state.lock().unwrap();
+        let leftovers: Vec<u64> = st.tickets.keys().copied().collect();
+        for id in leftovers {
+            let f = FailedRequest {
+                id,
+                worker: usize::MAX,
+                error: "service dropped before completion".to_string(),
+            };
+            if let Some(cell) = st.tickets.remove(&id) {
+                cell.fulfill(Err(f));
+            }
+        }
+    }
+}
+
+/// The collector loop: drain worker events into per-ticket completions
+/// and cumulative stats until every worker sender is gone.
+fn collect(inner: &Inner, rx: mpsc::Receiver<WorkerEvent>) {
+    for ev in rx {
+        let mut st = inner.state.lock().unwrap();
+        match ev {
+            WorkerEvent::Done(r) => {
+                let turnaround = r.queue_wait_seconds + r.service_seconds;
+                record_sample(&mut st, turnaround, r.queue_wait_seconds);
+                st.stats.workers[r.worker].served += 1;
+                st.stats.served += 1;
+                let mut completed = 1usize;
+                if let Some(key) = st.key_of.remove(&r.id) {
+                    st.inflight.remove(&key);
+                    st.cache.insert(
+                        key,
+                        CachedResult {
+                            network: r.network.clone(),
+                            probs: r.probs.clone(),
+                            argmax: r.argmax,
+                            worker: r.worker,
+                        },
+                    );
+                    for id in st.parked.remove(&r.id).unwrap_or_default() {
+                        record_sample(&mut st, turnaround, turnaround);
+                        st.stats.served += 1;
+                        completed += 1;
+                        let dup = InferenceResponse {
+                            id,
+                            network: r.network.clone(),
+                            probs: r.probs.clone(),
+                            argmax: r.argmax,
+                            worker: r.worker,
+                            service_seconds: 0.0,
+                            modeled_seconds: 0.0,
+                            queue_wait_seconds: turnaround,
+                            batch_size: 0,
+                        };
+                        resolve(&mut st, id, Ok(dup));
+                    }
+                }
+                resolve(&mut st, r.id, Ok(r));
+                st.outstanding = st.outstanding.saturating_sub(completed);
+                drop(st);
+                inner.space.notify_all();
+            }
+            WorkerEvent::Batch(m) => {
+                st.stats.batch_hist.record(m.size);
+                let w = &mut st.stats.workers[m.worker];
+                w.batches += 1;
+                w.link_seconds += m.link_seconds;
+                w.engine_seconds += m.engine_seconds;
+                w.busy_seconds += m.service_seconds;
+                w.weight_loads += m.weight_loads;
+                w.weight_sweeps += m.weight_sweeps;
+                w.weight_reuses += m.weight_reuses;
+                w.command_loads += m.command_loads;
+                w.command_reuses += m.command_reuses;
+                if m.model_cache_hit {
+                    w.model_cache_hits += 1;
+                } else {
+                    w.model_cache_misses += 1;
+                }
+            }
+            WorkerEvent::Failed(f) => {
+                let mut completed = 1usize;
+                // Unlike the one-shot coordinator, a long-lived service
+                // must clear the in-flight key on failure too, or later
+                // duplicates would park on a dead representative forever.
+                if let Some(key) = st.key_of.remove(&f.id) {
+                    st.inflight.remove(&key);
+                }
+                for id in st.parked.remove(&f.id).unwrap_or_default() {
+                    let dup = FailedRequest { id, worker: f.worker, error: f.error.clone() };
+                    record_failure(&mut st, &dup);
+                    completed += 1;
+                    resolve(&mut st, id, Err(dup));
+                }
+                record_failure(&mut st, &f);
+                resolve(&mut st, f.id, Err(f));
+                st.outstanding = st.outstanding.saturating_sub(completed);
+                drop(st);
+                inner.space.notify_all();
+            }
+        }
+    }
+}
+
+fn resolve(st: &mut State, id: u64, result: TicketResult) {
+    if let Some(cell) = st.tickets.remove(&id) {
+        cell.fulfill(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::usb::UsbLink;
+    use crate::net::graph::Network;
+    use crate::net::layer::LayerSpec;
+    use crate::net::tensor::Tensor;
+    use crate::net::weights::synthesize_weights;
+    use crate::prop::Rng;
+
+    fn tiny_repo() -> Arc<ModelRepo> {
+        let mut n = Network::new("tiny");
+        let inp = n.input(8, 3);
+        let c1 = n.engine(LayerSpec::conv("c1", 3, 1, 0, 8, 3, 8, 0), inp);
+        let gap = n.engine(LayerSpec::avgpool("gap", 6, 1, 6, 8), c1);
+        n.softmax("prob", gap);
+        let blobs = synthesize_weights(&n, 3);
+        let mut repo = ModelRepo::new();
+        repo.register(n, blobs).unwrap();
+        Arc::new(repo)
+    }
+
+    fn req(id: u64, rng: &mut Rng) -> InferenceRequest {
+        InferenceRequest::new(
+            id,
+            Tensor::from_vec(8, 8, 3, (0..8 * 8 * 3).map(|_| rng.normal(1.0)).collect()),
+        )
+    }
+
+    fn cfg(workers: usize, batch: usize) -> ServiceConfig {
+        ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), workers, batch))
+    }
+
+    #[test]
+    fn submit_wait_and_shutdown_round_trip() {
+        let svc = Service::start(tiny_repo(), &cfg(2, 2)).unwrap();
+        let mut rng = Rng::new(1);
+        let tickets: Vec<Ticket> = (0..6).map(|i| svc.submit(req(i, &mut rng)).unwrap()).collect();
+        for t in &tickets {
+            let r = t.wait().expect("forward succeeds");
+            assert_eq!(r.id, t.id());
+            assert_eq!(r.network, "tiny");
+        }
+        let stats = svc.shutdown().unwrap();
+        assert_eq!(stats.served, 6);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.admission_rejections, 0);
+        assert!(stats.throughput > 0.0);
+    }
+
+    #[test]
+    fn unknown_network_streams_back_as_failure() {
+        let svc = Service::start(tiny_repo(), &cfg(1, 1)).unwrap();
+        let mut rng = Rng::new(2);
+        let t = svc.submit(req(0, &mut rng).for_network("ghost")).unwrap();
+        let err = t.wait().expect_err("unknown network must fail");
+        assert_eq!(err.worker, usize::MAX, "never reached a worker");
+        assert!(err.error.contains("ghost"));
+        let stats = svc.shutdown().unwrap();
+        assert_eq!((stats.served, stats.failed), (0, 1));
+        assert_eq!(stats.failures[0].id, 0);
+    }
+
+    #[test]
+    fn duplicate_outstanding_id_is_rejected() {
+        let repo = tiny_repo();
+        let mut svc = Service::start_paused(repo, &cfg(1, 1)).unwrap();
+        let mut rng = Rng::new(3);
+        let t = svc.submit(req(7, &mut rng)).unwrap();
+        assert_eq!(svc.submit(req(7, &mut rng)).unwrap_err(), SubmitError::DuplicateId);
+        // Paused: nothing resolves yet.
+        assert!(t.wait_timeout(Duration::from_millis(10)).is_none());
+        svc.open().unwrap();
+        assert!(t.wait().is_ok());
+        // Completed ids may be reused (only *outstanding* ids collide).
+        let t2 = svc.submit(req(7, &mut rng)).unwrap();
+        assert!(t2.wait().is_ok());
+        assert_eq!(svc.shutdown().unwrap().served, 2);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_then_submit_wait_blocks_through() {
+        let svc_cfg = cfg(1, 1).with_queue_capacity(2);
+        let mut svc = Service::start_paused(tiny_repo(), &svc_cfg).unwrap();
+        let mut rng = Rng::new(4);
+        let t0 = svc.submit(req(0, &mut rng)).unwrap();
+        let t1 = svc.submit(req(1, &mut rng)).unwrap();
+        assert_eq!(svc.submit(req(2, &mut rng)).unwrap_err(), SubmitError::QueueFull);
+        assert_eq!(svc.outstanding(), 2);
+        svc.open().unwrap();
+        // Blocking submit admits as soon as a completion frees a slot.
+        let t2 = svc.submit_wait(req(2, &mut rng)).unwrap();
+        for t in [&t0, &t1, &t2] {
+            assert!(t.wait().is_ok());
+        }
+        let stats = svc.shutdown().unwrap();
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.admission_rejections, 1, "the QueueFull shed is a tracked stat");
+    }
+
+    #[test]
+    fn dropped_service_joins_and_fails_leftover_tickets() {
+        let svc = Service::start_paused(tiny_repo(), &cfg(1, 1)).unwrap();
+        let mut rng = Rng::new(5);
+        let t = svc.submit(req(0, &mut rng)).unwrap();
+        drop(svc); // never opened: the backlog is lost, not leaked
+        let err = t.wait().expect_err("dropped service must fail the ticket");
+        assert!(err.error.contains("dropped"));
+    }
+}

@@ -309,6 +309,60 @@ fn passes_preserve_engine_order() {
     }
 }
 
+/// Satellite (PR 5): `fold_avgpool_head` — a global-average head's
+/// trailing ReLU folds away when the pool's producer is an activated
+/// conv, and the compiled stream stays bit-identical to the raw
+/// functional reference. The chained variant (standalone conv relu
+/// fused first, then the trailing relu folded) exercises the fixpoint.
+#[test]
+fn fold_avgpool_head_is_bit_identical_and_drops_the_relu() {
+    let mut net = Network::new("gap_head");
+    let inp = net.input(10, 3);
+    let mut c1 = LayerSpec::conv("c1", 3, 1, 1, 10, 3, 6, 0);
+    c1.skip_relu = true; // standalone relu below — fused in round 1
+    let c1n = net.engine(c1, inp);
+    let r1 = net.relu("r1", c1n);
+    let gap = net.engine(LayerSpec::avgpool("gap", 10, 1, 10, 6), r1);
+    let r2 = net.relu("r2", gap);
+    net.softmax("prob", r2);
+    net.check().unwrap();
+
+    let blobs = synthesize_weights(&net, 0x9A9);
+    let stream = compile(&net, fnv1a(&blobs.to_bytes())).unwrap();
+    // Both relus are gone: one fused into the conv command, the trailing
+    // one folded by the new pass.
+    assert!(stream.net.find("r1").is_none());
+    assert!(stream.net.find("r2").is_none());
+    assert!(stream.report.summary().contains("fold_avgpool_head×1"), "{}", stream.report.summary());
+    assert_eq!(stream.net.nodes.len(), 4);
+
+    let mut rng = Rng::new(0x9AA);
+    let image = random_image(&mut rng, &net);
+    let reference = forward_functional(&net, &blobs, &image).unwrap();
+    let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+    let res = HostDriver::new(&mut dev).forward_compiled(&stream, &blobs, &image).unwrap();
+    assert_eq!(last_bits(&res.outputs), last_bits(&reference));
+
+    // The guard rail: the same head over a *pre-activation* conv keeps
+    // its relu (averaged negatives must still be clipped on the host).
+    let mut neg = Network::new("gap_preact");
+    let inp = neg.input(10, 3);
+    let mut c1 = LayerSpec::conv("c1", 3, 1, 1, 10, 3, 6, 0);
+    c1.skip_relu = true;
+    let c1n = neg.engine(c1, inp);
+    let gap = neg.engine(LayerSpec::avgpool("gap", 10, 1, 10, 6), c1n);
+    let r = neg.relu("r", gap);
+    neg.softmax("prob", r);
+    let blobs = synthesize_weights(&neg, 0x9AB);
+    let stream = compile(&neg, fnv1a(&blobs.to_bytes())).unwrap();
+    assert!(stream.net.find("r").is_some(), "pre-activation head: relu must survive");
+    let image = random_image(&mut rng, &neg);
+    let reference = forward_functional(&neg, &blobs, &image).unwrap();
+    let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+    let res = HostDriver::new(&mut dev).forward_compiled(&stream, &blobs, &image).unwrap();
+    assert_eq!(last_bits(&res.outputs), last_bits(&reference));
+}
+
 /// The compile-time layout pass: granularity is recorded on the
 /// artifact per engine layer, so `forward_compiled` reads it instead of
 /// re-deriving it per forward (the former ROADMAP "layout pass" item).

@@ -1,0 +1,356 @@
+//! Long-lived service acceptance tests: admission during flight with
+//! streaming per-request completion (the tentpole invariant), the now
+//! load-bearing `batch_timeout` straggler window, affinity-cap
+//! starvation protection under a live submission stream, and
+//! closed-batch wrapper equivalence.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fusionaccel::compiler::ModelRepo;
+use fusionaccel::coordinator::{
+    batcher::MAX_AFFINITY_STREAK, serve_batched, BatchPolicy, InferenceRequest, ServeConfig,
+};
+use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::graph::Network;
+use fusionaccel::net::layer::LayerSpec;
+use fusionaccel::net::tensor::{Tensor, TensorF32};
+use fusionaccel::net::weights::synthesize_weights;
+use fusionaccel::prop::Rng;
+use fusionaccel::service::{Service, ServiceConfig, Ticket};
+
+/// Small conv+gap net (sub-millisecond forwards).
+fn light_net(name: &str) -> Network {
+    let mut n = Network::new(name);
+    let inp = n.input(8, 3);
+    let c1 = n.engine(LayerSpec::conv("c1", 3, 1, 0, 8, 3, 8, 0), inp);
+    let gap = n.engine(LayerSpec::avgpool("gap", 6, 1, 6, 8), c1);
+    n.softmax("prob", gap);
+    n
+}
+
+/// Deliberately heavy net: a deep 16-channel conv chain at 32×32 whose
+/// simulated forward takes tens of milliseconds — long enough that a
+/// light request submitted *after* it reliably completes first.
+fn heavy_net() -> Network {
+    let mut n = Network::new("heavy");
+    let inp = n.input(32, 16);
+    let mut cur = inp;
+    for i in 0..12 {
+        cur = n.engine(LayerSpec::conv(&format!("c{i}"), 3, 1, 1, 32, 16, 16, 0), cur);
+    }
+    let gap = n.engine(LayerSpec::avgpool("gap", 32, 1, 32, 16), cur);
+    n.softmax("prob", gap);
+    n
+}
+
+fn image(net: &Network, rng: &mut Rng) -> TensorF32 {
+    let (side, ch) = net.out_shape(0);
+    let (s, c) = (side as usize, ch as usize);
+    Tensor::from_vec(s, s, c, (0..s * s * c).map(|_| rng.normal(1.0)).collect())
+}
+
+fn repo_of(nets: &[&Network], seed: u64) -> Arc<ModelRepo> {
+    let mut repo = ModelRepo::new();
+    for (i, n) in nets.iter().enumerate() {
+        repo.register((*n).clone(), synthesize_weights(n, seed + i as u64)).unwrap();
+    }
+    Arc::new(repo)
+}
+
+/// TENTPOLE ACCEPTANCE: results stream out of a live service while
+/// later submissions are still being admitted — completion order is
+/// decoupled from submission order. A heavy request goes in first and
+/// is picked up (queue drains); a light request submitted *afterwards*
+/// completes while the heavy one is still in flight.
+#[test]
+fn results_stream_while_later_submissions_are_admitted() {
+    let heavy = heavy_net();
+    let light = light_net("light");
+    let repo = repo_of(&[&heavy, &light], 0x11F);
+    let mut rng = Rng::new(0x120);
+    let heavy_img = image(&heavy, &mut rng);
+    let light_img = image(&light, &mut rng);
+
+    // Two workers, single-request batches: one worker takes the heavy
+    // forward, the other is free for whatever arrives later.
+    let cfg = ServiceConfig::new(ServeConfig::single(UsbLink::usb3_frontpanel(), 2));
+    let svc = Service::start(repo, &cfg).unwrap();
+
+    let heavy_ticket =
+        svc.submit(InferenceRequest::new(0, heavy_img).for_network("heavy")).unwrap();
+    // Wait until a worker picked it up (queue drained) so the next
+    // submission is genuinely "admitted during flight".
+    let t0 = Instant::now();
+    while svc.queue_depth() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "heavy request never picked up");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // Admission while the heavy batch is in flight:
+    let light_ticket =
+        svc.submit(InferenceRequest::new(1, light_img).for_network("light")).unwrap();
+    assert!(heavy_ticket.try_wait().is_none(), "heavy forward should still be in flight");
+
+    // The light result streams out FIRST even though it was submitted
+    // last — completion order decoupled from submission order.
+    let light_resp = light_ticket.wait().expect("light forward succeeds");
+    assert_eq!(light_resp.network, "light");
+    assert!(
+        heavy_ticket.try_wait().is_none(),
+        "light completed while heavy still in flight: out-of-order streaming"
+    );
+
+    let heavy_resp = heavy_ticket.wait().expect("heavy forward succeeds");
+    assert_eq!(heavy_resp.network, "heavy");
+    assert_ne!(light_resp.worker, heavy_resp.worker, "two workers served concurrently");
+
+    let stats = svc.shutdown().unwrap();
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.failed, 0);
+    assert!(stats.latency.max >= stats.latency.p50);
+}
+
+/// SATELLITE: the `batch_timeout` straggler window is load-bearing in a
+/// live service. A lone request's batch waits the window out (the queue
+/// stays open — closed-batch runs never exercised this), flushes at
+/// size 1, and a straggler submitted after the deadline lands in the
+/// *next* batch.
+#[test]
+fn straggler_after_deadline_lands_in_next_batch() {
+    let net = light_net("tiny");
+    let repo = repo_of(&[&net], 0x121);
+    let mut rng = Rng::new(0x122);
+    let timeout = Duration::from_millis(60);
+    let cfg = ServiceConfig::new(ServeConfig {
+        link: UsbLink::usb3_frontpanel(),
+        n_workers: 1,
+        policy: BatchPolicy { max_batch: 4, batch_timeout: timeout },
+        result_cache: 0,
+        model_cache: 4,
+    });
+    let svc = Service::start(repo, &cfg).unwrap();
+
+    let t0 = Instant::now();
+    let first = svc.submit(InferenceRequest::new(0, image(&net, &mut rng))).unwrap();
+    let r0 = first.wait().expect("first request succeeds");
+    // The open batch sat out the whole straggler window before flushing
+    // partial — nothing else was queued, and the queue was NOT closed.
+    assert!(t0.elapsed() >= timeout, "batch flushed before the straggler deadline");
+    assert_eq!(r0.batch_size, 1, "no straggler arrived: the batch flushed at size 1");
+
+    // Submitted strictly after the first batch's deadline (its result
+    // already streamed back): lands in the NEXT batch.
+    let second = svc.submit(InferenceRequest::new(1, image(&net, &mut rng))).unwrap();
+    let r1 = second.wait().expect("straggler succeeds");
+    assert!(r1.batch_size >= 1 && r1.batch_size <= 4);
+
+    let stats = svc.shutdown().unwrap();
+    assert_eq!(stats.served, 2);
+    assert!(stats.batch_hist.batches() >= 2, "two separate batches: {:?}", stats.batch_hist);
+    assert_eq!(stats.batch_hist.requests(), 2);
+}
+
+/// SATELLITE: the `MAX_AFFINITY_STREAK` aging cap holds under
+/// continuous single-network submission to a live service — a lone
+/// other-network request is served at (not after) the cap while the
+/// dominant stream keeps arriving.
+#[test]
+fn affinity_cap_prevents_starvation_under_live_stream() {
+    // Medium-weight nets (a couple of milliseconds per forward) so the
+    // live submission loop below always outruns the single worker.
+    let med = |name: &str| {
+        let mut n = Network::new(name);
+        let inp = n.input(16, 8);
+        let c1 = n.engine(LayerSpec::conv("c1", 3, 1, 1, 16, 8, 16, 0), inp);
+        let c2 = n.engine(LayerSpec::conv("c2", 3, 1, 1, 16, 16, 16, 0), c1);
+        let gap = n.engine(LayerSpec::avgpool("gap", 16, 1, 16, 16), c2);
+        n.softmax("prob", gap);
+        n
+    };
+    let a = med("net_a");
+    let b = med("net_b");
+    let repo = repo_of(&[&a, &b], 0x123);
+    let mut rng = Rng::new(0x124);
+    // One worker, single-request batches: serve order is the pop order.
+    let cfg = ServiceConfig::new(ServeConfig {
+        link: UsbLink::usb3_frontpanel(),
+        n_workers: 1,
+        policy: BatchPolicy { max_batch: 1, batch_timeout: Duration::ZERO },
+        result_cache: 0,
+        model_cache: 4,
+    });
+    // Pre-fill deterministically (4 "a" then the lone "b"), then open
+    // and keep the "a" stream flowing into the live queue.
+    let mut svc = Service::start_paused(repo, &cfg).unwrap();
+    let mut a_tickets: Vec<Ticket> = Vec::new();
+    for id in 0..4u64 {
+        a_tickets
+            .push(svc.submit(InferenceRequest::new(id, image(&a, &mut rng)).for_network("net_a")).unwrap());
+    }
+    let b_ticket =
+        svc.submit(InferenceRequest::new(99, image(&b, &mut rng)).for_network("net_b")).unwrap();
+    // Pre-build the live stream so the submit loop after open() is pure
+    // pushes — the queue always outruns the worker's first forwards.
+    let live: Vec<InferenceRequest> = (100..125u64)
+        .map(|id| InferenceRequest::new(id, image(&a, &mut rng)).for_network("net_a"))
+        .collect();
+    svc.open().unwrap();
+    for req in live {
+        a_tickets.push(svc.submit(req).unwrap());
+    }
+
+    // When "b" streams back, the worker must have served at most the
+    // streak cap of "a" requests first — and most of the "a" stream is
+    // still pending behind it (it was not starved to the end).
+    b_ticket.wait().expect("the lone b request must be served");
+    let done_a = a_tickets.iter().filter(|t| t.try_wait().is_some()).count();
+    assert!(
+        done_a >= MAX_AFFINITY_STREAK,
+        "b resolved before the cap was reached: {done_a} a-requests done"
+    );
+    assert!(
+        done_a <= MAX_AFFINITY_STREAK + 4,
+        "b was bypassed past the aging cap: {done_a} a-requests served first"
+    );
+    assert!(
+        a_tickets.iter().filter(|t| t.try_wait().is_none()).count() >= 10,
+        "most of the a stream should still be pending when b completes"
+    );
+
+    for t in &a_tickets {
+        t.wait().expect("a requests succeed");
+    }
+    let stats = svc.shutdown().unwrap();
+    assert_eq!(stats.served, 30);
+    assert_eq!(stats.failed, 0);
+}
+
+/// The closed-batch wrapper really is the service: serve_batched over a
+/// load equals submitting the same load to a paused service by hand and
+/// collecting tickets — same bits, same stat totals.
+#[test]
+fn closed_batch_wrapper_equals_manual_service_run() {
+    let net = light_net("wrap");
+    let blobs = synthesize_weights(&net, 0x125);
+    let make = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        (0..10u64)
+            .map(|id| InferenceRequest::new(id, image(&light_net("wrap"), &mut rng)))
+            .collect::<Vec<_>>()
+    };
+    let cfg = ServeConfig::new(UsbLink::usb3_frontpanel(), 2, 4);
+    let (wrapped, wrapped_stats) = serve_batched(&net, &blobs, &cfg, make(9)).unwrap();
+
+    let mut repo = ModelRepo::new();
+    repo.register(net.clone(), blobs).unwrap();
+    let svc = Service::start_paused(Arc::new(repo), &ServiceConfig::new(cfg)).unwrap();
+    let tickets: Vec<Ticket> = make(9).into_iter().map(|r| svc.submit(r).unwrap()).collect();
+    let manual_stats = svc.shutdown().unwrap();
+    let mut manual: Vec<_> = tickets.iter().map(|t| t.try_wait().unwrap().unwrap()).collect();
+    manual.sort_by_key(|r| r.id);
+
+    assert_eq!(wrapped.len(), manual.len());
+    for (a, b) in wrapped.iter().zip(&manual) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.probs, b.probs, "req {}", a.id);
+        assert_eq!(a.argmax, b.argmax);
+    }
+    assert_eq!(wrapped_stats.served, manual_stats.served);
+    assert_eq!(wrapped_stats.failed, manual_stats.failed);
+    assert_eq!(
+        wrapped_stats.batch_hist.requests(),
+        manual_stats.batch_hist.requests()
+    );
+}
+
+/// A cached answer needs no queue slot: with the service saturated at
+/// capacity by in-flight work, fresh requests are shed with QueueFull
+/// but a duplicate of an already-served (network, image) pair is still
+/// answered instantly from the result cache.
+#[test]
+fn cache_answers_duplicates_even_at_capacity() {
+    let heavy = heavy_net();
+    let light = light_net("light");
+    let repo = repo_of(&[&heavy, &light], 0x128);
+    let mut rng = Rng::new(0x129);
+    let cfg = ServiceConfig::new(
+        ServeConfig::single(UsbLink::usb3_frontpanel(), 1).with_result_cache(8),
+    )
+    .with_queue_capacity(2);
+    let svc = Service::start(repo, &cfg).unwrap();
+
+    // Prime the cache: one light request served to completion.
+    let x = image(&light, &mut rng);
+    svc.submit(InferenceRequest::new(0, x.clone()).for_network("light"))
+        .unwrap()
+        .wait()
+        .expect("priming request succeeds");
+
+    // Saturate: one heavy in flight + one heavy queued = capacity 2.
+    let h1 = svc.submit(InferenceRequest::new(1, image(&heavy, &mut rng)).for_network("heavy")).unwrap();
+    let t0 = Instant::now();
+    while svc.queue_depth() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "heavy request never picked up");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let h2 = svc.submit(InferenceRequest::new(2, image(&heavy, &mut rng)).for_network("heavy")).unwrap();
+    assert_eq!(svc.outstanding(), 2);
+
+    // Fresh work is shed at capacity…
+    assert_eq!(
+        svc.submit(InferenceRequest::new(3, image(&light, &mut rng)).for_network("light"))
+            .unwrap_err(),
+        fusionaccel::service::SubmitError::QueueFull
+    );
+    // …but the cached duplicate answers instantly, no slot needed.
+    let dup = svc.submit(InferenceRequest::new(4, x).for_network("light")).unwrap();
+    let r = dup
+        .try_wait()
+        .expect("cache hit resolves at admission")
+        .expect("cached result is a response");
+    assert_eq!(r.batch_size, 0, "no forward of its own");
+
+    h1.wait().expect("heavy 1 succeeds");
+    h2.wait().expect("heavy 2 succeeds");
+    let stats = svc.shutdown().unwrap();
+    assert_eq!(stats.served, 4);
+    assert_eq!(stats.result_cache_hits, 1);
+    assert_eq!(stats.admission_rejections, 1);
+}
+
+/// Backpressure end to end on a live service: a bounded queue rejects
+/// with QueueFull while full, `submit_wait` rides the space condvar
+/// through, and the shed count lands in the shutdown stats.
+#[test]
+fn bounded_live_service_backpressure_round_trip() {
+    let net = light_net("bp");
+    let repo = repo_of(&[&net], 0x126);
+    let mut rng = Rng::new(0x127);
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 2))
+        .with_queue_capacity(3);
+    let svc = Service::start(repo, &cfg).unwrap();
+    let mut tickets = Vec::new();
+    let mut rejected = 0usize;
+    for id in 0..24u64 {
+        // Lossless submission: block for space instead of shedding…
+        if id % 2 == 0 {
+            tickets.push(svc.submit_wait(InferenceRequest::new(id, image(&net, &mut rng))).unwrap());
+        } else {
+            // …interleaved with lossy fire-and-forget submission.
+            match svc.submit(InferenceRequest::new(id, image(&net, &mut rng))) {
+                Ok(t) => tickets.push(t),
+                Err(fusionaccel::service::SubmitError::QueueFull) => rejected += 1,
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert!(svc.outstanding() <= 3, "capacity must bound outstanding work");
+    }
+    for t in &tickets {
+        t.wait().expect("admitted requests succeed");
+    }
+    let stats = svc.shutdown().unwrap();
+    assert_eq!(stats.served, tickets.len());
+    assert_eq!(stats.admission_rejections, rejected);
+    assert_eq!(stats.served + stats.admission_rejections, 24);
+}
