@@ -249,6 +249,56 @@ fn main() -> anyhow::Result<()> {
         stats.admission_rejections
     );
 
+    // ---- network front door: the same service over TCP ----------------
+    // A FrontDoor turns the in-process Service into a socket server:
+    // length-prefixed binary frames, per-connection request numbering,
+    // out-of-order completion streaming, and typed shed responses.
+    println!("\n-- network front door (loopback TCP, 4 pipelining clients) --");
+    let svc = std::sync::Arc::new(fusionaccel::service::Service::start(
+        std::sync::Arc::new(repo.snapshot()),
+        &fusionaccel::service::ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), workers, 4)),
+    )?);
+    let door = fusionaccel::frontdoor::FrontDoor::bind(svc.clone(), "127.0.0.1:0")?;
+    let addr = door.local_addr();
+    let per_client = 6usize;
+    let handles: Vec<_> = (0..4u64)
+        .map(|c| {
+            std::thread::spawn(move || -> anyhow::Result<usize> {
+                use fusionaccel::frontdoor::proto::{RequestMsg, ResponseMsg};
+                let mut client = fusionaccel::frontdoor::client::Client::connect(addr)?;
+                // Pipeline the whole slice, then drain: responses come
+                // back in completion order, matched up by id.
+                for (i, req) in synthetic_requests(per_client, 11 + c, 32, 3).into_iter().enumerate() {
+                    client.send(&RequestMsg::new(i as u64, req.image))?;
+                }
+                let mut ok = 0usize;
+                for _ in 0..per_client {
+                    match client.recv()? {
+                        Some(ResponseMsg::Ok { .. }) => ok += 1,
+                        other => anyhow::bail!("client {c}: unexpected response {other:?}"),
+                    }
+                }
+                Ok(ok)
+            })
+        })
+        .collect();
+    let mut ok = 0usize;
+    for h in handles {
+        ok += h.join().expect("client thread panicked")?;
+    }
+    let door_stats = door.shutdown();
+    println!(
+        "answered {ok} wire requests over {} connections ({} frames out, {} sheds, {} protocol errors)",
+        door_stats.connections(),
+        door_stats.responses(),
+        door_stats.sheds(),
+        door_stats.protocol_errors()
+    );
+    let svc = std::sync::Arc::try_unwrap(svc).ok().expect("front door released the service");
+    let stats = svc.shutdown()?;
+    anyhow::ensure!(stats.served == 4 * per_client && stats.failed == 0);
+    anyhow::ensure!(door_stats.protocol_errors() == 0);
+
     println!("\nserve OK");
     Ok(())
 }

@@ -11,7 +11,10 @@ use std::time::{Duration, Instant};
 
 use fusionaccel::benchkit::{section, table};
 use fusionaccel::compiler::ModelRepo;
-use fusionaccel::coordinator::{serve_batched, synthetic_requests, InferenceRequest, ServeConfig};
+use fusionaccel::coordinator::{serve_batched, synthetic_requests, InferenceRequest, Quantiles, ServeConfig};
+use fusionaccel::frontdoor::client::Client;
+use fusionaccel::frontdoor::proto::{RequestMsg, ResponseMsg};
+use fusionaccel::frontdoor::FrontDoor;
 use fusionaccel::hw::usb::UsbLink;
 use fusionaccel::net::alexnet::fc6_tail;
 use fusionaccel::net::squeezenet::micro_squeezenet;
@@ -162,6 +165,57 @@ fn main() {
     json.push(("service_p50_latency_ms_open_w2_b4".to_string(), stats.latency.p50 * 1e3));
     json.push(("service_p99_latency_ms_open_w2_b4".to_string(), stats.latency.p99 * 1e3));
     json.push(("service_p999_latency_ms_open_w2_b4".to_string(), stats.latency.p999 * 1e3));
+
+    section("network front door: closed-loop TCP round trips (8 clients, 2 workers, batch 4)");
+    // The same service behind the length-prefixed wire protocol: 8
+    // closed-loop loopback clients, each a thread doing sequential
+    // round trips. Goodput (completed round trips per wall second)
+    // gates higher-is-better; the p99 round-trip tail is tracked but
+    // informational at this sample size.
+    let mut repo = ModelRepo::new();
+    repo.register(net.clone(), blobs.clone()).unwrap();
+    let svc = Arc::new(
+        Service::start(Arc::new(repo), &ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 2, 4)))
+            .unwrap(),
+    );
+    let door = FrontDoor::bind(svc.clone(), "127.0.0.1:0").unwrap();
+    let addr = door.local_addr();
+    const WIRE_CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 8;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..WIRE_CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).expect("connect front door");
+                let reqs = synthetic_requests(PER_CLIENT, 0x31BE + c as u64, 32, 3);
+                let mut latencies = Vec::with_capacity(PER_CLIENT);
+                for req in reqs {
+                    let sent = Instant::now();
+                    let resp = client.request(&RequestMsg::new(req.id, req.image)).expect("round trip");
+                    assert!(matches!(resp, ResponseMsg::Ok { .. }), "wire bench got {resp:?}");
+                    latencies.push(sent.elapsed().as_secs_f64());
+                }
+                latencies
+            })
+        })
+        .collect();
+    let mut latencies: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    door.shutdown();
+    let svc = Arc::try_unwrap(svc).ok().expect("door released its service handle");
+    let stats = svc.shutdown().unwrap();
+    assert_eq!(stats.served, WIRE_CLIENTS * PER_CLIENT);
+    assert_eq!(stats.failed, 0);
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = Quantiles::from_sorted(&latencies);
+    let goodput = (WIRE_CLIENTS * PER_CLIENT) as f64 / wall;
+    println!(
+        "  wire: {goodput:.1} round trips/s over {WIRE_CLIENTS} connections, round-trip {}",
+        q.summary_ms()
+    );
+    json.push(("wire_roundtrip_req_per_s_w2_b4".to_string(), goodput));
+    json.push(("wire_p50_latency_ms_w2_b4".to_string(), q.p50 * 1e3));
+    json.push(("wire_p99_latency_ms_w2_b4".to_string(), q.p99 * 1e3));
 
     fusionaccel::benchkit::persist_json("serve_throughput", &json);
     println!("serve_throughput OK");

@@ -304,14 +304,21 @@ pub enum MetricDirection {
 }
 
 /// Classify a metric for the gate: serve-throughput `req_per_s` keys
-/// are higher-better; `latency` keys and every `gemm_hotpath`
-/// nanosecond median are lower-better — EXCEPT tail latency (`p99`,
-/// `p999`), which is tracked but never gated: on a CI-sized sample the
-/// nearest-rank tail *is* the single worst wall-clock request, a max
-/// statistic one scheduler stall on a shared runner can inflate past
-/// any threshold. Everything else is informational.
+/// (loadgen goodput included) are higher-better; `latency` keys and
+/// every `gemm_hotpath` nanosecond median are lower-better — EXCEPT
+/// tail latency (`p99`, `p999`), which is tracked but never gated: on
+/// a CI-sized sample the nearest-rank tail *is* the single worst
+/// wall-clock request, a max statistic one scheduler stall on a shared
+/// runner can inflate past any threshold. Loadgen health/config
+/// readings (`shed`, `wrong`, `unanswered`, `offered`) are explicitly
+/// informational: shed rate under deliberate overload is a feature
+/// reading, not a regression, and wrong-result/unanswered counts fail
+/// the smoke step directly rather than riding the percentage gate.
+/// Everything else is informational.
 pub fn metric_direction(bench: &str, key: &str) -> MetricDirection {
-    if key.contains("req_per_s") {
+    if key.contains("shed") || key.contains("wrong") || key.contains("unanswered") || key.contains("offered") {
+        MetricDirection::Informational
+    } else if key.contains("req_per_s") {
         MetricDirection::HigherIsBetter
     } else if key.contains("latency") && key.contains("p99") {
         MetricDirection::Informational
@@ -451,6 +458,33 @@ mod tests {
         assert_eq!(
             metric_direction("serve_throughput", "weight_reuse_b8_w2"),
             MetricDirection::Informational
+        );
+    }
+
+    #[test]
+    fn loadgen_metrics_classify_for_the_gate() {
+        // Goodput gates higher-is-better: losing wire throughput is a
+        // regression the diff must catch.
+        assert_eq!(
+            metric_direction("loadgen", "loadgen_goodput_req_per_s"),
+            MetricDirection::HigherIsBetter
+        );
+        // Median round-trip latency gates low; the tails are tracked
+        // but ungated (same carve-out as the service bench).
+        assert_eq!(metric_direction("loadgen", "loadgen_p50_latency_ms"), MetricDirection::LowerIsBetter);
+        assert_eq!(metric_direction("loadgen", "loadgen_p99_latency_ms"), MetricDirection::Informational);
+        assert_eq!(metric_direction("loadgen", "loadgen_p999_latency_ms"), MetricDirection::Informational);
+        // Shed rate and the health/config counters never gate — the
+        // smoke step fails hard on wrong results instead.
+        assert_eq!(metric_direction("loadgen", "loadgen_shed_rate"), MetricDirection::Informational);
+        assert_eq!(metric_direction("loadgen", "loadgen_offered_rate"), MetricDirection::Informational);
+        assert_eq!(metric_direction("loadgen", "loadgen_wrong_results"), MetricDirection::Informational);
+        assert_eq!(metric_direction("loadgen", "loadgen_unanswered"), MetricDirection::Informational);
+        // Front-door wire round-trip throughput in the bench target
+        // rides the same req_per_s rule.
+        assert_eq!(
+            metric_direction("serve_throughput", "wire_roundtrip_req_per_s_w2_b4"),
+            MetricDirection::HigherIsBetter
         );
     }
 

@@ -96,6 +96,57 @@ impl Quantiles {
     }
 }
 
+/// Fixed-capacity ring of the most recent samples — the *live* view a
+/// long-lived service reads at admission time. Deadline-aware shedding
+/// needs "what are queue waits like right now", which the
+/// run-cumulative quantiles in [`ServeStats`] (finalized at shutdown)
+/// cannot answer: a ring of the last `cap` completions tracks the
+/// current operating point and forgets a transient spike once `cap`
+/// fresh completions wash it out.
+#[derive(Clone, Debug)]
+pub struct RecentWindow {
+    buf: Vec<f64>,
+    /// Slot the next push overwrites once the ring is full.
+    next: usize,
+    cap: usize,
+}
+
+impl RecentWindow {
+    pub fn new(cap: usize) -> RecentWindow {
+        assert!(cap > 0, "window capacity must be positive");
+        RecentWindow { buf: Vec::with_capacity(cap), next: 0, cap }
+    }
+
+    /// Record one sample, evicting the oldest once the ring is full.
+    pub fn push(&mut self, v: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Nearest-rank quantile over the retained samples — 0.0 when empty,
+    /// so a cold window predicts nothing rather than something.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.buf.clone();
+        sort_f64(&mut sorted);
+        percentile(&sorted, p)
+    }
+}
+
 /// A request whose forward failed or panicked — reported instead of
 /// hanging the response channel.
 #[derive(Clone, Debug)]
@@ -201,6 +252,13 @@ pub struct ServeStats {
     /// long-lived service ([`crate::service::Service`]); always 0 for
     /// the closed-batch wrappers (their queue is unbounded).
     pub admission_rejections: usize,
+    /// Submissions shed with `SubmitError::DeadlineShed`: requests whose
+    /// deadline the live queue-wait window said could not be met, turned
+    /// away at admission instead of burning an engine pass on a response
+    /// the caller would discard. Goodput = `served` (everything served
+    /// met admission); `deadline_sheds / (served + deadline_sheds)` is
+    /// the shed rate under overload.
+    pub deadline_sheds: usize,
     /// Histogram of assembled batch sizes.
     pub batch_hist: BatchHistogram,
     /// Per-worker modeled link/engine breakdown.
@@ -377,6 +435,30 @@ mod tests {
         s.result_cache_hits = 3;
         s.result_cache_misses = 1;
         assert_eq!(s.result_cache_hit_rate(), 0.75);
+    }
+
+    #[test]
+    fn recent_window_evicts_oldest_and_tracks_quantiles() {
+        let mut w = RecentWindow::new(4);
+        assert!(w.is_empty());
+        assert_eq!(w.quantile(0.9), 0.0, "cold window predicts nothing");
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            w.push(v);
+        }
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.quantile(1.0), 4.0);
+        // Two more pushes evict 1.0 and 2.0: the window now holds 3..=6.
+        w.push(5.0);
+        w.push(6.0);
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.quantile(0.0), 3.0, "oldest samples washed out");
+        assert_eq!(w.quantile(1.0), 6.0);
+        // A spike is forgotten after `cap` fresh samples.
+        w.push(1000.0);
+        for _ in 0..4 {
+            w.push(1.0);
+        }
+        assert_eq!(w.quantile(1.0), 1.0);
     }
 
     #[test]

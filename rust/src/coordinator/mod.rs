@@ -64,7 +64,7 @@ use crate::net::weights::Blobs;
 use crate::service::{Service, ServiceConfig};
 
 pub use batcher::BatchPolicy;
-pub use metrics::{BatchHistogram, FailedRequest, Quantiles, ServeStats, WorkerStats};
+pub use metrics::{BatchHistogram, FailedRequest, Quantiles, RecentWindow, ServeStats, WorkerStats};
 pub use scheduler::{Pop, QueuedRequest, Scheduler};
 
 /// A queued inference request.

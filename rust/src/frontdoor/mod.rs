@@ -1,0 +1,368 @@
+//! Network front door: a TCP line protocol in front of the long-lived
+//! [`Service`] — the layer that turns the in-process serving loop of
+//! PR 5 into something thousands of remote clients can actually hit.
+//!
+//! ```text
+//!   TcpListener ──► acceptor thread
+//!                        │ per connection
+//!             ┌──────────┴──────────┐
+//!        reader thread         writer thread
+//!    read_frame → decode       drain Outbound channel
+//!    → Service::submit /       → encode → write_frame
+//!      submit_deadline              ▲
+//!         │ Ticket::on_complete ────┘  (completions stream back the
+//!         ▼                            moment they land — out of
+//!    Shed/Failed answered inline       order per connection)
+//! ```
+//!
+//! Design points:
+//!
+//! * **No thread per in-flight request.** A connection costs exactly
+//!   two threads regardless of how many requests it pipelines;
+//!   completions route through [`Ticket::on_complete`] into the
+//!   connection's outbound channel, so a deep pipeline is just a deeper
+//!   channel.
+//! * **Connection-scoped ids.** Every client numbers its own requests
+//!   from 0; the door maps them to globally unique service ids
+//!   (`next_id`), so id discipline is per-connection — exactly what
+//!   independent clients need — while [`Service`]'s duplicate-id guard
+//!   keeps meaning something internally.
+//! * **Typed load shedding on the wire.** `QueueFull` and
+//!   `DeadlineShed` come back as [`proto::ResponseMsg::Shed`] frames
+//!   with the predicted turnaround, so a client can tell "retry later"
+//!   apart from "your deadline was hopeless" apart from a hard failure.
+//! * **Connection failure is local.** A malformed frame answers one
+//!   `Failed` frame and closes that connection; a mid-request
+//!   disconnect lets the in-flight tickets complete into a dead channel
+//!   (the service drains them normally — nothing is poisoned); a torn
+//!   length prefix is an `UnexpectedEof` on that socket alone.
+//!
+//! [`Service`]: crate::service::Service
+//! [`Ticket::on_complete`]: crate::service::Ticket::on_complete
+
+pub mod client;
+pub mod proto;
+
+use std::io::{BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::InferenceRequest;
+use crate::service::{Service, SubmitError, TicketResult};
+use proto::{FrameRead, ProtoError, RequestMsg, ResponseMsg, ShedReason};
+
+/// How often a blocked socket read re-checks the stop flag. The latency
+/// cost is paid only at shutdown (a live frame wakes the read
+/// immediately); 100 ms keeps teardown snappy without busy-polling.
+const READ_POLL: Duration = Duration::from_millis(100);
+
+/// Reap finished connection handles once the list grows past this — a
+/// long-lived door must not accumulate a JoinHandle per historical
+/// connection.
+const REAP_THRESHOLD: usize = 64;
+
+/// Response to a request whose id could not be parsed out of the frame.
+const UNPARSEABLE_ID: u64 = u64::MAX;
+
+/// Door-level counters (cumulative since bind). All reads are
+/// `Relaxed` — they are monitoring data, not synchronization.
+#[derive(Debug, Default)]
+pub struct DoorStats {
+    connections: AtomicU64,
+    requests: AtomicU64,
+    responses: AtomicU64,
+    sheds: AtomicU64,
+    protocol_errors: AtomicU64,
+}
+
+impl DoorStats {
+    /// Connections accepted.
+    pub fn connections(&self) -> u64 {
+        self.connections.load(Ordering::Relaxed)
+    }
+
+    /// Requests decoded and admitted to the service.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Response frames written (ok + shed + failed).
+    pub fn responses(&self) -> u64 {
+        self.responses.load(Ordering::Relaxed)
+    }
+
+    /// Requests answered with a `Shed` frame (queue-full + deadline).
+    pub fn sheds(&self) -> u64 {
+        self.sheds.load(Ordering::Relaxed)
+    }
+
+    /// Connections dropped for protocol violations (bad frame, torn
+    /// prefix, hostile length).
+    pub fn protocol_errors(&self) -> u64 {
+        self.protocol_errors.load(Ordering::Relaxed)
+    }
+}
+
+/// One completion headed for a connection's writer thread, tagged with
+/// the *connection-scoped* id the client knows.
+enum Outbound {
+    Done(u64, TicketResult),
+    Shed { id: u64, reason: ShedReason, predicted_us: u32 },
+    Failed { id: u64, error: String },
+}
+
+/// Everything the acceptor and every connection thread share.
+struct Shared {
+    svc: Arc<Service>,
+    stop: AtomicBool,
+    stats: Arc<DoorStats>,
+    /// Global service-id allocator (connection ids are remapped through
+    /// this, so every outstanding request has a unique service id).
+    next_id: AtomicU64,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A listening front door. [`FrontDoor::shutdown`] (or drop) stops the
+/// acceptor and joins every connection thread; the underlying
+/// [`Service`] is *not* shut down — the door borrows it (via `Arc`),
+/// the caller owns its lifecycle.
+pub struct FrontDoor {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl FrontDoor {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting connections against `svc`.
+    pub fn bind<A: ToSocketAddrs>(svc: Arc<Service>, addr: A) -> Result<FrontDoor> {
+        let listener = TcpListener::bind(addr).context("bind front door")?;
+        let addr = listener.local_addr().context("front door local addr")?;
+        let shared = Arc::new(Shared {
+            svc,
+            stop: AtomicBool::new(false),
+            stats: Arc::new(DoorStats::default()),
+            next_id: AtomicU64::new(0),
+            conns: Mutex::new(Vec::new()),
+        });
+        let acceptor = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("fa-door-accept".to_string())
+                .spawn(move || accept_loop(&listener, &shared))
+                .context("spawn acceptor")?
+        };
+        Ok(FrontDoor { addr, shared, acceptor: Some(acceptor) })
+    }
+
+    /// The bound address (resolves the ephemeral port of `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> Arc<DoorStats> {
+        self.shared.stats.clone()
+    }
+
+    /// Stop accepting, join every connection thread, and return the
+    /// door counters. In-flight requests finish their service-side work
+    /// regardless (the service is untouched); their responses are
+    /// written if the writer drains them first, dropped otherwise.
+    pub fn shutdown(mut self) -> Arc<DoorStats> {
+        self.close();
+        self.shared.stats.clone()
+    }
+
+    /// Idempotent teardown shared by [`FrontDoor::shutdown`] and drop.
+    fn close(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            // Wake a blocked accept() with a throwaway connection; the
+            // acceptor re-checks the stop flag before serving it.
+            let _ = TcpStream::connect(self.addr);
+            let _ = h.join();
+        }
+        let conns: Vec<JoinHandle<()>> = std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FrontDoor {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    for conn in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue, // transient accept error: keep listening
+        };
+        shared.stats.connections.fetch_add(1, Ordering::Relaxed);
+        let _ = stream.set_nodelay(true);
+        // Short read timeout so a blocked reader polls the stop flag.
+        let _ = stream.set_read_timeout(Some(READ_POLL));
+        let write_half = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => continue, // dup failed: drop the connection
+        };
+        let (tx, rx) = mpsc::channel::<Outbound>();
+        let reader = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("fa-door-read".to_string())
+                .spawn(move || run_reader(stream, &shared, &tx))
+        };
+        let writer = {
+            let stats = shared.stats.clone();
+            std::thread::Builder::new()
+                .name("fa-door-write".to_string())
+                .spawn(move || run_writer(write_half, rx, &stats))
+        };
+        let mut conns = shared.conns.lock().unwrap();
+        conns.extend(reader.into_iter().chain(writer));
+        if conns.len() > REAP_THRESHOLD {
+            conns.retain(|h| !h.is_finished());
+        }
+    }
+}
+
+/// Per-connection read loop: frames in, submissions out. Returning
+/// drops the connection's `tx`, which (once every in-flight
+/// `on_complete` clone fires) closes the writer's channel and ends the
+/// writer thread too.
+fn run_reader(mut stream: TcpStream, shared: &Arc<Shared>, tx: &mpsc::Sender<Outbound>) {
+    loop {
+        let body = match proto::read_frame(&mut stream, &shared.stop) {
+            Ok(FrameRead::Frame(b)) => b,
+            Ok(FrameRead::CleanEof) | Ok(FrameRead::Stopped) => return,
+            Err(_) => {
+                // Torn prefix/body or hostile length: a wire-level
+                // violation of this connection only.
+                shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        let msg = match proto::decode_request(&body) {
+            Ok(m) => m,
+            Err(e) => {
+                // Malformed but complete frame: answer once, then hang
+                // up — the stream state is no longer trustworthy.
+                shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(Outbound::Failed { id: UNPARSEABLE_ID, error: protocol_error_text(&e) });
+                return;
+            }
+        };
+        if !submit_one(shared, tx, msg) {
+            return;
+        }
+    }
+}
+
+fn protocol_error_text(e: &ProtoError) -> String {
+    format!("protocol error: {e}")
+}
+
+/// Remap, submit, and route one decoded request. Returns `false` when
+/// the connection should close (service closed, or the writer is gone).
+fn submit_one(shared: &Arc<Shared>, tx: &mpsc::Sender<Outbound>, msg: RequestMsg) -> bool {
+    let cid = msg.id;
+    let gid = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    let mut req = InferenceRequest::new(gid, msg.image);
+    req.network = msg.network;
+    let deadline = (msg.deadline_us > 0).then(|| Duration::from_micros(u64::from(msg.deadline_us)));
+    let submitted = match deadline {
+        Some(budget) => shared.svc.submit_deadline(req, budget),
+        None => shared.svc.submit(req),
+    };
+    match submitted {
+        Ok(ticket) => {
+            shared.stats.requests.fetch_add(1, Ordering::Relaxed);
+            let tx = tx.clone();
+            ticket.on_complete(move |r| {
+                // The writer may already be gone (peer disconnected):
+                // the completion then lands in a closed channel, which
+                // is exactly the drain-without-poisoning we want.
+                let _ = tx.send(Outbound::Done(cid, r));
+            });
+            true
+        }
+        Err(SubmitError::QueueFull) => {
+            shared.stats.sheds.fetch_add(1, Ordering::Relaxed);
+            tx.send(Outbound::Shed { id: cid, reason: ShedReason::QueueFull, predicted_us: 0 }).is_ok()
+        }
+        Err(SubmitError::DeadlineShed { predicted_us }) => {
+            shared.stats.sheds.fetch_add(1, Ordering::Relaxed);
+            let predicted_us = u32::try_from(predicted_us).unwrap_or(u32::MAX);
+            tx.send(Outbound::Shed { id: cid, reason: ShedReason::Deadline, predicted_us }).is_ok()
+        }
+        Err(SubmitError::Closed) => {
+            let _ = tx.send(Outbound::Failed { id: cid, error: SubmitError::Closed.to_string() });
+            false
+        }
+        // Unreachable with door-allocated global ids, but answer
+        // truthfully rather than panicking a server thread.
+        Err(e @ SubmitError::DuplicateId) => tx.send(Outbound::Failed { id: cid, error: e.to_string() }).is_ok(),
+    }
+}
+
+/// Per-connection write loop: completions (in whatever order they
+/// land), sheds, and failures — encoded and flushed one frame each.
+fn run_writer(stream: TcpStream, rx: mpsc::Receiver<Outbound>, stats: &Arc<DoorStats>) {
+    let mut w = BufWriter::new(stream);
+    for out in rx {
+        let msg = match out {
+            Outbound::Done(cid, Ok(resp)) => ResponseMsg::Ok {
+                id: cid,
+                argmax: u32::try_from(resp.argmax).unwrap_or(u32::MAX),
+                probs: resp.probs,
+            },
+            Outbound::Done(cid, Err(f)) => ResponseMsg::Failed { id: cid, error: f.error },
+            Outbound::Shed { id, reason, predicted_us } => ResponseMsg::Shed { id, reason, predicted_us },
+            Outbound::Failed { id, error } => ResponseMsg::Failed { id, error },
+        };
+        let body = proto::encode_response(&msg);
+        if proto::write_frame(&mut w, &body).and_then(|()| w.flush()).is_err() {
+            // Peer gone: stop writing. Remaining completions drain into
+            // the closed channel as their tickets resolve.
+            return;
+        }
+        stats.responses.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+// Integration-level behavior (malformed frames, disconnects, overload
+// shedding, bit-identity over the wire) lives in
+// `rust/tests/frontdoor_wire.rs`; this module keeps only what needs
+// private access.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn door_stats_default_to_zero() {
+        let s = DoorStats::default();
+        assert_eq!(
+            (s.connections(), s.requests(), s.responses(), s.sheds(), s.protocol_errors()),
+            (0, 0, 0, 0, 0)
+        );
+    }
+
+    #[test]
+    fn unparseable_id_sentinel_is_reserved() {
+        // Clients must never use u64::MAX as a request id if they want
+        // to tell their own failures apart from frame-level rejections.
+        assert_eq!(UNPARSEABLE_ID, u64::MAX);
+    }
+}

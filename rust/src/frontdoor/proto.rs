@@ -1,0 +1,488 @@
+//! Wire protocol of the network front door: length-prefixed binary
+//! frames over TCP, little-endian throughout (the host byte order of
+//! every deployment target, and the convention the blob packers in
+//! [`crate::compiler`] already use).
+//!
+//! ```text
+//!   frame     := u32le payload_len · payload        (len ≤ MAX_FRAME)
+//!   request   := 0x01 · u64le id · u32le deadline_us
+//!              · u16le name_len · name bytes (UTF-8, may be empty)
+//!              · u16le h · u16le w · u16le c · f32le × h·w·c
+//!   ok        := 0x02 · u64le id · u32le argmax
+//!              · u32le n_probs · f32le × n_probs
+//!   shed      := 0x03 · u64le id · u8 reason · u32le predicted_us
+//!   failed    := 0x04 · u64le id · u32le msg_len · msg bytes (UTF-8)
+//! ```
+//!
+//! Request ids are *connection-scoped*: each connection numbers its own
+//! requests and the door maps them to globally unique service ids, so
+//! thousands of clients can all start at id 0. `deadline_us == 0` means
+//! "no deadline" (plain [`crate::service::Service::submit`]); nonzero
+//! routes through `submit_deadline`, and an unmeetable budget comes
+//! back as a `shed` frame with [`ShedReason::Deadline`]. Probabilities
+//! are the exact f32 bits the service produced — the round-trip is
+//! bit-identical, which the wire property test pins.
+//!
+//! Decoding is strict: an unknown tag, a truncated body, or trailing
+//! bytes is a [`ProtoError`], and the door answers one `failed` frame
+//! then closes *that* connection only.
+
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::net::tensor::{Tensor, TensorF32};
+
+/// Hard ceiling on one frame's payload (16 MiB) — a torn or hostile
+/// length prefix must not make the reader allocate unbounded memory.
+/// The largest legitimate request (227×227×3 AlexNet input) is ~600 KiB.
+pub const MAX_FRAME: usize = 1 << 24;
+
+pub const TAG_REQUEST: u8 = 0x01;
+pub const TAG_OK: u8 = 0x02;
+pub const TAG_SHED: u8 = 0x03;
+pub const TAG_FAILED: u8 = 0x04;
+
+/// Why the door turned a request away without serving it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Bounded admission queue at capacity (`SubmitError::QueueFull`).
+    QueueFull,
+    /// The live queue-wait window predicted the request's deadline
+    /// cannot be met (`SubmitError::DeadlineShed`).
+    Deadline,
+}
+
+impl ShedReason {
+    pub fn code(self) -> u8 {
+        match self {
+            ShedReason::QueueFull => 1,
+            ShedReason::Deadline => 2,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Result<ShedReason, ProtoError> {
+        match code {
+            1 => Ok(ShedReason::QueueFull),
+            2 => Ok(ShedReason::Deadline),
+            _ => Err(ProtoError::BadShedReason(code)),
+        }
+    }
+}
+
+/// One inference request as it travels the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestMsg {
+    /// Connection-scoped id (the client's own numbering).
+    pub id: u64,
+    /// Turnaround budget in µs; 0 = no deadline.
+    pub deadline_us: u32,
+    /// Network tag; `None` = the server's default model.
+    pub network: Option<String>,
+    pub image: TensorF32,
+}
+
+impl RequestMsg {
+    pub fn new(id: u64, image: TensorF32) -> RequestMsg {
+        RequestMsg { id, deadline_us: 0, network: None, image }
+    }
+
+    pub fn with_deadline_us(mut self, deadline_us: u32) -> RequestMsg {
+        self.deadline_us = deadline_us;
+        self
+    }
+
+    pub fn for_network(mut self, network: &str) -> RequestMsg {
+        self.network = Some(network.to_string());
+        self
+    }
+}
+
+/// One response frame: the served result, a typed shed, or a failure.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ResponseMsg {
+    Ok { id: u64, argmax: u32, probs: Vec<f32> },
+    Shed { id: u64, reason: ShedReason, predicted_us: u32 },
+    Failed { id: u64, error: String },
+}
+
+impl ResponseMsg {
+    /// The connection-scoped request id this frame answers.
+    pub fn id(&self) -> u64 {
+        match self {
+            ResponseMsg::Ok { id, .. } | ResponseMsg::Shed { id, .. } | ResponseMsg::Failed { id, .. } => *id,
+        }
+    }
+}
+
+/// A frame that does not parse. The door treats every variant the same
+/// way — answer `failed`, close the connection — but the variants keep
+/// tests and logs precise about *what* was malformed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ProtoError {
+    BadTag(u8),
+    BadShedReason(u8),
+    /// Body ended before the structure it promised.
+    Truncated,
+    /// Body parsed but left unconsumed bytes.
+    Trailing(usize),
+    /// String field was not UTF-8.
+    BadUtf8,
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::BadTag(t) => write!(f, "unknown frame tag 0x{t:02x}"),
+            ProtoError::BadShedReason(c) => write!(f, "unknown shed reason {c}"),
+            ProtoError::Truncated => write!(f, "frame body truncated"),
+            ProtoError::Trailing(n) => write!(f, "{n} trailing bytes after frame body"),
+            ProtoError::BadUtf8 => write!(f, "string field is not UTF-8"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Strict little-endian cursor over one frame body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        let end = self.pos.checked_add(n).ok_or(ProtoError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(ProtoError::Truncated);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ProtoError> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, ProtoError> {
+        let raw = self.bytes(n.checked_mul(4).ok_or(ProtoError::Truncated)?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn finish(self) -> Result<(), ProtoError> {
+        if self.pos != self.buf.len() {
+            return Err(ProtoError::Trailing(self.buf.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Encode a request frame body (no length prefix — [`write_frame`]
+/// adds it).
+pub fn encode_request(msg: &RequestMsg) -> Vec<u8> {
+    let img = &msg.image;
+    let name = msg.network.as_deref().unwrap_or("");
+    assert!(name.len() <= u16::MAX as usize, "network name too long for the wire");
+    assert!(
+        img.h <= u16::MAX as usize && img.w <= u16::MAX as usize && img.c <= u16::MAX as usize,
+        "image dims too large for the wire"
+    );
+    let mut out = Vec::with_capacity(1 + 8 + 4 + 2 + name.len() + 6 + img.data.len() * 4);
+    out.push(TAG_REQUEST);
+    put_u64(&mut out, msg.id);
+    put_u32(&mut out, msg.deadline_us);
+    put_u16(&mut out, name.len() as u16);
+    out.extend_from_slice(name.as_bytes());
+    put_u16(&mut out, img.h as u16);
+    put_u16(&mut out, img.w as u16);
+    put_u16(&mut out, img.c as u16);
+    for v in &img.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a request frame body (strict: trailing bytes are an error).
+pub fn decode_request(body: &[u8]) -> Result<RequestMsg, ProtoError> {
+    let mut c = Cursor::new(body);
+    let tag = c.u8()?;
+    if tag != TAG_REQUEST {
+        return Err(ProtoError::BadTag(tag));
+    }
+    let id = c.u64()?;
+    let deadline_us = c.u32()?;
+    let name_len = c.u16()? as usize;
+    let name = std::str::from_utf8(c.bytes(name_len)?).map_err(|_| ProtoError::BadUtf8)?.to_string();
+    let h = c.u16()? as usize;
+    let w = c.u16()? as usize;
+    let ch = c.u16()? as usize;
+    let data = c.f32s(h.checked_mul(w).and_then(|hw| hw.checked_mul(ch)).ok_or(ProtoError::Truncated)?)?;
+    c.finish()?;
+    Ok(RequestMsg {
+        id,
+        deadline_us,
+        network: (!name.is_empty()).then_some(name),
+        image: Tensor::from_vec(h, w, ch, data),
+    })
+}
+
+/// Encode a response frame body.
+pub fn encode_response(msg: &ResponseMsg) -> Vec<u8> {
+    match msg {
+        ResponseMsg::Ok { id, argmax, probs } => {
+            let mut out = Vec::with_capacity(1 + 8 + 4 + 4 + probs.len() * 4);
+            out.push(TAG_OK);
+            put_u64(&mut out, *id);
+            put_u32(&mut out, *argmax);
+            put_u32(&mut out, probs.len() as u32);
+            for v in probs {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out
+        }
+        ResponseMsg::Shed { id, reason, predicted_us } => {
+            let mut out = Vec::with_capacity(1 + 8 + 1 + 4);
+            out.push(TAG_SHED);
+            put_u64(&mut out, *id);
+            out.push(reason.code());
+            put_u32(&mut out, *predicted_us);
+            out
+        }
+        ResponseMsg::Failed { id, error } => {
+            let mut out = Vec::with_capacity(1 + 8 + 4 + error.len());
+            out.push(TAG_FAILED);
+            put_u64(&mut out, *id);
+            put_u32(&mut out, error.len() as u32);
+            out.extend_from_slice(error.as_bytes());
+            out
+        }
+    }
+}
+
+/// Decode a response frame body (strict).
+pub fn decode_response(body: &[u8]) -> Result<ResponseMsg, ProtoError> {
+    let mut c = Cursor::new(body);
+    let tag = c.u8()?;
+    let msg = match tag {
+        TAG_OK => {
+            let id = c.u64()?;
+            let argmax = c.u32()?;
+            let n = c.u32()? as usize;
+            ResponseMsg::Ok { id, argmax, probs: c.f32s(n)? }
+        }
+        TAG_SHED => {
+            let id = c.u64()?;
+            let reason = ShedReason::from_code(c.u8()?)?;
+            ResponseMsg::Shed { id, reason, predicted_us: c.u32()? }
+        }
+        TAG_FAILED => {
+            let id = c.u64()?;
+            let n = c.u32()? as usize;
+            let error = std::str::from_utf8(c.bytes(n)?).map_err(|_| ProtoError::BadUtf8)?.to_string();
+            ResponseMsg::Failed { id, error }
+        }
+        other => return Err(ProtoError::BadTag(other)),
+    };
+    c.finish()?;
+    Ok(msg)
+}
+
+/// Write one length-prefixed frame. Errors with `InvalidInput` on an
+/// oversize body instead of emitting a frame no peer would accept.
+pub fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> io::Result<()> {
+    if body.len() > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidInput, format!("frame body {} > MAX_FRAME", body.len())));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)
+}
+
+/// What one [`read_frame`] call produced.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A complete frame body.
+    Frame(Vec<u8>),
+    /// Clean EOF on a frame boundary — the peer closed politely.
+    CleanEof,
+    /// The stop flag flipped while waiting — shutdown, not an error.
+    Stopped,
+}
+
+enum Fill {
+    Full,
+    CleanEof,
+    TornEof,
+    Stopped,
+}
+
+/// Fill `buf` exactly, tolerating read timeouts: sockets under the door
+/// run with a short `read_timeout` so a blocked read re-checks `stop`
+/// every poll interval instead of pinning a thread through shutdown.
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8], stop: &AtomicBool) -> io::Result<Fill> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => return Ok(if filled == 0 { Fill::CleanEof } else { Fill::TornEof }),
+            Ok(n) => filled += n,
+            Err(e) => match e.kind() {
+                io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted => {
+                    if stop.load(Ordering::Relaxed) {
+                        return Ok(Fill::Stopped);
+                    }
+                }
+                _ => return Err(e),
+            },
+        }
+    }
+    Ok(Fill::Full)
+}
+
+/// Read one length-prefixed frame. A torn prefix or torn body (EOF mid
+/// structure) is `UnexpectedEof`; a length prefix beyond [`MAX_FRAME`]
+/// is `InvalidData` — both close the connection without touching any
+/// other connection's state.
+pub fn read_frame<R: Read>(r: &mut R, stop: &AtomicBool) -> io::Result<FrameRead> {
+    let mut prefix = [0u8; 4];
+    match read_full(r, &mut prefix, stop)? {
+        Fill::CleanEof => return Ok(FrameRead::CleanEof),
+        Fill::TornEof => return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "torn length prefix")),
+        Fill::Stopped => return Ok(FrameRead::Stopped),
+        Fill::Full => {}
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, format!("length prefix {len} > MAX_FRAME")));
+    }
+    let mut body = vec![0u8; len];
+    match read_full(r, &mut body, stop)? {
+        Fill::Full => Ok(FrameRead::Frame(body)),
+        Fill::Stopped => Ok(FrameRead::Stopped),
+        Fill::CleanEof | Fill::TornEof => Err(io::Error::new(io::ErrorKind::UnexpectedEof, "torn frame body")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::Rng;
+
+    fn img(rng: &mut Rng, h: usize, w: usize, c: usize) -> TensorF32 {
+        Tensor::from_vec(h, w, c, (0..h * w * c).map(|_| rng.normal(1.0)).collect())
+    }
+
+    #[test]
+    fn request_round_trips_bit_exact() {
+        let mut rng = Rng::new(11);
+        let msg = RequestMsg::new(42, img(&mut rng, 5, 7, 3)).with_deadline_us(1500).for_network("squeezenet");
+        let back = decode_request(&encode_request(&msg)).unwrap();
+        assert_eq!(back, msg);
+        // Bitwise, not just PartialEq: NaN payloads and -0.0 survive too.
+        let mut weird = img(&mut rng, 2, 2, 1);
+        weird.data[0] = f32::from_bits(0x7FC0_1234);
+        weird.data[1] = -0.0;
+        let wire = encode_request(&RequestMsg::new(7, weird.clone()));
+        let back = decode_request(&wire).unwrap();
+        let bits: Vec<u32> = back.image.data.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = weird.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want);
+    }
+
+    #[test]
+    fn request_without_network_round_trips_as_none() {
+        let mut rng = Rng::new(12);
+        let msg = RequestMsg::new(0, img(&mut rng, 3, 3, 2));
+        let back = decode_request(&encode_request(&msg)).unwrap();
+        assert_eq!(back.network, None);
+        assert_eq!(back.deadline_us, 0);
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        for msg in [
+            ResponseMsg::Ok { id: 3, argmax: 9, probs: vec![0.25, 0.5, -0.0, f32::MIN_POSITIVE] },
+            ResponseMsg::Shed { id: 4, reason: ShedReason::QueueFull, predicted_us: 0 },
+            ResponseMsg::Shed { id: 5, reason: ShedReason::Deadline, predicted_us: 1234 },
+            ResponseMsg::Failed { id: 6, error: "unknown network \"ghost\"".to_string() },
+        ] {
+            assert_eq!(decode_response(&encode_response(&msg)).unwrap(), msg);
+            assert_eq!(decode_response(&encode_response(&msg)).unwrap().id(), msg.id());
+        }
+    }
+
+    #[test]
+    fn strict_decode_rejects_malformed_bodies() {
+        let mut rng = Rng::new(13);
+        let good = encode_request(&RequestMsg::new(1, img(&mut rng, 4, 4, 2)));
+        assert_eq!(decode_request(&[0x7F]), Err(ProtoError::BadTag(0x7F)));
+        assert_eq!(decode_request(&good[..good.len() - 1]), Err(ProtoError::Truncated));
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert_eq!(decode_request(&trailing), Err(ProtoError::Trailing(1)));
+        let mut bad_utf8 = encode_request(&RequestMsg::new(1, img(&mut rng, 1, 1, 1)).for_network("ab"));
+        // name bytes sit right after tag+id+deadline+len = 1+8+4+2.
+        bad_utf8[15] = 0xFF;
+        assert_eq!(decode_request(&bad_utf8), Err(ProtoError::BadUtf8));
+        assert_eq!(decode_response(&[0x00]), Err(ProtoError::BadTag(0x00)));
+        let shed = encode_response(&ResponseMsg::Shed { id: 1, reason: ShedReason::Deadline, predicted_us: 9 });
+        let mut bad_reason = shed.clone();
+        bad_reason[9] = 77;
+        assert_eq!(decode_response(&bad_reason), Err(ProtoError::BadShedReason(77)));
+        assert_eq!(decode_response(&[]), Err(ProtoError::Truncated));
+    }
+
+    #[test]
+    fn frame_io_round_trips_and_polices_lengths() {
+        let stop = AtomicBool::new(false);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"hello").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        let mut r = &wire[..];
+        match read_frame(&mut r, &stop).unwrap() {
+            FrameRead::Frame(b) => assert_eq!(b, b"hello"),
+            other => panic!("expected frame, got {other:?}"),
+        }
+        match read_frame(&mut r, &stop).unwrap() {
+            FrameRead::Frame(b) => assert!(b.is_empty()),
+            other => panic!("expected empty frame, got {other:?}"),
+        }
+        assert!(matches!(read_frame(&mut r, &stop).unwrap(), FrameRead::CleanEof));
+        // Torn prefix: two bytes then EOF.
+        let mut torn = &wire[..2];
+        assert_eq!(read_frame(&mut torn, &stop).unwrap_err().kind(), io::ErrorKind::UnexpectedEof);
+        // Torn body: prefix promises more than the stream holds.
+        let mut torn_body = &wire[..7];
+        assert_eq!(read_frame(&mut torn_body, &stop).unwrap_err().kind(), io::ErrorKind::UnexpectedEof);
+        // Hostile length prefix: rejected before any allocation.
+        let huge = (MAX_FRAME as u32 + 1).to_le_bytes();
+        assert_eq!(read_frame(&mut &huge[..], &stop).unwrap_err().kind(), io::ErrorKind::InvalidData);
+        assert!(write_frame(&mut Vec::new(), &vec![0u8; MAX_FRAME + 1]).is_err());
+    }
+}

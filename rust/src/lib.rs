@@ -23,6 +23,7 @@ pub mod compiler;
 pub mod coordinator;
 pub mod engine;
 pub mod fp16;
+pub mod frontdoor;
 pub mod host;
 pub mod hw;
 pub mod net;

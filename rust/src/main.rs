@@ -8,6 +8,10 @@
 //! * `timing`     — §5 timing model for a network/parallelism/link
 //! * `serve`      — drive the long-lived serving service from a
 //!   synthetic request trace (open-loop arrival, bounded queue)
+//! * `listen`     — network front door: serve the TCP wire protocol
+//!   over a long-lived service (deadline-aware shedding included)
+//! * `loadgen`    — open-loop socket load generator against `listen`
+//!   (goodput / shed rate / tail latency, bit-exact verification)
 //! * `bench-diff` — compare two runs' BENCH_*.json, gate regressions
 //! * `selftest`   — quick functional sanity run
 
@@ -269,6 +273,80 @@ fn main() -> Result<()> {
                 stats.weight_reuse()
             );
         }
+        "listen" => {
+            // Network front door over a long-lived service: bind a TCP
+            // port, serve the wire protocol until --duration expires
+            // (0 = forever), then tear down gracefully.
+            use fusionaccel::frontdoor::FrontDoor;
+            let net = match args.flags.get("net").map(|s| s.as_str()).unwrap_or("micro") {
+                "micro" => fusionaccel::net::squeezenet::micro_squeezenet(),
+                _ => load_net(&args.flags)?,
+            };
+            let workers: usize = args.flags.get("workers").map(|v| v.parse()).transpose()?.unwrap_or(2);
+            let batch: usize = args.flags.get("batch").map(|v| v.parse()).transpose()?.unwrap_or(4);
+            let queue: usize = args
+                .flags
+                .get("queue")
+                .map(|v| v.parse())
+                .transpose()?
+                .unwrap_or(2 * workers * batch);
+            let seed: u64 = args.flags.get("seed").map(|v| v.parse()).transpose()?.unwrap_or(5);
+            let addr = args.flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7311".to_string());
+            let duration: f64 = args.flags.get("duration").map(|v| v.parse()).transpose()?.unwrap_or(0.0);
+
+            let blobs = synthesize_weights(&net, seed);
+            let mut repo = fusionaccel::compiler::ModelRepo::new();
+            repo.register(net.clone(), blobs)?;
+            let cfg = fusionaccel::service::ServiceConfig::new(fusionaccel::coordinator::ServeConfig::new(
+                UsbLink::usb3_frontpanel(),
+                workers,
+                batch,
+            ))
+            .with_queue_capacity(queue);
+            let svc = std::sync::Arc::new(fusionaccel::service::Service::start(std::sync::Arc::new(repo), &cfg)?);
+            let door = FrontDoor::bind(svc.clone(), addr.as_str())?;
+            let bound = door.local_addr();
+            println!(
+                "listening on {bound} — net {} (seed {seed}), {workers} worker(s), batch ≤ {batch}, \
+                 queue ≤ {queue}",
+                net.name
+            );
+            if let Some(pf) = args.flags.get("port-file") {
+                // Write-then-rename so a polling reader (the CI smoke
+                // step) never observes a torn address.
+                let tmp = format!("{pf}.tmp");
+                std::fs::write(&tmp, bound.to_string()).with_context(|| format!("write {tmp}"))?;
+                std::fs::rename(&tmp, pf).with_context(|| format!("rename {tmp} -> {pf}"))?;
+            }
+            if duration > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(duration));
+            } else {
+                loop {
+                    std::thread::sleep(Duration::from_secs(3600));
+                }
+            }
+            let dstats = door.shutdown();
+            println!(
+                "door: {} connection(s), {} request(s), {} response(s), {} shed(s), {} protocol error(s)",
+                dstats.connections(),
+                dstats.requests(),
+                dstats.responses(),
+                dstats.sheds(),
+                dstats.protocol_errors()
+            );
+            let svc = std::sync::Arc::try_unwrap(svc)
+                .map_err(|_| anyhow::anyhow!("service still referenced after door shutdown"))?;
+            let stats = svc.shutdown()?;
+            println!(
+                "served {} ({} failed, {} queue-full, {} deadline shed) — latency p50/p99/p999 {}",
+                stats.served,
+                stats.failed,
+                stats.admission_rejections,
+                stats.deadline_sheds,
+                stats.latency.summary_ms()
+            );
+        }
+        "loadgen" => loadgen(&args)?,
         "bench-diff" => {
             let old = args.flags.get("old").map(|s| s.as_str()).context("bench-diff needs --old <dir|file>")?;
             let new = args.flags.get("new").map(|s| s.as_str()).context("bench-diff needs --new <dir|file>")?;
@@ -302,6 +380,14 @@ fn main() -> Result<()> {
                  \x20 serve     [--net micro|squeezenet|...] [--requests 64] [--workers 2] [--batch 4]\n\
                  \x20           [--queue 16] [--rate 200] [--seed 5]\n\
                  \x20           long-lived service over a synthetic trace; --rate 0 = lossless submit_wait\n\
+                 \x20 listen    [--addr 127.0.0.1:7311] [--net micro|...] [--workers 2] [--batch 4]\n\
+                 \x20           [--queue 16] [--seed 5] [--duration 0] [--port-file p.txt]\n\
+                 \x20           TCP front door over a long-lived service (--duration 0 = run forever;\n\
+                 \x20           --addr host:0 picks an ephemeral port, written to --port-file)\n\
+                 \x20 loadgen   --addr host:port [--clients 32] [--requests 16] [--rate 200]\n\
+                 \x20           [--deadline-ms 0] [--net micro|...] [--seed 5] [--verify 2]\n\
+                 \x20           open-loop socket load: goodput/shed-rate/tails, bit-exact verify,\n\
+                 \x20           nonzero exit on wrong results or protocol errors\n\
                  \x20 bench-diff --old <dir|file> --new <dir|file> [--threshold 0.15]\n\
                  \x20            CI regression gate over persisted BENCH_*.json metrics\n\
                  \x20 selftest\n\n\
@@ -426,5 +512,247 @@ fn bench_diff(old: &std::path::Path, new: &std::path::Path, threshold: f64) -> R
         anyhow::bail!("{} bench metric(s) regressed beyond {:.0}%", regressed.len(), 100.0 * threshold);
     }
     println!("bench-diff OK — no gated metric regressed beyond {:.0}%", 100.0 * threshold);
+    Ok(())
+}
+
+/// Per-client outcome of one loadgen run, merged by the main thread.
+#[derive(Default)]
+struct ClientOutcome {
+    answered: usize,
+    ok: usize,
+    sheds: usize,
+    failed: usize,
+    wrong: usize,
+    protocol_errors: usize,
+    latencies: Vec<f64>,
+}
+
+/// Open-loop load generator against a live `fusionaccel listen`:
+/// `--clients` connections each pipeline `--requests` requests on a
+/// global `--rate` schedule (requests fire at their scheduled time
+/// whether or not earlier ones answered — the open-loop property that
+/// makes overload visible instead of self-throttling away). Client 0's
+/// first `--verify` responses are checked bit-identical against a local
+/// [`HostDriver`] forward of the same images. Exits nonzero on any
+/// wrong result, protocol error, or unanswered request.
+fn loadgen(args: &Args) -> Result<()> {
+    use fusionaccel::coordinator::{synthetic_requests, Quantiles};
+    use fusionaccel::frontdoor::client::Client;
+    use fusionaccel::frontdoor::proto::{RequestMsg, ResponseMsg};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::time::Instant;
+
+    let addr = args.flags.get("addr").cloned().context("loadgen needs --addr host:port")?;
+    let clients: usize = args.flags.get("clients").map(|v| v.parse()).transpose()?.unwrap_or(32);
+    let per_client: usize = args.flags.get("requests").map(|v| v.parse()).transpose()?.unwrap_or(16);
+    let rate: f64 = args.flags.get("rate").map(|v| v.parse()).transpose()?.unwrap_or(200.0);
+    let deadline_ms: u64 = args.flags.get("deadline-ms").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    let seed: u64 = args.flags.get("seed").map(|v| v.parse()).transpose()?.unwrap_or(5);
+    let verify: usize = args.flags.get("verify").map(|v| v.parse()).transpose()?.unwrap_or(2);
+    let net = match args.flags.get("net").map(|s| s.as_str()).unwrap_or("micro") {
+        "micro" => fusionaccel::net::squeezenet::micro_squeezenet(),
+        _ => load_net(&args.flags)?,
+    };
+    anyhow::ensure!(clients > 0 && per_client > 0, "need at least one client and one request");
+    anyhow::ensure!(rate > 0.0, "loadgen is open-loop: --rate must be positive");
+    let deadline_us = u32::try_from(deadline_ms.saturating_mul(1000)).unwrap_or(u32::MAX);
+
+    // Deterministic per-client image traces: client c replays
+    // synthetic_requests with a client-salted seed, so the server-side
+    // answer for client 0 is reproducible locally for verification.
+    let (side, ch) = net.out_shape(0);
+    let (side, ch) = (side as usize, ch as usize);
+    let client_seed = |c: usize| seed.wrapping_add(7919 * c as u64);
+    let verify_n = verify.min(per_client);
+    let expected: Arc<Vec<Vec<u32>>> = Arc::new(if verify_n > 0 {
+        let blobs = synthesize_weights(&net, seed);
+        let trace = synthetic_requests(verify_n, client_seed(0), side, ch);
+        let mut out = Vec::with_capacity(verify_n);
+        for r in &trace {
+            let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+            let res = HostDriver::new(&mut dev).forward(&net, &blobs, &r.image)?;
+            out.push(res.probs.iter().map(|v| v.to_bits()).collect());
+        }
+        out
+    } else {
+        Vec::new()
+    });
+
+    println!(
+        "loadgen → {addr}: {clients} client(s) × {per_client} request(s) at {rate:.0} req/s total{}",
+        if deadline_ms > 0 { format!(", deadline {deadline_ms} ms") } else { String::new() }
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    let watchdog_fired = Arc::new(AtomicBool::new(false));
+    let mut conns = Vec::with_capacity(clients);
+    for _ in 0..clients {
+        conns.push(Client::connect_with_stop(addr.as_str(), stop.clone(), Duration::from_millis(200))
+            .with_context(|| format!("connect {addr}"))?);
+    }
+
+    // Watchdog: a stuck server must fail the run, not hang it. Budget =
+    // the nominal send window plus generous drain slack.
+    let budget = Duration::from_secs_f64((clients * per_client) as f64 / rate) + Duration::from_secs(60);
+    {
+        let stop = stop.clone();
+        let fired = watchdog_fired.clone();
+        std::thread::Builder::new()
+            .name("loadgen-watchdog".to_string())
+            .spawn(move || {
+                std::thread::sleep(budget);
+                fired.store(true, Ordering::SeqCst);
+                stop.store(true, Ordering::SeqCst);
+            })
+            .context("spawn watchdog")?;
+    }
+
+    let interval = Duration::from_secs_f64(1.0 / rate);
+    let t0 = Instant::now();
+    let mut senders = Vec::with_capacity(clients);
+    let mut receivers = Vec::with_capacity(clients);
+    for (c, conn) in conns.into_iter().enumerate() {
+        let (mut tx, mut rx) = conn.split();
+        // Send-time slots shared between the halves: the sender stamps
+        // before writing, the receiver reads on completion.
+        let send_times: Arc<Mutex<Vec<Option<Instant>>>> = Arc::new(Mutex::new(vec![None; per_client]));
+        let times = send_times.clone();
+        let cseed = client_seed(c);
+        let sender = std::thread::Builder::new()
+            .name(format!("loadgen-send-{c}"))
+            .stack_size(256 * 1024)
+            .spawn(move || {
+                let trace = synthetic_requests(per_client, cseed, side, ch);
+                let mut sent = 0usize;
+                for (i, r) in trace.into_iter().enumerate() {
+                    // Global open-loop schedule: request i of client c is
+                    // arrival number c + i·clients.
+                    let due = t0 + interval.mul_f64((c + i * clients) as f64);
+                    if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                        std::thread::sleep(wait);
+                    }
+                    let mut msg = RequestMsg::new(i as u64, r.image);
+                    if deadline_us > 0 {
+                        msg = msg.with_deadline_us(deadline_us);
+                    }
+                    times.lock().unwrap()[i] = Some(Instant::now());
+                    if tx.send(&msg).is_err() {
+                        break;
+                    }
+                    sent += 1;
+                }
+                sent
+            })
+            .context("spawn sender")?;
+        senders.push(sender);
+        let expected = expected.clone();
+        let receiver = std::thread::Builder::new()
+            .name(format!("loadgen-recv-{c}"))
+            .stack_size(256 * 1024)
+            .spawn(move || {
+                let mut out = ClientOutcome::default();
+                while out.answered < per_client {
+                    match rx.recv() {
+                        Ok(Some(resp)) => {
+                            out.answered += 1;
+                            let rid = resp.id() as usize;
+                            let latency = send_times
+                                .lock()
+                                .unwrap()
+                                .get(rid)
+                                .copied()
+                                .flatten()
+                                .map(|s| s.elapsed().as_secs_f64());
+                            match resp {
+                                ResponseMsg::Ok { id, probs, .. } => {
+                                    out.ok += 1;
+                                    if let Some(l) = latency {
+                                        out.latencies.push(l);
+                                    }
+                                    if c == 0 && (id as usize) < expected.len() {
+                                        let bits: Vec<u32> = probs.iter().map(|v| v.to_bits()).collect();
+                                        if bits != expected[id as usize] {
+                                            out.wrong += 1;
+                                            eprintln!("WRONG RESULT: client 0 request {id}");
+                                        }
+                                    }
+                                }
+                                ResponseMsg::Shed { .. } => out.sheds += 1,
+                                ResponseMsg::Failed { id, error } => {
+                                    out.failed += 1;
+                                    eprintln!("request {id} (client {c}) failed: {error}");
+                                }
+                            }
+                        }
+                        Ok(None) => break, // server closed the connection
+                        // The client only reports TimedOut when the
+                        // shared stop flag flipped (watchdog): unwind.
+                        Err(e) if e.kind() == std::io::ErrorKind::TimedOut => break,
+                        Err(e) => {
+                            out.protocol_errors += 1;
+                            eprintln!("client {c}: protocol/transport error: {e}");
+                            break;
+                        }
+                    }
+                }
+                out
+            })
+            .context("spawn receiver")?;
+        receivers.push(receiver);
+    }
+
+    let mut sent_total = 0usize;
+    for s in senders {
+        sent_total += s.join().map_err(|_| anyhow::anyhow!("sender thread panicked"))?;
+    }
+    let mut total = ClientOutcome::default();
+    for r in receivers {
+        let o = r.join().map_err(|_| anyhow::anyhow!("receiver thread panicked"))?;
+        total.answered += o.answered;
+        total.ok += o.ok;
+        total.sheds += o.sheds;
+        total.failed += o.failed;
+        total.wrong += o.wrong;
+        total.protocol_errors += o.protocol_errors;
+        total.latencies.extend(o.latencies);
+    }
+    // The watchdog thread may still be sleeping; flipping stop is
+    // harmless either way, and process exit reaps it.
+    stop.store(true, Ordering::SeqCst);
+    let wall = t0.elapsed().as_secs_f64();
+    let timed_out = watchdog_fired.load(Ordering::SeqCst);
+    let unanswered = sent_total.saturating_sub(total.answered);
+
+    total.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = Quantiles::from_sorted(&total.latencies);
+    let goodput = total.ok as f64 / wall.max(1e-12);
+    let shed_rate = total.sheds as f64 / (total.answered.max(1)) as f64;
+    println!(
+        "sent {sent_total}, answered {} (ok {}, shed {}, failed {}), unanswered {unanswered} in {wall:.3} s",
+        total.answered, total.ok, total.sheds, total.failed
+    );
+    println!(
+        "goodput {goodput:.1} req/s (offered {rate:.0}), shed rate {:.1}%, latency p50/p99/p999 {}",
+        100.0 * shed_rate,
+        q.summary_ms()
+    );
+    benchkit::persist_json(
+        "loadgen",
+        &[
+            ("loadgen_goodput_req_per_s".to_string(), goodput),
+            ("loadgen_offered_rate".to_string(), rate),
+            ("loadgen_shed_rate".to_string(), shed_rate),
+            ("loadgen_p50_latency_ms".to_string(), q.p50 * 1e3),
+            ("loadgen_p99_latency_ms".to_string(), q.p99 * 1e3),
+            ("loadgen_p999_latency_ms".to_string(), q.p999 * 1e3),
+            ("loadgen_wrong_results".to_string(), total.wrong as f64),
+            ("loadgen_protocol_errors".to_string(), total.protocol_errors as f64),
+            ("loadgen_unanswered".to_string(), unanswered as f64),
+        ],
+    );
+    anyhow::ensure!(total.wrong == 0, "{} wire response(s) differ from the local forward", total.wrong);
+    anyhow::ensure!(total.protocol_errors == 0, "{} protocol error(s)", total.protocol_errors);
+    anyhow::ensure!(!timed_out && unanswered == 0, "{unanswered} request(s) unanswered (timed out: {timed_out})");
+    println!("loadgen OK — zero wrong results, zero protocol errors");
     Ok(())
 }

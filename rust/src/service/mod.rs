@@ -71,7 +71,9 @@ use anyhow::{ensure, Context, Result};
 use crate::compiler::{LruCache, ModelRepo};
 use crate::coordinator::metrics::FailedRequest;
 use crate::coordinator::worker::{self, WorkerEvent};
-use crate::coordinator::{InferenceRequest, InferenceResponse, Scheduler, ServeConfig, ServeStats, WorkerStats};
+use crate::coordinator::{
+    InferenceRequest, InferenceResponse, RecentWindow, Scheduler, ServeConfig, ServeStats, WorkerStats,
+};
 use crate::net::tensor::TensorF32;
 
 /// Configuration of a long-lived [`Service`]: the underlying pool/batch
@@ -113,6 +115,15 @@ pub enum SubmitError {
     /// A request with this id is still outstanding — ids must be unique
     /// among in-flight requests (they key the completion routing).
     DuplicateId,
+    /// The request carried a deadline ([`Service::submit_deadline`])
+    /// that the live queue-wait window says cannot be met: predicted
+    /// turnaround (recent p90 queue wait + recent median service time)
+    /// exceeds the budget, so the request is turned away *before*
+    /// burning an engine pass on an answer the caller would discard.
+    DeadlineShed {
+        /// The turnaround the admission model predicted, in µs.
+        predicted_us: u64,
+    },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -121,6 +132,9 @@ impl std::fmt::Display for SubmitError {
             SubmitError::QueueFull => write!(f, "admission queue full"),
             SubmitError::Closed => write!(f, "service shutting down"),
             SubmitError::DuplicateId => write!(f, "request id already outstanding"),
+            SubmitError::DeadlineShed { predicted_us } => {
+                write!(f, "deadline unmeetable (predicted turnaround {predicted_us} µs)")
+            }
         }
     }
 }
@@ -131,21 +145,51 @@ impl std::error::Error for SubmitError {}
 /// would have landed in [`ServeStats::failures`].
 pub type TicketResult = Result<InferenceResponse, FailedRequest>;
 
+/// Callback a [`Ticket`] waiter registers to be invoked (exactly once)
+/// when the result lands — how the network front door streams each
+/// completion into a per-connection writer without one thread per
+/// in-flight ticket.
+type CompletionFn = Box<dyn FnOnce(TicketResult) + Send>;
+
+#[derive(Default)]
+struct CellState {
+    result: Option<TicketResult>,
+    /// At most one registered completion watcher, taken on fulfill.
+    watcher: Option<CompletionFn>,
+}
+
 /// One-shot completion slot shared between a [`Ticket`] and the
 /// collector thread.
-#[derive(Debug, Default)]
+#[derive(Default)]
 struct TicketCell {
-    slot: Mutex<Option<TicketResult>>,
+    state: Mutex<CellState>,
     cv: Condvar,
+}
+
+impl std::fmt::Debug for TicketCell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let st = self.state.lock().unwrap();
+        f.debug_struct("TicketCell")
+            .field("result", &st.result)
+            .field("watcher", &st.watcher.as_ref().map(|_| "<fn>"))
+            .finish()
+    }
 }
 
 impl TicketCell {
     fn fulfill(&self, result: TicketResult) {
-        let mut slot = self.slot.lock().unwrap();
-        debug_assert!(slot.is_none(), "ticket fulfilled twice");
-        *slot = Some(result);
-        drop(slot);
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(st.result.is_none(), "ticket fulfilled twice");
+        st.result = Some(result.clone());
+        let watcher = st.watcher.take();
+        drop(st);
         self.cv.notify_all();
+        // Invoke outside the cell lock: the watcher may take other locks
+        // (e.g. a connection's outbound channel) and must never deadlock
+        // against a concurrent wait().
+        if let Some(f) = watcher {
+            f(result);
+        }
     }
 }
 
@@ -165,19 +209,19 @@ impl Ticket {
 
     /// Block until the request completes (or fails).
     pub fn wait(&self) -> TicketResult {
-        let mut slot = self.cell.slot.lock().unwrap();
+        let mut st = self.cell.state.lock().unwrap();
         loop {
-            if let Some(r) = slot.as_ref() {
+            if let Some(r) = st.result.as_ref() {
                 return r.clone();
             }
-            slot = self.cell.cv.wait(slot).unwrap();
+            st = self.cell.cv.wait(st).unwrap();
         }
     }
 
     /// Non-blocking check: `None` while the request is still queued or
     /// in flight.
     pub fn try_wait(&self) -> Option<TicketResult> {
-        self.cell.slot.lock().unwrap().clone()
+        self.cell.state.lock().unwrap().result.clone()
     }
 
     /// Move the stored result out (crate-internal: the closed-batch
@@ -186,23 +230,41 @@ impl Ticket {
     /// reads as pending afterwards — never expose this to multi-waiter
     /// callers.
     pub(crate) fn take(&self) -> Option<TicketResult> {
-        self.cell.slot.lock().unwrap().take()
+        self.cell.state.lock().unwrap().result.take()
     }
 
     /// Wait at most `timeout`; `None` on expiry.
     pub fn wait_timeout(&self, timeout: Duration) -> Option<TicketResult> {
         let deadline = Instant::now() + timeout;
-        let mut slot = self.cell.slot.lock().unwrap();
+        let mut st = self.cell.state.lock().unwrap();
         loop {
-            if let Some(r) = slot.as_ref() {
+            if let Some(r) = st.result.as_ref() {
                 return Some(r.clone());
             }
             let now = Instant::now();
             if now >= deadline {
                 return None;
             }
-            let (s, _) = self.cell.cv.wait_timeout(slot, deadline - now).unwrap();
-            slot = s;
+            let (s, _) = self.cell.cv.wait_timeout(st, deadline - now).unwrap();
+            st = s;
+        }
+    }
+
+    /// Register `f` to run exactly once with this ticket's result: right
+    /// now if the result already landed, otherwise from whichever thread
+    /// fulfills the ticket (normally the service collector — which may
+    /// hold the service's internal state lock at that point, so `f` must
+    /// be quick and must not call back into the [`Service`]; sending on
+    /// a channel is the intended use). At most one watcher per ticket;
+    /// registering a second replaces the first.
+    pub fn on_complete<F: FnOnce(TicketResult) + Send + 'static>(&self, f: F) {
+        let mut st = self.cell.state.lock().unwrap();
+        match st.result.clone() {
+            Some(r) => {
+                drop(st);
+                f(r);
+            }
+            None => st.watcher = Some(Box::new(f)),
         }
     }
 }
@@ -245,6 +307,12 @@ const MAX_LATENCY_SAMPLES: usize = 1 << 16;
 /// `ServeStats::failed` keeps counting past the cap.
 const MAX_FAILURE_DETAILS: usize = 1024;
 
+/// Samples in each live [`RecentWindow`] the deadline-shed predictor
+/// reads. Small enough that the per-admission sort is cheap (~256
+/// elements) and a load transition washes out within a few batches,
+/// large enough that one straggler cannot swing the p90.
+const RECENT_WINDOW: usize = 256;
+
 /// Everything admission (submit) and completion (collector) share.
 struct State {
     /// Shutdown began: no further admission.
@@ -270,6 +338,12 @@ struct State {
     queue_waits: Vec<f64>,
     /// Sample pairs observed over the whole run (≥ `latencies.len()`).
     samples_seen: u64,
+    /// Live windows over the most recent *forwarded* completions (cache
+    /// hits and parked duplicates excluded — they never waited in the
+    /// queue, so they would bias the predictor optimistic). These feed
+    /// the deadline-shed turnaround estimate at admission.
+    recent_queue_waits: RecentWindow,
+    recent_service: RecentWindow,
     /// xorshift64 state for reservoir replacement (deterministic seed —
     /// timing values are wall-clock anyway, so sampling determinism
     /// only keeps reruns comparable, not bit-equal).
@@ -374,6 +448,8 @@ impl Service {
                 queue_waits: Vec::new(),
                 samples_seen: 0,
                 sample_rng: 0x9E37_79B9_7F4A_7C15,
+                recent_queue_waits: RecentWindow::new(RECENT_WINDOW),
+                recent_service: RecentWindow::new(RECENT_WINDOW),
             }),
             space: Condvar::new(),
         });
@@ -452,16 +528,37 @@ impl Service {
     /// failure it would have been in [`ServeStats::failures`] (worker
     /// `usize::MAX`, same as closed-batch admission).
     pub fn submit(&self, req: InferenceRequest) -> Result<Ticket, SubmitError> {
-        self.admit(req, false)
+        self.admit(req, false, None)
     }
 
     /// [`Service::submit`], but block until queue space frees up (the
     /// lossless flavor of backpressure).
     pub fn submit_wait(&self, req: InferenceRequest) -> Result<Ticket, SubmitError> {
-        self.admit(req, true)
+        self.admit(req, true, None)
     }
 
-    fn admit(&self, mut req: InferenceRequest, wait: bool) -> Result<Ticket, SubmitError> {
+    /// [`Service::submit`] with a turnaround budget: if the live
+    /// completion windows predict this request cannot finish within
+    /// `budget` (recent p90 queue wait + recent median service time),
+    /// it is rejected with [`SubmitError::DeadlineShed`] instead of
+    /// queued — the engine pass goes to a request that can still make
+    /// its deadline. A cold service (no completions yet) predicts 0 and
+    /// never sheds: shedding requires evidence, not priors. Cache hits
+    /// are exempt — they cost no queue wait and are served even under
+    /// overload.
+    pub fn submit_deadline(&self, req: InferenceRequest, budget: Duration) -> Result<Ticket, SubmitError> {
+        self.admit(req, false, Some(budget))
+    }
+
+    /// The turnaround the deadline-shed predictor would quote right now
+    /// (seconds): recent p90 queue wait + recent median service time.
+    /// 0.0 on a cold service.
+    pub fn predicted_wait(&self) -> f64 {
+        let st = self.inner.state.lock().unwrap();
+        st.recent_queue_waits.quantile(0.9) + st.recent_service.quantile(0.5)
+    }
+
+    fn admit(&self, mut req: InferenceRequest, wait: bool, deadline: Option<Duration>) -> Result<Ticket, SubmitError> {
         let inner = &self.inner;
         let mut st = inner.state.lock().unwrap();
         if st.closed {
@@ -511,6 +608,15 @@ impl Service {
                     drop(st);
                     cell.fulfill(Ok(resp));
                     return Ok(ticket);
+                }
+            }
+            // Deadline gate (after the cache check — a hit needs no
+            // queue slot and no forward, so its deadline is always met).
+            if let Some(budget) = deadline {
+                let predicted = st.recent_queue_waits.quantile(0.9) + st.recent_service.quantile(0.5);
+                if predicted > budget.as_secs_f64() {
+                    st.stats.deadline_sheds += 1;
+                    return Err(SubmitError::DeadlineShed { predicted_us: (predicted * 1e6) as u64 });
                 }
             }
             if inner.cfg.queue_capacity == 0 || st.outstanding < inner.cfg.queue_capacity {
@@ -642,6 +748,8 @@ fn collect(inner: &Inner, rx: mpsc::Receiver<WorkerEvent>) {
             WorkerEvent::Done(r) => {
                 let turnaround = r.queue_wait_seconds + r.service_seconds;
                 record_sample(&mut st, turnaround, r.queue_wait_seconds);
+                st.recent_queue_waits.push(r.queue_wait_seconds);
+                st.recent_service.push(r.service_seconds);
                 st.stats.workers[r.worker].served += 1;
                 st.stats.served += 1;
                 let mut completed = 1usize;
@@ -825,6 +933,51 @@ mod tests {
         let stats = svc.shutdown().unwrap();
         assert_eq!(stats.served, 3);
         assert_eq!(stats.admission_rejections, 1, "the QueueFull shed is a tracked stat");
+    }
+
+    #[test]
+    fn deadline_shed_needs_evidence_then_engages() {
+        let svc = Service::start(tiny_repo(), &cfg(1, 1)).unwrap();
+        let mut rng = Rng::new(6);
+        // Cold service: no completion evidence, so even a nanosecond
+        // budget is admitted (the predictor quotes 0).
+        assert_eq!(svc.predicted_wait(), 0.0);
+        let t = svc.submit_deadline(req(0, &mut rng), Duration::from_nanos(1)).unwrap();
+        assert!(t.wait().is_ok());
+        // Warm the windows with real forwards; service time is nonzero,
+        // so the predicted turnaround now exceeds a nanosecond budget.
+        for i in 1..8 {
+            svc.submit(req(i, &mut rng)).unwrap().wait().unwrap();
+        }
+        assert!(svc.predicted_wait() > 0.0);
+        let err = svc.submit_deadline(req(100, &mut rng), Duration::from_nanos(1)).unwrap_err();
+        assert!(matches!(err, SubmitError::DeadlineShed { .. }));
+        // A generous budget is still admitted.
+        let t = svc.submit_deadline(req(101, &mut rng), Duration::from_secs(3600)).unwrap();
+        assert!(t.wait().is_ok());
+        let stats = svc.shutdown().unwrap();
+        assert_eq!(stats.deadline_sheds, 1);
+        assert_eq!(stats.served, 9);
+    }
+
+    #[test]
+    fn on_complete_fires_exactly_once_immediate_and_deferred() {
+        let svc = Service::start(tiny_repo(), &cfg(1, 1)).unwrap();
+        let mut rng = Rng::new(7);
+        // Deferred: register before completion, result arrives via the
+        // collector thread.
+        let (tx, rx) = mpsc::channel();
+        let t = svc.submit(req(0, &mut rng)).unwrap();
+        t.on_complete(move |r| tx.send(r).unwrap());
+        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert_eq!(r.id, 0);
+        // Immediate: registering after completion runs the callback on
+        // the spot, and the blocking APIs still see the result.
+        assert!(t.try_wait().is_some(), "result stays readable after the watcher ran");
+        let (tx2, rx2) = mpsc::channel();
+        t.on_complete(move |r| tx2.send(r).unwrap());
+        assert_eq!(rx2.try_recv().unwrap().unwrap().id, 0);
+        svc.shutdown().unwrap();
     }
 
     #[test]

@@ -1,0 +1,407 @@
+//! Network front-door acceptance tests: bit-identity of socket round
+//! trips against the in-process service (the tentpole invariant),
+//! protocol-violation isolation (one bad connection never touches
+//! another), mid-request disconnect draining, deadline- and
+//! queue-full shedding over the wire, and a many-connection soak.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fusionaccel::compiler::ModelRepo;
+use fusionaccel::coordinator::{serve_batched, InferenceRequest, ServeConfig};
+use fusionaccel::frontdoor::client::Client;
+use fusionaccel::frontdoor::proto::{RequestMsg, ResponseMsg, ShedReason, MAX_FRAME};
+use fusionaccel::frontdoor::FrontDoor;
+use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::graph::Network;
+use fusionaccel::net::layer::LayerSpec;
+use fusionaccel::net::tensor::{Tensor, TensorF32};
+use fusionaccel::net::weights::synthesize_weights;
+use fusionaccel::prop::{forall, Rng};
+use fusionaccel::service::{Service, ServiceConfig};
+
+/// Small conv+gap net (sub-millisecond forwards).
+fn tiny_net() -> Network {
+    let mut n = Network::new("tiny");
+    let inp = n.input(8, 3);
+    let c1 = n.engine(LayerSpec::conv("c1", 3, 1, 0, 8, 3, 8, 0), inp);
+    let gap = n.engine(LayerSpec::avgpool("gap", 6, 1, 6, 8), c1);
+    n.softmax("prob", gap);
+    n
+}
+
+/// Deep conv chain whose forward takes long enough that a pipelined
+/// burst reliably overruns a capacity-1 queue.
+fn heavy_net() -> Network {
+    let mut n = Network::new("heavy");
+    let inp = n.input(32, 16);
+    let mut cur = inp;
+    for i in 0..12 {
+        cur = n.engine(LayerSpec::conv(&format!("c{i}"), 3, 1, 1, 32, 16, 16, 0), cur);
+    }
+    let gap = n.engine(LayerSpec::avgpool("gap", 32, 1, 32, 16), cur);
+    n.softmax("prob", gap);
+    n
+}
+
+fn image(net: &Network, rng: &mut Rng) -> TensorF32 {
+    let (side, ch) = net.out_shape(0);
+    let (s, c) = (side as usize, ch as usize);
+    Tensor::from_vec(s, s, c, (0..s * s * c).map(|_| rng.normal(1.0)).collect())
+}
+
+/// Service + door over one registered net.
+fn start_door(net: &Network, seed: u64, cfg: &ServiceConfig) -> (Arc<Service>, FrontDoor) {
+    let mut repo = ModelRepo::new();
+    repo.register(net.clone(), synthesize_weights(net, seed)).unwrap();
+    let svc = Arc::new(Service::start(Arc::new(repo), cfg).unwrap());
+    let door = FrontDoor::bind(svc.clone(), "127.0.0.1:0").unwrap();
+    (svc, door)
+}
+
+/// Tear down door-then-service; the door must release its service Arc.
+fn teardown(svc: Arc<Service>, door: FrontDoor) -> fusionaccel::coordinator::ServeStats {
+    door.shutdown();
+    let svc = Arc::try_unwrap(svc).ok().expect("door shutdown must drop its service handle");
+    svc.shutdown().unwrap()
+}
+
+fn probs_bits(probs: &[f32]) -> Vec<u32> {
+    probs.iter().map(|v| v.to_bits()).collect()
+}
+
+/// TENTPOLE PROPERTY: for random client counts, pipeline depths, and
+/// images, every response that crosses the socket is bit-identical to
+/// what the in-process closed-batch service returns for the same
+/// image — same probs bits, same argmax.
+#[test]
+fn prop_wire_round_trip_bit_identical_to_direct_service() {
+    let net = tiny_net();
+    let blobs = synthesize_weights(&net, 0xD00A);
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 2, 2));
+    let (svc, door) = start_door(&net, 0xD00A, &cfg);
+    let addr = door.local_addr();
+
+    forall(
+        0xD00B,
+        5,
+        |rng| {
+            let clients = 1 + rng.below(4);
+            let per_client = 1 + rng.below(4);
+            let images: Vec<TensorF32> = (0..clients * per_client).map(|_| image(&net, rng)).collect();
+            (clients, per_client, images)
+        },
+        |(clients, per_client, images)| {
+            // In-process reference over the very same images.
+            let reqs: Vec<InferenceRequest> = images
+                .iter()
+                .enumerate()
+                .map(|(i, img)| InferenceRequest::new(i as u64, img.clone()))
+                .collect();
+            let (reference, _) = serve_batched(&net, &blobs, &cfg.serve, reqs).unwrap();
+
+            // The same images over the wire: each client pipelines its
+            // slice, responses may arrive in any order per connection.
+            for c in 0..*clients {
+                let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
+                for i in 0..*per_client {
+                    let img = images[c * per_client + i].clone();
+                    client.send(&RequestMsg::new(i as u64, img)).map_err(|e| e.to_string())?;
+                }
+                let mut seen = vec![false; *per_client];
+                for _ in 0..*per_client {
+                    let resp = client.recv().map_err(|e| e.to_string())?.ok_or("early EOF")?;
+                    match resp {
+                        ResponseMsg::Ok { id, argmax, probs } => {
+                            let idx = c * per_client + id as usize;
+                            let want = &reference[idx];
+                            if probs_bits(&probs) != probs_bits(&want.probs) {
+                                return Err(format!("client {c} request {id}: probs bits differ"));
+                            }
+                            if argmax as usize != want.argmax {
+                                return Err(format!("client {c} request {id}: argmax differs"));
+                            }
+                            seen[id as usize] = true;
+                        }
+                        other => return Err(format!("unexpected response {other:?}")),
+                    }
+                }
+                if !seen.iter().all(|&s| s) {
+                    return Err("a request id was never answered".to_string());
+                }
+            }
+            Ok(())
+        },
+    );
+
+    let stats = teardown(svc, door);
+    assert_eq!(stats.failed, 0);
+    assert!(stats.served > 0);
+}
+
+/// A malformed (but complete) frame gets one `Failed` answer with the
+/// sentinel id, closes that connection — and no other connection
+/// notices.
+#[test]
+fn malformed_frame_closes_only_its_connection() {
+    let net = tiny_net();
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1));
+    let (svc, door) = start_door(&net, 0xBAD, &cfg);
+    let addr = door.local_addr();
+    let stats_handle = door.stats();
+
+    // A healthy connection, opened *before* the bad one.
+    let mut good = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(0xBAD1);
+
+    // Bad connection: unknown tag 0x7F in an otherwise complete frame.
+    let mut bad = TcpStream::connect(addr).unwrap();
+    let body = [0x7Fu8, 1, 2, 3];
+    bad.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+    bad.write_all(&body).unwrap();
+    bad.flush().unwrap();
+    let mut reply = Vec::new();
+    bad.read_to_end(&mut reply).unwrap(); // server answers then closes
+    assert!(reply.len() > 4, "expected one Failed frame before close");
+    let failed = fusionaccel::frontdoor::proto::decode_response(&reply[4..]).unwrap();
+    match failed {
+        ResponseMsg::Failed { id, error } => {
+            assert_eq!(id, u64::MAX, "frame-level rejection uses the sentinel id");
+            assert!(error.contains("protocol error"), "{error}");
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+
+    // The healthy connection still round-trips.
+    let resp = good.request(&RequestMsg::new(0, image(&net, &mut rng))).unwrap();
+    assert!(matches!(resp, ResponseMsg::Ok { id: 0, .. }), "{resp:?}");
+    assert_eq!(stats_handle.protocol_errors(), 1);
+
+    let stats = teardown(svc, door);
+    assert_eq!(stats.served, 1);
+}
+
+/// A torn length prefix (2 bytes then EOF) and a hostile oversize
+/// prefix each close only their own connection, counted as protocol
+/// errors.
+#[test]
+fn torn_and_oversize_prefixes_close_connection() {
+    let net = tiny_net();
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1));
+    let (svc, door) = start_door(&net, 0x70A4, &cfg);
+    let addr = door.local_addr();
+    let stats_handle = door.stats();
+
+    // Torn prefix: write half a length, then shut down the write side.
+    let mut torn = TcpStream::connect(addr).unwrap();
+    torn.write_all(&[0x05, 0x00]).unwrap();
+    torn.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut buf = Vec::new();
+    torn.read_to_end(&mut buf).unwrap(); // server closes without a reply
+    assert!(buf.is_empty(), "torn prefix cannot be answered");
+
+    // Oversize prefix: length beyond MAX_FRAME, rejected unread.
+    let mut huge = TcpStream::connect(addr).unwrap();
+    huge.write_all(&((MAX_FRAME as u32) + 1).to_le_bytes()).unwrap();
+    huge.flush().unwrap();
+    let mut buf = Vec::new();
+    huge.read_to_end(&mut buf).unwrap();
+    assert!(buf.is_empty(), "oversize prefix cannot be answered");
+
+    // Both violations are counted, and the door still serves.
+    let t0 = Instant::now();
+    while stats_handle.protocol_errors() < 2 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "protocol errors never counted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let mut rng = Rng::new(0x70A5);
+    let mut good = Client::connect(addr).unwrap();
+    let resp = good.request(&RequestMsg::new(9, image(&net, &mut rng))).unwrap();
+    assert!(matches!(resp, ResponseMsg::Ok { id: 9, .. }));
+
+    let stats = teardown(svc, door);
+    assert_eq!((stats.served, stats.failed), (1, 0));
+}
+
+/// A connection that dies mid-request leaves the service clean: its
+/// in-flight ticket drains into the dead channel, a later connection is
+/// served normally, and shutdown accounts for both forwards.
+#[test]
+fn mid_request_disconnect_drains_without_poisoning_the_service() {
+    let net = tiny_net();
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1));
+    let (svc, door) = start_door(&net, 0xDEAD, &cfg);
+    let addr = door.local_addr();
+    let stats_handle = door.stats();
+    let mut rng = Rng::new(0xDEA1);
+
+    let mut doomed = Client::connect(addr).unwrap();
+    doomed.send(&RequestMsg::new(0, image(&net, &mut rng))).unwrap();
+    // Make sure the server actually admitted it before we vanish.
+    let t0 = Instant::now();
+    while stats_handle.requests() < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "request never admitted");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    drop(doomed); // mid-request disconnect
+
+    // The service keeps serving other connections.
+    let mut survivor = Client::connect(addr).unwrap();
+    let resp = survivor.request(&RequestMsg::new(0, image(&net, &mut rng))).unwrap();
+    assert!(matches!(resp, ResponseMsg::Ok { id: 0, .. }));
+
+    let stats = teardown(svc, door);
+    // Both forwards ran to completion — the orphaned one drained, it
+    // did not hang, fail, or wedge a worker.
+    assert_eq!((stats.served, stats.failed), (2, 0));
+}
+
+/// Deadline shedding over the wire: once live completions provide
+/// evidence, a hopeless deadline comes back as `Shed(Deadline)` with a
+/// nonzero predicted turnaround, while a generous one is served.
+#[test]
+fn deadline_shed_engages_over_the_wire() {
+    let net = tiny_net();
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1));
+    let (svc, door) = start_door(&net, 0x5ED, &cfg);
+    let addr = door.local_addr();
+    let mut rng = Rng::new(0x5ED1);
+
+    let mut client = Client::connect(addr).unwrap();
+    // Warm the live windows with real completions.
+    for i in 0..8 {
+        let resp = client.request(&RequestMsg::new(i, image(&net, &mut rng))).unwrap();
+        assert!(matches!(resp, ResponseMsg::Ok { .. }));
+    }
+    // 1 µs budget: unmeetable once service time is on record.
+    let resp = client.request(&RequestMsg::new(100, image(&net, &mut rng)).with_deadline_us(1)).unwrap();
+    match resp {
+        ResponseMsg::Shed { id, reason, predicted_us } => {
+            assert_eq!(id, 100);
+            assert_eq!(reason, ShedReason::Deadline);
+            assert!(predicted_us > 0, "shed must quote the predicted turnaround");
+        }
+        other => panic!("expected a deadline shed, got {other:?}"),
+    }
+    // A generous budget still serves.
+    let resp = client
+        .request(&RequestMsg::new(101, image(&net, &mut rng)).with_deadline_us(u32::MAX))
+        .unwrap();
+    assert!(matches!(resp, ResponseMsg::Ok { id: 101, .. }));
+    assert_eq!(door.stats().sheds(), 1);
+
+    let stats = teardown(svc, door);
+    assert_eq!(stats.deadline_sheds, 1);
+    assert_eq!(stats.served, 9);
+}
+
+/// Queue-full shedding over the wire: a pipelined burst against a
+/// capacity-1 queue and a slow net sheds most arrivals as
+/// `Shed(QueueFull)` — goodput survives, every request is answered.
+#[test]
+fn queue_full_burst_sheds_on_the_wire() {
+    let net = heavy_net();
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1)).with_queue_capacity(1);
+    let (svc, door) = start_door(&net, 0x0F11, &cfg);
+    let addr = door.local_addr();
+    let mut rng = Rng::new(0x0F12);
+
+    const BURST: usize = 20;
+    let mut client = Client::connect(addr).unwrap();
+    for i in 0..BURST {
+        client.send(&RequestMsg::new(i as u64, image(&net, &mut rng))).unwrap();
+    }
+    let (mut ok, mut shed) = (0usize, 0usize);
+    for _ in 0..BURST {
+        match client.recv().unwrap().expect("every request is answered") {
+            ResponseMsg::Ok { .. } => ok += 1,
+            ResponseMsg::Shed { reason, .. } => {
+                assert_eq!(reason, ShedReason::QueueFull);
+                shed += 1;
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+    assert_eq!(ok + shed, BURST);
+    assert!(ok >= 1, "the first arrival is always admitted");
+    assert!(shed >= 1, "a capacity-1 queue must shed a pipelined burst");
+
+    let stats = teardown(svc, door);
+    assert_eq!(stats.served, ok);
+    assert_eq!(stats.admission_rejections, shed);
+}
+
+/// An unknown network travels back as a per-request `Failed` frame (the
+/// connection stays usable — it is a request error, not a protocol
+/// error).
+#[test]
+fn unknown_network_fails_the_request_not_the_connection() {
+    let net = tiny_net();
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1));
+    let (svc, door) = start_door(&net, 0x6057, &cfg);
+    let mut rng = Rng::new(0x6058);
+
+    let mut client = Client::connect(door.local_addr()).unwrap();
+    let resp = client.request(&RequestMsg::new(0, image(&net, &mut rng)).for_network("ghost")).unwrap();
+    match resp {
+        ResponseMsg::Failed { id, error } => {
+            assert_eq!(id, 0);
+            assert!(error.contains("ghost"), "{error}");
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    // Same connection, valid request: still served.
+    let resp = client.request(&RequestMsg::new(1, image(&net, &mut rng))).unwrap();
+    assert!(matches!(resp, ResponseMsg::Ok { id: 1, .. }));
+    assert_eq!(door.stats().protocol_errors(), 0);
+
+    let stats = teardown(svc, door);
+    assert_eq!((stats.served, stats.failed), (1, 1));
+}
+
+/// Many-connection soak: 1000 concurrent loopback connections (the
+/// acceptance floor), one pipelined request each from a small image
+/// pool, every response bit-identical to the in-process reference.
+#[test]
+fn thousand_concurrent_connections_round_trip_bit_exact() {
+    let net = tiny_net();
+    let blobs = synthesize_weights(&net, 0x1000);
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 2, 8));
+    let (svc, door) = start_door(&net, 0x1000, &cfg);
+    let addr = door.local_addr();
+    let mut rng = Rng::new(0x1001);
+
+    // Pool of 8 distinct images with a precomputed reference each.
+    const POOL: usize = 8;
+    const CONNS: usize = 1000;
+    let pool: Vec<TensorF32> = (0..POOL).map(|_| image(&net, &mut rng)).collect();
+    let reqs: Vec<InferenceRequest> =
+        pool.iter().enumerate().map(|(i, img)| InferenceRequest::new(i as u64, img.clone())).collect();
+    let (reference, _) = serve_batched(&net, &blobs, &cfg.serve, reqs).unwrap();
+    let expected: Vec<Vec<u32>> = reference.iter().map(|r| probs_bits(&r.probs)).collect();
+
+    // Open all connections first — they are concurrently alive — then
+    // pipeline one request per connection and drain.
+    let mut clients: Vec<Client> = (0..CONNS).map(|_| Client::connect(addr).unwrap()).collect();
+    for (c, client) in clients.iter_mut().enumerate() {
+        client.send(&RequestMsg::new(c as u64, pool[c % POOL].clone())).unwrap();
+    }
+    for (c, client) in clients.iter_mut().enumerate() {
+        let resp = client.recv().unwrap().expect("no early EOF");
+        match resp {
+            ResponseMsg::Ok { id, probs, .. } => {
+                assert_eq!(id, c as u64);
+                assert_eq!(probs_bits(&probs), expected[c % POOL], "connection {c}: wrong bits");
+            }
+            other => panic!("connection {c}: unexpected response {other:?}"),
+        }
+    }
+    assert_eq!(door.stats().connections(), CONNS as u64);
+    assert_eq!(door.stats().responses(), CONNS as u64);
+    drop(clients);
+
+    let stats = teardown(svc, door);
+    assert_eq!((stats.served, stats.failed), (CONNS, 0));
+}
