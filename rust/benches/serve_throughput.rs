@@ -17,8 +17,9 @@ use fusionaccel::frontdoor::proto::{RequestMsg, ResponseMsg};
 use fusionaccel::frontdoor::FrontDoor;
 use fusionaccel::hw::usb::UsbLink;
 use fusionaccel::net::alexnet::fc6_tail;
+use fusionaccel::net::graph::Network;
 use fusionaccel::net::squeezenet::micro_squeezenet;
-use fusionaccel::net::weights::synthesize_weights;
+use fusionaccel::net::weights::{synthesize_weights, Blobs};
 use fusionaccel::service::{Service, ServiceConfig};
 
 fn requests(n: usize) -> Vec<InferenceRequest> {
@@ -172,12 +173,44 @@ fn main() {
     // round trips. Goodput (completed round trips per wall second)
     // gates higher-is-better; the p99 round-trip tail is tracked but
     // informational at this sample size.
+    let (goodput, q) = wire_run(&net, &blobs, false);
+    println!("  wire: {goodput:.1} round trips/s over 8 connections, round-trip {}", q.summary_ms());
+    json.push(("wire_roundtrip_req_per_s_w2_b4".to_string(), goodput));
+    json.push(("wire_p50_latency_ms_w2_b4".to_string(), q.p50 * 1e3));
+    json.push(("wire_p99_latency_ms_w2_b4".to_string(), q.p99 * 1e3));
+
+    section("telemetry tax: the same wire run with request tracing on");
+    // Identical fresh service + door, telemetry hub flipped on: every
+    // request carries a Trace, workers run the per-layer tape, and the
+    // writer seals span records. The throughput delta is the cost of
+    // the whole observability path, gated lower-is-better — the
+    // subsystem's promise is staying under a few percent.
+    let (traced, qt) = wire_run(&net, &blobs, true);
+    let overhead_pct = (100.0 * (goodput - traced) / goodput.max(1e-9)).max(0.0);
+    println!(
+        "  traced: {traced:.1} round trips/s (untraced {goodput:.1}) — overhead {overhead_pct:.2}%, \
+         round-trip {}",
+        qt.summary_ms()
+    );
+    json.push(("wire_traced_req_per_s_w2_b4".to_string(), traced));
+    json.push(("telemetry_overhead_pct".to_string(), overhead_pct));
+
+    fusionaccel::benchkit::persist_json("serve_throughput", &json);
+    println!("serve_throughput OK");
+}
+
+/// One closed-loop wire run over a fresh service + front door: 8
+/// loopback clients, each a thread doing 8 sequential round trips.
+/// `tracing` flips the telemetry hub, so an off/on pair prices the
+/// instrumentation on identical work. Returns (goodput, quantiles).
+fn wire_run(net: &Network, blobs: &Blobs, tracing: bool) -> (f64, Quantiles) {
     let mut repo = ModelRepo::new();
     repo.register(net.clone(), blobs.clone()).unwrap();
     let svc = Arc::new(
         Service::start(Arc::new(repo), &ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 2, 4)))
             .unwrap(),
     );
+    svc.telemetry().set_tracing(tracing);
     let door = FrontDoor::bind(svc.clone(), "127.0.0.1:0").unwrap();
     let addr = door.local_addr();
     const WIRE_CLIENTS: usize = 8;
@@ -208,15 +241,5 @@ fn main() {
     assert_eq!(stats.failed, 0);
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let q = Quantiles::from_sorted(&latencies);
-    let goodput = (WIRE_CLIENTS * PER_CLIENT) as f64 / wall;
-    println!(
-        "  wire: {goodput:.1} round trips/s over {WIRE_CLIENTS} connections, round-trip {}",
-        q.summary_ms()
-    );
-    json.push(("wire_roundtrip_req_per_s_w2_b4".to_string(), goodput));
-    json.push(("wire_p50_latency_ms_w2_b4".to_string(), q.p50 * 1e3));
-    json.push(("wire_p99_latency_ms_w2_b4".to_string(), q.p99 * 1e3));
-
-    fusionaccel::benchkit::persist_json("serve_throughput", &json);
-    println!("serve_throughput OK");
+    ((WIRE_CLIENTS * PER_CLIENT) as f64 / wall, q)
 }

@@ -141,6 +141,28 @@ pub struct StreamAccelerator {
     /// Any load that overlaps a region evicts it; a keyed load whose
     /// region is intact skips the link entirely (`weight_reuses`).
     weight_shadow: Vec<WeightRegion>,
+    /// Telemetry layer tape: one mark per [`Self::load_layer`] while a
+    /// worker has armed it (see [`Self::begin_layer_tape`]). Disarmed by
+    /// default, so non-serving users (benches, unit tests, the classic
+    /// driver flow) record nothing and pay nothing.
+    tape: Vec<LayerMark>,
+    tape_armed: bool,
+}
+
+/// Marks retained per armed forward — far above any supported command
+/// stream's layer count, but a hard bound so the tape can never grow
+/// without limit inside one forward.
+const TAPE_CAP: usize = 4096;
+
+/// Engine counters + link bytes snapshotted at layer entry; consecutive
+/// marks diff into per-layer deltas (see
+/// [`StreamAccelerator::take_layer_deltas`]).
+#[derive(Clone, Debug)]
+struct LayerMark {
+    name: String,
+    at: std::time::Instant,
+    stats: EngineStats,
+    bytes: u64,
 }
 
 /// One shadowed weight super-block: its content key plus the weight-
@@ -173,6 +195,8 @@ impl StreamAccelerator {
             weight_f64: vec![0.0; WEIGHT_CACHE_WORDS * 8],
             cmd_shadow: None,
             weight_shadow: Vec::new(),
+            tape: Vec::new(),
+            tape_armed: false,
         }
     }
 
@@ -217,8 +241,56 @@ impl StreamAccelerator {
     /// Advance the CSB to the next layer (Fig 36 "Load Layer").
     pub fn load_layer(&mut self) -> Option<LayerSpec> {
         let spec = self.csb.next_layer()?;
+        if self.tape_armed && self.tape.len() < TAPE_CAP {
+            self.tape.push(LayerMark {
+                name: spec.name.clone(),
+                at: std::time::Instant::now(),
+                stats: self.stats.clone(),
+                bytes: self.usb.total_bytes(),
+            });
+        }
         self.layer = Some(spec.clone());
         Some(spec)
+    }
+
+    /// Arm the telemetry layer tape for the next forward: every
+    /// subsequent [`Self::load_layer`] snapshots the engine counters at
+    /// layer entry. The serving worker arms before each batch forward
+    /// and drains with [`Self::take_layer_deltas`] after.
+    pub fn begin_layer_tape(&mut self) {
+        self.tape.clear();
+        self.tape_armed = true;
+    }
+
+    /// Drain the armed layer tape into per-layer stat deltas: mark *i*'s
+    /// counters diff against mark *i+1*'s (the final layer diffs against
+    /// the live counters), so each row is exactly what that engine layer
+    /// cost — passes, cycles, weight traffic, link bytes, host wall
+    /// time. Disarms the tape.
+    pub fn take_layer_deltas(&mut self) -> Vec<crate::telemetry::LayerStat> {
+        let marks = std::mem::take(&mut self.tape);
+        self.tape_armed = false;
+        let end_at = std::time::Instant::now();
+        let end_bytes = self.usb.total_bytes();
+        let mut out = Vec::with_capacity(marks.len());
+        for i in 0..marks.len() {
+            let (next_stats, next_bytes, next_at) = match marks.get(i + 1) {
+                Some(n) => (n.stats.clone(), n.bytes, n.at),
+                None => (self.stats.clone(), end_bytes, end_at),
+            };
+            let m = &marks[i];
+            out.push(crate::telemetry::LayerStat {
+                name: m.name.clone(),
+                passes: next_stats.passes - m.stats.passes,
+                cycles: next_stats.cycles - m.stats.cycles,
+                weight_loads: next_stats.weight_loads - m.stats.weight_loads,
+                weight_reuses: next_stats.weight_reuses - m.stats.weight_reuses,
+                link_bytes: next_bytes - m.bytes,
+                start: m.at,
+                dur_us: next_at.saturating_duration_since(m.at).as_micros() as u64,
+            });
+        }
+        out
     }
 
     /// Pipe a block of FP16 values into a cache. Each value moves as a
@@ -828,5 +900,67 @@ mod tests {
         // A slice based past the cache end is rejected, not wrapped.
         let bad = SliceTask { data_base: DATA_CACHE_WORDS, ..task };
         assert!(dev.restart_engine(&bad).is_err());
+    }
+
+    #[test]
+    fn layer_tape_slices_per_layer_deltas() {
+        let mut rng = Rng::new(0x7A9E);
+        let spec = LayerSpec::conv("c1", 3, 1, 1, 6, 16, 8, 0);
+        let mut w = ConvWeights::zeros(8, 3, 16);
+        for v in w.data.iter_mut() {
+            *v = rng.normal(0.3);
+        }
+        let wf = ConvWeightsF16::from_f32(&w);
+        let raw = rand_tensor(&mut rng, 6, 16);
+        let padded = raw.to_f32().pad_surface(1).to_f16();
+
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        dev.load_commands(&[&spec]).unwrap();
+        // Disarmed by default: load_layer records nothing.
+        dev.load_layer().unwrap();
+        assert!(dev.take_layer_deltas().is_empty());
+
+        // Armed: one mark per load_layer, deltas sliced at drain time.
+        dev.load_commands(&[&spec]).unwrap();
+        dev.begin_layer_tape();
+        dev.load_layer().unwrap();
+        let bytes_before = dev.usb.total_bytes();
+        dev.load_weights(&gemm::weight_block(&wf, 0, 8)).unwrap();
+        dev.load_bias(&gemm::bias_block(&wf, 0, 8)).unwrap();
+        for y in 0..spec.o_side as usize {
+            let slice = gemm::conv_row_slice(&padded, y * spec.stride as usize, 3);
+            dev.load_data(&slice).unwrap();
+            let task = SliceTask {
+                op: OpType::ConvRelu,
+                k: 3,
+                stride: 1,
+                out_cols: 6,
+                groups: 2,
+                oc_count: 8,
+                data_width: 8,
+                data_rows: 3,
+                pixel_mode: false,
+                kernel_size_reg: 9,
+                skip_relu: false,
+                weight_base: 0,
+                bias_base: 0,
+                pool_pad: 0,
+                data_base: 0,
+            };
+            let n = dev.restart_engine(&task).unwrap();
+            dev.read_results(n).unwrap();
+        }
+        let deltas = dev.take_layer_deltas();
+        assert_eq!(deltas.len(), 1);
+        let d = &deltas[0];
+        assert_eq!(d.name, "c1");
+        assert_eq!(d.passes, 6, "one pass per output row");
+        assert_eq!(d.weight_loads, 1);
+        assert!(d.cycles > 0);
+        assert_eq!(d.link_bytes, dev.usb.total_bytes() - bytes_before);
+        // Drain disarms: the next forward records nothing until re-armed.
+        dev.load_commands(&[&spec]).unwrap();
+        dev.load_layer().unwrap();
+        assert!(dev.take_layer_deltas().is_empty());
     }
 }

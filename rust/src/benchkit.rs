@@ -314,12 +314,17 @@ pub enum MetricDirection {
 /// informational: shed rate under deliberate overload is a feature
 /// reading, not a regression, and wrong-result/unanswered counts fail
 /// the smoke step directly rather than riding the percentage gate.
-/// Everything else is informational.
+/// `overhead` keys (the telemetry tax on wire throughput) gate
+/// lower-is-better: instrumentation that silently grows past the
+/// threshold is a real regression even when raw throughput still
+/// passes. Everything else is informational.
 pub fn metric_direction(bench: &str, key: &str) -> MetricDirection {
     if key.contains("shed") || key.contains("wrong") || key.contains("unanswered") || key.contains("offered") {
         MetricDirection::Informational
     } else if key.contains("req_per_s") {
         MetricDirection::HigherIsBetter
+    } else if key.contains("overhead") {
+        MetricDirection::LowerIsBetter
     } else if key.contains("latency") && key.contains("p99") {
         MetricDirection::Informational
     } else if key.contains("latency") || bench == "gemm_hotpath" {
@@ -484,6 +489,22 @@ mod tests {
         // rides the same req_per_s rule.
         assert_eq!(
             metric_direction("serve_throughput", "wire_roundtrip_req_per_s_w2_b4"),
+            MetricDirection::HigherIsBetter
+        );
+        // The telemetry tax gates lower-is-better: tracing quietly
+        // getting more expensive is a regression in its own right.
+        assert_eq!(
+            metric_direction("serve_throughput", "telemetry_overhead_pct"),
+            MetricDirection::LowerIsBetter
+        );
+        // Ramp sweep rows are readings of a deliberate overload sweep,
+        // never gated — except the knee, the measured capacity number.
+        assert_eq!(metric_direction("loadgen", "loadgen_ramp_rate_s0"), MetricDirection::Informational);
+        assert_eq!(metric_direction("loadgen", "loadgen_ramp_goodput_s1"), MetricDirection::Informational);
+        assert_eq!(metric_direction("loadgen", "loadgen_ramp_shed_rate_s2"), MetricDirection::Informational);
+        assert_eq!(metric_direction("loadgen", "loadgen_ramp_knee_offered"), MetricDirection::Informational);
+        assert_eq!(
+            metric_direction("loadgen", "loadgen_ramp_knee_req_per_s"),
             MetricDirection::HigherIsBetter
         );
     }

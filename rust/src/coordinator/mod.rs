@@ -75,17 +75,27 @@ pub struct InferenceRequest {
     /// Which registered network should serve this request (`None` = the
     /// repo's default model). Batches never mix networks.
     pub network: Option<String>,
+    /// Lifecycle trace handle (see [`crate::telemetry`]). `None` unless
+    /// the telemetry hub has tracing on and the front door started a
+    /// trace — the untraced path carries a `None` and pays nothing.
+    pub trace: Option<crate::telemetry::Trace>,
 }
 
 impl InferenceRequest {
     /// A request for the default network.
     pub fn new(id: u64, image: TensorF32) -> InferenceRequest {
-        InferenceRequest { id, image, network: None }
+        InferenceRequest { id, image, network: None, trace: None }
     }
 
     /// Tag the request for a specific registered network.
     pub fn for_network(mut self, network: &str) -> InferenceRequest {
         self.network = Some(network.to_string());
+        self
+    }
+
+    /// Attach a lifecycle trace handle.
+    pub fn with_trace(mut self, trace: crate::telemetry::Trace) -> InferenceRequest {
+        self.trace = Some(trace);
         self
     }
 }

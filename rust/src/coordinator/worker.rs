@@ -42,6 +42,7 @@ use crate::host::postprocess;
 use crate::hw::clock::ClockDomain;
 use crate::hw::usb::UsbLink;
 use crate::net::tensor::TensorF32;
+use crate::telemetry::{Hub, Verdict};
 
 use super::batcher::{self, BatchPolicy};
 use super::metrics::FailedRequest;
@@ -87,6 +88,9 @@ struct WorkerCtx<'a> {
     repo: &'a ModelRepo,
     link: UsbLink,
     tx: &'a mpsc::Sender<WorkerEvent>,
+    /// Telemetry hub: batch sequence numbers, per-layer stat families.
+    /// One relaxed load per batch decides whether any tracing work runs.
+    hub: &'a Hub,
     /// Per-worker LRU of resolved model handles (network name → model).
     models: LruCache<String, Arc<ServableModel>>,
 }
@@ -117,6 +121,7 @@ pub(crate) fn run_worker(
     sched: &Scheduler,
     policy: &BatchPolicy,
     model_cache: usize,
+    hub: &Hub,
     tx: &mpsc::Sender<WorkerEvent>,
 ) {
     let mut ctx = WorkerCtx {
@@ -124,6 +129,7 @@ pub(crate) fn run_worker(
         repo,
         link,
         tx,
+        hub,
         models: LruCache::new(model_cache.max(1)),
     };
     let mut dev = StreamAccelerator::new(link);
@@ -144,7 +150,7 @@ pub(crate) fn run_worker(
             streak = 1;
             last_network = network;
         }
-        if !run_batch(&mut dev, &mut ctx, &batch) {
+        if !run_batch(&mut dev, &mut ctx, &batch, streak) {
             return; // coordinator went away
         }
     }
@@ -154,8 +160,13 @@ pub(crate) fn run_worker(
 /// re-created and a multi-request batch is retried member by member, so
 /// only truly poisoned requests fail. Returns `false` when the response
 /// channel is gone (coordinator dropped).
-fn run_batch(dev: &mut StreamAccelerator, ctx: &mut WorkerCtx, batch: &[QueuedRequest]) -> bool {
+fn run_batch(dev: &mut StreamAccelerator, ctx: &mut WorkerCtx, batch: &[QueuedRequest], streak: usize) -> bool {
     let size = batch.len();
+    // Tracing is one relaxed load plus a scan of (small) batch members;
+    // with it off, the rest of this function takes zero extra
+    // timestamps and the device records no layer tape.
+    let tracing = ctx.hub.tracing() && batch.iter().any(|q| q.request.trace.is_some());
+    let t_batch = tracing.then(Instant::now);
     let (model, model_cache_hit) = match ctx.model(batch[0].request.network.as_deref()) {
         Ok(found) => found,
         Err(err) => {
@@ -172,6 +183,9 @@ fn run_batch(dev: &mut StreamAccelerator, ctx: &mut WorkerCtx, batch: &[QueuedRe
     let wreuses_before = dev.stats.weight_reuses;
     let cmd_loads_before = dev.stats.command_loads;
     let cmd_reuses_before = dev.stats.command_reuses;
+    if tracing {
+        dev.begin_layer_tape();
+    }
     let t0 = Instant::now();
     let outcome =
         match catch_unwind(AssertUnwindSafe(|| forward_probs(dev, &model, &images))) {
@@ -182,11 +196,37 @@ fn run_batch(dev: &mut StreamAccelerator, ctx: &mut WorkerCtx, batch: &[QueuedRe
     let service_seconds = t0.elapsed().as_secs_f64();
     match outcome {
         Ok(all_probs) => {
+            let layers = if tracing { dev.take_layer_deltas() } else { Vec::new() };
+            // The forward span closes *after* the tape drain: the tape's
+            // last delta extends to drain time, so layer sub-spans are
+            // guaranteed to nest inside the forward span.
+            let t_done = Instant::now();
+            if !layers.is_empty() {
+                ctx.hub.record_layers(&model.name, &layers);
+            }
+            let batch_seq = tracing.then(|| ctx.hub.next_batch_seq());
             let link_seconds = dev.usb.total_seconds() - link_before;
             let engine_seconds = ClockDomain::ENGINE.secs(dev.stats.cycles) - engine_before;
             let modeled_each = (link_seconds + engine_seconds) / size as f64;
             for (q, probs) in batch.iter().zip(all_probs) {
+                let t_pp = tracing.then(Instant::now);
                 let argmax = postprocess::argmax(&probs).unwrap_or(0);
+                if let Some(tr) = q.request.trace.as_ref().filter(|_| tracing) {
+                    // Queue span reconstructed backwards from the
+                    // measured wait: it ended when this batch assembled.
+                    let end_us = tr.instant_us(t_batch.unwrap_or(t0));
+                    let start_us = end_us.saturating_sub((q.queue_wait * 1e6) as u64);
+                    tr.span_us("queue", start_us, end_us - start_us);
+                    tr.span("forward", t0, t_done);
+                    for l in &layers {
+                        tr.span_us(format!("layer {}", l.name), tr.instant_us(l.start), l.dur_us);
+                    }
+                    if let Some(t_pp) = t_pp {
+                        tr.span("postprocess", t_pp, Instant::now());
+                    }
+                    tr.set_batch(ctx.worker, batch_seq.unwrap_or(0), size, streak);
+                    tr.set_verdict(Verdict::Served);
+                }
                 let done = WorkerEvent::Done(InferenceResponse {
                     id: q.request.id,
                     network: model.name.clone(),
@@ -226,7 +266,7 @@ fn run_batch(dev: &mut StreamAccelerator, ctx: &mut WorkerCtx, batch: &[QueuedRe
                 // Don't let one poisoned request fail its batch-mates:
                 // replay each member alone (recursion depth is 1).
                 for q in batch {
-                    if !run_batch(dev, ctx, std::slice::from_ref(q)) {
+                    if !run_batch(dev, ctx, std::slice::from_ref(q), streak) {
                         return false;
                     }
                 }
@@ -259,6 +299,9 @@ fn fail_batch(
     tx: &mpsc::Sender<WorkerEvent>,
 ) -> Result<(), mpsc::SendError<WorkerEvent>> {
     for q in batch {
+        if let Some(tr) = &q.request.trace {
+            tr.set_verdict(Verdict::Failed);
+        }
         tx.send(WorkerEvent::Failed(FailedRequest {
             id: q.request.id,
             worker,
@@ -327,6 +370,7 @@ mod tests {
             &sched,
             &BatchPolicy::batched(4),
             4,
+            &Hub::new(1),
             &tx,
         );
         drop(tx);
@@ -376,6 +420,7 @@ mod tests {
             &sched,
             &BatchPolicy::single(),
             4,
+            &Hub::new(1),
             &tx,
         );
         drop(tx);
@@ -411,6 +456,7 @@ mod tests {
             &sched,
             &BatchPolicy::single(),
             4,
+            &Hub::new(1),
             &tx,
         );
         drop(tx);
@@ -428,5 +474,50 @@ mod tests {
         }
         assert_eq!(failed, vec![0]);
         assert_eq!(done, vec![1]);
+    }
+
+    #[test]
+    fn traced_batch_records_queue_forward_layer_and_postprocess_spans() {
+        let repo = tiny_repo();
+        let sched = Scheduler::new();
+        let mut rng = Rng::new(4);
+        let hub = Hub::new(1);
+        hub.set_tracing(true);
+        let trace = hub.start_trace(0, 1).expect("tracing is on");
+        sched.push(good_request(0, &mut rng).with_trace(trace.clone()));
+        sched.close();
+        let (tx, rx) = mpsc::channel();
+        run_worker(
+            0,
+            &repo,
+            crate::hw::usb::UsbLink::usb3_frontpanel(),
+            &sched,
+            &BatchPolicy::single(),
+            4,
+            &hub,
+            &tx,
+        );
+        drop(tx);
+        assert!(rx.iter().any(|ev| matches!(ev, WorkerEvent::Done(_))));
+        hub.finish(&trace);
+        let traces = hub.drain();
+        assert_eq!(traces.len(), 1);
+        let t = &traces[0];
+        assert_eq!(t.verdict, Verdict::Served);
+        assert_eq!(t.worker, Some(0), "finished on worker 0's ring");
+        assert_eq!((t.batch_size, t.streak), (1, 1));
+        let names: Vec<&str> = t.spans.iter().map(|s| s.name.as_str()).collect();
+        for want in ["queue", "forward", "layer c1", "layer gap", "postprocess"] {
+            assert!(names.contains(&want), "span {want:?} missing from {names:?}");
+        }
+        // Layer sub-spans sit inside the forward span.
+        let fwd = t.spans.iter().find(|s| s.name == "forward").unwrap();
+        for s in t.spans.iter().filter(|s| s.name.starts_with("layer ")) {
+            assert!(s.start_us >= fwd.start_us, "layer starts inside forward");
+            assert!(s.start_us + s.dur_us <= fwd.start_us + fwd.dur_us + 1, "layer ends inside forward");
+        }
+        // And the hub aggregated the per-layer counter families.
+        let fams = hub.layer_families();
+        assert!(fams.iter().any(|(net, layer, f)| net == "w" && layer == "c1" && f.passes > 0));
     }
 }

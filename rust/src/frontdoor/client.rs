@@ -14,7 +14,7 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::proto::{self, FrameRead, RequestMsg, ResponseMsg};
+use super::proto::{self, FrameRead, RequestMsg, ResponseMsg, StatsReport};
 
 /// Write side of a connection (frames out).
 pub struct SendHalf {
@@ -40,14 +40,26 @@ impl RecvHalf {
     /// connection cleanly; a flipped stop flag (see
     /// [`Client::connect_with_stop`]) surfaces as `ErrorKind::TimedOut`.
     pub fn recv(&mut self) -> io::Result<Option<ResponseMsg>> {
-        match proto::read_frame(&mut self.r, &self.stop)? {
-            FrameRead::Frame(body) => {
+        match self.recv_frame()? {
+            Some(body) => {
                 let msg = proto::decode_response(&body)
                     .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
                 Ok(Some(msg))
             }
+            None => Ok(None),
+        }
+    }
+
+    /// One raw frame body (`None` on clean close). The client side never
+    /// sets an idle deadline, so `IdleTimeout` cannot arise here.
+    fn recv_frame(&mut self) -> io::Result<Option<Vec<u8>>> {
+        match proto::read_frame(&mut self.r, &self.stop)? {
+            FrameRead::Frame(body) => Ok(Some(body)),
             FrameRead::CleanEof => Ok(None),
             FrameRead::Stopped => Err(io::Error::new(io::ErrorKind::TimedOut, "client stopped")),
+            FrameRead::IdleTimeout => {
+                Err(io::Error::new(io::ErrorKind::TimedOut, "idle timeout on a client read"))
+            }
         }
     }
 }
@@ -95,6 +107,20 @@ impl Client {
     pub fn request(&mut self, msg: &RequestMsg) -> io::Result<ResponseMsg> {
         self.send(msg)?;
         self.recv()?.ok_or_else(|| io::Error::new(io::ErrorKind::UnexpectedEof, "server closed before responding"))
+    }
+
+    /// Scrape the server's live stats: send a `stats_req` frame and
+    /// block for the `stats` report. Use a dedicated (or quiesced)
+    /// connection — with responses in flight on this connection, the
+    /// next inbound frame may be one of them rather than the report.
+    pub fn fetch_stats(&mut self) -> io::Result<StatsReport> {
+        proto::write_frame(&mut self.tx.w, &proto::encode_stats_request())?;
+        self.tx.w.flush()?;
+        let body = self
+            .rx
+            .recv_frame()?
+            .ok_or_else(|| io::Error::new(io::ErrorKind::UnexpectedEof, "server closed before the stats report"))?;
+        proto::decode_stats_report(&body).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))
     }
 
     /// Split into independently owned halves for a sender/receiver

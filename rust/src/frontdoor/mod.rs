@@ -48,13 +48,14 @@ use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::InferenceRequest;
 use crate::service::{Service, SubmitError, TicketResult};
-use proto::{FrameRead, ProtoError, RequestMsg, ResponseMsg, ShedReason};
+use crate::telemetry::{Hub, Trace};
+use proto::{FrameRead, ProtoError, RequestMsg, ResponseMsg, ShedReason, StatsReport};
 
 /// How often a blocked socket read re-checks the stop flag. The latency
 /// cost is paid only at shutdown (a live frame wakes the read
@@ -69,6 +70,24 @@ const REAP_THRESHOLD: usize = 64;
 /// Response to a request whose id could not be parsed out of the frame.
 const UNPARSEABLE_ID: u64 = u64::MAX;
 
+/// Door tunables beyond the bind address.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DoorConfig {
+    /// Disconnect a connection that has not *started* a frame for this
+    /// long (`None` = never, the [`FrontDoor::bind`] default). A silent
+    /// client then stops holding its reader/writer thread pair forever;
+    /// the drop is counted in [`DoorStats::idle_disconnects`]. The
+    /// timeout can never tear a frame — it fires only between frames.
+    pub idle_timeout: Option<Duration>,
+}
+
+impl DoorConfig {
+    pub fn with_idle_timeout(mut self, t: Duration) -> DoorConfig {
+        self.idle_timeout = Some(t);
+        self
+    }
+}
+
 /// Door-level counters (cumulative since bind). All reads are
 /// `Relaxed` — they are monitoring data, not synchronization.
 #[derive(Debug, Default)]
@@ -78,6 +97,7 @@ pub struct DoorStats {
     responses: AtomicU64,
     sheds: AtomicU64,
     protocol_errors: AtomicU64,
+    idle_disconnects: AtomicU64,
 }
 
 impl DoorStats {
@@ -106,19 +126,30 @@ impl DoorStats {
     pub fn protocol_errors(&self) -> u64 {
         self.protocol_errors.load(Ordering::Relaxed)
     }
+
+    /// Connections dropped by the idle timeout ([`DoorConfig`]).
+    pub fn idle_disconnects(&self) -> u64 {
+        self.idle_disconnects.load(Ordering::Relaxed)
+    }
 }
 
 /// One completion headed for a connection's writer thread, tagged with
 /// the *connection-scoped* id the client knows.
 enum Outbound {
-    Done(u64, TicketResult),
+    /// A completed ticket, plus its lifecycle trace when tracing is on
+    /// (the writer records the flush span and finishes it).
+    Done(u64, TicketResult, Option<Trace>),
     Shed { id: u64, reason: ShedReason, predicted_us: u32 },
     Failed { id: u64, error: String },
+    /// A stats scrape answer — out of band, counted in neither
+    /// `requests` nor `responses`.
+    Report(Box<StatsReport>),
 }
 
 /// Everything the acceptor and every connection thread share.
 struct Shared {
     svc: Arc<Service>,
+    cfg: DoorConfig,
     stop: AtomicBool,
     stats: Arc<DoorStats>,
     /// Global service-id allocator (connection ids are remapped through
@@ -139,12 +170,19 @@ pub struct FrontDoor {
 
 impl FrontDoor {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
-    /// start accepting connections against `svc`.
+    /// start accepting connections against `svc`, with default tunables
+    /// (no idle timeout).
     pub fn bind<A: ToSocketAddrs>(svc: Arc<Service>, addr: A) -> Result<FrontDoor> {
+        FrontDoor::bind_with_config(svc, addr, DoorConfig::default())
+    }
+
+    /// [`FrontDoor::bind`] with explicit [`DoorConfig`] tunables.
+    pub fn bind_with_config<A: ToSocketAddrs>(svc: Arc<Service>, addr: A, cfg: DoorConfig) -> Result<FrontDoor> {
         let listener = TcpListener::bind(addr).context("bind front door")?;
         let addr = listener.local_addr().context("front door local addr")?;
         let shared = Arc::new(Shared {
             svc,
+            cfg,
             stop: AtomicBool::new(false),
             stats: Arc::new(DoorStats::default()),
             next_id: AtomicU64::new(0),
@@ -209,7 +247,9 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
             Ok(s) => s,
             Err(_) => continue, // transient accept error: keep listening
         };
-        shared.stats.connections.fetch_add(1, Ordering::Relaxed);
+        // The pre-increment value doubles as this connection's id in
+        // exported traces.
+        let conn_id = shared.stats.connections.fetch_add(1, Ordering::Relaxed);
         let _ = stream.set_nodelay(true);
         // Short read timeout so a blocked reader polls the stop flag.
         let _ = stream.set_read_timeout(Some(READ_POLL));
@@ -222,13 +262,14 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
             let shared = shared.clone();
             std::thread::Builder::new()
                 .name("fa-door-read".to_string())
-                .spawn(move || run_reader(stream, &shared, &tx))
+                .spawn(move || run_reader(stream, &shared, &tx, conn_id))
         };
         let writer = {
             let stats = shared.stats.clone();
+            let hub = shared.svc.telemetry().clone();
             std::thread::Builder::new()
                 .name("fa-door-write".to_string())
-                .spawn(move || run_writer(write_half, rx, &stats))
+                .spawn(move || run_writer(write_half, rx, &stats, &hub))
         };
         let mut conns = shared.conns.lock().unwrap();
         conns.extend(reader.into_iter().chain(writer));
@@ -242,11 +283,18 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
 /// drops the connection's `tx`, which (once every in-flight
 /// `on_complete` clone fires) closes the writer's channel and ends the
 /// writer thread too.
-fn run_reader(mut stream: TcpStream, shared: &Arc<Shared>, tx: &mpsc::Sender<Outbound>) {
+fn run_reader(mut stream: TcpStream, shared: &Arc<Shared>, tx: &mpsc::Sender<Outbound>, conn: u64) {
     loop {
-        let body = match proto::read_frame(&mut stream, &shared.stop) {
+        let idle_by = shared.cfg.idle_timeout.map(|t| Instant::now() + t);
+        let body = match proto::read_frame_idle(&mut stream, &shared.stop, idle_by) {
             Ok(FrameRead::Frame(b)) => b,
             Ok(FrameRead::CleanEof) | Ok(FrameRead::Stopped) => return,
+            Ok(FrameRead::IdleTimeout) => {
+                // Silent peer: release the thread pair. Not a protocol
+                // error — the client simply went quiet.
+                shared.stats.idle_disconnects.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
             Err(_) => {
                 // Torn prefix/body or hostile length: a wire-level
                 // violation of this connection only.
@@ -254,6 +302,26 @@ fn run_reader(mut stream: TcpStream, shared: &Arc<Shared>, tx: &mpsc::Sender<Out
                 return;
             }
         };
+        let t_frame = Instant::now();
+        // Stats scrapes dispatch on the tag byte *before* the strict
+        // request decode: they are out-of-band reads, not requests.
+        if body.first() == Some(&proto::TAG_STATS_REQUEST) {
+            match proto::decode_stats_request(&body) {
+                Ok(()) => {
+                    if tx.send(Outbound::Report(Box::new(make_report(shared)))).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+                Err(e) => {
+                    // A malformed stats frame is a protocol violation
+                    // like any other: answer once, hang up.
+                    shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Outbound::Failed { id: UNPARSEABLE_ID, error: protocol_error_text(&e) });
+                    return;
+                }
+            }
+        }
         let msg = match proto::decode_request(&body) {
             Ok(m) => m,
             Err(e) => {
@@ -264,9 +332,24 @@ fn run_reader(mut stream: TcpStream, shared: &Arc<Shared>, tx: &mpsc::Sender<Out
                 return;
             }
         };
-        if !submit_one(shared, tx, msg) {
+        if !submit_one(shared, tx, msg, conn, t_frame) {
             return;
         }
+    }
+}
+
+/// Assemble one live stats report: door counters + service snapshot.
+fn make_report(shared: &Shared) -> StatsReport {
+    let s = &shared.stats;
+    StatsReport {
+        uptime_us: shared.svc.telemetry().uptime_us(),
+        connections: s.connections(),
+        requests: s.requests(),
+        responses: s.responses(),
+        sheds: s.sheds(),
+        protocol_errors: s.protocol_errors(),
+        idle_disconnects: s.idle_disconnects(),
+        service: shared.svc.live_stats(),
     }
 }
 
@@ -276,11 +359,26 @@ fn protocol_error_text(e: &ProtoError) -> String {
 
 /// Remap, submit, and route one decoded request. Returns `false` when
 /// the connection should close (service closed, or the writer is gone).
-fn submit_one(shared: &Arc<Shared>, tx: &mpsc::Sender<Outbound>, msg: RequestMsg) -> bool {
+/// `t_frame` is when the request's frame finished arriving — the decode
+/// span start when tracing is on.
+fn submit_one(shared: &Arc<Shared>, tx: &mpsc::Sender<Outbound>, msg: RequestMsg, conn: u64, t_frame: Instant) -> bool {
     let cid = msg.id;
     let gid = shared.next_id.fetch_add(1, Ordering::Relaxed);
     let mut req = InferenceRequest::new(gid, msg.image);
     req.network = msg.network;
+    // The door is the sole creator and finisher of traces: sheds and
+    // submit-time failures finish here; admitted requests finish in the
+    // writer after the response flush.
+    let trace = shared.svc.telemetry().start_trace(gid, conn);
+    if let Some(tr) = &trace {
+        tr.span("decode", t_frame, Instant::now());
+        req.trace = Some(tr.clone());
+    }
+    let finish = |tr: &Option<Trace>| {
+        if let Some(tr) = tr {
+            shared.svc.telemetry().finish(tr);
+        }
+    };
     let deadline = (msg.deadline_us > 0).then(|| Duration::from_micros(u64::from(msg.deadline_us)));
     let submitted = match deadline {
         Some(budget) => shared.svc.submit_deadline(req, budget),
@@ -294,51 +392,81 @@ fn submit_one(shared: &Arc<Shared>, tx: &mpsc::Sender<Outbound>, msg: RequestMsg
                 // The writer may already be gone (peer disconnected):
                 // the completion then lands in a closed channel, which
                 // is exactly the drain-without-poisoning we want.
-                let _ = tx.send(Outbound::Done(cid, r));
+                let _ = tx.send(Outbound::Done(cid, r, trace));
             });
             true
         }
         Err(SubmitError::QueueFull) => {
             shared.stats.sheds.fetch_add(1, Ordering::Relaxed);
+            finish(&trace);
             tx.send(Outbound::Shed { id: cid, reason: ShedReason::QueueFull, predicted_us: 0 }).is_ok()
         }
         Err(SubmitError::DeadlineShed { predicted_us }) => {
             shared.stats.sheds.fetch_add(1, Ordering::Relaxed);
+            finish(&trace);
             let predicted_us = u32::try_from(predicted_us).unwrap_or(u32::MAX);
             tx.send(Outbound::Shed { id: cid, reason: ShedReason::Deadline, predicted_us }).is_ok()
         }
         Err(SubmitError::Closed) => {
+            finish(&trace);
             let _ = tx.send(Outbound::Failed { id: cid, error: SubmitError::Closed.to_string() });
             false
         }
         // Unreachable with door-allocated global ids, but answer
         // truthfully rather than panicking a server thread.
-        Err(e @ SubmitError::DuplicateId) => tx.send(Outbound::Failed { id: cid, error: e.to_string() }).is_ok(),
+        Err(e @ SubmitError::DuplicateId) => {
+            finish(&trace);
+            tx.send(Outbound::Failed { id: cid, error: e.to_string() }).is_ok()
+        }
     }
 }
 
 /// Per-connection write loop: completions (in whatever order they
-/// land), sheds, and failures — encoded and flushed one frame each.
-fn run_writer(stream: TcpStream, rx: mpsc::Receiver<Outbound>, stats: &Arc<DoorStats>) {
+/// land), sheds, failures, and stats reports — encoded and flushed one
+/// frame each. Stats reports count in neither `responses` nor `sheds`,
+/// so a scrape never perturbs the accounting it is reading.
+fn run_writer(stream: TcpStream, rx: mpsc::Receiver<Outbound>, stats: &Arc<DoorStats>, hub: &Hub) {
     let mut w = BufWriter::new(stream);
     for out in rx {
-        let msg = match out {
-            Outbound::Done(cid, Ok(resp)) => ResponseMsg::Ok {
-                id: cid,
-                argmax: u32::try_from(resp.argmax).unwrap_or(u32::MAX),
-                probs: resp.probs,
-            },
-            Outbound::Done(cid, Err(f)) => ResponseMsg::Failed { id: cid, error: f.error },
-            Outbound::Shed { id, reason, predicted_us } => ResponseMsg::Shed { id, reason, predicted_us },
-            Outbound::Failed { id, error } => ResponseMsg::Failed { id, error },
+        let (body, trace, counted) = match out {
+            Outbound::Done(cid, result, trace) => {
+                let msg = match result {
+                    Ok(resp) => ResponseMsg::Ok {
+                        id: cid,
+                        argmax: u32::try_from(resp.argmax).unwrap_or(u32::MAX),
+                        probs: resp.probs,
+                    },
+                    Err(f) => ResponseMsg::Failed { id: cid, error: f.error },
+                };
+                (proto::encode_response(&msg), trace, true)
+            }
+            Outbound::Shed { id, reason, predicted_us } => {
+                (proto::encode_response(&ResponseMsg::Shed { id, reason, predicted_us }), None, true)
+            }
+            Outbound::Failed { id, error } => {
+                (proto::encode_response(&ResponseMsg::Failed { id, error }), None, true)
+            }
+            Outbound::Report(rep) => (proto::encode_stats_report(&rep), None, false),
         };
-        let body = proto::encode_response(&msg);
+        let t_flush = trace.as_ref().map(|_| Instant::now());
         if proto::write_frame(&mut w, &body).and_then(|()| w.flush()).is_err() {
             // Peer gone: stop writing. Remaining completions drain into
-            // the closed channel as their tickets resolve.
+            // the closed channel as their tickets resolve. The trace is
+            // still sealed so the drainer sees the request's lifecycle.
+            if let Some(tr) = &trace {
+                hub.finish(tr);
+            }
             return;
         }
-        stats.responses.fetch_add(1, Ordering::Relaxed);
+        if let Some(tr) = &trace {
+            if let Some(t0) = t_flush {
+                tr.span("flush", t0, Instant::now());
+            }
+            hub.finish(tr);
+        }
+        if counted {
+            stats.responses.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -354,8 +482,8 @@ mod tests {
     fn door_stats_default_to_zero() {
         let s = DoorStats::default();
         assert_eq!(
-            (s.connections(), s.requests(), s.responses(), s.sheds(), s.protocol_errors()),
-            (0, 0, 0, 0, 0)
+            (s.connections(), s.requests(), s.responses(), s.sheds(), s.protocol_errors(), s.idle_disconnects()),
+            (0, 0, 0, 0, 0, 0)
         );
     }
 

@@ -12,7 +12,27 @@
 //!              · u32le n_probs · f32le × n_probs
 //!   shed      := 0x03 · u64le id · u8 reason · u32le predicted_us
 //!   failed    := 0x04 · u64le id · u32le msg_len · msg bytes (UTF-8)
+//!   stats_req := 0x05                               (scrape live stats)
+//!   stats     := 0x06 · u64le uptime_us
+//!              · u64le × 6  door counters (connections, requests,
+//!                           responses, sheds, protocol_errors,
+//!                           idle_disconnects)
+//!              · u64le × 7  service counters (served, failed,
+//!                           queue_full_sheds, deadline_sheds,
+//!                           result_cache_hits, outstanding, queue_depth)
+//!              · u16le n_networks · n × network row
+//!              · u16le n_workers  · n × worker row
+//!   network row := u16le name_len · name bytes (UTF-8)
+//!              · u64le × 9  (served, deadline_sheds, predicted_us,
+//!                            qw_p50_us, qw_p90_us, sv_p50_us,
+//!                            sv_p90_us, lat_p50_us, lat_p99_us)
+//!   worker row := u32le worker · u64le served · u64le batches
 //! ```
+//!
+//! A `stats_req` on any connection answers one `stats` frame out of
+//! band: it consumes no request id, counts in neither `requests` nor
+//! `responses`, and never touches the admission queue — scraping a
+//! loaded server observes it without perturbing its accounting.
 //!
 //! Request ids are *connection-scoped*: each connection numbers its own
 //! requests and the door maps them to globally unique service ids, so
@@ -29,8 +49,10 @@
 
 use std::io::{self, Read, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
 
 use crate::net::tensor::{Tensor, TensorF32};
+use crate::telemetry::{NetworkSnapshot, ServiceSnapshot, WorkerSnapshot};
 
 /// Hard ceiling on one frame's payload (16 MiB) — a torn or hostile
 /// length prefix must not make the reader allocate unbounded memory.
@@ -41,6 +63,8 @@ pub const TAG_REQUEST: u8 = 0x01;
 pub const TAG_OK: u8 = 0x02;
 pub const TAG_SHED: u8 = 0x03;
 pub const TAG_FAILED: u8 = 0x04;
+pub const TAG_STATS_REQUEST: u8 = 0x05;
+pub const TAG_STATS_REPORT: u8 = 0x06;
 
 /// Why the door turned a request away without serving it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -315,6 +339,153 @@ pub fn decode_response(body: &[u8]) -> Result<ResponseMsg, ProtoError> {
     Ok(msg)
 }
 
+/// One live-stats scrape answer: door counters plus the service's
+/// per-network / per-worker snapshot, all monotonic counters sampled
+/// under one state lock on the server.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsReport {
+    /// Microseconds since the telemetry hub's epoch (service start).
+    pub uptime_us: u64,
+    /// Connections accepted over the door's lifetime.
+    pub connections: u64,
+    /// Inference request frames decoded (stats scrapes excluded).
+    pub requests: u64,
+    /// Response frames written (stats frames excluded).
+    pub responses: u64,
+    /// Shed frames among those responses.
+    pub sheds: u64,
+    /// Connections dropped for protocol violations.
+    pub protocol_errors: u64,
+    /// Connections dropped by the idle timeout.
+    pub idle_disconnects: u64,
+    /// The service-side snapshot (counters + metric families).
+    pub service: ServiceSnapshot,
+}
+
+/// Encode a stats-request frame body: the bare tag.
+pub fn encode_stats_request() -> Vec<u8> {
+    vec![TAG_STATS_REQUEST]
+}
+
+/// Decode a stats-request body (strict: exactly one tag byte).
+pub fn decode_stats_request(body: &[u8]) -> Result<(), ProtoError> {
+    let mut c = Cursor::new(body);
+    let tag = c.u8()?;
+    if tag != TAG_STATS_REQUEST {
+        return Err(ProtoError::BadTag(tag));
+    }
+    c.finish()
+}
+
+/// Encode a stats-report frame body.
+pub fn encode_stats_report(rep: &StatsReport) -> Vec<u8> {
+    let svc = &rep.service;
+    assert!(svc.networks.len() <= u16::MAX as usize, "too many networks for the wire");
+    assert!(svc.workers.len() <= u16::MAX as usize, "too many workers for the wire");
+    let mut out = Vec::with_capacity(1 + 8 * 14 + svc.networks.len() * 90 + svc.workers.len() * 20);
+    out.push(TAG_STATS_REPORT);
+    put_u64(&mut out, rep.uptime_us);
+    for v in [rep.connections, rep.requests, rep.responses, rep.sheds, rep.protocol_errors, rep.idle_disconnects] {
+        put_u64(&mut out, v);
+    }
+    for v in [
+        svc.served,
+        svc.failed,
+        svc.queue_full_sheds,
+        svc.deadline_sheds,
+        svc.result_cache_hits,
+        svc.outstanding,
+        svc.queue_depth,
+    ] {
+        put_u64(&mut out, v);
+    }
+    put_u16(&mut out, svc.networks.len() as u16);
+    for n in &svc.networks {
+        assert!(n.name.len() <= u16::MAX as usize, "network name too long for the wire");
+        put_u16(&mut out, n.name.len() as u16);
+        out.extend_from_slice(n.name.as_bytes());
+        for v in [
+            n.served,
+            n.deadline_sheds,
+            n.predicted_us,
+            n.qw_p50_us,
+            n.qw_p90_us,
+            n.sv_p50_us,
+            n.sv_p90_us,
+            n.lat_p50_us,
+            n.lat_p99_us,
+        ] {
+            put_u64(&mut out, v);
+        }
+    }
+    put_u16(&mut out, svc.workers.len() as u16);
+    for w in &svc.workers {
+        put_u32(&mut out, w.worker);
+        put_u64(&mut out, w.served);
+        put_u64(&mut out, w.batches);
+    }
+    out
+}
+
+/// Decode a stats-report frame body (strict).
+pub fn decode_stats_report(body: &[u8]) -> Result<StatsReport, ProtoError> {
+    let mut c = Cursor::new(body);
+    let tag = c.u8()?;
+    if tag != TAG_STATS_REPORT {
+        return Err(ProtoError::BadTag(tag));
+    }
+    let uptime_us = c.u64()?;
+    let connections = c.u64()?;
+    let requests = c.u64()?;
+    let responses = c.u64()?;
+    let sheds = c.u64()?;
+    let protocol_errors = c.u64()?;
+    let idle_disconnects = c.u64()?;
+    let mut svc = ServiceSnapshot {
+        served: c.u64()?,
+        failed: c.u64()?,
+        queue_full_sheds: c.u64()?,
+        deadline_sheds: c.u64()?,
+        result_cache_hits: c.u64()?,
+        outstanding: c.u64()?,
+        queue_depth: c.u64()?,
+        networks: Vec::new(),
+        workers: Vec::new(),
+    };
+    let n_networks = c.u16()? as usize;
+    for _ in 0..n_networks {
+        let name_len = c.u16()? as usize;
+        let name = std::str::from_utf8(c.bytes(name_len)?).map_err(|_| ProtoError::BadUtf8)?.to_string();
+        svc.networks.push(NetworkSnapshot {
+            name,
+            served: c.u64()?,
+            deadline_sheds: c.u64()?,
+            predicted_us: c.u64()?,
+            qw_p50_us: c.u64()?,
+            qw_p90_us: c.u64()?,
+            sv_p50_us: c.u64()?,
+            sv_p90_us: c.u64()?,
+            lat_p50_us: c.u64()?,
+            lat_p99_us: c.u64()?,
+        });
+    }
+    let n_workers = c.u16()? as usize;
+    for _ in 0..n_workers {
+        svc.workers.push(WorkerSnapshot { worker: c.u32()?, served: c.u64()?, batches: c.u64()? });
+    }
+    c.finish()?;
+    Ok(StatsReport {
+        uptime_us,
+        connections,
+        requests,
+        responses,
+        sheds,
+        protocol_errors,
+        idle_disconnects,
+        service: svc,
+    })
+}
+
 /// Write one length-prefixed frame. Errors with `InvalidInput` on an
 /// oversize body instead of emitting a frame no peer would accept.
 pub fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> io::Result<()> {
@@ -334,6 +505,9 @@ pub enum FrameRead {
     CleanEof,
     /// The stop flag flipped while waiting — shutdown, not an error.
     Stopped,
+    /// No byte of the next frame arrived by the idle deadline
+    /// ([`read_frame_idle`]) — the peer is silent, not misbehaving.
+    IdleTimeout,
 }
 
 enum Fill {
@@ -341,12 +515,16 @@ enum Fill {
     CleanEof,
     TornEof,
     Stopped,
+    Idle,
 }
 
 /// Fill `buf` exactly, tolerating read timeouts: sockets under the door
 /// run with a short `read_timeout` so a blocked read re-checks `stop`
 /// every poll interval instead of pinning a thread through shutdown.
-fn read_full<R: Read>(r: &mut R, buf: &mut [u8], stop: &AtomicBool) -> io::Result<Fill> {
+/// `idle_by` expires the wait only while *zero* bytes have arrived —
+/// once the first byte lands the fill runs to completion (or a torn
+/// EOF), so an idle deadline can never tear a frame mid-structure.
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8], stop: &AtomicBool, idle_by: Option<Instant>) -> io::Result<Fill> {
     let mut filled = 0;
     while filled < buf.len() {
         match r.read(&mut buf[filled..]) {
@@ -356,6 +534,9 @@ fn read_full<R: Read>(r: &mut R, buf: &mut [u8], stop: &AtomicBool) -> io::Resul
                 io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted => {
                     if stop.load(Ordering::Relaxed) {
                         return Ok(Fill::Stopped);
+                    }
+                    if filled == 0 && idle_by.is_some_and(|by| Instant::now() >= by) {
+                        return Ok(Fill::Idle);
                     }
                 }
                 _ => return Err(e),
@@ -370,11 +551,20 @@ fn read_full<R: Read>(r: &mut R, buf: &mut [u8], stop: &AtomicBool) -> io::Resul
 /// is `InvalidData` — both close the connection without touching any
 /// other connection's state.
 pub fn read_frame<R: Read>(r: &mut R, stop: &AtomicBool) -> io::Result<FrameRead> {
+    read_frame_idle(r, stop, None)
+}
+
+/// [`read_frame`], but give up with [`FrameRead::IdleTimeout`] if no
+/// byte of the next frame's length prefix has arrived by `idle_by`.
+/// Idle means *between* frames: once the prefix starts, the frame is
+/// read to completion regardless of the deadline.
+pub fn read_frame_idle<R: Read>(r: &mut R, stop: &AtomicBool, idle_by: Option<Instant>) -> io::Result<FrameRead> {
     let mut prefix = [0u8; 4];
-    match read_full(r, &mut prefix, stop)? {
+    match read_full(r, &mut prefix, stop, idle_by)? {
         Fill::CleanEof => return Ok(FrameRead::CleanEof),
         Fill::TornEof => return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "torn length prefix")),
         Fill::Stopped => return Ok(FrameRead::Stopped),
+        Fill::Idle => return Ok(FrameRead::IdleTimeout),
         Fill::Full => {}
     }
     let len = u32::from_le_bytes(prefix) as usize;
@@ -382,9 +572,10 @@ pub fn read_frame<R: Read>(r: &mut R, stop: &AtomicBool) -> io::Result<FrameRead
         return Err(io::Error::new(io::ErrorKind::InvalidData, format!("length prefix {len} > MAX_FRAME")));
     }
     let mut body = vec![0u8; len];
-    match read_full(r, &mut body, stop)? {
+    match read_full(r, &mut body, stop, None)? {
         Fill::Full => Ok(FrameRead::Frame(body)),
         Fill::Stopped => Ok(FrameRead::Stopped),
+        Fill::Idle => unreachable!("body reads carry no idle deadline"),
         Fill::CleanEof | Fill::TornEof => Err(io::Error::new(io::ErrorKind::UnexpectedEof, "torn frame body")),
     }
 }
@@ -484,5 +675,97 @@ mod tests {
         let huge = (MAX_FRAME as u32 + 1).to_le_bytes();
         assert_eq!(read_frame(&mut &huge[..], &stop).unwrap_err().kind(), io::ErrorKind::InvalidData);
         assert!(write_frame(&mut Vec::new(), &vec![0u8; MAX_FRAME + 1]).is_err());
+    }
+
+    fn sample_report() -> StatsReport {
+        StatsReport {
+            uptime_us: 123_456,
+            connections: 5,
+            requests: 40,
+            responses: 38,
+            sheds: 3,
+            protocol_errors: 1,
+            idle_disconnects: 2,
+            service: crate::telemetry::ServiceSnapshot {
+                served: 35,
+                failed: 0,
+                queue_full_sheds: 2,
+                deadline_sheds: 1,
+                result_cache_hits: 4,
+                outstanding: 2,
+                queue_depth: 1,
+                networks: vec![
+                    crate::telemetry::NetworkSnapshot {
+                        name: "squeezenet".to_string(),
+                        served: 30,
+                        deadline_sheds: 1,
+                        predicted_us: 900,
+                        qw_p50_us: 100,
+                        qw_p90_us: 400,
+                        sv_p50_us: 500,
+                        sv_p90_us: 700,
+                        lat_p50_us: 650,
+                        lat_p99_us: 1200,
+                    },
+                    crate::telemetry::NetworkSnapshot { name: "tiny".to_string(), ..Default::default() },
+                ],
+                workers: vec![
+                    crate::telemetry::WorkerSnapshot { worker: 0, served: 20, batches: 7 },
+                    crate::telemetry::WorkerSnapshot { worker: 1, served: 15, batches: 6 },
+                ],
+            },
+        }
+    }
+
+    #[test]
+    fn stats_frames_round_trip() {
+        assert!(decode_stats_request(&encode_stats_request()).is_ok());
+        let rep = sample_report();
+        assert_eq!(decode_stats_report(&encode_stats_report(&rep)).unwrap(), rep);
+        // Degenerate report (no networks, no workers) survives too.
+        let empty = StatsReport::default();
+        assert_eq!(decode_stats_report(&encode_stats_report(&empty)).unwrap(), empty);
+    }
+
+    #[test]
+    fn stats_decode_is_strict() {
+        assert_eq!(decode_stats_request(&[TAG_STATS_REQUEST, 0xEE]), Err(ProtoError::Trailing(1)));
+        assert_eq!(decode_stats_request(&[TAG_OK]), Err(ProtoError::BadTag(TAG_OK)));
+        assert_eq!(decode_stats_request(&[]), Err(ProtoError::Truncated));
+        let wire = encode_stats_report(&sample_report());
+        assert_eq!(decode_stats_report(&wire[..wire.len() - 1]), Err(ProtoError::Truncated));
+        let mut trailing = wire.clone();
+        trailing.push(0);
+        assert_eq!(decode_stats_report(&trailing), Err(ProtoError::Trailing(1)));
+        assert_eq!(decode_stats_report(&[0x7F]), Err(ProtoError::BadTag(0x7F)));
+    }
+
+    /// A reader that never produces data: every read times out, like a
+    /// socket whose peer has gone silent under a short `read_timeout`.
+    struct SilentReader;
+
+    impl Read for SilentReader {
+        fn read(&mut self, _buf: &mut [u8]) -> io::Result<usize> {
+            Err(io::Error::new(io::ErrorKind::WouldBlock, "no data"))
+        }
+    }
+
+    #[test]
+    fn idle_deadline_fires_only_between_frames() {
+        let stop = AtomicBool::new(false);
+        // Expired deadline + silent peer = idle timeout, not an error.
+        let expired = Some(Instant::now() - std::time::Duration::from_millis(1));
+        assert!(matches!(read_frame_idle(&mut SilentReader, &stop, expired).unwrap(), FrameRead::IdleTimeout));
+        // A complete frame is still read even under an expired deadline
+        // (bytes are available, so the connection is not idle).
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"payload").unwrap();
+        match read_frame_idle(&mut &wire[..], &stop, expired).unwrap() {
+            FrameRead::Frame(b) => assert_eq!(b, b"payload"),
+            other => panic!("expected frame, got {other:?}"),
+        }
+        // Stop beats idle: shutdown is reported as Stopped.
+        stop.store(true, Ordering::Relaxed);
+        assert!(matches!(read_frame_idle(&mut SilentReader, &stop, expired).unwrap(), FrameRead::Stopped));
     }
 }

@@ -32,3 +32,4 @@ pub mod prop;
 pub mod resources;
 pub mod runtime;
 pub mod service;
+pub mod telemetry;

@@ -11,7 +11,10 @@
 //! * `listen`     — network front door: serve the TCP wire protocol
 //!   over a long-lived service (deadline-aware shedding included)
 //! * `loadgen`    — open-loop socket load generator against `listen`
-//!   (goodput / shed rate / tail latency, bit-exact verification)
+//!   (goodput / shed rate / tail latency, bit-exact verification;
+//!   `--ramp` sweeps the offered rate to find the goodput knee)
+//! * `top`        — live telemetry viewer: poll a door's stats frame
+//!   and render per-network throughput / sheds / latency quantiles
 //! * `bench-diff` — compare two runs' BENCH_*.json, gate regressions
 //! * `selftest`   — quick functional sanity run
 
@@ -293,6 +296,10 @@ fn main() -> Result<()> {
             let seed: u64 = args.flags.get("seed").map(|v| v.parse()).transpose()?.unwrap_or(5);
             let addr = args.flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7311".to_string());
             let duration: f64 = args.flags.get("duration").map(|v| v.parse()).transpose()?.unwrap_or(0.0);
+            // 0 = never disconnect an idle peer (the pre-telemetry default).
+            let idle_secs: f64 =
+                args.flags.get("idle-timeout").map(|v| v.parse()).transpose()?.unwrap_or(0.0);
+            let trace_out = args.flags.get("trace-out").cloned();
 
             let blobs = synthesize_weights(&net, seed);
             let mut repo = fusionaccel::compiler::ModelRepo::new();
@@ -304,7 +311,54 @@ fn main() -> Result<()> {
             ))
             .with_queue_capacity(queue);
             let svc = std::sync::Arc::new(fusionaccel::service::Service::start(std::sync::Arc::new(repo), &cfg)?);
-            let door = FrontDoor::bind(svc.clone(), addr.as_str())?;
+            let mut door_cfg = fusionaccel::frontdoor::DoorConfig::default();
+            if idle_secs > 0.0 {
+                door_cfg = door_cfg.with_idle_timeout(Duration::from_secs_f64(idle_secs));
+            }
+            // --trace-out flips the telemetry hub on and starts a drainer
+            // thread: completed traces append to `<path>.jsonl` as they
+            // finish (scripted analysis of a live server), and the first
+            // 10 000 are kept in memory for one Chrome trace-event JSON
+            // written to <path> at teardown.
+            let trace_stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let drainer = match &trace_out {
+                Some(path) => {
+                    svc.telemetry().set_tracing(true);
+                    let hub = svc.telemetry().clone();
+                    let stop = trace_stop.clone();
+                    let jsonl_path = format!("{path}.jsonl");
+                    let handle = std::thread::Builder::new()
+                        .name("trace-drain".to_string())
+                        .spawn(move || -> Result<Vec<fusionaccel::telemetry::CompletedTrace>> {
+                            use std::io::Write as _;
+                            let f = std::fs::File::create(&jsonl_path)
+                                .with_context(|| format!("create {jsonl_path}"))?;
+                            let mut log = std::io::BufWriter::new(f);
+                            let mut kept: Vec<fusionaccel::telemetry::CompletedTrace> = Vec::new();
+                            loop {
+                                // Read the flag *before* draining so the
+                                // pass after shutdown still collects the
+                                // final writers' traces.
+                                let done = stop.load(std::sync::atomic::Ordering::SeqCst);
+                                for t in hub.drain() {
+                                    writeln!(log, "{}", fusionaccel::telemetry::jsonl_line(&t))?;
+                                    if kept.len() < 10_000 {
+                                        kept.push(t);
+                                    }
+                                }
+                                log.flush()?;
+                                if done {
+                                    return Ok(kept);
+                                }
+                                std::thread::sleep(Duration::from_millis(500));
+                            }
+                        })
+                        .context("spawn trace drainer")?;
+                    Some(handle)
+                }
+                None => None,
+            };
+            let door = FrontDoor::bind_with_config(svc.clone(), addr.as_str(), door_cfg)?;
             let bound = door.local_addr();
             println!(
                 "listening on {bound} — net {} (seed {seed}), {workers} worker(s), batch ≤ {batch}, \
@@ -327,13 +381,34 @@ fn main() -> Result<()> {
             }
             let dstats = door.shutdown();
             println!(
-                "door: {} connection(s), {} request(s), {} response(s), {} shed(s), {} protocol error(s)",
+                "door: {} connection(s), {} request(s), {} response(s), {} shed(s), {} protocol error(s), \
+                 {} idle disconnect(s)",
                 dstats.connections(),
                 dstats.requests(),
                 dstats.responses(),
                 dstats.sheds(),
-                dstats.protocol_errors()
+                dstats.protocol_errors(),
+                dstats.idle_disconnects()
             );
+            if let Some(handle) = drainer {
+                // The door is down, so every trace is sealed: stop the
+                // drainer (it runs one last pass first) and write the
+                // Chrome trace file.
+                trace_stop.store(true, std::sync::atomic::Ordering::SeqCst);
+                let kept = handle
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("trace drainer panicked"))?
+                    .context("trace drainer")?;
+                let path = trace_out.as_deref().unwrap_or("trace.json");
+                std::fs::write(path, fusionaccel::telemetry::chrome_trace_json(&kept))
+                    .with_context(|| format!("write {path}"))?;
+                let dropped = svc.telemetry().dropped();
+                println!(
+                    "trace: {} request(s) → {path} (chrome://tracing) + {path}.jsonl{}",
+                    kept.len(),
+                    if dropped > 0 { format!(" ({dropped} dropped at the ring)") } else { String::new() }
+                );
+            }
             let svc = std::sync::Arc::try_unwrap(svc)
                 .map_err(|_| anyhow::anyhow!("service still referenced after door shutdown"))?;
             let stats = svc.shutdown()?;
@@ -347,6 +422,7 @@ fn main() -> Result<()> {
             );
         }
         "loadgen" => loadgen(&args)?,
+        "top" => top(&args)?,
         "bench-diff" => {
             let old = args.flags.get("old").map(|s| s.as_str()).context("bench-diff needs --old <dir|file>")?;
             let new = args.flags.get("new").map(|s| s.as_str()).context("bench-diff needs --new <dir|file>")?;
@@ -382,12 +458,22 @@ fn main() -> Result<()> {
                  \x20           long-lived service over a synthetic trace; --rate 0 = lossless submit_wait\n\
                  \x20 listen    [--addr 127.0.0.1:7311] [--net micro|...] [--workers 2] [--batch 4]\n\
                  \x20           [--queue 16] [--seed 5] [--duration 0] [--port-file p.txt]\n\
+                 \x20           [--idle-timeout 0] [--trace-out trace.json]\n\
                  \x20           TCP front door over a long-lived service (--duration 0 = run forever;\n\
-                 \x20           --addr host:0 picks an ephemeral port, written to --port-file)\n\
+                 \x20           --addr host:0 picks an ephemeral port, written to --port-file;\n\
+                 \x20           --idle-timeout drops silent peers after N seconds, 0 = never;\n\
+                 \x20           --trace-out records request traces: Chrome trace JSON at teardown\n\
+                 \x20           plus a live .jsonl event log alongside)\n\
                  \x20 loadgen   --addr host:port [--clients 32] [--requests 16] [--rate 200]\n\
                  \x20           [--deadline-ms 0] [--net micro|...] [--seed 5] [--verify 2]\n\
+                 \x20           [--ramp] [--ramp-start r/2] [--ramp-step r/2] [--ramp-steps 4] [--scrape]\n\
                  \x20           open-loop socket load: goodput/shed-rate/tails, bit-exact verify,\n\
-                 \x20           nonzero exit on wrong results or protocol errors\n\
+                 \x20           nonzero exit on wrong results or protocol errors; --ramp sweeps the\n\
+                 \x20           offered rate to find the goodput knee; --scrape cross-checks the\n\
+                 \x20           server's stats frame against the clients' own accounting\n\
+                 \x20 top       --addr host:port [--interval 1] [--count 0]\n\
+                 \x20           live telemetry: per-network throughput, shed counts, predictor\n\
+                 \x20           state, and latency quantiles polled over the stats frame\n\
                  \x20 bench-diff --old <dir|file> --new <dir|file> [--threshold 0.15]\n\
                  \x20            CI regression gate over persisted BENCH_*.json metrics\n\
                  \x20 selftest\n\n\
@@ -515,6 +601,106 @@ fn bench_diff(old: &std::path::Path, new: &std::path::Path, threshold: f64) -> R
     Ok(())
 }
 
+/// Live telemetry viewer: poll a front door's stats frame every
+/// `--interval` seconds over one persistent connection and render
+/// per-network throughput (from tick-to-tick deltas), shed counts, the
+/// deadline predictor's current estimate, and latency quantiles.
+/// `--count 0` polls forever; `--count 1` is a one-shot scrape (what
+/// the CI smoke step uses).
+fn top(args: &Args) -> Result<()> {
+    use fusionaccel::frontdoor::client::Client;
+    use fusionaccel::frontdoor::proto::StatsReport;
+
+    let addr = args.flags.get("addr").cloned().context("top needs --addr host:port")?;
+    let interval: f64 = args.flags.get("interval").map(|v| v.parse()).transpose()?.unwrap_or(1.0);
+    let count: u64 = args.flags.get("count").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    anyhow::ensure!(interval > 0.0, "top needs a positive --interval");
+
+    let mut conn = Client::connect(addr.as_str()).with_context(|| format!("connect {addr}"))?;
+    let mut prev: Option<StatsReport> = None;
+    let mut tick = 0u64;
+    loop {
+        let rep = conn.fetch_stats().context("stats scrape")?;
+        // Rate denominators come from the *server's* uptime delta, not
+        // our sleep interval — scrape jitter doesn't skew req/s.
+        let dt = prev
+            .as_ref()
+            .map(|p| rep.uptime_us.saturating_sub(p.uptime_us) as f64 / 1e6)
+            .unwrap_or(0.0)
+            .max(1e-9);
+        println!(
+            "[{:8.1}s] door: {} conn, {} req, {} resp, {} shed, {} idle-drop, {} proto-err | \
+             svc: {} served, {} failed, {} q-full, {} ddl-shed, {} cache-hit, {} outstanding, queue {}",
+            rep.uptime_us as f64 / 1e6,
+            rep.connections,
+            rep.requests,
+            rep.responses,
+            rep.sheds,
+            rep.idle_disconnects,
+            rep.protocol_errors,
+            rep.service.served,
+            rep.service.failed,
+            rep.service.queue_full_sheds,
+            rep.service.deadline_sheds,
+            rep.service.result_cache_hits,
+            rep.service.outstanding,
+            rep.service.queue_depth
+        );
+        let ms = |us: u64| format!("{:.1}", us as f64 / 1e3);
+        let rows: Vec<Vec<String>> = rep
+            .service
+            .networks
+            .iter()
+            .map(|n| {
+                // req/s needs a previous tick to difference against; the
+                // first sample renders a dash instead of a made-up rate.
+                let rps = prev.as_ref().map(|p| {
+                    let before = p
+                        .service
+                        .networks
+                        .iter()
+                        .find(|pn| pn.name == n.name)
+                        .map_or(0, |pn| pn.served);
+                    n.served.saturating_sub(before) as f64 / dt
+                });
+                vec![
+                    n.name.clone(),
+                    n.served.to_string(),
+                    rps.map_or_else(|| "—".to_string(), |r| format!("{r:.1}")),
+                    n.deadline_sheds.to_string(),
+                    ms(n.predicted_us),
+                    ms(n.qw_p90_us),
+                    ms(n.lat_p50_us),
+                    ms(n.lat_p99_us),
+                ]
+            })
+            .collect();
+        if rows.is_empty() {
+            println!("(no per-network traffic yet)");
+        } else {
+            benchkit::table(
+                &["network", "served", "req/s", "ddl-shed", "pred ms", "qw p90 ms", "p50 ms", "p99 ms"],
+                &rows,
+            );
+        }
+        if !rep.service.workers.is_empty() {
+            let w: Vec<String> = rep
+                .service
+                .workers
+                .iter()
+                .map(|w| format!("w{}: {} in {} batch(es)", w.worker, w.served, w.batches))
+                .collect();
+            println!("workers: {}", w.join("  |  "));
+        }
+        tick += 1;
+        if count > 0 && tick >= count {
+            return Ok(());
+        }
+        prev = Some(rep);
+        std::thread::sleep(Duration::from_secs_f64(interval));
+    }
+}
+
 /// Per-client outcome of one loadgen run, merged by the main thread.
 #[derive(Default)]
 struct ClientOutcome {
@@ -527,21 +713,58 @@ struct ClientOutcome {
     latencies: Vec<f64>,
 }
 
+impl ClientOutcome {
+    /// Merge another outcome in (per-client → wave, wave → run totals).
+    fn absorb(&mut self, o: ClientOutcome) {
+        self.answered += o.answered;
+        self.ok += o.ok;
+        self.sheds += o.sheds;
+        self.failed += o.failed;
+        self.wrong += o.wrong;
+        self.protocol_errors += o.protocol_errors;
+        self.latencies.extend(o.latencies);
+    }
+}
+
+/// Everything one loadgen wave needs — shared between the single-rate
+/// run and each `--ramp` step (which vary only in `rate`).
+#[derive(Clone, Copy)]
+struct WaveCfg<'a> {
+    addr: &'a str,
+    clients: usize,
+    per_client: usize,
+    rate: f64,
+    deadline_us: u32,
+    seed: u64,
+    side: usize,
+    ch: usize,
+    /// Client 0's first N expected answers (f32 bit patterns).
+    expected: &'a std::sync::Arc<Vec<Vec<u32>>>,
+}
+
+/// Merged result of one wave. `total.latencies` comes back sorted.
+struct WaveOutcome {
+    sent: usize,
+    total: ClientOutcome,
+    wall: f64,
+    timed_out: bool,
+}
+
 /// Open-loop load generator against a live `fusionaccel listen`:
 /// `--clients` connections each pipeline `--requests` requests on a
 /// global `--rate` schedule (requests fire at their scheduled time
 /// whether or not earlier ones answered — the open-loop property that
 /// makes overload visible instead of self-throttling away). Client 0's
 /// first `--verify` responses are checked bit-identical against a local
-/// [`HostDriver`] forward of the same images. Exits nonzero on any
-/// wrong result, protocol error, or unanswered request.
+/// [`HostDriver`] forward of the same images. `--ramp` reruns the wave
+/// at stepped offered rates to find the goodput knee; `--scrape` pulls
+/// the server's stats frame afterwards and cross-checks its counters
+/// against the clients' own accounting. Exits nonzero on any wrong
+/// result, protocol error, scrape mismatch, or unanswered request.
 fn loadgen(args: &Args) -> Result<()> {
     use fusionaccel::coordinator::{synthetic_requests, Quantiles};
     use fusionaccel::frontdoor::client::Client;
-    use fusionaccel::frontdoor::proto::{RequestMsg, ResponseMsg};
-    use std::sync::atomic::{AtomicBool, Ordering};
-    use std::sync::{Arc, Mutex};
-    use std::time::Instant;
+    use std::sync::Arc;
 
     let addr = args.flags.get("addr").cloned().context("loadgen needs --addr host:port")?;
     let clients: usize = args.flags.get("clients").map(|v| v.parse()).transpose()?.unwrap_or(32);
@@ -550,12 +773,25 @@ fn loadgen(args: &Args) -> Result<()> {
     let deadline_ms: u64 = args.flags.get("deadline-ms").map(|v| v.parse()).transpose()?.unwrap_or(0);
     let seed: u64 = args.flags.get("seed").map(|v| v.parse()).transpose()?.unwrap_or(5);
     let verify: usize = args.flags.get("verify").map(|v| v.parse()).transpose()?.unwrap_or(2);
+    let ramp = args.flags.contains_key("ramp");
+    let ramp_start: f64 =
+        args.flags.get("ramp-start").map(|v| v.parse()).transpose()?.unwrap_or(rate * 0.5);
+    let ramp_step: f64 =
+        args.flags.get("ramp-step").map(|v| v.parse()).transpose()?.unwrap_or(rate * 0.5);
+    let ramp_steps: usize = args.flags.get("ramp-steps").map(|v| v.parse()).transpose()?.unwrap_or(4);
+    let scrape = args.flags.contains_key("scrape");
     let net = match args.flags.get("net").map(|s| s.as_str()).unwrap_or("micro") {
         "micro" => fusionaccel::net::squeezenet::micro_squeezenet(),
         _ => load_net(&args.flags)?,
     };
     anyhow::ensure!(clients > 0 && per_client > 0, "need at least one client and one request");
     anyhow::ensure!(rate > 0.0, "loadgen is open-loop: --rate must be positive");
+    if ramp {
+        anyhow::ensure!(
+            ramp_start > 0.0 && ramp_step >= 0.0 && ramp_steps > 0,
+            "--ramp needs a positive --ramp-start, non-negative --ramp-step, and at least one step"
+        );
+    }
     let deadline_us = u32::try_from(deadline_ms.saturating_mul(1000)).unwrap_or(u32::MAX);
 
     // Deterministic per-client image traces: client c replays
@@ -563,11 +799,11 @@ fn loadgen(args: &Args) -> Result<()> {
     // answer for client 0 is reproducible locally for verification.
     let (side, ch) = net.out_shape(0);
     let (side, ch) = (side as usize, ch as usize);
-    let client_seed = |c: usize| seed.wrapping_add(7919 * c as u64);
     let verify_n = verify.min(per_client);
     let expected: Arc<Vec<Vec<u32>>> = Arc::new(if verify_n > 0 {
         let blobs = synthesize_weights(&net, seed);
-        let trace = synthetic_requests(verify_n, client_seed(0), side, ch);
+        // Client 0's salt is zero, so its trace seed is just `seed`.
+        let trace = synthetic_requests(verify_n, seed, side, ch);
         let mut out = Vec::with_capacity(verify_n);
         for r in &trace {
             let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
@@ -579,16 +815,149 @@ fn loadgen(args: &Args) -> Result<()> {
         Vec::new()
     });
 
+    let cfg = WaveCfg { addr: &addr, clients, per_client, rate, deadline_us, seed, side, ch, expected: &expected };
+    let mut total = ClientOutcome::default();
+    let mut sent_total = 0usize;
+    let mut timed_out = false;
+    if ramp {
+        // Stepwise offered-rate sweep: one full wave per step, fresh
+        // connections each, against the same (accumulating) server. The
+        // knee is the step whose *goodput* peaked — past it, extra
+        // offered load only turns into sheds and queueing.
+        let mut metrics: Vec<(String, f64)> = Vec::new();
+        let mut rows: Vec<Vec<String>> = Vec::new();
+        let mut knee = (0.0f64, ramp_start); // (goodput, offered rate)
+        for s in 0..ramp_steps {
+            let step_rate = ramp_start + ramp_step * s as f64;
+            let w = run_wave(&WaveCfg { rate: step_rate, ..cfg })?;
+            let goodput = w.total.ok as f64 / w.wall.max(1e-12);
+            let shed_rate = w.total.sheds as f64 / w.total.answered.max(1) as f64;
+            let q = Quantiles::from_sorted(&w.total.latencies);
+            rows.push(vec![
+                format!("{step_rate:.0}"),
+                format!("{goodput:.1}"),
+                format!("{:.1}%", 100.0 * shed_rate),
+                q.summary_ms(),
+            ]);
+            metrics.push((format!("loadgen_ramp_rate_s{s}"), step_rate));
+            metrics.push((format!("loadgen_ramp_goodput_s{s}"), goodput));
+            metrics.push((format!("loadgen_ramp_shed_rate_s{s}"), shed_rate));
+            metrics.push((format!("loadgen_ramp_p99_latency_ms_s{s}"), q.p99 * 1e3));
+            if goodput > knee.0 {
+                knee = (goodput, step_rate);
+            }
+            sent_total += w.sent;
+            timed_out |= w.timed_out;
+            total.absorb(w.total);
+        }
+        benchkit::table(&["offered req/s", "goodput req/s", "shed rate", "latency p50/p99/p999"], &rows);
+        println!("knee: offering {:.0} req/s sustained the best goodput, {:.1} req/s", knee.1, knee.0);
+        metrics.push(("loadgen_ramp_knee_req_per_s".to_string(), knee.0));
+        metrics.push(("loadgen_ramp_knee_offered".to_string(), knee.1));
+        metrics.push(("loadgen_wrong_results".to_string(), total.wrong as f64));
+        metrics.push(("loadgen_protocol_errors".to_string(), total.protocol_errors as f64));
+        metrics
+            .push(("loadgen_unanswered".to_string(), sent_total.saturating_sub(total.answered) as f64));
+        benchkit::persist_json("loadgen", &metrics);
+    } else {
+        let w = run_wave(&cfg)?;
+        let q = Quantiles::from_sorted(&w.total.latencies);
+        let goodput = w.total.ok as f64 / w.wall.max(1e-12);
+        let shed_rate = w.total.sheds as f64 / w.total.answered.max(1) as f64;
+        benchkit::persist_json(
+            "loadgen",
+            &[
+                ("loadgen_goodput_req_per_s".to_string(), goodput),
+                ("loadgen_offered_rate".to_string(), rate),
+                ("loadgen_shed_rate".to_string(), shed_rate),
+                ("loadgen_p50_latency_ms".to_string(), q.p50 * 1e3),
+                ("loadgen_p99_latency_ms".to_string(), q.p99 * 1e3),
+                ("loadgen_p999_latency_ms".to_string(), q.p999 * 1e3),
+                ("loadgen_wrong_results".to_string(), w.total.wrong as f64),
+                ("loadgen_protocol_errors".to_string(), w.total.protocol_errors as f64),
+                (
+                    "loadgen_unanswered".to_string(),
+                    w.sent.saturating_sub(w.total.answered) as f64,
+                ),
+            ],
+        );
+        sent_total = w.sent;
+        timed_out = w.timed_out;
+        total.absorb(w.total);
+    }
+
+    let unanswered = sent_total.saturating_sub(total.answered);
+    if scrape {
+        // Cross-check the server's books against ours: scrape the live
+        // stats frame over a fresh connection and require exact
+        // agreement. Every response was received before this point and
+        // the service counts a request before its response is written,
+        // so with no other traffic the counters must match.
+        let mut probe =
+            Client::connect(addr.as_str()).with_context(|| format!("connect {addr} for scrape"))?;
+        let rep = probe.fetch_stats().context("stats scrape")?;
+        let server_ok = rep.service.served + rep.service.result_cache_hits;
+        println!(
+            "scrape: server says {server_ok} ok ({} forwarded + {} cache hits), {} door sheds, {} failed \
+             — clients saw {} ok, {} sheds, {} failed",
+            rep.service.served,
+            rep.service.result_cache_hits,
+            rep.sheds,
+            rep.service.failed,
+            total.ok,
+            total.sheds,
+            total.failed
+        );
+        anyhow::ensure!(
+            server_ok == total.ok as u64,
+            "scrape mismatch: server served {server_ok}, clients counted {} ok",
+            total.ok
+        );
+        anyhow::ensure!(
+            rep.sheds == total.sheds as u64,
+            "scrape mismatch: door shed {}, clients counted {}",
+            rep.sheds,
+            total.sheds
+        );
+        anyhow::ensure!(
+            rep.service.failed == total.failed as u64,
+            "scrape mismatch: server failed {}, clients counted {}",
+            rep.service.failed,
+            total.failed
+        );
+    }
+    anyhow::ensure!(total.wrong == 0, "{} wire response(s) differ from the local forward", total.wrong);
+    anyhow::ensure!(total.protocol_errors == 0, "{} protocol error(s)", total.protocol_errors);
+    anyhow::ensure!(!timed_out && unanswered == 0, "{unanswered} request(s) unanswered (timed out: {timed_out})");
+    println!("loadgen OK — zero wrong results, zero protocol errors");
+    Ok(())
+}
+
+/// One open-loop wave at a fixed offered rate — the loadgen engine.
+/// Connects `cfg.clients` fresh connections, fires the global schedule,
+/// joins every sender/receiver, and returns the merged accounting.
+fn run_wave(cfg: &WaveCfg) -> Result<WaveOutcome> {
+    use fusionaccel::coordinator::{synthetic_requests, Quantiles};
+    use fusionaccel::frontdoor::client::Client;
+    use fusionaccel::frontdoor::proto::{RequestMsg, ResponseMsg};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::time::Instant;
+
+    let (clients, per_client, rate) = (cfg.clients, cfg.per_client, cfg.rate);
+    let (side, ch, deadline_us) = (cfg.side, cfg.ch, cfg.deadline_us);
+    let client_seed = |c: usize| cfg.seed.wrapping_add(7919 * c as u64);
     println!(
-        "loadgen → {addr}: {clients} client(s) × {per_client} request(s) at {rate:.0} req/s total{}",
-        if deadline_ms > 0 { format!(", deadline {deadline_ms} ms") } else { String::new() }
+        "loadgen → {}: {clients} client(s) × {per_client} request(s) at {rate:.0} req/s total{}",
+        cfg.addr,
+        if deadline_us > 0 { format!(", deadline {} ms", deadline_us / 1000) } else { String::new() }
     );
     let stop = Arc::new(AtomicBool::new(false));
     let watchdog_fired = Arc::new(AtomicBool::new(false));
     let mut conns = Vec::with_capacity(clients);
     for _ in 0..clients {
-        conns.push(Client::connect_with_stop(addr.as_str(), stop.clone(), Duration::from_millis(200))
-            .with_context(|| format!("connect {addr}"))?);
+        conns.push(Client::connect_with_stop(cfg.addr, stop.clone(), Duration::from_millis(200))
+            .with_context(|| format!("connect {}", cfg.addr))?);
     }
 
     // Watchdog: a stuck server must fail the run, not hang it. Budget =
@@ -645,7 +1014,7 @@ fn loadgen(args: &Args) -> Result<()> {
             })
             .context("spawn sender")?;
         senders.push(sender);
-        let expected = expected.clone();
+        let expected = cfg.expected.clone();
         let receiver = std::thread::Builder::new()
             .name(format!("loadgen-recv-{c}"))
             .stack_size(256 * 1024)
@@ -707,14 +1076,7 @@ fn loadgen(args: &Args) -> Result<()> {
     }
     let mut total = ClientOutcome::default();
     for r in receivers {
-        let o = r.join().map_err(|_| anyhow::anyhow!("receiver thread panicked"))?;
-        total.answered += o.answered;
-        total.ok += o.ok;
-        total.sheds += o.sheds;
-        total.failed += o.failed;
-        total.wrong += o.wrong;
-        total.protocol_errors += o.protocol_errors;
-        total.latencies.extend(o.latencies);
+        total.absorb(r.join().map_err(|_| anyhow::anyhow!("receiver thread panicked"))?);
     }
     // The watchdog thread may still be sleeping; flipping stop is
     // harmless either way, and process exit reaps it.
@@ -736,23 +1098,5 @@ fn loadgen(args: &Args) -> Result<()> {
         100.0 * shed_rate,
         q.summary_ms()
     );
-    benchkit::persist_json(
-        "loadgen",
-        &[
-            ("loadgen_goodput_req_per_s".to_string(), goodput),
-            ("loadgen_offered_rate".to_string(), rate),
-            ("loadgen_shed_rate".to_string(), shed_rate),
-            ("loadgen_p50_latency_ms".to_string(), q.p50 * 1e3),
-            ("loadgen_p99_latency_ms".to_string(), q.p99 * 1e3),
-            ("loadgen_p999_latency_ms".to_string(), q.p999 * 1e3),
-            ("loadgen_wrong_results".to_string(), total.wrong as f64),
-            ("loadgen_protocol_errors".to_string(), total.protocol_errors as f64),
-            ("loadgen_unanswered".to_string(), unanswered as f64),
-        ],
-    );
-    anyhow::ensure!(total.wrong == 0, "{} wire response(s) differ from the local forward", total.wrong);
-    anyhow::ensure!(total.protocol_errors == 0, "{} protocol error(s)", total.protocol_errors);
-    anyhow::ensure!(!timed_out && unanswered == 0, "{unanswered} request(s) unanswered (timed out: {timed_out})");
-    println!("loadgen OK — zero wrong results, zero protocol errors");
-    Ok(())
+    Ok(WaveOutcome { sent: sent_total, total, wall, timed_out })
 }

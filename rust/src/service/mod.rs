@@ -75,6 +75,7 @@ use crate::coordinator::{
     InferenceRequest, InferenceResponse, RecentWindow, Scheduler, ServeConfig, ServeStats, WorkerStats,
 };
 use crate::net::tensor::TensorF32;
+use crate::telemetry::{Hub, NetworkSnapshot, ServiceSnapshot, Verdict, WorkerSnapshot};
 
 /// Configuration of a long-lived [`Service`]: the underlying pool/batch
 /// settings plus the admission-queue bound.
@@ -116,10 +117,12 @@ pub enum SubmitError {
     /// among in-flight requests (they key the completion routing).
     DuplicateId,
     /// The request carried a deadline ([`Service::submit_deadline`])
-    /// that the live queue-wait window says cannot be met: predicted
-    /// turnaround (recent p90 queue wait + recent median service time)
-    /// exceeds the budget, so the request is turned away *before*
-    /// burning an engine pass on an answer the caller would discard.
+    /// that *this network's* live completion windows say cannot be met:
+    /// predicted turnaround (the network's recent p90 queue wait + its
+    /// recent median service time) exceeds the budget, so the request
+    /// is turned away *before* burning an engine pass on an answer the
+    /// caller would discard. Windows are per network — a slow network's
+    /// congestion never sheds a fast network's feasible deadlines.
     DeadlineShed {
         /// The turnaround the admission model predicted, in µs.
         predicted_us: u64,
@@ -313,6 +316,47 @@ const MAX_FAILURE_DETAILS: usize = 1024;
 /// large enough that one straggler cannot swing the p90.
 const RECENT_WINDOW: usize = 256;
 
+/// Per-network live statistics: the deadline predictor's evidence
+/// windows plus the counters surfaced in [`ServiceSnapshot`]. Keeping
+/// one window set *per network* (instead of the old single global pair)
+/// means each network is judged on its own recent completions — a slow
+/// network's congestion cannot shed a fast network's feasible
+/// deadlines, and a fast network's quick turnarounds cannot admit a
+/// slow network's hopeless ones.
+struct NetStat {
+    /// Completions answered under this network's name (forwards, cache
+    /// hits, and parked duplicates).
+    served: u64,
+    /// Deadline sheds charged to this network's predictor quote.
+    deadline_sheds: u64,
+    /// Recent *forwarded* queue waits (cache hits excluded — they never
+    /// waited, so they would bias the predictor optimistic).
+    queue_waits: RecentWindow,
+    /// Recent forwarded service times.
+    service: RecentWindow,
+    /// Recent forwarded turnarounds (queue wait + service).
+    latency: RecentWindow,
+}
+
+impl NetStat {
+    fn new() -> NetStat {
+        NetStat {
+            served: 0,
+            deadline_sheds: 0,
+            queue_waits: RecentWindow::new(RECENT_WINDOW),
+            service: RecentWindow::new(RECENT_WINDOW),
+            latency: RecentWindow::new(RECENT_WINDOW),
+        }
+    }
+
+    /// Predicted turnaround for this network, in seconds: recent p90
+    /// queue wait + recent median service time. 0.0 with no evidence —
+    /// shedding requires measurements, not priors.
+    fn predicted(&self) -> f64 {
+        self.queue_waits.quantile(0.9) + self.service.quantile(0.5)
+    }
+}
+
 /// Everything admission (submit) and completion (collector) share.
 struct State {
     /// Shutdown began: no further admission.
@@ -338,12 +382,11 @@ struct State {
     queue_waits: Vec<f64>,
     /// Sample pairs observed over the whole run (≥ `latencies.len()`).
     samples_seen: u64,
-    /// Live windows over the most recent *forwarded* completions (cache
-    /// hits and parked duplicates excluded — they never waited in the
-    /// queue, so they would bias the predictor optimistic). These feed
-    /// the deadline-shed turnaround estimate at admission.
-    recent_queue_waits: RecentWindow,
-    recent_service: RecentWindow,
+    /// Per-network live windows and counters. The deadline-shed
+    /// turnaround estimate at admission reads the *request's* network's
+    /// entry; [`Service::live_stats`] snapshots them all. Bounded by the
+    /// number of registered networks, not by load.
+    per_network: HashMap<String, NetStat>,
     /// xorshift64 state for reservoir replacement (deterministic seed —
     /// timing values are wall-clock anyway, so sampling determinism
     /// only keeps reruns comparable, not bit-equal).
@@ -378,6 +421,18 @@ fn record_failure(st: &mut State, f: &FailedRequest) {
     }
 }
 
+/// Close the request's "admit" span and stamp the admission verdict
+/// (skipped for `Verdict::Pending`, which means "admitted — the worker
+/// will decide"). No-op for untraced requests.
+fn trace_admit(req: &InferenceRequest, t0: Option<Instant>, verdict: Verdict) {
+    if let (Some(tr), Some(t0)) = (&req.trace, t0) {
+        tr.span("admit", t0, Instant::now());
+        if verdict != Verdict::Pending {
+            tr.set_verdict(verdict);
+        }
+    }
+}
+
 /// Shared core of a running service.
 struct Inner {
     repo: Arc<ModelRepo>,
@@ -387,6 +442,11 @@ struct Inner {
     /// Signalled when outstanding drops (or the service closes) — what
     /// [`Service::submit_wait`] parks on.
     space: Condvar,
+    /// Telemetry hub shared with the worker pool and the front door:
+    /// trace rings, batch sequence, per-layer families. Always present;
+    /// costs nothing until [`crate::telemetry::Hub::set_tracing`] turns
+    /// tracing on.
+    hub: Arc<Hub>,
 }
 
 /// A running (or paused) serving service. See the module docs for the
@@ -448,10 +508,10 @@ impl Service {
                 queue_waits: Vec::new(),
                 samples_seen: 0,
                 sample_rng: 0x9E37_79B9_7F4A_7C15,
-                recent_queue_waits: RecentWindow::new(RECENT_WINDOW),
-                recent_service: RecentWindow::new(RECENT_WINDOW),
+                per_network: HashMap::new(),
             }),
             space: Condvar::new(),
+            hub: Arc::new(Hub::new(cfg.serve.n_workers)),
         });
         let (tx, rx) = mpsc::channel::<WorkerEvent>();
         Ok(Service {
@@ -488,6 +548,7 @@ impl Service {
                         &inner.sched,
                         &policy,
                         inner.cfg.serve.model_cache,
+                        &inner.hub,
                         &tx,
                     )
                 })
@@ -537,34 +598,97 @@ impl Service {
         self.admit(req, true, None)
     }
 
-    /// [`Service::submit`] with a turnaround budget: if the live
-    /// completion windows predict this request cannot finish within
-    /// `budget` (recent p90 queue wait + recent median service time),
-    /// it is rejected with [`SubmitError::DeadlineShed`] instead of
-    /// queued — the engine pass goes to a request that can still make
-    /// its deadline. A cold service (no completions yet) predicts 0 and
-    /// never sheds: shedding requires evidence, not priors. Cache hits
-    /// are exempt — they cost no queue wait and are served even under
-    /// overload.
+    /// [`Service::submit`] with a turnaround budget: if the *request's
+    /// network's* live completion windows predict it cannot finish
+    /// within `budget` (that network's recent p90 queue wait + recent
+    /// median service time), it is rejected with
+    /// [`SubmitError::DeadlineShed`] instead of queued — the engine
+    /// pass goes to a request that can still make its deadline. A
+    /// network with no completions yet predicts 0 and never sheds:
+    /// shedding requires evidence, not priors. Cache hits are exempt —
+    /// they cost no queue wait and are served even under overload.
     pub fn submit_deadline(&self, req: InferenceRequest, budget: Duration) -> Result<Ticket, SubmitError> {
         self.admit(req, false, Some(budget))
     }
 
-    /// The turnaround the deadline-shed predictor would quote right now
-    /// (seconds): recent p90 queue wait + recent median service time.
-    /// 0.0 on a cold service.
+    /// The worst turnaround the deadline-shed predictor would quote
+    /// right now across all networks (seconds) — the quote of the most
+    /// congested network. 0.0 on a cold service.
     pub fn predicted_wait(&self) -> f64 {
         let st = self.inner.state.lock().unwrap();
-        st.recent_queue_waits.quantile(0.9) + st.recent_service.quantile(0.5)
+        st.per_network.values().map(NetStat::predicted).fold(0.0, f64::max)
+    }
+
+    /// The predictor's quote for one network (seconds): its recent p90
+    /// queue wait + recent median service time. 0.0 when the network
+    /// has no completion evidence yet.
+    pub fn predicted_wait_for(&self, network: &str) -> f64 {
+        let st = self.inner.state.lock().unwrap();
+        st.per_network.get(network).map_or(0.0, NetStat::predicted)
+    }
+
+    /// The telemetry hub shared with the worker pool: trace rings,
+    /// batch sequence, per-layer stat families. The front door flips
+    /// tracing on through this handle and drains completed traces.
+    pub fn telemetry(&self) -> &Arc<Hub> {
+        &self.inner.hub
+    }
+
+    /// Snapshot the live counters and per-network / per-worker metric
+    /// families — what a `StatsReport` scrape or `fusionaccel top` tick
+    /// reads. One state lock, allocation bounded by the number of
+    /// networks and workers (never by load).
+    pub fn live_stats(&self) -> ServiceSnapshot {
+        let us = |s: f64| (s * 1e6) as u64;
+        let st = self.inner.state.lock().unwrap();
+        let mut networks: Vec<NetworkSnapshot> = st
+            .per_network
+            .iter()
+            .map(|(name, n)| NetworkSnapshot {
+                name: name.clone(),
+                served: n.served,
+                deadline_sheds: n.deadline_sheds,
+                predicted_us: us(n.predicted()),
+                qw_p50_us: us(n.queue_waits.quantile(0.5)),
+                qw_p90_us: us(n.queue_waits.quantile(0.9)),
+                sv_p50_us: us(n.service.quantile(0.5)),
+                sv_p90_us: us(n.service.quantile(0.9)),
+                lat_p50_us: us(n.latency.quantile(0.5)),
+                lat_p99_us: us(n.latency.quantile(0.99)),
+            })
+            .collect();
+        networks.sort_by(|a, b| a.name.cmp(&b.name));
+        let workers = st
+            .stats
+            .workers
+            .iter()
+            .map(|w| WorkerSnapshot { worker: w.worker as u32, served: w.served as u64, batches: w.batches as u64 })
+            .collect();
+        ServiceSnapshot {
+            served: st.stats.served as u64,
+            failed: st.stats.failed as u64,
+            queue_full_sheds: st.stats.admission_rejections as u64,
+            deadline_sheds: st.stats.deadline_sheds as u64,
+            result_cache_hits: st.stats.result_cache_hits as u64,
+            outstanding: st.outstanding as u64,
+            queue_depth: self.inner.sched.len() as u64,
+            networks,
+            workers,
+        }
     }
 
     fn admit(&self, mut req: InferenceRequest, wait: bool, deadline: Option<Duration>) -> Result<Ticket, SubmitError> {
+        // Span start only when the request carries a trace — the
+        // untraced path takes no timestamps at admission.
+        let t_admit = req.trace.as_ref().map(|_| Instant::now());
         let inner = &self.inner;
         let mut st = inner.state.lock().unwrap();
         if st.closed {
+            trace_admit(&req, t_admit, Verdict::Failed);
             return Err(SubmitError::Closed);
         }
         if st.tickets.contains_key(&req.id) {
+            trace_admit(&req, t_admit, Verdict::Failed);
             return Err(SubmitError::DuplicateId);
         }
         let cell = Arc::new(TicketCell::default());
@@ -577,12 +701,16 @@ impl Service {
             Err(err) => {
                 let f = FailedRequest { id: req.id, worker: usize::MAX, error: format!("{err:#}") };
                 record_failure(&mut st, &f);
+                trace_admit(&req, t_admit, Verdict::Failed);
                 drop(st);
                 cell.fulfill(Err(f));
                 return Ok(ticket);
             }
         };
         req.network = Some(name.clone());
+        if let Some(tr) = &req.trace {
+            tr.set_network(&name);
+        }
         let key = (inner.cfg.serve.result_cache > 0).then(|| request_key(&name, &req.image));
         loop {
             // A cached answer needs no queue slot, so it is served even
@@ -593,7 +721,9 @@ impl Service {
                 if let Some(hit) = st.cache.get(k) {
                     st.stats.result_cache_hits += 1;
                     st.stats.served += 1;
+                    st.per_network.entry(name.clone()).or_insert_with(NetStat::new).served += 1;
                     record_sample(&mut st, 0.0, 0.0);
+                    trace_admit(&req, t_admit, Verdict::CacheHit);
                     let resp = InferenceResponse {
                         id: req.id,
                         network: hit.network,
@@ -612,10 +742,14 @@ impl Service {
             }
             // Deadline gate (after the cache check — a hit needs no
             // queue slot and no forward, so its deadline is always met).
+            // The quote comes from *this network's* windows: a network
+            // with no completions yet predicts 0 and is admitted.
             if let Some(budget) = deadline {
-                let predicted = st.recent_queue_waits.quantile(0.9) + st.recent_service.quantile(0.5);
+                let predicted = st.per_network.get(&name).map_or(0.0, NetStat::predicted);
                 if predicted > budget.as_secs_f64() {
                     st.stats.deadline_sheds += 1;
+                    st.per_network.entry(name.clone()).or_insert_with(NetStat::new).deadline_sheds += 1;
+                    trace_admit(&req, t_admit, Verdict::DeadlineShed);
                     return Err(SubmitError::DeadlineShed { predicted_us: (predicted * 1e6) as u64 });
                 }
             }
@@ -624,10 +758,12 @@ impl Service {
             }
             if !wait {
                 st.stats.admission_rejections += 1;
+                trace_admit(&req, t_admit, Verdict::QueueFullShed);
                 return Err(SubmitError::QueueFull);
             }
             st = inner.space.wait(st).unwrap();
             if st.closed {
+                trace_admit(&req, t_admit, Verdict::Failed);
                 return Err(SubmitError::Closed);
             }
         }
@@ -640,6 +776,7 @@ impl Service {
                 st.outstanding += 1;
                 st.tickets.insert(req.id, cell);
                 st.parked.entry(rep).or_default().push(req.id);
+                trace_admit(&req, t_admit, Verdict::CacheHit);
                 return Ok(ticket);
             }
             st.inflight.insert(key.clone(), req.id);
@@ -648,6 +785,7 @@ impl Service {
         }
         st.outstanding += 1;
         st.tickets.insert(req.id, cell);
+        trace_admit(&req, t_admit, Verdict::Pending);
         // Push while holding the state lock: `closed` and the scheduler's
         // close flag flip together in begin_close, so a push can never
         // race a concurrent shutdown into the scheduler's
@@ -748,8 +886,13 @@ fn collect(inner: &Inner, rx: mpsc::Receiver<WorkerEvent>) {
             WorkerEvent::Done(r) => {
                 let turnaround = r.queue_wait_seconds + r.service_seconds;
                 record_sample(&mut st, turnaround, r.queue_wait_seconds);
-                st.recent_queue_waits.push(r.queue_wait_seconds);
-                st.recent_service.push(r.service_seconds);
+                {
+                    let net = st.per_network.entry(r.network.clone()).or_insert_with(NetStat::new);
+                    net.served += 1;
+                    net.queue_waits.push(r.queue_wait_seconds);
+                    net.service.push(r.service_seconds);
+                    net.latency.push(turnaround);
+                }
                 st.stats.workers[r.worker].served += 1;
                 st.stats.served += 1;
                 let mut completed = 1usize;
@@ -767,6 +910,9 @@ fn collect(inner: &Inner, rx: mpsc::Receiver<WorkerEvent>) {
                     for id in st.parked.remove(&r.id).unwrap_or_default() {
                         record_sample(&mut st, turnaround, turnaround);
                         st.stats.served += 1;
+                        if let Some(net) = st.per_network.get_mut(&r.network) {
+                            net.served += 1;
+                        }
                         completed += 1;
                         let dup = InferenceResponse {
                             id,
@@ -958,6 +1104,68 @@ mod tests {
         let stats = svc.shutdown().unwrap();
         assert_eq!(stats.deadline_sheds, 1);
         assert_eq!(stats.served, 9);
+    }
+
+    /// "tiny" (8×8 input, 8 filters) plus "heavy" (32×32 input, 16
+    /// filters) — heavy's forward does far more engine work, so its
+    /// measured service window is strictly slower.
+    fn two_net_repo() -> Arc<ModelRepo> {
+        let mut repo = ModelRepo::new();
+        let mut fast = Network::new("tiny");
+        let inp = fast.input(8, 3);
+        let c1 = fast.engine(LayerSpec::conv("c1", 3, 1, 0, 8, 3, 8, 0), inp);
+        let gap = fast.engine(LayerSpec::avgpool("gap", 6, 1, 6, 8), c1);
+        fast.softmax("prob", gap);
+        let blobs = synthesize_weights(&fast, 3);
+        repo.register(fast, blobs).unwrap();
+        let mut slow = Network::new("heavy");
+        let inp = slow.input(32, 3);
+        let c1 = slow.engine(LayerSpec::conv("c1", 3, 1, 0, 32, 3, 16, 0), inp);
+        let gap = slow.engine(LayerSpec::avgpool("gap", 30, 1, 30, 16), c1);
+        slow.softmax("prob", gap);
+        let blobs = synthesize_weights(&slow, 5);
+        repo.register(slow, blobs).unwrap();
+        Arc::new(repo)
+    }
+
+    fn heavy_req(id: u64, rng: &mut Rng) -> InferenceRequest {
+        InferenceRequest::new(
+            id,
+            Tensor::from_vec(32, 32, 3, (0..32 * 32 * 3).map(|_| rng.normal(1.0)).collect()),
+        )
+        .for_network("heavy")
+    }
+
+    #[test]
+    fn per_network_windows_shed_slow_without_penalizing_fast() {
+        let svc = Service::start(two_net_repo(), &cfg(1, 1)).unwrap();
+        let mut rng = Rng::new(8);
+        // Warm both networks' windows with real forwards.
+        for i in 0..6 {
+            svc.submit(req(i, &mut rng).for_network("tiny")).unwrap().wait().unwrap();
+            svc.submit(heavy_req(100 + i, &mut rng)).unwrap().wait().unwrap();
+        }
+        let fast = svc.predicted_wait_for("tiny");
+        let slow = svc.predicted_wait_for("heavy");
+        assert!(slow > fast, "heavy must measure slower than tiny (tiny {fast} s, heavy {slow} s)");
+        assert_eq!(svc.predicted_wait(), slow, "the global quote is the worst network's");
+        let snap = svc.live_stats();
+        assert_eq!(snap.networks.len(), 2, "one snapshot row per warmed network");
+        assert_eq!(snap.networks[0].name, "heavy", "rows sort by name");
+        assert_eq!(snap.networks[0].served, 6);
+        assert_eq!(snap.networks[1].served, 6);
+        // A budget between the two quotes: hopeless for heavy, feasible
+        // for tiny. The old single global window could not make this
+        // distinction — it would have quoted both the same turnaround.
+        let budget = Duration::from_secs_f64((fast + slow) / 2.0);
+        let err = svc.submit_deadline(heavy_req(200, &mut rng), budget).unwrap_err();
+        assert!(matches!(err, SubmitError::DeadlineShed { .. }), "heavy sheds under the split budget");
+        let t = svc.submit_deadline(req(201, &mut rng).for_network("tiny"), budget).unwrap();
+        assert!(t.wait().is_ok(), "tiny still serves under the same budget");
+        assert_eq!(svc.predicted_wait_for("ghost"), 0.0, "unknown network has no evidence");
+        let stats = svc.shutdown().unwrap();
+        assert_eq!(stats.deadline_sheds, 1);
+        assert_eq!(stats.served, 13);
     }
 
     #[test]

@@ -1,0 +1,652 @@
+//! Request-lifecycle tracing and live metrics — the observability spine
+//! the serving stack reads its numbers from while it runs, instead of
+//! only at `shutdown()`.
+//!
+//! Design constraints (matching the rest of the crate): std-only and
+//! lock-light. The [`Hub`] is a set of atomics plus per-worker ring
+//! buffers of completed traces; when tracing is off (the default) the
+//! request hot path pays exactly one relaxed atomic load per request.
+//! When tracing is on, each admitted request carries a [`Trace`] handle
+//! (an `Arc<Mutex<..>>` touched only at span boundaries — a handful of
+//! times per request, never per pixel) recording a timestamped span at
+//! every hop: frontdoor decode, admission verdict, queue wait, batch
+//! assembly, the worker forward with per-engine-layer sub-spans sliced
+//! out of [`crate::accel::stream::EngineStats`] deltas, postprocess,
+//! and the writer flush.
+//!
+//! Completed traces export two ways:
+//! * [`chrome_trace_json`] — Chrome trace-event JSON (`chrome://tracing`
+//!   / Perfetto loadable), one track (`tid`) per worker, spans nested
+//!   decode → admission → queue → batch → forward → flush;
+//! * [`jsonl_line`] — one JSON object per trace for scripted analysis.
+//!
+//! The live counter view (per-network served/shed counts, predictor
+//! quantiles, per-worker throughput) is snapshotted by
+//! [`crate::service::Service::live_stats`] into a [`ServiceSnapshot`]
+//! and served over the wire as a `StatsReport` frame
+//! (see [`crate::frontdoor::proto`]) — `fusionaccel top` renders it.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Per-ring retention: completed traces kept until drained. A stalled
+/// (or absent) drainer drops the *oldest* traces, counted in
+/// [`Hub::dropped`], so a long tracing run can never grow unbounded.
+const RING_CAP: usize = 4096;
+
+/// Spans retained per trace — far above the decode/admit/queue/batch/
+/// forward/per-layer/flush set of any supported network, but a hard
+/// bound so a pathological command stream can't balloon one trace.
+const MAX_SPANS: usize = 96;
+
+/// Where a request's lifecycle ended — the admission/completion verdict
+/// recorded on its trace and aggregated per network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Still in flight (the default until something resolves it).
+    Pending,
+    /// Served by a worker forward.
+    Served,
+    /// Answered from the image-keyed result cache without a forward.
+    CacheHit,
+    /// Shed at admission: bounded queue at capacity.
+    QueueFullShed,
+    /// Shed at admission: the per-network predictor said the deadline
+    /// could not be met.
+    DeadlineShed,
+    /// Forward failed, or the request never resolved (unknown network).
+    Failed,
+}
+
+impl Verdict {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Verdict::Pending => "pending",
+            Verdict::Served => "served",
+            Verdict::CacheHit => "cache_hit",
+            Verdict::QueueFullShed => "queue_full_shed",
+            Verdict::DeadlineShed => "deadline_shed",
+            Verdict::Failed => "failed",
+        }
+    }
+}
+
+/// One timed hop of a request's lifecycle. Timestamps are microseconds
+/// since the owning [`Hub`]'s epoch — the unit Chrome trace events use
+/// natively, and monotonic across threads because every span derives
+/// from the same `Instant`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub name: String,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+#[derive(Debug)]
+struct TraceInner {
+    id: u64,
+    conn: u64,
+    network: String,
+    verdict: Verdict,
+    worker: Option<usize>,
+    batch_seq: Option<u64>,
+    batch_size: usize,
+    streak: usize,
+    spans: Vec<Span>,
+    finished: bool,
+}
+
+/// A live trace handle carried by one in-flight request. Clones share
+/// the same record; every hop (door reader, admission, worker, writer)
+/// appends spans through its own clone. The front door creates and
+/// finishes traces; everything in between only records.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    epoch: Instant,
+    inner: Arc<Mutex<TraceInner>>,
+}
+
+impl Trace {
+    /// Microseconds from the hub epoch to `t` (0 for pre-epoch instants,
+    /// which cannot arise in normal use).
+    pub fn instant_us(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.instant_us(Instant::now())
+    }
+
+    /// Record a span from two instants.
+    pub fn span(&self, name: impl Into<String>, start: Instant, end: Instant) {
+        let s = self.instant_us(start);
+        self.span_us(name, s, self.instant_us(end).saturating_sub(s));
+    }
+
+    /// Record a span from precomputed epoch-relative microseconds.
+    pub fn span_us(&self, name: impl Into<String>, start_us: u64, dur_us: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.spans.len() < MAX_SPANS {
+            inner.spans.push(Span { name: name.into(), start_us, dur_us });
+        }
+    }
+
+    pub fn set_verdict(&self, v: Verdict) {
+        self.inner.lock().unwrap().verdict = v;
+    }
+
+    pub fn set_network(&self, name: &str) {
+        self.inner.lock().unwrap().network = name.to_string();
+    }
+
+    /// Record batch placement: which worker forwarded the request, the
+    /// hub-global batch sequence number, the assembled batch size, and
+    /// the worker's network-affinity streak at assembly time.
+    pub fn set_batch(&self, worker: usize, seq: u64, size: usize, streak: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.worker = Some(worker);
+        inner.batch_seq = Some(seq);
+        inner.batch_size = size;
+        inner.streak = streak;
+    }
+}
+
+/// An immutable snapshot of a finished trace, as drained from the hub.
+#[derive(Clone, Debug)]
+pub struct CompletedTrace {
+    pub id: u64,
+    pub conn: u64,
+    pub network: String,
+    pub verdict: Verdict,
+    pub worker: Option<usize>,
+    pub batch_seq: Option<u64>,
+    pub batch_size: usize,
+    pub streak: usize,
+    pub spans: Vec<Span>,
+}
+
+impl CompletedTrace {
+    /// `[first span start, last span end]` in epoch microseconds —
+    /// the envelope the Chrome export draws the request bar over.
+    pub fn extent_us(&self) -> (u64, u64) {
+        let start = self.spans.iter().map(|s| s.start_us).min().unwrap_or(0);
+        let end = self.spans.iter().map(|s| s.start_us + s.dur_us).max().unwrap_or(start);
+        (start, end)
+    }
+}
+
+/// Per-(network, engine-layer) aggregates sliced out of `EngineStats`
+/// deltas by the worker, one update per batch — the measured per-layer
+/// ground truth the ROADMAP's cost-model arc validates against.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LayerFamily {
+    /// Batches that executed this layer.
+    pub batches: u64,
+    pub passes: u64,
+    pub cycles: u64,
+    pub weight_loads: u64,
+    pub weight_reuses: u64,
+    pub link_bytes: u64,
+    pub wall_us: u64,
+}
+
+/// One engine layer's stat delta for one batch, diffed from the device
+/// tape by [`crate::accel::stream::StreamAccelerator::take_layer_deltas`].
+#[derive(Clone, Debug)]
+pub struct LayerStat {
+    pub name: String,
+    pub passes: u64,
+    pub cycles: u64,
+    pub weight_loads: u64,
+    pub weight_reuses: u64,
+    pub link_bytes: u64,
+    /// Wall-clock start of the layer (host side).
+    pub start: Instant,
+    pub dur_us: u64,
+}
+
+/// The process-wide telemetry hub. Owned by the service (one per
+/// service), shared with the front door and every worker. All state is
+/// atomics or short-critical-section mutexes touched per *batch* or per
+/// *span*, never inside the arithmetic hot path.
+pub struct Hub {
+    epoch: Instant,
+    tracing: AtomicBool,
+    batch_seq: AtomicU64,
+    dropped: AtomicU64,
+    /// Ring 0 collects traces that never reached a worker (sheds,
+    /// decode-adjacent failures); ring `w + 1` collects worker `w`'s.
+    rings: Vec<Mutex<VecDeque<CompletedTrace>>>,
+    layers: Mutex<HashMap<(String, String), LayerFamily>>,
+}
+
+impl Hub {
+    pub fn new(n_workers: usize) -> Hub {
+        Hub {
+            epoch: Instant::now(),
+            tracing: AtomicBool::new(false),
+            batch_seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            rings: (0..n_workers + 1).map(|_| Mutex::new(VecDeque::new())).collect(),
+            layers: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    pub fn uptime_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    pub fn set_tracing(&self, on: bool) {
+        self.tracing.store(on, Ordering::Relaxed);
+    }
+
+    pub fn tracing(&self) -> bool {
+        self.tracing.load(Ordering::Relaxed)
+    }
+
+    /// Allocate the next hub-global batch sequence number.
+    pub fn next_batch_seq(&self) -> u64 {
+        self.batch_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Traces dropped because a ring was full (drainer stalled/absent).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Begin a trace for one decoded request — `None` when tracing is
+    /// off, so the untraced hot path allocates nothing.
+    pub fn start_trace(&self, id: u64, conn: u64) -> Option<Trace> {
+        if !self.tracing() {
+            return None;
+        }
+        Some(Trace {
+            epoch: self.epoch,
+            inner: Arc::new(Mutex::new(TraceInner {
+                id,
+                conn,
+                network: String::new(),
+                verdict: Verdict::Pending,
+                worker: None,
+                batch_seq: None,
+                batch_size: 0,
+                streak: 0,
+                spans: Vec::new(),
+                finished: false,
+            })),
+        })
+    }
+
+    /// Seal a trace and park its snapshot in the owning ring. Idempotent:
+    /// a second finish of the same trace is a no-op, so the door can
+    /// finish unconditionally on every outbound path.
+    pub fn finish(&self, trace: &Trace) {
+        let mut inner = trace.inner.lock().unwrap();
+        if inner.finished {
+            return;
+        }
+        inner.finished = true;
+        let done = CompletedTrace {
+            id: inner.id,
+            conn: inner.conn,
+            network: inner.network.clone(),
+            verdict: inner.verdict,
+            worker: inner.worker,
+            batch_seq: inner.batch_seq,
+            batch_size: inner.batch_size,
+            streak: inner.streak,
+            spans: inner.spans.clone(),
+        };
+        drop(inner);
+        let idx = match done.worker {
+            Some(w) => (w + 1).min(self.rings.len() - 1),
+            None => 0,
+        };
+        let mut ring = self.rings[idx].lock().unwrap();
+        if ring.len() >= RING_CAP {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(done);
+    }
+
+    /// Drain every ring (oldest first within a ring, door ring first).
+    pub fn drain(&self) -> Vec<CompletedTrace> {
+        let mut out = Vec::new();
+        for ring in &self.rings {
+            out.extend(std::mem::take(&mut *ring.lock().unwrap()));
+        }
+        out
+    }
+
+    /// Fold one batch's per-layer deltas into the (network, layer)
+    /// families. One mutex acquisition per batch.
+    pub fn record_layers(&self, network: &str, stats: &[LayerStat]) {
+        if stats.is_empty() {
+            return;
+        }
+        let mut layers = self.layers.lock().unwrap();
+        for s in stats {
+            let fam = layers.entry((network.to_string(), s.name.clone())).or_default();
+            fam.batches += 1;
+            fam.passes += s.passes;
+            fam.cycles += s.cycles;
+            fam.weight_loads += s.weight_loads;
+            fam.weight_reuses += s.weight_reuses;
+            fam.link_bytes += s.link_bytes;
+            fam.wall_us += s.dur_us;
+        }
+    }
+
+    /// Snapshot the per-layer families, sorted by (network, layer) for
+    /// deterministic rendering.
+    pub fn layer_families(&self) -> Vec<(String, String, LayerFamily)> {
+        let layers = self.layers.lock().unwrap();
+        let mut out: Vec<(String, String, LayerFamily)> =
+            layers.iter().map(|((n, l), f)| (n.clone(), l.clone(), f.clone())).collect();
+        out.sort_by(|a, b| (&a.0, &a.1).cmp(&(&b.0, &b.1)));
+        out
+    }
+}
+
+// ---- live-stats snapshot types (serialized by frontdoor::proto) --------
+
+/// Per-network live counters + predictor quantiles (µs). The predictor
+/// fields are what `Service::submit_deadline` actually gates on, so a
+/// scrape shows *why* a network's requests are being shed.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NetworkSnapshot {
+    pub name: String,
+    pub served: u64,
+    pub deadline_sheds: u64,
+    /// The predictor's current turnaround estimate (queue-wait p90 +
+    /// service p50) in µs.
+    pub predicted_us: u64,
+    pub qw_p50_us: u64,
+    pub qw_p90_us: u64,
+    pub sv_p50_us: u64,
+    pub sv_p90_us: u64,
+    pub lat_p50_us: u64,
+    pub lat_p99_us: u64,
+}
+
+/// Per-worker live counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerSnapshot {
+    pub worker: u32,
+    pub served: u64,
+    pub batches: u64,
+}
+
+/// One consistent snapshot of a running service's counters — everything
+/// a `StatsReport` frame carries besides the door's own numbers. Taken
+/// under the service state lock, so served/shed/outstanding are
+/// mutually consistent (a scrape mid-run sums to what the door saw).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServiceSnapshot {
+    pub served: u64,
+    pub failed: u64,
+    pub queue_full_sheds: u64,
+    pub deadline_sheds: u64,
+    pub result_cache_hits: u64,
+    /// Requests admitted but not yet resolved (queued + in flight +
+    /// parked duplicates).
+    pub outstanding: u64,
+    pub queue_depth: u64,
+    pub networks: Vec<NetworkSnapshot>,
+    pub workers: Vec<WorkerSnapshot>,
+}
+
+// ---- exports -----------------------------------------------------------
+
+fn esc(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+fn chrome_event(name: &str, ts: u64, dur: u64, tid: u64, args: &str) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{ts},\"dur\":{dur},\"pid\":1,\"tid\":{tid}{args}}}",
+        esc(name)
+    )
+}
+
+/// Render completed traces as Chrome trace-event JSON
+/// (`chrome://tracing` / Perfetto loadable). One track per worker
+/// (`tid = worker + 1`; `tid 0` is the door track for requests that
+/// never reached a worker), one top-level `X` event per request
+/// spanning its whole lifecycle, and one nested `X` event per span —
+/// children are fully contained in the parent because every timestamp
+/// derives from the same hub epoch.
+pub fn chrome_trace_json(traces: &[CompletedTrace]) -> String {
+    let mut events = Vec::new();
+    for t in traces {
+        let tid = t.worker.map(|w| w as u64 + 1).unwrap_or(0);
+        let (start, end) = t.extent_us();
+        let args = format!(
+            ",\"args\":{{\"conn\":{},\"verdict\":\"{}\",\"batch_seq\":{},\"batch_size\":{},\"streak\":{}}}",
+            t.conn,
+            t.verdict.as_str(),
+            t.batch_seq.map_or_else(|| "null".to_string(), |s| s.to_string()),
+            t.batch_size,
+            t.streak
+        );
+        let name = format!("req {} [{}]", t.id, if t.network.is_empty() { "?" } else { &t.network });
+        events.push(chrome_event(&name, start, (end - start).max(1), tid, &args));
+        for s in &t.spans {
+            events.push(chrome_event(&s.name, s.start_us, s.dur_us.max(1), tid, ""));
+        }
+    }
+    format!("{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n{}\n]}}\n", events.join(",\n"))
+}
+
+/// One newline-free JSON object for a completed trace — the JSONL event
+/// log `fusionaccel listen --trace-out` appends for scripted analysis.
+pub fn jsonl_line(t: &CompletedTrace) -> String {
+    let spans: Vec<String> = t
+        .spans
+        .iter()
+        .map(|s| format!("{{\"name\":\"{}\",\"start_us\":{},\"dur_us\":{}}}", esc(&s.name), s.start_us, s.dur_us))
+        .collect();
+    format!(
+        "{{\"id\":{},\"conn\":{},\"network\":\"{}\",\"verdict\":\"{}\",\"worker\":{},\"batch_seq\":{},\
+         \"batch_size\":{},\"streak\":{},\"spans\":[{}]}}",
+        t.id,
+        t.conn,
+        esc(&t.network),
+        t.verdict.as_str(),
+        t.worker.map_or_else(|| "null".to_string(), |w| w.to_string()),
+        t.batch_seq.map_or_else(|| "null".to_string(), |s| s.to_string()),
+        t.batch_size,
+        t.streak,
+        spans.join(",")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn finished_trace(hub: &Hub, id: u64, worker: Option<usize>) -> Trace {
+        let tr = hub.start_trace(id, 7).expect("tracing on");
+        tr.set_network("tiny");
+        tr.span_us("decode", 10, 5);
+        tr.span_us("admit", 15, 2);
+        tr.span_us("queue", 17, 40);
+        tr.span_us("forward", 57, 100);
+        tr.span_us("flush", 160, 3);
+        if let Some(w) = worker {
+            tr.set_batch(w, hub.next_batch_seq(), 4, 2);
+            tr.set_verdict(Verdict::Served);
+        } else {
+            tr.set_verdict(Verdict::DeadlineShed);
+        }
+        tr
+    }
+
+    #[test]
+    fn tracing_off_allocates_nothing() {
+        let hub = Hub::new(2);
+        assert!(!hub.tracing());
+        assert!(hub.start_trace(1, 0).is_none());
+        hub.set_tracing(true);
+        assert!(hub.start_trace(1, 0).is_some());
+    }
+
+    #[test]
+    fn finish_routes_to_worker_ring_and_is_idempotent() {
+        let hub = Hub::new(2);
+        hub.set_tracing(true);
+        let served = finished_trace(&hub, 1, Some(1));
+        hub.finish(&served);
+        hub.finish(&served); // double-finish must not duplicate
+        let shed = finished_trace(&hub, 2, None);
+        hub.finish(&shed);
+
+        let drained = hub.drain();
+        assert_eq!(drained.len(), 2);
+        // Door ring drains first (the shed), then worker rings in order.
+        assert_eq!(drained[0].id, 2);
+        assert_eq!(drained[0].verdict, Verdict::DeadlineShed);
+        assert_eq!(drained[0].worker, None);
+        assert_eq!(drained[1].id, 1);
+        assert_eq!(drained[1].worker, Some(1));
+        assert_eq!(drained[1].batch_size, 4);
+        assert_eq!(drained[1].spans.len(), 5);
+        assert_eq!(drained[1].extent_us(), (10, 163));
+        assert!(hub.drain().is_empty(), "drain empties the rings");
+        assert_eq!(hub.dropped(), 0);
+    }
+
+    #[test]
+    fn full_ring_drops_oldest_and_counts() {
+        let hub = Hub::new(0);
+        hub.set_tracing(true);
+        for id in 0..(RING_CAP as u64 + 3) {
+            let tr = hub.start_trace(id, 0).unwrap();
+            tr.set_verdict(Verdict::Failed);
+            hub.finish(&tr);
+        }
+        assert_eq!(hub.dropped(), 3);
+        let drained = hub.drain();
+        assert_eq!(drained.len(), RING_CAP);
+        assert_eq!(drained[0].id, 3, "oldest traces were the dropped ones");
+    }
+
+    #[test]
+    fn span_cap_bounds_one_trace() {
+        let hub = Hub::new(0);
+        hub.set_tracing(true);
+        let tr = hub.start_trace(9, 0).unwrap();
+        for i in 0..(MAX_SPANS + 10) {
+            tr.span_us(format!("s{i}"), i as u64, 1);
+        }
+        hub.finish(&tr);
+        assert_eq!(hub.drain()[0].spans.len(), MAX_SPANS);
+    }
+
+    #[test]
+    fn instants_map_through_the_epoch() {
+        let hub = Hub::new(0);
+        hub.set_tracing(true);
+        let tr = hub.start_trace(1, 0).unwrap();
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_micros(250);
+        tr.span("x", t0, t1);
+        hub.finish(&tr);
+        let done = hub.drain().pop().unwrap();
+        assert_eq!(done.spans[0].dur_us, 250);
+        assert!(done.spans[0].start_us < 10_000_000, "epoch-relative, not wall-clock");
+    }
+
+    #[test]
+    fn layer_families_aggregate_per_network_layer() {
+        let hub = Hub::new(1);
+        let now = Instant::now();
+        let stat = |name: &str, passes: u64, bytes: u64| LayerStat {
+            name: name.to_string(),
+            passes,
+            cycles: 10 * passes,
+            weight_loads: 1,
+            weight_reuses: 0,
+            link_bytes: bytes,
+            start: now,
+            dur_us: 5,
+        };
+        hub.record_layers("tiny", &[stat("c1", 4, 100), stat("gap", 2, 40)]);
+        hub.record_layers("tiny", &[stat("c1", 4, 100)]);
+        hub.record_layers("heavy", &[stat("c1", 8, 900)]);
+        let fams = hub.layer_families();
+        assert_eq!(fams.len(), 3);
+        // Sorted by (network, layer): heavy/c1, tiny/c1, tiny/gap.
+        assert_eq!((fams[0].0.as_str(), fams[0].1.as_str()), ("heavy", "c1"));
+        assert_eq!(fams[1].2, LayerFamily {
+            batches: 2,
+            passes: 8,
+            cycles: 80,
+            weight_loads: 2,
+            weight_reuses: 0,
+            link_bytes: 200,
+            wall_us: 10,
+        });
+        assert_eq!(fams[2].2.batches, 1);
+    }
+
+    #[test]
+    fn chrome_export_nests_spans_inside_the_request_envelope() {
+        let hub = Hub::new(2);
+        hub.set_tracing(true);
+        let tr = finished_trace(&hub, 41, Some(0));
+        hub.finish(&tr);
+        let traces = hub.drain();
+        let json = chrome_trace_json(&traces);
+        // Envelope event on the worker track, spans on the same track.
+        assert!(json.contains("\"name\":\"req 41 [tiny]\""), "{json}");
+        assert!(json.contains("\"ts\":10,\"dur\":153,\"pid\":1,\"tid\":1"), "{json}");
+        assert!(json.contains("\"name\":\"decode\",\"ph\":\"X\",\"ts\":10,\"dur\":5,\"pid\":1,\"tid\":1"));
+        assert!(json.contains("\"name\":\"forward\",\"ph\":\"X\",\"ts\":57,\"dur\":100,\"pid\":1,\"tid\":1"));
+        assert!(json.contains("\"verdict\":\"served\""));
+        // Every span stays inside the envelope (what makes the nesting
+        // render): start ≥ envelope start and end ≤ envelope end.
+        let t = &traces[0];
+        let (s0, s1) = t.extent_us();
+        for s in &t.spans {
+            assert!(s.start_us >= s0 && s.start_us + s.dur_us <= s1);
+        }
+        // Structurally valid JSON: balanced braces/brackets, one
+        // traceEvents array.
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes, "{json}");
+        assert_eq!(json.matches("\"traceEvents\"").count(), 1);
+    }
+
+    #[test]
+    fn jsonl_line_is_one_flat_object() {
+        let hub = Hub::new(1);
+        hub.set_tracing(true);
+        let tr = finished_trace(&hub, 5, None);
+        hub.finish(&tr);
+        let line = jsonl_line(&hub.drain().pop().unwrap());
+        assert!(!line.contains('\n'));
+        assert!(line.starts_with("{\"id\":5,\"conn\":7,"), "{line}");
+        assert!(line.contains("\"verdict\":\"deadline_shed\""), "{line}");
+        assert!(line.contains("\"worker\":null"), "{line}");
+        assert!(line.contains("\"spans\":[{\"name\":\"decode\",\"start_us\":10,\"dur_us\":5}"), "{line}");
+        assert_eq!(line.matches('{').count(), line.matches('}').count());
+    }
+}

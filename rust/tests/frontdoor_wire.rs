@@ -12,8 +12,9 @@ use std::time::{Duration, Instant};
 use fusionaccel::compiler::ModelRepo;
 use fusionaccel::coordinator::{serve_batched, InferenceRequest, ServeConfig};
 use fusionaccel::frontdoor::client::Client;
-use fusionaccel::frontdoor::proto::{RequestMsg, ResponseMsg, ShedReason, MAX_FRAME};
-use fusionaccel::frontdoor::FrontDoor;
+use fusionaccel::frontdoor::proto::{RequestMsg, ResponseMsg, ShedReason, MAX_FRAME, TAG_STATS_REQUEST};
+use fusionaccel::frontdoor::{DoorConfig, FrontDoor};
+use fusionaccel::telemetry::Verdict;
 use fusionaccel::hw::usb::UsbLink;
 use fusionaccel::net::graph::Network;
 use fusionaccel::net::layer::LayerSpec;
@@ -404,4 +405,217 @@ fn thousand_concurrent_connections_round_trip_bit_exact() {
 
     let stats = teardown(svc, door);
     assert_eq!((stats.served, stats.failed), (CONNS, 0));
+}
+
+/// Live stats scrapes under load are monotonic and out-of-band, and the
+/// final scrape agrees exactly with the post-shutdown `ServeStats` /
+/// `DoorStats` totals.
+#[test]
+fn stats_scrapes_are_monotonic_and_agree_with_final_totals() {
+    let net = tiny_net();
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 2, 2));
+    let (svc, door) = start_door(&net, 0x57A7, &cfg);
+    let addr = door.local_addr();
+    let mut rng = Rng::new(0x57A8);
+
+    let mut client = Client::connect(addr).unwrap();
+    let mut probe = Client::connect(addr).unwrap();
+    let (mut last_served, mut last_requests) = (0u64, 0u64);
+    const N: u64 = 6;
+    for i in 0..N {
+        let resp = client.request(&RequestMsg::new(i, image(&net, &mut rng))).unwrap();
+        assert!(matches!(resp, ResponseMsg::Ok { .. }));
+        // A scrape between every completion: counters never go
+        // backwards, and everything answered so far is on the books.
+        let rep = probe.fetch_stats().unwrap();
+        assert!(rep.service.served >= last_served, "served went backwards");
+        assert!(rep.requests >= last_requests, "door requests went backwards");
+        assert!(rep.service.served + rep.service.result_cache_hits >= i + 1, "a completed request is missing");
+        last_served = rep.service.served;
+        last_requests = rep.requests;
+    }
+    let rep = probe.fetch_stats().unwrap();
+    // Scrapes are out-of-band: N inference requests went through, and
+    // the 7 stats frames moved neither `requests` nor `responses`.
+    assert_eq!((rep.requests, rep.responses), (N, N));
+    assert_eq!(rep.connections, 2);
+    assert!(rep.uptime_us > 0);
+    assert_eq!((rep.service.outstanding, rep.service.queue_depth), (0, 0));
+    assert_eq!(rep.service.networks.len(), 1);
+    let nets = &rep.service.networks[0];
+    assert_eq!((nets.name.as_str(), nets.served), ("tiny", N));
+    assert!(nets.predicted_us > 0, "live completions must feed the predictor");
+    assert_eq!(rep.service.workers.iter().map(|w| w.served).sum::<u64>(), N);
+
+    drop(client);
+    drop(probe);
+    let dstats = door.stats();
+    let stats = teardown(svc, door);
+    assert_eq!(stats.served as u64, rep.service.served);
+    assert_eq!(stats.failed as u64, rep.service.failed);
+    assert_eq!(stats.result_cache_hits as u64, rep.service.result_cache_hits);
+    assert_eq!(dstats.responses(), rep.responses);
+    assert_eq!(dstats.sheds(), 0);
+}
+
+/// A malformed stats frame (tag 0x05 with trailing junk) is a protocol
+/// violation like any other: one `Failed` sentinel answer, that
+/// connection closes, every other connection is untouched.
+#[test]
+fn malformed_stats_frame_closes_only_its_connection() {
+    let net = tiny_net();
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1));
+    let (svc, door) = start_door(&net, 0x57AB, &cfg);
+    let addr = door.local_addr();
+    let mut rng = Rng::new(0x57AC);
+
+    let mut good = Client::connect(addr).unwrap();
+
+    let mut bad = TcpStream::connect(addr).unwrap();
+    let body = [TAG_STATS_REQUEST, 0xEE];
+    bad.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+    bad.write_all(&body).unwrap();
+    bad.flush().unwrap();
+    let mut reply = Vec::new();
+    bad.read_to_end(&mut reply).unwrap(); // server answers then closes
+    assert!(reply.len() > 4, "expected one Failed frame before close");
+    match fusionaccel::frontdoor::proto::decode_response(&reply[4..]).unwrap() {
+        ResponseMsg::Failed { id, error } => {
+            assert_eq!(id, u64::MAX, "frame-level rejection uses the sentinel id");
+            assert!(error.contains("protocol error"), "{error}");
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    assert_eq!(door.stats().protocol_errors(), 1);
+
+    // The healthy connection still round-trips — and still scrapes.
+    let resp = good.request(&RequestMsg::new(0, image(&net, &mut rng))).unwrap();
+    assert!(matches!(resp, ResponseMsg::Ok { id: 0, .. }));
+    assert_eq!(good.fetch_stats().unwrap().service.served, 1);
+
+    let stats = teardown(svc, door);
+    assert_eq!(stats.served, 1);
+}
+
+/// With an idle timeout configured, a silent connection is dropped (and
+/// counted) while a connection that keeps sending frames — each gap
+/// under the limit, total lifetime well over it — stays up.
+#[test]
+fn idle_connection_is_dropped_and_counted() {
+    let net = tiny_net();
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1));
+    let mut repo = ModelRepo::new();
+    repo.register(net.clone(), synthesize_weights(&net, 0x1D7E)).unwrap();
+    let svc = Arc::new(Service::start(Arc::new(repo), &cfg).unwrap());
+    let idle = Duration::from_millis(300);
+    let door = FrontDoor::bind_with_config(svc.clone(), "127.0.0.1:0", DoorConfig::default().with_idle_timeout(idle))
+        .unwrap();
+    let addr = door.local_addr();
+    let mut rng = Rng::new(0x1D7F);
+
+    // The active connection's frame gaps (~50 ms) stay under the limit
+    // even though its total lifetime exceeds it: the deadline re-arms
+    // per frame, not per connection.
+    let mut busy = Client::connect(addr).unwrap();
+    for i in 0..8u64 {
+        let resp = busy.request(&RequestMsg::new(i, image(&net, &mut rng))).unwrap();
+        assert!(matches!(resp, ResponseMsg::Ok { .. }));
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert_eq!(door.stats().idle_disconnects(), 0, "an active connection must not be dropped");
+    drop(busy);
+
+    // The silent connection sends nothing: the server hangs up cleanly
+    // (EOF on our side) within a few idle windows and counts the drop.
+    let mut silent = Client::connect(addr).unwrap();
+    let t0 = Instant::now();
+    assert!(silent.recv().unwrap().is_none(), "expected a clean server-side close");
+    // Half the window is a safe lower bound (the server armed its
+    // deadline slightly before our post-connect clock started).
+    assert!(t0.elapsed() >= idle / 2, "the drop must wait out the idle window, not fire immediately");
+    assert_eq!(door.stats().idle_disconnects(), 1);
+
+    let stats = teardown(svc, door);
+    assert_eq!((stats.served, stats.failed), (8, 0));
+}
+
+/// PINNED PROPERTY: turning tracing on cannot change a single bit of
+/// any response — and every traced, served request yields one complete
+/// lifecycle: decode → admit → queue → forward → flush spans present
+/// and in start-time order, plus per-layer and postprocess spans, with
+/// a loadable Chrome trace export.
+#[test]
+fn prop_tracing_on_is_bit_identical_and_traces_are_complete() {
+    let net = tiny_net();
+    let blobs = synthesize_weights(&net, 0x7ACE);
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 2));
+    let (svc, door) = start_door(&net, 0x7ACE, &cfg);
+    let addr = door.local_addr();
+    svc.telemetry().set_tracing(true);
+    let hub = svc.telemetry().clone();
+
+    const CASES: usize = 4;
+    forall(
+        0x7ACF,
+        CASES,
+        |rng| image(&net, rng),
+        |img| {
+            // Untraced in-process reference for the same image.
+            let (reference, _) =
+                serve_batched(&net, &blobs, &cfg.serve, vec![InferenceRequest::new(0, img.clone())])
+                    .map_err(|e| e.to_string())?;
+            let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
+            match client.request(&RequestMsg::new(0, img.clone())).map_err(|e| e.to_string())? {
+                ResponseMsg::Ok { probs, .. } => {
+                    if probs_bits(&probs) != probs_bits(&reference[0].probs) {
+                        return Err("tracing changed the forward's bits".to_string());
+                    }
+                    Ok(())
+                }
+                other => Err(format!("traced request not served: {other:?}")),
+            }
+        },
+    );
+
+    // The writer seals a trace *after* flushing the response, so poll
+    // the drain until every request's lifecycle has landed.
+    let mut traces = Vec::new();
+    let t0 = Instant::now();
+    while traces.len() < CASES {
+        assert!(t0.elapsed() < Duration::from_secs(10), "only {} of {CASES} traces completed", traces.len());
+        traces.extend(hub.drain());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(traces.len(), CASES);
+    for t in &traces {
+        assert_eq!(t.verdict, Verdict::Served);
+        assert_eq!(t.network, "tiny");
+        assert_eq!(t.worker, Some(0));
+        assert!(t.batch_size >= 1);
+        let pos = |name: &str| {
+            t.spans
+                .iter()
+                .position(|s| s.name == name)
+                .unwrap_or_else(|| panic!("span {name} missing from {:?}", t.spans))
+        };
+        let starts: Vec<u64> =
+            ["decode", "admit", "queue", "forward", "flush"].map(|n| t.spans[pos(n)].start_us).to_vec();
+        assert!(starts.windows(2).all(|w| w[0] <= w[1]), "lifecycle spans out of order: {:?}", t.spans);
+        assert!(t.spans.iter().any(|s| s.name == "postprocess"), "postprocess span missing");
+        assert!(t.spans.iter().any(|s| s.name.starts_with("layer ")), "per-layer spans missing");
+        // Layer sub-spans nest inside the forward span — the Chrome
+        // export's containment requirement.
+        let fwd = &t.spans[pos("forward")];
+        for s in t.spans.iter().filter(|s| s.name.starts_with("layer ")) {
+            assert!(
+                s.start_us + 1 >= fwd.start_us && s.start_us + s.dur_us <= fwd.start_us + fwd.dur_us + 1,
+                "layer span escapes forward: {s:?} vs {fwd:?}"
+            );
+        }
+    }
+    let json = fusionaccel::telemetry::chrome_trace_json(&traces);
+    assert!(json.contains("\"traceEvents\"") && json.contains("\"forward\""), "chrome export malformed");
+
+    let stats = teardown(svc, door);
+    assert_eq!((stats.served, stats.failed), (CASES, 0));
 }
