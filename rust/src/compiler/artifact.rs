@@ -17,6 +17,7 @@ use crate::host::gemm::{ConvGranularity, WeightPlan};
 use crate::net::graph::{Network, Node};
 use crate::net::layer::LayerSpec;
 
+use super::cost;
 use super::layout;
 use super::passes::{self, PassReport};
 
@@ -167,6 +168,14 @@ pub struct CompiledStream {
     /// pool/idle layers. The compiled drivers read this instead of
     /// re-deriving the layout on every forward.
     pub granularities: Vec<Option<ConvGranularity>>,
+    /// Oracle-modeled single-image cold cost of this stream
+    /// ([`super::cost::model_stream`] at batch 1, [`Residency::Cold`]):
+    /// the serving tier's prior for networks with no measured evidence
+    /// yet. Other batch sizes / residencies are recomputed on demand
+    /// via [`super::cost::stream_cost`].
+    ///
+    /// [`Residency::Cold`]: super::cost::Residency::Cold
+    pub modeled: cost::StreamCost,
 }
 
 impl CompiledStream {
@@ -208,6 +217,14 @@ pub fn compile(net: &Network, weights_id: u64) -> Result<CompiledStream> {
     let id = format!("{:016x}", combine(graph_fingerprint(&optimized), weights_id));
     let weight_plan = WeightPlan::plan(&id, &optimized.engine_layers());
     let granularities = layout::plan_granularities(&optimized);
+    let modeled = cost::model_stream(
+        &optimized,
+        &epochs,
+        weight_plan.is_resident(),
+        &granularities,
+        1,
+        cost::Residency::Cold,
+    );
     Ok(CompiledStream {
         id,
         net: optimized,
@@ -217,6 +234,7 @@ pub fn compile(net: &Network, weights_id: u64) -> Result<CompiledStream> {
         report,
         weight_plan,
         granularities,
+        modeled,
     })
 }
 

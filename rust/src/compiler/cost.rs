@@ -1,0 +1,644 @@
+//! Oracle cost model: exact replay of both drivers' transfer and engine
+//! accounting from layer shapes alone — no device, no weights, no data.
+//!
+//! [`crate::perfmodel`] estimates *time* from closed forms; this module
+//! predicts the **counters**: per-layer engine passes, cycles, weight
+//! loads/reuses, link bytes and link transactions, for any supported
+//! network, either driver (single-image vs batched), any batch size, and
+//! both residency states (cold first forward vs warm repeat of the same
+//! artifact). The contract is *exactness*, pinned by property tests:
+//! every number here must equal the [`crate::accel::stream::EngineStats`]
+//! / [`crate::telemetry::LayerStat`] counters a real forward measures —
+//! predict-then-verify, not estimate-then-hope.
+//!
+//! Because the prediction is exact, it can drive decisions that used to
+//! be heuristic:
+//!
+//! * [`super::layout`] enumerates the *legal* slicing granularities per
+//!   conv and picks the argmin-modeled-cost one ([`conv_layer_cost`]);
+//! * [`super::compile`] stamps the modeled cold single-image cost onto
+//!   the artifact ([`super::CompiledStream::modeled`]) so the serving
+//!   deadline predictor has evidence for networks it has never run;
+//! * `fusionaccel explain <net>` prints the modeled-vs-measured table.
+//!
+//! The model mirrors the drivers loop for loop (the same block / row /
+//! pixel / chunk traversal, the same RESFIFO pending-drain placement),
+//! but touches only counters — no FP16 math, no cache contents — so it
+//! runs in microseconds at compile time.
+
+use crate::host::gemm::{self, ConvGranularity};
+use crate::hw::clock::ClockDomain;
+use crate::hw::usb::UsbLink;
+use crate::net::graph::Network;
+use crate::net::layer::{LayerSpec, OpType};
+
+use super::artifact::EpochPlan;
+
+/// Device state the forward starts from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    /// First forward of this artifact: every command stream and weight
+    /// super-block crosses the link.
+    Cold,
+    /// Immediate repeat of the same artifact on the same device: the
+    /// command shadow and (for resident weight plans) every keyed weight
+    /// super-block are still in place.
+    Warm,
+}
+
+/// Whether a conv super-block's weights cross the link or hit the
+/// device-side shadow. Cold planned loads and unplanned loads produce
+/// byte-identical traffic (same transfers, same counters), so the model
+/// needs only this binary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum WeightTraffic {
+    /// Keyed super-block still resident: zero bytes, one `weight_reuses`.
+    Resident,
+    /// Full load: one `weight_loads`, weights + bias PipeIn transfers.
+    Load,
+}
+
+/// Predicted counters for one engine layer (or the command preamble).
+/// Field-for-field comparable with [`crate::telemetry::LayerStat`] and
+/// the [`crate::accel::stream::EngineStats`] deltas.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LayerCost {
+    pub name: String,
+    /// Engine passes (`restart_engine` pulses).
+    pub passes: u64,
+    /// Engine-clock cycles (closed-form, identical to the device model).
+    pub cycles: u64,
+    /// Weight super-block load transfers.
+    pub weight_loads: u64,
+    /// Weight super-blocks found resident under their content key.
+    pub weight_reuses: u64,
+    /// Link bytes (PipeIn + WireOut + PipeOut).
+    pub link_bytes: u64,
+    /// Link transactions (each pays the per-transaction latency).
+    pub link_txns: u64,
+}
+
+impl LayerCost {
+    fn named(name: &str) -> LayerCost {
+        LayerCost { name: name.to_string(), ..LayerCost::default() }
+    }
+
+    /// One PipeIn transfer of `values` FP16 values (each crosses as a
+    /// 32-bit word — data, weight and bias caches all pay 4 bytes per
+    /// value).
+    fn pipe_in(&mut self, values: u64) {
+        self.link_bytes += 4 * values;
+        self.link_txns += 1;
+    }
+
+    /// One WireOut interrupt check + one PipeOut of `n` results.
+    fn read_results(&mut self, n: u64) {
+        self.link_bytes += 4 + 4 * n;
+        self.link_txns += 2;
+    }
+
+    /// One conv engine pass (serialized-round slice timing:
+    /// `3k² + 26` cycles per (output element, channel group) round).
+    fn conv_pass(&mut self, out_cols: u64, n_oc: u64, groups: u64, k: u64) {
+        self.passes += 1;
+        self.cycles += out_cols * n_oc * groups * (3 * k * k + 26);
+    }
+
+    /// One pool engine pass: II-2 per window element actually read
+    /// (clipped elements are skipped) plus a per-column drain tail.
+    #[allow(clippy::too_many_arguments)]
+    fn pool_pass(
+        &mut self,
+        op: OpType,
+        out_cols: u64,
+        data_rows: u64,
+        k: u64,
+        stride: u64,
+        pool_pad: u64,
+        data_width: u64,
+    ) {
+        self.passes += 1;
+        let mut elems = 0u64;
+        for xo in 0..out_cols {
+            for kx in 0..k {
+                let x = xo * stride + kx;
+                if x >= pool_pad && x - pool_pad < data_width {
+                    elems += data_rows;
+                }
+            }
+        }
+        let tail = if op == OpType::AvgPool { 6 } else { 4 };
+        self.cycles += elems * 2 + out_cols * tail;
+    }
+
+    fn add(&mut self, other: &LayerCost) {
+        self.passes += other.passes;
+        self.cycles += other.cycles;
+        self.weight_loads += other.weight_loads;
+        self.weight_reuses += other.weight_reuses;
+        self.link_bytes += other.link_bytes;
+        self.link_txns += other.link_txns;
+    }
+
+    /// Modeled wall time of this layer over `link`: engine compute plus
+    /// link time (per-transaction latency + bytes over bandwidth) —
+    /// exactly the terms `ForwardResult::whole_process_seconds` sums.
+    pub fn seconds(&self, link: &UsbLink) -> f64 {
+        ClockDomain::ENGINE.secs(self.cycles)
+            + self.link_txns as f64 * link.txn_latency
+            + self.link_bytes as f64 / link.bandwidth
+    }
+}
+
+/// Predicted cost of one whole forward (single-image or batched) of a
+/// compiled stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamCost {
+    /// Images per forward this prediction models (1 = single driver,
+    /// ≥ 2 = batched driver — the dispatch rule the serving worker uses).
+    pub batch: usize,
+    pub residency: Residency,
+    /// Epoch-0 command transfer. It happens before the first
+    /// `load_layer`, so it falls *outside* every layer-tape delta —
+    /// modeled separately so per-layer rows still match exactly.
+    pub preamble: LayerCost,
+    /// Per engine layer, in engine order (indexed like
+    /// `net.engine_layers()`).
+    pub layers: Vec<LayerCost>,
+    /// Command streams that crossed the link.
+    pub command_loads: u64,
+    /// Command streams replayed from the device shadow (zero bytes).
+    pub command_reuses: u64,
+}
+
+impl StreamCost {
+    /// Sum of the preamble and every layer.
+    pub fn total(&self) -> LayerCost {
+        let mut t = LayerCost::named("total");
+        t.add(&self.preamble);
+        for l in &self.layers {
+            t.add(l);
+        }
+        t
+    }
+
+    /// Modeled whole-forward seconds over `link` (engine + link).
+    pub fn seconds(&self, link: &UsbLink) -> f64 {
+        self.total().seconds(link)
+    }
+
+    /// Modeled service seconds per image.
+    pub fn per_image_seconds(&self, link: &UsbLink) -> f64 {
+        self.seconds(link) / self.batch.max(1) as f64
+    }
+}
+
+/// Predict the cost of forwarding `batch` images through a compiled
+/// stream from `residency` state. `batch == 1` models
+/// [`crate::host::driver::HostDriver::forward_compiled`]; `batch ≥ 2`
+/// models [`crate::host::batch::forward_batch_compiled`] — the same
+/// split the serving worker dispatches on.
+pub fn stream_cost(
+    cs: &super::CompiledStream,
+    batch: usize,
+    residency: Residency,
+) -> StreamCost {
+    model_stream(
+        &cs.net,
+        &cs.epochs,
+        cs.weight_plan.is_resident(),
+        &cs.granularities,
+        batch,
+        residency,
+    )
+}
+
+/// Parts-level model entry point: everything [`stream_cost`] needs,
+/// before a [`super::CompiledStream`] exists — `compile` calls this to
+/// stamp the modeled cost onto the artifact it is constructing.
+pub(crate) fn model_stream(
+    net: &Network,
+    epochs: &[EpochPlan],
+    plan_resident: bool,
+    granularities: &[Option<ConvGranularity>],
+    batch: usize,
+    residency: Residency,
+) -> StreamCost {
+    let layers = net.engine_layers();
+    let wt = if plan_resident && residency == Residency::Warm {
+        WeightTraffic::Resident
+    } else {
+        WeightTraffic::Load
+    };
+    let mut out = StreamCost {
+        batch,
+        residency,
+        preamble: LayerCost::named("commands"),
+        layers: layers.iter().map(|s| LayerCost::named(&s.name)).collect(),
+        command_loads: 0,
+        command_reuses: 0,
+    };
+
+    // Command epochs. Only single-epoch streams keep a stable shadow key
+    // across forwards (multi-epoch keys rotate through the one shadow
+    // slot, so a warm repeat still reloads every epoch). Epoch `e ≥ 1`
+    // loads after the previous layer's `load_layer` and before this
+    // epoch's first, so its traffic lands in the *previous* layer's
+    // tape delta; epoch 0 precedes every mark.
+    let warm_shadow = residency == Residency::Warm && epochs.len() == 1;
+    for (e, ep) in epochs.iter().enumerate() {
+        let target = if e == 0 {
+            &mut out.preamble
+        } else {
+            &mut out.layers[ep.start - 1]
+        };
+        if warm_shadow {
+            out.command_reuses += 1;
+        } else {
+            out.command_loads += 1;
+            target.pipe_in(3 * ep.len as u64); // 12 bytes per command
+        }
+    }
+
+    for (eidx, spec) in layers.iter().enumerate() {
+        let cost = &mut out.layers[eidx];
+        match spec.op {
+            OpType::ConvRelu => {
+                let gran = granularities.get(eidx).copied().flatten().unwrap_or_else(|| {
+                    let icp = (spec.i_ch as usize).div_ceil(8) * 8;
+                    let pw = (spec.i_side + 2 * spec.padding) as usize;
+                    gemm::conv_granularity(spec.kernel as usize, pw, icp)
+                });
+                conv_cost(cost, spec, gran, wt, batch);
+            }
+            OpType::MaxPool | OpType::AvgPool => pool_cost(cost, spec, batch),
+            OpType::Idle => {} // no device traffic, no engine work
+        }
+    }
+    out
+}
+
+/// Modeled cost of one conv layer in isolation, cold and unplanned —
+/// the figure of merit the layout pass minimizes over legal candidate
+/// granularities. (Weight traffic is granularity-independent, but it is
+/// included so the returned cost is a complete layer prediction.)
+pub fn conv_layer_cost(spec: &LayerSpec, gran: ConvGranularity, batch: usize) -> LayerCost {
+    let mut cost = LayerCost::named(&spec.name);
+    conv_cost(&mut cost, spec, gran, WeightTraffic::Load, batch);
+    cost
+}
+
+/// Chunk lengths of `n` items grouped by `per` (mirrors
+/// `slice::chunks`): the image-group sizes both batched drivers iterate.
+fn group_sizes(n: usize, per: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(n.div_ceil(per));
+    let mut left = n;
+    while left > 0 {
+        let take = per.min(left);
+        out.push(take);
+        left -= take;
+    }
+    out
+}
+
+/// Conv layer cost, replaying `HostDriver::run_conv` (batch == 1) or
+/// `batch::conv_batch` (batch ≥ 2) loop for loop.
+fn conv_cost(
+    cost: &mut LayerCost,
+    spec: &LayerSpec,
+    gran: ConvGranularity,
+    wt: WeightTraffic,
+    batch: usize,
+) {
+    let k = spec.kernel as usize;
+    let o = spec.o_side as usize;
+    let o_ch = spec.o_ch as usize;
+    let icp = (spec.i_ch as usize).div_ceil(8) * 8;
+    let groups = icp / 8;
+    let pw = (spec.i_side + 2 * spec.padding) as usize;
+    let layout = gemm::conv_layout(k, spec.i_ch as usize, o_ch);
+    let cc = (gran == ConvGranularity::ChannelSplit).then(|| gemm::channel_chunks(k, icp));
+
+    // One pending-results counter models RESFIFO occupancy exactly: each
+    // pass pushes its results, a drain empties it in one WireOut+PipeOut.
+    let mut pending = 0u64;
+    macro_rules! drain {
+        () => {
+            if pending > 0 {
+                cost.read_results(pending);
+                pending = 0;
+            }
+        };
+    }
+    let space = |pending: u64| gemm::RES_FIFO_VALUES as u64 - pending;
+
+    let slice_words = match gran {
+        ConvGranularity::Row => k * pw * icp / 8,
+        ConvGranularity::Pixel | ConvGranularity::ChannelSplit => k * k * icp / 8,
+    };
+    let imgs_per_load =
+        (crate::accel::stream::DATA_CACHE_WORDS / slice_words.max(1)).clamp(1, batch);
+
+    let mut oc0 = 0usize;
+    while oc0 < o_ch {
+        let resident = layout.super_block.min(o_ch - oc0);
+        match wt {
+            WeightTraffic::Resident => cost.weight_reuses += 1,
+            WeightTraffic::Load => {
+                cost.weight_loads += 1;
+                cost.pipe_in((resident * layout.per_oc_values) as u64);
+                cost.pipe_in(resident as u64); // bias block
+            }
+        }
+        // Output-channel pass steps within the resident block.
+        let oc_steps: Vec<usize> = group_sizes(resident, layout.oc_pass);
+
+        match gran {
+            ConvGranularity::Row => {
+                if batch == 1 {
+                    for _y in 0..o {
+                        cost.pipe_in((k * pw * icp) as u64);
+                        for &n_oc in &oc_steps {
+                            cost.conv_pass(o as u64, n_oc as u64, groups as u64, k as u64);
+                            cost.read_results((o * n_oc) as u64);
+                        }
+                    }
+                } else {
+                    for _y in 0..o {
+                        for &chunk_len in &group_sizes(batch, imgs_per_load) {
+                            cost.pipe_in((chunk_len * slice_words * 8) as u64);
+                            for _ci in 0..chunk_len {
+                                for &n_oc in &oc_steps {
+                                    let n_results = (o * n_oc) as u64;
+                                    if space(pending) < n_results {
+                                        drain!();
+                                    }
+                                    cost.conv_pass(o as u64, n_oc as u64, groups as u64, k as u64);
+                                    pending += n_results;
+                                }
+                            }
+                            drain!();
+                        }
+                    }
+                }
+            }
+            ConvGranularity::Pixel => {
+                if batch == 1 {
+                    for _px in 0..o * o {
+                        cost.pipe_in((k * k * icp) as u64);
+                        for &n_oc in &oc_steps {
+                            cost.conv_pass(1, n_oc as u64, groups as u64, k as u64);
+                            cost.read_results(n_oc as u64);
+                        }
+                    }
+                } else {
+                    for _px in 0..o * o {
+                        for &chunk_len in &group_sizes(batch, imgs_per_load) {
+                            cost.pipe_in((chunk_len * slice_words * 8) as u64);
+                            for _ci in 0..chunk_len {
+                                for &n_oc in &oc_steps {
+                                    if space(pending) < n_oc as u64 {
+                                        drain!();
+                                    }
+                                    cost.conv_pass(1, n_oc as u64, groups as u64, k as u64);
+                                    pending += n_oc as u64;
+                                }
+                            }
+                            drain!();
+                        }
+                    }
+                }
+            }
+            ConvGranularity::ChannelSplit => {
+                let cc = cc.as_ref().unwrap();
+                if batch == 1 {
+                    for _px in 0..o * o {
+                        for c in 0..cc.count {
+                            let (_g0, gn) = cc.chunk(c);
+                            cost.pipe_in((k * k * gn * 8) as u64);
+                            for &n_oc in &oc_steps {
+                                if c > 0 {
+                                    cost.pipe_in(n_oc as u64); // partial re-entry via bias port
+                                }
+                                cost.conv_pass(1, n_oc as u64, gn as u64, k as u64);
+                                cost.read_results(n_oc as u64);
+                            }
+                        }
+                    }
+                } else {
+                    for _px in 0..o * o {
+                        for c in 0..cc.count {
+                            let (_g0, gn) = cc.chunk(c);
+                            let cw = cc.slice_words(c);
+                            let per = (crate::accel::stream::DATA_CACHE_WORDS / cw).clamp(1, batch);
+                            for &group_len in &group_sizes(batch, per) {
+                                cost.pipe_in((group_len * cw * 8) as u64);
+                                for _ci in 0..group_len {
+                                    for &n_oc in &oc_steps {
+                                        if space(pending) < n_oc as u64 {
+                                            drain!();
+                                        }
+                                        if c > 0 {
+                                            cost.pipe_in(n_oc as u64);
+                                        }
+                                        cost.conv_pass(1, n_oc as u64, gn as u64, k as u64);
+                                        pending += n_oc as u64;
+                                    }
+                                }
+                            }
+                            // Chunk barrier: the next chunk re-enters
+                            // these partials through the bias port.
+                            drain!();
+                        }
+                    }
+                }
+            }
+        }
+        oc0 += resident;
+    }
+    debug_assert_eq!(pending, 0);
+}
+
+/// Pool layer cost, replaying `HostDriver::run_pool` /
+/// `run_giant_maxpool` (batch == 1) or `batch::pool_batch` /
+/// `giant_maxpool_batch` (batch ≥ 2).
+fn pool_cost(cost: &mut LayerCost, spec: &LayerSpec, batch: usize) {
+    let k = spec.kernel as usize;
+    let s = spec.stride as usize;
+    let o = spec.o_side as usize;
+    let pad = spec.padding as usize;
+    let ih = spec.i_side as usize;
+    let groups = (spec.i_ch as usize).div_ceil(8);
+
+    let mut pending = 0u64;
+    macro_rules! drain {
+        () => {
+            if pending > 0 {
+                cost.read_results(pending);
+                pending = 0;
+            }
+        };
+    }
+    let space = |pending: u64| gemm::RES_FIFO_VALUES as u64 - pending;
+
+    if k * k > crate::accel::stream::DATA_CACHE_WORDS {
+        // Giant window (max only — the drivers reject giant avg).
+        for _g in 0..groups {
+            for y in 0..o {
+                let y0 = (y * s).saturating_sub(pad);
+                let rows = (y * s + k - pad).min(ih) - y0;
+                for x in 0..o {
+                    let c0 = (x * s).saturating_sub(pad);
+                    let width = (x * s + k - pad).min(ih) - c0;
+                    let cpad = pad.saturating_sub(x * s);
+                    for rc in gemm::pool_row_chunks(rows, width) {
+                        if batch == 1 {
+                            cost.pipe_in((rc.rows * width * 8) as u64);
+                            cost.pool_pass(
+                                spec.op,
+                                1,
+                                rc.rows as u64,
+                                k as u64,
+                                s as u64,
+                                cpad as u64,
+                                width as u64,
+                            );
+                            cost.read_results(8);
+                        } else {
+                            let slice_words = rc.rows * width;
+                            let per = (crate::accel::stream::DATA_CACHE_WORDS / slice_words)
+                                .clamp(1, batch);
+                            for &group_len in &group_sizes(batch, per) {
+                                cost.pipe_in((group_len * slice_words * 8) as u64);
+                                for _ci in 0..group_len {
+                                    if space(pending) < 8 {
+                                        drain!();
+                                    }
+                                    cost.pool_pass(
+                                        spec.op,
+                                        1,
+                                        rc.rows as u64,
+                                        k as u64,
+                                        s as u64,
+                                        cpad as u64,
+                                        width as u64,
+                                    );
+                                    pending += 8;
+                                }
+                                drain!();
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        return;
+    }
+
+    let chunks = gemm::pool_col_chunks(k, s, pad, ih, o);
+    for _g in 0..groups {
+        for y in 0..o {
+            let y0 = (y * s).saturating_sub(pad);
+            let rows = (y * s + k - pad).min(ih) - y0;
+            for ch in &chunks {
+                if batch == 1 {
+                    cost.pipe_in((rows * ch.width * 8) as u64);
+                    cost.pool_pass(
+                        spec.op,
+                        ch.cols as u64,
+                        rows as u64,
+                        k as u64,
+                        s as u64,
+                        ch.pad as u64,
+                        ch.width as u64,
+                    );
+                    cost.read_results((ch.cols * 8) as u64);
+                } else {
+                    let slice_words = rows * ch.width;
+                    let per =
+                        (crate::accel::stream::DATA_CACHE_WORDS / slice_words).clamp(1, batch);
+                    for &chunk_len in &group_sizes(batch, per) {
+                        cost.pipe_in((chunk_len * slice_words * 8) as u64);
+                        for _ci in 0..chunk_len {
+                            let n_results = (ch.cols * 8) as u64;
+                            if space(pending) < n_results {
+                                drain!();
+                            }
+                            cost.pool_pass(
+                                spec.op,
+                                ch.cols as u64,
+                                rows as u64,
+                                k as u64,
+                                s as u64,
+                                ch.pad as u64,
+                                ch.width as u64,
+                            );
+                            pending += n_results;
+                        }
+                        drain!();
+                    }
+                }
+            }
+        }
+    }
+    debug_assert_eq!(pending, 0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_sizes_mirror_slice_chunks() {
+        assert_eq!(group_sizes(7, 3), vec![3, 3, 1]);
+        assert_eq!(group_sizes(4, 4), vec![4]);
+        assert_eq!(group_sizes(3, 8), vec![3]);
+        assert!(group_sizes(0, 5).is_empty());
+    }
+
+    #[test]
+    fn row_beats_pixel_when_both_legal() {
+        // SqueezeNet conv1 shape: both row (5448 values) and pixel (72)
+        // slices fit; row loads per output row, pixel per output pixel —
+        // 113× more transactions. Link latency dominates.
+        let spec = LayerSpec::conv("conv1", 3, 2, 0, 227, 3, 64, 0);
+        let row = conv_layer_cost(&spec, ConvGranularity::Row, 1);
+        let pixel = conv_layer_cost(&spec, ConvGranularity::Pixel, 1);
+        assert!(row.link_txns < pixel.link_txns);
+        let usb = UsbLink::usb3_frontpanel();
+        assert!(row.seconds(&usb) < pixel.seconds(&usb));
+        // Engine work is granularity-independent: same macs, same cycles.
+        assert_eq!(row.cycles, pixel.cycles);
+        assert_eq!(row.passes * 113, pixel.passes);
+    }
+
+    #[test]
+    fn channel_split_with_one_chunk_equals_pixel() {
+        // A window small enough for one chunk: the split path degenerates
+        // to the pixel path — identical counters, so argmin ties and
+        // first-fit order (pixel first) breaks the tie.
+        let spec = LayerSpec::conv("c", 5, 1, 2, 14, 96, 16, 0);
+        let cc = gemm::channel_chunks(5, 96);
+        assert_eq!(cc.count, 1);
+        let split = conv_layer_cost(&spec, ConvGranularity::ChannelSplit, 1);
+        let pixel = conv_layer_cost(&spec, ConvGranularity::Pixel, 1);
+        assert_eq!(
+            LayerCost { name: String::new(), ..split },
+            LayerCost { name: String::new(), ..pixel }
+        );
+    }
+
+    #[test]
+    fn batching_amortizes_weight_loads_in_the_model() {
+        let spec = LayerSpec::conv("c1", 3, 1, 0, 12, 3, 8, 0);
+        let one = conv_layer_cost(&spec, ConvGranularity::Row, 1);
+        let b4 = conv_layer_cost(&spec, ConvGranularity::Row, 4);
+        // Same weight transfers for 4 images as for 1…
+        assert_eq!(b4.weight_loads, one.weight_loads);
+        // …and 4× the engine work.
+        assert_eq!(b4.cycles, 4 * one.cycles);
+        assert_eq!(b4.passes, 4 * one.passes);
+        // Fewer than 4× the transactions (coalesced slabs + drains).
+        assert!(b4.link_txns < 4 * one.link_txns);
+    }
+}

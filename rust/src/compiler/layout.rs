@@ -2,29 +2,89 @@
 //! granularity (row / pixel / channel-split) once, when the stream is
 //! built, instead of per forward.
 //!
-//! The decision is a pure function of the layer command — kernel,
-//! padded input width, lane-padded input channels — so it belongs on
-//! the artifact next to the epoch schedule and the weight plan: the
-//! serving hot path (`forward_compiled`, `forward_batch_compiled`)
+//! Since the oracle cost model ([`super::cost`]) predicts the exact
+//! link traffic of every candidate, the pass is an **argmin**: it
+//! enumerates the granularities that are *legal* for the layer (slice
+//! fits the data cache) and picks the one with the lowest modeled
+//! single-image service time. The old first-fit order (row, then pixel,
+//! then channel-split) survives only as the tie-break, so layers where
+//! candidates model identically — e.g. a channel split that degenerates
+//! to one chunk — keep their historical verdict, and every previously
+//! pinned layout stays pinned.
+//!
+//! The serving hot path (`forward_compiled`, `forward_batch_compiled`)
 //! reads [`crate::compiler::CompiledStream::granularities`] and never
-//! re-derives it. The uncompiled classic flow still computes it on the
-//! fly ([`crate::host::gemm::conv_granularity`] — the same function, so
-//! both flows always agree).
+//! re-derives the layout. The uncompiled classic flow still computes
+//! first-fit on the fly ([`crate::host::gemm::conv_granularity`]); the
+//! argmin can only ever pick a *cheaper* legal candidate, and the
+//! property tests pin that it never disagrees on today's model zoo.
 
-use crate::host::gemm::{self, ConvGranularity};
+use crate::accel::stream::DATA_CACHE_WORDS;
+use crate::host::gemm::{self, ConvGranularity, DATA_CACHE_VALUES};
+use crate::hw::usb::UsbLink;
 use crate::net::graph::Network;
-use crate::net::layer::OpType;
+use crate::net::layer::{LayerSpec, OpType};
+
+use super::cost;
+
+/// The granularities whose data slices fit the device caches for this
+/// layer, in first-fit (tie-break) order.
+pub fn legal_granularities(spec: &LayerSpec) -> Vec<ConvGranularity> {
+    let k = spec.kernel as usize;
+    let icp = (spec.i_ch as usize).div_ceil(8) * 8;
+    let pw = (spec.i_side + 2 * spec.padding) as usize;
+    let mut out = Vec::with_capacity(3);
+    if k * pw * icp <= DATA_CACHE_VALUES {
+        out.push(ConvGranularity::Row);
+    }
+    if k * k * icp <= DATA_CACHE_VALUES {
+        out.push(ConvGranularity::Pixel);
+    }
+    if k * k <= DATA_CACHE_WORDS {
+        out.push(ConvGranularity::ChannelSplit);
+    }
+    out
+}
 
 /// Granularity per engine layer (indexed like `net.engine_layers()`);
 /// `None` for pool/idle layers, which have no GEMM layout to pick.
+/// Convs get the argmin-modeled-cost legal granularity under the
+/// default score: modeled single-image seconds over the USB3 link.
 pub fn plan_granularities(net: &Network) -> Vec<Option<ConvGranularity>> {
+    let usb = UsbLink::usb3_frontpanel();
+    plan_granularities_with(net, &|spec, g| cost::conv_layer_cost(spec, g, 1).seconds(&usb))
+}
+
+/// Argmin layout with an injectable score (the seam the mis-cost tests
+/// use): for each conv, every legal granularity is scored and the
+/// cheapest wins; ties keep first-fit order (strict `<` comparison).
+/// A layer with no legal candidate falls back to the first-fit verdict
+/// unchanged, so failure behavior (a runtime error in the driver) is
+/// identical to the old pass.
+pub fn plan_granularities_with(
+    net: &Network,
+    score: &dyn Fn(&LayerSpec, ConvGranularity) -> f64,
+) -> Vec<Option<ConvGranularity>> {
     net.engine_layers()
         .iter()
         .map(|spec| {
             (spec.op == OpType::ConvRelu).then(|| {
-                let icp = (spec.i_ch as usize).div_ceil(8) * 8;
-                let pw = (spec.i_side + 2 * spec.padding) as usize;
-                gemm::conv_granularity(spec.kernel as usize, pw, icp)
+                let mut best: Option<(ConvGranularity, f64)> = None;
+                for g in legal_granularities(spec) {
+                    let c = score(spec, g);
+                    let better = match best {
+                        None => true,
+                        Some((_, b)) => c < b,
+                    };
+                    if better {
+                        best = Some((g, c));
+                    }
+                }
+                best.map(|(g, _)| g).unwrap_or_else(|| {
+                    let icp = (spec.i_ch as usize).div_ceil(8) * 8;
+                    let pw = (spec.i_side + 2 * spec.padding) as usize;
+                    gemm::conv_granularity(spec.kernel as usize, pw, icp)
+                })
             })
         })
         .collect()
@@ -52,7 +112,9 @@ mod tests {
         assert_eq!(by_name("conv3"), Some(ConvGranularity::Pixel));
         // fc6 6×6 over 256 ch: one window is 1152 words — channel split.
         assert_eq!(by_name("fc6"), Some(ConvGranularity::ChannelSplit));
-        // fc7/fc8 1×1 over 512: row fits (1·1·512 = 512).
+        // fc7/fc8 1×1 over 512: row fits (1·1·512 = 512) and models
+        // strictly cheaper than pixel (one slice per output row vs per
+        // output pixel), so the argmin agrees with first-fit.
         assert_eq!(by_name("fc7"), Some(ConvGranularity::Row));
         // Pool layers have no conv layout.
         assert_eq!(by_name("pool1"), None);
@@ -65,6 +127,64 @@ mod tests {
             match g {
                 Some(g) => assert_eq!(g, ConvGranularity::Row, "{}", spec.name),
                 None => assert_ne!(spec.op, OpType::ConvRelu),
+            }
+        }
+    }
+
+    #[test]
+    fn argmin_agrees_with_first_fit_on_the_model_zoo() {
+        // The old first-fit pass picked the cheapest legal candidate on
+        // every supported network (row beats pixel whenever legal; a
+        // split never beats a legal pixel) — so the argmin rewrite must
+        // reproduce it layer for layer.
+        for net in [squeezenet_v11(), alexnet()] {
+            let first_fit: Vec<Option<ConvGranularity>> = net
+                .engine_layers()
+                .iter()
+                .map(|spec| {
+                    (spec.op == OpType::ConvRelu).then(|| {
+                        let icp = (spec.i_ch as usize).div_ceil(8) * 8;
+                        let pw = (spec.i_side + 2 * spec.padding) as usize;
+                        gemm::conv_granularity(spec.kernel as usize, pw, icp)
+                    })
+                })
+                .collect();
+            assert_eq!(plan_granularities(&net), first_fit, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn legality_tracks_cache_arithmetic() {
+        // SqueezeNet conv1: everything legal.
+        let c1 = LayerSpec::conv("c1", 3, 2, 0, 227, 3, 64, 0);
+        assert_eq!(
+            legal_granularities(&c1),
+            vec![ConvGranularity::Row, ConvGranularity::Pixel, ConvGranularity::ChannelSplit]
+        );
+        // AlexNet conv1: row slice exceeds the cache.
+        let a1 = LayerSpec::conv("a1", 11, 4, 0, 227, 3, 96, 0);
+        assert_eq!(
+            legal_granularities(&a1),
+            vec![ConvGranularity::Pixel, ConvGranularity::ChannelSplit]
+        );
+        // fc6: only the split is legal.
+        let fc6 = LayerSpec::conv("fc6", 6, 1, 0, 6, 256, 4096, 0);
+        assert_eq!(legal_granularities(&fc6), vec![ConvGranularity::ChannelSplit]);
+    }
+
+    #[test]
+    fn mis_costed_candidate_is_never_selected() {
+        // Inflate row's score sky-high: the argmin must switch every
+        // row-legal conv to its next-cheapest candidate, and a candidate
+        // scored infinitely expensive must never win.
+        let net = squeezenet_v11();
+        let plan = plan_granularities_with(&net, &|spec, g| match g {
+            ConvGranularity::Row => f64::INFINITY,
+            _ => cost::conv_layer_cost(spec, g, 1).seconds(&UsbLink::usb3_frontpanel()),
+        });
+        for (spec, g) in net.engine_layers().iter().zip(plan) {
+            if let Some(g) = g {
+                assert_ne!(g, ConvGranularity::Row, "{}", spec.name);
             }
         }
     }

@@ -23,6 +23,14 @@
 //!    ([`crate::accel::stream::StreamAccelerator::load_commands_cached`])
 //!    keyed by artifact id makes command transfers happen only on a
 //!    network *switch*.
+//! 4. **Cost & layout** ([`cost`], [`layout`]) — an oracle traffic
+//!    model predicts the *exact* per-layer engine passes, weight-cache
+//!    loads, and link bytes of a compiled stream for every candidate
+//!    granularity and batch size (pinned `modeled == measured` by
+//!    property tests); the layout pass picks the argmin-modeled-cost
+//!    granularity per conv, and the modeled cost rides on the artifact
+//!    so the serving tier can price cold networks before any request
+//!    has run.
 //!
 //! Execution of compiled streams lives with the drivers:
 //! [`crate::host::driver::HostDriver::forward_compiled`] and
@@ -32,12 +40,14 @@
 
 pub mod artifact;
 pub mod cache;
+pub mod cost;
 pub mod layout;
 pub mod passes;
 pub mod registry;
 
 pub use artifact::{compile, fnv1a, graph_fingerprint, CompiledStream, EpochPlan};
 pub use cache::LruCache;
-pub use layout::plan_granularities;
+pub use cost::{conv_layer_cost, stream_cost, LayerCost, Residency, StreamCost};
+pub use layout::{legal_granularities, plan_granularities, plan_granularities_with};
 pub use passes::{run_pipeline, PassReport};
 pub use registry::{ArtifactRegistry, ModelRepo, ServableModel};

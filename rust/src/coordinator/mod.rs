@@ -40,12 +40,16 @@
 //! the timing, never the numbers.
 //!
 //! Since the long-lived [`crate::service::Service`] landed, every entry
-//! point here is a **closed-batch wrapper** over it: the whole load is
-//! admitted to a *paused* service, the queue closes, the pool opens and
-//! drains, and the tickets are collected — exactly the original
-//! closed-batch semantics (deterministic batch formation included), so
-//! the bit-identity and stats tests in `tests/serving_*.rs` pin the
-//! service's equivalence to the original coordinator.
+//! point here is a **closed-batch wrapper** over one shared
+//! implementation, [`crate::service::Service::run_closed`]: the whole
+//! load is admitted to a *paused* service, the queue closes, the pool
+//! opens and drains, and the tickets are collected — exactly the
+//! original closed-batch semantics (deterministic batch formation
+//! included), so the bit-identity and stats tests in
+//! `tests/serving_*.rs` pin the service's equivalence to the original
+//! coordinator. New code should call `run_closed` (or the live
+//! `Service` API) directly; [`serve`], [`serve_batched`] and
+//! [`serve_multi`] are kept as deprecated shims.
 
 pub mod batcher;
 pub mod metrics;
@@ -54,7 +58,7 @@ pub(crate) mod worker;
 
 use std::sync::Arc;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::Result;
 
 use crate::compiler::ModelRepo;
 use crate::hw::usb::UsbLink;
@@ -171,6 +175,18 @@ impl ServeConfig {
         self.result_cache = capacity;
         self
     }
+
+    /// Replace the micro-batch assembly policy.
+    pub fn with_policy(mut self, policy: BatchPolicy) -> ServeConfig {
+        self.policy = policy;
+        self
+    }
+
+    /// Per-worker LRU capacity for compiled-model handles.
+    pub fn with_model_cache(mut self, capacity: usize) -> ServeConfig {
+        self.model_cache = capacity;
+        self
+    }
 }
 
 /// Deterministic synthetic load: `n` seeded-random `side×side×ch`
@@ -199,6 +215,10 @@ pub fn synthetic_requests(n: usize, seed: u64, side: usize, ch: usize) -> Vec<In
 /// [`serve_batched`] with `max_batch = 1`. Blocks until every request
 /// is answered or reported failed. Deterministic results,
 /// non-deterministic assignment.
+///
+/// **Deprecated**: prefer [`crate::service::Service::run_closed`] on a
+/// paused service — this shim exists so historical call sites and the
+/// bit-identity tests keep pinning the same behavior.
 pub fn serve(
     net: &Network,
     blobs: &Blobs,
@@ -214,6 +234,9 @@ pub fn serve(
 /// come back sorted by id; requests whose forward failed or panicked
 /// are listed in [`ServeStats::failures`] — completed responses are
 /// always drained, never lost to a wedged channel.
+///
+/// **Deprecated**: prefer [`crate::service::Service::run_closed`] on a
+/// paused service over a one-model [`ModelRepo`].
 pub fn serve_batched(
     net: &Network,
     blobs: &Blobs,
@@ -236,57 +259,19 @@ pub fn serve_batched(
 /// (property-tested in `tests/serving_multi.rs`): forwards are pure,
 /// and neither batching, caching, nor interleaving changes the bits.
 ///
-/// Implemented as a closed-batch run of the long-lived
-/// [`crate::service::Service`]: the whole load is admitted to a
-/// *paused* service (so the queue is fully formed before any worker
-/// pops — deterministic batch assembly, exactly the pre-service
-/// behavior), then the queue closes, the pool opens, drains and joins,
-/// and the per-request tickets are collected into the response vector.
+/// **Deprecated**: this is now literally
+/// [`crate::service::Service::run_closed`] on a paused service — call
+/// that directly for new code; the shim (and the two above it) exists
+/// so the bit-identity and stats tests in `tests/serving_*.rs` keep
+/// pinning the service's equivalence to the original coordinator.
 pub fn serve_multi(
     repo: &ModelRepo,
     cfg: &ServeConfig,
     requests: Vec<InferenceRequest>,
 ) -> Result<(Vec<InferenceResponse>, ServeStats)> {
-    let total = requests.len();
     let svc = Service::start_paused(Arc::new(repo.snapshot()), &ServiceConfig::new(*cfg))?;
-    let mut tickets = Vec::with_capacity(total);
-    let mut admission_failures: Vec<FailedRequest> = Vec::new();
-    for req in requests {
-        let id = req.id;
-        match svc.submit(req) {
-            Ok(t) => tickets.push(t),
-            // The queue is unbounded here, so this is a duplicate
-            // in-flight id (the service routes completions by id). Fail
-            // that request alone — the rest of the load still serves.
-            Err(e) => admission_failures.push(FailedRequest {
-                id,
-                worker: usize::MAX,
-                error: format!("closed-batch admission rejected: {e}"),
-            }),
-        }
-    }
-    let mut stats = svc.shutdown()?;
-    stats.failed += admission_failures.len();
-    stats.failures.extend(admission_failures);
-    stats.failures.sort_by_key(|f| f.id);
-    ensure!(
-        stats.served + stats.failed == total,
-        "lost responses: {} served + {} failed != {total}",
-        stats.served,
-        stats.failed
-    );
-    let mut responses: Vec<InferenceResponse> = Vec::with_capacity(stats.served);
-    for t in &tickets {
-        // take() moves each response out of its ticket (this wrapper is
-        // the sole waiter), matching the pre-service move semantics.
-        match t.take() {
-            Some(Ok(r)) => responses.push(r),
-            Some(Err(_)) => {} // already reported in stats.failures
-            None => bail!("ticket {} unresolved after shutdown", t.id()),
-        }
-    }
-    responses.sort_by_key(|r| r.id);
-    Ok((responses, stats))
+    let report = svc.run_closed(requests)?;
+    Ok((report.responses, report.stats))
 }
 
 #[cfg(test)]

@@ -79,11 +79,26 @@ pub struct DoorConfig {
     /// the drop is counted in [`DoorStats::idle_disconnects`]. The
     /// timeout can never tear a frame — it fires only between frames.
     pub idle_timeout: Option<Duration>,
+    /// Per-connection in-flight request cap (0 = unlimited, the
+    /// default). A request arriving while the connection already has
+    /// this many admitted-but-unanswered requests is answered with a
+    /// `Shed(InflightCap)` frame instead of queued — one greedy
+    /// pipelining client can no longer fill the service's admission
+    /// queue and starve every other connection. Counted in
+    /// [`DoorStats::inflight_cap_sheds`] (and in the overall shed
+    /// count).
+    pub inflight_cap: usize,
 }
 
 impl DoorConfig {
     pub fn with_idle_timeout(mut self, t: Duration) -> DoorConfig {
         self.idle_timeout = Some(t);
+        self
+    }
+
+    /// Cap each connection's admitted-but-unanswered requests.
+    pub fn with_inflight_cap(mut self, cap: usize) -> DoorConfig {
+        self.inflight_cap = cap;
         self
     }
 }
@@ -96,6 +111,7 @@ pub struct DoorStats {
     requests: AtomicU64,
     responses: AtomicU64,
     sheds: AtomicU64,
+    inflight_cap_sheds: AtomicU64,
     protocol_errors: AtomicU64,
     idle_disconnects: AtomicU64,
 }
@@ -116,9 +132,16 @@ impl DoorStats {
         self.responses.load(Ordering::Relaxed)
     }
 
-    /// Requests answered with a `Shed` frame (queue-full + deadline).
+    /// Requests answered with a `Shed` frame (queue-full + deadline +
+    /// per-connection in-flight cap).
     pub fn sheds(&self) -> u64 {
         self.sheds.load(Ordering::Relaxed)
+    }
+
+    /// Subset of [`DoorStats::sheds`] rejected by the per-connection
+    /// in-flight cap ([`DoorConfig::inflight_cap`]).
+    pub fn inflight_cap_sheds(&self) -> u64 {
+        self.inflight_cap_sheds.load(Ordering::Relaxed)
     }
 
     /// Connections dropped for protocol violations (bad frame, torn
@@ -284,6 +307,10 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
 /// `on_complete` clone fires) closes the writer's channel and ends the
 /// writer thread too.
 fn run_reader(mut stream: TcpStream, shared: &Arc<Shared>, tx: &mpsc::Sender<Outbound>, conn: u64) {
+    // This connection's admitted-but-unanswered count — incremented at
+    // submit, decremented by each completion callback (which may fire
+    // from the collector thread), gating [`DoorConfig::inflight_cap`].
+    let inflight = Arc::new(AtomicU64::new(0));
     loop {
         let idle_by = shared.cfg.idle_timeout.map(|t| Instant::now() + t);
         let body = match proto::read_frame_idle(&mut stream, &shared.stop, idle_by) {
@@ -332,7 +359,7 @@ fn run_reader(mut stream: TcpStream, shared: &Arc<Shared>, tx: &mpsc::Sender<Out
                 return;
             }
         };
-        if !submit_one(shared, tx, msg, conn, t_frame) {
+        if !submit_one(shared, tx, msg, conn, t_frame, &inflight) {
             return;
         }
     }
@@ -360,9 +387,30 @@ fn protocol_error_text(e: &ProtoError) -> String {
 /// Remap, submit, and route one decoded request. Returns `false` when
 /// the connection should close (service closed, or the writer is gone).
 /// `t_frame` is when the request's frame finished arriving — the decode
-/// span start when tracing is on.
-fn submit_one(shared: &Arc<Shared>, tx: &mpsc::Sender<Outbound>, msg: RequestMsg, conn: u64, t_frame: Instant) -> bool {
+/// span start when tracing is on. `inflight` is the connection's
+/// admitted-but-unanswered count for the [`DoorConfig::inflight_cap`]
+/// gate.
+fn submit_one(
+    shared: &Arc<Shared>,
+    tx: &mpsc::Sender<Outbound>,
+    msg: RequestMsg,
+    conn: u64,
+    t_frame: Instant,
+    inflight: &Arc<AtomicU64>,
+) -> bool {
     let cid = msg.id;
+    // Per-connection fairness gate, before the request costs the
+    // service anything: at the cap, answer a typed shed so the client
+    // knows to drain its pipeline (not retry-later, not a deadline
+    // miss).
+    let cap = shared.cfg.inflight_cap as u64;
+    if cap > 0 && inflight.load(Ordering::Relaxed) >= cap {
+        shared.stats.sheds.fetch_add(1, Ordering::Relaxed);
+        shared.stats.inflight_cap_sheds.fetch_add(1, Ordering::Relaxed);
+        return tx
+            .send(Outbound::Shed { id: cid, reason: ShedReason::InflightCap, predicted_us: 0 })
+            .is_ok();
+    }
     let gid = shared.next_id.fetch_add(1, Ordering::Relaxed);
     let mut req = InferenceRequest::new(gid, msg.image);
     req.network = msg.network;
@@ -387,8 +435,11 @@ fn submit_one(shared: &Arc<Shared>, tx: &mpsc::Sender<Outbound>, msg: RequestMsg
     match submitted {
         Ok(ticket) => {
             shared.stats.requests.fetch_add(1, Ordering::Relaxed);
+            inflight.fetch_add(1, Ordering::Relaxed);
             let tx = tx.clone();
+            let inflight = inflight.clone();
             ticket.on_complete(move |r| {
+                inflight.fetch_sub(1, Ordering::Relaxed);
                 // The writer may already be gone (peer disconnected):
                 // the completion then lands in a closed channel, which
                 // is exactly the drain-without-poisoning we want.

@@ -74,6 +74,11 @@ pub enum ShedReason {
     /// The live queue-wait window predicted the request's deadline
     /// cannot be met (`SubmitError::DeadlineShed`).
     Deadline,
+    /// This connection hit its per-connection in-flight cap
+    /// ([`crate::frontdoor::DoorConfig::inflight_cap`]) — drain the
+    /// pipeline before submitting more; other connections are
+    /// unaffected.
+    InflightCap,
 }
 
 impl ShedReason {
@@ -81,6 +86,7 @@ impl ShedReason {
         match self {
             ShedReason::QueueFull => 1,
             ShedReason::Deadline => 2,
+            ShedReason::InflightCap => 3,
         }
     }
 
@@ -88,6 +94,7 @@ impl ShedReason {
         match code {
             1 => Ok(ShedReason::QueueFull),
             2 => Ok(ShedReason::Deadline),
+            3 => Ok(ShedReason::InflightCap),
             _ => Err(ProtoError::BadShedReason(code)),
         }
     }
@@ -621,6 +628,7 @@ mod tests {
             ResponseMsg::Ok { id: 3, argmax: 9, probs: vec![0.25, 0.5, -0.0, f32::MIN_POSITIVE] },
             ResponseMsg::Shed { id: 4, reason: ShedReason::QueueFull, predicted_us: 0 },
             ResponseMsg::Shed { id: 5, reason: ShedReason::Deadline, predicted_us: 1234 },
+            ResponseMsg::Shed { id: 7, reason: ShedReason::InflightCap, predicted_us: 0 },
             ResponseMsg::Failed { id: 6, error: "unknown network \"ghost\"".to_string() },
         ] {
             assert_eq!(decode_response(&encode_response(&msg)).unwrap(), msg);

@@ -15,6 +15,27 @@
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index,
 //! and EXPERIMENTS.md for measured results.
+//!
+//! ## Public facade
+//!
+//! The serving stack reads top-down; the curated re-exports below are
+//! the intended entry points, so most callers never spell out module
+//! paths:
+//!
+//! 1. **Describe & compile** — build a [`net::graph::Network`], attach
+//!    weights, and register it in a [`ModelRepo`] (which runs
+//!    [`compile`] and pins the [`CompiledStream`] artifact, including
+//!    its oracle-modeled cost, [`StreamCost`]).
+//! 2. **Serve** — start a long-lived [`Service`] over the repo
+//!    ([`ServiceConfig`] / [`ServeConfig`], builder-style `with_*`
+//!    tunables throughout), or run a closed batch with
+//!    [`Service::run_closed`].
+//! 3. **Expose** — put a [`FrontDoor`] (TCP line protocol,
+//!    [`DoorConfig`]) in front; talk to it with [`Client`].
+//! 4. **Observe** — scrape [`Service::live_stats`]
+//!    ([`ServiceSnapshot`]), per-layer measured counters
+//!    ([`telemetry::LayerFamily`]), or request-lifecycle traces
+//!    ([`telemetry::Hub`]).
 
 pub mod accel;
 pub mod algos;
@@ -33,3 +54,12 @@ pub mod resources;
 pub mod runtime;
 pub mod service;
 pub mod telemetry;
+
+pub use compiler::{compile, CompiledStream, LayerCost, ModelRepo, Residency, StreamCost};
+pub use coordinator::{
+    BatchPolicy, InferenceRequest, InferenceResponse, ServeConfig, ServeStats,
+};
+pub use frontdoor::client::Client;
+pub use frontdoor::{DoorConfig, DoorStats, FrontDoor};
+pub use service::{ClosedReport, Service, ServiceConfig, SubmitError, Ticket};
+pub use telemetry::{NetworkSnapshot, ServiceSnapshot, WorkerSnapshot};

@@ -4,6 +4,9 @@
 //!
 //! * `infer`      — run a network through the simulated device
 //! * `commands`   — print the 96-bit command stream (Table 2) for a net
+//! * `explain`    — per-layer modeled-vs-measured table: the compiler's
+//!   oracle cost model against the device counters of a real forward
+//!   (exits nonzero if any layer mismatches)
 //! * `resources`  — resource model (Table 3) for a configuration
 //! * `timing`     — §5 timing model for a network/parallelism/link
 //! * `serve`      — drive the long-lived serving service from a
@@ -182,6 +185,87 @@ fn main() -> Result<()> {
             for (e, plan) in stream.epochs.iter().enumerate() {
                 println!("  epoch {e}: layers {}..{}", plan.start, plan.start + plan.len);
             }
+        }
+        "explain" => {
+            // Oracle cost model vs the device: compile the network, run
+            // one real cold single-image forward with the layer tape
+            // armed, and print the modeled-vs-measured counters per
+            // layer. The columns must agree exactly — the same contract
+            // the `cost_model` property tests pin, here as a CLI so a
+            // drifted model is visible at a glance (and in CI smoke).
+            let net = load_net(&args.flags)?;
+            let seed: u64 =
+                args.flags.get("weights-seed").map(|v| v.parse()).transpose()?.unwrap_or(1);
+            let blobs = synthesize_weights(&net, seed);
+            let stream =
+                fusionaccel::compiler::compile(&net, fusionaccel::compiler::fnv1a(&blobs.to_bytes()))?;
+            let (side, ch) = net.out_shape(0);
+            let image = Tensor::from_vec(
+                side as usize,
+                side as usize,
+                ch as usize,
+                vec![0.125; side as usize * side as usize * ch as usize],
+            );
+            let link = UsbLink::usb3_frontpanel();
+            let mut dev = StreamAccelerator::new(link);
+            dev.begin_layer_tape();
+            HostDriver::new(&mut dev).forward_compiled(&stream, &blobs, &image)?;
+            let measured = dev.take_layer_deltas();
+            let modeled = &stream.modeled;
+            anyhow::ensure!(
+                modeled.layers.len() == measured.len(),
+                "layer count mismatch: modeled {} vs measured {}",
+                modeled.layers.len(),
+                measured.len()
+            );
+            println!("network {} — modeled (m) vs measured (d) device counters, cold, batch 1", net.name);
+            println!(
+                "preamble (epoch-0 commands, before the first layer mark): {} bytes, {} txn(s)",
+                stream.modeled.preamble.link_bytes, stream.modeled.preamble.link_txns
+            );
+            let mut rows = Vec::new();
+            let mut exact = true;
+            for (m, d) in modeled.layers.iter().zip(&measured) {
+                let ok = m.passes == d.passes
+                    && m.cycles == d.cycles
+                    && m.weight_loads == d.weight_loads
+                    && m.weight_reuses == d.weight_reuses
+                    && m.link_bytes == d.link_bytes;
+                exact &= ok;
+                rows.push(vec![
+                    m.name.clone(),
+                    format!("{}/{}", m.passes, d.passes),
+                    format!("{}/{}", m.cycles, d.cycles),
+                    format!("{}/{}", m.weight_loads, d.weight_loads),
+                    format!("{}/{}", m.weight_reuses, d.weight_reuses),
+                    format!("{}/{}", m.link_bytes, d.link_bytes),
+                    format!("{:.3}", 1e3 * m.seconds(&link)),
+                    if ok { "ok".to_string() } else { "MISMATCH".to_string() },
+                ]);
+            }
+            benchkit::table(
+                &[
+                    "layer",
+                    "passes m/d",
+                    "cycles m/d",
+                    "w-loads m/d",
+                    "w-reuses m/d",
+                    "link bytes m/d",
+                    "model ms",
+                    "exact",
+                ],
+                &rows,
+            );
+            let total = modeled.total();
+            println!(
+                "stream total   {} passes, {} cycles, {} link bytes — modeled {:.3} s over this link",
+                total.passes,
+                total.cycles,
+                total.link_bytes,
+                modeled.seconds(&link)
+            );
+            anyhow::ensure!(exact, "cost model drifted from the device — see MISMATCH rows above");
+            println!("cost model is exact for {} (every layer matched)", net.name);
         }
         "serve" => {
             // Long-lived service driven from a synthetic request trace:
@@ -451,6 +535,8 @@ fn main() -> Result<()> {
                  \x20 infer     --net squeezenet|alexnet|googlenet|<prototxt> [--weights f.bin] [--image f.bin]\n\
                  \x20 commands  --net ...          print the Table 2 command stream\n\
                  \x20 compile   --net ... [--weights-seed 1]   lower to a CSB artifact (passes, epochs, id)\n\
+                 \x20 explain   --net ... [--weights-seed 1]   modeled-vs-measured per-layer cost table\n\
+                 \x20           (oracle cost model against real device counters; nonzero exit on drift)\n\
                  \x20 resources --parallelism 8 --precision 16\n\
                  \x20 timing    --net ... --parallelism 8 --link usb3|pcie\n\
                  \x20 serve     [--net micro|squeezenet|...] [--requests 64] [--workers 2] [--batch 4]\n\

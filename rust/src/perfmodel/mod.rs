@@ -8,6 +8,16 @@
 //! analytically (validated against the actual driver's USB counters in
 //! `rust/tests/`); engine cycles use the closed form validated against
 //! the cycle-accurate simulator in [`crate::engine::timed`].
+//!
+//! This module answers paper-scale what-ifs (parallelism, link swaps)
+//! with closed forms. Its exact counterpart is
+//! [`crate::compiler::cost`]: an oracle that predicts the *measured
+//! counters* of a compiled stream (passes, weight loads, link
+//! bytes/transactions) loop for loop, pinned `modeled == measured` by
+//! property tests, and used by the layout argmin and the serving
+//! cold-start predictor. Reach for `compiler::cost` when the number
+//! must match the device model exactly; reach for this module when
+//! sweeping hardware parameters the device model does not have.
 
 use crate::hw::clock::ClockDomain;
 use crate::hw::usb::UsbLink;

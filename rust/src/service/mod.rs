@@ -66,7 +66,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::compiler::{LruCache, ModelRepo};
 use crate::coordinator::metrics::FailedRequest;
@@ -117,12 +117,13 @@ pub enum SubmitError {
     /// among in-flight requests (they key the completion routing).
     DuplicateId,
     /// The request carried a deadline ([`Service::submit_deadline`])
-    /// that *this network's* live completion windows say cannot be met:
-    /// predicted turnaround (the network's recent p90 queue wait + its
-    /// recent median service time) exceeds the budget, so the request
-    /// is turned away *before* burning an engine pass on an answer the
-    /// caller would discard. Windows are per network — a slow network's
-    /// congestion never sheds a fast network's feasible deadlines.
+    /// that *this network's* predicted turnaround says cannot be met:
+    /// the network's recent p90 queue wait + recent median service time
+    /// (or, before any completion, its compile-time modeled cold cost)
+    /// exceeds the budget, so the request is turned away *before*
+    /// burning an engine pass on an answer the caller would discard.
+    /// Windows are per network — a slow network's congestion never
+    /// sheds a fast network's feasible deadlines.
     DeadlineShed {
         /// The turnaround the admission model predicted, in µs.
         predicted_us: u64,
@@ -147,6 +148,15 @@ impl std::error::Error for SubmitError {}
 /// How one request ended: the streamed response, or the failure that
 /// would have landed in [`ServeStats::failures`].
 pub type TicketResult = Result<InferenceResponse, FailedRequest>;
+
+/// Everything a closed-batch run ([`Service::run_closed`]) returns:
+/// successful responses sorted by request id (failed requests appear in
+/// `stats.failures`, not here) and the cumulative run statistics.
+#[derive(Clone, Debug)]
+pub struct ClosedReport {
+    pub responses: Vec<InferenceResponse>,
+    pub stats: ServeStats,
+}
 
 /// Callback a [`Ticket`] waiter registers to be invoked (exactly once)
 /// when the result lands — how the network front door streams each
@@ -336,23 +346,33 @@ struct NetStat {
     service: RecentWindow,
     /// Recent forwarded turnarounds (queue wait + service).
     latency: RecentWindow,
+    /// Modeled cold single-image service seconds over the service link
+    /// ([`crate::compiler::CompiledStream::modeled`]) — the predictor's
+    /// quote until the first measured completion lands.
+    prior: f64,
 }
 
 impl NetStat {
-    fn new() -> NetStat {
+    fn new(prior: f64) -> NetStat {
         NetStat {
             served: 0,
             deadline_sheds: 0,
             queue_waits: RecentWindow::new(RECENT_WINDOW),
             service: RecentWindow::new(RECENT_WINDOW),
             latency: RecentWindow::new(RECENT_WINDOW),
+            prior,
         }
     }
 
     /// Predicted turnaround for this network, in seconds: recent p90
-    /// queue wait + recent median service time. 0.0 with no evidence —
-    /// shedding requires measurements, not priors.
+    /// queue wait + recent median service time. With no measured
+    /// completions yet, the compile-time modeled service cost stands in
+    /// — a cold network is priced by the oracle model instead of being
+    /// waved through on zero evidence.
     fn predicted(&self) -> f64 {
+        if self.service.is_empty() {
+            return self.prior;
+        }
         self.queue_waits.quantile(0.9) + self.service.quantile(0.5)
     }
 }
@@ -438,6 +458,11 @@ struct Inner {
     repo: Arc<ModelRepo>,
     sched: Scheduler,
     cfg: ServiceConfig,
+    /// Modeled cold single-image seconds per registered network, over
+    /// the service link — computed once at start from each artifact's
+    /// [`crate::compiler::CompiledStream::modeled`] cost; the deadline
+    /// predictor's prior until measured completions exist.
+    priors: HashMap<String, f64>,
     state: Mutex<State>,
     /// Signalled when outstanding drops (or the service closes) — what
     /// [`Service::submit_wait`] parks on.
@@ -447,6 +472,14 @@ struct Inner {
     /// costs nothing until [`crate::telemetry::Hub::set_tracing`] turns
     /// tracing on.
     hub: Arc<Hub>,
+}
+
+impl Inner {
+    /// The modeled cold-service prior for `name` (0.0 for unregistered
+    /// names — nothing to model).
+    fn prior_for(&self, name: &str) -> f64 {
+        self.priors.get(name).copied().unwrap_or(0.0)
+    }
 }
 
 /// A running (or paused) serving service. See the module docs for the
@@ -491,10 +524,20 @@ impl Service {
                 .collect(),
             ..Default::default()
         };
+        let link = cfg.serve.link;
+        let priors: HashMap<String, f64> = repo
+            .names()
+            .into_iter()
+            .filter_map(|n| {
+                let s = repo.get(&n)?.stream.modeled.seconds(&link);
+                Some((n, s))
+            })
+            .collect();
         let inner = Arc::new(Inner {
             repo,
             sched: Scheduler::new(),
             cfg: *cfg,
+            priors,
             state: Mutex::new(State {
                 closed: false,
                 outstanding: 0,
@@ -604,27 +647,39 @@ impl Service {
     /// median service time), it is rejected with
     /// [`SubmitError::DeadlineShed`] instead of queued — the engine
     /// pass goes to a request that can still make its deadline. A
-    /// network with no completions yet predicts 0 and never sheds:
-    /// shedding requires evidence, not priors. Cache hits are exempt —
-    /// they cost no queue wait and are served even under overload.
+    /// network with no completions yet is priced by its artifact's
+    /// modeled cold cost ([`crate::compiler::CompiledStream::modeled`])
+    /// instead of being waved through on zero evidence; measured
+    /// windows take over from the first real completion. Cache hits
+    /// are exempt — they cost no queue wait and are served even under
+    /// overload.
     pub fn submit_deadline(&self, req: InferenceRequest, budget: Duration) -> Result<Ticket, SubmitError> {
         self.admit(req, false, Some(budget))
     }
 
     /// The worst turnaround the deadline-shed predictor would quote
-    /// right now across all networks (seconds) — the quote of the most
-    /// congested network. 0.0 on a cold service.
+    /// right now across all registered networks (seconds) — the quote
+    /// of the most congested network. On a cold service this is the
+    /// worst *modeled* cold cost, not 0.0: the compiler's oracle model
+    /// prices networks before any request has run.
     pub fn predicted_wait(&self) -> f64 {
         let st = self.inner.state.lock().unwrap();
-        st.per_network.values().map(NetStat::predicted).fold(0.0, f64::max)
+        self.inner
+            .priors
+            .iter()
+            .map(|(name, &prior)| st.per_network.get(name).map_or(prior, NetStat::predicted))
+            .fold(0.0, f64::max)
     }
 
     /// The predictor's quote for one network (seconds): its recent p90
-    /// queue wait + recent median service time. 0.0 when the network
-    /// has no completion evidence yet.
+    /// queue wait + recent median service time; before any completion,
+    /// the artifact's modeled cold single-image cost over the service
+    /// link. 0.0 only for unregistered names.
     pub fn predicted_wait_for(&self, network: &str) -> f64 {
         let st = self.inner.state.lock().unwrap();
-        st.per_network.get(network).map_or(0.0, NetStat::predicted)
+        st.per_network
+            .get(network)
+            .map_or_else(|| self.inner.prior_for(network), NetStat::predicted)
     }
 
     /// The telemetry hub shared with the worker pool: trace rings,
@@ -721,7 +776,10 @@ impl Service {
                 if let Some(hit) = st.cache.get(k) {
                     st.stats.result_cache_hits += 1;
                     st.stats.served += 1;
-                    st.per_network.entry(name.clone()).or_insert_with(NetStat::new).served += 1;
+                    st.per_network
+                        .entry(name.clone())
+                        .or_insert_with(|| NetStat::new(inner.prior_for(&name)))
+                        .served += 1;
                     record_sample(&mut st, 0.0, 0.0);
                     trace_admit(&req, t_admit, Verdict::CacheHit);
                     let resp = InferenceResponse {
@@ -742,13 +800,21 @@ impl Service {
             }
             // Deadline gate (after the cache check — a hit needs no
             // queue slot and no forward, so its deadline is always met).
-            // The quote comes from *this network's* windows: a network
-            // with no completions yet predicts 0 and is admitted.
+            // The quote comes from *this network's* windows; with no
+            // completions yet, from the artifact's modeled cold cost —
+            // a budget below even the modeled forward is hopeless and
+            // sheds before burning the network's first engine pass.
             if let Some(budget) = deadline {
-                let predicted = st.per_network.get(&name).map_or(0.0, NetStat::predicted);
+                let predicted = st
+                    .per_network
+                    .get(&name)
+                    .map_or_else(|| inner.prior_for(&name), NetStat::predicted);
                 if predicted > budget.as_secs_f64() {
                     st.stats.deadline_sheds += 1;
-                    st.per_network.entry(name.clone()).or_insert_with(NetStat::new).deadline_sheds += 1;
+                    st.per_network
+                        .entry(name.clone())
+                        .or_insert_with(|| NetStat::new(inner.prior_for(&name)))
+                        .deadline_sheds += 1;
                     trace_admit(&req, t_admit, Verdict::DeadlineShed);
                     return Err(SubmitError::DeadlineShed { predicted_us: (predicted * 1e6) as u64 });
                 }
@@ -835,6 +901,68 @@ impl Service {
         Ok(stats)
     }
 
+    /// Run a **closed batch** through this service and consume it: admit
+    /// every request, close the queue, drain the pool, and collect the
+    /// responses — the one entry point behind the historical `serve`,
+    /// `serve_batched`, and `serve_multi` functions (now thin shims over
+    /// this).
+    ///
+    /// Call it on a *paused* service ([`Service::start_paused`]) for the
+    /// classic closed-batch semantics: the whole load queues before any
+    /// worker pops, so micro-batch formation is deterministic. On an
+    /// already-open service it degenerates to submit-all + [`shutdown`]
+    /// (batch formation then races completions, as live traffic does).
+    ///
+    /// Responses come back sorted by id; requests that failed (unknown
+    /// network, forward error, duplicate outstanding id, queue-capacity
+    /// rejection) are counted and detailed in `stats.failures` instead —
+    /// every submitted request is accounted exactly once, or this
+    /// errors.
+    ///
+    /// [`shutdown`]: Service::shutdown
+    pub fn run_closed(self, requests: Vec<InferenceRequest>) -> Result<ClosedReport> {
+        let total = requests.len();
+        let mut tickets = Vec::with_capacity(total);
+        let mut admission_failures: Vec<FailedRequest> = Vec::new();
+        for req in requests {
+            let id = req.id;
+            match self.submit(req) {
+                Ok(t) => tickets.push(t),
+                // Admission errors (duplicate in-flight id, bounded
+                // queue at capacity) fail that request alone — the rest
+                // of the load still serves.
+                Err(e) => admission_failures.push(FailedRequest {
+                    id,
+                    worker: usize::MAX,
+                    error: format!("closed-batch admission rejected: {e}"),
+                }),
+            }
+        }
+        let mut stats = self.shutdown()?;
+        stats.failed += admission_failures.len();
+        stats.failures.extend(admission_failures);
+        stats.failures.sort_by_key(|f| f.id);
+        ensure!(
+            stats.served + stats.failed == total,
+            "lost responses: {} served + {} failed != {total}",
+            stats.served,
+            stats.failed
+        );
+        let mut responses: Vec<InferenceResponse> = Vec::with_capacity(stats.served);
+        for t in &tickets {
+            // take() moves each response out of its ticket (this runner
+            // is each ticket's sole waiter), so collection never deep-
+            // clones a probability vector.
+            match t.take() {
+                Some(Ok(r)) => responses.push(r),
+                Some(Err(_)) => {} // already reported in stats.failures
+                None => bail!("ticket {} unresolved after shutdown", t.id()),
+            }
+        }
+        responses.sort_by_key(|r| r.id);
+        Ok(ClosedReport { responses, stats })
+    }
+
     /// Flip to closed and close the scheduler under one state lock, so
     /// admission can never push into a closed queue.
     fn begin_close(&self) {
@@ -887,7 +1015,10 @@ fn collect(inner: &Inner, rx: mpsc::Receiver<WorkerEvent>) {
                 let turnaround = r.queue_wait_seconds + r.service_seconds;
                 record_sample(&mut st, turnaround, r.queue_wait_seconds);
                 {
-                    let net = st.per_network.entry(r.network.clone()).or_insert_with(NetStat::new);
+                    let net = st
+                        .per_network
+                        .entry(r.network.clone())
+                        .or_insert_with(|| NetStat::new(inner.prior_for(&r.network)));
                     net.served += 1;
                     net.queue_waits.push(r.queue_wait_seconds);
                     net.service.push(r.service_seconds);
@@ -1082,28 +1213,36 @@ mod tests {
     }
 
     #[test]
-    fn deadline_shed_needs_evidence_then_engages() {
+    fn deadline_gate_prices_cold_networks_from_the_model() {
         let svc = Service::start(tiny_repo(), &cfg(1, 1)).unwrap();
         let mut rng = Rng::new(6);
-        // Cold service: no completion evidence, so even a nanosecond
-        // budget is admitted (the predictor quotes 0).
-        assert_eq!(svc.predicted_wait(), 0.0);
-        let t = svc.submit_deadline(req(0, &mut rng), Duration::from_nanos(1)).unwrap();
+        // Cold service: no completion evidence, but the artifact's
+        // modeled cost already prices the network — the quote is the
+        // modeled cold forward, not zero.
+        let prior = svc.predicted_wait_for("tiny");
+        assert!(prior > 0.0, "modeled prior replaces the zero-evidence cold start");
+        assert_eq!(svc.predicted_wait(), prior, "cold global quote is the worst prior");
+        // A nanosecond budget is hopeless even cold: shed up front, no
+        // engine pass burned.
+        let err = svc.submit_deadline(req(0, &mut rng), Duration::from_nanos(1)).unwrap_err();
+        assert!(matches!(err, SubmitError::DeadlineShed { predicted_us } if predicted_us > 0));
+        // A generous budget is admitted cold.
+        let t = svc.submit_deadline(req(1, &mut rng), Duration::from_secs(3600)).unwrap();
         assert!(t.wait().is_ok());
-        // Warm the windows with real forwards; service time is nonzero,
-        // so the predicted turnaround now exceeds a nanosecond budget.
-        for i in 1..8 {
+        // Warm the windows with real forwards: measured evidence takes
+        // over from the prior, and the gate keeps shedding hopeless
+        // budgets while serving feasible ones.
+        for i in 2..8 {
             svc.submit(req(i, &mut rng)).unwrap().wait().unwrap();
         }
         assert!(svc.predicted_wait() > 0.0);
         let err = svc.submit_deadline(req(100, &mut rng), Duration::from_nanos(1)).unwrap_err();
         assert!(matches!(err, SubmitError::DeadlineShed { .. }));
-        // A generous budget is still admitted.
         let t = svc.submit_deadline(req(101, &mut rng), Duration::from_secs(3600)).unwrap();
         assert!(t.wait().is_ok());
         let stats = svc.shutdown().unwrap();
-        assert_eq!(stats.deadline_sheds, 1);
-        assert_eq!(stats.served, 9);
+        assert_eq!(stats.deadline_sheds, 2);
+        assert_eq!(stats.served, 8);
     }
 
     /// "tiny" (8×8 input, 8 filters) plus "heavy" (32×32 input, 16

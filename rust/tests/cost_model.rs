@@ -1,0 +1,175 @@
+//! The oracle cost model's contract (PR 8 tentpole): for every
+//! supported network shape, both drivers, batch sizes 1/2/4, and both
+//! residency states, `compiler::cost::stream_cost` predicts the device
+//! counters **exactly** — per-layer tape deltas (passes, cycles, weight
+//! loads/reuses, link bytes) and whole-forward aggregates (EngineStats
+//! deltas, USB byte/transaction counters, command loads/reuses).
+//!
+//! The zoo spans the three conv granularities (Row, Pixel,
+//! ChannelSplit), both pool ops, a weight-resident plan and a
+//! non-resident one, and a multi-epoch command stream — so every branch
+//! of the model is pinned against the device, not against itself.
+
+use fusionaccel::accel::stream::StreamAccelerator;
+use fusionaccel::compiler::{compile, fnv1a, stream_cost, CompiledStream, Residency};
+use fusionaccel::host::batch::forward_batch_compiled;
+use fusionaccel::host::driver::HostDriver;
+use fusionaccel::host::gemm::ConvGranularity;
+use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::alexnet::fc6_tail;
+use fusionaccel::net::graph::Network;
+use fusionaccel::net::layer::LayerSpec;
+use fusionaccel::net::squeezenet::micro_squeezenet;
+use fusionaccel::net::tensor::{Tensor, TensorF32};
+use fusionaccel::net::weights::{synthesize_weights, Blobs};
+use fusionaccel::prop::Rng;
+
+fn random_image(rng: &mut Rng, net: &Network) -> TensorF32 {
+    let (side, ch) = net.out_shape(0);
+    let (s, c) = (side as usize, ch as usize);
+    Tensor::from_vec(s, s, c, (0..s * s * c).map(|_| rng.normal(1.0)).collect())
+}
+
+/// k=5 over 96 channels on a 20-wide input: a row slice overflows the
+/// data cache but one 5×5 window fits → Pixel granularity.
+fn pixel_net() -> Network {
+    let mut net = Network::new("pix");
+    let inp = net.input(20, 96);
+    let c = net.engine(LayerSpec::conv("cbig", 5, 1, 2, 20, 96, 12, 0), inp);
+    net.softmax("prob", c);
+    net
+}
+
+/// 350 one-by-one convs: overflows the 341-command CMDFIFO into two
+/// reload epochs — the multi-epoch command-attribution path (epoch 0
+/// in the preamble, epoch 1 in layer 340's delta, both reloaded warm).
+fn deep_net() -> Network {
+    let mut net = Network::new("deep");
+    let inp = net.input(4, 8);
+    let mut cur = inp;
+    for i in 0..350 {
+        cur = net.engine(LayerSpec::conv(&format!("c{i}"), 1, 1, 0, 4, 8, 8, 0), cur);
+    }
+    net.softmax("prob", cur);
+    net
+}
+
+/// One cold forward then one warm repeat on the same device, at `batch`,
+/// each compared layer-for-layer and counter-for-counter to the model.
+fn check_batch(stream: &CompiledStream, blobs: &Blobs, images: &[TensorF32], batch: usize) {
+    let name = &stream.net.name;
+    let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+    for residency in [Residency::Cold, Residency::Warm] {
+        let stats0 = dev.stats.clone();
+        let bytes0 = dev.usb.total_bytes();
+        let txns0 = dev.usb.total_txns();
+        dev.begin_layer_tape();
+        if batch == 1 {
+            HostDriver::new(&mut dev).forward_compiled(stream, blobs, &images[0]).unwrap();
+        } else {
+            forward_batch_compiled(&mut dev, stream, blobs, &images[..batch]).unwrap();
+        }
+        let measured = dev.take_layer_deltas();
+        let modeled = stream_cost(stream, batch, residency);
+        let ctx = format!("{name} batch {batch} {residency:?}");
+
+        // Per-layer: the tape delta rows, field for field.
+        let want: Vec<(String, u64, u64, u64, u64, u64)> = modeled
+            .layers
+            .iter()
+            .map(|m| (m.name.clone(), m.passes, m.cycles, m.weight_loads, m.weight_reuses, m.link_bytes))
+            .collect();
+        let got: Vec<(String, u64, u64, u64, u64, u64)> = measured
+            .iter()
+            .map(|d| (d.name.clone(), d.passes, d.cycles, d.weight_loads, d.weight_reuses, d.link_bytes))
+            .collect();
+        assert_eq!(want, got, "{ctx}: per-layer tape deltas");
+
+        // Whole-forward: engine counters and link counters, including
+        // the epoch-0 command preamble that no tape delta sees.
+        let total = modeled.total();
+        assert_eq!(total.passes, dev.stats.passes - stats0.passes, "{ctx}: passes");
+        assert_eq!(total.cycles, dev.stats.cycles - stats0.cycles, "{ctx}: cycles");
+        assert_eq!(
+            total.weight_loads,
+            dev.stats.weight_loads - stats0.weight_loads,
+            "{ctx}: weight_loads"
+        );
+        assert_eq!(
+            total.weight_reuses,
+            dev.stats.weight_reuses - stats0.weight_reuses,
+            "{ctx}: weight_reuses"
+        );
+        assert_eq!(total.link_bytes, dev.usb.total_bytes() - bytes0, "{ctx}: link bytes");
+        assert_eq!(total.link_txns, dev.usb.total_txns() - txns0, "{ctx}: link txns");
+        assert_eq!(
+            modeled.command_loads,
+            dev.stats.command_loads - stats0.command_loads,
+            "{ctx}: command_loads"
+        );
+        assert_eq!(
+            modeled.command_reuses,
+            dev.stats.command_reuses - stats0.command_reuses,
+            "{ctx}: command_reuses"
+        );
+    }
+}
+
+fn check_net(net: Network, seed: u64) {
+    let blobs = synthesize_weights(&net, seed);
+    let stream = compile(&net, fnv1a(&blobs.to_bytes())).unwrap();
+    // The artifact's stamped prior is the model's cold single-image cost.
+    assert_eq!(stream.modeled, stream_cost(&stream, 1, Residency::Cold), "{}: stamped prior", net.name);
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let images: Vec<TensorF32> = (0..4).map(|_| random_image(&mut rng, &net)).collect();
+    for batch in [1usize, 2, 4] {
+        check_batch(&stream, &blobs, &images, batch);
+    }
+}
+
+/// All-Row convs, both pool ops, weight-resident plan: the warm repeat
+/// replays commands AND weights from the device shadows.
+#[test]
+fn modeled_equals_measured_row_net_with_pools() {
+    let net = micro_squeezenet();
+    let stream = compile(&net, 1).unwrap();
+    assert!(stream.weight_plan.is_resident(), "micro net must exercise the resident-plan path");
+    assert!(stream.granularities.iter().flatten().all(|g| *g == ConvGranularity::Row));
+    check_net(net, 0xC057_0001);
+}
+
+/// Pixel granularity (row slice overflows the data cache).
+#[test]
+fn modeled_equals_measured_pixel_net() {
+    let net = pixel_net();
+    let stream = compile(&net, 1).unwrap();
+    assert_eq!(stream.granularities[0], Some(ConvGranularity::Pixel));
+    check_net(net, 0xC057_0002);
+}
+
+/// ChannelSplit (fc6's 6×6 window over 256 channels) plus Row tails, on
+/// a plan too big to stay resident: the warm repeat re-pays every weight
+/// super-block, and the model knows it.
+#[test]
+fn modeled_equals_measured_channel_split_net() {
+    let net = fc6_tail(16, 10);
+    let stream = compile(&net, 1).unwrap();
+    assert!(!stream.weight_plan.is_resident(), "fc6 tail must exercise the non-resident path");
+    assert_eq!(stream.granularities[0], Some(ConvGranularity::ChannelSplit));
+    check_net(net, 0xC057_0003);
+}
+
+/// Two reload epochs: epoch 0's command bytes land in the modeled
+/// preamble (outside every tape delta), epoch 1's in the last layer of
+/// epoch 0 — and a warm repeat reloads both (the one-slot shadow key
+/// rotates).
+#[test]
+fn modeled_equals_measured_multi_epoch_stream() {
+    let net = deep_net();
+    let stream = compile(&net, 1).unwrap();
+    assert_eq!(stream.epochs.len(), 2);
+    let warm = stream_cost(&stream, 1, Residency::Warm);
+    assert_eq!(warm.command_loads, 2, "multi-epoch streams reload commands even warm");
+    assert!(warm.preamble.link_bytes > 0);
+    check_net(net, 0xC057_0004);
+}

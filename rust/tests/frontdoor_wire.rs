@@ -334,6 +334,63 @@ fn queue_full_burst_sheds_on_the_wire() {
     assert_eq!(stats.admission_rejections, shed);
 }
 
+/// Satellite (PR 8): the per-connection in-flight cap over the wire — a
+/// greedy pipelining connection is clipped to its cap with
+/// `Shed(InflightCap)` frames (never touching the admission queue),
+/// while a polite second connection on the same door is served
+/// untouched.
+#[test]
+fn inflight_cap_clips_greedy_pipelining_connection() {
+    let net = heavy_net();
+    // Queue big enough that the only shed reason in play is the cap.
+    let cfg =
+        ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1)).with_queue_capacity(64);
+    let mut repo = ModelRepo::new();
+    repo.register(net.clone(), synthesize_weights(&net, 0xCA9)).unwrap();
+    let svc = Arc::new(Service::start(Arc::new(repo), &cfg).unwrap());
+    let door = FrontDoor::bind_with_config(
+        svc.clone(),
+        "127.0.0.1:0",
+        DoorConfig::default().with_inflight_cap(1),
+    )
+    .unwrap();
+    let addr = door.local_addr();
+    let mut rng = Rng::new(0xCA91);
+
+    const BURST: usize = 12;
+    let mut greedy = Client::connect(addr).unwrap();
+    for i in 0..BURST {
+        greedy.send(&RequestMsg::new(i as u64, image(&net, &mut rng))).unwrap();
+    }
+    let (mut ok, mut capped) = (0usize, 0usize);
+    for _ in 0..BURST {
+        match greedy.recv().unwrap().expect("every request is answered") {
+            ResponseMsg::Ok { .. } => ok += 1,
+            ResponseMsg::Shed { reason, predicted_us, .. } => {
+                assert_eq!(reason, ShedReason::InflightCap);
+                assert_eq!(predicted_us, 0, "cap sheds quote no turnaround");
+                capped += 1;
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+    assert_eq!(ok + capped, BURST);
+    assert!(ok >= 1, "the first request is always under the cap");
+    assert!(capped >= 1, "a 12-deep pipeline against a cap of 1 must clip");
+
+    // A polite (one-at-a-time) connection on the same door never hits
+    // the cap — the count is per connection, not per door.
+    let mut polite = Client::connect(addr).unwrap();
+    let resp = polite.request(&RequestMsg::new(0, image(&net, &mut rng))).unwrap();
+    assert!(matches!(resp, ResponseMsg::Ok { id: 0, .. }));
+
+    assert_eq!(door.stats().inflight_cap_sheds(), capped as u64);
+    assert_eq!(door.stats().sheds(), capped as u64, "cap sheds count into the overall shed total");
+    let stats = teardown(svc, door);
+    assert_eq!(stats.served as usize, ok + 1);
+    assert_eq!(stats.failed, 0);
+}
+
 /// An unknown network travels back as a per-request `Failed` frame (the
 /// connection stays usable — it is a request error, not a protocol
 /// error).
