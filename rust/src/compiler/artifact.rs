@@ -20,6 +20,7 @@ use crate::net::layer::LayerSpec;
 use super::cost;
 use super::layout;
 use super::passes::{self, PassReport};
+use super::verify::{self, SplitPlan};
 
 /// FNV-1a 64-bit over a byte stream — the artifact fingerprint hash.
 /// Chosen for determinism and zero dependencies, not cryptography: ids
@@ -176,6 +177,18 @@ pub struct CompiledStream {
     ///
     /// [`Residency::Cold`]: super::cost::Residency::Cold
     pub modeled: cost::StreamCost,
+    /// The explicit channel-split partial-bias protocol per engine layer
+    /// (indexed like `granularities`; `None` for non-split layers). See
+    /// [`super::verify::plan_splits`] — recorded on the artifact so the
+    /// protocol is statically checkable, not implicit in driver loops.
+    pub split_plans: Vec<Option<SplitPlan>>,
+    /// Verification seal: [`super::verify::artifact_seal`] of this
+    /// artifact's content, stamped by [`compile`] after a clean
+    /// [`super::verify::verify`] run. `0` means *unverified* — the
+    /// serve-time gate ([`super::registry::ModelRepo::serveable`])
+    /// refuses such artifacts, as it does any whose content no longer
+    /// matches the stamp.
+    pub seal: u64,
 }
 
 impl CompiledStream {
@@ -203,12 +216,15 @@ impl CompiledStream {
     }
 }
 
-/// Lower `net` into a [`CompiledStream`]: validate, run the pass
-/// pipeline ([`super::passes`]), validate again, schedule epochs, and
-/// fingerprint. `weights_id` is the identity of the weight set the
-/// stream will run against (see [`super::registry::ModelRepo`], which
-/// derives it from the FAWB bytes).
-pub fn compile(net: &Network, weights_id: u64) -> Result<CompiledStream> {
+/// Lower `net` into a [`CompiledStream`] *without* verifying it:
+/// validate the graph, run the pass pipeline ([`super::passes`]),
+/// validate again, schedule epochs, and fingerprint. The result carries
+/// `seal == 0` (unverified) — the serving stack will refuse it. This
+/// entry point exists for the verifier's own callers (`lint` wants the
+/// report even when compilation would be rejected; the mutation harness
+/// wants raw artifacts to corrupt); everything else goes through
+/// [`compile`].
+pub fn compile_unverified(net: &Network, weights_id: u64) -> Result<CompiledStream> {
     net.check().map_err(anyhow::Error::msg)?;
     let source_fingerprint = graph_fingerprint(net);
     let (optimized, report) = passes::run_pipeline(net);
@@ -217,6 +233,7 @@ pub fn compile(net: &Network, weights_id: u64) -> Result<CompiledStream> {
     let id = format!("{:016x}", combine(graph_fingerprint(&optimized), weights_id));
     let weight_plan = WeightPlan::plan(&id, &optimized.engine_layers());
     let granularities = layout::plan_granularities(&optimized);
+    let split_plans = verify::plan_splits(&optimized, &granularities);
     let modeled = cost::model_stream(
         &optimized,
         &epochs,
@@ -235,7 +252,33 @@ pub fn compile(net: &Network, weights_id: u64) -> Result<CompiledStream> {
         weight_plan,
         granularities,
         modeled,
+        split_plans,
+        seal: 0,
     })
+}
+
+/// Lower `net` into a verified [`CompiledStream`]. `weights_id` is the
+/// identity of the weight set the stream will run against (see
+/// [`super::registry::ModelRepo`], which derives it from the FAWB
+/// bytes). The artifact is statically verified ([`super::verify`])
+/// before it is returned: any Error-severity finding rejects the
+/// compilation, and a clean artifact is stamped with its verification
+/// seal so the serving stack can prove later that *this exact content*
+/// passed.
+pub fn compile(net: &Network, weights_id: u64) -> Result<CompiledStream> {
+    let mut cs = compile_unverified(net, weights_id)?;
+    let findings = verify::verify(&cs);
+    let errors = findings.errors();
+    if !errors.is_empty() {
+        anyhow::bail!(
+            "compiled stream for {:?} fails static verification ({} error(s)):\n{}",
+            net.name,
+            errors.len(),
+            findings.render()
+        );
+    }
+    cs.seal = verify::artifact_seal(&cs);
+    Ok(cs)
 }
 
 #[cfg(test)]

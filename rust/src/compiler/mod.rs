@@ -31,6 +31,14 @@
 //!    granularity per conv, and the modeled cost rides on the artifact
 //!    so the serving tier can price cold networks before any request
 //!    has run.
+//! 5. **Verification** ([`verify`]) — a static analyzer walks every
+//!    compiled artifact with an abstract machine model and proves the
+//!    hardware invariants (cache bounds, epoch tiling, RESFIFO safety,
+//!    the channel-split partial-bias protocol, cost-model consistency)
+//!    or returns typed violations with stable error codes. [`compile`]
+//!    rejects violating artifacts and stamps a verification seal;
+//!    [`registry::ModelRepo::serveable`] refuses unsealed or stale
+//!    artifacts; `fusionaccel lint` prints the report.
 //!
 //! Execution of compiled streams lives with the drivers:
 //! [`crate::host::driver::HostDriver::forward_compiled`] and
@@ -44,10 +52,12 @@ pub mod cost;
 pub mod layout;
 pub mod passes;
 pub mod registry;
+pub mod verify;
 
-pub use artifact::{compile, fnv1a, graph_fingerprint, CompiledStream, EpochPlan};
+pub use artifact::{compile, compile_unverified, fnv1a, graph_fingerprint, CompiledStream, EpochPlan};
 pub use cache::LruCache;
 pub use cost::{conv_layer_cost, stream_cost, LayerCost, Residency, StreamCost};
 pub use layout::{legal_granularities, plan_granularities, plan_granularities_with};
 pub use passes::{run_pipeline, PassReport};
 pub use registry::{ArtifactRegistry, ModelRepo, ServableModel};
+pub use verify::{artifact_seal, verify, verify_sealed, Severity, VerifyReport, Violation};

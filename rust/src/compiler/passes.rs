@@ -24,6 +24,12 @@
 //! |                  | CSB, which treats op 0 as end-of-stream)           |
 //! | `eliminate_dead` | nodes unreachable from the output removed, so dead |
 //! |                  | branches never cost commands, weights, or cycles   |
+//! | `retag_concat_slots` | parallel branches feeding a concat get the     |
+//! |                  | §4.4 slot convention re-stamped (2-way: 1/5;       |
+//! |                  | n-way: `(n-1)<<2 \| pos`), so front-ends that      |
+//! |                  | leave slots at 0 still produce correctly tagged    |
+//! |                  | commands; the verifier checks the same convention  |
+//! |                  | (`FA-SLOT-ALIAS`), so aliasing is caught statically|
 //!
 //! Adding a pass: write `fn my_pass(&Network) -> (Network, usize)`
 //! returning the rewritten graph and a change count (0 = unchanged;
@@ -75,12 +81,13 @@ type PassFn = fn(&Network) -> (Network, usize);
 
 /// The default pipeline, in order. See the module docs for the per-pass
 /// contracts and how to extend it.
-pub const PIPELINE: [(&str, PassFn); 5] = [
+pub const PIPELINE: [(&str, PassFn); 6] = [
     ("fuse_conv_relu", fuse_conv_relu),
     ("fold_pool_relu", fold_pool_relu),
     ("fold_avgpool_head", fold_avgpool_head),
     ("strip_idle", strip_idle),
     ("eliminate_dead", eliminate_dead),
+    ("retag_concat_slots", retag_concat_slots),
 ];
 
 /// Run [`PIPELINE`] to a fixpoint (bounded — each round that changes
@@ -327,6 +334,53 @@ pub fn eliminate_dead(net: &Network) -> (Network, usize) {
     (rebuild(net, &drop, &repl), changed)
 }
 
+/// Re-stamp the §4.4 parallel-layer slot convention onto branches
+/// feeding a concat: 2-way concats tag their branches 1/5 (the fire
+/// module pair), n-way concats `(n-1) << 2 | position`. Slot tags are
+/// command metadata (the datapath never reads them), so the rewrite is
+/// trivially bit-preserving — but a front-end that leaves every slot at
+/// 0 would emit aliased commands, and the static verifier pins the same
+/// convention (`FA-SLOT-ALIAS`), so this pass is what makes builder
+/// graphs verify. Guarded to concats of 2..=4 all-engine branches whose
+/// *sole* consumer is that concat (a shared branch belongs to no single
+/// concat, and rewriting it would toggle forever).
+pub fn retag_concat_slots(net: &Network) -> (Network, usize) {
+    let cons = consumers(net);
+    let mut out = net.clone();
+    let mut changed = 0;
+    for node in &net.nodes {
+        let Node::Concat { inputs, .. } = node else { continue };
+        if !(2..=4).contains(&inputs.len()) {
+            continue;
+        }
+        let sole_engine_branches = inputs
+            .iter()
+            .all(|&j| matches!(net.nodes[j], Node::Engine { .. }) && cons[j].len() == 1);
+        if !sole_engine_branches {
+            continue;
+        }
+        let count = inputs.len() as u32 - 1;
+        for (pos, &j) in inputs.iter().enumerate() {
+            let want = if inputs.len() == 2 {
+                if pos == 0 {
+                    1
+                } else {
+                    5
+                }
+            } else {
+                (count << 2) | pos as u32
+            };
+            if let Node::Engine { spec, .. } = &mut out.nodes[j] {
+                if spec.slot != want {
+                    spec.slot = want;
+                    changed += 1;
+                }
+            }
+        }
+    }
+    (out, changed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -506,6 +560,59 @@ mod tests {
         assert_eq!(report.total_changes(), 2);
         assert!(report.summary().contains("strip_idle×1"));
         assert!(report.summary().contains("eliminate_dead×1"));
+    }
+
+    #[test]
+    fn retag_stamps_two_way_and_four_way_conventions() {
+        // 2-way concat with both branches left at slot 0 (a lazy
+        // front-end): retagged to the fire-module 1/5 pair.
+        let mut n = Network::new("fire_untagged");
+        let inp = n.input(8, 3);
+        let e1 = n.engine(LayerSpec::conv("e1", 1, 1, 0, 8, 3, 4, 0), inp);
+        let e3 = n.engine(LayerSpec::conv("e3", 3, 1, 1, 8, 3, 4, 0), inp);
+        let cat = n.concat("cat", vec![e1, e3]);
+        n.softmax("prob", cat);
+        let (opt, report) = run_pipeline(&n);
+        opt.check().unwrap();
+        assert_eq!(engine_spec(&opt, "e1").slot, 1);
+        assert_eq!(engine_spec(&opt, "e3").slot, 5);
+        assert!(report.summary().contains("retag_concat_slots×2"), "{}", report.summary());
+
+        // 4-way inception-style concat: GoogLeNet's builder leaves all
+        // branch tips at 0; the convention is (4-1)<<2 | pos = 12..15.
+        let g = crate::net::googlenet::googlenet();
+        let (opt, report) = run_pipeline(&g);
+        opt.check().unwrap();
+        assert!(report.summary().contains("retag_concat_slots"), "{}", report.summary());
+        for node in &opt.nodes {
+            let Node::Concat { inputs, .. } = node else { continue };
+            assert_eq!(inputs.len(), 4);
+            for (pos, &j) in inputs.iter().enumerate() {
+                let Node::Engine { spec, .. } = &opt.nodes[j] else { panic!("non-engine branch") };
+                assert_eq!(spec.slot, (3 << 2) | pos as u32, "branch {pos} of some inception");
+            }
+        }
+        // Fixpoint: a second pipeline run changes nothing.
+        let (_, again) = run_pipeline(&opt);
+        assert_eq!(again.total_changes(), 0);
+    }
+
+    #[test]
+    fn retag_skips_shared_branches() {
+        // e1 feeds the concat AND a second conv: it belongs to no single
+        // concat, so its slot must be left alone.
+        let mut n = Network::new("shared_branch");
+        let inp = n.input(8, 3);
+        let e1 = n.engine(LayerSpec::conv("e1", 1, 1, 0, 8, 3, 4, 0), inp);
+        let e3 = n.engine(LayerSpec::conv("e3", 3, 1, 1, 8, 3, 4, 0), inp);
+        let cat = n.concat("cat", vec![e1, e3]);
+        let side = n.engine(LayerSpec::conv("side", 1, 1, 0, 8, 4, 8, 0), e1);
+        let cat2 = n.concat("cat2", vec![cat, side]);
+        n.softmax("prob", cat2);
+        let (opt, _) = run_pipeline(&n);
+        opt.check().unwrap();
+        assert_eq!(engine_spec(&opt, "e1").slot, 0, "shared branch must keep its tag");
+        assert_eq!(engine_spec(&opt, "e3").slot, 0, "partner of a shared branch too");
     }
 
     #[test]

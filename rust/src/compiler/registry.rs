@@ -18,6 +18,7 @@ use crate::net::graph::Network;
 use crate::net::weights::Blobs;
 
 use super::artifact::{combine, compile, fnv1a, graph_fingerprint, CompiledStream};
+use super::verify;
 
 /// Compile memo keyed by `combine(graph_fingerprint(source), weights_id)`.
 #[derive(Debug, Default)]
@@ -129,8 +130,52 @@ impl ModelRepo {
         }
     }
 
+    /// Register a pre-compiled artifact directly, bypassing the compile
+    /// path. Only a duplicate-name check happens here — the artifact's
+    /// verification status is *not* re-checked at registration, because
+    /// the serving gate is [`Self::serveable`]: every worker admission
+    /// re-proves the seal, so an unverified or since-mutated artifact
+    /// can sit in the repo but never reaches an engine.
+    pub fn register_artifact(
+        &mut self,
+        name: &str,
+        stream: Arc<CompiledStream>,
+        blobs: Blobs,
+    ) -> Result<()> {
+        ensure!(!self.by_name.contains_key(name), "model {name:?} already registered");
+        if self.default.is_none() {
+            self.default = Some(name.to_string());
+        }
+        self.by_name
+            .insert(name.to_string(), Arc::new(ServableModel { name: name.to_string(), stream, blobs }));
+        Ok(())
+    }
+
     pub fn get(&self, name: &str) -> Option<Arc<ServableModel>> {
         self.by_name.get(name).cloned()
+    }
+
+    /// The serve-time verification gate: resolve `name` and prove the
+    /// artifact's stamped seal still matches its content
+    /// ([`verify::artifact_seal`]). An unknown name, an unverified
+    /// artifact (`seal == 0` never matches — the seal hashes a non-empty
+    /// domain tag), or one mutated after compilation all fail here, so a
+    /// worker can never reconfigure an engine from a stream the static
+    /// verifier hasn't passed.
+    pub fn serveable(&self, name: &str) -> Result<Arc<ServableModel>> {
+        let Some(model) = self.get(name) else {
+            bail!("unknown network {name:?}");
+        };
+        let want = verify::artifact_seal(&model.stream);
+        ensure!(
+            model.stream.seal == want,
+            "artifact {} for network {name:?} fails the serve-time verification gate \
+             ({}: stamped seal {:016x}, content {want:016x})",
+            model.stream.id,
+            verify::FA_SEAL_STALE,
+            model.stream.seal,
+        );
+        Ok(model)
     }
 
     pub fn len(&self) -> usize {
@@ -240,6 +285,31 @@ mod tests {
         // The snapshot's compile memo is its own (and empty).
         assert_eq!(snap.registry().compiles(), 0);
         assert_eq!(repo.registry().compiles(), 1);
+    }
+
+    #[test]
+    fn serveable_gates_on_the_verification_seal() {
+        let mut repo = ModelRepo::new();
+        let net = tiny("gated");
+        repo.register(net.clone(), synthesize_weights(&net, 1)).unwrap();
+        // A compile()-produced artifact passes the gate.
+        assert!(repo.serveable("gated").is_ok());
+        assert!(repo.serveable("ghost").is_err());
+
+        // A mutated clone of the same artifact: registerable, never
+        // serveable — the seal no longer matches the content.
+        let mut bent = (*repo.get("gated").unwrap().stream).clone();
+        bent.epochs[0].len = 0;
+        repo.register_artifact("bent", Arc::new(bent), synthesize_weights(&net, 1)).unwrap();
+        assert!(repo.get("bent").is_some(), "registration itself must succeed");
+        let err = repo.serveable("bent").unwrap_err().to_string();
+        assert!(err.contains("FA-SEAL-STALE"), "{err}");
+
+        // An unverified artifact (seal 0) is equally refused.
+        let raw = crate::compiler::compile_unverified(&net, 1).unwrap();
+        assert_eq!(raw.seal, 0);
+        repo.register_artifact("raw", Arc::new(raw), synthesize_weights(&net, 1)).unwrap();
+        assert!(repo.serveable("raw").is_err());
     }
 
     #[test]

@@ -1,0 +1,1041 @@
+//! Static command-stream verifier: prove a [`CompiledStream`] safe
+//! before it ever touches an engine.
+//!
+//! A malformed stream is a silent wrong answer (or a hang) on real
+//! hardware — the CSB trusts its 12-byte commands, the caches trust the
+//! compiler's bases, and RESFIFO trusts the drivers' drain placement.
+//! This module walks an artifact command-by-command with an **abstract
+//! machine model** of the engine state (cache occupancy intervals,
+//! CMDFIFO epochs, RESFIFO high-water marks, the channel-split
+//! partial-bias protocol) and either proves a fixed set of hardware
+//! invariants or returns typed [`Violation`]s with stable error codes
+//! and layer/command provenance. No engine execution, no weights, no
+//! data — verification is pure arithmetic over the artifact.
+//!
+//! | code | invariant |
+//! |------|-----------|
+//! | `FA-SLICE-OVERFLOW`    | every data slice the recorded granularity implies fits the 1024-word data cache (incl. per-chunk split slices; giant *avg* pools are rejected — max-only fold) |
+//! | `FA-WEIGHT-OVERFLOW`   | one output channel's weights fit the weight cache; resident plan intervals stay inside it |
+//! | `FA-PLAN-OVERLAP`      | resident [`WeightPlan`] weight/bias intervals are pairwise disjoint |
+//! | `FA-PLAN-RESERVED-BIAS`| no resident bias interval reaches the reserved top-8 partial-sum slots ([`PARTIAL_BIAS_BASE`]) |
+//! | `FA-PLAN-GAP`          | a resident plan homes *every* conv super-block, and nothing else |
+//! | `FA-EPOCH-OVERFLOW`    | every CMDFIFO epoch holds 1..=341 commands |
+//! | `FA-TAPE-GAP`          | epochs tile the layer tape exactly (reloads only at epoch boundaries, every command covered once) |
+//! | `FA-RESFIFO-OVERFLOW`  | no single engine pass produces more results than RESFIFO holds between drains |
+//! | `FA-SPLIT-PROTOCOL`    | channel-split chunks run in channel order with drain barriers, real bias only on chunk 0, partial re-entry after, activation only on the last chunk |
+//! | `FA-GRAN-ILLEGAL`      | every recorded granularity is a member of [`layout::legal_granularities`] for its layer |
+//! | `FA-IDLE-CMD`          | no `Idle` command survives the pass pipeline (op 0 is the CSB end-of-stream sentinel) |
+//! | `FA-DEAD-NODE`         | no dead node survives the pass pipeline |
+//! | `FA-SLOT-ALIAS`        | parallel-branch slot tags fit their 4-bit field and match the concat convention after re-tagging |
+//! | `FA-MODEL-DRIFT`       | [`CompiledStream::modeled`] equals a fresh re-run of [`cost::model_stream`] over the verified stream |
+//! | `FA-SEAL-STALE`        | the stamped verification seal matches the artifact content ([`verify_sealed`]) |
+//!
+//! Checks are **staged** so a corrupt artifact yields violations, never
+//! a panic: structural checks (epoch tiling, granularity legality,
+//! per-channel weight fit) run first, and derived checks that replay
+//! compiler arithmetic (plan intervals, split protocol, the cost-model
+//! re-run) only run once their structural prerequisites hold.
+//!
+//! Wiring: [`super::compile`] rejects artifacts with Error-severity
+//! findings and stamps [`CompiledStream::seal`] on clean ones;
+//! [`super::registry::ModelRepo::serveable`] refuses to hand a worker
+//! any artifact whose seal is missing or stale; `fusionaccel lint`
+//! prints the report (nonzero exit on any Error). The mutation harness
+//! (`rust/tests/verify_mutations.rs`) pins one deliberate corruption
+//! per invariant class against its expected code, plus zero false
+//! positives across the whole model zoo. Future artifact mutators —
+//! the pipeline partitioner, the quantizer — must keep their outputs
+//! clean under this verifier; it is the compilation contract.
+//!
+//! [`WeightPlan`]: crate::host::gemm::WeightPlan
+//! [`PARTIAL_BIAS_BASE`]: crate::host::gemm::PARTIAL_BIAS_BASE
+
+use std::fmt;
+
+use crate::accel::stream::DATA_CACHE_WORDS;
+use crate::engine::csb::MAX_LAYERS;
+use crate::host::gemm::{
+    self, ConvGranularity, DATA_CACHE_VALUES, PARTIAL_BIAS_BASE, RES_FIFO_VALUES,
+    WEIGHT_CACHE_VALUES,
+};
+use crate::net::graph::{Network, Node};
+use crate::net::layer::{LayerSpec, OpType};
+
+use super::artifact::{graph_fingerprint, CompiledStream, Fingerprint};
+use super::{cost, layout, passes};
+
+pub const FA_SLICE_OVERFLOW: &str = "FA-SLICE-OVERFLOW";
+pub const FA_WEIGHT_OVERFLOW: &str = "FA-WEIGHT-OVERFLOW";
+pub const FA_PLAN_OVERLAP: &str = "FA-PLAN-OVERLAP";
+pub const FA_PLAN_RESERVED_BIAS: &str = "FA-PLAN-RESERVED-BIAS";
+pub const FA_PLAN_GAP: &str = "FA-PLAN-GAP";
+pub const FA_EPOCH_OVERFLOW: &str = "FA-EPOCH-OVERFLOW";
+pub const FA_TAPE_GAP: &str = "FA-TAPE-GAP";
+pub const FA_RESFIFO_OVERFLOW: &str = "FA-RESFIFO-OVERFLOW";
+pub const FA_SPLIT_PROTOCOL: &str = "FA-SPLIT-PROTOCOL";
+pub const FA_GRAN_ILLEGAL: &str = "FA-GRAN-ILLEGAL";
+pub const FA_IDLE_CMD: &str = "FA-IDLE-CMD";
+pub const FA_DEAD_NODE: &str = "FA-DEAD-NODE";
+pub const FA_SLOT_ALIAS: &str = "FA-SLOT-ALIAS";
+pub const FA_MODEL_DRIFT: &str = "FA-MODEL-DRIFT";
+pub const FA_SEAL_STALE: &str = "FA-SEAL-STALE";
+
+/// How bad a finding is. `Error` findings make an artifact unservable;
+/// `Warning`s are advisory (reported by `lint`, never gating).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// One typed finding: a stable error code, a severity, a human message,
+/// and provenance (the engine layer's name and its command index on the
+/// layer tape, when the finding is layer-scoped).
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub code: &'static str,
+    pub severity: Severity,
+    pub message: String,
+    /// Engine-layer name, for layer-scoped findings.
+    pub layer: Option<String>,
+    /// Command index in engine order (the layer-tape position).
+    pub command: Option<usize>,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}]", self.severity, self.code)?;
+        if let Some(layer) = &self.layer {
+            write!(f, " layer {layer:?}")?;
+        }
+        if let Some(cmd) = self.command {
+            write!(f, " (cmd {cmd})")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// Everything the verifier found, in check order.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub violations: Vec<Violation>,
+}
+
+impl VerifyReport {
+    /// No findings at all (warnings included).
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Error-severity findings (the serve/compile gate).
+    pub fn errors(&self) -> Vec<&Violation> {
+        self.violations.iter().filter(|v| v.severity == Severity::Error).collect()
+    }
+
+    /// Whether any finding carries `code`.
+    pub fn has_code(&self, code: &str) -> bool {
+        self.violations.iter().any(|v| v.code == code)
+    }
+
+    /// Multi-line human rendering (one finding per line).
+    pub fn render(&self) -> String {
+        self.violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+    }
+}
+
+/// Where a channel-split chunk's bias-port load comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BiasSource {
+    /// The layer's real bias block (chunk 0 only).
+    Real,
+    /// The previous chunk's drained partial sums, re-entered through
+    /// [`PARTIAL_BIAS_BASE`].
+    Partial,
+}
+
+/// One chunk of a channel-split layer's batched execution plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkStep {
+    /// First input-channel group this chunk covers.
+    pub group_start: usize,
+    /// Input-channel groups in the chunk.
+    pub group_count: usize,
+    pub bias: BiasSource,
+    /// Whether the fused ReLU applies to this chunk's results. Must be
+    /// false on every chunk but the last (partials must not be clipped)
+    /// and `!skip_relu` on the last.
+    pub apply_activation: bool,
+    /// Drain barrier after the chunk (the next chunk re-enters these
+    /// partials; results must leave RESFIFO first).
+    pub barrier: bool,
+}
+
+/// The explicit, verifier-checkable form of one channel-split layer's
+/// partial-bias protocol. The drivers keep deriving the identical
+/// schedule from [`gemm::channel_chunks`] at forward time; this record
+/// exists so the protocol is *stated* on the artifact and statically
+/// checkable, not implicit in driver loops.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SplitPlan {
+    pub chunks: Vec<ChunkStep>,
+}
+
+/// Build the per-layer split plans for a compiled stream (indexed like
+/// `net.engine_layers()`; `None` for layers that are not channel-split).
+pub fn plan_splits(
+    net: &Network,
+    granularities: &[Option<ConvGranularity>],
+) -> Vec<Option<SplitPlan>> {
+    net.engine_layers()
+        .iter()
+        .enumerate()
+        .map(|(eidx, spec)| {
+            if granularities.get(eidx).copied().flatten() != Some(ConvGranularity::ChannelSplit) {
+                return None;
+            }
+            let icp = (spec.i_ch as usize).div_ceil(8) * 8;
+            let cc = gemm::channel_chunks(spec.kernel as usize, icp);
+            let chunks = (0..cc.count)
+                .map(|c| {
+                    let (g0, gn) = cc.chunk(c);
+                    ChunkStep {
+                        group_start: g0,
+                        group_count: gn,
+                        bias: if c == 0 { BiasSource::Real } else { BiasSource::Partial },
+                        apply_activation: c + 1 == cc.count && !spec.skip_relu,
+                        barrier: true,
+                    }
+                })
+                .collect();
+            Some(SplitPlan { chunks })
+        })
+        .collect()
+}
+
+struct Checker {
+    violations: Vec<Violation>,
+}
+
+impl Checker {
+    fn push(
+        &mut self,
+        code: &'static str,
+        severity: Severity,
+        layer: Option<&str>,
+        command: Option<usize>,
+        message: String,
+    ) {
+        self.violations.push(Violation {
+            code,
+            severity,
+            message,
+            layer: layer.map(str::to_string),
+            command,
+        });
+    }
+
+    fn err(&mut self, code: &'static str, layer: &str, command: usize, message: String) {
+        self.push(code, Severity::Error, Some(layer), Some(command), message);
+    }
+
+    fn err_global(&mut self, code: &'static str, message: String) {
+        self.push(code, Severity::Error, None, None, message);
+    }
+}
+
+/// Statically verify a compiled stream against every invariant in the
+/// module table. Never panics — corrupt inputs come back as findings.
+pub fn verify(cs: &CompiledStream) -> VerifyReport {
+    let mut ck = Checker { violations: Vec::new() };
+    let layers = cs.net.engine_layers();
+
+    check_commands(&mut ck, &layers);
+    check_dead_nodes(&mut ck, &cs.net);
+    check_concat_slots(&mut ck, &cs.net);
+    let grans_ok = check_granularities(&mut ck, cs, &layers);
+    let weights_ok = check_weight_shapes(&mut ck, &layers);
+    let epochs_ok = check_epochs(&mut ck, cs, layers.len());
+    if grans_ok {
+        check_slices(&mut ck, cs, &layers);
+    }
+    if weights_ok {
+        check_weight_plan(&mut ck, cs, &layers);
+    }
+    if grans_ok && weights_ok {
+        check_split_plans(&mut ck, cs, &layers);
+        check_resfifo(&mut ck, cs, &layers);
+    }
+    // The model re-run replays compiler arithmetic (it indexes layers
+    // through the epoch schedule and calls `conv_layout`), so it only
+    // runs once the structural checks prove that arithmetic total.
+    if grans_ok && weights_ok && epochs_ok {
+        check_modeled(&mut ck, cs);
+    }
+    VerifyReport { violations: ck.violations }
+}
+
+/// [`verify`] plus the seal check: the stamped [`CompiledStream::seal`]
+/// must equal a fresh [`artifact_seal`] of the artifact's content. A
+/// mismatch means the artifact was mutated after compilation (or never
+/// verified at all) — the serve-time gate
+/// ([`super::registry::ModelRepo::serveable`]) keys off exactly this.
+pub fn verify_sealed(cs: &CompiledStream) -> VerifyReport {
+    let mut report = verify(cs);
+    let want = artifact_seal(cs);
+    if cs.seal != want {
+        report.violations.insert(
+            0,
+            Violation {
+                code: FA_SEAL_STALE,
+                severity: Severity::Error,
+                message: format!(
+                    "stamped seal {:016x} does not match artifact content {want:016x} \
+                     (mutated after compile, or never verified)",
+                    cs.seal
+                ),
+                layer: None,
+                command: None,
+            },
+        );
+    }
+    report
+}
+
+/// Content checksum over everything [`verify`] proves things about:
+/// the optimized graph, the epoch schedule, the granularity record, the
+/// weight plan, the split plans, and the stamped cost model. `compile`
+/// stamps it onto [`CompiledStream::seal`] *after* a clean verification,
+/// so `seal == artifact_seal(cs)` is the machine-checkable statement
+/// "this exact content passed the verifier". The seal field itself is
+/// excluded, of course.
+pub fn artifact_seal(cs: &CompiledStream) -> u64 {
+    let mut h = Fingerprint::new();
+    h.bytes(b"fa-seal-v1")
+        .str(&cs.id)
+        .u64(cs.weights_id)
+        .u64(cs.source_fingerprint)
+        .u64(graph_fingerprint(&cs.net));
+    h.u64(cs.epochs.len() as u64);
+    for ep in &cs.epochs {
+        h.u64(ep.start as u64).u64(ep.len as u64);
+    }
+    h.u64(cs.granularities.len() as u64);
+    for g in &cs.granularities {
+        h.u64(match g {
+            None => 0,
+            Some(ConvGranularity::Row) => 1,
+            Some(ConvGranularity::Pixel) => 2,
+            Some(ConvGranularity::ChannelSplit) => 3,
+        });
+    }
+    let mut entries: Vec<_> = cs.weight_plan.entries().collect();
+    entries.sort_by_key(|(key, _)| *key);
+    h.u64(entries.len() as u64);
+    for ((eidx, block), slot) in entries {
+        h.u64(eidx as u64)
+            .u64(block as u64)
+            .u64(slot.weight_base as u64)
+            .u64(slot.bias_base as u64)
+            .str(&slot.key);
+    }
+    h.u64(cs.split_plans.len() as u64);
+    for plan in &cs.split_plans {
+        match plan {
+            None => {
+                h.u64(0);
+            }
+            Some(p) => {
+                h.u64(1).u64(p.chunks.len() as u64);
+                for c in &p.chunks {
+                    h.u64(c.group_start as u64)
+                        .u64(c.group_count as u64)
+                        .u64(match c.bias {
+                            BiasSource::Real => 0,
+                            BiasSource::Partial => 1,
+                        })
+                        .u64(c.apply_activation as u64)
+                        .u64(c.barrier as u64);
+                }
+            }
+        }
+    }
+    seal_cost(&mut h, &cs.modeled);
+    h.finish()
+}
+
+fn seal_cost(h: &mut Fingerprint, modeled: &cost::StreamCost) {
+    h.u64(modeled.batch as u64)
+        .u64(match modeled.residency {
+            cost::Residency::Cold => 0,
+            cost::Residency::Warm => 1,
+        })
+        .u64(modeled.command_loads)
+        .u64(modeled.command_reuses);
+    seal_layer_cost(h, &modeled.preamble);
+    h.u64(modeled.layers.len() as u64);
+    for l in &modeled.layers {
+        seal_layer_cost(h, l);
+    }
+}
+
+fn seal_layer_cost(h: &mut Fingerprint, l: &cost::LayerCost) {
+    h.str(&l.name)
+        .u64(l.passes)
+        .u64(l.cycles)
+        .u64(l.weight_loads)
+        .u64(l.weight_reuses)
+        .u64(l.link_bytes)
+        .u64(l.link_txns);
+}
+
+/// Per-command structural checks: no Idle sentinel on the tape, slot
+/// tag within its 4-bit command field.
+fn check_commands(ck: &mut Checker, layers: &[&LayerSpec]) {
+    for (cmd, spec) in layers.iter().enumerate() {
+        if spec.op == OpType::Idle {
+            ck.err(
+                FA_IDLE_CMD,
+                &spec.name,
+                cmd,
+                "Idle command on the tape: the CSB parses op 0 as end-of-stream and would \
+                 desynchronize every later layer"
+                    .to_string(),
+            );
+        }
+        if spec.slot >= 16 {
+            ck.err(
+                FA_SLOT_ALIAS,
+                &spec.name,
+                cmd,
+                format!("slot tag {} overflows the 4-bit command field", spec.slot),
+            );
+        }
+    }
+}
+
+/// The pass pipeline must have converged: a dead node surviving on the
+/// artifact would still cost commands, weights, and cycles.
+fn check_dead_nodes(ck: &mut Checker, net: &Network) {
+    let (_, removed) = passes::eliminate_dead(net);
+    if removed > 0 {
+        ck.err_global(
+            FA_DEAD_NODE,
+            format!("{removed} dead node(s) survived the pass pipeline"),
+        );
+    }
+}
+
+/// Parallel-branch slot tags must match the concat convention the
+/// re-tagging pass ([`passes::retag_concat_slots`]) establishes —
+/// checked under exactly the guard the pass uses, so a verified
+/// artifact is also a fixpoint of the pass.
+fn check_concat_slots(ck: &mut Checker, net: &Network) {
+    let mut consumer_count = vec![0usize; net.nodes.len()];
+    for node in &net.nodes {
+        for j in node.inputs() {
+            consumer_count[j] += 1;
+        }
+    }
+    for node in &net.nodes {
+        let Node::Concat { name, inputs } = node else { continue };
+        if !(2..=4).contains(&inputs.len()) {
+            continue;
+        }
+        let branches: Option<Vec<&LayerSpec>> = inputs
+            .iter()
+            .map(|&j| match &net.nodes[j] {
+                Node::Engine { spec, .. } if consumer_count[j] == 1 => Some(spec),
+                _ => None,
+            })
+            .collect();
+        let Some(branches) = branches else { continue };
+        let count = inputs.len() as u32 - 1;
+        for (pos, spec) in branches.iter().enumerate() {
+            let want = if inputs.len() == 2 {
+                if pos == 0 {
+                    1
+                } else {
+                    5
+                }
+            } else {
+                (count << 2) | pos as u32
+            };
+            if spec.slot != want {
+                ck.push(
+                    FA_SLOT_ALIAS,
+                    Severity::Error,
+                    Some(&spec.name),
+                    None,
+                    format!(
+                        "branch {pos} of {}-way concat {name:?} carries slot {} (convention: {want})",
+                        inputs.len(),
+                        spec.slot
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// The granularity record must cover every engine layer, and every
+/// recorded granularity must be legal for its layer's shape. Returns
+/// whether the record is structurally usable by the derived checks.
+fn check_granularities(ck: &mut Checker, cs: &CompiledStream, layers: &[&LayerSpec]) -> bool {
+    if cs.granularities.len() != layers.len() {
+        ck.err_global(
+            FA_GRAN_ILLEGAL,
+            format!(
+                "granularity record covers {} layers but the tape has {}",
+                cs.granularities.len(),
+                layers.len()
+            ),
+        );
+        return false;
+    }
+    let mut ok = true;
+    for (cmd, spec) in layers.iter().enumerate() {
+        let recorded = cs.granularities[cmd];
+        match (spec.op, recorded) {
+            (OpType::ConvRelu, Some(g)) => {
+                if !layout::legal_granularities(spec).contains(&g) {
+                    ck.err(
+                        FA_GRAN_ILLEGAL,
+                        &spec.name,
+                        cmd,
+                        format!("recorded granularity {g:?} is not legal for this layer shape"),
+                    );
+                }
+            }
+            (OpType::ConvRelu, None) => {
+                ck.err(FA_GRAN_ILLEGAL, &spec.name, cmd, "conv layer has no recorded granularity".into());
+                ok = false;
+            }
+            (_, Some(g)) => {
+                ck.err(
+                    FA_GRAN_ILLEGAL,
+                    &spec.name,
+                    cmd,
+                    format!("non-conv layer carries granularity {g:?}"),
+                );
+            }
+            (_, None) => {}
+        }
+    }
+    ok
+}
+
+/// A single output channel's weights must fit the weight cache (the
+/// super-block arithmetic divides by this; an overflow here would
+/// panic every downstream consumer). Returns whether all convs pass.
+fn check_weight_shapes(ck: &mut Checker, layers: &[&LayerSpec]) -> bool {
+    let mut ok = true;
+    for (cmd, spec) in layers.iter().enumerate() {
+        if spec.op != OpType::ConvRelu {
+            continue;
+        }
+        let icp = (spec.i_ch as usize).div_ceil(8) * 8;
+        let per_oc = spec.kernel as usize * spec.kernel as usize * icp;
+        if per_oc > WEIGHT_CACHE_VALUES {
+            ck.err(
+                FA_WEIGHT_OVERFLOW,
+                &spec.name,
+                cmd,
+                format!(
+                    "one output channel needs {per_oc} weight values > the \
+                     {WEIGHT_CACHE_VALUES}-value weight cache"
+                ),
+            );
+            ok = false;
+        }
+    }
+    ok
+}
+
+/// Epochs must each fit the CMDFIFO and tile the tape exactly — command
+/// reloads happen only at epoch boundaries, and every engine command is
+/// covered exactly once. Returns whether the schedule is sound.
+fn check_epochs(ck: &mut Checker, cs: &CompiledStream, n_layers: usize) -> bool {
+    let mut ok = true;
+    let mut cursor = 0usize;
+    for (e, ep) in cs.epochs.iter().enumerate() {
+        if ep.len == 0 || ep.len > MAX_LAYERS {
+            ck.err_global(
+                FA_EPOCH_OVERFLOW,
+                format!(
+                    "epoch {e} holds {} commands (CMDFIFO fits 1..={MAX_LAYERS})",
+                    ep.len
+                ),
+            );
+            ok = false;
+        }
+        if ep.start != cursor {
+            ck.err_global(
+                FA_TAPE_GAP,
+                format!("epoch {e} starts at command {} but the tape cursor is {cursor}", ep.start),
+            );
+            ok = false;
+        }
+        cursor = ep.start + ep.len;
+    }
+    if cursor != n_layers {
+        ck.err_global(
+            FA_TAPE_GAP,
+            format!("epochs cover {cursor} of {n_layers} commands"),
+        );
+        ok = false;
+    }
+    ok
+}
+
+/// Every data-cache slice the recorded granularity implies must fit the
+/// 1024-word cache; giant avg pools (window > cache, no exact partial
+/// fold) are rejected outright.
+fn check_slices(ck: &mut Checker, cs: &CompiledStream, layers: &[&LayerSpec]) {
+    for (cmd, spec) in layers.iter().enumerate() {
+        let k = spec.kernel as usize;
+        match spec.op {
+            OpType::ConvRelu => {
+                let icp = (spec.i_ch as usize).div_ceil(8) * 8;
+                let pw = (spec.i_side + 2 * spec.padding) as usize;
+                match cs.granularities[cmd] {
+                    Some(ConvGranularity::Row) => {
+                        let values = k * pw * icp;
+                        if values > DATA_CACHE_VALUES {
+                            ck.err(
+                                FA_SLICE_OVERFLOW,
+                                &spec.name,
+                                cmd,
+                                format!(
+                                    "row slice is {values} values > the \
+                                     {DATA_CACHE_VALUES}-value data cache"
+                                ),
+                            );
+                        }
+                    }
+                    Some(ConvGranularity::Pixel) => {
+                        let values = k * k * icp;
+                        if values > DATA_CACHE_VALUES {
+                            ck.err(
+                                FA_SLICE_OVERFLOW,
+                                &spec.name,
+                                cmd,
+                                format!(
+                                    "pixel slice is {values} values > the \
+                                     {DATA_CACHE_VALUES}-value data cache"
+                                ),
+                            );
+                        }
+                    }
+                    Some(ConvGranularity::ChannelSplit) => {
+                        let cc = gemm::channel_chunks(k, icp);
+                        for c in 0..cc.count {
+                            let words = cc.slice_words(c);
+                            if words > DATA_CACHE_WORDS {
+                                ck.err(
+                                    FA_SLICE_OVERFLOW,
+                                    &spec.name,
+                                    cmd,
+                                    format!(
+                                        "split chunk {c} is {words} words > the \
+                                         {DATA_CACHE_WORDS}-word data cache"
+                                    ),
+                                );
+                            }
+                        }
+                    }
+                    None => {} // already reported by check_granularities
+                }
+            }
+            OpType::MaxPool | OpType::AvgPool => {
+                if k * k > DATA_CACHE_WORDS && spec.op == OpType::AvgPool {
+                    ck.err(
+                        FA_SLICE_OVERFLOW,
+                        &spec.name,
+                        cmd,
+                        format!(
+                            "giant avg-pool window ({k}\u{d7}{k} > {DATA_CACHE_WORDS} words) has \
+                             no exact partial fold (max-only; see pool_row_chunks)"
+                        ),
+                    );
+                }
+            }
+            OpType::Idle => {}
+        }
+    }
+}
+
+/// A resident weight plan must home every conv super-block — and only
+/// those — in pairwise-disjoint weight/bias intervals that stay inside
+/// the caches and below the reserved partial-bias slots.
+fn check_weight_plan(ck: &mut Checker, cs: &CompiledStream, layers: &[&LayerSpec]) {
+    if !cs.weight_plan.is_resident() {
+        return; // empty plan: every block loads at word 0, nothing to prove
+    }
+    // (eidx, block) -> resident output channels, from the layer shapes.
+    let mut expected: Vec<((usize, usize), usize)> = Vec::new();
+    for (eidx, spec) in layers.iter().enumerate() {
+        if spec.op != OpType::ConvRelu {
+            continue;
+        }
+        let l = gemm::conv_layout(spec.kernel as usize, spec.i_ch as usize, spec.o_ch as usize);
+        let o_ch = spec.o_ch as usize;
+        let mut oc0 = 0usize;
+        let mut block = 0usize;
+        while oc0 < o_ch {
+            let resident = l.super_block.min(o_ch - oc0);
+            expected.push(((eidx, block), resident));
+            oc0 += resident;
+            block += 1;
+        }
+    }
+
+    let mut weight_iv: Vec<(usize, usize, usize)> = Vec::new(); // (start, end, eidx)
+    let mut bias_iv: Vec<(usize, usize, usize)> = Vec::new();
+    for &((eidx, block), resident) in &expected {
+        let spec = layers[eidx];
+        let Some(slot) = cs.weight_plan.slot(eidx, block) else {
+            ck.err(
+                FA_PLAN_GAP,
+                &spec.name,
+                eidx,
+                format!("resident plan has no home for super-block {block}"),
+            );
+            continue;
+        };
+        let l = gemm::conv_layout(spec.kernel as usize, spec.i_ch as usize, spec.o_ch as usize);
+        let wlen = resident * l.per_oc_values / 8;
+        let wend = slot.weight_base + wlen;
+        if wend > WEIGHT_CACHE_VALUES / 8 {
+            ck.err(
+                FA_WEIGHT_OVERFLOW,
+                &spec.name,
+                eidx,
+                format!(
+                    "super-block {block} home [{}, {wend}) overflows the {}-word weight cache",
+                    slot.weight_base,
+                    WEIGHT_CACHE_VALUES / 8
+                ),
+            );
+        }
+        let bend = slot.bias_base + resident;
+        if bend > PARTIAL_BIAS_BASE {
+            ck.err(
+                FA_PLAN_RESERVED_BIAS,
+                &spec.name,
+                eidx,
+                format!(
+                    "super-block {block} biases [{}, {bend}) reach the reserved partial-sum \
+                     slots at {PARTIAL_BIAS_BASE} (every chunked pass would evict a resident)",
+                    slot.bias_base
+                ),
+            );
+        }
+        weight_iv.push((slot.weight_base, wend, eidx));
+        bias_iv.push((slot.bias_base, bend, eidx));
+    }
+
+    // Anything planned beyond the expected block set is a forged home.
+    let expected_keys: std::collections::HashSet<(usize, usize)> =
+        expected.iter().map(|(k, _)| *k).collect();
+    for (key, _) in cs.weight_plan.entries() {
+        if !expected_keys.contains(&key) {
+            ck.err_global(
+                FA_PLAN_GAP,
+                format!("plan homes nonexistent super-block (layer {}, block {})", key.0, key.1),
+            );
+        }
+    }
+
+    for (kind, iv, code) in
+        [("weight", &mut weight_iv, FA_PLAN_OVERLAP), ("bias", &mut bias_iv, FA_PLAN_OVERLAP)]
+    {
+        iv.sort_unstable();
+        for pair in iv.windows(2) {
+            let (_, a_end, a_eidx) = pair[0];
+            let (b_start, _, b_eidx) = pair[1];
+            if b_start < a_end {
+                ck.err(
+                    code,
+                    &layers[b_eidx].name,
+                    b_eidx,
+                    format!(
+                        "{kind} interval overlaps layer {:?}'s (a later load would evict a \
+                         block the plan promises is resident)",
+                        layers[a_eidx].name
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// The channel-split partial-bias protocol, checked against the layer's
+/// canonical chunking: real bias only on chunk 0, partial re-entry
+/// after, chunks in ascending channel order tiling every group, the
+/// activation only on the last chunk, and a drain barrier everywhere.
+fn check_split_plans(ck: &mut Checker, cs: &CompiledStream, layers: &[&LayerSpec]) {
+    if cs.split_plans.len() != layers.len() {
+        ck.err_global(
+            FA_SPLIT_PROTOCOL,
+            format!(
+                "split-plan record covers {} layers but the tape has {}",
+                cs.split_plans.len(),
+                layers.len()
+            ),
+        );
+        return;
+    }
+    for (cmd, spec) in layers.iter().enumerate() {
+        let is_split = cs.granularities[cmd] == Some(ConvGranularity::ChannelSplit);
+        let plan = &cs.split_plans[cmd];
+        match (is_split, plan) {
+            (false, None) => continue,
+            (false, Some(_)) => {
+                ck.err(
+                    FA_SPLIT_PROTOCOL,
+                    &spec.name,
+                    cmd,
+                    "non-split layer carries a split plan".into(),
+                );
+                continue;
+            }
+            (true, None) => {
+                ck.err(
+                    FA_SPLIT_PROTOCOL,
+                    &spec.name,
+                    cmd,
+                    "channel-split layer has no split plan".into(),
+                );
+                continue;
+            }
+            (true, Some(_)) => {}
+        }
+        let plan = plan.as_ref().unwrap();
+        let icp = (spec.i_ch as usize).div_ceil(8) * 8;
+        let cc = gemm::channel_chunks(spec.kernel as usize, icp);
+        if plan.chunks.len() != cc.count {
+            ck.err(
+                FA_SPLIT_PROTOCOL,
+                &spec.name,
+                cmd,
+                format!("{} chunks planned, canonical chunking has {}", plan.chunks.len(), cc.count),
+            );
+            continue;
+        }
+        let last = plan.chunks.len() - 1;
+        let mut cursor = 0usize;
+        for (c, step) in plan.chunks.iter().enumerate() {
+            if step.group_start != cursor {
+                ck.err(
+                    FA_SPLIT_PROTOCOL,
+                    &spec.name,
+                    cmd,
+                    format!(
+                        "chunk {c} starts at group {} but the channel cursor is {cursor} \
+                         (chunks must run in ascending channel order, tiling every group)",
+                        step.group_start
+                    ),
+                );
+            }
+            cursor = step.group_start + step.group_count;
+            let want_bias = if c == 0 { BiasSource::Real } else { BiasSource::Partial };
+            if step.bias != want_bias {
+                ck.err(
+                    FA_SPLIT_PROTOCOL,
+                    &spec.name,
+                    cmd,
+                    format!(
+                        "chunk {c} bias source is {:?} (the real bias loads only on chunk 0; \
+                         later chunks re-enter the previous partial)",
+                        step.bias
+                    ),
+                );
+            }
+            let want_act = c == last && !spec.skip_relu;
+            if step.apply_activation != want_act {
+                ck.err(
+                    FA_SPLIT_PROTOCOL,
+                    &spec.name,
+                    cmd,
+                    format!(
+                        "chunk {c} activation is {} (an activation mid-split would clip \
+                         partial sums; it applies exactly once, on the last chunk)",
+                        step.apply_activation
+                    ),
+                );
+            }
+            if !step.barrier {
+                ck.err(
+                    FA_SPLIT_PROTOCOL,
+                    &spec.name,
+                    cmd,
+                    format!("chunk {c} has no drain barrier (the next chunk re-enters its partials)"),
+                );
+            }
+            let words = spec.kernel as usize * spec.kernel as usize * step.group_count;
+            if words > DATA_CACHE_WORDS {
+                ck.err(
+                    FA_SLICE_OVERFLOW,
+                    &spec.name,
+                    cmd,
+                    format!("chunk {c} slice is {words} words > the {DATA_CACHE_WORDS}-word data cache"),
+                );
+            }
+        }
+        if cursor != cc.groups {
+            ck.err(
+                FA_SPLIT_PROTOCOL,
+                &spec.name,
+                cmd,
+                format!("chunks cover {cursor} of {} channel groups", cc.groups),
+            );
+        }
+    }
+}
+
+/// No single engine pass may produce more results than RESFIFO holds:
+/// both drivers drain *between* passes (the batched path checks `space`
+/// before each pass), so the static safety condition is exactly that
+/// every per-pass result group fits the 1024-value FIFO.
+fn check_resfifo(ck: &mut Checker, cs: &CompiledStream, layers: &[&LayerSpec]) {
+    for (cmd, spec) in layers.iter().enumerate() {
+        let k = spec.kernel as usize;
+        let o = spec.o_side as usize;
+        let worst = match spec.op {
+            OpType::ConvRelu => {
+                let l =
+                    gemm::conv_layout(k, spec.i_ch as usize, spec.o_ch as usize);
+                match cs.granularities[cmd] {
+                    // Row passes push one whole output row per oc step.
+                    Some(ConvGranularity::Row) => o * l.oc_pass,
+                    // Pixel/split passes push one result per oc.
+                    Some(ConvGranularity::Pixel) | Some(ConvGranularity::ChannelSplit) => l.oc_pass,
+                    None => continue,
+                }
+            }
+            OpType::MaxPool | OpType::AvgPool => {
+                if k * k > DATA_CACHE_WORDS {
+                    8 // giant windows: one 8-lane result per pass
+                } else {
+                    gemm::pool_col_chunks(
+                        k,
+                        spec.stride as usize,
+                        spec.padding as usize,
+                        spec.i_side as usize,
+                        o,
+                    )
+                    .iter()
+                    .map(|c| c.cols * 8)
+                    .max()
+                    .unwrap_or(0)
+                }
+            }
+            OpType::Idle => continue,
+        };
+        if worst > RES_FIFO_VALUES {
+            ck.err(
+                FA_RESFIFO_OVERFLOW,
+                &spec.name,
+                cmd,
+                format!(
+                    "one pass produces {worst} results > the {RES_FIFO_VALUES}-value RESFIFO \
+                     (no drain can be placed inside a pass)"
+                ),
+            );
+        }
+    }
+}
+
+/// The stamped cost model must equal a fresh re-run over the verified
+/// stream — a drifted `modeled` would misprice cold-start deadlines and
+/// lie to `explain`.
+fn check_modeled(ck: &mut Checker, cs: &CompiledStream) {
+    if cs.modeled.batch == 0 {
+        ck.err_global(FA_MODEL_DRIFT, "stamped model claims batch 0".into());
+        return;
+    }
+    let fresh = cost::model_stream(
+        &cs.net,
+        &cs.epochs,
+        cs.weight_plan.is_resident(),
+        &cs.granularities,
+        cs.modeled.batch,
+        cs.modeled.residency,
+    );
+    if fresh != cs.modeled {
+        ck.err_global(
+            FA_MODEL_DRIFT,
+            format!(
+                "stamped cost model drifts from a re-run (stamped total cycles {}, fresh {})",
+                cs.modeled.total().cycles,
+                fresh.total().cycles
+            ),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::net::squeezenet::micro_squeezenet;
+
+    #[test]
+    fn compiled_micro_net_verifies_clean_and_sealed() {
+        let cs = compile(&micro_squeezenet(), 1).unwrap();
+        let report = verify_sealed(&cs);
+        assert!(report.is_clean(), "{}", report.render());
+        assert_eq!(cs.seal, artifact_seal(&cs));
+    }
+
+    #[test]
+    fn seal_tracks_content() {
+        let cs = compile(&micro_squeezenet(), 1).unwrap();
+        let mut bent = cs.clone();
+        bent.epochs[0].len += 1;
+        assert_ne!(artifact_seal(&bent), cs.seal);
+        let report = verify_sealed(&bent);
+        assert!(report.has_code(FA_SEAL_STALE), "{}", report.render());
+    }
+
+    #[test]
+    fn violations_render_with_provenance() {
+        let v = Violation {
+            code: FA_EPOCH_OVERFLOW,
+            severity: Severity::Error,
+            message: "boom".into(),
+            layer: Some("conv1".into()),
+            command: Some(3),
+        };
+        let s = v.to_string();
+        assert!(s.contains("error[FA-EPOCH-OVERFLOW]"), "{s}");
+        assert!(s.contains("conv1") && s.contains("cmd 3"), "{s}");
+    }
+
+    #[test]
+    fn split_plans_follow_the_protocol_by_construction() {
+        let net = crate::net::alexnet::fc6_tail(16, 10);
+        let cs = compile(&net, 1).unwrap();
+        let idx = cs
+            .granularities
+            .iter()
+            .position(|g| *g == Some(ConvGranularity::ChannelSplit))
+            .expect("fc6 tail must contain a channel-split layer");
+        let plan = cs.split_plans[idx].as_ref().unwrap();
+        assert!(plan.chunks.len() >= 2);
+        assert_eq!(plan.chunks[0].bias, BiasSource::Real);
+        assert!(plan.chunks[1..].iter().all(|c| c.bias == BiasSource::Partial));
+        assert!(plan.chunks.iter().all(|c| c.barrier));
+        let last = plan.chunks.len() - 1;
+        assert!(plan.chunks[..last].iter().all(|c| !c.apply_activation));
+    }
+}

@@ -97,7 +97,11 @@ struct WorkerCtx<'a> {
 
 impl WorkerCtx<'_> {
     /// Resolve a batch's network tag to a model handle, LRU-cached.
-    /// Returns the handle and whether it was a cache hit.
+    /// Returns the handle and whether it was a cache hit. Admission goes
+    /// through [`ModelRepo::serveable`] — the serve-time verification
+    /// gate — so a worker never reconfigures an engine from an artifact
+    /// whose seal is missing or stale; such batches fail typed, the
+    /// worker keeps running.
     fn model(&mut self, network: Option<&str>) -> Result<(Arc<ServableModel>, bool)> {
         let name = self.repo.resolve(network)?;
         if let Some(model) = self.models.get(&name) {
@@ -105,8 +109,8 @@ impl WorkerCtx<'_> {
         }
         let model = self
             .repo
-            .get(&name)
-            .with_context(|| format!("model {name:?} vanished from the repo"))?;
+            .serveable(&name)
+            .with_context(|| format!("model {name:?} refused admission"))?;
         self.models.insert(name, model.clone());
         Ok((model, false))
     }

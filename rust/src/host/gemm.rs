@@ -248,6 +248,21 @@ impl WeightPlan {
     pub fn is_resident(&self) -> bool {
         !self.slots.is_empty()
     }
+
+    /// Every planned home as `((eidx, block), slot)`, in arbitrary
+    /// order — the static verifier walks these to prove the intervals
+    /// disjoint and in-bounds.
+    pub fn entries(&self) -> impl Iterator<Item = ((usize, usize), &BlockSlot)> + '_ {
+        self.slots.iter().map(|(k, v)| (*k, v))
+    }
+
+    /// Rebuild a plan from explicit entries. Test-only escape hatch for
+    /// the mutation harness (`rust/tests/verify_mutations.rs`), which
+    /// needs to forge overlapping/misplaced homes that [`Self::plan`]
+    /// can never produce.
+    pub fn from_entries(entries: impl IntoIterator<Item = ((usize, usize), BlockSlot)>) -> WeightPlan {
+        WeightPlan { slots: entries.into_iter().collect() }
+    }
 }
 
 /// Conv row slice: rows `y0 .. y0+k` of the padded input, all channel

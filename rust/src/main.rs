@@ -7,6 +7,9 @@
 //! * `explain`    — per-layer modeled-vs-measured table: the compiler's
 //!   oracle cost model against the device counters of a real forward
 //!   (exits nonzero if any layer mismatches)
+//! * `lint`       — static command-stream verification: compile a net
+//!   and run the abstract-machine verifier over the artifact, printing
+//!   every typed violation (exits nonzero on any Error-severity finding)
 //! * `resources`  — resource model (Table 3) for a configuration
 //! * `timing`     — §5 timing model for a network/parallelism/link
 //! * `serve`      — drive the long-lived serving service from a
@@ -185,6 +188,71 @@ fn main() -> Result<()> {
             for (e, plan) in stream.epochs.iter().enumerate() {
                 println!("  epoch {e}: layers {}..{}", plan.start, plan.start + plan.len);
             }
+        }
+        "lint" => {
+            // Static command-stream verification as a CLI: compile the
+            // network *without* the compile-time rejection (so a broken
+            // artifact prints its findings instead of erroring out
+            // early) and run the full verifier over the artifact.
+            // `--json` emits one machine-parseable object (CI smoke
+            // parses it); either way the exit code gates on
+            // Error-severity findings.
+            let net = load_net(&args.flags)?;
+            let seed: u64 =
+                args.flags.get("weights-seed").map(|v| v.parse()).transpose()?.unwrap_or(1);
+            let json = args.flags.contains_key("json");
+            let blobs = synthesize_weights(&net, seed);
+            let stream = fusionaccel::compiler::compile_unverified(
+                &net,
+                fusionaccel::compiler::fnv1a(&blobs.to_bytes()),
+            )?;
+            let report = fusionaccel::compiler::verify(&stream);
+            let n_errors = report.errors().len();
+            if json {
+                let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n");
+                let items: Vec<String> = report
+                    .violations
+                    .iter()
+                    .map(|v| {
+                        format!(
+                            "{{\"code\":\"{}\",\"severity\":\"{}\",\"layer\":{},\"command\":{},\"message\":\"{}\"}}",
+                            v.code,
+                            v.severity,
+                            v.layer.as_deref().map_or("null".to_string(), |l| format!("\"{}\"", esc(l))),
+                            v.command.map_or("null".to_string(), |c| c.to_string()),
+                            esc(&v.message)
+                        )
+                    })
+                    .collect();
+                println!(
+                    "{{\"network\":\"{}\",\"artifact\":\"{}\",\"commands\":{},\"epochs\":{},\"clean\":{},\"violations\":[{}]}}",
+                    esc(&net.name),
+                    stream.id,
+                    stream.n_commands(),
+                    stream.epochs.len(),
+                    report.is_clean(),
+                    items.join(",")
+                );
+            } else {
+                println!("network {} — static command-stream verification", net.name);
+                println!(
+                    "artifact {} — {} command(s) in {} epoch(s)",
+                    stream.id,
+                    stream.n_commands(),
+                    stream.epochs.len()
+                );
+                if report.is_clean() {
+                    println!("clean — every invariant holds");
+                } else {
+                    println!("{}", report.render());
+                    println!("{} finding(s), {n_errors} error(s)", report.violations.len());
+                }
+            }
+            anyhow::ensure!(
+                n_errors == 0,
+                "{n_errors} Error-severity verification finding(s) for {}",
+                net.name
+            );
         }
         "explain" => {
             // Oracle cost model vs the device: compile the network, run
@@ -384,6 +452,11 @@ fn main() -> Result<()> {
             let idle_secs: f64 =
                 args.flags.get("idle-timeout").map(|v| v.parse()).transpose()?.unwrap_or(0.0);
             let trace_out = args.flags.get("trace-out").cloned();
+            // JSONL retention: rotate the live event log every N lines
+            // (keeping one previous segment), so a long soak holds at
+            // most ~2N lines on disk. 0 = unbounded (the old behavior).
+            let trace_keep: usize =
+                args.flags.get("trace-keep").map(|v| v.parse()).transpose()?.unwrap_or(0);
 
             let blobs = synthesize_weights(&net, seed);
             let mut repo = fusionaccel::compiler::ModelRepo::new();
@@ -411,6 +484,7 @@ fn main() -> Result<()> {
                     let hub = svc.telemetry().clone();
                     let stop = trace_stop.clone();
                     let jsonl_path = format!("{path}.jsonl");
+                    let keep = trace_keep;
                     let handle = std::thread::Builder::new()
                         .name("trace-drain".to_string())
                         .spawn(move || -> Result<Vec<fusionaccel::telemetry::CompletedTrace>> {
@@ -418,6 +492,7 @@ fn main() -> Result<()> {
                             let f = std::fs::File::create(&jsonl_path)
                                 .with_context(|| format!("create {jsonl_path}"))?;
                             let mut log = std::io::BufWriter::new(f);
+                            let mut lines = 0usize;
                             let mut kept: Vec<fusionaccel::telemetry::CompletedTrace> = Vec::new();
                             loop {
                                 // Read the flag *before* draining so the
@@ -426,6 +501,23 @@ fn main() -> Result<()> {
                                 let done = stop.load(std::sync::atomic::Ordering::SeqCst);
                                 for t in hub.drain() {
                                     writeln!(log, "{}", fusionaccel::telemetry::jsonl_line(&t))?;
+                                    lines += 1;
+                                    if keep > 0 && lines >= keep {
+                                        // Rotate: the full segment becomes
+                                        // `<path>.jsonl.1` (replacing the
+                                        // previous rotation) and a fresh
+                                        // segment starts — bounded disk for
+                                        // unbounded soaks.
+                                        log.flush()?;
+                                        drop(log);
+                                        let old = format!("{jsonl_path}.1");
+                                        std::fs::rename(&jsonl_path, &old)
+                                            .with_context(|| format!("rotate {jsonl_path} -> {old}"))?;
+                                        let f = std::fs::File::create(&jsonl_path)
+                                            .with_context(|| format!("recreate {jsonl_path}"))?;
+                                        log = std::io::BufWriter::new(f);
+                                        lines = 0;
+                                    }
                                     if kept.len() < 10_000 {
                                         kept.push(t);
                                     }
@@ -537,6 +629,10 @@ fn main() -> Result<()> {
                  \x20 compile   --net ... [--weights-seed 1]   lower to a CSB artifact (passes, epochs, id)\n\
                  \x20 explain   --net ... [--weights-seed 1]   modeled-vs-measured per-layer cost table\n\
                  \x20           (oracle cost model against real device counters; nonzero exit on drift)\n\
+                 \x20 lint      --net ... [--weights-seed 1] [--json]   static command-stream verification\n\
+                 \x20           (abstract-machine invariant check over the compiled artifact: cache\n\
+                 \x20           bounds, epoch tiling, RESFIFO safety, split protocol, model drift;\n\
+                 \x20           typed FA-* findings, nonzero exit on any Error severity)\n\
                  \x20 resources --parallelism 8 --precision 16\n\
                  \x20 timing    --net ... --parallelism 8 --link usb3|pcie\n\
                  \x20 serve     [--net micro|squeezenet|...] [--requests 64] [--workers 2] [--batch 4]\n\
@@ -544,12 +640,13 @@ fn main() -> Result<()> {
                  \x20           long-lived service over a synthetic trace; --rate 0 = lossless submit_wait\n\
                  \x20 listen    [--addr 127.0.0.1:7311] [--net micro|...] [--workers 2] [--batch 4]\n\
                  \x20           [--queue 16] [--seed 5] [--duration 0] [--port-file p.txt]\n\
-                 \x20           [--idle-timeout 0] [--trace-out trace.json]\n\
+                 \x20           [--idle-timeout 0] [--trace-out trace.json] [--trace-keep 0]\n\
                  \x20           TCP front door over a long-lived service (--duration 0 = run forever;\n\
                  \x20           --addr host:0 picks an ephemeral port, written to --port-file;\n\
                  \x20           --idle-timeout drops silent peers after N seconds, 0 = never;\n\
                  \x20           --trace-out records request traces: Chrome trace JSON at teardown\n\
-                 \x20           plus a live .jsonl event log alongside)\n\
+                 \x20           plus a live .jsonl event log alongside; --trace-keep N rotates the\n\
+                 \x20           .jsonl every N lines to .jsonl.1, 0 = unbounded)\n\
                  \x20 loadgen   --addr host:port [--clients 32] [--requests 16] [--rate 200]\n\
                  \x20           [--deadline-ms 0] [--net micro|...] [--seed 5] [--verify 2]\n\
                  \x20           [--ramp] [--ramp-start r/2] [--ramp-step r/2] [--ramp-steps 4] [--scrape]\n\

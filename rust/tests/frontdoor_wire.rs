@@ -419,6 +419,57 @@ fn unknown_network_fails_the_request_not_the_connection() {
     assert_eq!((stats.served, stats.failed), (1, 1));
 }
 
+/// Satellite (PR 9): a repo holding an artifact that fails static
+/// verification (its seal went stale after a post-compile mutation)
+/// answers that network's requests with typed `Failed` frames naming
+/// the verification gate — the connection is not wedged, and other
+/// networks on the same door keep serving.
+#[test]
+fn stale_artifact_fails_requests_typed_without_wedging_the_connection() {
+    use fusionaccel::compiler::{compile, fnv1a};
+
+    let net = tiny_net();
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1));
+
+    // A second net whose compiled artifact is corrupted *after* the
+    // verifier sealed it — exactly what a buggy post-compile mutator
+    // (future partitioner/quantizer) would produce.
+    let mut bent_net = tiny_net();
+    bent_net.name = "bent".to_string();
+    let bent_blobs = synthesize_weights(&bent_net, 0xB3A7);
+    let mut bent = compile(&bent_net, fnv1a(&bent_blobs.to_bytes())).unwrap();
+    bent.modeled.layers[0].cycles += 1; // content no longer matches the seal
+
+    let mut repo = ModelRepo::new();
+    repo.register(net.clone(), synthesize_weights(&net, 0xB3A7)).unwrap();
+    repo.register_artifact("bent", Arc::new(bent), bent_blobs).unwrap();
+    let svc = Arc::new(Service::start(Arc::new(repo), &cfg).unwrap());
+    let door = FrontDoor::bind(svc.clone(), "127.0.0.1:0").unwrap();
+    let mut rng = Rng::new(0xB3A8);
+
+    let mut client = Client::connect(door.local_addr()).unwrap();
+    let resp = client.request(&RequestMsg::new(0, image(&net, &mut rng)).for_network("bent")).unwrap();
+    match resp {
+        ResponseMsg::Failed { id, error } => {
+            assert_eq!(id, 0);
+            assert!(error.contains("refused admission"), "{error}");
+            assert!(error.contains("FA-SEAL-STALE"), "typed code missing: {error}");
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    // Same connection: the healthy default net still round-trips, and a
+    // second request against the stale artifact fails again (the gate
+    // re-proves on every admission — no wedged worker, no poisoned cache).
+    let resp = client.request(&RequestMsg::new(1, image(&net, &mut rng))).unwrap();
+    assert!(matches!(resp, ResponseMsg::Ok { id: 1, .. }), "{resp:?}");
+    let resp = client.request(&RequestMsg::new(2, image(&net, &mut rng)).for_network("bent")).unwrap();
+    assert!(matches!(resp, ResponseMsg::Failed { id: 2, .. }), "{resp:?}");
+    assert_eq!(door.stats().protocol_errors(), 0, "a stale artifact is a request error, not a protocol error");
+
+    let stats = teardown(svc, door);
+    assert_eq!((stats.served, stats.failed), (1, 2));
+}
+
 /// Many-connection soak: 1000 concurrent loopback connections (the
 /// acceptance floor), one pipelined request each from a small image
 /// pool, every response bit-identical to the in-process reference.

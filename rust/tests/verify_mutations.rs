@@ -1,0 +1,368 @@
+//! Mutation harness for the static command-stream verifier (PR 9
+//! tentpole): one deliberate artifact corruption per invariant class,
+//! each of which the verifier must catch **with its expected error
+//! code** — plus the zero-false-positive property: every net in the
+//! model zoo compiles to an artifact that verifies completely clean,
+//! seal included.
+//!
+//! Corruptions are applied to a *cloned* compiled artifact (the public
+//! `CompiledStream` fields are exactly the surface a future partitioner
+//! or quantizer would mutate), so each test documents one way a buggy
+//! artifact mutator would be stopped before an engine sees its stream.
+
+use fusionaccel::compiler::verify::{
+    self, BiasSource, FA_DEAD_NODE, FA_EPOCH_OVERFLOW, FA_GRAN_ILLEGAL, FA_IDLE_CMD,
+    FA_MODEL_DRIFT, FA_PLAN_GAP, FA_PLAN_OVERLAP, FA_PLAN_RESERVED_BIAS, FA_RESFIFO_OVERFLOW,
+    FA_SEAL_STALE, FA_SLICE_OVERFLOW, FA_SLOT_ALIAS, FA_SPLIT_PROTOCOL, FA_TAPE_GAP,
+    FA_WEIGHT_OVERFLOW,
+};
+use fusionaccel::compiler::{compile, compile_unverified, CompiledStream, EpochPlan};
+use fusionaccel::host::gemm::{BlockSlot, ConvGranularity, WeightPlan, PARTIAL_BIAS_BASE};
+use fusionaccel::net::alexnet::{alexnet, alexnet_full_tail, fc6_tail};
+use fusionaccel::net::graph::{Network, Node};
+use fusionaccel::net::layer::{LayerSpec, OpType};
+use fusionaccel::net::squeezenet::{micro_squeezenet, squeezenet_v11};
+
+/// k=5 over 96 channels on a 20-wide input: Pixel granularity (a row
+/// slice overflows the data cache) — same shape the cost-model zoo uses.
+fn pixel_net() -> Network {
+    let mut net = Network::new("pix");
+    let inp = net.input(20, 96);
+    let c = net.engine(LayerSpec::conv("cbig", 5, 1, 2, 20, 96, 12, 0), inp);
+    net.softmax("prob", c);
+    net
+}
+
+/// 350 one-by-one convs → a two-epoch command stream.
+fn deep_net() -> Network {
+    let mut net = Network::new("deep");
+    let inp = net.input(4, 8);
+    let mut cur = inp;
+    for i in 0..350 {
+        cur = net.engine(LayerSpec::conv(&format!("c{i}"), 1, 1, 0, 4, 8, 8, 0), cur);
+    }
+    net.softmax("prob", cur);
+    net
+}
+
+fn artifact(net: &Network) -> CompiledStream {
+    compile(net, 1).unwrap_or_else(|e| panic!("{} must compile clean: {e}", net.name))
+}
+
+/// Assert the verifier (unsealed pass) reports `code` on the corrupted
+/// artifact. Corruptions may legitimately cascade into *additional*
+/// codes; the contract pinned here is that the class-defining code is
+/// among them.
+fn assert_caught(cs: &CompiledStream, code: &str) {
+    let report = verify::verify(cs);
+    assert!(
+        report.has_code(code),
+        "expected {code}, got:\n{}",
+        if report.is_clean() { "(clean)".to_string() } else { report.render() }
+    );
+}
+
+/// Mutate the first conv engine spec in the artifact's net.
+fn mutate_first_conv(cs: &mut CompiledStream, f: impl Fn(&mut LayerSpec)) {
+    for node in &mut cs.net.nodes {
+        if let Node::Engine { spec, .. } = node {
+            if spec.op == OpType::ConvRelu {
+                f(spec);
+                return;
+            }
+        }
+    }
+    panic!("no conv layer to mutate");
+}
+
+#[test]
+fn forged_row_granularity_is_a_slice_overflow() {
+    // pixel_net's 5×5×96 row slice is 11 520 values > the 8 192-value
+    // data cache — which is exactly why the compiler picked Pixel.
+    // Forging Row on the record must trip the slice invariant.
+    let mut cs = artifact(&pixel_net());
+    assert_eq!(cs.granularities[0], Some(ConvGranularity::Pixel));
+    cs.granularities[0] = Some(ConvGranularity::Row);
+    assert_caught(&cs, FA_SLICE_OVERFLOW);
+}
+
+#[test]
+fn overlapping_plan_homes_are_caught() {
+    let cs = artifact(&micro_squeezenet());
+    assert!(cs.weight_plan.is_resident());
+    let mut entries: Vec<((usize, usize), BlockSlot)> =
+        cs.weight_plan.entries().map(|(k, s)| (k, s.clone())).collect();
+    entries.sort_by_key(|(k, _)| *k);
+    assert!(entries.len() >= 2);
+    // Second block moved onto the first block's weight words.
+    entries[1].1.weight_base = entries[0].1.weight_base;
+    let mut bent = cs.clone();
+    bent.weight_plan = WeightPlan::from_entries(entries);
+    assert_caught(&bent, FA_PLAN_OVERLAP);
+}
+
+#[test]
+fn bias_home_in_the_reserved_partial_slots_is_caught() {
+    let cs = artifact(&micro_squeezenet());
+    let mut entries: Vec<((usize, usize), BlockSlot)> =
+        cs.weight_plan.entries().map(|(k, s)| (k, s.clone())).collect();
+    entries.sort_by_key(|(k, _)| *k);
+    // One block's biases pushed into the top-8 slots every channel-split
+    // pass scribbles over.
+    entries[0].1.bias_base = PARTIAL_BIAS_BASE;
+    let mut bent = cs.clone();
+    bent.weight_plan = WeightPlan::from_entries(entries);
+    assert_caught(&bent, FA_PLAN_RESERVED_BIAS);
+}
+
+#[test]
+fn missing_plan_home_is_a_gap() {
+    let cs = artifact(&micro_squeezenet());
+    let mut entries: Vec<((usize, usize), BlockSlot)> =
+        cs.weight_plan.entries().map(|(k, s)| (k, s.clone())).collect();
+    entries.sort_by_key(|(k, _)| *k);
+    entries.pop(); // one super-block loses its home; plan stays "resident"
+    let mut bent = cs.clone();
+    bent.weight_plan = WeightPlan::from_entries(entries);
+    assert_caught(&bent, FA_PLAN_GAP);
+}
+
+#[test]
+fn forged_plan_home_for_a_nonexistent_block_is_a_gap() {
+    let cs = artifact(&micro_squeezenet());
+    let mut entries: Vec<((usize, usize), BlockSlot)> =
+        cs.weight_plan.entries().map(|(k, s)| (k, s.clone())).collect();
+    entries.push((
+        (999, 0),
+        BlockSlot { weight_base: 0, bias_base: 0, key: "forged".to_string() },
+    ));
+    let mut bent = cs.clone();
+    bent.weight_plan = WeightPlan::from_entries(entries);
+    assert_caught(&bent, FA_PLAN_GAP);
+}
+
+#[test]
+fn single_epoch_beyond_cmdfifo_overflows() {
+    // deep_net legitimately schedules 341 + 9; collapsing it into one
+    // 350-command epoch would overflow the CMDFIFO at load time.
+    let mut cs = artifact(&deep_net());
+    assert_eq!(cs.epochs.len(), 2);
+    cs.epochs = vec![EpochPlan { start: 0, len: 350 }];
+    assert_caught(&cs, FA_EPOCH_OVERFLOW);
+}
+
+#[test]
+fn shifted_epoch_start_is_a_tape_gap() {
+    let mut cs = artifact(&deep_net());
+    cs.epochs[1].start += 1; // command 341 now covered by no epoch
+    assert_caught(&cs, FA_TAPE_GAP);
+}
+
+#[test]
+fn row_pass_wider_than_resfifo_is_caught() {
+    // A 129-wide k=1 Row conv pushes 129·8 = 1032 results in one pass —
+    // more than RESFIFO holds, and no drain can be placed mid-pass.
+    let mut cs = artifact(&micro_squeezenet());
+    assert_eq!(cs.granularities[0], Some(ConvGranularity::Row));
+    mutate_first_conv(&mut cs, |spec| {
+        spec.kernel = 1;
+        spec.stride = 1;
+        spec.padding = 0;
+        spec.i_side = 129;
+        spec.o_side = 129;
+    });
+    assert_caught(&cs, FA_RESFIFO_OVERFLOW);
+}
+
+#[test]
+fn fat_channel_reduction_overflows_the_weight_cache() {
+    // 6×6 over 4096 channels: one output channel's weights alone are
+    // 147 456 values > the 65 536-value weight cache.
+    let mut cs = artifact(&fc6_tail(16, 10));
+    mutate_first_conv(&mut cs, |spec| spec.i_ch = 4096);
+    assert_caught(&cs, FA_WEIGHT_OVERFLOW);
+}
+
+fn split_layer_index(cs: &CompiledStream) -> usize {
+    cs.granularities
+        .iter()
+        .position(|g| *g == Some(ConvGranularity::ChannelSplit))
+        .expect("fc6 tail must contain a channel-split layer")
+}
+
+#[test]
+fn split_chunks_out_of_channel_order_are_caught() {
+    let mut cs = artifact(&fc6_tail(16, 10));
+    let idx = split_layer_index(&cs);
+    let plan = cs.split_plans[idx].as_mut().unwrap();
+    assert!(plan.chunks.len() >= 2);
+    plan.chunks.swap(0, 1);
+    let report = verify::verify(&cs);
+    assert!(report.has_code(FA_SPLIT_PROTOCOL), "{}", report.render());
+    assert!(
+        report.violations.iter().any(|v| v.message.contains("channel order")),
+        "expected an order violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn real_bias_on_a_later_chunk_is_caught() {
+    // The real bias may enter the accumulator exactly once (chunk 0);
+    // loading it again on chunk 1 double-counts it.
+    let mut cs = artifact(&fc6_tail(16, 10));
+    let idx = split_layer_index(&cs);
+    let plan = cs.split_plans[idx].as_mut().unwrap();
+    plan.chunks[1].bias = BiasSource::Real;
+    let report = verify::verify(&cs);
+    assert!(report.has_code(FA_SPLIT_PROTOCOL), "{}", report.render());
+    assert!(
+        report.violations.iter().any(|v| v.message.contains("bias")),
+        "expected a bias violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn activation_on_an_intermediate_chunk_is_caught() {
+    // ReLU mid-split would clip negative partial sums that later chunks
+    // still need to add into.
+    let mut cs = artifact(&fc6_tail(16, 10));
+    let idx = split_layer_index(&cs);
+    let plan = cs.split_plans[idx].as_mut().unwrap();
+    plan.chunks[0].apply_activation = true;
+    let report = verify::verify(&cs);
+    assert!(report.has_code(FA_SPLIT_PROTOCOL), "{}", report.render());
+    assert!(
+        report.violations.iter().any(|v| v.message.contains("activation")),
+        "expected an activation violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn missing_drain_barrier_is_caught() {
+    let mut cs = artifact(&fc6_tail(16, 10));
+    let idx = split_layer_index(&cs);
+    let plan = cs.split_plans[idx].as_mut().unwrap();
+    plan.chunks[0].barrier = false;
+    let report = verify::verify(&cs);
+    assert!(report.has_code(FA_SPLIT_PROTOCOL), "{}", report.render());
+    assert!(
+        report.violations.iter().any(|v| v.message.contains("barrier")),
+        "expected a barrier violation:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn illegal_granularity_is_caught() {
+    // fc6's 6×6 window over 256 channels: a row slice is 9216 values >
+    // the data cache, so Row is simply not in legal_granularities.
+    let mut cs = artifact(&fc6_tail(16, 10));
+    let idx = split_layer_index(&cs);
+    cs.granularities[idx] = Some(ConvGranularity::Row);
+    assert_caught(&cs, FA_GRAN_ILLEGAL);
+}
+
+#[test]
+fn idle_command_on_the_tape_is_caught() {
+    let mut cs = artifact(&micro_squeezenet());
+    let mut idle = LayerSpec::conv("rogue_idle", 1, 1, 0, 8, 8, 8, 0);
+    idle.op = OpType::Idle;
+    cs.net.nodes.push(Node::Engine { spec: idle, input: 0 });
+    assert_caught(&cs, FA_IDLE_CMD);
+}
+
+#[test]
+fn dead_node_surviving_the_pipeline_is_caught() {
+    let mut cs = artifact(&micro_squeezenet());
+    // Appending any node makes part of the graph unreachable from the
+    // (new) output — a graph eliminate_dead would still rewrite.
+    cs.net.nodes.push(Node::Engine {
+        spec: LayerSpec::conv("dangling", 1, 1, 0, 8, 8, 8, 0),
+        input: 0,
+    });
+    assert_caught(&cs, FA_DEAD_NODE);
+}
+
+#[test]
+fn concat_slot_aliasing_is_caught() {
+    // squeezenet's fire modules tag their expand pair 1/5; re-tagging a
+    // branch to anything else aliases the concat readback.
+    let mut cs = artifact(&squeezenet_v11());
+    let concat_first_input = cs
+        .net
+        .nodes
+        .iter()
+        .find_map(|n| match n {
+            Node::Concat { inputs, .. } => Some(inputs[0]),
+            _ => None,
+        })
+        .expect("squeezenet has concats");
+    match &mut cs.net.nodes[concat_first_input] {
+        Node::Engine { spec, .. } => spec.slot = 3,
+        other => panic!("concat input is not an engine node: {other:?}"),
+    }
+    assert_caught(&cs, FA_SLOT_ALIAS);
+}
+
+#[test]
+fn slot_tag_overflowing_the_command_field_is_caught() {
+    let mut cs = artifact(&micro_squeezenet());
+    mutate_first_conv(&mut cs, |spec| spec.slot = 77);
+    assert_caught(&cs, FA_SLOT_ALIAS);
+}
+
+#[test]
+fn drifted_cost_model_is_caught() {
+    let mut cs = artifact(&micro_squeezenet());
+    cs.modeled.layers[0].cycles += 1;
+    assert_caught(&cs, FA_MODEL_DRIFT);
+}
+
+#[test]
+fn any_post_compile_mutation_stales_the_seal() {
+    let cs = artifact(&micro_squeezenet());
+    // The clean artifact's seal matches...
+    assert!(verify::verify_sealed(&cs).is_clean());
+    // ...and *every* corruption above also invalidates it, even ones
+    // the unsealed checks would catch anyway. One representative:
+    let mut bent = cs.clone();
+    bent.modeled.layers[0].cycles += 1;
+    let report = verify::verify_sealed(&bent);
+    assert!(report.has_code(FA_SEAL_STALE), "{}", report.render());
+}
+
+#[test]
+fn unverified_artifacts_never_carry_a_valid_seal() {
+    let raw = compile_unverified(&micro_squeezenet(), 1).unwrap();
+    assert_eq!(raw.seal, 0);
+    let report = verify::verify_sealed(&raw);
+    assert!(report.has_code(FA_SEAL_STALE), "{}", report.render());
+    // The artifact itself is fine — only the seal is missing.
+    assert!(verify::verify(&raw).is_clean());
+}
+
+/// Zero false positives: the whole model zoo — all three granularities,
+/// resident and non-resident plans, multi-epoch streams, 2-way and
+/// 4-way concats — verifies clean, seals valid.
+#[test]
+fn the_entire_model_zoo_verifies_clean() {
+    let zoo: Vec<Network> = vec![
+        micro_squeezenet(),
+        pixel_net(),
+        fc6_tail(16, 10),
+        alexnet_full_tail(),
+        deep_net(),
+        squeezenet_v11(),
+        alexnet(),
+        fusionaccel::net::googlenet::googlenet(),
+    ];
+    for net in zoo {
+        let cs = artifact(&net);
+        let report = verify::verify_sealed(&cs);
+        assert!(report.is_clean(), "{}: false positives:\n{}", net.name, report.render());
+        assert_eq!(cs.seal, verify::artifact_seal(&cs), "{}: seal must be stamped", net.name);
+    }
+}
