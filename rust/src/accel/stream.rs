@@ -101,6 +101,12 @@ pub struct EngineStats {
     /// Command streams replayed from the device-side shadow without any
     /// link traffic (same artifact as the previous load).
     pub command_reuses: u64,
+    /// Drain-barrier stalls: host-side passes where RESFIFO lacked the
+    /// space for the next slice's results, forcing an early drain before
+    /// the engine could be restarted. The batched driver increments this
+    /// at each forced-drain site; real RTL would count the cycles its
+    /// `wr_en` sat gated on `full`.
+    pub drain_stalls: u64,
 }
 
 impl EngineStats {
@@ -112,6 +118,33 @@ impl EngineStats {
         } else {
             self.weight_sweeps as f64 / self.weight_loads as f64
         }
+    }
+}
+
+/// Peak-occupancy watermarks — the FIFO/BRAM high-water counters real
+/// RTL carries for depth sizing (§4.4). Unlike [`EngineStats`] these are
+/// maxima, not monotone counters: two snapshots cannot be diffed into a
+/// window's peak, so the device keeps three independently resettable
+/// trackers (device lifetime, per observation window, per layer).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Watermarks {
+    /// Highest RESFIFO occupancy (results awaiting drain).
+    pub resfifo: u64,
+    /// Highest CMDFIFO occupancy in dwords (3 per queued layer).
+    pub cmdfifo: u64,
+    /// Highest data-cache extent touched, in 128-bit words.
+    pub data_words: u64,
+    /// Highest weight-cache extent touched, in 128-bit words.
+    pub weight_words: u64,
+}
+
+impl Watermarks {
+    /// Fold another window's peaks into this one (element-wise max).
+    pub fn merge_max(&mut self, o: &Watermarks) {
+        self.resfifo = self.resfifo.max(o.resfifo);
+        self.cmdfifo = self.cmdfifo.max(o.cmdfifo);
+        self.data_words = self.data_words.max(o.data_words);
+        self.weight_words = self.weight_words.max(o.weight_words);
     }
 }
 
@@ -147,6 +180,15 @@ pub struct StreamAccelerator {
     /// driver flow) record nothing and pay nothing.
     tape: Vec<LayerMark>,
     tape_armed: bool,
+    /// Device-lifetime peak occupancies (never reset).
+    wm_total: Watermarks,
+    /// Peaks since the last [`Self::begin_occupancy_window`] — the
+    /// serving worker resets this per batch and checks the result
+    /// against the static verifier's worst-case bounds.
+    wm_window: Watermarks,
+    /// Peaks since the current layer was loaded; folded retroactively
+    /// into the previous [`LayerMark`] when the next layer begins.
+    wm_layer: Watermarks,
 }
 
 /// Marks retained per armed forward — far above any supported command
@@ -163,6 +205,11 @@ struct LayerMark {
     at: std::time::Instant,
     stats: EngineStats,
     bytes: u64,
+    /// Peak occupancies observed *during* this layer — filled in
+    /// retroactively when the next layer begins (or at drain time for
+    /// the final layer), because a watermark is a max over the window,
+    /// not a counter that can be diffed between marks.
+    wm: Watermarks,
 }
 
 /// One shadowed weight super-block: its content key plus the weight-
@@ -197,7 +244,37 @@ impl StreamAccelerator {
             weight_shadow: Vec::new(),
             tape: Vec::new(),
             tape_armed: false,
+            wm_total: Watermarks::default(),
+            wm_window: Watermarks::default(),
+            wm_layer: Watermarks::default(),
         }
+    }
+
+    /// Record an occupancy observation into all three watermark
+    /// trackers (element selected by `f`).
+    fn note_wm(&mut self, f: fn(&mut Watermarks) -> &mut u64, v: u64) {
+        for wm in [&mut self.wm_total, &mut self.wm_window, &mut self.wm_layer] {
+            let slot = f(wm);
+            *slot = (*slot).max(v);
+        }
+    }
+
+    /// Device-lifetime peak occupancies.
+    pub fn watermarks(&self) -> Watermarks {
+        self.wm_total
+    }
+
+    /// Reset the per-window watermark tracker. The serving worker calls
+    /// this before each batch forward and reads
+    /// [`Self::occupancy_window`] after, giving per-batch peaks to check
+    /// against the verifier's worst-case occupancy bounds.
+    pub fn begin_occupancy_window(&mut self) {
+        self.wm_window = Watermarks::default();
+    }
+
+    /// Peak occupancies since the last [`Self::begin_occupancy_window`].
+    pub fn occupancy_window(&self) -> Watermarks {
+        self.wm_window
     }
 
     /// Load the full command stream (Fig 36 "Load Commands"): one USB
@@ -209,6 +286,8 @@ impl StreamAccelerator {
             ensure!(self.csb.load_command(spec), "CMDFIFO overflow at {}", spec.name);
         }
         self.stats.command_loads += 1;
+        let queued = self.csb.cmd_fifo.len() as u64;
+        self.note_wm(|w| &mut w.cmdfifo, queued);
         self.usb.transfer(Endpoint::PipeIn, 12 * layers.len() as u64);
         Ok(())
     }
@@ -226,6 +305,8 @@ impl StreamAccelerator {
                 let dwords = dwords.clone();
                 ensure!(self.csb.load_raw(&dwords), "CMDFIFO overflow replaying cached stream {key}");
                 self.stats.command_reuses += 1;
+                let queued = self.csb.cmd_fifo.len() as u64;
+                self.note_wm(|w| &mut w.cmdfifo, queued);
                 return Ok(());
             }
         }
@@ -241,12 +322,21 @@ impl StreamAccelerator {
     /// Advance the CSB to the next layer (Fig 36 "Load Layer").
     pub fn load_layer(&mut self) -> Option<LayerSpec> {
         let spec = self.csb.next_layer()?;
+        // Close the outgoing layer's watermark window: its peaks belong
+        // to the mark opened at its entry. (An epoch refill between two
+        // layers is likewise attributed to the layer the engine was on
+        // when the CMDFIFO was topped up.)
+        if let Some(prev) = self.tape.last_mut() {
+            prev.wm.merge_max(&self.wm_layer);
+        }
+        self.wm_layer = Watermarks::default();
         if self.tape_armed && self.tape.len() < TAPE_CAP {
             self.tape.push(LayerMark {
                 name: spec.name.clone(),
                 at: std::time::Instant::now(),
                 stats: self.stats.clone(),
                 bytes: self.usb.total_bytes(),
+                wm: Watermarks::default(),
             });
         }
         self.layer = Some(spec.clone());
@@ -268,8 +358,13 @@ impl StreamAccelerator {
     /// cost — passes, cycles, weight traffic, link bytes, host wall
     /// time. Disarms the tape.
     pub fn take_layer_deltas(&mut self) -> Vec<crate::telemetry::LayerStat> {
-        let marks = std::mem::take(&mut self.tape);
+        let mut marks = std::mem::take(&mut self.tape);
         self.tape_armed = false;
+        // The final layer's watermark window is still open — close it.
+        if let Some(last) = marks.last_mut() {
+            last.wm.merge_max(&self.wm_layer);
+        }
+        self.wm_layer = Watermarks::default();
         let end_at = std::time::Instant::now();
         let end_bytes = self.usb.total_bytes();
         let mut out = Vec::with_capacity(marks.len());
@@ -286,6 +381,13 @@ impl StreamAccelerator {
                 weight_loads: next_stats.weight_loads - m.stats.weight_loads,
                 weight_reuses: next_stats.weight_reuses - m.stats.weight_reuses,
                 link_bytes: next_bytes - m.bytes,
+                resfifo_peak: m.wm.resfifo,
+                cmdfifo_peak: m.wm.cmdfifo,
+                data_peak_words: m.wm.data_words,
+                weight_peak_words: m.wm.weight_words,
+                stall_passes: next_stats.drain_stalls - m.stats.drain_stalls,
+                epoch_reloads: (next_stats.command_loads + next_stats.command_reuses)
+                    - (m.stats.command_loads + m.stats.command_reuses),
                 start: m.at,
                 dur_us: next_at.saturating_duration_since(m.at).as_micros() as u64,
             });
@@ -324,6 +426,12 @@ impl StreamAccelerator {
                     shadow[base + l] = v.to_f64();
                 }
             }
+        }
+        let extent = (base_word + words.len()) as u64;
+        match which {
+            Cache::Data => self.note_wm(|w| &mut w.data_words, extent),
+            Cache::Weight => self.note_wm(|w| &mut w.weight_words, extent),
+            Cache::Bias => {}
         }
         self.usb.transfer(Endpoint::PipeIn, 4 * values.len() as u64);
         Ok(())
@@ -435,6 +543,10 @@ impl StreamAccelerator {
         };
         self.stats.passes += 1;
         self.stats.interrupts += 1;
+        // RESFIFO only grows between drains, so its occupancy right
+        // after a pass is the running peak since the last read.
+        let occupied = self.res_fifo.len() as u64;
+        self.note_wm(|w| &mut w.resfifo, occupied);
         Ok(produced)
     }
 
@@ -958,9 +1070,66 @@ mod tests {
         assert_eq!(d.weight_loads, 1);
         assert!(d.cycles > 0);
         assert_eq!(d.link_bytes, dev.usb.total_bytes() - bytes_before);
+        assert_eq!(d.resfifo_peak, 48, "each pass peaks at out_cols × oc before its drain");
+        assert_eq!(d.data_peak_words, 48, "3 rows × 8 width × 2 groups");
+        assert_eq!(d.weight_peak_words, 144, "8 oc × 9 taps × 2 groups");
+        assert_eq!(d.stall_passes, 0);
+        assert_eq!(d.epoch_reloads, 0, "commands were loaded before the layer window");
         // Drain disarms: the next forward records nothing until re-armed.
         dev.load_commands(&[&spec]).unwrap();
         dev.load_layer().unwrap();
         assert!(dev.take_layer_deltas().is_empty());
+    }
+
+    #[test]
+    fn occupancy_watermarks_track_peaks_and_windows() {
+        let mut rng = Rng::new(0xBEEF);
+        let spec = LayerSpec::conv("t", 3, 1, 1, 6, 16, 8, 0);
+        let mut w = ConvWeights::zeros(8, 3, 16);
+        for v in w.data.iter_mut() {
+            *v = rng.normal(0.3);
+        }
+        let wf = ConvWeightsF16::from_f32(&w);
+        let raw = rand_tensor(&mut rng, 6, 16);
+        let padded = raw.to_f32().pad_surface(1).to_f16();
+
+        let mut dev = StreamAccelerator::new(UsbLink::usb3_frontpanel());
+        assert_eq!(dev.watermarks(), Watermarks::default());
+        dev.load_commands(&[&spec]).unwrap();
+        assert_eq!(dev.watermarks().cmdfifo, 3, "one queued layer = 3 dwords");
+        dev.load_layer().unwrap();
+        dev.begin_occupancy_window();
+        dev.load_weights(&gemm::weight_block(&wf, 0, 8)).unwrap();
+        dev.load_bias(&gemm::bias_block(&wf, 0, 8)).unwrap();
+        dev.load_data(&gemm::conv_row_slice(&padded, 0, 3)).unwrap();
+        let task = SliceTask {
+            op: OpType::ConvRelu,
+            k: 3,
+            stride: 1,
+            out_cols: 6,
+            groups: 2,
+            oc_count: 8,
+            data_width: 8,
+            data_rows: 3,
+            pixel_mode: false,
+            kernel_size_reg: 9,
+            skip_relu: false,
+            weight_base: 0,
+            bias_base: 0,
+            pool_pad: 0,
+            data_base: 0,
+        };
+        let n = dev.restart_engine(&task).unwrap();
+        dev.read_results(n).unwrap();
+        let wm = dev.occupancy_window();
+        assert_eq!(wm.resfifo, 48, "one pass's results peak before the drain");
+        assert_eq!(wm.data_words, 48);
+        assert_eq!(wm.weight_words, 144);
+        assert_eq!(wm.cmdfifo, 0, "commands were loaded before this window opened");
+        // Resetting the window leaves the device-lifetime peaks intact.
+        dev.begin_occupancy_window();
+        assert_eq!(dev.occupancy_window(), Watermarks::default());
+        assert_eq!(dev.watermarks().resfifo, 48);
+        assert_eq!(dev.watermarks().cmdfifo, 3);
     }
 }

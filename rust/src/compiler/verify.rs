@@ -79,6 +79,12 @@ pub const FA_DEAD_NODE: &str = "FA-DEAD-NODE";
 pub const FA_SLOT_ALIAS: &str = "FA-SLOT-ALIAS";
 pub const FA_MODEL_DRIFT: &str = "FA-MODEL-DRIFT";
 pub const FA_SEAL_STALE: &str = "FA-SEAL-STALE";
+/// Online conformance (serving-time): a batch's measured engine
+/// counters diverged from the artifact's stamped cost model.
+pub const FA_DRIFT_COST: &str = "FA-DRIFT-COST";
+/// Online conformance (serving-time): a batch's observed RESFIFO
+/// watermark exceeded the static verifier's worst-case occupancy bound.
+pub const FA_DRIFT_OCCUPANCY: &str = "FA-DRIFT-OCCUPANCY";
 
 /// How bad a finding is. `Error` findings make an artifact unservable;
 /// `Warning`s are advisory (reported by `lint`, never gating).
@@ -902,30 +908,34 @@ fn check_split_plans(ck: &mut Checker, cs: &CompiledStream, layers: &[&LayerSpec
     }
 }
 
-/// No single engine pass may produce more results than RESFIFO holds:
-/// both drivers drain *between* passes (the batched path checks `space`
-/// before each pass), so the static safety condition is exactly that
-/// every per-pass result group fits the 1024-value FIFO.
-fn check_resfifo(ck: &mut Checker, cs: &CompiledStream, layers: &[&LayerSpec]) {
-    for (cmd, spec) in layers.iter().enumerate() {
-        let k = spec.kernel as usize;
-        let o = spec.o_side as usize;
-        let worst = match spec.op {
-            OpType::ConvRelu => {
-                let l =
-                    gemm::conv_layout(k, spec.i_ch as usize, spec.o_ch as usize);
-                match cs.granularities[cmd] {
-                    // Row passes push one whole output row per oc step.
-                    Some(ConvGranularity::Row) => o * l.oc_pass,
-                    // Pixel/split passes push one result per oc.
-                    Some(ConvGranularity::Pixel) | Some(ConvGranularity::ChannelSplit) => l.oc_pass,
-                    None => continue,
+/// Worst-case single-pass RESFIFO occupancy for one engine layer — the
+/// most results a single `restart_engine` pulse can push before the
+/// host gets a chance to drain. `None` for layers the engine never
+/// produces into the FIFO for (Idle) or convs with no planned
+/// granularity. This is the quantity [`check_resfifo`] gates statically
+/// and the online conformance checker compares device watermarks
+/// against at serving time.
+pub fn resfifo_worst_case(spec: &LayerSpec, gran: Option<ConvGranularity>) -> Option<usize> {
+    let k = spec.kernel as usize;
+    let o = spec.o_side as usize;
+    match spec.op {
+        OpType::ConvRelu => {
+            let l = gemm::conv_layout(k, spec.i_ch as usize, spec.o_ch as usize);
+            match gran {
+                // Row passes push one whole output row per oc step.
+                Some(ConvGranularity::Row) => Some(o * l.oc_pass),
+                // Pixel/split passes push one result per oc.
+                Some(ConvGranularity::Pixel) | Some(ConvGranularity::ChannelSplit) => {
+                    Some(l.oc_pass)
                 }
+                None => None,
             }
-            OpType::MaxPool | OpType::AvgPool => {
-                if k * k > DATA_CACHE_WORDS {
-                    8 // giant windows: one 8-lane result per pass
-                } else {
+        }
+        OpType::MaxPool | OpType::AvgPool => {
+            if k * k > DATA_CACHE_WORDS {
+                Some(8) // giant windows: one 8-lane result per pass
+            } else {
+                Some(
                     gemm::pool_col_chunks(
                         k,
                         spec.stride as usize,
@@ -936,10 +946,38 @@ fn check_resfifo(ck: &mut Checker, cs: &CompiledStream, layers: &[&LayerSpec]) {
                     .iter()
                     .map(|c| c.cols * 8)
                     .max()
-                    .unwrap_or(0)
-                }
+                    .unwrap_or(0),
+                )
             }
-            OpType::Idle => continue,
+        }
+        OpType::Idle => None,
+    }
+}
+
+/// The stream-wide worst-case occupancy: the max of the per-layer
+/// [`resfifo_worst_case`] bounds. A driver that drains after every pass
+/// (the single-image path) can never observe a RESFIFO watermark above
+/// this; the batched driver coalesces drains, so its watermark is
+/// additionally bounded by the FIFO capacity itself.
+pub fn resfifo_stream_bound(cs: &CompiledStream) -> u64 {
+    cs.net
+        .engine_layers()
+        .iter()
+        .enumerate()
+        .filter_map(|(cmd, spec)| resfifo_worst_case(spec, cs.granularities[cmd]))
+        .max()
+        .unwrap_or(0) as u64
+}
+
+/// No single engine pass may produce more results than RESFIFO holds:
+/// both drivers drain *between* passes (the batched path checks `space`
+/// before each pass), so the static safety condition is exactly that
+/// every per-pass result group fits the 1024-value FIFO.
+fn check_resfifo(ck: &mut Checker, cs: &CompiledStream, layers: &[&LayerSpec]) {
+    for (cmd, spec) in layers.iter().enumerate() {
+        let worst = match resfifo_worst_case(spec, cs.granularities[cmd]) {
+            Some(w) => w,
+            None => continue,
         };
         if worst > RES_FIFO_VALUES {
             ck.err(

@@ -190,6 +190,21 @@ pub struct WorkerStats {
     /// Per-worker model-handle LRU hits/misses (repo fetches saved).
     pub model_cache_hits: u64,
     pub model_cache_misses: u64,
+    /// Forced drain-barrier stalls on this worker's device (RESFIFO
+    /// lacked space for the next pass's results).
+    pub drain_stalls: u64,
+    /// Device-lifetime peak RESFIFO occupancy.
+    pub resfifo_peak: u64,
+    /// Device-lifetime peak CMDFIFO occupancy (dwords).
+    pub cmdfifo_peak: u64,
+    /// Device-lifetime peak data-cache extent (128-bit words).
+    pub data_peak_words: u64,
+    /// Device-lifetime peak weight-cache extent (128-bit words).
+    pub weight_peak_words: u64,
+    /// Online-conformance batches checked on this worker.
+    pub conformance_checks: u64,
+    /// Typed `FA-DRIFT-*` events this worker observed.
+    pub drift_events: u64,
 }
 
 impl WorkerStats {
@@ -288,6 +303,13 @@ pub struct ServeStats {
     /// Requests that went through the full pipeline while the result
     /// cache was enabled.
     pub result_cache_misses: usize,
+    /// Online-conformance batches checked across all workers (0 when
+    /// `ServiceConfig::conformance_sample` is off).
+    pub conformance_checks: u64,
+    /// Typed `FA-DRIFT-*` events across all workers — batches whose
+    /// measured engine counters or occupancy watermarks diverged from
+    /// the artifact's stamped model. Zero on a healthy deployment.
+    pub drift_events: u64,
 }
 
 impl ServeStats {
@@ -321,6 +343,8 @@ impl ServeStats {
         self.weight_loads = self.workers.iter().map(|w| w.weight_loads).sum();
         self.weight_sweeps = self.workers.iter().map(|w| w.weight_sweeps).sum();
         self.weight_reuses = self.workers.iter().map(|w| w.weight_reuses).sum();
+        self.conformance_checks = self.workers.iter().map(|w| w.conformance_checks).sum();
+        self.drift_events = self.workers.iter().map(|w| w.drift_events).sum();
     }
 
     /// Conv passes per weight load across the whole run — the

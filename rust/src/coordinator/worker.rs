@@ -34,8 +34,8 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::accel::stream::StreamAccelerator;
-use crate::compiler::{LruCache, ModelRepo, ServableModel};
+use crate::accel::stream::{StreamAccelerator, Watermarks, RES_FIFO_DEPTH};
+use crate::compiler::{cost, verify, LruCache, ModelRepo, ServableModel};
 use crate::host::batch::forward_batch_compiled;
 use crate::host::driver::HostDriver;
 use crate::host::postprocess;
@@ -80,6 +80,20 @@ pub(crate) struct BatchMetric {
     pub command_reuses: u64,
     /// Whether the model handle came from the per-worker LRU.
     pub model_cache_hit: bool,
+    /// Network this batch served (per-network drift accounting).
+    pub network: String,
+    /// Forced drain-barrier stalls this batch added.
+    pub drain_stalls: u64,
+    /// Device-lifetime peak occupancies after this batch (watermarks
+    /// fold by max in the collector, not by sum).
+    pub resfifo_peak: u64,
+    pub cmdfifo_peak: u64,
+    pub data_peak_words: u64,
+    pub weight_peak_words: u64,
+    /// Whether the online conformance checker sampled this batch.
+    pub conformance_checked: bool,
+    /// Typed `FA-DRIFT-*` events the checker raised on this batch.
+    pub drift_events: u64,
 }
 
 /// Everything a worker needs besides the device and the batch at hand.
@@ -93,6 +107,11 @@ struct WorkerCtx<'a> {
     hub: &'a Hub,
     /// Per-worker LRU of resolved model handles (network name → model).
     models: LruCache<String, Arc<ServableModel>>,
+    /// Online-conformance sampling period: check every Nth batch
+    /// (0 = off — the per-batch cost is one integer compare).
+    conformance_sample: u32,
+    /// Batches this worker has formed (drives the sampling cadence).
+    batch_count: u64,
 }
 
 impl WorkerCtx<'_> {
@@ -125,6 +144,7 @@ pub(crate) fn run_worker(
     sched: &Scheduler,
     policy: &BatchPolicy,
     model_cache: usize,
+    conformance_sample: u32,
     hub: &Hub,
     tx: &mpsc::Sender<WorkerEvent>,
 ) {
@@ -135,6 +155,8 @@ pub(crate) fn run_worker(
         tx,
         hub,
         models: LruCache::new(model_cache.max(1)),
+        conformance_sample,
+        batch_count: 0,
     };
     let mut dev = StreamAccelerator::new(link);
     // Network affinity: keep draining the network this device served
@@ -176,9 +198,23 @@ fn run_batch(dev: &mut StreamAccelerator, ctx: &mut WorkerCtx, batch: &[QueuedRe
         Err(err) => {
             // Admission normally filters unknown networks; failing the
             // batch keeps the run draining even if one slips through.
-            return fail_batch(batch, ctx.worker, format!("{err:#}"), ctx.tx).is_ok();
+            return fail_batch(batch, ctx.worker, format!("{err:#}"), ctx.hub, ctx.tx).is_ok();
         }
     };
+    ctx.batch_count += 1;
+    // Online conformance: sample every Nth batch (off at 0). The check
+    // itself is pure arithmetic over counters the device already keeps,
+    // so the forward's computation — and its bits — are untouched.
+    let conformance =
+        ctx.conformance_sample != 0 && ctx.batch_count % ctx.conformance_sample as u64 == 0;
+    if ctx.hub.flight_recording() {
+        ctx.hub.flight_event(
+            "batch",
+            batch[0].request.id,
+            &model.name,
+            &format!("worker {} assembled batch of {size}", ctx.worker),
+        );
+    }
     let images: Vec<TensorF32> = batch.iter().map(|q| q.request.image.clone()).collect();
     let link_before = dev.usb.total_seconds();
     let engine_before = ClockDomain::ENGINE.secs(dev.stats.cycles);
@@ -187,6 +223,12 @@ fn run_batch(dev: &mut StreamAccelerator, ctx: &mut WorkerCtx, batch: &[QueuedRe
     let wreuses_before = dev.stats.weight_reuses;
     let cmd_loads_before = dev.stats.command_loads;
     let cmd_reuses_before = dev.stats.command_reuses;
+    let stalls_before = dev.stats.drain_stalls;
+    let passes_before = dev.stats.passes;
+    let cycles_before = dev.stats.cycles;
+    if conformance {
+        dev.begin_occupancy_window();
+    }
     if tracing {
         dev.begin_layer_tape();
     }
@@ -212,6 +254,20 @@ fn run_batch(dev: &mut StreamAccelerator, ctx: &mut WorkerCtx, batch: &[QueuedRe
             let link_seconds = dev.usb.total_seconds() - link_before;
             let engine_seconds = ClockDomain::ENGINE.secs(dev.stats.cycles) - engine_before;
             let modeled_each = (link_seconds + engine_seconds) / size as f64;
+            let drifts = if conformance {
+                conformance_drifts(
+                    &model,
+                    size,
+                    dev.stats.passes - passes_before,
+                    dev.stats.cycles - cycles_before,
+                    &dev.occupancy_window(),
+                )
+            } else {
+                Vec::new()
+            };
+            for d in &drifts {
+                ctx.hub.flight_event("drift", batch[0].request.id, &model.name, d);
+            }
             for (q, probs) in batch.iter().zip(all_probs) {
                 let t_pp = tracing.then(Instant::now);
                 let argmax = postprocess::argmax(&probs).unwrap_or(0);
@@ -224,6 +280,12 @@ fn run_batch(dev: &mut StreamAccelerator, ctx: &mut WorkerCtx, batch: &[QueuedRe
                     tr.span("forward", t0, t_done);
                     for l in &layers {
                         tr.span_us(format!("layer {}", l.name), tr.instant_us(l.start), l.dur_us);
+                    }
+                    // Drift events surface on the trace stream too: one
+                    // instant marker per typed event at forward end.
+                    for d in &drifts {
+                        let code = d.split(':').next().unwrap_or(d);
+                        tr.span_us(format!("drift {code}"), tr.instant_us(t_done), 0);
                     }
                     if let Some(t_pp) = t_pp {
                         tr.span("postprocess", t_pp, Instant::now());
@@ -246,6 +308,7 @@ fn run_batch(dev: &mut StreamAccelerator, ctx: &mut WorkerCtx, batch: &[QueuedRe
                     return false;
                 }
             }
+            let wm = dev.watermarks();
             let metric = BatchMetric {
                 worker: ctx.worker,
                 size,
@@ -258,14 +321,26 @@ fn run_batch(dev: &mut StreamAccelerator, ctx: &mut WorkerCtx, batch: &[QueuedRe
                 command_loads: dev.stats.command_loads - cmd_loads_before,
                 command_reuses: dev.stats.command_reuses - cmd_reuses_before,
                 model_cache_hit,
+                network: model.name.clone(),
+                drain_stalls: dev.stats.drain_stalls - stalls_before,
+                resfifo_peak: wm.resfifo,
+                cmdfifo_peak: wm.cmdfifo,
+                data_peak_words: wm.data_words,
+                weight_peak_words: wm.weight_words,
+                conformance_checked: conformance,
+                drift_events: drifts.len() as u64,
             };
             ctx.tx.send(WorkerEvent::Batch(metric)).is_ok()
         }
         Err(error) => {
+            if error.contains("panicked") {
+                ctx.hub.flight_event("panic", batch[0].request.id, &model.name, &error);
+                ctx.hub.flight_dump(&format!("worker {} panic: {error}", ctx.worker));
+            }
             // The device may be mid-transfer: start from a clean one.
             *dev = StreamAccelerator::new(ctx.link);
             if size == 1 {
-                fail_batch(batch, ctx.worker, error, ctx.tx).is_ok()
+                fail_batch(batch, ctx.worker, error, ctx.hub, ctx.tx).is_ok()
             } else {
                 // Don't let one poisoned request fail its batch-mates:
                 // replay each member alone (recursion depth is 1).
@@ -296,22 +371,80 @@ fn forward_probs(
     }
 }
 
+/// Online oracle conformance: compare what the device actually did on
+/// this batch against what the compile-time cost oracle promised and
+/// what the static verifier bounded. Returns one human-readable string
+/// per typed `FA-DRIFT-*` event (empty = conformant). Pure arithmetic
+/// over counters the device already keeps — no extra device work.
+fn conformance_drifts(
+    model: &ServableModel,
+    size: usize,
+    measured_passes: u64,
+    measured_cycles: u64,
+    wm: &Watermarks,
+) -> Vec<String> {
+    let cs = &model.stream;
+    let mut out = Vec::new();
+    // 1. Stamp self-check: re-derive the modeled cost at the stamped
+    //    batch/residency. A forged or stale `modeled` diverges here no
+    //    matter what batch size the request traffic happens to use.
+    let fresh = cost::stream_cost(cs, cs.modeled.batch.max(1), cs.modeled.residency);
+    if fresh != cs.modeled {
+        out.push(format!(
+            "{}: stamped cost model diverges from a fresh re-derivation",
+            verify::FA_DRIFT_COST
+        ));
+    }
+    // 2. Measured vs modeled: passes and engine cycles are residency-
+    //    invariant, so a Cold re-derivation at the live batch size is an
+    //    exact prediction of both (link traffic is residency-dependent
+    //    and deliberately excluded).
+    let want = cost::stream_cost(cs, size, cost::Residency::Cold).total();
+    if measured_passes != want.passes || measured_cycles != want.cycles {
+        out.push(format!(
+            "{}: measured passes/cycles {}/{} != modeled {}/{} (batch {})",
+            verify::FA_DRIFT_COST, measured_passes, measured_cycles, want.passes, want.cycles, size
+        ));
+    }
+    // 3. Occupancy: the single-image driver drains after every pass, so
+    //    its RESFIFO watermark must respect the static verifier's
+    //    per-stream bound. The batched driver legitimately lets results
+    //    pool across images, so only the hardware depth binds there.
+    let bound = if size == 1 {
+        verify::resfifo_stream_bound(cs)
+    } else {
+        RES_FIFO_DEPTH as u64
+    };
+    if wm.resfifo > bound {
+        out.push(format!(
+            "{}: RESFIFO watermark {} exceeds the verified bound {}",
+            verify::FA_DRIFT_OCCUPANCY, wm.resfifo, bound
+        ));
+    }
+    out
+}
+
 fn fail_batch(
     batch: &[QueuedRequest],
     worker: usize,
     error: String,
+    hub: &Hub,
     tx: &mpsc::Sender<WorkerEvent>,
 ) -> Result<(), mpsc::SendError<WorkerEvent>> {
     for q in batch {
         if let Some(tr) = &q.request.trace {
             tr.set_verdict(Verdict::Failed);
         }
+        hub.flight_event("fail", q.request.id, q.request.network.as_deref().unwrap_or(""), &error);
         tx.send(WorkerEvent::Failed(FailedRequest {
             id: q.request.id,
             worker,
             error: error.clone(),
         }))?;
     }
+    // Typed request failures are exactly the moments worth a post-mortem:
+    // snapshot the ring so the events leading up to this failure survive.
+    hub.flight_dump(&format!("request failure on worker {worker}: {error}"));
     Ok(())
 }
 
@@ -374,6 +507,7 @@ mod tests {
             &sched,
             &BatchPolicy::batched(4),
             4,
+            0,
             &Hub::new(1),
             &tx,
         );
@@ -424,6 +558,7 @@ mod tests {
             &sched,
             &BatchPolicy::single(),
             4,
+            0,
             &Hub::new(1),
             &tx,
         );
@@ -460,6 +595,7 @@ mod tests {
             &sched,
             &BatchPolicy::single(),
             4,
+            0,
             &Hub::new(1),
             &tx,
         );
@@ -481,6 +617,39 @@ mod tests {
     }
 
     #[test]
+    fn conformance_sampling_is_clean_on_an_honest_model() {
+        let repo = tiny_repo();
+        let sched = Scheduler::new();
+        let mut rng = Rng::new(5);
+        sched.push_all((0..4).map(|id| good_request(id, &mut rng)));
+        sched.close();
+        let (tx, rx) = mpsc::channel();
+        run_worker(
+            0,
+            &repo,
+            crate::hw::usb::UsbLink::usb3_frontpanel(),
+            &sched,
+            &BatchPolicy::single(),
+            4,
+            1, // check every batch
+            &Hub::new(1),
+            &tx,
+        );
+        drop(tx);
+        let mut checked = 0;
+        for ev in rx {
+            if let WorkerEvent::Batch(m) = ev {
+                assert!(m.conformance_checked, "sample=1 checks every batch");
+                assert_eq!(m.drift_events, 0, "honest model must not drift");
+                assert!(m.resfifo_peak > 0, "device observed RESFIFO occupancy");
+                assert!(m.data_peak_words > 0 && m.weight_peak_words > 0);
+                checked += 1;
+            }
+        }
+        assert_eq!(checked, 4);
+    }
+
+    #[test]
     fn traced_batch_records_queue_forward_layer_and_postprocess_spans() {
         let repo = tiny_repo();
         let sched = Scheduler::new();
@@ -498,6 +667,7 @@ mod tests {
             &sched,
             &BatchPolicy::single(),
             4,
+            0,
             &hub,
             &tx,
         );

@@ -27,7 +27,22 @@
 //!                            qw_p50_us, qw_p90_us, sv_p50_us,
 //!                            sv_p90_us, lat_p50_us, lat_p99_us)
 //!   worker row := u32le worker · u64le served · u64le batches
+//!   stats tail := n_networks × u64le × 2 (conformance_checks,
+//!                            drift_events)
+//!              · n_workers × u64le × 5 (drain_stalls, resfifo_peak,
+//!                            cmdfifo_peak, data_peak_words,
+//!                            weight_peak_words)
 //! ```
+//!
+//! The **stats tail** is the versioning seam of the `stats` frame: it
+//! rides *after* every row the original 0x06 layout defined, so a
+//! pre-tail server's frame simply ends early and a post-tail client
+//! decodes it with the tail fields zeroed ([`decode_stats_report`]
+//! checks whether any body remains before reading the tail). A frame
+//! that *starts* a tail must complete it — partial tails and stray
+//! bytes after a full tail are still [`ProtoError`]s, so strictness is
+//! unchanged for same-version peers. [`encode_stats_report_legacy`]
+//! emits the pre-tail layout for compatibility tests.
 //!
 //! A `stats_req` on any connection answers one `stats` frame out of
 //! band: it consumes no request id, counts in neither `requests` nor
@@ -222,6 +237,13 @@ impl<'a> Cursor<'a> {
         }
         Ok(())
     }
+
+    /// Whether the whole body has been consumed — how the stats decoder
+    /// distinguishes a pre-tail frame (ends exactly here) from one that
+    /// carries the extension tail.
+    fn at_end(&self) -> bool {
+        self.pos == self.buf.len()
+    }
 }
 
 fn put_u16(out: &mut Vec<u8>, v: u16) {
@@ -384,12 +406,32 @@ pub fn decode_stats_request(body: &[u8]) -> Result<(), ProtoError> {
     c.finish()
 }
 
-/// Encode a stats-report frame body.
+/// Encode a stats-report frame body (current layout: base rows plus
+/// the extension tail).
 pub fn encode_stats_report(rep: &StatsReport) -> Vec<u8> {
+    let mut out = encode_stats_report_legacy(rep);
+    let svc = &rep.service;
+    for n in &svc.networks {
+        put_u64(&mut out, n.conformance_checks);
+        put_u64(&mut out, n.drift_events);
+    }
+    for w in &svc.workers {
+        for v in [w.drain_stalls, w.resfifo_peak, w.cmdfifo_peak, w.data_peak_words, w.weight_peak_words] {
+            put_u64(&mut out, v);
+        }
+    }
+    out
+}
+
+/// Encode the pre-tail 0x06 layout — byte-for-byte what a server from
+/// before the extension tail emitted. Kept public so compatibility
+/// tests (and any tooling that must speak to an old server) can pin
+/// that a tail-aware decoder still accepts it.
+pub fn encode_stats_report_legacy(rep: &StatsReport) -> Vec<u8> {
     let svc = &rep.service;
     assert!(svc.networks.len() <= u16::MAX as usize, "too many networks for the wire");
     assert!(svc.workers.len() <= u16::MAX as usize, "too many workers for the wire");
-    let mut out = Vec::with_capacity(1 + 8 * 14 + svc.networks.len() * 90 + svc.workers.len() * 20);
+    let mut out = Vec::with_capacity(1 + 8 * 14 + svc.networks.len() * 106 + svc.workers.len() * 60);
     out.push(TAG_STATS_REPORT);
     put_u64(&mut out, rep.uptime_us);
     for v in [rep.connections, rep.requests, rep.responses, rep.sheds, rep.protocol_errors, rep.idle_disconnects] {
@@ -474,11 +516,39 @@ pub fn decode_stats_report(body: &[u8]) -> Result<StatsReport, ProtoError> {
             sv_p90_us: c.u64()?,
             lat_p50_us: c.u64()?,
             lat_p99_us: c.u64()?,
+            conformance_checks: 0,
+            drift_events: 0,
         });
     }
     let n_workers = c.u16()? as usize;
     for _ in 0..n_workers {
-        svc.workers.push(WorkerSnapshot { worker: c.u32()?, served: c.u64()?, batches: c.u64()? });
+        svc.workers.push(WorkerSnapshot {
+            worker: c.u32()?,
+            served: c.u64()?,
+            batches: c.u64()?,
+            drain_stalls: 0,
+            resfifo_peak: 0,
+            cmdfifo_peak: 0,
+            data_peak_words: 0,
+            weight_peak_words: 0,
+        });
+    }
+    // Extension tail. A pre-tail frame ends exactly here — its tail
+    // fields stay zero. Once any tail byte is present the whole tail
+    // must parse (and nothing may follow it), so decoding stays strict
+    // between same-version peers.
+    if !c.at_end() {
+        for n in &mut svc.networks {
+            n.conformance_checks = c.u64()?;
+            n.drift_events = c.u64()?;
+        }
+        for w in &mut svc.workers {
+            w.drain_stalls = c.u64()?;
+            w.resfifo_peak = c.u64()?;
+            w.cmdfifo_peak = c.u64()?;
+            w.data_peak_words = c.u64()?;
+            w.weight_peak_words = c.u64()?;
+        }
     }
     c.finish()?;
     Ok(StatsReport {
@@ -714,12 +784,23 @@ mod tests {
                         sv_p90_us: 700,
                         lat_p50_us: 650,
                         lat_p99_us: 1200,
+                        conformance_checks: 9,
+                        drift_events: 2,
                     },
                     crate::telemetry::NetworkSnapshot { name: "tiny".to_string(), ..Default::default() },
                 ],
                 workers: vec![
-                    crate::telemetry::WorkerSnapshot { worker: 0, served: 20, batches: 7 },
-                    crate::telemetry::WorkerSnapshot { worker: 1, served: 15, batches: 6 },
+                    crate::telemetry::WorkerSnapshot {
+                        worker: 0,
+                        served: 20,
+                        batches: 7,
+                        drain_stalls: 3,
+                        resfifo_peak: 48,
+                        cmdfifo_peak: 12,
+                        data_peak_words: 512,
+                        weight_peak_words: 4096,
+                    },
+                    crate::telemetry::WorkerSnapshot { worker: 1, served: 15, batches: 6, ..Default::default() },
                 ],
             },
         }
@@ -733,6 +814,35 @@ mod tests {
         // Degenerate report (no networks, no workers) survives too.
         let empty = StatsReport::default();
         assert_eq!(decode_stats_report(&encode_stats_report(&empty)).unwrap(), empty);
+    }
+
+    #[test]
+    fn pre_tail_stats_frames_decode_with_zeroed_tail_fields() {
+        let rep = sample_report();
+        let legacy = encode_stats_report_legacy(&rep);
+        let new = encode_stats_report(&rep);
+        assert!(new.len() > legacy.len(), "tail adds bytes");
+        assert!(new.starts_with(&legacy), "the tail strictly extends the old layout");
+        let back = decode_stats_report(&legacy).unwrap();
+        // Everything the old layout carried survives...
+        assert_eq!(back.uptime_us, rep.uptime_us);
+        assert_eq!(back.service.served, rep.service.served);
+        assert_eq!(back.service.networks.len(), rep.service.networks.len());
+        assert_eq!(back.service.networks[0].name, "squeezenet");
+        assert_eq!(back.service.networks[0].lat_p99_us, 1200);
+        assert_eq!(back.service.workers[0].served, 20);
+        // ...and every tail field reads as zero, not garbage.
+        for n in &back.service.networks {
+            assert_eq!((n.conformance_checks, n.drift_events), (0, 0));
+        }
+        for w in &back.service.workers {
+            assert_eq!(w.drain_stalls, 0);
+            assert_eq!(w.resfifo_peak, 0);
+            assert_eq!(w.weight_peak_words, 0);
+        }
+        // A frame that starts the tail must complete it.
+        let partial = &new[..new.len() - 4];
+        assert_eq!(decode_stats_report(partial), Err(ProtoError::Truncated));
     }
 
     #[test]

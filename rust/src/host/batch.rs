@@ -303,6 +303,7 @@ fn conv_batch(
                                 let n_oc = oc_pass.min(resident - oc_local);
                                 let n_results = o * n_oc;
                                 if dev.res_fifo.space() < n_results {
+                                    dev.stats.drain_stalls += 1;
                                     drain_conv(dev, &mut pending, &mut outs)?;
                                 }
                                 let task = SliceTask {
@@ -360,6 +361,7 @@ fn conv_batch(
                                 while oc_local < resident {
                                     let n_oc = oc_pass.min(resident - oc_local);
                                     if dev.res_fifo.space() < n_oc {
+                                        dev.stats.drain_stalls += 1;
                                         drain_conv(dev, &mut pending, &mut outs)?;
                                     }
                                     let task = SliceTask {
@@ -448,6 +450,7 @@ fn conv_batch(
                                     while oc_local < resident {
                                         let n_oc = oc_pass.min(resident - oc_local);
                                         if dev.res_fifo.space() < n_oc {
+                                            dev.stats.drain_stalls += 1;
                                             drain_split(
                                                 dev,
                                                 &mut split_pending,
@@ -646,6 +649,7 @@ fn pool_batch(
                     for ci in 0..chunk.len() {
                         let n_results = cchunk.cols * 8;
                         if dev.res_fifo.space() < n_results {
+                            dev.stats.drain_stalls += 1;
                             drain_pool(dev, &mut pending, &mut outs)?;
                         }
                         let task = SliceTask {
@@ -731,6 +735,7 @@ fn giant_maxpool_batch(
                         let mut in_flight: Vec<usize> = Vec::with_capacity(group.len());
                         for ci in 0..group.len() {
                             if dev.res_fifo.space() < 8 {
+                                dev.stats.drain_stalls += 1;
                                 drain_giant(dev, &mut in_flight, &mut best)?;
                             }
                             let task = SliceTask {

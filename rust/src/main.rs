@@ -457,6 +457,12 @@ fn main() -> Result<()> {
             // most ~2N lines on disk. 0 = unbounded (the old behavior).
             let trace_keep: usize =
                 args.flags.get("trace-keep").map(|v| v.parse()).transpose()?.unwrap_or(0);
+            // Online oracle conformance: check every Nth micro-batch per
+            // worker against the compile-time cost model (0 = off).
+            let conformance: u32 =
+                args.flags.get("conformance").map(|v| v.parse()).transpose()?.unwrap_or(0);
+            let flight_path = args.flags.get("flight-recorder").cloned();
+            let metrics_addr = args.flags.get("metrics-addr").cloned();
 
             let blobs = synthesize_weights(&net, seed);
             let mut repo = fusionaccel::compiler::ModelRepo::new();
@@ -466,8 +472,35 @@ fn main() -> Result<()> {
                 workers,
                 batch,
             ))
-            .with_queue_capacity(queue);
+            .with_queue_capacity(queue)
+            .with_conformance_sample(conformance);
             let svc = std::sync::Arc::new(fusionaccel::service::Service::start(std::sync::Arc::new(repo), &cfg)?);
+            if let Some(p) = &flight_path {
+                // Arms the recorder: structured breadcrumbs ring in
+                // memory and dump to this path as JSONL on a worker
+                // panic, a typed request failure, or shutdown.
+                svc.telemetry().set_flight_path(p.as_str());
+                println!("flight recorder armed → {p}");
+            }
+            if let Some(maddr) = &metrics_addr {
+                let listener = std::net::TcpListener::bind(maddr.as_str())
+                    .with_context(|| format!("bind metrics {maddr}"))?;
+                let bound = listener.local_addr()?;
+                println!("metrics on http://{bound}/metrics (Prometheus text exposition)");
+                // The handler holds only a Weak ref so the final
+                // shutdown can still unwrap the service Arc.
+                let weak = std::sync::Arc::downgrade(&svc);
+                std::thread::Builder::new()
+                    .name("fa-metrics".to_string())
+                    .spawn(move || {
+                        for stream in listener.incoming() {
+                            let Ok(mut sock) = stream else { continue };
+                            let Some(svc) = weak.upgrade() else { return };
+                            let _ = serve_metrics(&mut sock, &svc);
+                        }
+                    })
+                    .context("spawn metrics endpoint")?;
+            }
             let mut door_cfg = fusionaccel::frontdoor::DoorConfig::default();
             if idle_secs > 0.0 {
                 door_cfg = door_cfg.with_idle_timeout(Duration::from_secs_f64(idle_secs));
@@ -585,6 +618,16 @@ fn main() -> Result<()> {
                     if dropped > 0 { format!(" ({dropped} dropped at the ring)") } else { String::new() }
                 );
             }
+            if flight_path.is_some() {
+                // Shutdown is itself a dump trigger, so a clean run
+                // still leaves a post-mortem trail on disk.
+                if let Some(n) = svc.telemetry().flight_dump("shutdown") {
+                    println!(
+                        "flight recorder: {n} event(s) dumped to {}",
+                        flight_path.as_deref().unwrap_or("?")
+                    );
+                }
+            }
             let svc = std::sync::Arc::try_unwrap(svc)
                 .map_err(|_| anyhow::anyhow!("service still referenced after door shutdown"))?;
             let stats = svc.shutdown()?;
@@ -596,6 +639,12 @@ fn main() -> Result<()> {
                 stats.deadline_sheds,
                 stats.latency.summary_ms()
             );
+            if conformance > 0 {
+                println!(
+                    "conformance: {} batch(es) checked, {} drift event(s)",
+                    stats.conformance_checks, stats.drift_events
+                );
+            }
         }
         "loadgen" => loadgen(&args)?,
         "top" => top(&args)?,
@@ -641,22 +690,30 @@ fn main() -> Result<()> {
                  \x20 listen    [--addr 127.0.0.1:7311] [--net micro|...] [--workers 2] [--batch 4]\n\
                  \x20           [--queue 16] [--seed 5] [--duration 0] [--port-file p.txt]\n\
                  \x20           [--idle-timeout 0] [--trace-out trace.json] [--trace-keep 0]\n\
+                 \x20           [--conformance 0] [--flight-recorder flight.jsonl] [--metrics-addr host:port]\n\
                  \x20           TCP front door over a long-lived service (--duration 0 = run forever;\n\
                  \x20           --addr host:0 picks an ephemeral port, written to --port-file;\n\
                  \x20           --idle-timeout drops silent peers after N seconds, 0 = never;\n\
                  \x20           --trace-out records request traces: Chrome trace JSON at teardown\n\
                  \x20           plus a live .jsonl event log alongside; --trace-keep N rotates the\n\
-                 \x20           .jsonl every N lines to .jsonl.1, 0 = unbounded)\n\
+                 \x20           .jsonl every N lines to .jsonl.1, 0 = unbounded;\n\
+                 \x20           --conformance N checks every Nth batch against the cost oracle and\n\
+                 \x20           raises typed FA-DRIFT-* events on divergence, 0 = off;\n\
+                 \x20           --flight-recorder arms a bounded crash ring, dumped as JSONL on\n\
+                 \x20           worker panic, request failure, or shutdown;\n\
+                 \x20           --metrics-addr serves GET /metrics as a Prometheus text exposition)\n\
                  \x20 loadgen   --addr host:port [--clients 32] [--requests 16] [--rate 200]\n\
                  \x20           [--deadline-ms 0] [--net micro|...] [--seed 5] [--verify 2]\n\
                  \x20           [--ramp] [--ramp-start r/2] [--ramp-step r/2] [--ramp-steps 4] [--scrape]\n\
                  \x20           open-loop socket load: goodput/shed-rate/tails, bit-exact verify,\n\
                  \x20           nonzero exit on wrong results or protocol errors; --ramp sweeps the\n\
                  \x20           offered rate to find the goodput knee; --scrape cross-checks the\n\
-                 \x20           server's stats frame against the clients' own accounting\n\
+                 \x20           server's stats frame against the clients' own accounting and\n\
+                 \x20           asserts the device-counter families are present\n\
                  \x20 top       --addr host:port [--interval 1] [--count 0]\n\
-                 \x20           live telemetry: per-network throughput, shed counts, predictor\n\
-                 \x20           state, and latency quantiles polled over the stats frame\n\
+                 \x20           live telemetry: per-network throughput, shed counts, drift\n\
+                 \x20           events, predictor state, latency quantiles, and per-worker\n\
+                 \x20           device watermarks polled over the stats frame\n\
                  \x20 bench-diff --old <dir|file> --new <dir|file> [--threshold 0.15]\n\
                  \x20            CI regression gate over persisted BENCH_*.json metrics\n\
                  \x20 selftest\n\n\
@@ -666,6 +723,41 @@ fn main() -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Answer one HTTP request on the `--metrics-addr` endpoint: `GET
+/// /metrics` returns the Prometheus text exposition of the service's
+/// live snapshot, anything else is a 404. Deliberately minimal (std
+/// only, one request per connection, `Connection: close`) — it exists
+/// for scrapers and `curl`, not as a web server.
+fn serve_metrics(sock: &mut std::net::TcpStream, svc: &fusionaccel::service::Service) -> std::io::Result<()> {
+    use std::io::{Read as _, Write as _};
+    sock.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        let n = sock.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+            break;
+        }
+    }
+    let line = head.split(|&b| b == b'\r' || b == b'\n').next().unwrap_or(&[]);
+    let line = String::from_utf8_lossy(line);
+    let (status, body) = if line.starts_with("GET /metrics") {
+        ("200 OK", fusionaccel::telemetry::prometheus_exposition(&svc.live_stats()))
+    } else {
+        ("404 Not Found", "not found\n".to_string())
+    };
+    write!(
+        sock,
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    sock.flush()
 }
 
 /// Recursively collect `BENCH_*.json` files under `path` (a file is
@@ -846,11 +938,19 @@ fn top(args: &Args) -> Result<()> {
                         .map_or(0, |pn| pn.served);
                     n.served.saturating_sub(before) as f64 / dt
                 });
+                // Drift renders events/checks: "0/40" is a healthy
+                // sampled network, "—" means conformance is off.
+                let drift = if n.conformance_checks > 0 || n.drift_events > 0 {
+                    format!("{}/{}", n.drift_events, n.conformance_checks)
+                } else {
+                    "—".to_string()
+                };
                 vec![
                     n.name.clone(),
                     n.served.to_string(),
                     rps.map_or_else(|| "—".to_string(), |r| format!("{r:.1}")),
                     n.deadline_sheds.to_string(),
+                    drift,
                     ms(n.predicted_us),
                     ms(n.qw_p90_us),
                     ms(n.lat_p50_us),
@@ -862,7 +962,7 @@ fn top(args: &Args) -> Result<()> {
             println!("(no per-network traffic yet)");
         } else {
             benchkit::table(
-                &["network", "served", "req/s", "ddl-shed", "pred ms", "qw p90 ms", "p50 ms", "p99 ms"],
+                &["network", "served", "req/s", "ddl-shed", "drift", "pred ms", "qw p90 ms", "p50 ms", "p99 ms"],
                 &rows,
             );
         }
@@ -871,7 +971,19 @@ fn top(args: &Args) -> Result<()> {
                 .service
                 .workers
                 .iter()
-                .map(|w| format!("w{}: {} in {} batch(es)", w.worker, w.served, w.batches))
+                .map(|w| {
+                    format!(
+                        "w{}: {} in {} batch(es), {} stall(s), peaks res {} cmd {} data {} wt {}",
+                        w.worker,
+                        w.served,
+                        w.batches,
+                        w.drain_stalls,
+                        w.resfifo_peak,
+                        w.cmdfifo_peak,
+                        w.data_peak_words,
+                        w.weight_peak_words
+                    )
+                })
                 .collect();
             println!("workers: {}", w.join("  |  "));
         }
@@ -1108,6 +1220,30 @@ fn loadgen(args: &Args) -> Result<()> {
             rep.service.failed,
             total.failed
         );
+        // The extension-tail counter families must actually be present:
+        // any worker that formed a batch has pushed real data and
+        // weights through the device, so zero watermarks would mean the
+        // device counters were lost somewhere between the simulator and
+        // the wire.
+        if rep.service.served > 0 {
+            let active: Vec<_> = rep.service.workers.iter().filter(|w| w.batches > 0).collect();
+            anyhow::ensure!(!active.is_empty(), "scrape: requests served but no worker reports a batch");
+            for w in &active {
+                anyhow::ensure!(
+                    w.resfifo_peak > 0 && w.data_peak_words > 0 && w.weight_peak_words > 0,
+                    "scrape: worker {} formed {} batch(es) but reports empty device watermarks",
+                    w.worker,
+                    w.batches
+                );
+            }
+            let checks: u64 = rep.service.networks.iter().map(|n| n.conformance_checks).sum();
+            let drift: u64 = rep.service.networks.iter().map(|n| n.drift_events).sum();
+            println!(
+                "scrape: device watermarks present on {} worker(s); conformance {checks} check(s), \
+                 {drift} drift event(s)",
+                active.len()
+            );
+        }
     }
     anyhow::ensure!(total.wrong == 0, "{} wire response(s) differ from the local forward", total.wrong);
     anyhow::ensure!(total.protocol_errors == 0, "{} protocol error(s)", total.protocol_errors);

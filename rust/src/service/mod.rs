@@ -90,17 +90,30 @@ pub struct ServiceConfig {
     /// [`SubmitError::QueueFull`] and [`Service::submit_wait`] blocks.
     /// `0` = unbounded (the closed-batch wrappers use this).
     pub queue_capacity: usize,
+    /// Online oracle-conformance sampling period: each worker checks
+    /// every Nth micro-batch it forms against the compile-time cost
+    /// model and the static verifier's occupancy bounds, raising typed
+    /// `FA-DRIFT-*` events on divergence. `0` = off (the per-batch cost
+    /// is one integer compare); the check never touches the forward's
+    /// computation, so responses are bit-identical either way.
+    pub conformance_sample: u32,
 }
 
 impl ServiceConfig {
     /// Unbounded-queue service over `serve` settings.
     pub fn new(serve: ServeConfig) -> ServiceConfig {
-        ServiceConfig { serve, queue_capacity: 0 }
+        ServiceConfig { serve, queue_capacity: 0, conformance_sample: 0 }
     }
 
     /// Bound the admission queue (backpressure point).
     pub fn with_queue_capacity(mut self, capacity: usize) -> ServiceConfig {
         self.queue_capacity = capacity;
+        self
+    }
+
+    /// Check every `sample`th batch against the oracle model (0 = off).
+    pub fn with_conformance_sample(mut self, sample: u32) -> ServiceConfig {
+        self.conformance_sample = sample;
         self
     }
 }
@@ -350,6 +363,11 @@ struct NetStat {
     /// ([`crate::compiler::CompiledStream::modeled`]) — the predictor's
     /// quote until the first measured completion lands.
     prior: f64,
+    /// Micro-batches the online conformance checker sampled for this
+    /// network.
+    conformance_checks: u64,
+    /// Typed `FA-DRIFT-*` events raised against this network.
+    drift_events: u64,
 }
 
 impl NetStat {
@@ -361,6 +379,8 @@ impl NetStat {
             service: RecentWindow::new(RECENT_WINDOW),
             latency: RecentWindow::new(RECENT_WINDOW),
             prior,
+            conformance_checks: 0,
+            drift_events: 0,
         }
     }
 
@@ -591,6 +611,7 @@ impl Service {
                         &inner.sched,
                         &policy,
                         inner.cfg.serve.model_cache,
+                        inner.cfg.conformance_sample,
                         &inner.hub,
                         &tx,
                     )
@@ -710,6 +731,8 @@ impl Service {
                 sv_p90_us: us(n.service.quantile(0.9)),
                 lat_p50_us: us(n.latency.quantile(0.5)),
                 lat_p99_us: us(n.latency.quantile(0.99)),
+                conformance_checks: n.conformance_checks,
+                drift_events: n.drift_events,
             })
             .collect();
         networks.sort_by(|a, b| a.name.cmp(&b.name));
@@ -717,7 +740,16 @@ impl Service {
             .stats
             .workers
             .iter()
-            .map(|w| WorkerSnapshot { worker: w.worker as u32, served: w.served as u64, batches: w.batches as u64 })
+            .map(|w| WorkerSnapshot {
+                worker: w.worker as u32,
+                served: w.served as u64,
+                batches: w.batches as u64,
+                drain_stalls: w.drain_stalls,
+                resfifo_peak: w.resfifo_peak,
+                cmdfifo_peak: w.cmdfifo_peak,
+                data_peak_words: w.data_peak_words,
+                weight_peak_words: w.weight_peak_words,
+            })
             .collect();
         ServiceSnapshot {
             served: st.stats.served as u64,
@@ -816,6 +848,14 @@ impl Service {
                         .or_insert_with(|| NetStat::new(inner.prior_for(&name)))
                         .deadline_sheds += 1;
                     trace_admit(&req, t_admit, Verdict::DeadlineShed);
+                    if inner.hub.flight_recording() {
+                        inner.hub.flight_event(
+                            "shed",
+                            req.id,
+                            &name,
+                            &format!("deadline shed: predicted {predicted:.6} s over budget"),
+                        );
+                    }
                     return Err(SubmitError::DeadlineShed { predicted_us: (predicted * 1e6) as u64 });
                 }
             }
@@ -825,6 +865,9 @@ impl Service {
             if !wait {
                 st.stats.admission_rejections += 1;
                 trace_admit(&req, t_admit, Verdict::QueueFullShed);
+                if inner.hub.flight_recording() {
+                    inner.hub.flight_event("shed", req.id, &name, "queue full");
+                }
                 return Err(SubmitError::QueueFull);
             }
             st = inner.space.wait(st).unwrap();
@@ -852,6 +895,9 @@ impl Service {
         st.outstanding += 1;
         st.tickets.insert(req.id, cell);
         trace_admit(&req, t_admit, Verdict::Pending);
+        if inner.hub.flight_recording() {
+            inner.hub.flight_event("admit", req.id, &name, "queued");
+        }
         // Push while holding the state lock: `closed` and the scheduler's
         // close flag flip together in begin_close, so a push can never
         // race a concurrent shutdown into the scheduler's
@@ -1076,10 +1122,28 @@ fn collect(inner: &Inner, rx: mpsc::Receiver<WorkerEvent>) {
                 w.weight_reuses += m.weight_reuses;
                 w.command_loads += m.command_loads;
                 w.command_reuses += m.command_reuses;
+                // Device counters: stalls accumulate, watermarks are
+                // maxima — a worker's peak is the max over its batches.
+                w.drain_stalls += m.drain_stalls;
+                w.resfifo_peak = w.resfifo_peak.max(m.resfifo_peak);
+                w.cmdfifo_peak = w.cmdfifo_peak.max(m.cmdfifo_peak);
+                w.data_peak_words = w.data_peak_words.max(m.data_peak_words);
+                w.weight_peak_words = w.weight_peak_words.max(m.weight_peak_words);
+                w.conformance_checks += m.conformance_checked as u64;
+                w.drift_events += m.drift_events;
                 if m.model_cache_hit {
                     w.model_cache_hits += 1;
                 } else {
                     w.model_cache_misses += 1;
+                }
+                if m.conformance_checked {
+                    let prior = inner.prior_for(&m.network);
+                    let net = st
+                        .per_network
+                        .entry(m.network)
+                        .or_insert_with(|| NetStat::new(prior));
+                    net.conformance_checks += 1;
+                    net.drift_events += m.drift_events;
                 }
             }
             WorkerEvent::Failed(f) => {

@@ -190,6 +190,21 @@ pub struct LayerFamily {
     pub weight_reuses: u64,
     pub link_bytes: u64,
     pub wall_us: u64,
+    /// Peak RESFIFO occupancy seen in any batch of this layer (max, not
+    /// a sum — watermarks aggregate by their worst observation).
+    pub resfifo_peak: u64,
+    /// Peak CMDFIFO occupancy (dwords) seen in any batch of this layer.
+    pub cmdfifo_peak: u64,
+    /// Peak data-cache extent (128-bit words) seen in any batch.
+    pub data_peak_words: u64,
+    /// Peak weight-cache extent (128-bit words) seen in any batch.
+    pub weight_peak_words: u64,
+    /// Forced drain-barrier stalls (RESFIFO lacked space for the next
+    /// pass), summed across batches.
+    pub stall_passes: u64,
+    /// CMDFIFO refills (epoch loads + shadow replays) attributed to
+    /// this layer's window, summed across batches.
+    pub epoch_reloads: u64,
 }
 
 /// One engine layer's stat delta for one batch, diffed from the device
@@ -202,9 +217,44 @@ pub struct LayerStat {
     pub weight_loads: u64,
     pub weight_reuses: u64,
     pub link_bytes: u64,
+    /// Peak RESFIFO occupancy during this layer's window.
+    pub resfifo_peak: u64,
+    /// Peak CMDFIFO occupancy (dwords) during this layer's window.
+    pub cmdfifo_peak: u64,
+    /// Peak data-cache extent (128-bit words) touched.
+    pub data_peak_words: u64,
+    /// Peak weight-cache extent (128-bit words) touched.
+    pub weight_peak_words: u64,
+    /// Forced drain-barrier stalls during this layer.
+    pub stall_passes: u64,
+    /// CMDFIFO refills attributed to this layer's window.
+    pub epoch_reloads: u64,
     /// Wall-clock start of the layer (host side).
     pub start: Instant,
     pub dur_us: u64,
+}
+
+/// Flight-recorder ring capacity: recent history only — the recorder
+/// exists to answer "what led up to this failure", not to be a log.
+const FLIGHT_CAP: usize = 1024;
+
+/// One structured flight-recorder event: a timestamped breadcrumb of
+/// something the serving stack did (admission, batch formation, shed,
+/// seal failure, drift, panic). Kept in a bounded ring in the [`Hub`]
+/// and dumped as JSONL when something dies.
+#[derive(Clone, Debug)]
+pub struct FlightEvent {
+    /// Microseconds since the hub epoch.
+    pub at_us: u64,
+    /// Event kind: `admit`, `batch`, `shed`, `fail`, `drift`, `panic`,
+    /// `dump` — a closed vocabulary so dumps grep cleanly.
+    pub kind: &'static str,
+    /// Request id when the event is request-scoped, 0 otherwise.
+    pub request: u64,
+    /// Network name when known, empty otherwise.
+    pub network: String,
+    /// Free-form detail (error code, batch composition, …).
+    pub detail: String,
 }
 
 /// The process-wide telemetry hub. Owned by the service (one per
@@ -220,6 +270,13 @@ pub struct Hub {
     /// decode-adjacent failures); ring `w + 1` collects worker `w`'s.
     rings: Vec<Mutex<VecDeque<CompletedTrace>>>,
     layers: Mutex<HashMap<(String, String), LayerFamily>>,
+    /// Flight recorder: off by default (one relaxed load per event
+    /// site), bounded ring of recent [`FlightEvent`]s when armed.
+    flight_on: AtomicBool,
+    flight: Mutex<VecDeque<FlightEvent>>,
+    /// Where [`Self::flight_dump`] writes; set by `listen
+    /// --flight-recorder <path>` (arming the recorder as a side effect).
+    flight_path: Mutex<Option<std::path::PathBuf>>,
 }
 
 impl Hub {
@@ -231,6 +288,9 @@ impl Hub {
             dropped: AtomicU64::new(0),
             rings: (0..n_workers + 1).map(|_| Mutex::new(VecDeque::new())).collect(),
             layers: Mutex::new(HashMap::new()),
+            flight_on: AtomicBool::new(false),
+            flight: Mutex::new(VecDeque::new()),
+            flight_path: Mutex::new(None),
         }
     }
 
@@ -341,6 +401,13 @@ impl Hub {
             fam.weight_reuses += s.weight_reuses;
             fam.link_bytes += s.link_bytes;
             fam.wall_us += s.dur_us;
+            // Watermarks fold by max (worst batch), counters by sum.
+            fam.resfifo_peak = fam.resfifo_peak.max(s.resfifo_peak);
+            fam.cmdfifo_peak = fam.cmdfifo_peak.max(s.cmdfifo_peak);
+            fam.data_peak_words = fam.data_peak_words.max(s.data_peak_words);
+            fam.weight_peak_words = fam.weight_peak_words.max(s.weight_peak_words);
+            fam.stall_passes += s.stall_passes;
+            fam.epoch_reloads += s.epoch_reloads;
         }
     }
 
@@ -353,6 +420,90 @@ impl Hub {
         out.sort_by(|a, b| (&a.0, &a.1).cmp(&(&b.0, &b.1)));
         out
     }
+
+    // ---- flight recorder -----------------------------------------------
+
+    /// Arm or disarm the flight recorder. Disarmed (the default), every
+    /// [`Self::flight_event`] call is a single relaxed atomic load.
+    pub fn set_flight_recorder(&self, on: bool) {
+        self.flight_on.store(on, Ordering::Relaxed);
+    }
+
+    pub fn flight_recording(&self) -> bool {
+        self.flight_on.load(Ordering::Relaxed)
+    }
+
+    /// Arm the recorder and set where [`Self::flight_dump`] writes.
+    pub fn set_flight_path(&self, path: impl Into<std::path::PathBuf>) {
+        *self.flight_path.lock().unwrap() = Some(path.into());
+        self.set_flight_recorder(true);
+    }
+
+    /// Record one breadcrumb. No-op (one relaxed load) when disarmed;
+    /// when armed, one short mutex acquisition and a bounded push — the
+    /// oldest event falls off when the ring is full.
+    pub fn flight_event(&self, kind: &'static str, request: u64, network: &str, detail: &str) {
+        if !self.flight_recording() {
+            return;
+        }
+        let ev = FlightEvent {
+            at_us: self.uptime_us(),
+            kind,
+            request,
+            network: network.to_string(),
+            detail: detail.to_string(),
+        };
+        let mut ring = self.flight.lock().unwrap();
+        if ring.len() >= FLIGHT_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(ev);
+    }
+
+    /// Snapshot the ring, oldest first, without draining it — a dump
+    /// must not erase the history a second failure would want.
+    pub fn flight_events(&self) -> Vec<FlightEvent> {
+        self.flight.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Dump the ring as JSONL to the configured path (tmp-file +
+    /// rename, so a consumer never sees a half-written dump). The final
+    /// line is a `dump` event carrying `reason`. Returns the number of
+    /// events written, or `None` when no path is configured.
+    pub fn flight_dump(&self, reason: &str) -> Option<usize> {
+        let path = self.flight_path.lock().unwrap().clone()?;
+        let events = self.flight_events();
+        let mut body = String::new();
+        for ev in &events {
+            body.push_str(&flight_jsonl_line(ev));
+            body.push('\n');
+        }
+        body.push_str(&format!(
+            "{{\"at_us\":{},\"kind\":\"dump\",\"request\":0,\"network\":\"\",\"detail\":\"{}\"}}\n",
+            self.uptime_us(),
+            esc(reason)
+        ));
+        let tmp = path.with_extension("tmp");
+        if std::fs::write(&tmp, body).is_err() {
+            return None;
+        }
+        if std::fs::rename(&tmp, &path).is_err() {
+            return None;
+        }
+        Some(events.len())
+    }
+}
+
+/// One newline-free JSON object for a flight-recorder event.
+pub fn flight_jsonl_line(ev: &FlightEvent) -> String {
+    format!(
+        "{{\"at_us\":{},\"kind\":\"{}\",\"request\":{},\"network\":\"{}\",\"detail\":\"{}\"}}",
+        ev.at_us,
+        esc(ev.kind),
+        ev.request,
+        esc(&ev.network),
+        esc(&ev.detail)
+    )
 }
 
 // ---- live-stats snapshot types (serialized by frontdoor::proto) --------
@@ -374,6 +525,13 @@ pub struct NetworkSnapshot {
     pub sv_p90_us: u64,
     pub lat_p50_us: u64,
     pub lat_p99_us: u64,
+    /// Conformance batches checked for this network (0 when sampling
+    /// is off).
+    pub conformance_checks: u64,
+    /// Typed `FA-DRIFT-*` events observed: batches whose measured
+    /// engine counters or occupancy watermarks diverged from the
+    /// artifact's model. A healthy deployment serves zeros here.
+    pub drift_events: u64,
 }
 
 /// Per-worker live counters.
@@ -382,6 +540,16 @@ pub struct WorkerSnapshot {
     pub worker: u32,
     pub served: u64,
     pub batches: u64,
+    /// Forced drain-barrier stalls on this worker's device.
+    pub drain_stalls: u64,
+    /// Device-lifetime peak RESFIFO occupancy.
+    pub resfifo_peak: u64,
+    /// Device-lifetime peak CMDFIFO occupancy (dwords).
+    pub cmdfifo_peak: u64,
+    /// Device-lifetime peak data-cache extent (128-bit words).
+    pub data_peak_words: u64,
+    /// Device-lifetime peak weight-cache extent (128-bit words).
+    pub weight_peak_words: u64,
 }
 
 /// One consistent snapshot of a running service's counters — everything
@@ -476,10 +644,152 @@ pub fn jsonl_line(t: &CompletedTrace) -> String {
     )
 }
 
+/// Render one [`ServiceSnapshot`] as a Prometheus text exposition
+/// (version 0.0.4 plaintext) — what the `fusionaccel listen
+/// --metrics-addr` endpoint serves at `GET /metrics`. Label values are
+/// network names, which the repo restricts to sane identifiers, but
+/// they are escaped anyway (`\\`, `"`, newline) so a hostile name can
+/// never corrupt the exposition.
+pub fn prometheus_exposition(snap: &ServiceSnapshot) -> String {
+    let lbl = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n");
+    let mut out = String::with_capacity(2048);
+    let mut counter = |name: &str, help: &str, v: u64| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+    };
+    counter("fusionaccel_served_total", "Requests served (forwards and parked duplicates).", snap.served);
+    counter("fusionaccel_failed_total", "Requests that failed.", snap.failed);
+    counter("fusionaccel_queue_full_sheds_total", "Requests shed at the bounded admission queue.", snap.queue_full_sheds);
+    counter("fusionaccel_deadline_sheds_total", "Requests shed by the deadline predictor.", snap.deadline_sheds);
+    counter("fusionaccel_result_cache_hits_total", "Requests answered from the result cache.", snap.result_cache_hits);
+    out.push_str(&format!(
+        "# HELP fusionaccel_outstanding Admitted but unresolved requests.\n\
+         # TYPE fusionaccel_outstanding gauge\nfusionaccel_outstanding {}\n",
+        snap.outstanding
+    ));
+    out.push_str(&format!(
+        "# HELP fusionaccel_queue_depth Requests waiting in the scheduler queue.\n\
+         # TYPE fusionaccel_queue_depth gauge\nfusionaccel_queue_depth {}\n",
+        snap.queue_depth
+    ));
+    if !snap.networks.is_empty() {
+        out.push_str(
+            "# HELP fusionaccel_network_served_total Requests served per network.\n\
+             # TYPE fusionaccel_network_served_total counter\n",
+        );
+        for n in &snap.networks {
+            out.push_str(&format!("fusionaccel_network_served_total{{network=\"{}\"}} {}\n", lbl(&n.name), n.served));
+        }
+        out.push_str(
+            "# HELP fusionaccel_network_conformance_checks_total Micro-batches checked against the cost oracle.\n\
+             # TYPE fusionaccel_network_conformance_checks_total counter\n",
+        );
+        for n in &snap.networks {
+            out.push_str(&format!(
+                "fusionaccel_network_conformance_checks_total{{network=\"{}\"}} {}\n",
+                lbl(&n.name),
+                n.conformance_checks
+            ));
+        }
+        out.push_str(
+            "# HELP fusionaccel_network_drift_events_total Typed FA-DRIFT-* events (model/device divergence).\n\
+             # TYPE fusionaccel_network_drift_events_total counter\n",
+        );
+        for n in &snap.networks {
+            out.push_str(&format!(
+                "fusionaccel_network_drift_events_total{{network=\"{}\"}} {}\n",
+                lbl(&n.name),
+                n.drift_events
+            ));
+        }
+        out.push_str(
+            "# HELP fusionaccel_network_predicted_us Deadline predictor's current turnaround quote.\n\
+             # TYPE fusionaccel_network_predicted_us gauge\n",
+        );
+        for n in &snap.networks {
+            out.push_str(&format!("fusionaccel_network_predicted_us{{network=\"{}\"}} {}\n", lbl(&n.name), n.predicted_us));
+        }
+    }
+    if !snap.workers.is_empty() {
+        for (name, help, get) in [
+            (
+                "fusionaccel_worker_served_total",
+                "Requests served per worker.",
+                (|w: &WorkerSnapshot| w.served) as fn(&WorkerSnapshot) -> u64,
+            ),
+            ("fusionaccel_worker_batches_total", "Micro-batches formed per worker.", |w| w.batches),
+            ("fusionaccel_worker_drain_stalls_total", "Forced drain-barrier stall passes.", |w| w.drain_stalls),
+            ("fusionaccel_worker_resfifo_peak", "Peak RESFIFO occupancy (results).", |w| w.resfifo_peak),
+            ("fusionaccel_worker_cmdfifo_peak", "Peak CMDFIFO occupancy (dwords).", |w| w.cmdfifo_peak),
+            ("fusionaccel_worker_data_cache_peak_words", "Peak data-cache extent (128-bit words).", |w| {
+                w.data_peak_words
+            }),
+            ("fusionaccel_worker_weight_cache_peak_words", "Peak weight-cache extent (128-bit words).", |w| {
+                w.weight_peak_words
+            }),
+        ] {
+            let kind = if name.ends_with("_total") { "counter" } else { "gauge" };
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+            for w in &snap.workers {
+                out.push_str(&format!("{name}{{worker=\"{}\"}} {}\n", w.worker, get(w)));
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::time::Duration;
+
+    #[test]
+    fn prometheus_exposition_lists_every_family_and_escapes_labels() {
+        let snap = ServiceSnapshot {
+            served: 12,
+            failed: 1,
+            queue_full_sheds: 2,
+            deadline_sheds: 3,
+            result_cache_hits: 4,
+            outstanding: 5,
+            queue_depth: 6,
+            networks: vec![NetworkSnapshot {
+                name: "we\"ird".to_string(),
+                served: 7,
+                conformance_checks: 8,
+                drift_events: 9,
+                ..Default::default()
+            }],
+            workers: vec![WorkerSnapshot {
+                worker: 0,
+                served: 12,
+                batches: 5,
+                drain_stalls: 2,
+                resfifo_peak: 48,
+                cmdfifo_peak: 12,
+                data_peak_words: 512,
+                weight_peak_words: 4096,
+            }],
+        };
+        let text = prometheus_exposition(&snap);
+        for family in [
+            "fusionaccel_served_total 12",
+            "fusionaccel_outstanding 5",
+            "fusionaccel_queue_depth 6",
+            "fusionaccel_network_served_total{network=\"we\\\"ird\"} 7",
+            "fusionaccel_network_conformance_checks_total{network=\"we\\\"ird\"} 8",
+            "fusionaccel_network_drift_events_total{network=\"we\\\"ird\"} 9",
+            "fusionaccel_worker_drain_stalls_total{worker=\"0\"} 2",
+            "fusionaccel_worker_resfifo_peak{worker=\"0\"} 48",
+            "fusionaccel_worker_cmdfifo_peak{worker=\"0\"} 12",
+            "fusionaccel_worker_data_cache_peak_words{worker=\"0\"} 512",
+            "fusionaccel_worker_weight_cache_peak_words{worker=\"0\"} 4096",
+        ] {
+            assert!(text.contains(family), "missing {family:?} in:\n{text}");
+        }
+        // Every metric line is preceded by HELP/TYPE headers.
+        assert!(text.contains("# TYPE fusionaccel_worker_resfifo_peak gauge"));
+        assert!(text.contains("# TYPE fusionaccel_network_drift_events_total counter"));
+    }
 
     fn finished_trace(hub: &Hub, id: u64, worker: Option<usize>) -> Trace {
         let tr = hub.start_trace(id, 7).expect("tracing on");
@@ -584,6 +894,12 @@ mod tests {
             weight_loads: 1,
             weight_reuses: 0,
             link_bytes: bytes,
+            resfifo_peak: 6 * passes,
+            cmdfifo_peak: 3,
+            data_peak_words: 48,
+            weight_peak_words: 144,
+            stall_passes: 1,
+            epoch_reloads: 0,
             start: now,
             dur_us: 5,
         };
@@ -602,6 +918,14 @@ mod tests {
             weight_reuses: 0,
             link_bytes: 200,
             wall_us: 10,
+            // Watermarks fold by max across the two batches, stall
+            // counters by sum.
+            resfifo_peak: 24,
+            cmdfifo_peak: 3,
+            data_peak_words: 48,
+            weight_peak_words: 144,
+            stall_passes: 2,
+            epoch_reloads: 0,
         });
         assert_eq!(fams[2].2.batches, 1);
     }
@@ -633,6 +957,54 @@ mod tests {
         let closes = json.matches('}').count();
         assert_eq!(opens, closes, "{json}");
         assert_eq!(json.matches("\"traceEvents\"").count(), 1);
+    }
+
+    #[test]
+    fn flight_recorder_is_off_by_default_and_bounded_under_soak() {
+        let hub = Hub::new(1);
+        // Disarmed: events vanish without touching the ring.
+        hub.flight_event("admit", 1, "tiny", "r1");
+        assert!(hub.flight_events().is_empty());
+        assert!(hub.flight_dump("nothing configured").is_none());
+
+        // Armed: a 10k-event soak never grows past the cap, and the
+        // survivors are the most recent events.
+        hub.set_flight_recorder(true);
+        for i in 0..10_000u64 {
+            hub.flight_event("admit", i, "tiny", "soak");
+        }
+        let events = hub.flight_events();
+        assert_eq!(events.len(), FLIGHT_CAP);
+        assert_eq!(events.first().unwrap().request, 10_000 - FLIGHT_CAP as u64);
+        assert_eq!(events.last().unwrap().request, 9_999);
+    }
+
+    #[test]
+    fn flight_dump_writes_wellformed_jsonl_atomically() {
+        let dir = std::env::temp_dir().join(format!("fa-flight-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flight.jsonl");
+        let hub = Hub::new(1);
+        hub.set_flight_path(&path);
+        assert!(hub.flight_recording(), "setting a path arms the recorder");
+        hub.flight_event("admit", 7, "tiny", "conn 3");
+        hub.flight_event("fail", 7, "tiny", "FA-SEAL-STALE: seal mismatch \"quoted\"");
+        let written = hub.flight_dump("typed failure").unwrap();
+        assert_eq!(written, 2);
+
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 3, "2 events + the dump marker: {body}");
+        assert!(lines[0].contains("\"kind\":\"admit\"") && lines[0].contains("\"request\":7"));
+        assert!(lines[1].contains("FA-SEAL-STALE") && lines[1].contains("\\\"quoted\\\""));
+        assert!(lines[2].contains("\"kind\":\"dump\"") && lines[2].contains("typed failure"));
+        for l in &lines {
+            assert_eq!(l.matches('{').count(), l.matches('}').count(), "{l}");
+            assert!(l.starts_with('{') && l.ends_with('}'), "{l}");
+        }
+        // The ring survives a dump — a later failure still has history.
+        assert_eq!(hub.flight_events().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

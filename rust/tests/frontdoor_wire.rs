@@ -727,3 +727,147 @@ fn prop_tracing_on_is_bit_identical_and_traces_are_complete() {
     let stats = teardown(svc, door);
     assert_eq!((stats.served, stats.failed), (CASES, 0));
 }
+
+/// Satellite (PR 10): wire forward compatibility — a pre-tail 0x06
+/// stats frame (from a server older than the device-counter /
+/// conformance extension tail) still decodes through
+/// `Client::fetch_stats`: base fields intact, every tail field zero.
+#[test]
+fn pre_tail_stats_server_is_scrapeable_by_a_new_client() {
+    use fusionaccel::frontdoor::proto::{self, StatsReport};
+    use fusionaccel::telemetry::{NetworkSnapshot, ServiceSnapshot, WorkerSnapshot};
+    use std::net::TcpListener;
+    use std::sync::atomic::AtomicBool;
+
+    // What an old server would hold in memory. The tail fields are
+    // deliberately nonzero: the legacy encoder must drop them, and the
+    // decoder must read them back as zero — not as leftover bytes.
+    let rep = StatsReport {
+        uptime_us: 41,
+        connections: 3,
+        requests: 7,
+        responses: 7,
+        sheds: 1,
+        protocol_errors: 0,
+        idle_disconnects: 2,
+        service: ServiceSnapshot {
+            served: 6,
+            failed: 1,
+            queue_full_sheds: 1,
+            result_cache_hits: 2,
+            networks: vec![NetworkSnapshot {
+                name: "tiny".to_string(),
+                served: 6,
+                predicted_us: 900,
+                conformance_checks: 5,
+                drift_events: 4,
+                ..Default::default()
+            }],
+            workers: vec![WorkerSnapshot {
+                worker: 0,
+                served: 6,
+                batches: 3,
+                drain_stalls: 9,
+                resfifo_peak: 48,
+                ..Default::default()
+            }],
+            ..Default::default()
+        },
+    };
+
+    // A minimal fake old server: answer one stats request with the
+    // pre-tail encoding, then hang up.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let rep_srv = rep.clone();
+    let server = std::thread::spawn(move || {
+        let (mut sock, _) = listener.accept().unwrap();
+        let stop = AtomicBool::new(false);
+        match proto::read_frame(&mut sock, &stop).unwrap() {
+            proto::FrameRead::Frame(body) => proto::decode_stats_request(&body).unwrap(),
+            other => panic!("expected a stats request, got {other:?}"),
+        }
+        proto::write_frame(&mut sock, &proto::encode_stats_report_legacy(&rep_srv)).unwrap();
+    });
+
+    let mut client = Client::connect(addr).unwrap();
+    let got = client.fetch_stats().unwrap();
+    server.join().unwrap();
+
+    // Base fields survive untouched...
+    assert_eq!((got.uptime_us, got.requests, got.service.served), (41, 7, 6));
+    assert_eq!((got.service.networks[0].name.as_str(), got.service.networks[0].served), ("tiny", 6));
+    assert_eq!(got.service.networks[0].predicted_us, 900);
+    assert_eq!((got.service.workers[0].served, got.service.workers[0].batches), (6, 3));
+    // ...and every extension-tail field reads back as zero — the old
+    // frame simply has nothing to say about them.
+    assert_eq!(got.service.networks[0].conformance_checks, 0);
+    assert_eq!(got.service.networks[0].drift_events, 0);
+    assert_eq!(got.service.workers[0].drain_stalls, 0);
+    assert_eq!(got.service.workers[0].resfifo_peak, 0);
+    assert_eq!(got.service.workers[0].weight_peak_words, 0);
+    // The current layout for the same report is strictly longer: the
+    // tail is an append, never a rewrite.
+    assert!(proto::encode_stats_report(&rep).len() > proto::encode_stats_report_legacy(&rep).len());
+}
+
+/// PINNED PROPERTY (PR 10): turning online oracle conformance checking
+/// on cannot change a single bit of any response — the checker only
+/// reads watermarks and the stamped cost model, never the data path.
+/// On an honest artifact every checked batch records zero drift, and
+/// both counters travel the stats frame.
+#[test]
+fn prop_conformance_on_is_bit_identical_and_clean() {
+    let net = tiny_net();
+    let blobs = synthesize_weights(&net, 0xC0FF);
+    let cfg =
+        ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 2)).with_conformance_sample(1);
+    let (svc, door) = start_door(&net, 0xC0FF, &cfg);
+    let addr = door.local_addr();
+
+    const CASES: usize = 5;
+    // The reference path has no service in it at all — conformance
+    // checking is a service-side concern, so the raw closed-batch
+    // forward is the conformance-free baseline.
+    forall(
+        0xC100,
+        CASES,
+        |rng| image(&net, rng),
+        |img| {
+            let (reference, _) =
+                serve_batched(&net, &blobs, &cfg.serve, vec![InferenceRequest::new(0, img.clone())])
+                    .map_err(|e| e.to_string())?;
+            let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
+            match client.request(&RequestMsg::new(0, img.clone())).map_err(|e| e.to_string())? {
+                ResponseMsg::Ok { probs, .. } => {
+                    if probs_bits(&probs) != probs_bits(&reference[0].probs) {
+                        return Err("conformance checking changed the forward's bits".to_string());
+                    }
+                    Ok(())
+                }
+                other => Err(format!("checked request not served: {other:?}")),
+            }
+        },
+    );
+
+    // sample=1 checks every batch; an honest artifact never drifts; the
+    // counters are visible over the wire. The last batch's metric can
+    // still be in flight behind its response, so poll the scrape.
+    let mut probe = Client::connect(addr).unwrap();
+    let t0 = Instant::now();
+    let rep = loop {
+        let rep = probe.fetch_stats().unwrap();
+        if rep.service.networks[0].conformance_checks >= CASES as u64 {
+            break rep;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "conformance checks never landed: {rep:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert_eq!(rep.service.networks[0].drift_events, 0, "an honest artifact must not drift");
+    drop(probe);
+
+    let stats = teardown(svc, door);
+    assert_eq!((stats.served, stats.failed), (CASES, 0));
+    assert!(stats.conformance_checks >= CASES as u64);
+    assert_eq!(stats.drift_events, 0);
+}

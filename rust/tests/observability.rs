@@ -1,0 +1,308 @@
+//! Observability acceptance tests (PR 10): online oracle conformance
+//! catches a forged cost model at serving time while clean networks
+//! stay silent; ChannelSplit device watermarks match the static
+//! verifier's worst-case occupancy exactly; and the crash flight
+//! recorder dumps well-formed JSONL — with the offending request's
+//! breadcrumbs — on both a worker panic and a typed `FA-SEAL-STALE`
+//! request failure.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fusionaccel::compiler::{compile, fnv1a, verify, ModelRepo};
+use fusionaccel::coordinator::ServeConfig;
+use fusionaccel::frontdoor::client::Client;
+use fusionaccel::frontdoor::proto::{RequestMsg, ResponseMsg};
+use fusionaccel::frontdoor::FrontDoor;
+use fusionaccel::host::gemm;
+use fusionaccel::hw::usb::UsbLink;
+use fusionaccel::net::graph::Network;
+use fusionaccel::net::layer::LayerSpec;
+use fusionaccel::net::tensor::{Tensor, TensorF32};
+use fusionaccel::net::weights::synthesize_weights;
+use fusionaccel::prop::Rng;
+use fusionaccel::service::{Service, ServiceConfig};
+
+/// Small conv+gap net (sub-millisecond forwards).
+fn tiny_net(name: &str) -> Network {
+    let mut n = Network::new(name);
+    let inp = n.input(8, 3);
+    let c1 = n.engine(LayerSpec::conv("c1", 3, 1, 0, 8, 3, 8, 0), inp);
+    let gap = n.engine(LayerSpec::avgpool("gap", 6, 1, 6, 8), c1);
+    n.softmax("prob", gap);
+    n
+}
+
+/// The fc6-class giant-kernel net: a 6×6 window over 256 channels
+/// exceeds the data cache, forcing the ChannelSplit granularity.
+fn split_net() -> Network {
+    let mut n = Network::new("fc6_micro");
+    let inp = n.input(6, 256);
+    let c = n.engine(LayerSpec::conv("fc6", 6, 1, 0, 6, 256, 10, 0), inp);
+    n.softmax("prob", c);
+    n
+}
+
+fn image(net: &Network, rng: &mut Rng) -> TensorF32 {
+    let (side, ch) = net.out_shape(0);
+    let (s, c) = (side as usize, ch as usize);
+    Tensor::from_vec(s, s, c, (0..s * s * c).map(|_| rng.normal(1.0)).collect())
+}
+
+/// A fresh per-test flight-recorder path under the system temp dir.
+fn flight_path(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("fa-obs-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(format!("{tag}.jsonl"));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// Poll `path` until `pred` holds on its contents (or fail after 10 s).
+fn wait_for_dump(path: &std::path::Path, pred: impl Fn(&str) -> bool) -> String {
+    let t0 = Instant::now();
+    loop {
+        if let Ok(body) = std::fs::read_to_string(path) {
+            if pred(&body) {
+                return body;
+            }
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "flight dump never landed at {path:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Every dump line must be a self-contained JSON object with the fixed
+/// field vocabulary, and the final line must be the dump marker.
+fn assert_wellformed_jsonl(body: &str) {
+    let lines: Vec<&str> = body.lines().collect();
+    assert!(!lines.is_empty(), "empty flight dump");
+    for line in &lines {
+        assert!(line.starts_with("{\"at_us\":") && line.ends_with('}'), "malformed line: {line}");
+        for field in ["\"kind\":", "\"request\":", "\"network\":", "\"detail\":"] {
+            assert!(line.contains(field), "field {field} missing from {line}");
+        }
+    }
+    assert!(lines.last().unwrap().contains("\"kind\":\"dump\""), "dump marker must close the file");
+}
+
+/// ACCEPTANCE: an artifact whose stamped cost model was forged *and
+/// re-sealed* sails through the static serve gate (the seal matches the
+/// bent content) — and the online conformance checker catches it on the
+/// very first sampled batch: a typed `FA-DRIFT-COST` flight event and an
+/// incremented per-network drift counter over the wire stats frame,
+/// while the clean network on the same service records zero drift.
+#[test]
+fn forged_cost_model_drifts_over_the_wire_while_clean_networks_stay_silent() {
+    let net = tiny_net("tiny");
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1))
+        .with_conformance_sample(1);
+
+    // Forge: compile clean, bend the stamped cost model, then re-stamp
+    // the seal so the static gate has nothing to object to. Exactly the
+    // artifact a buggy (or malicious) post-compile tool would ship.
+    let bent_net = tiny_net("bent");
+    let bent_blobs = synthesize_weights(&bent_net, 0xF07);
+    let mut bent = compile(&bent_net, fnv1a(&bent_blobs.to_bytes())).unwrap();
+    bent.modeled.layers[0].cycles += 1;
+    bent.seal = verify::artifact_seal(&bent);
+
+    let mut repo = ModelRepo::new();
+    repo.register(net.clone(), synthesize_weights(&net, 0xF07)).unwrap();
+    repo.register_artifact("bent", Arc::new(bent), bent_blobs).unwrap();
+    let svc = Arc::new(Service::start(Arc::new(repo), &cfg).unwrap());
+    // Arm the recorder (no dump path needed) so drift breadcrumbs land.
+    svc.telemetry().set_flight_recorder(true);
+    let door = FrontDoor::bind(svc.clone(), "127.0.0.1:0").unwrap();
+    let mut rng = Rng::new(0xF08);
+
+    const EACH: u64 = 3;
+    let mut client = Client::connect(door.local_addr()).unwrap();
+    for i in 0..EACH {
+        // The forged artifact *serves fine* — drift is an observability
+        // signal, not a request failure (the cost model never touches
+        // the data path).
+        let resp = client.request(&RequestMsg::new(i, image(&bent_net, &mut rng)).for_network("bent")).unwrap();
+        assert!(matches!(resp, ResponseMsg::Ok { .. }), "{resp:?}");
+        let resp = client.request(&RequestMsg::new(i, image(&net, &mut rng))).unwrap();
+        assert!(matches!(resp, ResponseMsg::Ok { .. }), "{resp:?}");
+    }
+
+    // Over the wire: the bent network's drift counter rises with its
+    // check counter; the clean network's stays at zero. Batch metrics
+    // trail responses, so poll.
+    let mut probe = Client::connect(door.local_addr()).unwrap();
+    let t0 = Instant::now();
+    let rep = loop {
+        let rep = probe.fetch_stats().unwrap();
+        let done = rep
+            .service
+            .networks
+            .iter()
+            .find(|n| n.name == "bent")
+            .is_some_and(|n| n.conformance_checks >= EACH && n.drift_events >= EACH);
+        if done {
+            break rep;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "drift never landed: {rep:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    let bent_row = rep.service.networks.iter().find(|n| n.name == "bent").unwrap();
+    let tiny_row = rep.service.networks.iter().find(|n| n.name == "tiny").unwrap();
+    assert_eq!(bent_row.drift_events, EACH, "one stamp-divergence drift per checked batch");
+    assert!(tiny_row.conformance_checks >= EACH, "the clean net is checked just as often");
+    assert_eq!(tiny_row.drift_events, 0, "a clean artifact must never drift");
+
+    // The typed code itself is on the flight ring.
+    let drifts: Vec<_> = svc
+        .telemetry()
+        .flight_events()
+        .into_iter()
+        .filter(|ev| ev.kind == "drift")
+        .collect();
+    assert!(!drifts.is_empty(), "drift breadcrumbs missing from the flight ring");
+    assert!(drifts.iter().all(|ev| ev.network == "bent" && ev.detail.contains(verify::FA_DRIFT_COST)));
+
+    drop(client);
+    drop(probe);
+    door.shutdown();
+    let svc = Arc::try_unwrap(svc).ok().expect("door shutdown must drop its service handle");
+    let stats = svc.shutdown().unwrap();
+    assert_eq!(stats.failed, 0, "drift is observability, never a failure");
+    assert_eq!(stats.drift_events, EACH);
+    assert!(stats.conformance_checks >= 2 * EACH);
+}
+
+/// ACCEPTANCE: on the ChannelSplit net the device's observed RESFIFO
+/// watermark equals the static verifier's worst-case occupancy bound
+/// *exactly* — the abstract machine model and the simulated device
+/// agree to the word — and the other device watermarks are live.
+#[test]
+fn channel_split_watermarks_match_the_static_verifier_bound_exactly() {
+    let net = split_net();
+    assert_eq!(
+        gemm::conv_granularity(6, 6, 256),
+        gemm::ConvGranularity::ChannelSplit,
+        "fc6_micro must exercise the split path"
+    );
+    let blobs = synthesize_weights(&net, 0xFC6);
+    let cs = compile(&net, fnv1a(&blobs.to_bytes())).unwrap();
+    let bound = verify::resfifo_stream_bound(&cs);
+    assert!(bound > 0, "a conv stream has a nonzero occupancy bound");
+
+    // Serve a few single-image forwards (the drain-after-every-pass
+    // driver) with conformance checking every batch.
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1))
+        .with_conformance_sample(1);
+    let mut repo = ModelRepo::new();
+    repo.register(net.clone(), blobs).unwrap();
+    let svc = Service::start(Arc::new(repo), &cfg).unwrap();
+    let mut rng = Rng::new(0xFC7);
+    for i in 0..3 {
+        let resp = svc
+            .submit(fusionaccel::coordinator::InferenceRequest::new(i, image(&net, &mut rng)))
+            .unwrap()
+            .wait();
+        assert!(resp.is_ok(), "{resp:?}");
+    }
+    let stats = svc.shutdown().unwrap();
+
+    let w = &stats.workers[0];
+    assert_eq!(
+        w.resfifo_peak, bound,
+        "device watermark must equal the verifier's worst case, not merely respect it"
+    );
+    assert!(w.cmdfifo_peak > 0 && w.data_peak_words > 0 && w.weight_peak_words > 0);
+    // And the conformance checker, which gates the same watermark
+    // against the same bound, saw nothing to report.
+    assert_eq!((stats.conformance_checks, stats.drift_events), (3, 0));
+}
+
+/// Satellite (d): a typed `FA-SEAL-STALE` request failure triggers a
+/// flight dump — well-formed JSONL whose lines include the offending
+/// request's own breadcrumbs (admit and fail) plus the dump marker.
+#[test]
+fn seal_stale_failure_dumps_a_flight_recording_with_the_offending_request() {
+    let net = tiny_net("tiny");
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1));
+
+    // A stale artifact: mutated after sealing, *not* re-stamped — the
+    // serve-time gate refuses it with FA-SEAL-STALE in the worker.
+    let bent_net = tiny_net("bent");
+    let bent_blobs = synthesize_weights(&bent_net, 0x5EA1);
+    let mut bent = compile(&bent_net, fnv1a(&bent_blobs.to_bytes())).unwrap();
+    bent.modeled.layers[0].cycles += 1; // content no longer matches the seal
+
+    let mut repo = ModelRepo::new();
+    repo.register(net.clone(), synthesize_weights(&net, 0x5EA1)).unwrap();
+    repo.register_artifact("bent", Arc::new(bent), bent_blobs).unwrap();
+    let svc = Service::start(Arc::new(repo), &cfg).unwrap();
+    let path = flight_path("seal-stale");
+    svc.telemetry().set_flight_path(&path);
+    let mut rng = Rng::new(0x5EA2);
+
+    const DOOMED: u64 = 42;
+    let req = fusionaccel::coordinator::InferenceRequest::new(DOOMED, image(&bent_net, &mut rng))
+        .for_network("bent");
+    let result = svc.submit(req).unwrap().wait();
+    let err = result.expect_err("a stale seal must fail the request").error;
+    assert!(err.contains("FA-SEAL-STALE"), "{err}");
+
+    // The dump trails the failure event by a hair; poll for it.
+    let body = wait_for_dump(&path, |b| b.contains("\"kind\":\"fail\""));
+    assert_wellformed_jsonl(&body);
+    let fail_line = body
+        .lines()
+        .find(|l| l.contains("\"kind\":\"fail\""))
+        .expect("fail breadcrumb missing");
+    assert!(fail_line.contains(&format!("\"request\":{DOOMED}")), "{fail_line}");
+    assert!(fail_line.contains("FA-SEAL-STALE"), "{fail_line}");
+    assert!(
+        body.lines().any(|l| l.contains("\"kind\":\"admit\"") && l.contains(&format!("\"request\":{DOOMED}"))),
+        "the doomed request's admission breadcrumb must precede its failure"
+    );
+    assert!(body.lines().last().unwrap().contains("request failure on worker"));
+
+    let stats = svc.shutdown().unwrap();
+    assert_eq!((stats.served, stats.failed), (0, 1));
+}
+
+/// Satellite (d): a worker panic mid-forward dumps the flight ring too —
+/// the `panic` breadcrumb carries the poisoned request's id, the dump is
+/// well-formed JSONL, and the worker keeps serving afterwards.
+#[test]
+fn worker_panic_dumps_a_flight_recording() {
+    let net = tiny_net("tiny");
+    let cfg = ServiceConfig::new(ServeConfig::new(UsbLink::usb3_frontpanel(), 1, 1));
+    let mut repo = ModelRepo::new();
+    repo.register(net.clone(), synthesize_weights(&net, 0x9A1C)).unwrap();
+    let svc = Service::start(Arc::new(repo), &cfg).unwrap();
+    let path = flight_path("panic");
+    svc.telemetry().set_flight_path(&path);
+    let mut rng = Rng::new(0x9A1D);
+
+    // Right shape header, truncated data: the forward indexes out of
+    // bounds and panics mid-layer (the worker-survival idiom).
+    const POISON: u64 = 7;
+    let bad = Tensor { h: 8, w: 8, c: 3, data: vec![0.5; 10] };
+    let result = svc.submit(fusionaccel::coordinator::InferenceRequest::new(POISON, bad)).unwrap().wait();
+    let err = result.expect_err("a truncated image must fail").error;
+    assert!(err.contains("panicked"), "{err}");
+
+    let body = wait_for_dump(&path, |b| b.contains("\"kind\":\"panic\""));
+    assert_wellformed_jsonl(&body);
+    let panic_line = body.lines().find(|l| l.contains("\"kind\":\"panic\"")).unwrap();
+    assert!(panic_line.contains(&format!("\"request\":{POISON}")), "{panic_line}");
+    assert!(panic_line.contains("panicked"), "{panic_line}");
+
+    // The ring survives its dumps, and the service survives the panic.
+    let resp = svc
+        .submit(fusionaccel::coordinator::InferenceRequest::new(8, image(&net, &mut rng)))
+        .unwrap()
+        .wait();
+    assert!(resp.is_ok(), "worker must keep serving after a panic: {resp:?}");
+    assert!(!svc.telemetry().flight_events().is_empty());
+
+    let stats = svc.shutdown().unwrap();
+    assert_eq!((stats.served, stats.failed), (1, 1));
+}
